@@ -1,0 +1,40 @@
+//! E1 — Figure 2 (left): factorization-by-design.
+//!
+//! Regenerates the panel: per-variant relative performance + speedup,
+//! averaged across the 5 tasks, plus a timing series of the by-design
+//! training step (dense vs led_r25) so regressions in the train hot path
+//! show up as bench deltas.
+//!
+//! Full panel: `GREENFORMER_STEPS=300 GREENFORMER_EVAL=256 cargo bench --bench fig2_by_design`
+
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{batch, Split};
+use greenformer::experiments::{by_design, ExpParams};
+use greenformer::runtime::Engine;
+use greenformer::train::Trainer;
+use greenformer::util::Bench;
+
+fn main() {
+    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let params = ExpParams::quick();
+
+    // Regenerate and print the panel (the paper artifact).
+    let result = by_design(&engine, &params).expect("by-design harness");
+    println!("\n{}", result.render());
+
+    // Timing series: one fused train step, dense vs factorized.
+    let ds = PolarityTask::new(64, 42);
+    let mut bench = Bench::new("by_design_train_step");
+    bench.max_iters = 20;
+    for variant in ["dense", "led_r25"] {
+        let mut trainer = Trainer::from_init(&engine, "text", variant).unwrap();
+        let bsz = trainer.batch_size();
+        let (x, y) = batch(&ds, Split::Train, 0, bsz, None);
+        bench.bench(variant, || {
+            trainer.train_step(&[x.clone(), y.clone()]).unwrap()
+        });
+    }
+    if let Some(s) = bench.speedup("dense", "led_r25") {
+        println!("train-step speedup led_r25 vs dense: {s:.2}x");
+    }
+}

@@ -1,0 +1,59 @@
+//! E3 — Figure 2 (right): in-context-learning factorization.
+//!
+//! Pretrains the tiny causal LM on the ICL corpus once, then regenerates the
+//! panel (SVD-factorize the pretrained LM at each ratio, k-shot eval), and
+//! times the batched LM forward (dense vs led_r25) — the serving hot path.
+//!
+//! Full panel: `GREENFORMER_STEPS=600 GREENFORMER_EVAL=256 cargo bench --bench fig2_icl`
+
+use greenformer::data::lm::LmCorpus;
+use greenformer::experiments::{icl, ExpParams};
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::runtime::Engine;
+use greenformer::train::Trainer;
+use greenformer::util::Bench;
+
+fn main() {
+    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let params = ExpParams::quick();
+    let pretrain_steps = std::env::var("GREENFORMER_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+
+    // Pretrain once; reuse across panel + timing series.
+    let mut trainer = Trainer::from_init(&engine, "lm", "dense").unwrap();
+    let corpus = LmCorpus::new(128, params.seed);
+    trainer.train_lm(&corpus, pretrain_steps, |_| {}).unwrap();
+    let lm_params = trainer.params.clone();
+
+    let result = icl(&engine, &params, Some(lm_params.clone()), 0).expect("icl harness");
+    println!("\n{}", result.render());
+
+    // Timing series: one batched LM forward, dense vs factorized.
+    let mut fact = lm_params.clone();
+    auto_fact(
+        &mut fact,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.25),
+            solver: Solver::Svd,
+            num_iter: 20,
+            submodules: None,
+        },
+    )
+    .unwrap();
+    let toks = corpus.batch(0, 4);
+    let mut bench = Bench::new("lm_forward_b4");
+    bench.max_iters = 20;
+    let dense_graph = engine.manifest().find("lm", "dense", "fwd", Some(4)).unwrap().clone();
+    bench.bench("dense", || {
+        engine.run_fwd(&dense_graph, &lm_params, &[toks.clone()]).unwrap()
+    });
+    let fact_graph = engine.manifest().find("lm", "led_r25", "fwd", Some(4)).unwrap().clone();
+    bench.bench("led_r25", || {
+        engine.run_fwd(&fact_graph, &fact, &[toks.clone()]).unwrap()
+    });
+    if let Some(s) = bench.speedup("dense", "led_r25") {
+        println!("lm fwd speedup led_r25 vs dense: {s:.2}x");
+    }
+}

@@ -1,0 +1,42 @@
+//! E2 — Figure 2 (center): post-training factorization.
+//!
+//! Regenerates the panel (train dense → auto_fact at each ratio → eval) and
+//! times the post-training factorization itself (auto_fact with SVD vs SNMF
+//! vs Random over the text init checkpoint).
+//!
+//! Full panel: `GREENFORMER_STEPS=300 GREENFORMER_EVAL=256 cargo bench --bench fig2_post_training`
+
+use greenformer::experiments::{post_training, ExpParams};
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::runtime::Engine;
+use greenformer::tensor::ParamStore;
+use greenformer::util::Bench;
+
+fn main() {
+    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let params = ExpParams::quick();
+
+    let result = post_training(&engine, &params, Solver::Svd).expect("post-training harness");
+    println!("\n{}", result.render());
+
+    // Timing series: auto_fact latency per solver on the text init.
+    let ckpt = engine.manifest().checkpoint("text", "dense").unwrap();
+    let base = ParamStore::load_gtz(ckpt).unwrap();
+    let mut bench = Bench::new("auto_fact_text_model");
+    bench.max_iters = 10;
+    for solver in [Solver::Svd, Solver::Snmf, Solver::Random] {
+        bench.bench(&solver.to_string(), || {
+            let mut p = base.clone();
+            auto_fact(
+                &mut p,
+                &AutoFactConfig {
+                    rank: Rank::Ratio(0.25),
+                    solver,
+                    num_iter: 20,
+                    submodules: None,
+                },
+            )
+            .unwrap()
+        });
+    }
+}

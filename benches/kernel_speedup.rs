@@ -1,0 +1,41 @@
+//! E7 — kernel-level speedup: dense GEMM vs the factorized (LED) product at
+//! paper-relevant shapes, in the Rust substrate (the same ratio the Pallas
+//! kernel realizes on TPU; the analytical TPU estimate is printed alongside).
+
+use greenformer::flops::roofline::led_tpu_speedup_estimate;
+use greenformer::linalg::Matrix;
+use greenformer::util::{Bench, Pcg64};
+
+fn main() {
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        // (label, k, n, r) at tokens = 256
+        ("text_dd_r32", 128, 128, 32),
+        ("bert_attn_r192", 768, 768, 192),
+        ("bert_ffn_r152", 768, 3072, 152),
+        ("bert_ffn_r304", 768, 3072, 304),
+    ];
+    let tokens = 256;
+    println!("\n== E7: analytical TPU estimates (tokens=256) ==");
+    for &(label, k, n, r) in shapes {
+        println!(
+            "  {label}: flops-speedup={:.2}x tpu-est={:.2}x",
+            greenformer::flops::led_speedup(k, n, r),
+            led_tpu_speedup_estimate(tokens, k, r, n)
+        );
+    }
+
+    let mut rng = Pcg64::seeded(1);
+    let mut bench = Bench::new("gemm_dense_vs_led");
+    bench.max_iters = 30;
+    for &(label, k, n, r) in shapes {
+        let x = Matrix::randn(tokens, k, 1.0, &mut rng);
+        let w = Matrix::randn(k, n, 1.0, &mut rng);
+        let a = Matrix::randn(k, r, 1.0, &mut rng);
+        let b = Matrix::randn(r, n, 1.0, &mut rng);
+        bench.bench(&format!("dense/{label}"), || x.matmul(&w));
+        bench.bench(&format!("led/{label}"), || x.matmul(&a).matmul(&b));
+        if let Some(s) = bench.speedup(&format!("dense/{label}"), &format!("led/{label}")) {
+            println!("    -> measured CPU speedup {label}: {s:.2}x");
+        }
+    }
+}

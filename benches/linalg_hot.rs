@@ -1,0 +1,31 @@
+//! L3 hot-path microbenches: the linalg substrate (GEMM, SVD variants, QR)
+//! — the profile targets of the §Perf pass.
+
+use greenformer::linalg::{jacobi_svd, randomized_svd, svd_factorize, thin_qr, Matrix};
+use greenformer::util::{Bench, Pcg64};
+
+fn main() {
+    let mut rng = Pcg64::seeded(2);
+
+    let mut bench = Bench::new("matmul");
+    bench.max_iters = 30;
+    for n in [128usize, 256, 512] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        bench.bench(&format!("{n}x{n}"), || a.matmul(&b));
+    }
+
+    let mut bench = Bench::new("svd");
+    bench.max_iters = 10;
+    let w = Matrix::randn(128, 512, 1.0, &mut rng);
+    bench.bench("jacobi_128x512", || jacobi_svd(&w));
+    bench.bench("rsvd_128x512_r32", || randomized_svd(&w, 32, 10, 2));
+    bench.bench("svd_factorize_128x512_r32", || svd_factorize(&w, 32));
+    let big = Matrix::randn(768, 3072, 0.1, &mut rng);
+    bench.bench("svd_factorize_768x3072_r152", || svd_factorize(&big, 152));
+
+    let mut bench = Bench::new("qr");
+    bench.max_iters = 20;
+    let t = Matrix::randn(512, 64, 1.0, &mut rng);
+    bench.bench("thin_qr_512x64", || thin_qr(&t));
+}

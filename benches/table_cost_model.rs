@@ -1,0 +1,41 @@
+//! E5 — cost-model table: params/FLOPs/VMEM/speedup per (layer, ratio),
+//! plus a predicted-vs-measured check: the analytical FLOPs speedup against
+//! the wall-clock speedup of the corresponding AOT graphs.
+
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{batch, Split};
+use greenformer::experiments::tables::{cost_table, render_cost_table};
+use greenformer::runtime::Engine;
+use greenformer::tensor::ParamStore;
+use greenformer::util::Bench;
+
+fn main() {
+    let rows = cost_table(&[0.10, 0.25, 0.50, 0.75]);
+    println!("\n== E5: cost model ==\n{}", render_cost_table(&rows));
+
+    // Predicted vs measured: text fwd at every variant.
+    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let ds = PolarityTask::new(64, 42);
+    let mut bench = Bench::new("text_fwd_b32");
+    bench.max_iters = 30;
+    let mut dense_median = None;
+    for variant in ["dense", "led_r10", "led_r25", "led_r50", "led_r75"] {
+        let graph = engine.manifest().find("text", variant, "fwd", None).unwrap().clone();
+        let params =
+            ParamStore::load_gtz(engine.manifest().checkpoint("text", variant).unwrap()).unwrap();
+        let (x, _) = batch(&ds, Split::Eval, 0, graph.batch, None);
+        let stats = bench.bench(variant, || {
+            engine.run_fwd(&graph, &params, &[x.clone()]).unwrap()
+        });
+        if let Some(stats) = stats {
+            match variant {
+                "dense" => dense_median = Some(stats.median_s),
+                _ => {
+                    if let Some(d) = dense_median {
+                        println!("    -> measured speedup vs dense: {:.2}x", d / stats.median_s);
+                    }
+                }
+            }
+        }
+    }
+}

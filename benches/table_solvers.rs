@@ -1,0 +1,20 @@
+//! E6 — solver comparison: reconstruction error and wall-clock per solver
+//! across ratios, on a trained-like (decaying-spectrum) weight. Demonstrates
+//! the paper's claim that Random is unsuitable post-training while SVD/SNMF
+//! approximate well.
+
+use greenformer::experiments::tables::{render_solver_table, solver_table, trained_like_matrix};
+use greenformer::factorize::Solver;
+use greenformer::util::Bench;
+
+fn main() {
+    let rows = solver_table(&[0.10, 0.25, 0.50, 0.75], 50);
+    println!("\n== E6: solvers ==\n{}", render_solver_table(&rows));
+
+    let w = trained_like_matrix(128, 512, 1.0, 7);
+    let mut bench = Bench::new("solver_128x512_r32");
+    bench.max_iters = 15;
+    for solver in [Solver::Random, Solver::Svd, Solver::Snmf] {
+        bench.bench(&solver.to_string(), || solver.factorize(&w, 32, 50, 11));
+    }
+}

@@ -1,0 +1,74 @@
+//! Quickstart (E4): the paper's Figure-1 one-liner, end to end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads a dense text-classifier checkpoint, factorizes it with one
+//! `auto_fact` call (SVD, rank ratio 0.25), and runs both the dense and the
+//! factorized model through the PJRT engine on the same batch — showing the
+//! LED model is smaller, faster, and (being SVD-initialized from the same
+//! weights) produces nearby logits.
+
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{batch, Split};
+use greenformer::eval::measure_latency;
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::runtime::Engine;
+use greenformer::tensor::ParamStore;
+
+fn main() -> greenformer::Result<()> {
+    let engine = Engine::load_default()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. A dense model checkpoint (the JAX-exported init).
+    let ckpt = engine.manifest().checkpoint("text", "dense")?;
+    let dense = ParamStore::load_gtz(ckpt)?;
+    println!("dense model: {} params", dense.n_params());
+
+    // 2. The Greenformer one-liner.
+    let mut fact = dense.clone();
+    let report = auto_fact(
+        &mut fact,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.25),
+            solver: Solver::Svd,
+            num_iter: 50,
+            submodules: None,
+        },
+    )?;
+    print!("{report}");
+
+    // 3. Run both through the engine on the same batch.
+    let ds = PolarityTask::new(64, 42);
+    let dense_graph = engine.manifest().find("text", "dense", "fwd", Some(8))?.clone();
+    let fact_graph = engine.manifest().find("text", "led_r25", "fwd", Some(8))?.clone();
+    let (x, _) = batch(&ds, Split::Eval, 0, dense_graph.batch, None);
+
+    let dense_out = engine.run_fwd(&dense_graph, &dense, &[x.clone()])?;
+    let fact_out = engine.run_fwd(&fact_graph, &fact, &[x.clone()])?;
+    let (d, f) = (dense_out[0].as_f32()?, fact_out[0].as_f32()?);
+    let max_dev = d
+        .iter()
+        .zip(f)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |logit(dense) - logit(led_r25)| on one batch: {max_dev:.4}");
+
+    // 4. Latency comparison (median of 20).
+    let lat_d = measure_latency(&engine, &dense_graph, &dense, &[x.clone()], 3, 20)?;
+    let lat_f = measure_latency(&engine, &fact_graph, &fact, &[x], 3, 20)?;
+    println!(
+        "latency: dense {:.2} ms, led_r25 {:.2} ms -> {:.2}x speedup",
+        lat_d * 1e3,
+        lat_f * 1e3,
+        lat_d / lat_f
+    );
+    println!(
+        "params:  dense {}, led_r25 {} -> {:.1}% size",
+        dense.n_params(),
+        fact.n_params(),
+        100.0 * fact.n_params() as f64 / dense.n_params() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! End-to-end validation driver (E8): factorization-by-design training.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_by_design
+//! ```
+//!
+//! Trains the transformer text classifier on the `polarity` task for a few
+//! hundred steps, twice — dense baseline and LED at rank ratio 0.25 — using
+//! the fused AOT train graphs (fwd + bwd through the Pallas custom VJPs +
+//! Adam, all inside XLA; Rust only drives). Logs both loss curves, then
+//! evaluates held-out accuracy and forward latency. This is the run recorded
+//! in EXPERIMENTS.md §E8.
+//!
+//! Env: GREENFORMER_STEPS (default 300).
+
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{batch, Split};
+use greenformer::eval::{eval_classifier, measure_latency};
+use greenformer::runtime::Engine;
+use greenformer::train::{checkpoint, Trainer};
+
+fn main() -> greenformer::Result<()> {
+    let steps: usize = std::env::var("GREENFORMER_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let engine = Engine::load_default()?;
+    let ds = PolarityTask::new(64, 42);
+
+    let mut results = Vec::new();
+    for variant in ["dense", "led_r25"] {
+        println!("=== training text/{variant} on polarity ({steps} steps) ===");
+        let mut trainer = Trainer::from_init(&engine, "text", variant)?;
+        println!("params: {}", trainer.params.n_params());
+        trainer.train_classifier(&ds, steps, None, |log| {
+            if log.step % 20 == 0 || log.step == 1 {
+                println!(
+                    "  step {:>4}  loss {:.4}  ({:.0} ms/step)",
+                    log.step,
+                    log.loss,
+                    log.seconds * 1e3
+                );
+            }
+        })?;
+
+        let fwd = engine.manifest().find("text", variant, "fwd", None)?.clone();
+        let ev = eval_classifier(&engine, &fwd, &trainer.params, &ds, 512, None)?;
+        let (x, _) = batch(&ds, Split::Eval, 0, fwd.batch, None);
+        let lat = measure_latency(&engine, &fwd, &trainer.params, &[x], 3, 20)?;
+        println!(
+            "{variant}: final loss {:.4}, eval acc {:.3}, fwd {:.2} ms/batch\n",
+            trainer.recent_loss(20),
+            ev.accuracy(),
+            lat * 1e3
+        );
+        checkpoint::save("runs", &format!("by_design_{variant}"), &trainer.params)?;
+        results.push((variant, trainer.recent_loss(20), ev.accuracy(), lat));
+    }
+
+    println!("=== summary (E8) ===");
+    println!("variant   loss    acc    latency");
+    for (v, loss, acc, lat) in &results {
+        println!("{v:<9} {loss:.4}  {acc:.3}  {:.2} ms", lat * 1e3);
+    }
+    let (dense, led) = (&results[0], &results[1]);
+    println!(
+        "led_r25 vs dense: rel-perf {:.3}, speedup {:.2}x",
+        led.2 / dense.2,
+        dense.3 / led.3
+    );
+    Ok(())
+}

@@ -1,0 +1,291 @@
+"""AOT exporter: lower every (model, variant, graph) to HLO text + manifest.
+
+This is the single build-time entry point (`make artifacts`). For each model
+in the zoo and each factorization variant the evaluation needs, it lowers
+
+  * `fwd`   — inference graphs at the batch sizes the Rust coordinator serves
+  * `train` — the fused fwd+bwd+Adam step driven by the Rust training loop
+
+to **HLO text** (not serialized HloModuleProto: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids — see /opt/xla-example/README.md) and writes `artifacts/manifest.json`
+describing every graph: parameter order (the flatten_params contract), input
+and output specs, resolved per-layer ranks, and model config. It also dumps
+the JAX-initialized parameters for each variant as a GTZ checkpoint so Rust
+training starts from a pinned initialization.
+
+Python runs exactly once, here. Nothing in `python/` is imported at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+RATIOS = (0.10, 0.25, 0.50, 0.75)
+
+TEXT_CFG = M.TextConfig()
+IMAGE_CFG = M.ImageConfig()
+LM_CFG = M.LMConfig()
+
+# Batch sizes the Rust side drives. fwd_b1 is the latency benchmark graph;
+# the larger fwd is the serving/throughput graph; train is the step graph.
+TEXT_BATCHES = {"fwd": (1, 8, 32), "train": (32,)}
+IMAGE_BATCHES = {"fwd": (1, 8, 32), "train": (32,)}
+LM_BATCHES = {"fwd": (1, 4), "train": (8,)}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# GTZ checkpoint format (mirrored by rust/src/tensor/gtz.rs)
+# ---------------------------------------------------------------------------
+
+DTYPE_CODES = {"float32": 0, "int32": 1}
+
+
+def write_gtz(path: Path, tensors: list[tuple[str, np.ndarray]]) -> None:
+    """GTZ1: magic, u32 count, then per tensor:
+    u16 name_len | name utf8 | u8 dtype | u8 ndim | u64 dims... | raw LE data."""
+    with open(path, "wb") as f:
+        f.write(b"GTZ1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            # ascontiguousarray promotes 0-d to 1-d; restore the true shape
+            arr = np.ascontiguousarray(arr).reshape(arr.shape)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_CODES[str(arr.dtype)], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Graph spec helpers
+# ---------------------------------------------------------------------------
+
+def _dtype_tag(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _spec(name: str, x) -> dict:
+    return {"name": name, "shape": list(x.shape), "dtype": _dtype_tag(x)}
+
+
+def collect_ranks(params: dict, prefix: str = "") -> dict[str, int]:
+    """Resolved rank per factorized layer (for the manifest + cost model)."""
+    out = {}
+    for key in sorted(params.keys()):
+        val = params[key]
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            if "a" in val and "b" in val:
+                out[name] = int(val["a"].shape[-1])
+            else:
+                out.update(collect_ranks(val, name + "/"))
+    return out
+
+
+MODELS = {
+    "text": dict(cfg=TEXT_CFG, init=M.init_text, batches=TEXT_BATCHES),
+    "image": dict(cfg=IMAGE_CFG, init=M.init_image, batches=IMAGE_BATCHES),
+    "lm": dict(cfg=LM_CFG, init=M.init_lm, batches=LM_BATCHES),
+}
+
+
+def example_inputs(model: str, cfg, batch: int):
+    if model == "text":
+        return (jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),)
+    if model == "image":
+        return (jax.ShapeDtypeStruct((batch, cfg.hw, cfg.hw, cfg.ch), jnp.float32),)
+    if model == "lm":
+        return (jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),)
+    raise ValueError(model)
+
+
+def train_inputs(model: str, cfg, batch: int):
+    if model == "text":
+        return (
+            jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+    if model == "image":
+        return (
+            jax.ShapeDtypeStruct((batch, cfg.hw, cfg.hw, cfg.ch), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        )
+    if model == "lm":
+        # full token sequence; the graph shifts internally
+        return (jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32),)
+    raise ValueError(model)
+
+
+def forward_fn(model: str, cfg):
+    if model == "text":
+        return lambda params, x: M.text_forward(params, cfg, x)
+    if model == "image":
+        return lambda params, x: M.image_forward(params, cfg, x)
+    if model == "lm":
+        return lambda params, x: M.lm_forward(params, cfg, x)
+    raise ValueError(model)
+
+
+def loss_fn(model: str, cfg):
+    if model == "text":
+        return lambda params, x, y: M.softmax_xent(M.text_forward(params, cfg, x), y)
+    if model == "image":
+        return lambda params, x, y: M.softmax_xent(M.image_forward(params, cfg, x), y)
+    if model == "lm":
+        return lambda params, toks: M.lm_loss(params, cfg, toks)
+    raise ValueError(model)
+
+
+def cfg_dict(cfg) -> dict:
+    return {k: getattr(cfg, k) for k in cfg.__dataclass_fields__}
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+
+def export_graph(path: Path, fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build(out_dir: Path, only: str | None = None, quick: bool = False) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    init_dir = out_dir / "init"
+    init_dir.mkdir(exist_ok=True)
+    manifest: dict = {"format": 1, "graphs": [], "checkpoints": []}
+    key = jax.random.PRNGKey(42)
+
+    variants = [M.Variant()] + [M.Variant(ratio=r) for r in RATIOS]
+    if quick:
+        variants = [M.Variant(), M.Variant(ratio=0.25)]
+
+    for model_name, zoo in MODELS.items():
+        if only and model_name != only:
+            continue
+        cfg = zoo["cfg"]
+        for variant in variants:
+            params = zoo["init"](key, cfg, variant)
+            flat = M.flatten_params(params)
+            ranks = collect_ranks(params)
+            param_specs = [_spec(n, t) for n, t in flat]
+            n_params = int(sum(int(np.prod(t.shape)) for _, t in flat))
+
+            ckpt_name = f"{model_name}_{variant.name}.gtz"
+            write_gtz(init_dir / ckpt_name, [(n, np.asarray(t)) for n, t in flat])
+            manifest["checkpoints"].append(
+                {
+                    "model": model_name,
+                    "variant": variant.name,
+                    "file": f"init/{ckpt_name}",
+                    "n_params": n_params,
+                }
+            )
+
+            fwd = forward_fn(model_name, cfg)
+            for batch in zoo["batches"]["fwd"]:
+                gname = f"{model_name}_{variant.name}_fwd_b{batch}"
+                fpath = out_dir / f"{gname}.hlo.txt"
+                ex = example_inputs(model_name, cfg, batch)
+                if not fpath.exists():
+                    digest = export_graph(fpath, fwd, (params,) + ex)
+                else:
+                    digest = hashlib.sha256(fpath.read_bytes()).hexdigest()[:16]
+                out_shape = jax.eval_shape(fwd, params, *ex)
+                manifest["graphs"].append(
+                    {
+                        "name": gname,
+                        "file": fpath.name,
+                        "model": model_name,
+                        "variant": variant.name,
+                        "kind": "fwd",
+                        "batch": batch,
+                        "params": param_specs,
+                        "inputs": [_spec("x", e) for e in ex],
+                        "outputs": [_spec("out", out_shape)],
+                        "ranks": ranks,
+                        "n_params": n_params,
+                        "config": cfg_dict(cfg),
+                        "sha256_16": digest,
+                    }
+                )
+                print(f"  {gname}: ok", flush=True)
+
+            lf = loss_fn(model_name, cfg)
+            step_fn = M.make_train_step(lf)
+            for batch in zoo["batches"]["train"]:
+                gname = f"{model_name}_{variant.name}_train_b{batch}"
+                fpath = out_dir / f"{gname}.hlo.txt"
+                ex = train_inputs(model_name, cfg, batch)
+                zeros = M.tree_zeros_like(params)
+                step_arg = jax.ShapeDtypeStruct((), jnp.float32)
+                if not fpath.exists():
+                    digest = export_graph(
+                        fpath, step_fn, (params, zeros, zeros, step_arg) + ex
+                    )
+                else:
+                    digest = hashlib.sha256(fpath.read_bytes()).hexdigest()[:16]
+                # train graph inputs: params..., m..., v..., step, batch...;
+                # outputs: params..., m..., v..., loss (same flat order both
+                # sides — the Rust driver relies on this).
+                manifest["graphs"].append(
+                    {
+                        "name": gname,
+                        "file": fpath.name,
+                        "model": model_name,
+                        "variant": variant.name,
+                        "kind": "train",
+                        "batch": batch,
+                        "params": param_specs,
+                        "inputs": [_spec("x", e) for e in ex],
+                        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+                        "ranks": ranks,
+                        "n_params": n_params,
+                        "config": cfg_dict(cfg),
+                        "sha256_16": digest,
+                    }
+                )
+                print(f"  {gname}: ok", flush=True)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(manifest['graphs'])} graphs -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--only", default=None, help="export only this model (text|image|lm)")
+    ap.add_argument("--quick", action="store_true", help="dense + r25 only (CI)")
+    args = ap.parse_args()
+    build(Path(args.out), only=args.only, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Convolution layers routed through the Pallas matmul kernels via im2col.
+
+Greenformer factorizes a conv weight W in R^{kh x kw x Cin x Cout} by
+flattening it to W' in R^{(kh*kw*Cin) x Cout} (the paper's R^{Cin*S x Cout}
+rearrangement), decomposing W' = A' B', and reshaping A' back into a conv
+kernel with r output channels plus a 1x1 conv B (the CED layer, Figure 3).
+
+With im2col the CED forward is *exactly* the fused LED kernel applied to the
+patch matrix — so the conv path reuses `led.led_matmul` / `matmul.matmul`
+unchanged, and autodiff flows through the (pure-jnp, differentiable) im2col
+while the GEMMs keep their custom Pallas VJPs.
+
+The im2col patch ordering is (kh, kw, Cin) row-major, matching the HWIO
+weight flattening; `python/tests/test_kernels.py` pins this against
+`ref.conv2d_ref` / `ref.ced_conv2d_ref` (lax.conv ground truth).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .led import led_matmul
+from .matmul import matmul
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, padding: str = "SAME") -> tuple[jnp.ndarray, int, int]:
+    """Extract conv patches. x: (N, H, W, C) -> (N, Ho, Wo, kh*kw*C).
+
+    Patch channel order is (i, j, c) row-major — identical to flattening an
+    HWIO kernel with `.reshape(kh*kw*C, Cout)`.
+    """
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + (ho - 1) * stride + 1 : stride, j : j + (wo - 1) * stride + 1 : stride, :]
+            cols.append(patch)
+    # (N, Ho, Wo, kh*kw, C) -> (N, Ho, Wo, kh*kw*C); stacking on axis 3 keeps
+    # (i, j) major over C, matching the HWIO flatten.
+    out = jnp.stack(cols, axis=3).reshape(n, ho, wo, kh * kw * c)
+    return out, ho, wo
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """Dense conv2d via im2col + Pallas matmul. w: (kh, kw, Cin, Cout)."""
+    kh, kw, cin, cout = w.shape
+    patches, ho, wo = im2col(x, kh, kw, stride, padding)
+    n = x.shape[0]
+    y = matmul(patches.reshape(n * ho * wo, kh * kw * cin), w.reshape(kh * kw * cin, cout), b)
+    return y.reshape(n, ho, wo, cout)
+
+
+def ced_conv2d(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """CED conv2d: encoder a: (kh, kw, Cin, r), decoder b: (1, 1, r, Cout).
+
+    Lowered as one fused LED matmul over the patch matrix — the factorized
+    GEMM never materializes the rank-r feature map in HBM.
+    """
+    kh, kw, cin, r = a.shape
+    _, _, r2, cout = b.shape
+    assert r == r2, f"rank mismatch: {a.shape} vs {b.shape}"
+    patches, ho, wo = im2col(x, kh, kw, stride, padding)
+    n = x.shape[0]
+    y = led_matmul(
+        patches.reshape(n * ho * wo, kh * kw * cin),
+        a.reshape(kh * kw * cin, r),
+        b.reshape(r, cout),
+        bias,
+    )
+    return y.reshape(n, ho, wo, cout)

@@ -1,0 +1,113 @@
+"""Fused LED (Linear Encoder-Decoder) Pallas kernel — the paper's hot spot.
+
+A factorized linear layer computes y = (x @ A) @ B. Done naively this is two
+GEMM dispatches with the (m, r) intermediate written to and re-read from HBM.
+The whole point of Greenformer's efficiency claim is that r << min(k, n), so
+the intermediate is tiny: this kernel fuses the two products, keeping the
+(bm, r) intermediate tile in VMEM for the lifetime of the program — the
+explicit-BlockSpec analogue of what the paper gets from fused cuBLAS calls
+(DESIGN.md §4 Hardware adaptation).
+
+Grid is (M/bm,): each program owns a row-block, loads A (k, r) and B (r, n)
+whole (both are skinny by construction — the Eq.-1 gate guarantees
+r < mn/(m+n) so A and B together are smaller than the dense W), computes
+h = x_blk @ A then o_blk = h @ B. VMEM footprint per program:
+bm*k + k*r + bm*r + r*n + bm*n floats; `flops::roofline` (Rust) and
+`python/tests/test_vmem.py` check this stays under the 16 MiB VMEM budget
+for every shape the models emit.
+
+Custom VJP re-expresses the backward pass with the same fused kernel plus
+`matmul_2d` for the factor gradients, so exported train graphs stay on the
+Pallas schedule end-to-end.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _flatten_leading, _pad_to, matmul_2d
+
+# Row-block: 512 keeps per-program VMEM < 5 MiB for every model-zoo shape
+# (checked by flops::roofline tests) while quartering the grid-step count
+# vs 128 (EXPERIMENTS.md §Perf).
+BLOCK_M = 512
+
+
+def _led_kernel(x_ref, a_ref, b_ref, o_ref):
+    # h lives entirely in registers/VMEM: (bm, r). No HBM round-trip.
+    h = jnp.dot(x_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(h, b_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def led_matmul_2d(
+    x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, block_m: int = BLOCK_M
+) -> jnp.ndarray:
+    """y = (x @ a) @ b for 2-D x via the fused Pallas kernel."""
+    m, k = x.shape
+    k2, r = a.shape
+    r2, n = b.shape
+    assert k == k2 and r == r2, f"shape mismatch: {x.shape}, {a.shape}, {b.shape}"
+    bm = min(m, block_m)
+    xp = _pad_to(x, 0, bm)
+    mp = xp.shape[0]
+    out = pl.pallas_call(
+        _led_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, r), lambda i: (0, 0)),
+            pl.BlockSpec((r, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=True,
+    )(xp, a, b)
+    return out[:m]
+
+
+@jax.custom_vjp
+def led_matmul(
+    x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """y = (x @ a) @ b (+ bias); x may carry leading batch dims."""
+    x2, lead = _flatten_leading(x)
+    y = led_matmul_2d(x2, a, b)
+    if bias is not None:
+        y = y + bias
+    return y.reshape(lead + (b.shape[1],))
+
+
+def _led_fwd(x, a, b, bias):
+    return led_matmul(x, a, b, bias), (x, a, b, bias is not None)
+
+
+def _led_bwd(res, g):
+    x, a, b, has_bias = res
+    g2, _ = _flatten_leading(g)
+    x2, _ = _flatten_leading(x)
+    # Recompute h = x @ a (cheap: r columns) instead of saving it — the same
+    # memory-over-compute trade the fused forward makes.
+    h = matmul_2d(x2, a)
+    db_mat = matmul_2d(h.T, g2)  # (r, n)
+    dh = matmul_2d(g2, b.T)  # (m, r)
+    da = matmul_2d(x2.T, dh)  # (k, r)
+    # dx = dh @ a^T = (g b^T) a^T: fused again through the LED kernel.
+    dx = led_matmul_2d(g2, b.T, a.T).reshape(x.shape)
+    dbias = jnp.sum(g2, axis=0) if has_bias else None
+    return dx, da, db_mat, dbias
+
+
+led_matmul.defvjp(_led_fwd, _led_bwd)
+
+
+def vmem_bytes(m_block: int, k: int, r: int, n: int, dtype_bytes: int = 4) -> int:
+    """Per-program VMEM footprint of the fused kernel (see module docstring)."""
+    floats = m_block * k + k * r + m_block * r + r * n + m_block * n
+    return floats * dtype_bytes

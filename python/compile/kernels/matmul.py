@@ -1,0 +1,124 @@
+"""Tiled dense matmul Pallas kernel (the uncompressed baseline's hot spot).
+
+The kernel follows the canonical TPU tiling: grid over (M/bm, N/bn, K/bk),
+accumulating partial products into the output tile across the K grid axis.
+On a real TPU each (bm, bk) x (bk, bn) tile contraction maps onto the MXU
+systolic array; here we run with `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls — see DESIGN.md §4) so the same schedule lowers to plain
+HLO and is validated numerically against `ref.dense_matmul_ref`.
+
+Both the forward product and the custom VJP (dx = g @ w^T, dw = x^T @ g) are
+expressed with the same kernel so the AOT-exported train_step graphs keep the
+Pallas schedule on the backward pass too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Multiples of the 128-wide MXU tile; sized so the
+# three per-program tiles (x, w, out) total 3 MiB — comfortably inside the
+# 16 MiB VMEM budget while keeping the grid small (grid-step overhead
+# dominates interpret-mode CPU execution; the EXPERIMENTS.md §Perf sweep
+# measured 3.0x end-to-end from 128^3 -> 512^3). The wrapper shrinks tiles
+# for small operands and pads to multiples so the grid always covers the
+# operands exactly.
+BLOCK_M = 512
+BLOCK_N = 512
+BLOCK_K = 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; K is the innermost grid axis (accumulate)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+def _block(size: int, target: int) -> int:
+    """Largest tile <= target that is a multiple of 8 (or the full size)."""
+    if size <= target:
+        return size
+    return target
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul_2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+) -> jnp.ndarray:
+    """y = x @ w for 2-D operands via the Pallas kernel. Pads to tile size."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, block_m), _block(n, block_n), _block(k, block_k)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _flatten_leading(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """y = x @ w (+ b); x may carry leading batch dims. Pallas hot path."""
+    x2, lead = _flatten_leading(x)
+    y = matmul_2d(x2, w)
+    if b is not None:
+        y = y + b
+    return y.reshape(lead + (w.shape[1],))
+
+
+def _matmul_fwd(x, w, b):
+    return matmul(x, w, b), (x, w, b is not None)
+
+
+def _matmul_bwd(res, g):
+    x, w, has_b = res
+    g2, _ = _flatten_leading(g)
+    x2, _ = _flatten_leading(x)
+    dx = matmul_2d(g2, w.T).reshape(x.shape)
+    dw = matmul_2d(x2.T, g2)
+    db = jnp.sum(g2, axis=0) if has_b else None
+    return dx, dw, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,170 @@
+"""Functional NN layers over param dicts, dispatching dense vs factorized.
+
+Every parameterized layer is a plain dict of arrays. A linear layer is either
+
+  dense: {"w": (k, n), "bias": (n,)}
+  LED:   {"a": (k, r), "b": (r, n), "bias": (n,)}      (paper Figure 3)
+
+and a conv layer is either
+
+  dense: {"w": (kh, kw, cin, cout), "bias": (cout,)}
+  CED:   {"a": (kh, kw, cin, r), "b": (1, 1, r, cout), "bias": (cout,)}
+
+`apply_linear` / `apply_conv` dispatch on the keys present, so the same model
+forward function runs any mixture of factorized and dense layers — which is
+exactly Greenformer's contract (LED/CED keep the layer's I/O signature).
+The dict structure is static under tracing, so each variant lowers to its own
+specialized HLO graph at AOT time.
+
+All GEMMs route through the Pallas kernels in `kernels/`.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import ced_conv2d, conv2d
+from .kernels.led import led_matmul
+from .kernels.matmul import matmul
+from .rank import rank_for
+from . import solvers
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def glorot(key, shape):
+    fan_in, fan_out = shape[-2], shape[-1]
+    if len(shape) == 4:  # conv HWIO
+        rf = shape[0] * shape[1]
+        fan_in, fan_out = rf * shape[2], rf * shape[3]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def init_linear(key, k: int, n: int, ratio: float | None, solver: str, num_iter: int) -> dict:
+    """Init a linear layer; factorize at init (factorization-by-design) when
+    `ratio` is given and the Eq.-1 gate accepts."""
+    kw, _ = jax.random.split(key)
+    w = glorot(kw, (k, n))
+    bias = jnp.zeros((n,), jnp.float32)
+    r = rank_for(k, n, ratio) if ratio is not None else None
+    if r is None:
+        return {"w": w, "bias": bias}
+    a, b = solvers.factorize(w, r, solver=solver, num_iter=num_iter, key=key)
+    return {"a": a, "b": b, "bias": bias}
+
+
+def init_conv(key, kh: int, kw_: int, cin: int, cout: int, ratio: float | None, solver: str, num_iter: int) -> dict:
+    """Init a conv layer; CED-factorize via the paper's (Cin*S, Cout) rearrangement."""
+    kk, _ = jax.random.split(key)
+    w = glorot(kk, (kh, kw_, cin, cout))
+    bias = jnp.zeros((cout,), jnp.float32)
+    m = kh * kw_ * cin
+    r = rank_for(m, cout, ratio) if ratio is not None else None
+    if r is None:
+        return {"w": w, "bias": bias}
+    a2d, b2d = solvers.factorize(w.reshape(m, cout), r, solver=solver, num_iter=num_iter, key=key)
+    return {
+        "a": a2d.reshape(kh, kw_, cin, r),
+        "b": b2d.reshape(1, 1, r, cout),
+        "bias": bias,
+    }
+
+
+def init_layernorm(d: int) -> dict:
+    return {"g": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# Application
+# ---------------------------------------------------------------------------
+
+def apply_linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w" in p:
+        return matmul(x, p["w"], p["bias"])
+    return led_matmul(x, p["a"], p["b"], p["bias"])
+
+
+def apply_conv(p: dict, x: jnp.ndarray, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    if "w" in p:
+        return conv2d(x, p["w"], p["bias"], stride, padding)
+    return ced_conv2d(x, p["a"], p["b"], p["bias"], stride, padding)
+
+
+def apply_layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["bias"]
+
+
+def apply_embedding(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+def attention(p: dict, x: jnp.ndarray, heads: int, causal: bool) -> jnp.ndarray:
+    """Multi-head self-attention; all four projections go through
+    apply_linear, so they factorize like any other linear layer."""
+    b, s, d = x.shape
+    dk = d // heads
+    q = apply_linear(p["q"], x).reshape(b, s, heads, dk).transpose(0, 2, 1, 3)
+    k = apply_linear(p["k"], x).reshape(b, s, heads, dk).transpose(0, 2, 1, 3)
+    v = apply_linear(p["v"], x).reshape(b, s, heads, dk).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dk)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+        scores = jnp.where(mask, scores, -1e9)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", w, v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return apply_linear(p["o"], ctx)
+
+
+def transformer_block(p: dict, x: jnp.ndarray, heads: int, causal: bool) -> jnp.ndarray:
+    """Pre-LN transformer block: x + attn(ln(x)); x + ffn(ln(x))."""
+    x = x + attention(p["attn"], apply_layernorm(p["ln1"], x), heads, causal)
+    h = apply_linear(p["fc1"], apply_layernorm(p["ln2"], x))
+    h = jax.nn.gelu(h)
+    return x + apply_linear(p["fc2"], h)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers for composite modules
+# ---------------------------------------------------------------------------
+
+def _maybe_ratio(name: str, ratio: float | None, filters: list[str] | None) -> float | None:
+    """Greenformer's submodule filter: factorize `name` only when it matches
+    one of the filter substrings (or no filter is set)."""
+    if ratio is None:
+        return None
+    if filters is None:
+        return ratio
+    return ratio if any(f in name for f in filters) else None
+
+
+def init_attention(key, d: int, name: str, ratio, solver, num_iter, filters) -> dict:
+    keys = jax.random.split(key, 4)
+    return {
+        proj: init_linear(
+            keys[i], d, d, _maybe_ratio(f"{name}/{proj}", ratio, filters), solver, num_iter
+        )
+        for i, proj in enumerate(("q", "k", "v", "o"))
+    }
+
+
+def init_block(key, d: int, ff: int, name: str, ratio, solver, num_iter, filters) -> dict:
+    ka, k1, k2 = jax.random.split(key, 3)
+    return {
+        "ln1": init_layernorm(d),
+        "attn": init_attention(ka, d, f"{name}/attn", ratio, solver, num_iter, filters),
+        "ln2": init_layernorm(d),
+        "fc1": init_linear(k1, d, ff, _maybe_ratio(f"{name}/fc1", ratio, filters), solver, num_iter),
+        "fc2": init_linear(k2, ff, d, _maybe_ratio(f"{name}/fc2", ratio, filters), solver, num_iter),
+    }

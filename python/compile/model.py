@@ -1,0 +1,278 @@
+"""L2 model zoo: the three architectures the paper's evaluation needs.
+
+  * `text`  — transformer encoder classifier (the 3 text-classification tasks)
+  * `image` — small CNN classifier (the 2 image-classification tasks)
+  * `lm`    — causal decoder-only LM (the in-context-learning use case)
+
+Each model exists in a family of *variants*: dense (the paper's uncompressed
+baseline) and LED/CED-factorized at a rank ratio, optionally restricted by
+Greenformer's submodule filter. A variant fixes the param pytree structure,
+so each (model, variant) pair lowers to its own HLO graph; the weights are
+runtime inputs, which is what lets the Rust side swap dense checkpoints,
+post-training-factorized weights, or by-design-trained factors into the same
+graph family without re-lowering.
+
+Also defines the fused `train_step` (fwd + bwd + Adam) exported for the
+Rust training driver — Python never runs at training time either.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TextConfig:
+    vocab: int = 512
+    seq: int = 64
+    d: int = 128
+    heads: int = 4
+    layers: int = 2
+    ff: int = 512
+    classes: int = 4
+
+
+@dataclass(frozen=True)
+class ImageConfig:
+    hw: int = 28
+    ch: int = 1
+    classes: int = 4
+    c1: int = 16
+    c2: int = 32
+    fc: int = 128
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 512
+    seq: int = 128
+    d: int = 192
+    heads: int = 6
+    layers: int = 4
+    ff: int = 768
+
+
+@dataclass(frozen=True)
+class Variant:
+    """A factorization decision: Greenformer's auto_fact arguments."""
+
+    ratio: float | None = None  # None => dense baseline
+    solver: str = "svd"
+    num_iter: int = 50
+    filters: tuple[str, ...] | None = None  # submodule name filter
+
+    @property
+    def name(self) -> str:
+        if self.ratio is None:
+            return "dense"
+        pct = int(round(self.ratio * 100))
+        tag = f"led_r{pct:02d}"
+        if self.filters:
+            tag += "_f" + "-".join(self.filters)
+        return tag
+
+
+# ---------------------------------------------------------------------------
+# Text classifier
+# ---------------------------------------------------------------------------
+
+def init_text(key, cfg: TextConfig, v: Variant) -> dict:
+    keys = jax.random.split(key, cfg.layers + 3)
+    f = list(v.filters) if v.filters is not None else None
+    params = {
+        "embed": layers.init_embedding(keys[0], cfg.vocab, cfg.d),
+        "pos": {"table": jax.random.normal(keys[1], (cfg.seq, cfg.d), jnp.float32) * 0.02},
+        "head": layers.init_linear(
+            keys[2], cfg.d, cfg.classes,
+            layers._maybe_ratio("head", v.ratio, f), v.solver, v.num_iter,
+        ),
+        "ln_f": layers.init_layernorm(cfg.d),
+    }
+    for i in range(cfg.layers):
+        params[f"block{i}"] = layers.init_block(
+            keys[3 + i], cfg.d, cfg.ff, f"block{i}", v.ratio, v.solver, v.num_iter, f
+        )
+    return params
+
+
+def text_forward(params: dict, cfg: TextConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> logits (B, classes). Mean-pool over tokens."""
+    x = layers.apply_embedding(params["embed"], tokens) + params["pos"]["table"]
+    for i in range(cfg.layers):
+        x = layers.transformer_block(params[f"block{i}"], x, cfg.heads, causal=False)
+    x = layers.apply_layernorm(params["ln_f"], x)
+    pooled = jnp.mean(x, axis=1)
+    return layers.apply_linear(params["head"], pooled)
+
+
+# ---------------------------------------------------------------------------
+# Image classifier (CNN -> CED factorization path)
+# ---------------------------------------------------------------------------
+
+def init_image(key, cfg: ImageConfig, v: Variant) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    f = list(v.filters) if v.filters is not None else None
+    flat = (cfg.hw // 4) * (cfg.hw // 4) * cfg.c2
+    return {
+        "conv1": layers.init_conv(
+            k1, 3, 3, cfg.ch, cfg.c1,
+            layers._maybe_ratio("conv1", v.ratio, f), v.solver, v.num_iter,
+        ),
+        "conv2": layers.init_conv(
+            k2, 3, 3, cfg.c1, cfg.c2,
+            layers._maybe_ratio("conv2", v.ratio, f), v.solver, v.num_iter,
+        ),
+        "fc1": layers.init_linear(
+            k3, flat, cfg.fc, layers._maybe_ratio("fc1", v.ratio, f), v.solver, v.num_iter
+        ),
+        "fc2": layers.init_linear(
+            k4, cfg.fc, cfg.classes,
+            layers._maybe_ratio("fc2", v.ratio, f), v.solver, v.num_iter,
+        ),
+    }
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def image_forward(params: dict, cfg: ImageConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) f32 -> logits (B, classes)."""
+    x = layers.apply_conv(params["conv1"], images)
+    x = _maxpool2(jax.nn.relu(x))
+    x = layers.apply_conv(params["conv2"], x)
+    x = _maxpool2(jax.nn.relu(x))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(layers.apply_linear(params["fc1"], x))
+    return layers.apply_linear(params["fc2"], x)
+
+
+# ---------------------------------------------------------------------------
+# Causal LM (ICL use case)
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: LMConfig, v: Variant) -> dict:
+    keys = jax.random.split(key, cfg.layers + 3)
+    f = list(v.filters) if v.filters is not None else None
+    params = {
+        "embed": layers.init_embedding(keys[0], cfg.vocab, cfg.d),
+        "pos": {"table": jax.random.normal(keys[1], (cfg.seq, cfg.d), jnp.float32) * 0.02},
+        "head": layers.init_linear(
+            keys[2], cfg.d, cfg.vocab,
+            layers._maybe_ratio("head", v.ratio, f), v.solver, v.num_iter,
+        ),
+        "ln_f": layers.init_layernorm(cfg.d),
+    }
+    for i in range(cfg.layers):
+        params[f"block{i}"] = layers.init_block(
+            keys[3 + i], cfg.d, cfg.ff, f"block{i}", v.ratio, v.solver, v.num_iter, f
+        )
+    return params
+
+
+def lm_forward(params: dict, cfg: LMConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) int32 -> next-token logits (B, S, vocab)."""
+    s = tokens.shape[1]
+    x = layers.apply_embedding(params["embed"], tokens) + params["pos"]["table"][:s]
+    for i in range(cfg.layers):
+        x = layers.transformer_block(params[f"block{i}"], x, cfg.heads, causal=True)
+    x = layers.apply_layernorm(params["ln_f"], x)
+    return layers.apply_linear(params["head"], x)
+
+
+# ---------------------------------------------------------------------------
+# Losses + fused Adam train step
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; labels are int class ids over the last logit dim."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_loss(params, cfg: LMConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token prediction over the full sequence."""
+    logits = lm_forward(params, cfg, tokens[:, :-1])
+    return softmax_xent(logits, tokens[:, 1:])
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def make_train_step(loss_fn, adam: AdamConfig = AdamConfig()):
+    """Returns train_step(params, m, v, step, *batch) -> (params, m, v, loss).
+
+    One fused graph: forward, backward (through the Pallas custom VJPs), and
+    the Adam update. `step` is a float32 scalar (1-based) used for bias
+    correction. Exported by aot.py; driven from Rust.
+    """
+
+    def train_step(params, m, v, step, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+
+        def upd(p, g, mi, vi):
+            mi = adam.b1 * mi + (1.0 - adam.b1) * g
+            vi = adam.b2 * vi + (1.0 - adam.b2) * jnp.square(g)
+            mhat = mi / (1.0 - adam.b1**step)
+            vhat = vi / (1.0 - adam.b2**step)
+            return p - adam.lr * mhat / (jnp.sqrt(vhat) + adam.eps), mi, vi
+
+        stacked = jax.tree_util.tree_map(upd, params, grads, m, v)
+        is_triple = lambda t: isinstance(t, tuple)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], stacked, is_leaf=is_triple)
+        new_m = jax.tree_util.tree_map(lambda t: t[1], stacked, is_leaf=is_triple)
+        new_v = jax.tree_util.tree_map(lambda t: t[2], stacked, is_leaf=is_triple)
+        return new_p, new_m, new_v, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Param flattening (the Rust interchange contract)
+# ---------------------------------------------------------------------------
+
+def flatten_params(params: dict, prefix: str = "") -> list[tuple[str, jnp.ndarray]]:
+    """Deterministic depth-first, key-sorted flattening. The AOT manifest
+    records the resulting name order; Rust marshals literals in exactly this
+    order. Names look like `block0/attn/q/w`."""
+    out = []
+    for key in sorted(params.keys()):
+        val = params[key]
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.extend(flatten_params(val, name + "/"))
+        else:
+            out.append((name, val))
+    return out
+
+
+def unflatten_params(flat: list[tuple[str, jnp.ndarray]]) -> dict:
+    """Inverse of flatten_params."""
+    root: dict = {}
+    for name, val in flat:
+        parts = name.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def tree_zeros_like(params: dict) -> dict:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

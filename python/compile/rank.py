@@ -1,0 +1,88 @@
+"""Rank policy shared between the JAX build path and the Rust toolkit.
+
+This module is the single Python source of truth for Greenformer's rank
+arithmetic (paper Eq. 1). `rust/src/factorize/rank.rs` mirrors it bit-for-bit;
+`python/tests/test_rank.py` and the Rust property tests pin the same vectors
+so the two implementations can never drift (the AOT graph shapes and the
+checkpoint factor shapes must agree exactly).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: Factor ranks are rounded down to a multiple of this. 8 is the TPU lane
+#: granularity (see DESIGN.md §4 Hardware adaptation); it also keeps the
+#: MXU-utilization estimate honest for the skinny GEMMs LED produces.
+RANK_MULTIPLE = 8
+
+#: Smallest rank we will ever emit. Below this the factor matmuls are pure
+#: overhead on every backend.
+MIN_RANK = 8
+
+
+def r_max(m: int, n: int) -> float:
+    """Paper Eq. 1: the break-even rank of an (m, n) weight matrix.
+
+    A rank-r factorization costs r*(m+n) parameters/FLOPs against m*n for
+    the dense layer, so factorization only wins when r < m*n/(m+n).
+    """
+    return (m * n) / (m + n)
+
+
+def rank_for(m: int, n: int, ratio: float) -> int | None:
+    """Resolve a rank ratio to a concrete rank for an (m, n) weight.
+
+    Returns None when the Eq.-1 gate rejects factorization (the resolved
+    rank would not reduce theoretical cost), in which case the layer is
+    left dense. Mirrored by `factorize::rank::rank_for` in Rust.
+    """
+    if m <= 0 or n <= 0 or ratio <= 0.0:
+        return None
+    rmax = r_max(m, n)
+    r = int(ratio * rmax)
+    r = (r // RANK_MULTIPLE) * RANK_MULTIPLE
+    if r < MIN_RANK:
+        r = MIN_RANK
+    # Eq. 1 gate: only factorize when the rank strictly reduces cost.
+    if float(r) >= rmax:
+        return None
+    return r
+
+
+@dataclass(frozen=True)
+class RankSpec:
+    """A resolved factorization decision for one layer."""
+
+    m: int
+    n: int
+    rank: int
+
+    @property
+    def dense_cost(self) -> int:
+        return self.m * self.n
+
+    @property
+    def factored_cost(self) -> int:
+        return self.rank * (self.m + self.n)
+
+    @property
+    def cost_ratio(self) -> float:
+        return self.factored_cost / self.dense_cost
+
+
+# Pinned vectors shared with rust/src/factorize/rank.rs::tests::pinned_vectors.
+# (m, n, ratio) -> rank or None. Update both places together.
+PINNED_VECTORS = [
+    ((128, 128, 0.50), 32),
+    ((128, 128, 0.25), 16),
+    ((128, 128, 0.10), 8),
+    ((128, 128, 0.90), 56),
+    ((768, 768, 0.50), 192),
+    ((768, 3072, 0.25), 152),
+    ((768, 3072, 0.50), 304),
+    ((512, 128, 0.75), 76 // RANK_MULTIPLE * RANK_MULTIPLE),  # 72
+    ((16, 16, 0.50), None),  # r_max=8 -> MIN_RANK==r_max, gate rejects
+    ((8, 8, 0.99), None),
+    ((4096, 4096, 0.75), 1536),
+]

@@ -1,0 +1,102 @@
+"""Factorization solvers: Random, SVD, SNMF — the paper's three options.
+
+Build-path counterparts of `rust/src/linalg/{svd,snmf,random}.rs`. These run
+only at artifact-build / experiment-setup time (factorization-by-design
+initialization and test oracles); the Rust implementations own the
+post-training path. `python/tests/test_solvers.py` pins both sides to the
+same numerical contracts (reconstruction error bounds, sign conventions,
+non-negativity).
+
+All solvers return (A, B) with W ~= A @ B, A: (m, r), B: (r, n).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def svd_factorize(w: jnp.ndarray, r: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Truncated SVD: W = U S V^T; A = U_r sqrt(S_r), B = sqrt(S_r) V_r^T.
+
+    The sqrt split balances the factor norms, which matters when the factors
+    are subsequently *trained* (by-design use case): both receive gradients
+    of comparable scale.
+    """
+    wn = np.asarray(w, dtype=np.float64)
+    u, s, vt = np.linalg.svd(wn, full_matrices=False)
+    sq = np.sqrt(s[:r])
+    a = u[:, :r] * sq[None, :]
+    b = sq[:, None] * vt[:r, :]
+    return jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+
+def snmf_factorize(
+    w: jnp.ndarray, r: int, num_iter: int = 50, seed: int = 0
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Semi-NMF (Ding, Li & Jordan 2010): W ~= A B with B >= 0, A free.
+
+    Multiplicative updates on G = B^T (n, r) >= 0 with A solved in closed
+    form each step: A = W G (G^T G)^-1. This matches the paper's description
+    ("B is strictly nonnegative yet A has no restriction on signs").
+    """
+    wn = np.asarray(w, dtype=np.float64)
+    m, n = wn.shape
+    rng = np.random.default_rng(seed)
+    g = np.abs(rng.normal(size=(n, r))) + 0.1  # B^T, kept nonnegative
+    eps = 1e-9
+    for _ in range(num_iter):
+        gtg = g.T @ g
+        a = wn @ g @ np.linalg.pinv(gtg)
+        wta = wn.T @ a  # (n, r)
+        ata = a.T @ a  # (r, r)
+        pos = np.maximum(wta, 0.0)
+        neg = np.maximum(-wta, 0.0)
+        ata_pos = np.maximum(ata, 0.0)
+        ata_neg = np.maximum(-ata, 0.0)
+        num = pos + g @ ata_neg
+        den = neg + g @ ata_pos + eps
+        g = g * np.sqrt(num / den)
+    gtg = g.T @ g
+    a = wn @ g @ np.linalg.pinv(gtg)
+    return jnp.asarray(a, jnp.float32), jnp.asarray(g.T, jnp.float32)
+
+
+def random_factorize(
+    w: jnp.ndarray, r: int, key: jax.Array | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Random solver: fresh factors sized from W and r, scaled so that the
+    product A @ B has approximately W's glorot variance. Suitable only for
+    factorization-by-design (it does not approximate W — paper §Design)."""
+    m, n = w.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    # var(sum_r a*b) = r * va * vb; target vw ~ 2/(m+n) (glorot).
+    vw = 2.0 / (m + n)
+    va = vb = np.sqrt(vw / r)
+    a = jax.random.normal(ka, (m, r), jnp.float32) * np.sqrt(va)
+    b = jax.random.normal(kb, (r, n), jnp.float32) * np.sqrt(vb)
+    return a, b
+
+
+SOLVERS = ("random", "svd", "snmf")
+
+
+def factorize(
+    w: jnp.ndarray,
+    r: int,
+    solver: str = "svd",
+    num_iter: int = 50,
+    key: jax.Array | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch over the paper's three solvers (greenformer.auto_fact's
+    `solver=` argument)."""
+    if solver == "svd":
+        return svd_factorize(w, r)
+    if solver == "snmf":
+        return snmf_factorize(w, r, num_iter=num_iter)
+    if solver == "random":
+        return random_factorize(w, r, key=key)
+    raise ValueError(f"unknown solver {solver!r}; expected one of {SOLVERS}")

@@ -1,0 +1,89 @@
+"""AOT exporter contracts: HLO text validity, manifest consistency, GTZ format."""
+
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn = lambda x: (jnp.sum(x * 2.0),)
+    text = aot.to_hlo_text(jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert "HloModule" in text
+    assert "parameter(0)" in text.replace(" ", "").replace("parameter(0)", "parameter(0)") or "parameter" in text
+
+
+def test_gtz_roundtrip(tmp_path):
+    tensors = [
+        ("a/w", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("a/bias", np.zeros((4,), np.float32)),
+        ("toks", np.array([1, 2, 3], np.int32)),
+        ("scalar", np.float32(3.5).reshape(())),
+    ]
+    p = tmp_path / "t.gtz"
+    aot.write_gtz(p, tensors)
+    # hand-roll a reader to pin the byte layout rust relies on
+    buf = p.read_bytes()
+    assert buf[:4] == b"GTZ1"
+    (count,) = struct.unpack_from("<I", buf, 4)
+    assert count == 4
+    off = 8
+    for name, arr in tensors:
+        (nlen,) = struct.unpack_from("<H", buf, off)
+        off += 2
+        assert buf[off : off + nlen].decode() == name
+        off += nlen
+        dtype, ndim = struct.unpack_from("<BB", buf, off)
+        off += 2
+        assert dtype == (0 if arr.dtype == np.float32 else 1)
+        assert ndim == arr.ndim
+        dims = struct.unpack_from(f"<{ndim}Q", buf, off)
+        off += 8 * ndim
+        assert tuple(dims) == arr.shape
+        raw = np.frombuffer(buf, dtype=arr.dtype, count=arr.size, offset=off).reshape(arr.shape)
+        np.testing.assert_array_equal(raw, arr)
+        off += arr.nbytes
+    assert off == len(buf)
+
+
+def test_collect_ranks_matches_param_shapes():
+    cfg = M.TextConfig(vocab=64, seq=16, d=64, heads=2, layers=1, ff=128)
+    p = M.init_text(jax.random.PRNGKey(0), cfg, M.Variant(ratio=0.5))
+    ranks = aot.collect_ranks(p)
+    assert ranks["block0/attn/q"] == 16  # rank_for(64, 64, 0.5) = 16
+    assert "head" not in ranks  # gate rejected
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_files():
+    man = json.loads((ART / "manifest.json").read_text())
+    assert man["format"] == 1
+    assert len(man["graphs"]) >= 10
+    for g in man["graphs"]:
+        f = ART / g["file"]
+        assert f.exists(), g["name"]
+        assert g["params"], g["name"]
+        for spec in g["params"]:
+            assert spec["dtype"] in ("f32", "i32")
+    for c in man["checkpoints"]:
+        assert (ART / c["file"]).exists()
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_param_order_is_flatten_order():
+    """The manifest's param list must equal flatten_params order for a fresh
+    init — this is the contract the Rust literal marshalling relies on."""
+    man = json.loads((ART / "manifest.json").read_text())
+    g = next(g for g in man["graphs"] if g["name"] == "text_dense_fwd_b8")
+    cfg = M.TextConfig(**g["config"])
+    p = M.init_text(jax.random.PRNGKey(42), cfg, M.Variant())
+    names = [n for n, _ in M.flatten_params(p)]
+    assert [s["name"] for s in g["params"]] == names

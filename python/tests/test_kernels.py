@@ -1,0 +1,185 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (including awkward non-multiple-of-tile sizes) and
+dtypes; every Pallas kernel must match its pure-jnp oracle in `kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, led, matmul, ref
+
+ATOL = {jnp.float32: 2e-4}
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+dims = st.integers(min_value=1, max_value=257)
+small_dims = st.integers(min_value=1, max_value=48)
+ranks = st.integers(min_value=1, max_value=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, bias=st.booleans(), data=st.randoms())
+def test_matmul_matches_ref(m, k, n, bias, data):
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    b = _rand(rng, n) if bias else None
+    got = matmul.matmul(x, w, b)
+    want = ref.dense_matmul_ref(x, w, b)
+    np.testing.assert_allclose(got, want, atol=ATOL[jnp.float32] * max(1, k // 16), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, r=ranks, bias=st.booleans(), data=st.randoms())
+def test_led_matches_ref(m, k, n, r, bias, data):
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    x, a, b = _rand(rng, m, k), _rand(rng, k, r), _rand(rng, r, n)
+    bb = _rand(rng, n) if bias else None
+    got = led.led_matmul(x, a, b, bb)
+    want = ref.led_matmul_ref(x, a, b, bb)
+    np.testing.assert_allclose(got, want, atol=2e-3 * max(1, k // 32), rtol=1e-4)
+
+
+def test_matmul_batched_leading_dims():
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 3, 5, 20)
+    w = _rand(rng, 20, 7)
+    got = matmul.matmul(x, w)
+    want = ref.dense_matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+    assert got.shape == (3, 5, 7)
+
+
+def test_led_batched_leading_dims():
+    rng = np.random.default_rng(1)
+    x, a, b = _rand(rng, 2, 4, 16), _rand(rng, 16, 4), _rand(rng, 4, 9)
+    got = led.led_matmul(x, a, b)
+    np.testing.assert_allclose(got, ref.led_matmul_ref(x, a, b), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("argnum", [0, 1, 2, 3])
+def test_matmul_grads_match_ref(argnum):
+    rng = np.random.default_rng(2)
+    x, w, b = _rand(rng, 6, 30), _rand(rng, 30, 11), _rand(rng, 11)
+
+    def f(x, w, b):
+        return jnp.sum(matmul.matmul(x, w, b) ** 2)
+
+    def fr(x, w, b):
+        return jnp.sum(ref.dense_matmul_ref(x, w, b) ** 2)
+
+    if argnum == 3:
+        pytest.skip("matmul takes 3 args")
+    g = jax.grad(f, argnums=argnum)(x, w, b)
+    gr = jax.grad(fr, argnums=argnum)(x, w, b)
+    np.testing.assert_allclose(g, gr, atol=5e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("argnum", [0, 1, 2, 3])
+def test_led_grads_match_ref(argnum):
+    rng = np.random.default_rng(3)
+    x, a, b, bias = _rand(rng, 6, 30), _rand(rng, 30, 8), _rand(rng, 8, 11), _rand(rng, 11)
+
+    def f(*args):
+        return jnp.sum(led.led_matmul(*args) ** 2)
+
+    def fr(*args):
+        return jnp.sum(ref.led_matmul_ref(*args) ** 2)
+
+    g = jax.grad(f, argnums=argnum)(x, a, b, bias)
+    gr = jax.grad(fr, argnums=argnum)(x, a, b, bias)
+    np.testing.assert_allclose(g, gr, atol=5e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(5, 17),
+    cin=st.integers(1, 5),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    data=st.randoms(),
+)
+def test_conv2d_matches_lax(n, hw, cin, cout, stride, padding, data):
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    kh = kw = 3
+    if padding == "VALID" and hw < kh:
+        return
+    x = _rand(rng, n, hw, hw, cin)
+    w = _rand(rng, kh, kw, cin, cout)
+    b = _rand(rng, cout)
+    got = conv.conv2d(x, w, b, stride, padding)
+    want = ref.conv2d_ref(x, w, b, stride, padding)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.integers(6, 15),
+    cin=st.integers(1, 4),
+    cout=st.integers(2, 8),
+    r=st.integers(1, 4),
+    stride=st.sampled_from([1, 2]),
+    data=st.randoms(),
+)
+def test_ced_conv2d_matches_lax(hw, cin, cout, r, stride, data):
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    x = _rand(rng, 2, hw, hw, cin)
+    a = _rand(rng, 3, 3, cin, r)
+    b = _rand(rng, 1, 1, r, cout)
+    bias = _rand(rng, cout)
+    got = conv.ced_conv2d(x, a, b, bias, stride)
+    want = ref.ced_conv2d_ref(x, a, b, bias, stride)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_conv_grads_flow():
+    """AD must flow through im2col into the Pallas matmul VJPs."""
+    rng = np.random.default_rng(4)
+    x = _rand(rng, 1, 8, 8, 2)
+    w = _rand(rng, 3, 3, 2, 5)
+
+    def f(w):
+        return jnp.sum(conv.conv2d(x, w) ** 2)
+
+    def fr(w):
+        return jnp.sum(ref.conv2d_ref(x, w) ** 2)
+
+    g, gr = jax.grad(f)(w), jax.grad(fr)(w)
+    np.testing.assert_allclose(g, gr, atol=5e-3, rtol=1e-3)
+
+
+def test_led_vmem_model_under_budget():
+    """The fused LED kernel's per-program VMEM must fit the 16 MiB budget for
+    every linear shape the model zoo emits (DESIGN.md §4)."""
+    from compile import aot
+    from compile.rank import rank_for
+
+    shapes = []
+    tc, lc = aot.TEXT_CFG, aot.LM_CFG
+    for k, n in [(tc.d, tc.d), (tc.d, tc.ff), (tc.ff, tc.d), (lc.d, lc.ff), (lc.ff, lc.d), (lc.d, lc.vocab)]:
+        for ratio in aot.RATIOS:
+            r = rank_for(k, n, ratio)
+            if r is not None:
+                shapes.append((k, r, n))
+    budget = 16 * 1024 * 1024
+    for k, r, n in shapes:
+        assert led.vmem_bytes(led.BLOCK_M, k, r, n) < budget, (k, r, n)
+
+
+def test_matmul_kernel_blocks_divide_padded_shapes():
+    """Padding in matmul_2d must never change the result."""
+    rng = np.random.default_rng(5)
+    # Shapes chosen to exercise every padding branch: below, equal, above tile.
+    for m, k, n in [(1, 1, 1), (128, 128, 128), (129, 127, 130), (255, 3, 257)]:
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        got = matmul.matmul_2d(x, w)
+        want = jnp.matmul(x, w)
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)

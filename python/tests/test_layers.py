@@ -1,0 +1,94 @@
+"""Layer-level checks: dense/LED dispatch, filter semantics, init fidelity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_init_linear_dense_when_no_ratio():
+    p = layers.init_linear(KEY, 32, 48, None, "svd", 10)
+    assert set(p) == {"w", "bias"}
+    assert p["w"].shape == (32, 48)
+
+
+def test_init_linear_factorizes_with_svd_faithfully():
+    p = layers.init_linear(KEY, 128, 128, 0.5, "svd", 10)
+    assert set(p) == {"a", "b", "bias"}
+    assert p["a"].shape == (128, 32)  # rank_for(128,128,0.5) = 32
+    # SVD init: A@B approximates the glorot W it was built from in
+    # distribution — check the product's variance is glorot-like.
+    prod_var = float(jnp.var(p["a"] @ p["b"]))
+    glorot_var = (2.0 * (128 + 128)) ** -1 * 2  # 1/(fan_avg) * ...
+    assert prod_var < 0.1  # sane scale, not exploded
+
+
+def test_init_linear_gate_rejects_small():
+    p = layers.init_linear(KEY, 8, 8, 0.9, "svd", 10)
+    assert "w" in p  # r_max = 4 < MIN_RANK -> dense
+
+
+def test_apply_linear_dispatch_matches_refs():
+    x = jax.random.normal(KEY, (4, 32))
+    dense = layers.init_linear(KEY, 32, 16, None, "svd", 5)
+    got = layers.apply_linear(dense, x)
+    np.testing.assert_allclose(
+        got, ref.dense_matmul_ref(x, dense["w"], dense["bias"]), atol=1e-4, rtol=1e-4
+    )
+    fact = layers.init_linear(KEY, 128, 64, 0.25, "svd", 5)
+    x2 = jax.random.normal(KEY, (4, 128))
+    got = layers.apply_linear(fact, x2)
+    np.testing.assert_allclose(
+        got, ref.led_matmul_ref(x2, fact["a"], fact["b"], fact["bias"]), atol=2e-3, rtol=1e-3
+    )
+
+
+def test_init_conv_ced_shapes_follow_paper_rearrangement():
+    p = layers.init_conv(KEY, 3, 3, 16, 32, 0.5, "svd", 5)
+    # m = 144, n = 32, r_max = 26.18 -> rank 8
+    assert p["a"].shape == (3, 3, 16, 8)
+    assert p["b"].shape == (1, 1, 8, 32)
+
+
+def test_maybe_ratio_filter():
+    assert layers._maybe_ratio("block0/fc1", 0.5, None) == 0.5
+    assert layers._maybe_ratio("block0/fc1", 0.5, ["fc1"]) == 0.5
+    assert layers._maybe_ratio("block0/attn/q", 0.5, ["fc1"]) is None
+    assert layers._maybe_ratio("anything", None, ["fc1"]) is None
+
+
+def test_layernorm_matches_ref():
+    x = jax.random.normal(KEY, (2, 5, 16))
+    p = layers.init_layernorm(16)
+    np.testing.assert_allclose(
+        layers.apply_layernorm(p, x), ref.layernorm_ref(x, p["g"], p["bias"]), atol=1e-5
+    )
+
+
+def test_attention_shape_and_causality():
+    d, h, s = 32, 4, 10
+    p = layers.init_attention(KEY, d, "attn", None, "svd", 5, None)
+    x = jax.random.normal(KEY, (2, s, d))
+    out = layers.attention(p, x, h, causal=True)
+    assert out.shape == (2, s, d)
+    # Causality: output at position t must not change when future tokens do.
+    x2 = x.at[:, -1, :].set(99.0)
+    out2 = layers.attention(p, x2, h, causal=True)
+    np.testing.assert_allclose(out[:, :-1], out2[:, :-1], atol=1e-4)
+    # And WOULD change without the mask.
+    out3 = layers.attention(p, x2, h, causal=False)
+    assert float(jnp.max(jnp.abs(out3[:, 0] - layers.attention(p, x, h, False)[:, 0]))) > 1e-3
+
+
+@pytest.mark.parametrize("solver", ["svd", "snmf", "random"])
+def test_all_solvers_produce_runnable_layers(solver):
+    p = layers.init_linear(KEY, 64, 64, 0.5, solver, 5)
+    x = jax.random.normal(KEY, (3, 64))
+    out = layers.apply_linear(p, x)
+    assert out.shape == (3, 64)
+    assert bool(jnp.all(jnp.isfinite(out)))

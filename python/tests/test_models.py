@@ -1,0 +1,150 @@
+"""Model-level checks: shapes, variant structure, learning, factorization
+fidelity (post-training SVD at high rank ~ dense), filtering semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import layers, solvers
+from compile.rank import rank_for
+
+KEY = jax.random.PRNGKey(7)
+SMALL_TEXT = M.TextConfig(vocab=64, seq=16, d=64, heads=2, layers=1, ff=128, classes=3)
+SMALL_LM = M.LMConfig(vocab=64, seq=24, d=64, heads=2, layers=1, ff=128)
+SMALL_IMG = M.ImageConfig(hw=12, ch=1, classes=3, c1=8, c2=16, fc=32)
+
+
+def test_text_forward_shapes():
+    for v in (M.Variant(), M.Variant(ratio=0.5), M.Variant(ratio=0.25, solver="random")):
+        p = M.init_text(KEY, SMALL_TEXT, v)
+        out = M.text_forward(p, SMALL_TEXT, jnp.zeros((5, 16), jnp.int32))
+        assert out.shape == (5, 3)
+
+
+def test_image_forward_shapes():
+    for v in (M.Variant(), M.Variant(ratio=0.5)):
+        p = M.init_image(KEY, SMALL_IMG, v)
+        out = M.image_forward(p, SMALL_IMG, jnp.zeros((4, 12, 12, 1)))
+        assert out.shape == (4, 3)
+
+
+def test_lm_forward_shapes():
+    p = M.init_lm(KEY, SMALL_LM, M.Variant(ratio=0.5))
+    out = M.lm_forward(p, SMALL_LM, jnp.zeros((2, 24), jnp.int32))
+    assert out.shape == (2, 24, 64)
+
+
+def test_variant_changes_param_structure():
+    dense = M.init_text(KEY, SMALL_TEXT, M.Variant())
+    fact = M.init_text(KEY, SMALL_TEXT, M.Variant(ratio=0.5))
+    dn = {n for n, _ in M.flatten_params(dense)}
+    fn = {n for n, _ in M.flatten_params(fact)}
+    assert "block0/attn/q/w" in dn and "block0/attn/q/w" not in fn
+    assert "block0/attn/q/a" in fn and "block0/attn/q/b" in fn
+    # head (64 x 3): r_max = 2.87 < MIN_RANK -> gate rejects, stays dense
+    assert "head/w" in fn
+
+
+def test_filter_restricts_factorization():
+    v = M.Variant(ratio=0.5, filters=("fc1", "fc2"))
+    p = M.init_text(KEY, SMALL_TEXT, v)
+    names = {n for n, _ in M.flatten_params(p)}
+    assert "block0/fc1/a" in names
+    assert "block0/attn/q/w" in names  # attention untouched by filter
+
+
+def test_factorized_has_fewer_params():
+    cfg = M.TextConfig()
+    dense = M.init_text(KEY, cfg, M.Variant())
+    fact = M.init_text(KEY, cfg, M.Variant(ratio=0.25))
+    n_dense = sum(int(np.prod(t.shape)) for _, t in M.flatten_params(dense))
+    n_fact = sum(int(np.prod(t.shape)) for _, t in M.flatten_params(fact))
+    assert n_fact < n_dense
+
+
+def test_post_training_svd_preserves_logits_on_low_rank_weights():
+    """Post-training factorization's promise holds when weights have low
+    effective rank (as trained weights do — the paper's whole premise).
+    Build a model whose linear weights are exactly rank-10 plus tiny noise;
+    SVD truncation at rank >= 16 must then barely move the logits."""
+    cfg = SMALL_TEXT
+    dense = M.init_text(KEY, cfg, M.Variant())
+
+    def lowrankify(node, key):
+        if isinstance(node, dict):
+            if "w" in node and node["w"].ndim == 2:
+                k, n = node["w"].shape
+                k1, k2 = jax.random.split(key)
+                u = jax.random.normal(k1, (k, 10)) / np.sqrt(k)
+                vt = jax.random.normal(k2, (10, n)) / np.sqrt(10)
+                w = u @ vt + 1e-4 * jax.random.normal(key, (k, n))
+                return {"w": w.astype(jnp.float32), "bias": node["bias"]}
+            return {kk: lowrankify(vv, jax.random.fold_in(key, hash(kk) % 2**31)) for kk, vv in node.items()}
+        return node
+
+    dense = lowrankify(dense, KEY)
+    x = jax.random.randint(KEY, (4, cfg.seq), 0, cfg.vocab)
+    base = M.text_forward(dense, cfg, x)
+
+    def fact_tree(node):
+        if isinstance(node, dict):
+            if "w" in node and node["w"].ndim == 2:
+                k, n = node["w"].shape
+                r = rank_for(k, n, 0.5)  # rank 16 >= true rank 10
+                if r is not None:
+                    a, b = solvers.svd_factorize(node["w"], r)
+                    return {"a": a, "b": b, "bias": node["bias"]}
+            return {kk: fact_tree(vv) for kk, vv in node.items()}
+        return node
+
+    fact = fact_tree(dense)
+    out = M.text_forward(fact, cfg, x)
+    scale = float(jnp.max(jnp.abs(base))) + 1e-6
+    assert float(jnp.max(jnp.abs(out - base))) < 0.05 * scale + 0.05
+
+
+@pytest.mark.parametrize("variant", [M.Variant(), M.Variant(ratio=0.5), M.Variant(ratio=0.5, solver="random")])
+def test_text_training_reduces_loss(variant):
+    cfg = SMALL_TEXT
+    p = M.init_text(KEY, cfg, variant)
+    loss_fn = lambda params, x, y: M.softmax_xent(M.text_forward(params, cfg, x), y)
+    step = jax.jit(M.make_train_step(loss_fn))
+    m, v = M.tree_zeros_like(p), M.tree_zeros_like(p)
+    x = jax.random.randint(KEY, (8, cfg.seq), 0, cfg.vocab)
+    y = jnp.arange(8) % cfg.classes
+    first = None
+    for i in range(1, 13):
+        p, m, v, loss = step(p, m, v, jnp.float32(i), x, y)
+        first = first or float(loss)
+    assert float(loss) < first * 0.7
+
+
+def test_lm_training_reduces_loss():
+    cfg = SMALL_LM
+    p = M.init_lm(KEY, cfg, M.Variant(ratio=0.5))
+    step = jax.jit(M.make_train_step(lambda params, t: M.lm_loss(params, cfg, t)))
+    m, v = M.tree_zeros_like(p), M.tree_zeros_like(p)
+    toks = jax.random.randint(KEY, (4, cfg.seq), 0, cfg.vocab)
+    first = None
+    for i in range(1, 9):
+        p, m, v, loss = step(p, m, v, jnp.float32(i), toks)
+        first = first or float(loss)
+    assert float(loss) < first
+
+
+def test_flatten_unflatten_roundtrip():
+    p = M.init_text(KEY, SMALL_TEXT, M.Variant(ratio=0.5))
+    flat = M.flatten_params(p)
+    back = M.unflatten_params(flat)
+    flat2 = M.flatten_params(back)
+    assert [n for n, _ in flat] == [n for n, _ in flat2]
+    for (_, a), (_, b) in zip(flat, flat2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_flatten_order_is_sorted_depth_first():
+    p = {"b": {"y": jnp.zeros(1), "x": jnp.zeros(1)}, "a": jnp.zeros(1)}
+    names = [n for n, _ in M.flatten_params(p)]
+    assert names == ["a", "b/x", "b/y"]

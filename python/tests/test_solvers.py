@@ -1,0 +1,117 @@
+"""Solver contracts: SVD optimality, SNMF constraints, Random statistics.
+
+These same contracts are asserted by the Rust property tests over
+`rust/src/linalg` — the two implementations are pinned to each other through
+the shared bounds, not through bit-identical outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import solvers
+from compile.rank import MIN_RANK, RANK_MULTIPLE, PINNED_VECTORS, r_max, rank_for
+
+
+def _matrix(rng, m, n):
+    return jnp.asarray(rng.normal(size=(m, n)).astype(np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 64), n=st.integers(4, 64), data=st.randoms())
+def test_svd_truncation_is_optimal(m, n, data):
+    """||W - AB||_F^2 must equal the sum of squared discarded singular values
+    (Eckart–Young)."""
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    w = _matrix(rng, m, n)
+    r = max(1, min(m, n) // 2)
+    a, b = solvers.svd_factorize(w, r)
+    err = float(jnp.sum((w - a @ b) ** 2))
+    s = np.linalg.svd(np.asarray(w), compute_uv=False)
+    want = float(np.sum(s[r:] ** 2))
+    assert err == pytest.approx(want, rel=1e-3, abs=1e-3)
+
+
+def test_svd_full_rank_reconstructs_exactly():
+    rng = np.random.default_rng(0)
+    w = _matrix(rng, 12, 9)
+    a, b = solvers.svd_factorize(w, 9)
+    np.testing.assert_allclose(a @ b, w, atol=1e-4)
+
+
+def test_svd_factor_norms_balanced():
+    """The sqrt(S) split should give ||A||_F == ||B||_F."""
+    rng = np.random.default_rng(1)
+    w = _matrix(rng, 24, 16)
+    a, b = solvers.svd_factorize(w, 8)
+    na, nb = float(jnp.linalg.norm(a)), float(jnp.linalg.norm(b))
+    assert na == pytest.approx(nb, rel=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(6, 32), n=st.integers(6, 32), data=st.randoms())
+def test_snmf_b_nonnegative_and_converges(m, n, data):
+    rng = np.random.default_rng(data.randint(0, 2**31))
+    w = _matrix(rng, m, n)
+    r = max(2, min(m, n) // 3)
+    a5, b5 = solvers.snmf_factorize(w, r, num_iter=5)
+    a50, b50 = solvers.snmf_factorize(w, r, num_iter=50)
+    assert float(jnp.min(b5)) >= 0.0
+    assert float(jnp.min(b50)) >= 0.0
+    e5 = float(jnp.linalg.norm(w - a5 @ b5))
+    e50 = float(jnp.linalg.norm(w - a50 @ b50))
+    assert e50 <= e5 * 1.01  # more iterations never makes it meaningfully worse
+
+
+def test_snmf_beats_nothing_but_not_svd():
+    """SVD is the optimal rank-r approximation; SNMF must be >= its error but
+    still a real approximation (way below ||W||)."""
+    rng = np.random.default_rng(2)
+    w = _matrix(rng, 30, 20)
+    r = 10
+    asvd, bsvd = solvers.svd_factorize(w, r)
+    asn, bsn = solvers.snmf_factorize(w, r, num_iter=100)
+    esvd = float(jnp.linalg.norm(w - asvd @ bsvd))
+    esn = float(jnp.linalg.norm(w - asn @ bsn))
+    assert esn >= esvd * 0.999
+    assert esn < float(jnp.linalg.norm(w))
+
+
+def test_random_solver_shapes_and_scale():
+    rng_key = jax.random.PRNGKey(0)
+    w = jnp.zeros((64, 48))
+    a, b = solvers.random_factorize(w, 16, key=rng_key)
+    assert a.shape == (64, 16) and b.shape == (16, 48)
+    prod_var = float(jnp.var(a @ b))
+    glorot_var = 2.0 / (64 + 48)
+    assert 0.2 * glorot_var < prod_var < 5.0 * glorot_var
+
+
+def test_unknown_solver_raises():
+    with pytest.raises(ValueError):
+        solvers.factorize(jnp.zeros((4, 4)), 2, solver="qr")
+
+
+# --- rank policy -----------------------------------------------------------
+
+def test_rank_pinned_vectors():
+    """Shared vectors with rust/src/factorize/rank.rs — keep in sync."""
+    for (m, n, ratio), want in PINNED_VECTORS:
+        assert rank_for(m, n, ratio) == want, (m, n, ratio)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=st.integers(1, 4096), n=st.integers(1, 4096), ratio=st.floats(0.01, 0.99))
+def test_rank_gate_always_reduces_cost(m, n, ratio):
+    r = rank_for(m, n, ratio)
+    if r is not None:
+        assert r * (m + n) < m * n  # Eq. 1 gate
+        assert r % RANK_MULTIPLE == 0 or r == MIN_RANK
+        assert r >= MIN_RANK
+
+
+def test_r_max_formula():
+    assert r_max(128, 128) == pytest.approx(64.0)
+    assert r_max(768, 3072) == pytest.approx(614.4)

@@ -1,0 +1,270 @@
+//! JSON experiment configuration — the launcher's input format.
+//!
+//! `configs/*.json` drive the CLI (`greenformer run --config configs/x.json`)
+//! and the experiment harnesses. Every field has a default so `{}` is a
+//! valid config. (JSON rather than TOML: the offline build uses the in-tree
+//! codec — see `util::json`.)
+
+use std::path::Path;
+
+use anyhow::anyhow;
+
+use crate::factorize::{AutoFactConfig, Rank, Solver};
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    pub experiment: Experiment,
+    pub train: TrainConfig,
+    pub factorize: FactorizeConfig,
+    pub eval: EvalConfig,
+    pub serve: ServeConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    /// "text" | "image" | "lm"
+    pub model: String,
+    /// Task name: polarity | topic | matching | shapes | blobs
+    pub task: String,
+    pub seed: u64,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            model: "text".into(),
+            task: "polarity".into(),
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub log_every: usize,
+    /// Evaluate on this many held-out examples after training.
+    pub eval_examples: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            batch: 32,
+            log_every: 20,
+            eval_examples: 256,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FactorizeConfig {
+    /// Rank ratio in (0, 1]; `rank` takes precedence when set.
+    pub ratio: Option<f64>,
+    /// Fixed integer rank.
+    pub rank: Option<usize>,
+    pub solver: String,
+    pub num_iter: usize,
+    /// Submodule filter (substring match), empty = all.
+    pub submodules: Vec<String>,
+}
+
+impl Default for FactorizeConfig {
+    fn default() -> Self {
+        Self {
+            ratio: Some(0.25),
+            rank: None,
+            solver: "svd".into(),
+            num_iter: 50,
+            submodules: vec![],
+        }
+    }
+}
+
+impl FactorizeConfig {
+    pub fn to_auto_fact(&self) -> Result<AutoFactConfig> {
+        let rank = match (self.rank, self.ratio) {
+            (Some(r), _) => Rank::Fixed(r),
+            (None, Some(ratio)) => Rank::Ratio(ratio),
+            (None, None) => Rank::Ratio(0.25),
+        };
+        let solver: Solver = self.solver.parse().map_err(|e: String| anyhow!(e))?;
+        Ok(AutoFactConfig {
+            rank,
+            solver,
+            num_iter: self.num_iter,
+            submodules: if self.submodules.is_empty() {
+                None
+            } else {
+                Some(self.submodules.clone())
+            },
+        })
+    }
+
+    /// The artifact variant name this config's ratio maps to (graph naming
+    /// contract with aot.py: led_r10/r25/r50/r75, dense otherwise).
+    pub fn variant_name(&self) -> String {
+        match self.ratio {
+            Some(r) => format!("led_r{:02}", (r * 100.0).round() as usize),
+            None => "dense".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub examples: usize,
+    pub k_shots: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            examples: 256,
+            k_shots: 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Max requests per dynamic batch (padded to the artifact batch size).
+    pub max_batch: usize,
+    /// Batch assembly deadline in milliseconds.
+    pub max_wait_ms: u64,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait_ms: 5,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading config {:?}: {e}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(e) = v.get("experiment") {
+            cfg.experiment.name = e.str_or("name", &cfg.experiment.name);
+            cfg.experiment.model = e.str_or("model", &cfg.experiment.model);
+            cfg.experiment.task = e.str_or("task", &cfg.experiment.task);
+            cfg.experiment.seed = e.usize_or("seed", cfg.experiment.seed as usize) as u64;
+        }
+        if let Some(t) = v.get("train") {
+            cfg.train.steps = t.usize_or("steps", cfg.train.steps);
+            cfg.train.batch = t.usize_or("batch", cfg.train.batch);
+            cfg.train.log_every = t.usize_or("log_every", cfg.train.log_every);
+            cfg.train.eval_examples = t.usize_or("eval_examples", cfg.train.eval_examples);
+        }
+        if let Some(f) = v.get("factorize") {
+            cfg.factorize.ratio = f.f64_opt("ratio").or(cfg.factorize.ratio);
+            if f.get("ratio") == Some(&Json::Null) {
+                cfg.factorize.ratio = None;
+            }
+            cfg.factorize.rank = f.get("rank").and_then(|r| r.as_usize().ok());
+            cfg.factorize.solver = f.str_or("solver", &cfg.factorize.solver);
+            cfg.factorize.num_iter = f.usize_or("num_iter", cfg.factorize.num_iter);
+            if let Some(subs) = f.get("submodules") {
+                cfg.factorize.submodules = subs
+                    .as_arr()?
+                    .iter()
+                    .map(|s| Ok(s.as_str()?.to_string()))
+                    .collect::<Result<_>>()?;
+            }
+        }
+        if let Some(e) = v.get("eval") {
+            cfg.eval.examples = e.usize_or("examples", cfg.eval.examples);
+            cfg.eval.k_shots = e.usize_or("k_shots", cfg.eval.k_shots);
+        }
+        if let Some(s) = v.get("serve") {
+            cfg.serve.max_batch = s.usize_or("max_batch", cfg.serve.max_batch);
+            cfg.serve.max_wait_ms = s.usize_or("max_wait_ms", cfg.serve.max_wait_ms as usize) as u64;
+            cfg.serve.queue_capacity = s.usize_or("queue_capacity", cfg.serve.queue_capacity);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_all_defaults() {
+        let cfg = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(cfg.experiment.name, "experiment");
+        assert_eq!(cfg.train.steps, 300);
+        assert_eq!(cfg.factorize.solver, "svd");
+        assert_eq!(cfg.serve.max_batch, 8);
+    }
+
+    #[test]
+    fn partial_config_overrides() {
+        let cfg = ExperimentConfig::parse(
+            r#"{"experiment": {"name": "x", "task": "topic"},
+                "train": {"steps": 50},
+                "factorize": {"ratio": 0.5, "solver": "snmf",
+                               "submodules": ["attn", "fc1"]}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.experiment.name, "x");
+        assert_eq!(cfg.experiment.task, "topic");
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.train.batch, 32); // default preserved
+        assert_eq!(cfg.factorize.ratio, Some(0.5));
+        assert_eq!(cfg.factorize.submodules, vec!["attn", "fc1"]);
+        assert_eq!(cfg.factorize.variant_name(), "led_r50");
+    }
+
+    #[test]
+    fn factorize_resolution() {
+        let fc = FactorizeConfig {
+            ratio: Some(0.5),
+            ..Default::default()
+        };
+        let af = fc.to_auto_fact().unwrap();
+        assert_eq!(af.rank, Rank::Ratio(0.5));
+        let fixed = FactorizeConfig {
+            rank: Some(16),
+            ratio: None,
+            ..Default::default()
+        };
+        assert_eq!(fixed.to_auto_fact().unwrap().rank, Rank::Fixed(16));
+        let bad = FactorizeConfig {
+            solver: "qr".into(),
+            ..Default::default()
+        };
+        assert!(bad.to_auto_fact().is_err());
+    }
+
+    #[test]
+    fn empty_submodules_is_none() {
+        let fc = FactorizeConfig::default();
+        assert!(fc.to_auto_fact().unwrap().submodules.is_none());
+        let fc = FactorizeConfig {
+            submodules: vec!["attn".into()],
+            ..Default::default()
+        };
+        assert_eq!(
+            fc.to_auto_fact().unwrap().submodules,
+            Some(vec!["attn".to_string()])
+        );
+    }
+}

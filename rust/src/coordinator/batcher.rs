@@ -1,0 +1,191 @@
+//! Dynamic batch assembly — pure logic, exhaustively testable.
+//!
+//! Requests arrive one at a time; the batcher groups them into execution
+//! batches under two limits: `max_batch` requests, or `max_wait` since the
+//! oldest queued request. Execution pads the group to the artifact's fixed
+//! batch size (AOT graphs have static shapes), and padding rows are sliced
+//! off the output before responses are sent — invariants pinned by the
+//! proptests in `rust/tests/proptest_coordinator.rs`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max real requests per executed batch (≤ artifact batch size).
+    pub max_batch: usize,
+    /// Deadline from the oldest queued request to forced flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A planned execution batch over request ids 0..n.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchPlan {
+    /// Indices (into the queue) of the requests in this batch, in order.
+    pub members: Vec<usize>,
+    /// Rows of padding appended to reach the artifact batch size.
+    pub pad_rows: usize,
+}
+
+/// Incremental batcher state machine.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queued: Vec<usize>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        Self {
+            cfg,
+            queued: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Enqueue a request id; returns a full batch if the size limit is hit.
+    pub fn push(&mut self, id: usize, now: Instant) -> Option<Vec<usize>> {
+        if self.queued.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.queued.push(id);
+        if self.queued.len() >= self.cfg.max_batch {
+            self.oldest = None;
+            return Some(std::mem::take(&mut self.queued));
+        }
+        None
+    }
+
+    /// Flush if the oldest queued request has waited past the deadline.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Vec<usize>> {
+        match self.oldest {
+            Some(t0) if now.duration_since(t0) >= self.cfg.max_wait && !self.queued.is_empty() => {
+                self.oldest = None;
+                Some(std::mem::take(&mut self.queued))
+            }
+            _ => None,
+        }
+    }
+
+    /// Force-flush whatever is queued (shutdown path).
+    pub fn flush(&mut self) -> Option<Vec<usize>> {
+        self.oldest = None;
+        if self.queued.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.queued))
+        }
+    }
+
+    /// Time remaining until the deadline flush (None if queue empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest
+            .map(|t0| self.cfg.max_wait.saturating_sub(now.duration_since(t0)))
+    }
+}
+
+/// Plan the padded execution batch for a member set against an artifact
+/// batch size. `members.len()` must be ≤ `artifact_batch`.
+pub fn plan(members: Vec<usize>, artifact_batch: usize) -> BatchPlan {
+    assert!(
+        members.len() <= artifact_batch,
+        "batch of {} exceeds artifact batch {artifact_batch}",
+        members.len()
+    );
+    let pad_rows = artifact_batch - members.len();
+    BatchPlan { members, pad_rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_at_max() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        let now = t0();
+        assert!(b.push(0, now).is_none());
+        assert!(b.push(1, now).is_none());
+        let batch = b.push(2, now).unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_partial() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let now = t0();
+        b.push(7, now);
+        assert!(b.poll_deadline(now + Duration::from_millis(1)).is_none());
+        let batch = b.poll_deadline(now + Duration::from_millis(6)).unwrap();
+        assert_eq!(batch, vec![7]);
+        // Deadline cleared after flush.
+        assert!(b.poll_deadline(now + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn deadline_measured_from_oldest() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+        });
+        let now = t0();
+        b.push(0, now);
+        b.push(1, now + Duration::from_millis(9));
+        // 10ms after the FIRST push, flush fires even though the second
+        // request just arrived.
+        let batch = b.poll_deadline(now + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![0, 1]);
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert!(b.flush().is_none());
+        b.push(1, t0());
+        assert_eq!(b.flush().unwrap(), vec![1]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn plan_pads_to_artifact() {
+        let p = plan(vec![4, 5], 8);
+        assert_eq!(p.pad_rows, 6);
+        let p = plan(vec![1, 2, 3], 3);
+        assert_eq!(p.pad_rows, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_rejects_oversize() {
+        plan(vec![0, 1, 2, 3], 2);
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving metrics: request counters, per-variant tallies, and a fixed-
+//! bucket latency histogram. Lock-free on the hot path (atomics only).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds (last bucket = +inf).
+pub const BUCKETS_US: [u64; 12] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000,
+];
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub errors: AtomicU64,
+    latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
+    latency_sum_us: AtomicU64,
+    per_variant: Mutex<HashMap<String, u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, real: usize, padded: usize, variant: &str) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.responses.fetch_add(real as u64, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded as u64, Ordering::Relaxed);
+        *self
+            .per_variant
+            .lock()
+            .unwrap()
+            .entry(variant.to_string())
+            .or_insert(0) += real as u64;
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKETS_US.partition_point(|&b| us > b);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram (upper bound of the
+    /// bucket containing the p-quantile), in microseconds.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let counts: Vec<u64> = self
+            .latency_buckets
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKETS_US.get(i).copied().unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self
+            .latency_buckets
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum::<u64>();
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn variant_counts(&self) -> HashMap<String, u64> {
+        self.per_variant.lock().unwrap().clone()
+    }
+
+    /// Mean occupancy of executed batches (real rows / artifact rows).
+    pub fn batch_occupancy(&self, artifact_batch: usize) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        let real = self.responses.load(Ordering::Relaxed) as f64;
+        real / (batches as f64 * artifact_batch as f64)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} pad={} err={} p50={}us p95={}us mean={:.0}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.padded_rows.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.mean_latency_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2, 6, "dense");
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.padded_rows.load(Ordering::Relaxed), 6);
+        assert_eq!(m.variant_counts()["dense"], 2);
+        assert!((m.batch_occupancy(8) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles_monotone() {
+        let m = Metrics::new();
+        for us in [50u64, 200, 800, 3_000, 30_000, 200_000] {
+            m.record_latency(Duration::from_micros(us));
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        let p95 = m.latency_percentile_us(95.0);
+        assert!(p50 <= p95);
+        assert!(p50 >= 500, "p50 bucket: {p50}");
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.batch_occupancy(8), 0.0);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let m = Metrics::new();
+        m.record_request();
+        assert!(m.summary().contains("requests=1"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Serving coordinator: dynamic batching + variant routing over the PJRT
+//! engine. Greenformer's serving story is "same model, a family of
+//! factorized variants at different speed/quality points"; the coordinator
+//! turns that into a runtime policy:
+//!
+//! * [`batcher`] — size-or-deadline dynamic batching with padding to the
+//!   artifact batch size (pure assembly logic, proptest-able).
+//! * [`router`] — picks the variant per request: static pinning, per-request
+//!   tier, or adaptive load-shedding (deep queue → lower-rank variant, the
+//!   latency/quality trade Figure 2 quantifies).
+//! * [`server`] — the tokio loop tying queue → batcher → engine → responses.
+//! * [`metrics`] — counters + latency histogram.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use router::{RoutePolicy, Router, Tier};
+pub use server::{serve_classifier, ClassifyRequest, ClassifyResponse, ServerHandle};

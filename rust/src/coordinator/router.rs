@@ -1,0 +1,171 @@
+//! Variant routing: which factorized variant serves a request.
+//!
+//! The factorized family (`dense`, `led_r75`, …, `led_r10`) is a
+//! quality→speed ladder. The router maps requests onto it by policy:
+//!
+//! * `Static` — everything on one pinned variant.
+//! * `Tiered` — the request asks for a quality tier.
+//! * `Adaptive` — load shedding: queue depth picks the rung, so latency is
+//!   bounded by degrading quality exactly as Figure 2 prices it.
+
+
+/// Client-requested quality tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Full quality (dense / highest-rank variant).
+    Quality,
+    /// Balanced.
+    Balanced,
+    /// Fastest available variant.
+    Fast,
+}
+
+#[derive(Clone, Debug)]
+pub enum RoutePolicy {
+    Static(String),
+    /// Tier → variant name.
+    Tiered {
+        quality: String,
+        balanced: String,
+        fast: String,
+    },
+    /// Queue-depth thresholds: depth < low → quality, < high → balanced,
+    /// else fast.
+    Adaptive {
+        quality: String,
+        balanced: String,
+        fast: String,
+        low: usize,
+        high: usize,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    /// Variants that actually exist in the manifest (validated at build).
+    available: Vec<String>,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy, available: Vec<String>) -> crate::Result<Self> {
+        let check = |v: &String| -> crate::Result<()> {
+            if available.iter().any(|a| a == v) {
+                Ok(())
+            } else {
+                Err(anyhow::anyhow!("variant {v:?} not in manifest: {available:?}"))
+            }
+        };
+        match &policy {
+            RoutePolicy::Static(v) => check(v)?,
+            RoutePolicy::Tiered {
+                quality,
+                balanced,
+                fast,
+            }
+            | RoutePolicy::Adaptive {
+                quality,
+                balanced,
+                fast,
+                ..
+            } => {
+                check(quality)?;
+                check(balanced)?;
+                check(fast)?;
+            }
+        }
+        Ok(Self { policy, available })
+    }
+
+    pub fn available(&self) -> &[String] {
+        &self.available
+    }
+
+    /// Choose the variant for a request given its tier and the current
+    /// queue depth.
+    pub fn route(&self, tier: Tier, queue_depth: usize) -> &str {
+        match &self.policy {
+            RoutePolicy::Static(v) => v,
+            RoutePolicy::Tiered {
+                quality,
+                balanced,
+                fast,
+            } => match tier {
+                Tier::Quality => quality,
+                Tier::Balanced => balanced,
+                Tier::Fast => fast,
+            },
+            RoutePolicy::Adaptive {
+                quality,
+                balanced,
+                fast,
+                low,
+                high,
+            } => {
+                if queue_depth < *low {
+                    quality
+                } else if queue_depth < *high {
+                    balanced
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn avail() -> Vec<String> {
+        vec!["dense".into(), "led_r50".into(), "led_r10".into()]
+    }
+
+    #[test]
+    fn static_policy_ignores_everything() {
+        let r = Router::new(RoutePolicy::Static("led_r50".into()), avail()).unwrap();
+        assert_eq!(r.route(Tier::Quality, 0), "led_r50");
+        assert_eq!(r.route(Tier::Fast, 999), "led_r50");
+    }
+
+    #[test]
+    fn tiered_policy_honors_tier() {
+        let r = Router::new(
+            RoutePolicy::Tiered {
+                quality: "dense".into(),
+                balanced: "led_r50".into(),
+                fast: "led_r10".into(),
+            },
+            avail(),
+        )
+        .unwrap();
+        assert_eq!(r.route(Tier::Quality, 100), "dense");
+        assert_eq!(r.route(Tier::Balanced, 0), "led_r50");
+        assert_eq!(r.route(Tier::Fast, 0), "led_r10");
+    }
+
+    #[test]
+    fn adaptive_sheds_load() {
+        let r = Router::new(
+            RoutePolicy::Adaptive {
+                quality: "dense".into(),
+                balanced: "led_r50".into(),
+                fast: "led_r10".into(),
+                low: 4,
+                high: 16,
+            },
+            avail(),
+        )
+        .unwrap();
+        assert_eq!(r.route(Tier::Quality, 0), "dense");
+        assert_eq!(r.route(Tier::Quality, 4), "led_r50");
+        assert_eq!(r.route(Tier::Quality, 15), "led_r50");
+        assert_eq!(r.route(Tier::Quality, 16), "led_r10");
+    }
+
+    #[test]
+    fn unknown_variant_rejected_at_build() {
+        assert!(Router::new(RoutePolicy::Static("led_r99".into()), avail()).is_err());
+    }
+}

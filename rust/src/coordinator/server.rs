@@ -1,0 +1,307 @@
+//! The serving loop: queue → router → batcher → engine → responses.
+//!
+//! Thread-based (the offline build has no async runtime — and none is
+//! needed: PJRT execution is the only blocking operation and it is CPU
+//! bound). One dispatcher thread owns all batchers; execution happens on the
+//! dispatcher so batches are strictly ordered per variant. Clients block on
+//! a oneshot-style channel; concurrency comes from client threads.
+//!
+//! Invariants (pinned by rust/tests/proptest_coordinator.rs):
+//! * every submitted request receives exactly one response or an error;
+//! * executed batches never exceed the artifact batch size;
+//! * padding rows never produce responses;
+//! * responses carry the variant that actually served them.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::batcher::{plan, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::router::{Router, Tier};
+use crate::runtime::Engine;
+use crate::tensor::{ParamStore, Tensor};
+use crate::Result;
+
+/// A text-classification request: tokens (seq,) + quality tier.
+pub struct ClassifyRequest {
+    pub tokens: Vec<i32>,
+    pub tier: Tier,
+    resp: SyncSender<ClassifyResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClassifyResponse {
+    pub logits: Vec<f32>,
+    pub label: usize,
+    pub variant: String,
+    pub latency: Duration,
+}
+
+/// Handle returned by [`serve_classifier`]: submit requests, inspect
+/// metrics. Dropping all clones shuts the dispatcher down (after a flush).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: SyncSender<ClassifyRequest>,
+    pub metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+}
+
+impl ServerHandle {
+    /// Submit a request and block until the batch containing it executes.
+    pub fn classify(&self, tokens: Vec<i32>, tier: Tier) -> Result<ClassifyResponse> {
+        let (tx, rx) = sync_channel(1);
+        self.metrics.record_request();
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(ClassifyRequest {
+                tokens,
+                tier,
+                resp: tx,
+            })
+            .map_err(|_| anyhow!("server shut down"))?;
+        rx.recv().map_err(|_| anyhow!("request dropped (batch failed)"))
+    }
+
+    /// Non-blocking submit; Err(tokens) when the queue is full.
+    pub fn try_classify(
+        &self,
+        tokens: Vec<i32>,
+        tier: Tier,
+    ) -> std::result::Result<Receiver<ClassifyResponse>, Vec<i32>> {
+        let (tx, rx) = sync_channel(1);
+        let req = ClassifyRequest {
+            tokens,
+            tier,
+            resp: tx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.record_request();
+                self.depth.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(req)) | Err(TrySendError::Disconnected(req)) => {
+                Err(req.tokens)
+            }
+        }
+    }
+
+    /// Requests submitted but not yet answered (the adaptive router's input).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+struct Pending {
+    tokens: Vec<i32>,
+    arrived: Instant,
+    resp: SyncSender<ClassifyResponse>,
+}
+
+/// Spawn the serving loop for one model family.
+///
+/// `variants` maps variant name → its trained/factorized checkpoint. Each
+/// variant must have a fwd graph in the manifest; the largest batch ≤
+/// `cfg.max_batch` is used. Requests route per `router`.
+///
+/// The dispatcher thread builds its *own* [`Engine`] over `artifacts_dir`:
+/// the PJRT client wrapper is `Rc`-based and cannot cross threads, so each
+/// thread that executes graphs owns a client. Startup errors (bad variant,
+/// missing graph, compile failure) are reported synchronously.
+pub fn serve_classifier(
+    artifacts_dir: std::path::PathBuf,
+    model: &str,
+    variants: HashMap<String, ParamStore>,
+    router: Router,
+    cfg: BatcherConfig,
+    queue_capacity: usize,
+) -> Result<ServerHandle> {
+    let metrics = Arc::new(Metrics::new());
+    let depth = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = sync_channel::<ClassifyRequest>(queue_capacity);
+    // Rendezvous for startup success/failure.
+    let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+
+    let metrics_bg = metrics.clone();
+    let depth_bg = depth.clone();
+    let model = model.to_string();
+    std::thread::Builder::new()
+        .name("gf-dispatch".into())
+        .spawn(move || {
+            // Engine lives on this thread for its whole life.
+            let engine = match Engine::load(artifacts_dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            // Resolve one fwd graph per variant and warm the executable
+            // cache so first requests don't pay compile time.
+            let mut graphs = HashMap::new();
+            for name in variants.keys() {
+                let g = engine
+                    .manifest()
+                    .find(&model, name, "fwd", Some(cfg.max_batch.max(1)))
+                    .or_else(|_| engine.manifest().find(&model, name, "fwd", None))
+                    .cloned();
+                match g.and_then(|g| engine.executable(&g.name).map(|_| g)) {
+                    Ok(g) => {
+                        graphs.insert(name.clone(), g);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+            let _ = ready_tx.send(Ok(()));
+            dispatch_loop(engine, graphs, variants, router, cfg, rx, metrics_bg, depth_bg);
+        })
+        .expect("spawning dispatcher");
+
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("dispatcher died during startup"))??;
+    Ok(ServerHandle { tx, metrics, depth })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop(
+    engine: Engine,
+    graphs: HashMap<String, crate::runtime::GraphSpec>,
+    variants: HashMap<String, ParamStore>,
+    router: Router,
+    cfg: BatcherConfig,
+    rx: Receiver<ClassifyRequest>,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+) {
+    // One batcher per variant: executed batches are variant-homogeneous.
+    let mut batchers: HashMap<String, (Batcher, Vec<Pending>)> = graphs
+        .keys()
+        .map(|k| {
+            // Effective per-variant max batch: bounded by the artifact.
+            let eff = BatcherConfig {
+                max_batch: cfg.max_batch.min(graphs[k].batch),
+                max_wait: cfg.max_wait,
+            };
+            (k.clone(), (Batcher::new(eff), Vec::new()))
+        })
+        .collect();
+
+    loop {
+        let now = Instant::now();
+        let next_deadline = batchers
+            .values()
+            .filter_map(|(b, _)| b.time_to_deadline(now))
+            .min();
+
+        let msg = match next_deadline {
+            Some(d) => rx.recv_timeout(d),
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+
+        match msg {
+            Ok(req) => {
+                let variant = router
+                    .route(req.tier, depth.load(Ordering::Relaxed))
+                    .to_string();
+                let (batcher, pendings) = batchers
+                    .get_mut(&variant)
+                    .expect("router validated variants at build");
+                pendings.push(Pending {
+                    tokens: req.tokens,
+                    arrived: Instant::now(),
+                    resp: req.resp,
+                });
+                if let Some(ids) = batcher.push(pendings.len() - 1, Instant::now()) {
+                    let taken = std::mem::take(pendings);
+                    depth.fetch_sub(taken.len(), Ordering::Relaxed);
+                    run_batch(&engine, &graphs[&variant], &variants[&variant], &variant, ids, taken, &metrics);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let now = Instant::now();
+                for (variant, (batcher, pendings)) in batchers.iter_mut() {
+                    if let Some(ids) = batcher.poll_deadline(now) {
+                        let taken = std::mem::take(pendings);
+                        depth.fetch_sub(taken.len(), Ordering::Relaxed);
+                        run_batch(&engine, &graphs[variant], &variants[variant], variant, ids, taken, &metrics);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // All handles dropped: flush whatever is queued and exit.
+                for (variant, (batcher, pendings)) in batchers.iter_mut() {
+                    if let Some(ids) = batcher.flush() {
+                        let taken = std::mem::take(pendings);
+                        depth.fetch_sub(taken.len(), Ordering::Relaxed);
+                        run_batch(&engine, &graphs[variant], &variants[variant], variant, ids, taken, &metrics);
+                    }
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn run_batch(
+    engine: &Engine,
+    graph: &crate::runtime::GraphSpec,
+    params: &ParamStore,
+    variant: &str,
+    ids: Vec<usize>,
+    pendings: Vec<Pending>,
+    metrics: &Metrics,
+) {
+    let artifact_batch = graph.batch;
+    let seq = graph.inputs[0].shape[1];
+    let classes = graph.outputs[0].shape[1];
+    let p = plan(ids, artifact_batch);
+
+    let mut toks = Vec::with_capacity(artifact_batch * seq);
+    for &i in &p.members {
+        let t = &pendings[i].tokens;
+        assert_eq!(t.len(), seq, "request seq mismatch");
+        toks.extend_from_slice(t);
+    }
+    toks.resize(artifact_batch * seq, 0); // PAD rows
+    let x = Tensor::from_i32(&[artifact_batch, seq], toks);
+
+    match engine.run_fwd(graph, params, &[x]) {
+        Ok(out) => {
+            let logits = out[0].as_f32().expect("f32 logits");
+            metrics.record_batch(p.members.len(), p.pad_rows, variant);
+            let finished = Instant::now();
+            for (row, &i) in p.members.iter().enumerate() {
+                let pend = &pendings[i];
+                let row_logits = logits[row * classes..(row + 1) * classes].to_vec();
+                let label = row_logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let latency = finished.duration_since(pend.arrived);
+                metrics.record_latency(latency);
+                let _ = pend.resp.send(ClassifyResponse {
+                    logits: row_logits,
+                    label,
+                    variant: variant.to_string(),
+                    latency,
+                });
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            eprintln!("batch execution failed on {variant}: {e:#}");
+            // Dropping pendings closes their channels; clients see an error.
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The two synthetic image-classification tasks (28×28 grayscale).
+//!
+//! `shapes` renders one of four geometric glyphs at a random position/scale;
+//! `blobs` places class-conditioned Gaussian bumps. Both add pixel noise so
+//! the CNN has to learn real spatial filters — the CED factorization path
+//! gets exercised on genuinely spatial weights.
+
+use super::{Dataset, Example, Split};
+use crate::util::Pcg64;
+
+pub const HW: usize = 28;
+
+fn rng_for(seed: u64, split: Split, index: usize) -> Pcg64 {
+    Pcg64::new(seed ^ (index as u64).wrapping_mul(0x9e3779b97f4a7c15), split.stream() + 10)
+}
+
+fn noise(img: &mut [f32], rng: &mut Pcg64, sigma: f32) {
+    for p in img.iter_mut() {
+        *p = (*p + rng.normal_f32() * sigma).clamp(0.0, 1.0);
+    }
+}
+
+/// 4 classes: 0 = square, 1 = circle, 2 = cross, 3 = triangle.
+pub struct ShapesTask {
+    seed: u64,
+}
+
+impl ShapesTask {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+}
+
+impl Dataset for ShapesTask {
+    fn name(&self) -> &str {
+        "shapes"
+    }
+
+    fn num_classes(&self) -> usize {
+        4
+    }
+
+    fn is_image(&self) -> bool {
+        true
+    }
+
+    fn example(&self, split: Split, index: usize) -> Example {
+        let mut rng = rng_for(self.seed ^ 0x80, split, index);
+        let label = rng.below(4);
+        let mut img = vec![0.0f32; HW * HW];
+        let size = 6 + rng.below(8); // half-extent 6..13
+        let cx = size + rng.below(HW - 2 * size);
+        let cy = size + rng.below(HW - 2 * size);
+        let val = 0.7 + 0.3 * rng.next_f32();
+        let set = |x: i64, y: i64, v: f32, img: &mut Vec<f32>| {
+            if (0..HW as i64).contains(&x) && (0..HW as i64).contains(&y) {
+                img[y as usize * HW + x as usize] = v;
+            }
+        };
+        let (cx, cy, s) = (cx as i64, cy as i64, size as i64);
+        match label {
+            0 => {
+                // square outline
+                for d in -s..=s {
+                    set(cx + d, cy - s, val, &mut img);
+                    set(cx + d, cy + s, val, &mut img);
+                    set(cx - s, cy + d, val, &mut img);
+                    set(cx + s, cy + d, val, &mut img);
+                }
+            }
+            1 => {
+                // circle outline (midpoint-ish via angle sweep)
+                for k in 0..64 {
+                    let th = k as f64 * std::f64::consts::TAU / 64.0;
+                    set(
+                        cx + (s as f64 * th.cos()).round() as i64,
+                        cy + (s as f64 * th.sin()).round() as i64,
+                        val,
+                        &mut img,
+                    );
+                }
+            }
+            2 => {
+                // cross
+                for d in -s..=s {
+                    set(cx + d, cy, val, &mut img);
+                    set(cx, cy + d, val, &mut img);
+                }
+            }
+            _ => {
+                // triangle outline
+                for d in -s..=s {
+                    set(cx + d, cy + s, val, &mut img); // base
+                }
+                for d in 0..=s {
+                    // sides from apex (cx, cy - s) to base corners
+                    let frac = d as f64 / s as f64;
+                    let y = cy - s + (2 * d);
+                    set(cx - (frac * s as f64) as i64, y.min(cy + s), val, &mut img);
+                    set(cx + (frac * s as f64) as i64, y.min(cy + s), val, &mut img);
+                }
+            }
+        }
+        noise(&mut img, &mut rng, 0.08);
+        Example {
+            tokens: vec![],
+            pixels: img,
+            label,
+        }
+    }
+}
+
+/// 4 classes; class k places a bright Gaussian bump in quadrant k plus a
+/// distractor bump anywhere.
+pub struct BlobsTask {
+    seed: u64,
+}
+
+impl BlobsTask {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    fn bump(img: &mut [f32], cx: f64, cy: f64, sigma: f64, amp: f32) {
+        for y in 0..HW {
+            for x in 0..HW {
+                let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                img[y * HW + x] += amp * (-d2 / (2.0 * sigma * sigma)).exp() as f32;
+            }
+        }
+    }
+}
+
+impl Dataset for BlobsTask {
+    fn name(&self) -> &str {
+        "blobs"
+    }
+
+    fn num_classes(&self) -> usize {
+        4
+    }
+
+    fn is_image(&self) -> bool {
+        true
+    }
+
+    fn example(&self, split: Split, index: usize) -> Example {
+        let mut rng = rng_for(self.seed ^ 0x81, split, index);
+        let label = rng.below(4);
+        let mut img = vec![0.0f32; HW * HW];
+        // Quadrant centers: (7,7), (21,7), (7,21), (21,21).
+        let qx = if label % 2 == 0 { 7.0 } else { 21.0 };
+        let qy = if label < 2 { 7.0 } else { 21.0 };
+        let jitter = |rng: &mut Pcg64| (rng.next_f64() - 0.5) * 6.0;
+        Self::bump(
+            &mut img,
+            qx + jitter(&mut rng),
+            qy + jitter(&mut rng),
+            2.0 + rng.next_f64() * 1.5,
+            0.9,
+        );
+        // Distractor: dimmer, anywhere.
+        Self::bump(
+            &mut img,
+            rng.next_f64() * HW as f64,
+            rng.next_f64() * HW as f64,
+            2.0,
+            0.35,
+        );
+        noise(&mut img, &mut rng, 0.05);
+        for p in img.iter_mut() {
+            *p = p.clamp(0.0, 1.0);
+        }
+        Example {
+            tokens: vec![],
+            pixels: img,
+            label,
+        }
+    }
+}
+
+pub fn all_image_tasks(seed: u64) -> Vec<Box<dyn Dataset>> {
+    vec![Box::new(ShapesTask::new(seed)), Box::new(BlobsTask::new(seed))]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pixels_in_unit_range() {
+        for ds in all_image_tasks(0) {
+            for i in 0..20 {
+                let ex = ds.example(Split::Train, i);
+                assert_eq!(ex.pixels.len(), HW * HW);
+                assert!(ex.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+                assert!(ds.is_image());
+            }
+        }
+    }
+
+    #[test]
+    fn classes_visibly_differ() {
+        // Mean images per class must differ — weak but cheap separability check.
+        let ds = BlobsTask::new(0);
+        let mut means = vec![vec![0.0f64; HW * HW]; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..200 {
+            let ex = ds.example(Split::Train, i);
+            counts[ex.label] += 1;
+            for (m, &p) in means[ex.label].iter_mut().zip(&ex.pixels) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let dist: f64 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!(dist > 1.0, "classes {a},{b} too similar: {dist}");
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_deterministic() {
+        let ds = ShapesTask::new(3);
+        assert_eq!(
+            ds.example(Split::Eval, 9).pixels,
+            ds.example(Split::Eval, 9).pixels
+        );
+    }
+}

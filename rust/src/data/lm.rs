@@ -1,0 +1,199 @@
+//! The in-context-learning corpus and prompt composition.
+//!
+//! Real ICL (Brown et al. 2020) emerges from language-model pretraining on
+//! text that contains task-like structure. Our tiny causal LM gets the same
+//! chance: the pretraining corpus is a stream of serialized classification
+//! examples — `CLS tokens… SEP LABEL_k` — drawn from the three text tasks.
+//! At eval time the coordinator composes k-shot prompts in exactly that
+//! format and reads the LM's logit over the label tokens at the final
+//! position. Factorizing the LM (the paper's third use case) then trades
+//! accuracy against speed with no gradient anywhere.
+
+use super::text::all_text_tasks;
+use super::{vocab, Dataset, Split};
+use crate::util::Pcg64;
+
+/// Compress a task example into a short `snippet_len`-token snippet:
+/// the CLS prefix is dropped and filler is downsampled so several
+/// exemplars fit in the LM context.
+fn snippet(tokens: &[i32], snippet_len: usize, rng: &mut Pcg64) -> Vec<i32> {
+    // Keep all non-filler "structure" tokens (keywords live below the
+    // per-task filler bases; we conservatively keep everything below the
+    // highest filler base and sample the rest).
+    let mut out: Vec<i32> = Vec::with_capacity(snippet_len);
+    let body = &tokens[1..]; // drop CLS
+    let stride = (body.len() / snippet_len).max(1);
+    let offset = rng.below(stride.min(body.len()));
+    for &t in body.iter().skip(offset).step_by(stride) {
+        if out.len() == snippet_len {
+            break;
+        }
+        out.push(t);
+    }
+    while out.len() < snippet_len {
+        out.push(vocab::PAD);
+    }
+    out
+}
+
+/// Serialize one labelled example as `snippet… SEP LABEL`.
+fn serialize(tokens: &[i32], label: usize, snippet_len: usize, rng: &mut Pcg64) -> Vec<i32> {
+    let mut s = snippet(tokens, snippet_len, rng);
+    s.push(vocab::SEP);
+    s.push(vocab::LABEL_BASE + label as i32);
+    s
+}
+
+/// Pretraining corpus: an endless deterministic stream of serialized
+/// examples from all three text tasks, concatenated to `seq` tokens.
+pub struct LmCorpus {
+    tasks: Vec<Box<dyn Dataset>>,
+    pub seq: usize,
+    seed: u64,
+    snippet_len: usize,
+}
+
+impl LmCorpus {
+    pub fn new(seq: usize, seed: u64) -> Self {
+        Self {
+            // Snippets come from the tasks' own generators at their native
+            // seq; snippet() compresses them.
+            tasks: all_text_tasks(64, seed),
+            seq,
+            seed,
+            snippet_len: 12,
+        }
+    }
+
+    /// The i-th pretraining sequence: (seq,) token ids.
+    pub fn sequence(&self, index: usize) -> Vec<i32> {
+        let mut rng = Pcg64::new(self.seed ^ (index as u64).wrapping_mul(0x2545f4914f6cdd1d), 21);
+        let mut out = Vec::with_capacity(self.seq);
+        let mut cursor = index * 1000;
+        while out.len() < self.seq {
+            let t = rng.below(self.tasks.len());
+            let ds = &self.tasks[t];
+            let ex = ds.example(Split::Train, cursor);
+            cursor += 1;
+            out.extend(serialize(&ex.tokens, ex.label, self.snippet_len, &mut rng));
+        }
+        out.truncate(self.seq);
+        out
+    }
+
+    /// Batch of pretraining sequences as an i32 tensor (count, seq).
+    pub fn batch(&self, start: usize, count: usize) -> crate::tensor::Tensor {
+        let mut toks = Vec::with_capacity(count * self.seq);
+        for i in 0..count {
+            toks.extend(self.sequence(start + i));
+        }
+        crate::tensor::Tensor::from_i32(&[count, self.seq], toks)
+    }
+}
+
+/// A composed k-shot prompt and its gold label.
+#[derive(Clone, Debug)]
+pub struct IclPrompt {
+    /// (seq,) tokens, PAD-left so the query's label slot is the last token.
+    pub tokens: Vec<i32>,
+    pub label: usize,
+    /// Position of the token *before* the label slot (the LM predicts the
+    /// label at this position's output).
+    pub predict_pos: usize,
+    pub num_classes: usize,
+}
+
+/// Compose a k-shot prompt for `task`: k exemplars (with labels) followed by
+/// the query (label slot left empty — the LM must predict it).
+pub fn compose_prompt(
+    task: &dyn Dataset,
+    k_shots: usize,
+    query_index: usize,
+    seq: usize,
+    seed: u64,
+) -> IclPrompt {
+    let snippet_len = 12;
+    let mut rng = Pcg64::new(seed ^ (query_index as u64).wrapping_mul(0x6a09e667f3bcc909), 31);
+    let mut body: Vec<i32> = Vec::new();
+    for s in 0..k_shots {
+        // Exemplars come from the train split (disjoint from eval queries).
+        let ex = task.example(Split::Train, query_index * 37 + s);
+        body.extend(serialize(&ex.tokens, ex.label, snippet_len, &mut rng));
+    }
+    let query = task.example(Split::Eval, query_index);
+    let mut q = snippet(&query.tokens, snippet_len, &mut rng);
+    q.push(vocab::SEP);
+    body.extend(&q);
+    assert!(
+        body.len() <= seq,
+        "prompt ({} tokens) exceeds LM context ({seq}); reduce k_shots",
+        body.len()
+    );
+    // predict position = index of the last real token (the SEP); the LM's
+    // output there is the next-token distribution over the label slot.
+    let predict_pos = body.len() - 1;
+    let mut tokens = body;
+    tokens.resize(seq, vocab::PAD);
+    IclPrompt {
+        tokens,
+        label: query.label,
+        predict_pos,
+        num_classes: task.num_classes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::text::PolarityTask;
+
+    #[test]
+    fn sequences_have_label_structure() {
+        let corpus = LmCorpus::new(128, 0);
+        let s = corpus.sequence(0);
+        assert_eq!(s.len(), 128);
+        let labels = s
+            .iter()
+            .filter(|&&t| t >= vocab::LABEL_BASE && t < vocab::LABEL_BASE + vocab::NUM_LABELS)
+            .count();
+        let seps = s.iter().filter(|&&t| t == vocab::SEP).count();
+        assert!(labels >= 3, "expected several label tokens, got {labels}");
+        assert!(seps >= labels, "every label is preceded by SEP");
+    }
+
+    #[test]
+    fn corpus_deterministic() {
+        let c = LmCorpus::new(128, 1);
+        assert_eq!(c.sequence(4), c.sequence(4));
+        assert_ne!(c.sequence(4), c.sequence(5));
+    }
+
+    #[test]
+    fn batch_shape() {
+        let c = LmCorpus::new(128, 0);
+        let b = c.batch(0, 3);
+        assert_eq!(b.shape, vec![3, 128]);
+    }
+
+    #[test]
+    fn prompt_fits_and_ends_with_sep_at_predict_pos() {
+        let task = PolarityTask::new(64, 0);
+        let p = compose_prompt(&task, 4, 7, 128, 0);
+        assert_eq!(p.tokens.len(), 128);
+        assert_eq!(p.tokens[p.predict_pos], vocab::SEP);
+        assert!(p.label < 2);
+        // 4 exemplars serialized = 4 labels in the prompt body
+        let labels = p.tokens[..p.predict_pos]
+            .iter()
+            .filter(|&&t| t >= vocab::LABEL_BASE && t < vocab::LABEL_BASE + vocab::NUM_LABELS)
+            .count();
+        assert_eq!(labels, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_prompt_panics() {
+        let task = PolarityTask::new(64, 0);
+        let _ = compose_prompt(&task, 40, 0, 128, 0);
+    }
+}

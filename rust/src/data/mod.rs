@@ -1,0 +1,144 @@
+//! Synthetic workload suite — the evaluation tasks (DESIGN.md §3).
+//!
+//! The paper evaluates on 3 text classification and 2 image classification
+//! tasks plus a pretrained LM for in-context learning. Those datasets and
+//! checkpoints aren't shippable, so this module generates synthetic
+//! equivalents that exercise identical code paths and degrade smoothly with
+//! rank — which is all Figure 2 needs:
+//!
+//! * [`text`] — `polarity` (sentiment-like), `topic` (4-way), `matching`
+//!   (NLI-like) over a shared 512-token vocabulary.
+//! * [`image`] — `shapes` (rendered geometric shapes) and `blobs`
+//!   (class-conditioned Gaussian mixtures), 28×28 grayscale.
+//! * [`lm`] — the ICL corpus: task examples serialized as token streams
+//!   with label tokens, so a causal LM learns to complete `... -> LABEL`.
+//!
+//! Everything is deterministic in (seed, index): train/eval splits are
+//! disjoint by construction (different streams), and examples regenerate
+//! identically across processes.
+
+pub mod image;
+pub mod lm;
+pub mod text;
+
+use crate::tensor::Tensor;
+
+/// Shared vocabulary layout (matches LMConfig.vocab = TextConfig.vocab = 512).
+pub mod vocab {
+    pub const SIZE: usize = 512;
+    pub const PAD: i32 = 0;
+    pub const CLS: i32 = 1;
+    pub const SEP: i32 = 2;
+    /// Label tokens: LABEL_BASE + class id (up to 8 classes).
+    pub const LABEL_BASE: i32 = 3;
+    pub const NUM_LABELS: i32 = 8;
+    /// First ordinary word id.
+    pub const WORDS: i32 = LABEL_BASE + NUM_LABELS; // 11
+}
+
+/// One classification example: token sequence (or image) + class label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// For text: token ids (padded to seq). For images: HxWxC pixels.
+    pub tokens: Vec<i32>,
+    pub pixels: Vec<f32>,
+    pub label: usize,
+}
+
+/// A deterministic, indexable synthetic dataset.
+pub trait Dataset: Send + Sync {
+    fn name(&self) -> &str;
+    fn num_classes(&self) -> usize;
+    /// Generate the i-th example of the given split ("train"/"eval" streams
+    /// use disjoint RNG streams).
+    fn example(&self, split: Split, index: usize) -> Example;
+    /// True for image tasks (pixels populated instead of tokens).
+    fn is_image(&self) -> bool {
+        false
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Eval,
+}
+
+impl Split {
+    pub fn stream(self) -> u64 {
+        match self {
+            Split::Train => 1,
+            Split::Eval => 2,
+        }
+    }
+}
+
+/// Collate `count` examples starting at `start` into (x, y) tensors.
+/// Text: x is (count, seq) i32; image: (count, h, w, c) f32. y is (count,) i32.
+pub fn batch(
+    ds: &dyn Dataset,
+    split: Split,
+    start: usize,
+    count: usize,
+    image_hw: Option<(usize, usize, usize)>,
+) -> (Tensor, Tensor) {
+    let mut labels = Vec::with_capacity(count);
+    if let Some((h, w, c)) = image_hw {
+        let mut pixels = Vec::with_capacity(count * h * w * c);
+        for i in 0..count {
+            let ex = ds.example(split, start + i);
+            assert_eq!(ex.pixels.len(), h * w * c, "{}", ds.name());
+            pixels.extend_from_slice(&ex.pixels);
+            labels.push(ex.label as i32);
+        }
+        (
+            Tensor::from_f32(&[count, h, w, c], pixels),
+            Tensor::from_i32(&[count], labels),
+        )
+    } else {
+        let ex0 = ds.example(split, start);
+        let seq = ex0.tokens.len();
+        let mut toks = Vec::with_capacity(count * seq);
+        for i in 0..count {
+            let ex = ds.example(split, start + i);
+            assert_eq!(ex.tokens.len(), seq, "{}", ds.name());
+            toks.extend_from_slice(&ex.tokens);
+            labels.push(ex.label as i32);
+        }
+        (
+            Tensor::from_i32(&[count, seq], toks),
+            Tensor::from_i32(&[count], labels),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::text::PolarityTask;
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let ds = PolarityTask::new(64, 0);
+        let (x, y) = batch(&ds, Split::Train, 0, 4, None);
+        assert_eq!(x.shape, vec![4, 64]);
+        assert_eq!(y.shape, vec![4]);
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams() {
+        let ds = PolarityTask::new(64, 0);
+        let a = ds.example(Split::Train, 0);
+        let b = ds.example(Split::Eval, 0);
+        assert_ne!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn deterministic_by_index() {
+        let ds = PolarityTask::new(64, 0);
+        let a = ds.example(Split::Train, 5);
+        let b = ds.example(Split::Train, 5);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.label, b.label);
+    }
+}

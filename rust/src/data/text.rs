@@ -1,0 +1,302 @@
+//! The three synthetic text-classification tasks.
+//!
+//! Each task defines keyword structure over the shared vocabulary so that a
+//! transformer must aggregate evidence across the sequence (not just read a
+//! single token), giving smooth accuracy degradation under factorization —
+//! the behaviour Figure 2's performance curves require.
+
+use super::{vocab, Dataset, Example, Split};
+use crate::util::Pcg64;
+
+fn rng_for(seed: u64, split: Split, index: usize) -> Pcg64 {
+    // Independent stream per (task seed, split); sequence position = index.
+    Pcg64::new(seed ^ (index as u64).wrapping_mul(0x9e3779b97f4a7c15), split.stream())
+}
+
+/// Binary sentiment-like task: the label is whether positive keywords
+/// outnumber negative ones. 20 keywords per class, embedded among filler.
+pub struct PolarityTask {
+    seq: usize,
+    seed: u64,
+}
+
+impl PolarityTask {
+    pub const POS_BASE: i32 = vocab::WORDS; // 20 positive keywords
+    pub const NEG_BASE: i32 = vocab::WORDS + 20; // 20 negative keywords
+    pub const FILLER_BASE: i32 = vocab::WORDS + 40;
+
+    pub fn new(seq: usize, seed: u64) -> Self {
+        Self { seq, seed }
+    }
+}
+
+impl Dataset for PolarityTask {
+    fn name(&self) -> &str {
+        "polarity"
+    }
+
+    fn num_classes(&self) -> usize {
+        2
+    }
+
+    fn example(&self, split: Split, index: usize) -> Example {
+        let mut rng = rng_for(self.seed ^ 0x70, split, index);
+        let label = rng.below(2);
+        // Strength of the signal varies per example: 2..6 majority keywords,
+        // 0..(majority-1) minority.
+        let maj = 2 + rng.below(5);
+        let min_ = rng.below(maj);
+        let (n_pos, n_neg) = if label == 1 { (maj, min_) } else { (min_, maj) };
+        let filler_count = vocab::SIZE as i32 - Self::FILLER_BASE;
+        let mut toks: Vec<i32> = (0..self.seq)
+            .map(|_| Self::FILLER_BASE + rng.below(filler_count as usize) as i32)
+            .collect();
+        toks[0] = vocab::CLS;
+        // Scatter keywords at *distinct* random positions (after CLS) so a
+        // later keyword can never overwrite an earlier one and flip the
+        // majority the label encodes.
+        let mut positions: Vec<usize> = (1..self.seq).collect();
+        rng.shuffle(&mut positions);
+        for (k, &pos) in positions.iter().take(n_pos + n_neg).enumerate() {
+            let tok = if k < n_pos {
+                Self::POS_BASE + rng.below(20) as i32
+            } else {
+                Self::NEG_BASE + rng.below(20) as i32
+            };
+            toks[pos] = tok;
+        }
+        Example {
+            tokens: toks,
+            pixels: vec![],
+            label,
+        }
+    }
+}
+
+/// 4-way topic classification: each topic owns 24 keywords; the example's
+/// keywords are drawn mostly from the gold topic with cross-topic noise.
+pub struct TopicTask {
+    seq: usize,
+    seed: u64,
+}
+
+impl TopicTask {
+    pub const TOPIC_BASE: i32 = vocab::WORDS + 80;
+    pub const PER_TOPIC: usize = 24;
+    pub const FILLER_BASE: i32 = Self::TOPIC_BASE + 4 * Self::PER_TOPIC as i32;
+
+    pub fn new(seq: usize, seed: u64) -> Self {
+        Self { seq, seed }
+    }
+
+    fn topic_word(&self, topic: usize, rng: &mut Pcg64) -> i32 {
+        Self::TOPIC_BASE + (topic * Self::PER_TOPIC) as i32 + rng.below(Self::PER_TOPIC) as i32
+    }
+}
+
+impl Dataset for TopicTask {
+    fn name(&self) -> &str {
+        "topic"
+    }
+
+    fn num_classes(&self) -> usize {
+        4
+    }
+
+    fn example(&self, split: Split, index: usize) -> Example {
+        let mut rng = rng_for(self.seed ^ 0x71, split, index);
+        let label = rng.below(4);
+        let filler_count = (vocab::SIZE as i32 - Self::FILLER_BASE) as usize;
+        let mut toks: Vec<i32> = (0..self.seq)
+            .map(|_| Self::FILLER_BASE + rng.below(filler_count) as i32)
+            .collect();
+        toks[0] = vocab::CLS;
+        let n_gold = 4 + rng.below(4); // 4..7 gold keywords
+        let n_noise = rng.below(3); // 0..2 keywords from other topics
+        for _ in 0..n_gold {
+            let pos = 1 + rng.below(self.seq - 1);
+            toks[pos] = self.topic_word(label, &mut rng);
+        }
+        for _ in 0..n_noise {
+            let pos = 1 + rng.below(self.seq - 1);
+            let other = (label + 1 + rng.below(3)) % 4;
+            toks[pos] = self.topic_word(other, &mut rng);
+        }
+        Example {
+            tokens: toks,
+            pixels: vec![],
+            label,
+        }
+    }
+}
+
+/// NLI-like premise/hypothesis matching, 3 classes.
+///
+/// The "world" pairs subject tokens with attribute tokens. The premise
+/// states `(s, a)`; the hypothesis restates it (entail), contradicts the
+/// attribute (contradict), or talks about an unrelated subject (neutral).
+pub struct MatchingTask {
+    seq: usize,
+    seed: u64,
+}
+
+impl MatchingTask {
+    pub const SUBJ_BASE: i32 = vocab::WORDS + 200;
+    pub const NUM_SUBJ: usize = 32;
+    pub const ATTR_BASE: i32 = Self::SUBJ_BASE + Self::NUM_SUBJ as i32;
+    pub const NUM_ATTR: usize = 32;
+    pub const FILLER_BASE: i32 = Self::ATTR_BASE + Self::NUM_ATTR as i32;
+
+    pub const ENTAIL: usize = 0;
+    pub const CONTRADICT: usize = 1;
+    pub const NEUTRAL: usize = 2;
+
+    pub fn new(seq: usize, seed: u64) -> Self {
+        assert!(seq >= 12, "matching needs seq >= 12");
+        Self { seq, seed }
+    }
+}
+
+impl Dataset for MatchingTask {
+    fn name(&self) -> &str {
+        "matching"
+    }
+
+    fn num_classes(&self) -> usize {
+        3
+    }
+
+    fn example(&self, split: Split, index: usize) -> Example {
+        let mut rng = rng_for(self.seed ^ 0x72, split, index);
+        let label = rng.below(3);
+        let s = Self::SUBJ_BASE + rng.below(Self::NUM_SUBJ) as i32;
+        let a = Self::ATTR_BASE + rng.below(Self::NUM_ATTR) as i32;
+        let filler_count = (vocab::SIZE as i32 - Self::FILLER_BASE) as usize;
+        let mut toks: Vec<i32> = (0..self.seq)
+            .map(|_| Self::FILLER_BASE + rng.below(filler_count) as i32)
+            .collect();
+        toks[0] = vocab::CLS;
+        let half = self.seq / 2;
+        toks[half] = vocab::SEP;
+        // Premise: (s, a) at random positions in the first half.
+        let p1 = 1 + rng.below(half - 2);
+        toks[p1] = s;
+        toks[p1 + 1] = a;
+        // Hypothesis in the second half.
+        let h1 = half + 1 + rng.below(self.seq - half - 2);
+        match label {
+            Self::ENTAIL => {
+                toks[h1] = s;
+                toks[h1 + 1] = a;
+            }
+            Self::CONTRADICT => {
+                let mut a2 = Self::ATTR_BASE + rng.below(Self::NUM_ATTR) as i32;
+                while a2 == a {
+                    a2 = Self::ATTR_BASE + rng.below(Self::NUM_ATTR) as i32;
+                }
+                toks[h1] = s;
+                toks[h1 + 1] = a2;
+            }
+            _ => {
+                let mut s2 = Self::SUBJ_BASE + rng.below(Self::NUM_SUBJ) as i32;
+                while s2 == s {
+                    s2 = Self::SUBJ_BASE + rng.below(Self::NUM_SUBJ) as i32;
+                }
+                let a2 = Self::ATTR_BASE + rng.below(Self::NUM_ATTR) as i32;
+                toks[h1] = s2;
+                toks[h1 + 1] = a2;
+            }
+        }
+        Example {
+            tokens: toks,
+            pixels: vec![],
+            label,
+        }
+    }
+}
+
+/// The three text tasks at the model's sequence length.
+pub fn all_text_tasks(seq: usize, seed: u64) -> Vec<Box<dyn Dataset>> {
+    vec![
+        Box::new(PolarityTask::new(seq, seed)),
+        Box::new(TopicTask::new(seq, seed)),
+        Box::new(MatchingTask::new(seq, seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        for ds in all_text_tasks(64, 0) {
+            for i in 0..50 {
+                let ex = ds.example(Split::Train, i);
+                assert!(ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < vocab::SIZE), "{}", ds.name());
+                assert!(ex.label < ds.num_classes());
+                assert_eq!(ex.tokens.len(), 64);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for ds in all_text_tasks(64, 0) {
+            let n = 400;
+            let mut counts = vec![0usize; ds.num_classes()];
+            for i in 0..n {
+                counts[ds.example(Split::Train, i).label] += 1;
+            }
+            let expect = n / ds.num_classes();
+            for (c, &cnt) in counts.iter().enumerate() {
+                assert!(
+                    cnt > expect / 2 && cnt < expect * 2,
+                    "{} class {c}: {cnt}/{n}",
+                    ds.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn polarity_signal_is_present() {
+        // Count keyword occurrences: the majority keyword class must match
+        // the label (by construction) — sanity-check the generator itself.
+        let ds = PolarityTask::new(64, 0);
+        for i in 0..100 {
+            let ex = ds.example(Split::Train, i);
+            let pos = ex
+                .tokens
+                .iter()
+                .filter(|&&t| t >= PolarityTask::POS_BASE && t < PolarityTask::NEG_BASE)
+                .count();
+            let neg = ex
+                .tokens
+                .iter()
+                .filter(|&&t| t >= PolarityTask::NEG_BASE && t < PolarityTask::FILLER_BASE)
+                .count();
+            // Keyword scatter can overwrite earlier keywords, so allow ties,
+            // but the majority direction must never flip.
+            if ex.label == 1 {
+                assert!(pos >= neg, "example {i}: pos={pos} neg={neg}");
+            } else {
+                assert!(neg >= pos, "example {i}: pos={pos} neg={neg}");
+            }
+        }
+    }
+
+    #[test]
+    fn matching_has_sep_and_premise_pair() {
+        let ds = MatchingTask::new(64, 0);
+        let ex = ds.example(Split::Train, 3);
+        assert_eq!(ex.tokens[32], vocab::SEP);
+    }
+
+    #[test]
+    fn vocab_regions_do_not_overlap() {
+        assert!(PolarityTask::FILLER_BASE <= TopicTask::TOPIC_BASE);
+        assert!(TopicTask::FILLER_BASE <= MatchingTask::SUBJ_BASE);
+        assert!((MatchingTask::FILLER_BASE as usize) < vocab::SIZE);
+    }
+}

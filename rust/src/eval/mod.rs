@@ -1,0 +1,200 @@
+//! Evaluation harnesses: classifier accuracy and in-context-learning
+//! accuracy, plus the latency instrumentation Figure 2's speedup axis needs.
+
+use crate::data::lm::{compose_prompt, IclPrompt};
+use crate::data::{batch, vocab, Dataset, Split};
+use crate::runtime::{Engine, GraphSpec};
+use crate::tensor::{ParamStore, Tensor};
+use crate::util::Stopwatch;
+use crate::Result;
+
+/// Accuracy + timing of one evaluation run.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+    /// Seconds per forward batch (median).
+    pub sec_per_batch: f64,
+    /// End-to-end examples/second.
+    pub throughput: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Evaluate a classifier graph on `examples` held-out examples.
+/// `image_hw` selects the image collation path.
+pub fn eval_classifier(
+    engine: &Engine,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    ds: &dyn Dataset,
+    examples: usize,
+    image_hw: Option<(usize, usize, usize)>,
+) -> Result<EvalResult> {
+    let bsz = graph.batch;
+    // The graph's logit width is the model's class capacity (e.g. 4); the
+    // task may use fewer classes (e.g. binary polarity). Stride by the
+    // graph width, argmax over the task's classes only.
+    let width = *graph.outputs[0]
+        .shape
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("classifier graph without class dim"))?;
+    let classes = ds.num_classes().min(width);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut sw = Stopwatch::new();
+    let batches = examples.div_ceil(bsz);
+    for bi in 0..batches {
+        let (x, y) = batch(ds, Split::Eval, bi * bsz, bsz, image_hw);
+        let out = sw.time(|| engine.run_fwd(graph, params, &[x]))?;
+        let logits = out[0].as_f32()?;
+        let labels = y.as_i32()?;
+        let take = (examples - total).min(bsz);
+        for i in 0..take {
+            let row = &logits[i * width..i * width + classes];
+            if argmax(row) == labels[i] as usize {
+                correct += 1;
+            }
+        }
+        total += take;
+    }
+    let sec = sw.median_secs();
+    Ok(EvalResult {
+        correct,
+        total,
+        sec_per_batch: sec,
+        throughput: bsz as f64 / sec.max(1e-12),
+    })
+}
+
+/// Score one composed ICL prompt from LM logits: argmax over the label-token
+/// logits at the predict position.
+pub fn score_prompt(logits: &Tensor, row: usize, prompt: &IclPrompt) -> Result<usize> {
+    let (vocab_size, seq) = {
+        let s = &logits.shape;
+        (s[2], s[1])
+    };
+    debug_assert!(prompt.predict_pos < seq);
+    let data = logits.as_f32()?;
+    let base = (row * seq + prompt.predict_pos) * vocab_size;
+    let label_logits: Vec<f32> = (0..prompt.num_classes)
+        .map(|c| data[base + (vocab::LABEL_BASE as usize) + c])
+        .collect();
+    Ok(argmax(&label_logits))
+}
+
+/// Few-shot evaluation of the causal LM on a text task.
+pub fn eval_icl(
+    engine: &Engine,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    task: &dyn Dataset,
+    k_shots: usize,
+    examples: usize,
+    seed: u64,
+) -> Result<EvalResult> {
+    let bsz = graph.batch;
+    let seq = graph.inputs[0].shape[1];
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut sw = Stopwatch::new();
+    let batches = examples.div_ceil(bsz);
+    for bi in 0..batches {
+        let prompts: Vec<IclPrompt> = (0..bsz)
+            .map(|i| compose_prompt(task, k_shots, bi * bsz + i, seq, seed))
+            .collect();
+        let mut toks = Vec::with_capacity(bsz * seq);
+        for p in &prompts {
+            toks.extend_from_slice(&p.tokens);
+        }
+        let x = Tensor::from_i32(&[bsz, seq], toks);
+        let out = sw.time(|| engine.run_fwd(graph, params, &[x]))?;
+        let take = (examples - total).min(bsz);
+        for (i, p) in prompts.iter().take(take).enumerate() {
+            if score_prompt(&out[0], i, p)? == p.label {
+                correct += 1;
+            }
+        }
+        total += take;
+    }
+    let sec = sw.median_secs();
+    Ok(EvalResult {
+        correct,
+        total,
+        sec_per_batch: sec,
+        throughput: bsz as f64 / sec.max(1e-12),
+    })
+}
+
+/// Median latency (seconds) of a single forward pass of `graph`, after
+/// `warmup` discarded runs — the speedup axis of Figure 2.
+pub fn measure_latency(
+    engine: &Engine,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    inputs: &[Tensor],
+    warmup: usize,
+    iters: usize,
+) -> Result<f64> {
+    for _ in 0..warmup {
+        engine.run_fwd(graph, params, inputs)?;
+    }
+    let mut sw = Stopwatch::new();
+    for _ in 0..iters {
+        sw.time(|| engine.run_fwd(graph, params, inputs))?;
+    }
+    Ok(sw.median_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn eval_result_accuracy() {
+        let r = EvalResult {
+            correct: 3,
+            total: 4,
+            sec_per_batch: 0.1,
+            throughput: 80.0,
+        };
+        assert!((r.accuracy() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn score_prompt_reads_label_slot() {
+        // logits: (1, 4, 16) with a peak at LABEL_BASE+1 at position 2.
+        let seq = 4;
+        let v = 16;
+        let mut data = vec![0.0f32; seq * v];
+        data[2 * v + (vocab::LABEL_BASE as usize) + 1] = 9.0;
+        let logits = Tensor::from_f32(&[1, seq, v], data);
+        let p = IclPrompt {
+            tokens: vec![0; seq],
+            label: 1,
+            predict_pos: 2,
+            num_classes: 3,
+        };
+        assert_eq!(score_prompt(&logits, 0, &p).unwrap(), 1);
+    }
+}

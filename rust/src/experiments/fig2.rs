@@ -1,0 +1,414 @@
+//! Figure 2 — the paper's central result, regenerated panel by panel.
+//!
+//! Each panel plots, against rank ratio, (a) relative performance vs the
+//! uncompressed model averaged over tasks and (b) speedup ratio. The three
+//! panels differ in *when* factorization happens:
+//!
+//! * left  (`by_design`)      — factorize at init, then train.
+//! * center(`post_training`)  — train dense, factorize the checkpoint, eval.
+//! * right (`icl`)            — pretrain an LM once, factorize, few-shot eval.
+
+use std::collections::BTreeMap;
+
+use crate::data::image::{all_image_tasks, HW};
+use crate::data::lm::LmCorpus;
+use crate::data::text::all_text_tasks;
+use crate::data::{batch, Dataset, Split};
+use crate::eval::{eval_classifier, eval_icl, measure_latency};
+use crate::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use crate::runtime::Engine;
+use crate::tensor::ParamStore;
+use crate::train::Trainer;
+use crate::Result;
+
+use super::ExpParams;
+
+/// One (task, variant) measurement.
+#[derive(Clone, Debug)]
+pub struct Fig2Point {
+    pub task: String,
+    pub variant: String,
+    pub ratio: Option<f64>,
+    pub accuracy: f64,
+    /// accuracy / dense accuracy on the same task.
+    pub rel_performance: f64,
+    /// Median fwd latency, seconds.
+    pub latency: f64,
+    /// dense latency / this latency.
+    pub speedup: f64,
+    pub n_params: usize,
+}
+
+/// A panel: points plus the per-ratio averages the figure actually plots.
+#[derive(Clone, Debug, Default)]
+pub struct Fig2Result {
+    pub use_case: String,
+    pub points: Vec<Fig2Point>,
+}
+
+impl Fig2Result {
+    /// (ratio-or-dense, mean rel-performance, mean speedup) rows, averaged
+    /// across tasks — the purple and green lines of Figure 2.
+    pub fn averaged(&self) -> Vec<(String, f64, f64)> {
+        let mut groups: BTreeMap<String, Vec<&Fig2Point>> = BTreeMap::new();
+        for p in &self.points {
+            groups.entry(p.variant.clone()).or_default().push(p);
+        }
+        groups
+            .into_iter()
+            .map(|(v, ps)| {
+                let n = ps.len() as f64;
+                (
+                    v,
+                    ps.iter().map(|p| p.rel_performance).sum::<f64>() / n,
+                    ps.iter().map(|p| p.speedup).sum::<f64>() / n,
+                )
+            })
+            .collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("== Figure 2 ({}) ==\n", self.use_case);
+        s.push_str("task         variant    acc    rel-perf  latency(ms)  speedup  params\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:<12} {:<10} {:.3}  {:>7.3}   {:>9.2}   {:>6.2}x  {}\n",
+                p.task,
+                p.variant,
+                p.accuracy,
+                p.rel_performance,
+                p.latency * 1e3,
+                p.speedup,
+                p.n_params
+            ));
+        }
+        s.push_str("-- averaged across tasks --\n");
+        for (v, perf, speed) in self.averaged() {
+            s.push_str(&format!("{v:<12} rel-perf={perf:.3} speedup={speed:.2}x\n"));
+        }
+        s
+    }
+}
+
+fn text_tasks(seed: u64) -> Vec<Box<dyn Dataset>> {
+    all_text_tasks(64, seed)
+}
+
+fn latency_inputs(
+    engine: &Engine,
+    model: &str,
+    variant: &str,
+    ds: &dyn Dataset,
+    image: bool,
+    seed: u64,
+) -> Result<(crate::runtime::GraphSpec, Vec<crate::tensor::Tensor>)> {
+    // Latency is measured on the largest fwd batch (throughput-optimal
+    // configuration, mirrors the paper's GPU batched timing).
+    let graph = engine.manifest().find(model, variant, "fwd", None)?.clone();
+    let hw = image.then_some((HW, HW, 1usize));
+    let (x, _) = batch(ds, Split::Eval, 0, graph.batch, hw);
+    let _ = seed;
+    Ok((graph, vec![x]))
+}
+
+/// Panel 1: factorization-by-design over 3 text + 2 image tasks.
+pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
+    let mut result = Fig2Result {
+        use_case: "by-design".into(),
+        ..Default::default()
+    };
+
+    // (model, dataset, image?) tuples for all five tasks.
+    let mut workloads: Vec<(&str, Box<dyn Dataset>, bool)> = Vec::new();
+    for ds in text_tasks(params.seed) {
+        workloads.push(("text", ds, false));
+    }
+    for ds in all_image_tasks(params.seed) {
+        workloads.push(("image", ds, true));
+    }
+
+    for (model, ds, is_image) in &workloads {
+        let hw = is_image.then_some((HW, HW, 1usize));
+        let mut dense_acc = 0.0;
+        let mut dense_latency = 0.0;
+        let mut variants = vec!["dense".to_string()];
+        variants.extend(params.ratios.iter().map(|&r| ExpParams::variant_for(r)));
+        for variant in &variants {
+            // Train from the exported init (random-init LED for by-design;
+            // the init checkpoints were factorized at init by the exporter).
+            let mut trainer = Trainer::from_init(engine, model, variant)?;
+            trainer.train_classifier(ds.as_ref(), params.steps, hw, |_| {})?;
+            let fwd = engine.manifest().find(model, variant, "fwd", None)?.clone();
+            let ev = eval_classifier(
+                engine,
+                &fwd,
+                &trainer.params,
+                ds.as_ref(),
+                params.eval_examples,
+                hw,
+            )?;
+            let (lg, li) = latency_inputs(engine, model, variant, ds.as_ref(), *is_image, params.seed)?;
+            let lat = measure_latency(engine, &lg, &trainer.params, &li, 2, params.latency_iters)?
+                / lg.batch as f64;
+            if variant == "dense" {
+                dense_acc = ev.accuracy();
+                dense_latency = lat;
+            }
+            result.points.push(Fig2Point {
+                task: ds.name().to_string(),
+                variant: variant.clone(),
+                ratio: ratio_of(variant),
+                accuracy: ev.accuracy(),
+                rel_performance: ev.accuracy() / dense_acc.max(1e-9),
+                latency: lat,
+                speedup: dense_latency / lat.max(1e-12),
+                n_params: trainer.params.n_params(),
+            });
+        }
+    }
+    Ok(result)
+}
+
+/// Panel 2: post-training factorization (train dense once per task, then
+/// factorize the trained checkpoint at each ratio with `solver`).
+pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Result<Fig2Result> {
+    let mut result = Fig2Result {
+        use_case: format!("post-training ({solver})"),
+        ..Default::default()
+    };
+
+    let mut workloads: Vec<(&str, Box<dyn Dataset>, bool)> = Vec::new();
+    for ds in text_tasks(params.seed) {
+        workloads.push(("text", ds, false));
+    }
+    for ds in all_image_tasks(params.seed) {
+        workloads.push(("image", ds, true));
+    }
+
+    for (model, ds, is_image) in &workloads {
+        let hw = is_image.then_some((HW, HW, 1usize));
+        // 1. Train the dense model.
+        let mut trainer = Trainer::from_init(engine, model, "dense")?;
+        trainer.train_classifier(ds.as_ref(), params.steps, hw, |_| {})?;
+        let dense_params = trainer.params.clone();
+        let fwd_dense = engine.manifest().find(model, "dense", "fwd", None)?.clone();
+        let ev = eval_classifier(
+            engine,
+            &fwd_dense,
+            &dense_params,
+            ds.as_ref(),
+            params.eval_examples,
+            hw,
+        )?;
+        let dense_acc = ev.accuracy();
+        let (lg, li) = latency_inputs(engine, model, "dense", ds.as_ref(), *is_image, params.seed)?;
+        let dense_latency =
+            measure_latency(engine, &lg, &dense_params, &li, 2, params.latency_iters)?
+                / lg.batch as f64;
+        result.points.push(Fig2Point {
+            task: ds.name().to_string(),
+            variant: "dense".into(),
+            ratio: None,
+            accuracy: dense_acc,
+            rel_performance: 1.0,
+            latency: dense_latency,
+            speedup: 1.0,
+            n_params: dense_params.n_params(),
+        });
+
+        // 2. Factorize the trained checkpoint at each ratio.
+        for &ratio in &params.ratios {
+            let variant = ExpParams::variant_for(ratio);
+            let mut fact = dense_params.clone();
+            auto_fact(
+                &mut fact,
+                &AutoFactConfig {
+                    rank: Rank::Ratio(ratio),
+                    solver,
+                    num_iter: 50,
+                    submodules: None,
+                },
+            )?;
+            let fwd = engine.manifest().find(model, &variant, "fwd", None)?.clone();
+            let ev = eval_classifier(engine, &fwd, &fact, ds.as_ref(), params.eval_examples, hw)?;
+            let (lg, li) =
+                latency_inputs(engine, model, &variant, ds.as_ref(), *is_image, params.seed)?;
+            let lat = measure_latency(engine, &lg, &fact, &li, 2, params.latency_iters)?
+                / lg.batch as f64;
+            result.points.push(Fig2Point {
+                task: ds.name().to_string(),
+                variant,
+                ratio: Some(ratio),
+                accuracy: ev.accuracy(),
+                rel_performance: ev.accuracy() / dense_acc.max(1e-9),
+                latency: lat,
+                speedup: dense_latency / lat.max(1e-12),
+                n_params: fact.n_params(),
+            });
+        }
+    }
+    Ok(result)
+}
+
+/// Panel 3: in-context-learning factorization. Pretrains (or reuses) the LM,
+/// factorizes it, and runs k-shot eval on the three text tasks.
+///
+/// Pass a pretrained `lm_params` to skip the expensive pretraining (the
+/// `icl_serving` example and the bench share one pretrained checkpoint).
+pub fn icl(
+    engine: &Engine,
+    params: &ExpParams,
+    lm_params: Option<ParamStore>,
+    pretrain_steps: usize,
+) -> Result<Fig2Result> {
+    let mut result = Fig2Result {
+        use_case: "in-context learning".into(),
+        ..Default::default()
+    };
+
+    // 1. Obtain the dense pretrained LM.
+    let dense_params = match lm_params {
+        Some(p) => p,
+        None => {
+            let mut trainer = Trainer::from_init(engine, "lm", "dense")?;
+            let corpus = LmCorpus::new(128, params.seed);
+            trainer.train_lm(&corpus, pretrain_steps, |_| {})?;
+            trainer.params
+        }
+    };
+
+    let tasks = text_tasks(params.seed);
+    let fwd_dense = engine.manifest().find("lm", "dense", "fwd", None)?.clone();
+
+    // Dense baseline per task.
+    let mut dense_acc = BTreeMap::new();
+    let mut dense_lat = 0.0;
+    for ds in &tasks {
+        let ev = eval_icl(
+            engine,
+            &fwd_dense,
+            &dense_params,
+            ds.as_ref(),
+            params.k_shots,
+            params.eval_examples,
+            params.seed,
+        )?;
+        dense_acc.insert(ds.name().to_string(), ev.accuracy());
+        dense_lat = ev.sec_per_batch / fwd_dense.batch as f64;
+        result.points.push(Fig2Point {
+            task: ds.name().to_string(),
+            variant: "dense".into(),
+            ratio: None,
+            accuracy: ev.accuracy(),
+            rel_performance: 1.0,
+            latency: dense_lat,
+            speedup: 1.0,
+            n_params: dense_params.n_params(),
+        });
+    }
+
+    // Factorized variants: SVD post-training factorization of the LM
+    // (the paper's ICL use case applies factorization to the pretrained
+    // model; Random would destroy it — see table_solvers).
+    for &ratio in &params.ratios {
+        let variant = ExpParams::variant_for(ratio);
+        let mut fact = dense_params.clone();
+        auto_fact(
+            &mut fact,
+            &AutoFactConfig {
+                rank: Rank::Ratio(ratio),
+                solver: Solver::Svd,
+                num_iter: 50,
+                submodules: None,
+            },
+        )?;
+        let fwd = engine.manifest().find("lm", &variant, "fwd", None)?.clone();
+        for ds in &tasks {
+            let ev = eval_icl(
+                engine,
+                &fwd,
+                &fact,
+                ds.as_ref(),
+                params.k_shots,
+                params.eval_examples,
+                params.seed,
+            )?;
+            let lat = ev.sec_per_batch / fwd.batch as f64;
+            result.points.push(Fig2Point {
+                task: ds.name().to_string(),
+                variant: variant.clone(),
+                ratio: Some(ratio),
+                accuracy: ev.accuracy(),
+                rel_performance: ev.accuracy() / dense_acc[ds.name()].max(1e-9),
+                latency: lat,
+                speedup: dense_lat / lat.max(1e-12),
+                n_params: fact.n_params(),
+            });
+        }
+    }
+    Ok(result)
+}
+
+fn ratio_of(variant: &str) -> Option<f64> {
+    variant
+        .strip_prefix("led_r")
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|p| p / 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averaged_groups_by_variant() {
+        let r = Fig2Result {
+            use_case: "t".into(),
+            points: vec![
+                Fig2Point {
+                    task: "a".into(),
+                    variant: "dense".into(),
+                    ratio: None,
+                    accuracy: 0.9,
+                    rel_performance: 1.0,
+                    latency: 0.01,
+                    speedup: 1.0,
+                    n_params: 10,
+                },
+                Fig2Point {
+                    task: "b".into(),
+                    variant: "dense".into(),
+                    ratio: None,
+                    accuracy: 0.8,
+                    rel_performance: 1.0,
+                    latency: 0.01,
+                    speedup: 1.0,
+                    n_params: 10,
+                },
+                Fig2Point {
+                    task: "a".into(),
+                    variant: "led_r25".into(),
+                    ratio: Some(0.25),
+                    accuracy: 0.81,
+                    rel_performance: 0.9,
+                    latency: 0.005,
+                    speedup: 2.0,
+                    n_params: 5,
+                },
+            ],
+        };
+        let avg = r.averaged();
+        assert_eq!(avg.len(), 2);
+        let dense = avg.iter().find(|(v, _, _)| v == "dense").unwrap();
+        assert!((dense.1 - 1.0).abs() < 1e-12);
+        let led = avg.iter().find(|(v, _, _)| v == "led_r25").unwrap();
+        assert!((led.2 - 2.0).abs() < 1e-12);
+        assert!(r.render().contains("led_r25"));
+    }
+
+    #[test]
+    fn ratio_parse() {
+        assert_eq!(ratio_of("led_r25"), Some(0.25));
+        assert_eq!(ratio_of("dense"), None);
+    }
+}

@@ -1,0 +1,100 @@
+//! Experiment harnesses — one per paper artifact (DESIGN.md §6).
+//!
+//! Each harness regenerates a Figure-2 panel or a table row set and returns
+//! structured results; the criterion benches and the CLI print them. Scale
+//! knobs (`ExpParams`) let the same harness run as a CI smoke test or as the
+//! full reproduction (env `GREENFORMER_STEPS` / `GREENFORMER_EVAL` override).
+
+pub mod fig2;
+pub mod tables;
+
+pub use fig2::{by_design, icl, post_training, Fig2Point, Fig2Result};
+pub use tables::{cost_table, solver_table, CostRow, SolverRow};
+
+/// Scale parameters shared by the harnesses.
+#[derive(Clone, Debug)]
+pub struct ExpParams {
+    /// Training steps per (task, variant).
+    pub steps: usize,
+    /// Held-out examples per accuracy eval.
+    pub eval_examples: usize,
+    /// Rank ratios to sweep (the x-axis of Figure 2).
+    pub ratios: Vec<f64>,
+    /// Latency measurement iterations.
+    pub latency_iters: usize,
+    pub k_shots: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            eval_examples: 256,
+            ratios: vec![0.10, 0.25, 0.50, 0.75],
+            latency_iters: 20,
+            k_shots: 4,
+            seed: 42,
+        }
+    }
+}
+
+impl ExpParams {
+    /// Quick preset for tests/benches; env vars override.
+    pub fn quick() -> Self {
+        let mut p = Self {
+            steps: 60,
+            eval_examples: 96,
+            ratios: vec![0.25, 0.50],
+            latency_iters: 8,
+            k_shots: 4,
+            seed: 42,
+        };
+        p.apply_env();
+        p
+    }
+
+    pub fn full() -> Self {
+        let mut p = Self::default();
+        p.apply_env();
+        p
+    }
+
+    pub fn apply_env(&mut self) {
+        if let Ok(s) = std::env::var("GREENFORMER_STEPS") {
+            if let Ok(v) = s.parse() {
+                self.steps = v;
+            }
+        }
+        if let Ok(s) = std::env::var("GREENFORMER_EVAL") {
+            if let Ok(v) = s.parse() {
+                self.eval_examples = v;
+            }
+        }
+    }
+
+    /// Artifact variant name for a ratio (contract with aot.py).
+    pub fn variant_for(ratio: f64) -> String {
+        format!("led_r{:02}", (ratio * 100.0).round() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_naming_contract() {
+        assert_eq!(ExpParams::variant_for(0.10), "led_r10");
+        assert_eq!(ExpParams::variant_for(0.25), "led_r25");
+        assert_eq!(ExpParams::variant_for(0.75), "led_r75");
+    }
+
+    #[test]
+    fn quick_smaller_than_full() {
+        let q = ExpParams::quick();
+        let f = ExpParams::default();
+        assert!(q.steps < f.steps);
+        assert!(q.ratios.len() <= f.ratios.len());
+    }
+}

@@ -1,0 +1,219 @@
+//! Table harnesses: the cost-model table (E5) and the solver comparison (E6).
+
+use crate::factorize::{auto_fact, rank_for, AutoFactConfig, Rank, Solver};
+use crate::flops::{dense_linear_flops, led_linear_flops, roofline};
+use crate::linalg::Matrix;
+use crate::model::classify;
+use crate::tensor::ParamStore;
+use crate::util::Pcg64;
+use crate::Result;
+
+/// One row of the params/FLOPs/speedup table (E5).
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub layer: String,
+    pub m: usize,
+    pub n: usize,
+    pub ratio: f64,
+    pub rank: Option<usize>,
+    pub dense_params: usize,
+    pub fact_params: usize,
+    pub flops_speedup: f64,
+    /// MXU-utilization-discounted TPU estimate (DESIGN.md §4).
+    pub tpu_speedup_est: f64,
+    pub vmem_bytes: usize,
+}
+
+/// Cost table over the canonical layer shapes (model-zoo linears plus the
+/// BERT-base shapes the paper's audience expects).
+pub fn cost_table(ratios: &[f64]) -> Vec<CostRow> {
+    let shapes: &[(&str, usize, usize)] = &[
+        ("text d->d (attn)", 128, 128),
+        ("text d->ff", 128, 512),
+        ("text ff->d", 512, 128),
+        ("lm d->ff", 192, 768),
+        ("lm head", 192, 512),
+        ("bert-base attn", 768, 768),
+        ("bert-base ffn", 768, 3072),
+        ("conv2 (3x3x16->32)", 144, 32),
+    ];
+    let mut rows = Vec::new();
+    for &(name, m, n) in shapes {
+        for &ratio in ratios {
+            let rank = rank_for(m, n, ratio);
+            let fact_params = rank.map_or(m * n, |r| r * (m + n));
+            rows.push(CostRow {
+                layer: name.into(),
+                m,
+                n,
+                ratio,
+                rank,
+                dense_params: m * n,
+                fact_params,
+                flops_speedup: rank.map_or(1.0, |r| {
+                    dense_linear_flops(1, m, n) as f64 / led_linear_flops(1, m, n, r) as f64
+                }),
+                tpu_speedup_est: rank.map_or(1.0, |r| {
+                    roofline::led_tpu_speedup_estimate(256, m, r, n)
+                }),
+                vmem_bytes: rank.map_or(0, |r| roofline::led_vmem_bytes(128, m, r, n, 4)),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_cost_table(rows: &[CostRow]) -> String {
+    let mut s = String::from(
+        "layer                 m     n   ratio  rank  params(dense->fact)  flops-speedup  tpu-est  vmem(KiB)\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<20} {:>5} {:>5}  {:>4.2}  {:>4}  {:>9} -> {:<9} {:>7.2}x  {:>6.2}x  {:>8.1}\n",
+            r.layer,
+            r.m,
+            r.n,
+            r.ratio,
+            r.rank.map_or("--".into(), |x| x.to_string()),
+            r.dense_params,
+            r.fact_params,
+            r.flops_speedup,
+            r.tpu_speedup_est,
+            r.vmem_bytes as f64 / 1024.0,
+        ));
+    }
+    s
+}
+
+/// One row of the solver comparison (E6): reconstruction quality per solver
+/// at a given ratio, on a trained-like (decaying-spectrum) weight matrix.
+#[derive(Clone, Debug)]
+pub struct SolverRow {
+    pub solver: Solver,
+    pub ratio: f64,
+    pub rank: usize,
+    /// ‖W − AB‖_F / ‖W‖_F.
+    pub recon_error: f64,
+    /// Solver wall-clock, seconds.
+    pub seconds: f64,
+}
+
+/// Build a matrix with power-law singular values — the spectrum shape of
+/// trained network weights (what makes post-training factorization viable).
+pub fn trained_like_matrix(m: usize, n: usize, decay: f64, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed, 40);
+    let k = m.min(n);
+    let u = Matrix::randn(m, k, 1.0, &mut rng);
+    let (qu, _) = crate::linalg::thin_qr(&u);
+    let v = Matrix::randn(n, k, 1.0, &mut rng);
+    let (qv, _) = crate::linalg::thin_qr(&v);
+    // Scale qu's columns by sigma_i = (i+1)^-decay.
+    let mut us = qu;
+    for j in 0..k {
+        let s = ((j + 1) as f64).powf(-decay) as f32;
+        for i in 0..m {
+            *us.at_mut(i, j) *= s;
+        }
+    }
+    us.matmul_nt(&qv)
+}
+
+/// E6: all three solvers across ratios on a trained-like 128×512 layer.
+pub fn solver_table(ratios: &[f64], num_iter: usize) -> Vec<SolverRow> {
+    let w = trained_like_matrix(128, 512, 1.0, 7);
+    let mut rows = Vec::new();
+    for &ratio in ratios {
+        let Some(rank) = rank_for(w.rows, w.cols, ratio) else {
+            continue;
+        };
+        for solver in [Solver::Random, Solver::Svd, Solver::Snmf] {
+            let t0 = std::time::Instant::now();
+            let (a, b) = solver.factorize(&w, rank, num_iter, 11);
+            let seconds = t0.elapsed().as_secs_f64();
+            let recon_error = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+            rows.push(SolverRow {
+                solver,
+                ratio,
+                rank,
+                recon_error,
+                seconds,
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_solver_table(rows: &[SolverRow]) -> String {
+    let mut s = String::from("solver   ratio  rank  recon-error  seconds\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{:<7} {:>5.2}  {:>4}  {:>10.4}  {:>7.4}\n",
+            r.solver.to_string(),
+            r.ratio,
+            r.rank,
+            r.recon_error,
+            r.seconds
+        ));
+    }
+    s
+}
+
+/// Convenience: auto_fact a checkpoint and summarize compression (used by
+/// the CLI `report-cost` and the quickstart example).
+pub fn compression_report(params: &ParamStore, ratio: f64, solver: Solver) -> Result<String> {
+    let mut p = params.clone();
+    let report = auto_fact(
+        &mut p,
+        &AutoFactConfig {
+            rank: Rank::Ratio(ratio),
+            solver,
+            num_iter: 20,
+            submodules: None,
+        },
+    )?;
+    let layers = classify(&p);
+    let cost = crate::flops::summarize(&layers);
+    Ok(format!(
+        "{report}\nfactorized cost: {} weight params, {} flops/token\n",
+        cost.weight_params, cost.flops_per_token
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_table_rows_consistent() {
+        let rows = cost_table(&[0.25, 0.5]);
+        assert!(!rows.is_empty());
+        for r in &rows {
+            if let Some(rank) = r.rank {
+                assert_eq!(r.fact_params, rank * (r.m + r.n));
+                assert!(r.fact_params < r.dense_params, "{:?}", r);
+                assert!(r.flops_speedup > 1.0);
+                assert!(r.vmem_bytes < roofline::VMEM_BUDGET);
+            }
+        }
+        assert!(render_cost_table(&rows).contains("bert-base"));
+    }
+
+    #[test]
+    fn trained_like_matrix_has_decaying_spectrum() {
+        let w = trained_like_matrix(48, 32, 1.0, 3);
+        let svd = crate::linalg::jacobi_svd(&w);
+        // sigma_1/sigma_8 should be ~8 under decay=1.
+        let ratio = svd.s[0] / svd.s[7];
+        assert!(ratio > 4.0 && ratio < 16.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn solver_table_orders_svd_best() {
+        let rows = solver_table(&[0.5], 30);
+        let err = |s: Solver| rows.iter().find(|r| r.solver == s).unwrap().recon_error;
+        assert!(err(Solver::Svd) <= err(Solver::Snmf) + 1e-9);
+        assert!(err(Solver::Snmf) < err(Solver::Random));
+        assert!(err(Solver::Random) > 0.8, "random must not approximate");
+        assert!(render_solver_table(&rows).contains("svd"));
+    }
+}

@@ -1,0 +1,384 @@
+//! `auto_fact` — the paper's one-line API, over checkpoints.
+//!
+//! Walks the module tree recovered from a [`ParamStore`], and for every
+//! linear / convolution layer that (a) matches the submodule filter and
+//! (b) passes the Eq.-1 gate, replaces the dense weight with LED/CED
+//! factors computed by the chosen solver. The store keeps the canonical
+//! name order afterwards, so the result loads directly into the matching
+//! AOT graph variant.
+
+use std::fmt;
+
+use anyhow::bail;
+
+use crate::linalg::Matrix;
+use crate::model::{classify, LayerKind};
+use crate::tensor::{ParamStore, Tensor};
+use crate::Result;
+
+use super::{Rank, Solver};
+
+/// The arguments of the paper's `greenformer.auto_fact(...)` call.
+#[derive(Clone, Debug)]
+pub struct AutoFactConfig {
+    /// Target rank: fixed or a ratio of each layer's r_max.
+    pub rank: Rank,
+    pub solver: Solver,
+    /// Iterations for SNMF (the paper's `num_iter`).
+    pub num_iter: usize,
+    /// Submodule filter: only layers whose name contains one of these
+    /// substrings are factorized (`None` = all layers — the paper's
+    /// `submodules=None` default).
+    pub submodules: Option<Vec<String>>,
+}
+
+impl Default for AutoFactConfig {
+    fn default() -> Self {
+        Self {
+            rank: Rank::Ratio(0.25),
+            solver: Solver::Svd,
+            num_iter: 50,
+            submodules: None,
+        }
+    }
+}
+
+/// Why a layer was or wasn't factorized.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Replaced with rank-r factors.
+    Factorized { rank: usize },
+    /// Eq.-1 gate rejected (no theoretical cost reduction).
+    GateRejected,
+    /// Name didn't match the submodule filter.
+    Filtered,
+    /// Not a factorizable layer kind (embedding, layernorm, already LED...).
+    NotApplicable,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerDecision {
+    pub name: String,
+    pub kind: LayerKind,
+    pub m: usize,
+    pub n: usize,
+    pub decision: Decision,
+    /// Relative reconstruction error ‖W − AB‖_F / ‖W‖_F (None for Random,
+    /// which does not approximate).
+    pub recon_error: Option<f64>,
+}
+
+/// Summary returned by [`auto_fact`].
+#[derive(Clone, Debug, Default)]
+pub struct FactReport {
+    pub layers: Vec<LayerDecision>,
+    pub params_before: usize,
+    pub params_after: usize,
+}
+
+impl FactReport {
+    pub fn n_factorized(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.decision, Decision::Factorized { .. }))
+            .count()
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.params_after as f64 / self.params_before.max(1) as f64
+    }
+}
+
+impl fmt::Display for FactReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "auto_fact: {}/{} layers factorized, params {} -> {} ({:.1}%)",
+            self.n_factorized(),
+            self.layers.len(),
+            self.params_before,
+            self.params_after,
+            100.0 * self.compression()
+        )?;
+        for l in &self.layers {
+            match &l.decision {
+                Decision::Factorized { rank } => writeln!(
+                    f,
+                    "  {:<28} {:>5}x{:<5} -> r={:<4}{}",
+                    l.name,
+                    l.m,
+                    l.n,
+                    rank,
+                    l.recon_error
+                        .map(|e| format!("  err={e:.4}"))
+                        .unwrap_or_default()
+                )?,
+                d => writeln!(f, "  {:<28} {:>5}x{:<5}    [{d:?}]", l.name, l.m, l.n)?,
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Factorize a checkpoint in place. Returns the per-layer report.
+///
+/// Equivalent to the paper's
+/// `fact_model = greenformer.auto_fact(module, rank, solver, num_iter,
+/// submodules)` applied to the model's state dict.
+pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactReport> {
+    let mut report = FactReport {
+        params_before: params.n_params(),
+        ..Default::default()
+    };
+
+    let layers = classify(params);
+    for layer in layers {
+        let applicable = matches!(layer.kind, LayerKind::Linear | LayerKind::Conv2d);
+        if !applicable {
+            report.layers.push(LayerDecision {
+                name: layer.name,
+                kind: layer.kind,
+                m: layer.in_dim,
+                n: layer.out_dim,
+                decision: Decision::NotApplicable,
+                recon_error: None,
+            });
+            continue;
+        }
+        let matches_filter = cfg
+            .submodules
+            .as_ref()
+            .map_or(true, |subs| subs.iter().any(|s| layer.name.contains(s.as_str())));
+        if !matches_filter {
+            report.layers.push(LayerDecision {
+                name: layer.name,
+                kind: layer.kind,
+                m: layer.in_dim,
+                n: layer.out_dim,
+                decision: Decision::Filtered,
+                recon_error: None,
+            });
+            continue;
+        }
+        // (m, n) is the paper's rearranged 2-D view: linear (in, out),
+        // conv (kh·kw·cin, cout).
+        let (m, n) = (layer.in_dim, layer.out_dim);
+        let Some(r) = cfg.rank.resolve(m, n) else {
+            report.layers.push(LayerDecision {
+                name: layer.name,
+                kind: layer.kind,
+                m,
+                n,
+                decision: Decision::GateRejected,
+                recon_error: None,
+            });
+            continue;
+        };
+
+        let wname = if layer.name.is_empty() {
+            "w".to_string()
+        } else {
+            format!("{}/w", layer.name)
+        };
+        let Some(w) = params.get(&wname) else {
+            bail!("classified layer {:?} lost its weight {wname:?}", layer.name);
+        };
+        let w_shape = w.shape.clone();
+        let (rows, cols, data) = w.as_matrix_2d()?;
+        debug_assert_eq!((rows, cols), (m, n));
+        let wm = Matrix::from_vec(rows, cols, data.to_vec());
+
+        // Deterministic per-layer seed so repeated runs agree.
+        let seed = layer
+            .name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+        let (a, b) = cfg.solver.factorize(&wm, r, cfg.num_iter, seed);
+
+        let recon_error = cfg.solver.approximates().then(|| {
+            let diff = wm.sub(&a.matmul(&b));
+            diff.fro_norm() / wm.fro_norm().max(1e-30)
+        });
+
+        // Shape the factors for the layer kind and swap them in.
+        params.remove(&wname);
+        let prefix = if layer.name.is_empty() {
+            String::new()
+        } else {
+            format!("{}/", layer.name)
+        };
+        match layer.kind {
+            LayerKind::Linear => {
+                params.insert(format!("{prefix}a"), Tensor::from_f32(&[m, r], a.data));
+                params.insert(format!("{prefix}b"), Tensor::from_f32(&[r, n], b.data));
+            }
+            LayerKind::Conv2d => {
+                // A': (kh·kw·cin, r) -> (kh, kw, cin, r); B: (r, cout) ->
+                // (1, 1, r, cout). Figure 3's CED layer.
+                let (kh, kw) = layer.kernel.expect("conv has kernel");
+                let cin = w_shape[2];
+                params.insert(
+                    format!("{prefix}a"),
+                    Tensor::from_f32(&[kh, kw, cin, r], a.data),
+                );
+                params.insert(format!("{prefix}b"), Tensor::from_f32(&[1, 1, r, n], b.data));
+            }
+            _ => unreachable!(),
+        }
+        report.layers.push(LayerDecision {
+            name: layer.name,
+            kind: layer.kind,
+            m,
+            n,
+            decision: Decision::Factorized { rank: r },
+            recon_error,
+        });
+    }
+
+    params.sort_canonical();
+    report.params_after = params.n_params();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dtype;
+    use crate::util::Pcg64;
+
+    fn linear_store(d: usize) -> ParamStore {
+        let mut rng = Pcg64::seeded(70);
+        let mut s = ParamStore::new();
+        let mut w = vec![0.0f32; d * d];
+        rng.fill_normal(&mut w, 0.1);
+        s.insert("fc/w", Tensor::from_f32(&[d, d], w));
+        s.insert("fc/bias", Tensor::zeros(&[d], Dtype::F32));
+        s.insert("ln/g", Tensor::zeros(&[d], Dtype::F32));
+        s.insert("ln/bias", Tensor::zeros(&[d], Dtype::F32));
+        s
+    }
+
+    #[test]
+    fn factorizes_linear_and_reports() {
+        let mut s = linear_store(64);
+        let before = s.n_params();
+        let report = auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        assert_eq!(report.n_factorized(), 1);
+        assert!(s.get("fc/w").is_none());
+        // ratio 0.25 on 64x64: r_max = 32, trunc(8) -> rank 8.
+        assert_eq!(s.get("fc/a").unwrap().shape, vec![64, 8]);
+        assert_eq!(s.get("fc/b").unwrap().shape, vec![8, 64]);
+        assert!(s.get("fc/bias").is_some());
+        assert!(s.n_params() < before);
+        assert_eq!(report.params_before, before);
+        assert_eq!(report.params_after, s.n_params());
+        // layernorm untouched
+        assert!(s.get("ln/g").is_some());
+    }
+
+    #[test]
+    fn store_stays_canonically_sorted() {
+        let mut s = linear_store(64);
+        auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        let names: Vec<_> = s.names().to_vec();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn gate_rejects_small_layers() {
+        let mut s = ParamStore::new();
+        s.insert("tiny/w", Tensor::zeros(&[8, 8], Dtype::F32));
+        let report = auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        assert_eq!(report.layers[0].decision, Decision::GateRejected);
+        assert!(s.get("tiny/w").is_some()); // untouched
+    }
+
+    #[test]
+    fn filter_limits_scope() {
+        let mut s = linear_store(64);
+        let mut rng = Pcg64::seeded(71);
+        let mut w = vec![0.0f32; 64 * 64];
+        rng.fill_normal(&mut w, 0.1);
+        s.insert("attn/q/w", Tensor::from_f32(&[64, 64], w));
+        let cfg = AutoFactConfig {
+            submodules: Some(vec!["attn".into()]),
+            ..Default::default()
+        };
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        assert!(s.get("attn/q/a").is_some());
+        assert!(s.get("fc/w").is_some());
+        assert!(report
+            .layers
+            .iter()
+            .any(|l| l.name == "fc" && l.decision == Decision::Filtered));
+    }
+
+    #[test]
+    fn conv_becomes_ced_with_paper_shapes() {
+        let mut rng = Pcg64::seeded(72);
+        let mut s = ParamStore::new();
+        let mut w = vec![0.0f32; 3 * 3 * 16 * 32];
+        rng.fill_normal(&mut w, 0.1);
+        s.insert("conv/w", Tensor::from_f32(&[3, 3, 16, 32], w));
+        s.insert("conv/bias", Tensor::zeros(&[32], Dtype::F32));
+        let cfg = AutoFactConfig {
+            rank: Rank::Ratio(0.5),
+            ..Default::default()
+        };
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        // m = 144, n = 32, r_max = 26.18 -> r = int(13.09)//8*8 = 8
+        assert_eq!(report.layers[0].decision, Decision::Factorized { rank: 8 });
+        assert_eq!(s.get("conv/a").unwrap().shape, vec![3, 3, 16, 8]);
+        assert_eq!(s.get("conv/b").unwrap().shape, vec![1, 1, 8, 32]);
+    }
+
+    #[test]
+    fn svd_reconstruction_error_reported_and_small_for_low_rank_w() {
+        // Exactly rank-8 weight: SVD at r=16 must reconstruct ~perfectly.
+        let mut rng = Pcg64::seeded(73);
+        let u = Matrix::randn(64, 8, 1.0, &mut rng);
+        let v = Matrix::randn(8, 64, 1.0, &mut rng);
+        let w = u.matmul(&v);
+        let mut s = ParamStore::new();
+        s.insert("fc/w", Tensor::from_f32(&[64, 64], w.data.clone()));
+        let cfg = AutoFactConfig {
+            rank: Rank::Fixed(16),
+            ..Default::default()
+        };
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        let err = report.layers[0].recon_error.unwrap();
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn random_solver_reports_no_error() {
+        let mut s = linear_store(64);
+        let cfg = AutoFactConfig {
+            solver: Solver::Random,
+            ..Default::default()
+        };
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        assert!(report.layers[0].recon_error.is_none());
+    }
+
+    #[test]
+    fn idempotent_on_already_factorized() {
+        let mut s = linear_store(64);
+        auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        let names_before: Vec<_> = s.names().to_vec();
+        let report = auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        assert_eq!(report.n_factorized(), 0);
+        assert_eq!(s.names(), &names_before[..]);
+    }
+
+    #[test]
+    fn display_renders() {
+        let mut s = linear_store(64);
+        let report = auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
+        let text = report.to_string();
+        assert!(text.contains("auto_fact"));
+        assert!(text.contains("fc"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Energy-based automatic rank selection — the paper's future-work
+//! "dynamic rank" taken one step further.
+//!
+//! Instead of a fixed ratio of r_max, pick each layer's rank from its own
+//! spectrum: the smallest r whose leading singular values retain a target
+//! fraction τ of the spectral energy (Σ_{i≤r} σ_i² ≥ τ · Σ σ_i²), then
+//! round to the TPU lane multiple and apply the Eq.-1 gate as usual. Layers
+//! with concentrated spectra (trained layers, typically) compress far
+//! harder than the fixed-ratio policy would dare; flat-spectrum layers are
+//! left dense instead of being damaged.
+
+use crate::linalg::{jacobi_svd, Matrix};
+
+use super::rank::{r_max, MIN_RANK, RANK_MULTIPLE};
+
+/// Spectral profile of one weight matrix.
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    /// Squared singular values, descending.
+    pub energies: Vec<f64>,
+    pub total: f64,
+}
+
+impl Spectrum {
+    pub fn of(w: &Matrix) -> Self {
+        let svd = jacobi_svd(w);
+        let energies: Vec<f64> = svd.s.iter().map(|&s| (s as f64) * (s as f64)).collect();
+        let total = energies.iter().sum();
+        Spectrum { energies, total }
+    }
+
+    /// Smallest r with cumulative energy ≥ tau * total (tau in (0, 1]).
+    pub fn rank_for_energy(&self, tau: f64) -> usize {
+        assert!((0.0..=1.0).contains(&tau), "tau must be in (0, 1]");
+        let target = tau * self.total;
+        let mut acc = 0.0;
+        for (i, e) in self.energies.iter().enumerate() {
+            acc += e;
+            if acc >= target - 1e-12 {
+                return i + 1;
+            }
+        }
+        self.energies.len()
+    }
+
+    /// Effective rank (exp of spectral entropy) — a scale-free measure of
+    /// how concentrated the spectrum is.
+    pub fn effective_rank(&self) -> f64 {
+        if self.total <= 0.0 {
+            return 0.0;
+        }
+        let mut h = 0.0;
+        for &e in &self.energies {
+            let p = e / self.total;
+            if p > 1e-300 {
+                h -= p * p.ln();
+            }
+        }
+        h.exp()
+    }
+}
+
+/// Resolve an energy threshold to a concrete, gated rank for `w`:
+/// spectrum → energy rank → round down to [`RANK_MULTIPLE`] (clamped up to
+/// [`MIN_RANK`]) → Eq.-1 gate. Returns None when the layer should stay
+/// dense (needs more than break-even rank to keep τ energy).
+pub fn energy_rank(w: &Matrix, tau: f64) -> Option<usize> {
+    let spec = Spectrum::of(w);
+    let raw = spec.rank_for_energy(tau);
+    let mut r = (raw.div_ceil(RANK_MULTIPLE)) * RANK_MULTIPLE; // round UP: keep ≥ τ
+    if r < MIN_RANK {
+        r = MIN_RANK;
+    }
+    if (r as f64) >= r_max(w.rows, w.cols) {
+        None
+    } else {
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn low_rank(m: usize, n: usize, k: usize, rng: &mut Pcg64) -> Matrix {
+        let u = Matrix::randn(m, k, 1.0, rng);
+        let v = Matrix::randn(k, n, 1.0, rng);
+        u.matmul(&v)
+    }
+
+    #[test]
+    fn exact_low_rank_found() {
+        let mut rng = Pcg64::seeded(80);
+        let w = low_rank(64, 48, 5, &mut rng);
+        let spec = Spectrum::of(&w);
+        assert_eq!(spec.rank_for_energy(0.9999), 5);
+        assert!(spec.effective_rank() <= 5.5);
+    }
+
+    #[test]
+    fn full_energy_needs_full_rank_on_noise() {
+        let mut rng = Pcg64::seeded(81);
+        let w = Matrix::randn(30, 20, 1.0, &mut rng);
+        let spec = Spectrum::of(&w);
+        assert_eq!(spec.rank_for_energy(1.0), 20);
+        // Flat spectrum: effective rank near min dim.
+        assert!(spec.effective_rank() > 14.0);
+    }
+
+    #[test]
+    fn rank_monotone_in_tau() {
+        let mut rng = Pcg64::seeded(82);
+        let w = Matrix::randn(40, 40, 1.0, &mut rng);
+        let spec = Spectrum::of(&w);
+        let mut last = 0;
+        for tau in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let r = spec.rank_for_energy(tau);
+            assert!(r >= last, "tau={tau}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn energy_rank_gates_flat_spectra() {
+        let mut rng = Pcg64::seeded(83);
+        // Flat spectrum at high tau: energy rank ~ min dim > r_max -> dense.
+        let w = Matrix::randn(64, 64, 1.0, &mut rng);
+        assert_eq!(energy_rank(&w, 0.99), None);
+        // Concentrated spectrum: tiny rank accepted.
+        let lr = low_rank(64, 64, 4, &mut rng);
+        let r = energy_rank(&lr, 0.999).expect("low-rank layer must factorize");
+        assert!(r <= 16, "r={r}");
+        assert_eq!(r % RANK_MULTIPLE, 0);
+    }
+
+    #[test]
+    fn retained_energy_actually_reached() {
+        // Reconstruction at the energy rank must keep >= tau of the energy.
+        let mut rng = Pcg64::seeded(84);
+        let w = {
+            // decaying spectrum
+            crate::experiments::tables::trained_like_matrix(48, 40, 1.0, 5)
+        };
+        let tau = 0.9;
+        let spec = Spectrum::of(&w);
+        let r = spec.rank_for_energy(tau);
+        let (a, b) = crate::linalg::svd_factorize(&w, r);
+        let err2 = {
+            let d = w.sub(&a.matmul(&b)).fro_norm();
+            d * d
+        };
+        let retained = 1.0 - err2 / spec.total;
+        assert!(retained >= tau - 1e-3, "retained={retained}");
+    }
+}

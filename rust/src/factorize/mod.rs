@@ -1,0 +1,27 @@
+//! The Greenformer toolkit: automatic low-rank factorization of any model.
+//!
+//! This is the paper's contribution, reproduced with the same API surface as
+//! the PyTorch original's one-liner (`auto_fact(module, rank, solver,
+//! num_iter, submodules)`), but operating on [`ParamStore`] checkpoints +
+//! the module tree reconstructed from parameter names:
+//!
+//! * [`rank`] — Eq. 1 (`r_max = mn/(m+n)`), ratio/fixed rank policies, the
+//!   factorize-only-if-it-wins gate. Bit-for-bit mirror of
+//!   `python/compile/rank.py`.
+//! * [`energy`] — extension (paper future work): per-layer spectral-energy
+//!   rank selection and effective-rank diagnostics.
+//! * [`solver`] — Random / SVD / SNMF dispatch over [`crate::linalg`].
+//! * [`auto_fact`] — the module walk: classify layers, apply the filter,
+//!   gate by Eq. 1, replace Linear→LED and Conv→CED, and report.
+//!
+//! [`ParamStore`]: crate::tensor::ParamStore
+
+pub mod auto_fact;
+pub mod energy;
+pub mod rank;
+pub mod solver;
+
+pub use auto_fact::{auto_fact, AutoFactConfig, FactReport, LayerDecision};
+pub use energy::{energy_rank, Spectrum};
+pub use rank::{r_max, rank_for, Rank, MIN_RANK, RANK_MULTIPLE};
+pub use solver::Solver;

@@ -1,0 +1,139 @@
+//! Rank policy — paper Eq. 1 and its resolution rules.
+//!
+//! Single Rust source of truth, mirrored bit-for-bit by
+//! `python/compile/rank.py` (see `PINNED_VECTORS` there; the same vectors are
+//! asserted in `tests::pinned_vectors` below). The AOT graph shapes and the
+//! Rust-factorized checkpoint shapes must agree exactly, so any change here
+//! must be made in both places.
+
+
+/// Factor ranks are rounded down to a multiple of this (TPU lane
+/// granularity; DESIGN.md §4).
+pub const RANK_MULTIPLE: usize = 8;
+
+/// Smallest rank ever emitted.
+pub const MIN_RANK: usize = 8;
+
+/// Paper Eq. 1: the break-even rank of an (m, n) weight matrix. A rank-r
+/// factorization costs r·(m+n) against m·n, so it only wins when r < r_max.
+pub fn r_max(m: usize, n: usize) -> f64 {
+    (m as f64 * n as f64) / (m as f64 + n as f64)
+}
+
+/// The `rank` argument of `auto_fact`: a fixed integer rank or a ratio of
+/// each layer's own r_max (the paper's "dynamic rank across all layers").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rank {
+    Fixed(usize),
+    Ratio(f64),
+}
+
+impl Rank {
+    /// Resolve to a concrete rank for an (m, n) weight, or None when the
+    /// Eq.-1 gate rejects (factorization would not reduce theoretical cost).
+    pub fn resolve(self, m: usize, n: usize) -> Option<usize> {
+        match self {
+            Rank::Ratio(ratio) => rank_for(m, n, ratio),
+            Rank::Fixed(r) => {
+                if r == 0 || m == 0 || n == 0 {
+                    return None;
+                }
+                // Fixed ranks skip ratio rounding but still face the gate.
+                if (r as f64) >= r_max(m, n) {
+                    None
+                } else {
+                    Some(r)
+                }
+            }
+        }
+    }
+}
+
+/// Ratio resolution: truncate ratio·r_max to a multiple of [`RANK_MULTIPLE`],
+/// clamp up to [`MIN_RANK`], then apply the Eq.-1 gate.
+/// Mirrors `python/compile/rank.py::rank_for`.
+pub fn rank_for(m: usize, n: usize, ratio: f64) -> Option<usize> {
+    if m == 0 || n == 0 || ratio <= 0.0 {
+        return None;
+    }
+    let rmax = r_max(m, n);
+    let mut r = (ratio * rmax) as usize; // trunc, like Python int()
+    r = (r / RANK_MULTIPLE) * RANK_MULTIPLE;
+    if r < MIN_RANK {
+        r = MIN_RANK;
+    }
+    if (r as f64) >= rmax {
+        None
+    } else {
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared with python/compile/rank.py::PINNED_VECTORS — update together.
+    #[test]
+    fn pinned_vectors() {
+        let cases: &[((usize, usize, f64), Option<usize>)] = &[
+            ((128, 128, 0.50), Some(32)),
+            ((128, 128, 0.25), Some(16)),
+            ((128, 128, 0.10), Some(8)),
+            ((128, 128, 0.90), Some(56)),
+            ((768, 768, 0.50), Some(192)),
+            ((768, 3072, 0.25), Some(152)),
+            ((768, 3072, 0.50), Some(304)),
+            ((512, 128, 0.75), Some(72)),
+            ((16, 16, 0.50), None),
+            ((8, 8, 0.99), None),
+            ((4096, 4096, 0.75), Some(1536)),
+        ];
+        for &((m, n, ratio), want) in cases {
+            assert_eq!(rank_for(m, n, ratio), want, "({m}, {n}, {ratio})");
+        }
+    }
+
+    #[test]
+    fn gate_always_reduces_cost() {
+        // Exhaustive-ish sweep; the Eq.-1 invariant r(m+n) < mn must hold
+        // for every accepted rank.
+        for m in [1usize, 3, 8, 17, 64, 129, 768, 4096] {
+            for n in [1usize, 4, 8, 33, 128, 3072] {
+                for ratio in [0.01, 0.1, 0.25, 0.5, 0.75, 0.99] {
+                    if let Some(r) = rank_for(m, n, ratio) {
+                        assert!(r * (m + n) < m * n, "({m},{n},{ratio}) -> {r}");
+                        assert!(r >= MIN_RANK);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_rank_gate() {
+        assert_eq!(Rank::Fixed(32).resolve(128, 128), Some(32));
+        assert_eq!(Rank::Fixed(64).resolve(128, 128), None); // == r_max
+        assert_eq!(Rank::Fixed(100).resolve(128, 128), None);
+        assert_eq!(Rank::Fixed(0).resolve(128, 128), None);
+        // Fixed ranks are not rounded.
+        assert_eq!(Rank::Fixed(13).resolve(128, 128), Some(13));
+    }
+
+    #[test]
+    fn ratio_monotone_in_ratio() {
+        let mut last = 0usize;
+        for ratio in [0.1, 0.2, 0.3, 0.5, 0.7, 0.9] {
+            if let Some(r) = rank_for(768, 768, ratio) {
+                assert!(r >= last);
+                last = r;
+            }
+        }
+    }
+
+    #[test]
+    fn r_max_values() {
+        assert!((r_max(128, 128) - 64.0).abs() < 1e-12);
+        assert!((r_max(768, 3072) - 614.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Solver dispatch: the `solver=` argument of `auto_fact`.
+
+use std::fmt;
+use std::str::FromStr;
+
+
+use crate::linalg::{snmf_factorize, svd_factorize, Matrix};
+use crate::util::Pcg64;
+
+/// Greenformer's three factorization solvers (paper §Design).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Fresh random factors — factorization-by-design only ("not suitable
+    /// for post-training factorization, since it may break what the model
+    /// learnt" — the paper; `table_solvers` bench demonstrates exactly that).
+    Random,
+    /// Truncated SVD (optimal rank-r approximation, Eckart–Young).
+    Svd,
+    /// Semi-NMF: B ≥ 0, A unconstrained.
+    Snmf,
+}
+
+impl Solver {
+    /// Factorize `w` (m×n) into (A: m×r, B: r×n).
+    /// `num_iter` only affects SNMF; `seed` only Random/SNMF.
+    pub fn factorize(self, w: &Matrix, r: usize, num_iter: usize, seed: u64) -> (Matrix, Matrix) {
+        match self {
+            Solver::Svd => svd_factorize(w, r),
+            Solver::Snmf => snmf_factorize(w, r, num_iter, seed),
+            Solver::Random => random_factorize(w.rows, w.cols, r, seed),
+        }
+    }
+
+    /// Whether the solver approximates W (Random does not — it re-inits).
+    pub fn approximates(self) -> bool {
+        !matches!(self, Solver::Random)
+    }
+}
+
+impl fmt::Display for Solver {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Solver::Random => "random",
+            Solver::Svd => "svd",
+            Solver::Snmf => "snmf",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for Solver {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Ok(Solver::Random),
+            "svd" => Ok(Solver::Svd),
+            "snmf" => Ok(Solver::Snmf),
+            other => Err(format!("unknown solver {other:?} (random|svd|snmf)")),
+        }
+    }
+}
+
+/// Random solver: glorot-variance-matched factors (mirror of
+/// `python/compile/solvers.py::random_factorize`).
+pub fn random_factorize(m: usize, n: usize, r: usize, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Pcg64::new(seed, 3);
+    // var(sum_r a·b) = r·va·vb; target glorot vw = 2/(m+n), va = vb.
+    let vw = 2.0 / (m + n) as f64;
+    let sigma = (vw / r as f64).sqrt().sqrt() as f32; // sqrt(va), va = sqrt(vw/r)
+    let a = Matrix::randn(m, r, sigma, &mut rng);
+    let b = Matrix::randn(r, n, sigma, &mut rng);
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in [Solver::Random, Solver::Svd, Solver::Snmf] {
+            assert_eq!(s.to_string().parse::<Solver>().unwrap(), s);
+        }
+        assert!("qr".parse::<Solver>().is_err());
+    }
+
+    #[test]
+    fn svd_approximates_random_does_not() {
+        let mut rng = Pcg64::seeded(60);
+        let w = Matrix::randn(24, 16, 1.0, &mut rng);
+        let (a, b) = Solver::Svd.factorize(&w, 8, 0, 0);
+        let esvd = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+        let (a, b) = Solver::Random.factorize(&w, 8, 0, 0);
+        let ernd = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+        assert!(esvd < 0.9, "svd should approximate: {esvd}");
+        assert!(ernd > 0.9, "random must not approximate: {ernd}");
+        assert!(Solver::Svd.approximates() && !Solver::Random.approximates());
+    }
+
+    #[test]
+    fn random_factor_scale_near_glorot() {
+        let (a, b) = random_factorize(64, 48, 16, 0);
+        let prod = a.matmul(&b);
+        let var = {
+            let mean: f64 = prod.data.iter().map(|&x| x as f64).sum::<f64>() / prod.data.len() as f64;
+            prod.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / prod.data.len() as f64
+        };
+        let glorot = 2.0 / (64.0 + 48.0);
+        assert!(var > glorot * 0.2 && var < glorot * 5.0, "var={var} glorot={glorot}");
+    }
+
+    #[test]
+    fn shapes_correct_all_solvers() {
+        let mut rng = Pcg64::seeded(61);
+        let w = Matrix::randn(12, 20, 1.0, &mut rng);
+        for s in [Solver::Random, Solver::Svd, Solver::Snmf] {
+            let (a, b) = s.factorize(&w, 5, 10, 0);
+            assert_eq!((a.rows, a.cols), (12, 5), "{s}");
+            assert_eq!((b.rows, b.cols), (5, 20), "{s}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Analytical cost model: params, FLOPs, memory, and the TPU roofline
+//! estimates that stand in for real-TPU measurements (DESIGN.md §4).
+//!
+//! This module is the quantitative backbone of the paper's claims:
+//! Eq. 1's gate is "factorize only when theoretical cost drops", and the
+//! `table_cost_model` bench regenerates the params/FLOPs/speedup table from
+//! these formulas, then checks predicted against measured wall-clock ratios.
+
+pub mod roofline;
+
+use crate::model::{LayerInfo, LayerKind};
+
+/// FLOPs of a dense GEMM y = x W with x: (tokens, m), W: (m, n).
+/// Counted as 2·tokens·m·n (multiply + add).
+pub fn dense_linear_flops(tokens: usize, m: usize, n: usize) -> u64 {
+    2 * tokens as u64 * m as u64 * n as u64
+}
+
+/// FLOPs of the LED replacement y = (x A) B, rank r.
+pub fn led_linear_flops(tokens: usize, m: usize, n: usize, r: usize) -> u64 {
+    2 * tokens as u64 * r as u64 * (m as u64 + n as u64)
+}
+
+/// Predicted speedup of LED over dense at the same shape (>1 = faster).
+pub fn led_speedup(m: usize, n: usize, r: usize) -> f64 {
+    dense_linear_flops(1, m, n) as f64 / led_linear_flops(1, m, n, r) as f64
+}
+
+/// Cost of one classified layer for `tokens` row-vectors through it.
+/// Embedding/LayerNorm are memory-bound; we count their linear work.
+pub fn layer_flops(layer: &LayerInfo, tokens: usize) -> u64 {
+    match layer.kind {
+        LayerKind::Linear | LayerKind::Conv2d => {
+            dense_linear_flops(tokens, layer.in_dim, layer.out_dim)
+        }
+        LayerKind::LedLinear | LayerKind::CedConv2d => led_linear_flops(
+            tokens,
+            layer.in_dim,
+            layer.out_dim,
+            layer.rank.unwrap_or(0),
+        ),
+        LayerKind::LayerNorm => 8 * tokens as u64 * layer.in_dim as u64,
+        LayerKind::Embedding => 0, // gather, no MACs
+        LayerKind::Other => 0,
+    }
+}
+
+/// Whole-checkpoint totals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostSummary {
+    pub weight_params: usize,
+    pub flops_per_token: u64,
+    pub weight_bytes: usize,
+}
+
+pub fn summarize(layers: &[LayerInfo]) -> CostSummary {
+    let mut s = CostSummary::default();
+    for l in layers {
+        // Conv layers process (H·W) positions per "token"; the per-position
+        // model is good enough for relative comparisons, which is what
+        // Figure 2 plots.
+        s.weight_params += l.weight_params();
+        s.flops_per_token += layer_flops(l, 1);
+    }
+    s.weight_bytes = s.weight_params * 4;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear(name: &str, m: usize, n: usize) -> LayerInfo {
+        LayerInfo {
+            name: name.into(),
+            kind: LayerKind::Linear,
+            in_dim: m,
+            out_dim: n,
+            kernel: None,
+            rank: None,
+        }
+    }
+
+    fn led(name: &str, m: usize, n: usize, r: usize) -> LayerInfo {
+        LayerInfo {
+            name: name.into(),
+            kind: LayerKind::LedLinear,
+            in_dim: m,
+            out_dim: n,
+            kernel: None,
+            rank: Some(r),
+        }
+    }
+
+    #[test]
+    fn led_cheaper_iff_gate_accepts() {
+        // r < mn/(m+n) <=> LED flops < dense flops — the Eq. 1 identity.
+        for (m, n) in [(128, 128), (768, 3072), (64, 512)] {
+            let rmax = crate::factorize::r_max(m, n);
+            let r_ok = (rmax as usize).saturating_sub(1).max(1);
+            assert!(led_linear_flops(7, m, n, r_ok) < dense_linear_flops(7, m, n));
+            let r_bad = rmax.ceil() as usize + 1;
+            assert!(led_linear_flops(7, m, n, r_bad) > dense_linear_flops(7, m, n));
+        }
+    }
+
+    #[test]
+    fn speedup_formula() {
+        // 128x128 at r=32: dense 2·128·128, led 2·32·256 => 16384/8192 = 2x
+        assert!((led_speedup(128, 128, 32) - 2.0).abs() < 1e-12);
+        assert!((led_speedup(768, 3072, 192) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_adds_up() {
+        let layers = vec![linear("a", 128, 128), led("b", 128, 512, 32)];
+        let s = summarize(&layers);
+        assert_eq!(s.weight_params, 128 * 128 + 32 * (128 + 512));
+        assert_eq!(
+            s.flops_per_token,
+            dense_linear_flops(1, 128, 128) + led_linear_flops(1, 128, 512, 32)
+        );
+        assert_eq!(s.weight_bytes, s.weight_params * 4);
+    }
+}

@@ -1,0 +1,100 @@
+//! TPU roofline estimates for the Pallas LED kernel (DESIGN.md §4).
+//!
+//! We cannot execute Mosaic kernels on CPU, so TPU performance is *estimated*
+//! from the kernel's structure: per-program VMEM footprint (must fit the
+//! 16 MiB budget) and MXU utilization (how full the 128×128 systolic tiles
+//! are for the two skinny GEMMs LED emits). These numbers are reported in
+//! EXPERIMENTS.md §Perf next to the measured CPU wall-clock ratios.
+
+/// VMEM per core on the modeled TPU (v4-class), bytes.
+pub const VMEM_BUDGET: usize = 16 * 1024 * 1024;
+
+/// MXU tile edge.
+pub const MXU_TILE: usize = 128;
+
+/// Per-program VMEM bytes of the fused LED kernel with row-block `bm`:
+/// x-tile (bm×k) + A (k×r) + intermediate (bm×r) + B (r×n) + out (bm×n).
+/// Mirrors `python/compile/kernels/led.py::vmem_bytes`.
+pub fn led_vmem_bytes(bm: usize, k: usize, r: usize, n: usize, dtype_bytes: usize) -> usize {
+    (bm * k + k * r + bm * r + r * n + bm * n) * dtype_bytes
+}
+
+/// Fraction of MXU lanes doing useful work for an (m × k) @ (k × n) GEMM:
+/// each dimension wastes the pad up to the next multiple of 128.
+pub fn mxu_utilization(m: usize, k: usize, n: usize) -> f64 {
+    let eff = |d: usize| d as f64 / (d.div_ceil(MXU_TILE) * MXU_TILE) as f64;
+    eff(m) * eff(k) * eff(n)
+}
+
+/// Combined MXU utilization of the two LED GEMMs, FLOP-weighted.
+pub fn led_mxu_utilization(m: usize, k: usize, r: usize, n: usize) -> f64 {
+    let f1 = (m * k * r) as f64;
+    let f2 = (m * r * n) as f64;
+    (mxu_utilization(m, k, r) * f1 + mxu_utilization(m, r, n) * f2) / (f1 + f2)
+}
+
+/// Estimated TPU-side speedup of LED vs dense for one linear layer:
+/// FLOP ratio discounted by the relative MXU utilization. This is the
+/// honest version of the paper's "theoretical computational cost" —
+/// a rank of 8 looks 8× cheaper in FLOPs but pads to a full 128-lane tile.
+pub fn led_tpu_speedup_estimate(m_tokens: usize, k: usize, r: usize, n: usize) -> f64 {
+    let dense_flops = 2.0 * m_tokens as f64 * k as f64 * n as f64;
+    let led_flops = 2.0 * m_tokens as f64 * r as f64 * (k + n) as f64;
+    let dense_util = mxu_utilization(m_tokens, k, n).max(1e-6);
+    let led_util = led_mxu_utilization(m_tokens, k, r, n).max(1e-6);
+    (dense_flops / dense_util.max(1e-6)) / (led_flops / led_util)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmem_formula_counts_all_tiles() {
+        // bm=128, k=128, r=32, n=512, f32
+        let b = led_vmem_bytes(128, 128, 32, 512, 4);
+        assert_eq!(b, (128 * 128 + 128 * 32 + 128 * 32 + 32 * 512 + 128 * 512) * 4);
+        assert!(b < VMEM_BUDGET);
+    }
+
+    #[test]
+    fn model_shapes_fit_vmem() {
+        // Every (k, r, n) the model zoo can emit must fit at bm=128.
+        for (k, n) in [(128, 128), (128, 512), (512, 128), (192, 768), (768, 192), (192, 512)] {
+            for ratio in [0.10, 0.25, 0.50, 0.75] {
+                if let Some(r) = crate::factorize::rank_for(k, n, ratio) {
+                    assert!(led_vmem_bytes(128, k, r, n, 4) < VMEM_BUDGET, "({k},{r},{n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_is_one_on_aligned_shapes() {
+        assert!((mxu_utilization(128, 128, 128) - 1.0).abs() < 1e-12);
+        assert!((mxu_utilization(256, 384, 512) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_penalizes_skinny_dims() {
+        let u = mxu_utilization(128, 128, 8); // n=8 wastes 120/128 lanes
+        assert!((u - 8.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpu_estimate_below_flop_ratio_for_small_ranks() {
+        // FLOP-only speedup for 768x768 @ r=8 is huge; the MXU-aware
+        // estimate must be strictly smaller (padding waste).
+        let flops_ratio = crate::flops::led_speedup(768, 768, 8);
+        let est = led_tpu_speedup_estimate(256, 768, 8, 768);
+        assert!(est < flops_ratio, "est={est} flops={flops_ratio}");
+        assert!(est > 1.0, "still a win: {est}");
+    }
+
+    #[test]
+    fn aligned_rank_estimate_close_to_flop_ratio() {
+        let flops_ratio = crate::flops::led_speedup(768, 768, 128);
+        let est = led_tpu_speedup_estimate(256, 768, 128, 768);
+        assert!((est - flops_ratio).abs() / flops_ratio < 1e-9);
+    }
+}

@@ -1,0 +1,77 @@
+//! # Greenformer — factorization toolkit for efficient deep neural networks
+//!
+//! Rust + JAX + Pallas reproduction of *Greenformer: Factorization Toolkit
+//! for Efficient Deep Neural Networks* (Cahyawijaya et al., 2021).
+//!
+//! The toolkit's contract is the paper's one-liner:
+//!
+//! ```no_run
+//! use greenformer::factorize::{auto_fact, AutoFactConfig, Solver};
+//! use greenformer::tensor::ParamStore;
+//!
+//! let mut params = ParamStore::load_gtz("artifacts/init/text_dense.gtz").unwrap();
+//! let report = auto_fact(
+//!     &mut params,
+//!     &AutoFactConfig { rank: greenformer::factorize::Rank::Ratio(0.25),
+//!                       solver: Solver::Svd, num_iter: 50, submodules: None },
+//! ).unwrap();
+//! println!("{}", report);
+//! ```
+//!
+//! Layer map (see DESIGN.md):
+//! * [`factorize`] — the paper's contribution: `auto_fact`, LED/CED
+//!   replacement, rank policy (Eq. 1), solver dispatch, submodule filtering.
+//! * [`linalg`] — from-scratch numerical substrate: blocked parallel matmul,
+//!   Householder QR, one-sided Jacobi SVD, randomized SVD, Semi-NMF.
+//! * [`tensor`] — tensor container + the GTZ checkpoint format shared with
+//!   the Python build path.
+//! * [`model`] — module-tree reconstruction from parameter names; per-layer
+//!   classification (Linear/Conv/Embedding/LayerNorm) for `auto_fact`.
+//! * [`runtime`] — PJRT engine: loads AOT HLO-text artifacts (built once by
+//!   `python/compile/aot.py`), compiles, caches, executes. Python never runs
+//!   at request time.
+//! * [`train`] — training driver over the fused `train_step` artifacts.
+//! * [`coordinator`] — serving: dynamic batcher, variant router, in-context
+//!   learning prompt composer, metrics.
+//! * [`data`] — synthetic task suite (3 text + 2 image + LM corpus) and the
+//!   tokenizer; see DESIGN.md §3 for the substitution rationale.
+//! * [`flops`] — analytical cost model: params/FLOPs/VMEM/MXU estimates,
+//!   the source of the paper's "theoretical computational cost" gate.
+//! * [`eval`] — accuracy evaluation harnesses shared by examples/benches.
+//! * [`experiments`] — Figure-2 / table regeneration harnesses.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod factorize;
+pub mod flops;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Locate the artifacts directory: `$GREENFORMER_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (walking up from the current directory so
+/// tests, examples and benches all find it).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GREENFORMER_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Row-major dense matrix with a blocked, multithreaded GEMM.
+//!
+//! The GEMM is the hot path of every solver (and of the `table_solvers` /
+//! `kernel_speedup` benches): i-k-j loop order over B-transposed-free layout
+//! with 64-wide j-blocks keeps the inner loop vectorizable by LLVM, and row
+//! blocks are distributed over `std::thread::scope` workers above a size
+//! threshold. See EXPERIMENTS.md §Perf for the measured roofline.
+
+use std::fmt;
+
+use crate::util::Pcg64;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+/// Below this many scalar multiply-adds, threading overhead dominates.
+const PARALLEL_FLOP_THRESHOLD: usize = 1 << 21;
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Gaussian random matrix (used by the random solver and rSVD sketches).
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Pcg64) -> Self {
+        let mut data = vec![0.0f32; rows * cols];
+        rng.fill_normal(&mut data, sigma);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// C = A @ B. Parallel blocked GEMM.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut out = Matrix::zeros(self.rows, b.cols);
+        matmul_into(
+            self.rows,
+            self.cols,
+            b.cols,
+            &self.data,
+            &b.data,
+            &mut out.data,
+        );
+        out
+    }
+
+    /// C = A^T @ B without materializing A^T.
+    pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        // out[i][j] = sum_p a[p][i] * b[p][j] — i-p-j order keeps b row-contiguous.
+        for p in 0..k {
+            let arow = self.row(p);
+            let brow = b.row(p);
+            for i in 0..m {
+                let a = arow[i];
+                if a != 0.0 {
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += a * bv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A @ B^T without materializing B^T.
+    pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (a, bb) in arow.iter().zip(brow) {
+                    acc += a * bb;
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+}
+
+/// Core GEMM: out(m,n) += a(m,k) @ b(k,n), all row-major, out zero on entry.
+///
+/// i-k-j ordering: the inner j loop streams both `b`'s row and `out`'s row
+/// contiguously, which LLVM auto-vectorizes. Row-blocks are sharded across
+/// threads when the problem is big enough to amortize spawn cost.
+pub fn matmul_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+
+    let flops = m * k * n;
+    let threads = if flops < PARALLEL_FLOP_THRESHOLD {
+        1
+    } else {
+        std::thread::available_parallelism().map_or(1, |p| p.get()).min(m.max(1))
+    };
+
+    if threads <= 1 {
+        matmul_rows(0, m, k, n, a, b, out);
+        return;
+    }
+
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        // Split `out` into disjoint row chunks; each worker owns its slice.
+        let mut rest = out;
+        let mut handles = Vec::new();
+        let mut start = 0usize;
+        while start < m {
+            let rows = rows_per.min(m - start);
+            let (chunk, tail) = rest.split_at_mut(rows * n);
+            rest = tail;
+            let a_chunk = &a[start * k..(start + rows) * k];
+            handles.push(scope.spawn(move || {
+                matmul_rows(0, rows, k, n, a_chunk, b, chunk);
+            }));
+            start += rows;
+        }
+        for h in handles {
+            h.join().expect("gemm worker panicked");
+        }
+    });
+}
+
+fn matmul_rows(i0: usize, i1: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for p in 0..a.cols {
+                    s += a.at(i, p) as f64 * b.at(p, j) as f64;
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let mut rng = Pcg64::seeded(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 2), (17, 9, 23), (64, 64, 64)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches() {
+        let mut rng = Pcg64::seeded(2);
+        // big enough to cross PARALLEL_FLOP_THRESHOLD
+        let a = Matrix::randn(256, 128, 1.0, &mut rng);
+        let b = Matrix::randn(128, 256, 1.0, &mut rng);
+        assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-3);
+    }
+
+    #[test]
+    fn matmul_tn_and_nt_match_explicit_transpose() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let b = Matrix::randn(20, 8, 1.0, &mut rng);
+        assert_close(&a.matmul_tn(&b), &a.transpose().matmul(&b), 1e-4);
+        let c = Matrix::randn(7, 12, 1.0, &mut rng);
+        assert_close(&a.matmul_nt(&c), &a.matmul(&c.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Matrix::randn(33, 65, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::randn(10, 10, 1.0, &mut rng);
+        assert_close(&a.matmul(&Matrix::eye(10)), &a, 1e-6);
+        assert_close(&Matrix::eye(10).matmul(&a), &a, 1e-6);
+    }
+
+    #[test]
+    fn fro_norm_known_value() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_matmul_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

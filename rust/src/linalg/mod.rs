@@ -1,0 +1,33 @@
+//! Dense linear-algebra substrate, from scratch (no BLAS/LAPACK dependency).
+//!
+//! The post-training factorization path runs entirely in Rust, so the three
+//! Greenformer solvers need a numerical core:
+//!
+//! * [`matrix`] — row-major `Matrix`, blocked + multithreaded GEMM,
+//!   transposes, norms.
+//! * [`qr`] — Householder thin QR (orthonormal bases for the randomized
+//!   range finder).
+//! * [`svd`] — one-sided Jacobi SVD (exact; used directly on small
+//!   matrices and as the inner solver of the randomized path).
+//! * [`rsvd`] — Halko–Martinsson–Tropp randomized truncated SVD for the
+//!   large (e.g. 768×3072) layers where full Jacobi would be wasteful.
+//! * [`snmf`] — Semi-NMF multiplicative updates (Ding, Li & Jordan 2010).
+//! * [`solve`] — small symmetric-positive solves (Cholesky) for SNMF's
+//!   closed-form A step.
+//!
+//! Contracts (reconstruction-error bounds, orthogonality, non-negativity)
+//! mirror `python/tests/test_solvers.py`; property tests live with each
+//! module and in `rust/tests/proptest_linalg.rs`.
+
+pub mod matrix;
+pub mod qr;
+pub mod rsvd;
+pub mod snmf;
+pub mod solve;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use qr::thin_qr;
+pub use rsvd::randomized_svd;
+pub use snmf::snmf_factorize;
+pub use svd::{factors_from_svd, jacobi_svd, svd_factorize, Svd};

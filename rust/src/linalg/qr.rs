@@ -1,0 +1,138 @@
+//! Householder thin QR: A (m×n, m ≥ n) = Q (m×n, orthonormal cols) R (n×n).
+//!
+//! Used by the randomized SVD's range finder, where only Q matters; R is
+//! returned for completeness and testing.
+
+use super::Matrix;
+
+/// Thin QR via Householder reflections. Requires `a.rows >= a.cols`.
+pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "thin_qr needs rows >= cols, got {m}x{n}");
+    let mut r = a.clone();
+    // Store the Householder vectors in-place below the diagonal; betas aside.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for j in 0..n {
+        // Build the reflector for column j from rows j..m.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = r.at(i, j) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt() as f32;
+        let mut v = vec![0.0f32; m - j];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let x0 = r.at(j, j);
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        v[0] = x0 - alpha;
+        for i in j + 1..m {
+            v[i - j] = r.at(i, j);
+        }
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 > 0.0 {
+            // Apply (I - 2 v v^T / ||v||^2) to R[j.., j..].
+            for col in j..n {
+                let mut dot = 0.0f64;
+                for i in j..m {
+                    dot += v[i - j] as f64 * r.at(i, col) as f64;
+                }
+                let s = (2.0 * dot / vnorm2) as f32;
+                for i in j..m {
+                    *r.at_mut(i, col) -= s * v[i - j];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // Zero strictly-lower part of R (rounding residue) and take top n rows.
+    let mut r_out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *r_out.at_mut(i, j) = r.at(i, j);
+        }
+    }
+    // Form Q by applying reflectors to the first n columns of I, in reverse.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        *q.at_mut(j, j) = 1.0;
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for col in 0..n {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += v[i - j] as f64 * q.at(i, col) as f64;
+            }
+            let s = (2.0 * dot / vnorm2) as f32;
+            for i in j..m {
+                *q.at_mut(i, col) -= s * v[i - j];
+            }
+        }
+    }
+    (q, r_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn check_orthonormal(q: &Matrix, tol: f32) {
+        let qtq = q.matmul_tn(q);
+        for i in 0..qtq.rows {
+            for j in 0..qtq.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.at(i, j) - want).abs() < tol,
+                    "QtQ[{i}][{j}] = {}",
+                    qtq.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Pcg64::seeded(10);
+        for (m, n) in [(5, 5), (20, 7), (64, 32), (100, 1)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (q, r) = thin_qr(&a);
+            check_orthonormal(&q, 1e-3);
+            let qr = q.matmul(&r);
+            for (x, y) in qr.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y} ({m}x{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Matrix::randn(12, 6, 1.0, &mut rng);
+        let (_, r) = thin_qr(&a);
+        for i in 0..r.rows {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_of_rank_deficient_matrix_does_not_nan() {
+        let mut a = Matrix::zeros(8, 4);
+        for i in 0..8 {
+            *a.at_mut(i, 0) = 1.0;
+            *a.at_mut(i, 2) = 2.0; // col2 = 2*col0, col1 = col3 = 0
+        }
+        let (q, r) = thin_qr(&a);
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        assert!(r.data.iter().all(|x| x.is_finite()));
+    }
+}

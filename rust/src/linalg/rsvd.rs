@@ -1,0 +1,110 @@
+//! Randomized truncated SVD (Halko, Martinsson & Tropp 2011).
+//!
+//! For the big layers (LM head 192×512, BERT-scale 768×3072 in the
+//! kernel-speedup bench), exact Jacobi on the full matrix is wasteful when
+//! only rank r ≪ min(m, n) is needed. The randomized range finder sketches
+//! Y = (A Aᵀ)^q A Ω with a Gaussian Ω (n, r+p), orthonormalizes Y, and runs
+//! exact Jacobi on the small projected matrix B = Qᵀ A.
+
+use super::{jacobi_svd, thin_qr, Matrix, Svd};
+use crate::util::Pcg64;
+
+/// Truncated SVD of rank `r` with `oversample` extra sketch columns and
+/// `power_iters` subspace iterations (2 is plenty for weight matrices).
+pub fn randomized_svd(a: &Matrix, r: usize, oversample: usize, power_iters: usize) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let k = (r + oversample).min(m.min(n));
+    // Deterministic sketch: seeded from the problem size so repeated
+    // factorizations of the same layer reproduce bit-identically.
+    let mut rng = Pcg64::new(0x5eed ^ (m as u64) << 20 ^ (n as u64), r as u64);
+    let omega = Matrix::randn(n, k, 1.0, &mut rng);
+    let mut y = a.matmul(&omega); // (m, k)
+    // Power iterations with re-orthonormalization for spectral accuracy.
+    for _ in 0..power_iters {
+        let (q, _) = thin_qr(&y);
+        let z = a.matmul_tn(&q); // A^T Q: (n, k)
+        let (qz, _) = thin_qr(&z);
+        y = a.matmul(&qz); // (m, k)
+    }
+    let (q, _) = thin_qr(&y); // (m, k) orthonormal
+    let b = q.matmul_tn(a); // wrong orientation; fix below
+
+    // q.matmul_tn(a) computes q^T a only if rows match: q is (m,k), a is
+    // (m,n) -> (k,n). That is exactly B.
+    let small = jacobi_svd(&b); // B = U_b S V^T, U_b: (k, k)
+    let u = q.matmul(&small.u); // (m, k)
+    let take = r.min(small.s.len());
+    // Truncate to r.
+    let mut ut = Matrix::zeros(m, take);
+    for i in 0..m {
+        for j in 0..take {
+            *ut.at_mut(i, j) = u.at(i, j);
+        }
+    }
+    let mut vt = Matrix::zeros(take, n);
+    for i in 0..take {
+        vt.row_mut(i).copy_from_slice(small.vt.row(i));
+    }
+    Svd {
+        u: ut,
+        s: small.s[..take].to_vec(),
+        vt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::factors_from_svd;
+
+    #[test]
+    fn recovers_exactly_low_rank() {
+        let mut rng = Pcg64::seeded(30);
+        let u = Matrix::randn(120, 6, 1.0, &mut rng);
+        let v = Matrix::randn(6, 300, 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let svd = randomized_svd(&a, 6, 8, 2);
+        let (fa, fb) = factors_from_svd(&svd, 6);
+        let err = a.sub(&fa.matmul(&fb)).fro_norm() / a.fro_norm();
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn near_optimal_on_full_rank_noise() {
+        let mut rng = Pcg64::seeded(31);
+        let a = Matrix::randn(100, 80, 1.0, &mut rng);
+        let r = 20;
+        let exact = jacobi_svd(&a);
+        let tail2: f64 = exact.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        let approx = randomized_svd(&a, r, 10, 2);
+        let (fa, fb) = factors_from_svd(&approx, r);
+        let err2 = {
+            let d = a.sub(&fa.matmul(&fb)).fro_norm();
+            d * d
+        };
+        // Within 5% of the optimal truncation error.
+        assert!(err2 <= tail2 * 1.05, "err2={err2} optimal={tail2}");
+    }
+
+    #[test]
+    fn singular_values_close_to_exact() {
+        let mut rng = Pcg64::seeded(32);
+        let a = Matrix::randn(90, 70, 1.0, &mut rng);
+        let exact = jacobi_svd(&a);
+        let approx = randomized_svd(&a, 10, 10, 2);
+        for j in 0..10 {
+            let rel = (exact.s[j] - approx.s[j]).abs() / exact.s[j];
+            assert!(rel < 0.02, "sigma_{j}: exact={} approx={}", exact.s[j], approx.s[j]);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let mut rng = Pcg64::seeded(33);
+        let a = Matrix::randn(60, 50, 1.0, &mut rng);
+        let s1 = randomized_svd(&a, 8, 6, 1);
+        let s2 = randomized_svd(&a, 8, 6, 1);
+        assert_eq!(s1.s, s2.s);
+        assert_eq!(s1.u.data, s2.u.data);
+    }
+}

@@ -1,0 +1,115 @@
+//! Semi-NMF (Ding, Li & Jordan 2010) — Greenformer's SNMF solver.
+//!
+//! W ≈ A B with B ≥ 0 elementwise and A unconstrained ("B is strictly
+//! nonnegative yet A has no restriction on signs" — paper §Design).
+//! Multiplicative updates on G = Bᵀ with the closed-form A-step
+//! A = W G (GᵀG)⁻¹ each iteration. Mirrors `python/compile/solvers.py`.
+
+use super::{solve::solve_spd, Matrix};
+use crate::util::Pcg64;
+
+/// Factorize `w` (m×n) into (A: m×r, B: r×n) with B ≥ 0.
+/// `num_iter` is the paper's `num_iter` auto_fact argument.
+pub fn snmf_factorize(w: &Matrix, r: usize, num_iter: usize, seed: u64) -> (Matrix, Matrix) {
+    let (m, n) = (w.rows, w.cols);
+    let r = r.min(m.min(n)).max(1);
+    let mut rng = Pcg64::new(seed, 7);
+    // G = Bᵀ: (n, r), strictly positive init.
+    let mut g = Matrix::from_fn(n, r, |_, _| rng.normal_f32().abs() + 0.1);
+    let eps = 1e-9f32;
+
+    for _ in 0..num_iter {
+        // A = W G (GᵀG)⁻¹  — solve (GᵀG) Xᵀ = (W G)ᵀ.
+        let wg = w.matmul(&g); // (m, r)
+        let gtg = g.matmul_tn(&g); // (r, r)
+        let a = solve_spd(&gtg, &wg.transpose()).transpose(); // (m, r)
+
+        // Multiplicative update:
+        // G <- G ∘ sqrt( ((WᵀA)⁺ + G (AᵀA)⁻) / ((WᵀA)⁻ + G (AᵀA)⁺) ).
+        let wta = w.matmul_tn(&a); // (n, r)
+        let ata = a.matmul_tn(&a); // (r, r)
+        let mut ata_pos = ata.clone();
+        let mut ata_neg = ata;
+        for (p, q) in ata_pos.data.iter_mut().zip(ata_neg.data.iter_mut()) {
+            let v = *p;
+            *p = v.max(0.0);
+            *q = (-v).max(0.0);
+        }
+        let g_ata_neg = g.matmul(&ata_neg);
+        let g_ata_pos = g.matmul(&ata_pos);
+        for i in 0..n {
+            for j in 0..r {
+                let x = wta.at(i, j);
+                let num = x.max(0.0) + g_ata_neg.at(i, j);
+                let den = (-x).max(0.0) + g_ata_pos.at(i, j) + eps;
+                let factor = (num / den).max(0.0).sqrt();
+                *g.at_mut(i, j) *= factor;
+            }
+        }
+    }
+    // Final A for the final G.
+    let wg = w.matmul(&g);
+    let gtg = g.matmul_tn(&g);
+    let a = solve_spd(&gtg, &wg.transpose()).transpose();
+    (a, g.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn b_is_nonnegative() {
+        let mut rng = Pcg64::seeded(50);
+        let w = Matrix::randn(20, 14, 1.0, &mut rng);
+        let (_, b) = snmf_factorize(&w, 5, 30, 0);
+        assert!(b.data.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn error_decreases_with_iterations() {
+        let mut rng = Pcg64::seeded(51);
+        let w = Matrix::randn(24, 18, 1.0, &mut rng);
+        let err = |iters| {
+            let (a, b) = snmf_factorize(&w, 6, iters, 0);
+            w.sub(&a.matmul(&b)).fro_norm()
+        };
+        let (e3, e60) = (err(3), err(60));
+        assert!(e60 <= e3 * 1.01, "e3={e3} e60={e60}");
+        assert!(e60 < w.fro_norm(), "must actually approximate");
+    }
+
+    #[test]
+    fn bounded_below_by_svd_error() {
+        let mut rng = Pcg64::seeded(52);
+        let w = Matrix::randn(22, 16, 1.0, &mut rng);
+        let r = 6;
+        let (sa, sb) = crate::linalg::svd_factorize(&w, r);
+        let esvd = w.sub(&sa.matmul(&sb)).fro_norm();
+        let (na, nb) = snmf_factorize(&w, r, 80, 0);
+        let esn = w.sub(&na.matmul(&nb)).fro_norm();
+        assert!(esn >= esvd * 0.999, "SNMF cannot beat optimal: {esn} < {esvd}");
+    }
+
+    #[test]
+    fn handles_nonnegative_input_well() {
+        // On an already-nonnegative low-rank matrix SNMF should get close.
+        let mut rng = Pcg64::seeded(53);
+        let u = Matrix::from_fn(16, 3, |_, _| rng.next_f32() + 0.05);
+        let v = Matrix::from_fn(3, 12, |_, _| rng.next_f32() + 0.05);
+        let w = u.matmul(&v);
+        let (a, b) = snmf_factorize(&w, 3, 200, 1);
+        let rel = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+        assert!(rel < 0.05, "rel={rel}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut rng = Pcg64::seeded(54);
+        let w = Matrix::randn(10, 8, 1.0, &mut rng);
+        let (a1, b1) = snmf_factorize(&w, 3, 10, 9);
+        let (a2, b2) = snmf_factorize(&w, 3, 10, 9);
+        assert_eq!(a1.data, a2.data);
+        assert_eq!(b1.data, b2.data);
+    }
+}

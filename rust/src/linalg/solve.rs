@@ -1,0 +1,136 @@
+//! Small symmetric positive (semi-)definite solves for SNMF's closed-form
+//! A-step: A = W G (GᵀG)⁻¹. GᵀG is r×r (r ≤ a few hundred), so a Cholesky
+//! with a ridge fallback is exact enough and trivially robust.
+
+use super::Matrix;
+
+/// Cholesky factorization of a symmetric positive-definite matrix.
+/// Returns lower-triangular L with A = L Lᵀ, or None if not PD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = sum.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A X = B for symmetric positive-definite A via Cholesky, adding a
+/// progressively larger ridge if A is only semi-definite (rank-deficient G
+/// columns happen with SNMF on small matrices).
+pub fn solve_spd(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows);
+    let n = a.rows;
+    let mut ridge = 0.0f32;
+    let scale = (0..n).map(|i| a.at(i, i)).fold(0.0f32, f32::max).max(1e-12);
+    for _ in 0..8 {
+        let mut aa = a.clone();
+        if ridge > 0.0 {
+            for i in 0..n {
+                *aa.at_mut(i, i) += ridge;
+            }
+        }
+        if let Some(l) = cholesky(&aa) {
+            return cholesky_solve(&l, b);
+        }
+        ridge = if ridge == 0.0 { scale * 1e-6 } else { ridge * 10.0 };
+    }
+    // Last resort: heavy ridge (still finite, keeps SNMF iterating).
+    let mut aa = a.clone();
+    for i in 0..n {
+        *aa.at_mut(i, i) += scale;
+    }
+    let l = cholesky(&aa).expect("ridged matrix must be PD");
+    cholesky_solve(&l, b)
+}
+
+/// Given L (lower, A = L Lᵀ) solve A X = B by forward+back substitution.
+fn cholesky_solve(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows;
+    let k = b.cols;
+    // Forward: L Y = B.
+    let mut y = Matrix::zeros(n, k);
+    for i in 0..n {
+        for c in 0..k {
+            let mut sum = b.at(i, c) as f64;
+            for j in 0..i {
+                sum -= l.at(i, j) as f64 * y.at(j, c) as f64;
+            }
+            *y.at_mut(i, c) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    // Back: Lᵀ X = Y.
+    let mut x = Matrix::zeros(n, k);
+    for i in (0..n).rev() {
+        for c in 0..k {
+            let mut sum = y.at(i, c) as f64;
+            for j in i + 1..n {
+                sum -= l.at(j, i) as f64 * x.at(j, c) as f64;
+            }
+            *x.at_mut(i, c) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        let g = Matrix::randn(n + 4, n, 1.0, rng);
+        g.matmul_tn(&g) // GᵀG is SPD w.p. 1
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seeded(40);
+        let a = spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let llt = l.matmul_nt(&l);
+        for (x, y) in llt.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Pcg64::seeded(41);
+        let a = spd(10, &mut rng);
+        let x_true = Matrix::randn(10, 3, 1.0, &mut rng);
+        let b = a.matmul(&x_true);
+        let x = solve_spd(&a, &b);
+        for (u, v) in x.data.iter().zip(&x_true.data) {
+            assert!((u - v).abs() < 1e-2 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn non_pd_falls_back_to_ridge_without_panic() {
+        let a = Matrix::zeros(4, 4); // semidefinite (rank 0)
+        let b = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let x = solve_spd(&a, &b);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_none());
+    }
+}

@@ -1,0 +1,264 @@
+//! One-sided Jacobi SVD — the exact solver behind Greenformer's SVD option.
+//!
+//! One-sided Jacobi orthogonalizes pairs of *columns* of a working copy of A
+//! with Givens rotations, accumulating them into V; at convergence the
+//! column norms are the singular values and the normalized columns are U.
+//! It is simple, numerically robust, and exact enough to pin the
+//! Eckart–Young bound in tests. Cost is O(m n² · sweeps) — fine for the
+//! layer sizes the models emit directly; the randomized path ([`super::rsvd`])
+//! handles large layers by reducing to a small Jacobi problem.
+
+use super::Matrix;
+
+pub struct Svd {
+    /// (m, k) with orthonormal columns, k = min(m, n).
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub s: Vec<f32>,
+    /// (k, n): right singular vectors as rows (V^T).
+    pub vt: Matrix,
+}
+
+/// Full (thin) SVD via one-sided Jacobi. Handles any m, n.
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    if a.rows < a.cols {
+        // Work on the transpose and swap factors: A^T = U' S V'^T
+        // => A = V' S U'^T.
+        let t = jacobi_svd(&a.transpose());
+        return Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+        };
+    }
+    let (m, n) = (a.rows, a.cols);
+    // Column-major working copy: columns contiguous for the rotation loop.
+    let mut w: Vec<f64> = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            w[j * m + i] = a.at(i, j) as f64;
+        }
+    }
+    let mut v = vec![0.0f64; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    let eps = 1e-10;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                let (colp, colq) = (&w[p * m..(p + 1) * m], &w[q * m..(q + 1) * m]);
+                for i in 0..m {
+                    app += colp[i] * colp[i];
+                    aqq += colq[i] * colq[i];
+                    apq += colp[i] * colq[i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq * apq;
+                // Jacobi rotation zeroing the (p,q) entry of W^T W.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Rotate columns p, q of W and of V.
+                let (head, tail) = w.split_at_mut(q * m);
+                let colp = &mut head[p * m..(p + 1) * m];
+                let colq = &mut tail[..m];
+                for i in 0..m {
+                    let (xp, xq) = (colp[i], colq[i]);
+                    colp[i] = c * xp - s * xq;
+                    colq[i] = s * xp + c * xq;
+                }
+                let (vh, vt_) = v.split_at_mut(q * n);
+                let vp = &mut vh[p * n..(p + 1) * n];
+                let vq = &mut vt_[..n];
+                for i in 0..n {
+                    let (xp, xq) = (vp[i], vq[i]);
+                    vp[i] = c * xp - s * xq;
+                    vq[i] = s * xp + c * xq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+    }
+
+    // Extract singular values (column norms) and sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[j * m + i] * w[j * m + i]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a, &b| norms[b].total_cmp(&norms[a]));
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Matrix::zeros(n, n);
+    for (rank, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s.push(sigma as f32);
+        if sigma > 1e-30 {
+            for i in 0..m {
+                *u.at_mut(i, rank) = (w[j * m + i] / sigma) as f32;
+            }
+        }
+        for i in 0..n {
+            *vt.at_mut(rank, i) = v[j * n + i] as f32;
+        }
+    }
+    Svd { u, s, vt }
+}
+
+/// Greenformer SVD solver: W ≈ A B with A = U_r √Σ_r, B = √Σ_r V_r^T.
+///
+/// The √Σ split balances factor norms — identical to the Python side
+/// (`solvers.svd_factorize`), so by-design and post-training factors are
+/// interchangeable between the two languages.
+pub fn svd_factorize(w: &Matrix, r: usize) -> (Matrix, Matrix) {
+    let r = r.min(w.rows.min(w.cols));
+    // Large layers: randomized range finder reduces to a small Jacobi
+    // problem with controlled error; small layers: direct Jacobi.
+    let svd = if should_randomize(w.rows, w.cols, r) {
+        super::rsvd::randomized_svd(w, r, 10, 2)
+    } else {
+        jacobi_svd(w)
+    };
+    factors_from_svd(&svd, r)
+}
+
+/// Split a (possibly truncated) SVD into balanced (A, B) factors.
+pub fn factors_from_svd(svd: &Svd, r: usize) -> (Matrix, Matrix) {
+    let r = r.min(svd.s.len());
+    let m = svd.u.rows;
+    let n = svd.vt.cols;
+    let mut a = Matrix::zeros(m, r);
+    let mut b = Matrix::zeros(r, n);
+    for j in 0..r {
+        let sq = svd.s[j].max(0.0).sqrt();
+        for i in 0..m {
+            *a.at_mut(i, j) = svd.u.at(i, j) * sq;
+        }
+        for i in 0..n {
+            *b.at_mut(j, i) = sq * svd.vt.at(j, i);
+        }
+    }
+    (a, b)
+}
+
+/// Heuristic: randomized SVD wins when the target rank is far below the full
+/// spectrum on a big matrix. Exact Jacobi is O(mn²·sweeps); rSVD is
+/// O(mn(r+p)) plus a small Jacobi.
+fn should_randomize(m: usize, n: usize, r: usize) -> bool {
+    let small = m.min(n);
+    small > 160 && r + 10 < small / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn reconstruct(svd: &Svd) -> Matrix {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for j in 0..k {
+            for i in 0..us.rows {
+                *us.at_mut(i, j) *= svd.s[j];
+            }
+        }
+        us.matmul(&svd.vt)
+    }
+
+    #[test]
+    fn svd_reconstructs_exactly() {
+        let mut rng = Pcg64::seeded(20);
+        for (m, n) in [(6, 6), (12, 5), (5, 12), (40, 17)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let svd = jacobi_svd(&a);
+            let err = a.sub(&reconstruct(&svd)).fro_norm() / a.fro_norm();
+            assert!(err < 1e-5, "recon err {err} for {m}x{n}");
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Pcg64::seeded(21);
+        let a = Matrix::randn(20, 13, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Pcg64::seeded(22);
+        let a = Matrix::randn(15, 9, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let utu = svd.u.matmul_tn(&svd.u);
+        let vvt = svd.vt.matmul_nt(&svd.vt);
+        for i in 0..9 {
+            for j in 0..9 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - want).abs() < 1e-4);
+                assert!((vvt.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn known_diagonal_spectrum() {
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0., 0., 0., -5.0, 0., 0., 0., 1.0]);
+        let svd = jacobi_svd(&a);
+        let want = [5.0, 3.0, 1.0];
+        for (s, w) in svd.s.iter().zip(want) {
+            assert!((s - w).abs() < 1e-5, "{s} vs {w}");
+        }
+    }
+
+    #[test]
+    fn truncation_satisfies_eckart_young() {
+        let mut rng = Pcg64::seeded(23);
+        let a = Matrix::randn(24, 18, 1.0, &mut rng);
+        let svd = jacobi_svd(&a);
+        let r = 6;
+        let (fa, fb) = factors_from_svd(&svd, r);
+        let err2 = {
+            let d = a.sub(&fa.matmul(&fb));
+            let n = d.fro_norm();
+            n * n
+        };
+        let tail2: f64 = svd.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!(
+            (err2 - tail2).abs() < 1e-3 * (1.0 + tail2),
+            "err2={err2} tail2={tail2}"
+        );
+    }
+
+    #[test]
+    fn factorize_balances_norms() {
+        let mut rng = Pcg64::seeded(24);
+        let a = Matrix::randn(32, 24, 1.0, &mut rng);
+        let (fa, fb) = svd_factorize(&a, 8);
+        let (na, nb) = (fa.fro_norm(), fb.fro_norm());
+        assert!((na - nb).abs() / na < 1e-3, "norms {na} vs {nb}");
+    }
+
+    #[test]
+    fn exactly_low_rank_matrix_recovered() {
+        let mut rng = Pcg64::seeded(25);
+        let u = Matrix::randn(30, 4, 1.0, &mut rng);
+        let v = Matrix::randn(4, 20, 1.0, &mut rng);
+        let w = u.matmul(&v);
+        let (fa, fb) = svd_factorize(&w, 4);
+        let err = w.sub(&fa.matmul(&fb)).fro_norm() / w.fro_norm();
+        assert!(err < 1e-4, "err={err}");
+    }
+}

@@ -1,0 +1,348 @@
+//! `greenformer` — CLI launcher for the factorization toolkit.
+//!
+//! Subcommands map 1:1 onto the library's public API; see `README.md` for a
+//! tour. Everything runs against the AOT artifacts built by `make artifacts`.
+//! (Arg parsing is hand-rolled: the offline build has no clap.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use greenformer::config::ExperimentConfig;
+use greenformer::coordinator::{serve_classifier, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::data::image::{all_image_tasks, HW};
+use greenformer::data::text::all_text_tasks;
+use greenformer::data::Dataset;
+use greenformer::experiments::{self, ExpParams};
+use greenformer::factorize::{auto_fact, Solver};
+use greenformer::runtime::Engine;
+use greenformer::tensor::ParamStore;
+use greenformer::train::{checkpoint, Trainer};
+use greenformer::Result;
+
+const USAGE: &str = "\
+greenformer — factorization toolkit for efficient DNNs (paper reproduction)
+
+USAGE: greenformer [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  info                                  show the artifact manifest summary
+  factorize --input F --output F        auto_fact a GTZ checkpoint
+            [--ratio 0.25] [--rank N] [--solver svd|snmf|random]
+            [--num-iter 50] [--submodule S]...
+  train     [--model text] [--variant dense] [--task polarity]
+            [--steps 300] [--out-dir runs]
+  eval      --ckpt F [--model text] [--variant dense] [--task polarity]
+            [--examples 256]
+  run       --config F                  config-driven experiment (JSON)
+  fig2      [--use-case by-design|post-training|icl] [--quick]
+  report-cost                           cost-model table (E5)
+  report-solvers                        solver comparison table (E6)
+  serve-demo [--requests 200] [--train-steps 60]
+
+Tasks: polarity | topic | matching (text), shapes | blobs (image).
+Env: GREENFORMER_ARTIFACTS, GREENFORMER_STEPS, GREENFORMER_EVAL.";
+
+/// Tiny argv helper: `--key value` flags, `--flag` booleans, repeatables.
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn get(&self, key: &str) -> Option<String> {
+        self.argv
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.argv.get(i + 1).cloned())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.argv.iter().any(|a| a == key)
+    }
+
+    fn all(&self, key: &str) -> Vec<String> {
+        self.argv
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| *a == key)
+            .filter_map(|(i, _)| self.argv.get(i + 1).cloned())
+            .collect()
+    }
+
+    fn required(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag {key}\n\n{USAGE}"))
+    }
+}
+
+fn engine(args: &Args) -> Result<Engine> {
+    let dir = args
+        .get("--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(greenformer::artifacts_dir);
+    Engine::load(dir)
+}
+
+fn find_task(name: &str, seed: u64) -> Result<(Box<dyn Dataset>, bool)> {
+    for t in all_text_tasks(64, seed) {
+        if t.name() == name {
+            return Ok((t, false));
+        }
+    }
+    for t in all_image_tasks(seed) {
+        if t.name() == name {
+            return Ok((t, true));
+        }
+    }
+    anyhow::bail!("unknown task {name:?} (polarity|topic|matching|shapes|blobs)")
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args {
+        argv: argv[1..].to_vec(),
+    };
+
+    match cmd.as_str() {
+        "info" => {
+            let eng = engine(&args)?;
+            let m = eng.manifest();
+            println!("platform: {}", eng.platform());
+            println!("graphs: {}", m.graphs.len());
+            for g in &m.graphs {
+                println!(
+                    "  {:<28} kind={:<5} batch={:<3} params={} ({} tensors)",
+                    g.name,
+                    g.kind,
+                    g.batch,
+                    g.n_params,
+                    g.params.len()
+                );
+            }
+            println!("checkpoints: {}", m.checkpoints.len());
+        }
+        "factorize" => {
+            let input = PathBuf::from(args.required("--input")?);
+            let output = PathBuf::from(args.required("--output")?);
+            let solver: Solver = args
+                .get_or("--solver", "svd")
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            let rank = match args.get("--rank") {
+                Some(r) => greenformer::factorize::Rank::Fixed(r.parse()?),
+                None => greenformer::factorize::Rank::Ratio(args.parse_or("--ratio", 0.25)),
+            };
+            let submodules = args.all("--submodule");
+            let mut params = ParamStore::load_gtz(&input)?;
+            let report = auto_fact(
+                &mut params,
+                &greenformer::factorize::AutoFactConfig {
+                    rank,
+                    solver,
+                    num_iter: args.parse_or("--num-iter", 50),
+                    submodules: (!submodules.is_empty()).then_some(submodules),
+                },
+            )?;
+            print!("{report}");
+            params.save_gtz(&output)?;
+            println!("wrote {output:?}");
+        }
+        "train" => {
+            let eng = engine(&args)?;
+            let model = args.get_or("--model", "text");
+            let variant = args.get_or("--variant", "dense");
+            let task = args.get_or("--task", "polarity");
+            let steps = args.parse_or("--steps", 300usize);
+            let out_dir = PathBuf::from(args.get_or("--out-dir", "runs"));
+            let (ds, is_image) = find_task(&task, 42)?;
+            let hw = is_image.then_some((HW, HW, 1usize));
+            let mut trainer = Trainer::from_init(&eng, &model, &variant)?;
+            println!(
+                "training {model}/{variant} on {task}: {} params, batch {}",
+                trainer.params.n_params(),
+                trainer.batch_size()
+            );
+            trainer.train_classifier(ds.as_ref(), steps, hw, |log| {
+                if log.step % 20 == 0 || log.step == 1 {
+                    println!(
+                        "  step {:>4}  loss {:.4}  ({:.0} ms)",
+                        log.step,
+                        log.loss,
+                        log.seconds * 1e3
+                    );
+                }
+            })?;
+            let name = format!("{model}_{variant}_{task}");
+            let path = checkpoint::save(&out_dir, &name, &trainer.params)?;
+            println!("saved {path:?}");
+        }
+        "eval" => {
+            let eng = engine(&args)?;
+            let model = args.get_or("--model", "text");
+            let variant = args.get_or("--variant", "dense");
+            let task = args.get_or("--task", "polarity");
+            let ckpt = PathBuf::from(args.required("--ckpt")?);
+            let examples = args.parse_or("--examples", 256usize);
+            let (ds, is_image) = find_task(&task, 42)?;
+            let hw = is_image.then_some((HW, HW, 1usize));
+            let mut params = ParamStore::load_gtz(&ckpt)?;
+            let graph = eng.manifest().find(&model, &variant, "fwd", None)?.clone();
+            params.reorder_to(&graph.params.iter().map(|p| p.name.clone()).collect::<Vec<_>>())?;
+            let ev = greenformer::eval::eval_classifier(&eng, &graph, &params, ds.as_ref(), examples, hw)?;
+            println!(
+                "{model}/{variant} on {task}: acc {:.3} ({}/{})  {:.2} ms/batch  {:.0} ex/s",
+                ev.accuracy(),
+                ev.correct,
+                ev.total,
+                ev.sec_per_batch * 1e3,
+                ev.throughput
+            );
+        }
+        "run" => {
+            let cfg = ExperimentConfig::load(args.required("--config")?)?;
+            let eng = engine(&args)?;
+            run_config(&eng, &cfg)?;
+        }
+        "fig2" => {
+            let eng = engine(&args)?;
+            let quick = args.has("--quick");
+            let params = if quick {
+                ExpParams::quick()
+            } else {
+                ExpParams::full()
+            };
+            let use_case = args.get_or("--use-case", "post-training");
+            let result = match use_case.as_str() {
+                "by-design" => experiments::by_design(&eng, &params)?,
+                "post-training" => experiments::post_training(&eng, &params, Solver::Svd)?,
+                "icl" => experiments::icl(&eng, &params, None, if quick { 150 } else { 600 })?,
+                other => anyhow::bail!("unknown use case {other:?}"),
+            };
+            print!("{}", result.render());
+        }
+        "report-cost" => {
+            let rows = experiments::cost_table(&[0.10, 0.25, 0.50, 0.75]);
+            print!("{}", experiments::tables::render_cost_table(&rows));
+        }
+        "report-solvers" => {
+            let rows = experiments::solver_table(&[0.10, 0.25, 0.50, 0.75], 50);
+            print!("{}", experiments::tables::render_solver_table(&rows));
+        }
+        "serve-demo" => {
+            serve_demo(
+                &args,
+                args.parse_or("--requests", 200usize),
+                args.parse_or("--train-steps", 60usize),
+            )?;
+        }
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => {
+            anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}
+
+fn run_config(eng: &Engine, cfg: &ExperimentConfig) -> Result<()> {
+    let (ds, is_image) = find_task(&cfg.experiment.task, cfg.experiment.seed)?;
+    let hw = is_image.then_some((HW, HW, 1usize));
+    let model = &cfg.experiment.model;
+    let variant = cfg.factorize.variant_name();
+
+    println!("== {} ==", cfg.experiment.name);
+    // by-design: train the factorized variant directly from its init.
+    let mut trainer = Trainer::from_init(eng, model, &variant)?;
+    trainer.train_classifier(ds.as_ref(), cfg.train.steps, hw, |log| {
+        if log.step % cfg.train.log_every == 0 {
+            println!("  step {:>4}  loss {:.4}", log.step, log.loss);
+        }
+    })?;
+    let graph = eng.manifest().find(model, &variant, "fwd", None)?.clone();
+    let ev = greenformer::eval::eval_classifier(
+        eng,
+        &graph,
+        &trainer.params,
+        ds.as_ref(),
+        cfg.train.eval_examples,
+        hw,
+    )?;
+    println!(
+        "{model}/{variant} on {}: acc {:.3}  ({:.2} ms/batch)",
+        cfg.experiment.task,
+        ev.accuracy(),
+        ev.sec_per_batch * 1e3
+    );
+    Ok(())
+}
+
+fn serve_demo(args: &Args, requests: usize, train_steps: usize) -> Result<()> {
+    let art_dir = args
+        .get("--artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(greenformer::artifacts_dir);
+    let eng = engine(args)?;
+    let (ds, _) = find_task("polarity", 42)?;
+
+    // Train dense + one factorized variant briefly so routing has a ladder.
+    println!("preparing variants (training {train_steps} steps each)...");
+    let mut stores = HashMap::new();
+    for variant in ["dense", "led_r25"] {
+        let mut t = Trainer::from_init(&eng, "text", variant)?;
+        t.train_classifier(ds.as_ref(), train_steps, None, |_| {})?;
+        stores.insert(variant.to_string(), t.params);
+    }
+
+    let router = Router::new(
+        RoutePolicy::Adaptive {
+            quality: "dense".into(),
+            balanced: "dense".into(),
+            fast: "led_r25".into(),
+            low: 4,
+            high: 8,
+        },
+        stores.keys().cloned().collect(),
+    )?;
+
+    drop(eng);
+    let handle = serve_classifier(
+        art_dir,
+        "text",
+        stores,
+        router,
+        BatcherConfig::default(),
+        1024,
+    )?;
+
+    let mut joins = Vec::new();
+    for i in 0..requests {
+        let h = handle.clone();
+        let ex = ds.example(greenformer::data::Split::Eval, i);
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 3 == 0 { Tier::Fast } else { Tier::Quality };
+            let resp = h.classify(ex.tokens, tier)?;
+            Ok::<(bool, String), anyhow::Error>((resp.label == ex.label, resp.variant))
+        }));
+    }
+    let mut correct = 0usize;
+    let mut by_variant: HashMap<String, usize> = HashMap::new();
+    for j in joins {
+        let (ok, variant) = j.join().expect("client thread")?;
+        correct += ok as usize;
+        *by_variant.entry(variant).or_insert(0) += 1;
+    }
+    println!("served {requests} requests: {correct} correct");
+    println!("variant mix: {by_variant:?}");
+    println!("metrics: {}", handle.metrics.summary());
+    Ok(())
+}

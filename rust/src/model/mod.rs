@@ -1,0 +1,228 @@
+//! Module-tree reconstruction from parameter names.
+//!
+//! The toolkit is model-agnostic, like the PyTorch original: instead of a
+//! hard-coded architecture list, the module tree is recovered from the
+//! checkpoint's parameter names (`block0/attn/q/w`, `conv1/bias`, ...) and
+//! each leaf group is classified by its member tensors:
+//!
+//! | members              | layer                    |
+//! |----------------------|--------------------------|
+//! | `w` (2-D) [+ `bias`] | [`LayerKind::Linear`]    |
+//! | `w` (4-D) [+ `bias`] | [`LayerKind::Conv2d`]    |
+//! | `a` + `b` [+ `bias`] | LED / CED (factorized)   |
+//! | `table`              | [`LayerKind::Embedding`] |
+//! | `g` + `bias`         | [`LayerKind::LayerNorm`] |
+//!
+//! `auto_fact` consumes this classification to decide what to replace; the
+//! FLOPs model consumes it to cost a checkpoint without running it.
+
+use crate::tensor::ParamStore;
+
+/// What a parameter group is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Linear,
+    Conv2d,
+    /// Already-factorized linear (LED).
+    LedLinear,
+    /// Already-factorized conv (CED).
+    CedConv2d,
+    Embedding,
+    LayerNorm,
+    /// Anything unrecognized (left untouched by auto_fact).
+    Other,
+}
+
+/// One classified layer (parameter group).
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    /// Group prefix, e.g. `block0/attn/q` (empty for root-level tensors).
+    pub name: String,
+    pub kind: LayerKind,
+    /// For Linear/LED: (in, out). For Conv/CED: (kh·kw·cin, cout) — the
+    /// paper's rearrangement. For Embedding: (vocab, dim).
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Conv spatial kernel (kh, kw) when applicable.
+    pub kernel: Option<(usize, usize)>,
+    /// Factor rank for LED/CED layers.
+    pub rank: Option<usize>,
+}
+
+impl LayerInfo {
+    /// Parameter count of this layer's weights (excluding bias).
+    pub fn weight_params(&self) -> usize {
+        match self.kind {
+            LayerKind::LedLinear | LayerKind::CedConv2d => {
+                let r = self.rank.unwrap_or(0);
+                r * (self.in_dim + self.out_dim)
+            }
+            _ => self.in_dim * self.out_dim,
+        }
+    }
+}
+
+/// Group params by their prefix (everything before the last `/`) and
+/// classify each group. Groups appear in the store's order.
+pub fn classify(params: &ParamStore) -> Vec<LayerInfo> {
+    let mut groups: Vec<(String, Vec<(&str, &crate::tensor::Tensor)>)> = Vec::new();
+    for (name, t) in params.iter() {
+        let (prefix, leaf) = match name.rfind('/') {
+            Some(i) => (&name[..i], &name[i + 1..]),
+            None => ("", name),
+        };
+        match groups.last_mut() {
+            Some((p, members)) if p == prefix => members.push((leaf, t)),
+            _ => groups.push((prefix.to_string(), vec![(leaf, t)])),
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(name, members)| classify_group(name, &members))
+        .collect()
+}
+
+fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> LayerInfo {
+    let get = |leaf: &str| members.iter().find(|(l, _)| *l == leaf).map(|(_, t)| *t);
+    let (w, a, b, table, g) = (get("w"), get("a"), get("b"), get("table"), get("g"));
+
+    if let Some(w) = w {
+        if w.ndim() == 2 {
+            return LayerInfo {
+                name,
+                kind: LayerKind::Linear,
+                in_dim: w.shape[0],
+                out_dim: w.shape[1],
+                kernel: None,
+                rank: None,
+            };
+        }
+        if w.ndim() == 4 {
+            return LayerInfo {
+                name,
+                kind: LayerKind::Conv2d,
+                in_dim: w.shape[0] * w.shape[1] * w.shape[2],
+                out_dim: w.shape[3],
+                kernel: Some((w.shape[0], w.shape[1])),
+                rank: None,
+            };
+        }
+    }
+    if let (Some(a), Some(b)) = (a, b) {
+        if a.ndim() == 2 && b.ndim() == 2 {
+            return LayerInfo {
+                name,
+                kind: LayerKind::LedLinear,
+                in_dim: a.shape[0],
+                out_dim: b.shape[1],
+                kernel: None,
+                rank: Some(a.shape[1]),
+            };
+        }
+        if a.ndim() == 4 && b.ndim() == 4 {
+            return LayerInfo {
+                name,
+                kind: LayerKind::CedConv2d,
+                in_dim: a.shape[0] * a.shape[1] * a.shape[2],
+                out_dim: b.shape[3],
+                kernel: Some((a.shape[0], a.shape[1])),
+                rank: Some(a.shape[3]),
+            };
+        }
+    }
+    if let Some(t) = table {
+        return LayerInfo {
+            name,
+            kind: LayerKind::Embedding,
+            in_dim: t.shape.first().copied().unwrap_or(0),
+            out_dim: t.shape.get(1).copied().unwrap_or(0),
+            kernel: None,
+            rank: None,
+        };
+    }
+    if g.is_some() {
+        return LayerInfo {
+            name,
+            kind: LayerKind::LayerNorm,
+            in_dim: g.unwrap().len(),
+            out_dim: g.unwrap().len(),
+            kernel: None,
+            rank: None,
+        };
+    }
+    LayerInfo {
+        name,
+        kind: LayerKind::Other,
+        in_dim: 0,
+        out_dim: 0,
+        kernel: None,
+        rank: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Dtype, Tensor};
+
+    fn store() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("block0/attn/q/w", Tensor::zeros(&[64, 64], Dtype::F32));
+        s.insert("block0/attn/q/bias", Tensor::zeros(&[64], Dtype::F32));
+        s.insert("block0/fc1/a", Tensor::zeros(&[64, 16], Dtype::F32));
+        s.insert("block0/fc1/b", Tensor::zeros(&[16, 128], Dtype::F32));
+        s.insert("block0/fc1/bias", Tensor::zeros(&[128], Dtype::F32));
+        s.insert("conv1/w", Tensor::zeros(&[3, 3, 8, 16], Dtype::F32));
+        s.insert("conv1/bias", Tensor::zeros(&[16], Dtype::F32));
+        s.insert("conv2/a", Tensor::zeros(&[3, 3, 8, 4], Dtype::F32));
+        s.insert("conv2/b", Tensor::zeros(&[1, 1, 4, 16], Dtype::F32));
+        s.insert("conv2/bias", Tensor::zeros(&[16], Dtype::F32));
+        s.insert("embed/table", Tensor::zeros(&[512, 64], Dtype::F32));
+        s.insert("ln/g", Tensor::zeros(&[64], Dtype::F32));
+        s.insert("ln/bias", Tensor::zeros(&[64], Dtype::F32));
+        s
+    }
+
+    #[test]
+    fn classifies_all_kinds() {
+        let layers = classify(&store());
+        let by_name: std::collections::HashMap<_, _> =
+            layers.iter().map(|l| (l.name.clone(), l)).collect();
+        assert_eq!(by_name["block0/attn/q"].kind, LayerKind::Linear);
+        assert_eq!(by_name["block0/fc1"].kind, LayerKind::LedLinear);
+        assert_eq!(by_name["block0/fc1"].rank, Some(16));
+        assert_eq!(by_name["conv1"].kind, LayerKind::Conv2d);
+        assert_eq!(by_name["conv1"].in_dim, 72);
+        assert_eq!(by_name["conv2"].kind, LayerKind::CedConv2d);
+        assert_eq!(by_name["conv2"].rank, Some(4));
+        assert_eq!(by_name["embed"].kind, LayerKind::Embedding);
+        assert_eq!(by_name["ln"].kind, LayerKind::LayerNorm);
+    }
+
+    #[test]
+    fn weight_params_formulas() {
+        let layers = classify(&store());
+        let by_name: std::collections::HashMap<_, _> =
+            layers.iter().map(|l| (l.name.clone(), l)).collect();
+        assert_eq!(by_name["block0/attn/q"].weight_params(), 64 * 64);
+        assert_eq!(by_name["block0/fc1"].weight_params(), 16 * (64 + 128));
+        assert_eq!(by_name["conv2"].weight_params(), 4 * (72 + 16));
+    }
+
+    #[test]
+    fn root_level_params_group_to_empty_prefix() {
+        let mut s = ParamStore::new();
+        s.insert("w", Tensor::zeros(&[4, 4], Dtype::F32));
+        let layers = classify(&s);
+        assert_eq!(layers.len(), 1);
+        assert_eq!(layers[0].name, "");
+        assert_eq!(layers[0].kind, LayerKind::Linear);
+    }
+
+    #[test]
+    fn unknown_group_is_other() {
+        let mut s = ParamStore::new();
+        s.insert("thing/weird", Tensor::zeros(&[4], Dtype::F32));
+        assert_eq!(classify(&s)[0].kind, LayerKind::Other);
+    }
+}

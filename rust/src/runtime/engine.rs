@@ -1,0 +1,298 @@
+//! The execution engine: compiled-executable cache + literal marshalling.
+//!
+//! One `Engine` per process. Executables compile lazily on first use and are
+//! cached for the process lifetime (compilation of the larger train graphs
+//! takes seconds; execution takes milliseconds — never recompile on the hot
+//! path). All methods take `&self`; the cache is behind a `Mutex`, execution
+//! itself runs outside the lock so independent graphs can run concurrently
+//! from the coordinator's worker tasks.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context as _};
+
+use super::manifest::{GraphSpec, Manifest, TensorSpec};
+use crate::tensor::{Data, Dtype, ParamStore, Tensor};
+use crate::Result;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Engine over the default artifacts directory (see [`crate::artifacts_dir`]).
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for a graph.
+    pub fn executable(&self, graph: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(graph) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: first touches of different graphs
+        // shouldn't serialize behind one compilation.
+        let spec = self.manifest.graph(graph)?;
+        let path = self.manifest.graph_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {graph}: {e}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(graph.to_string())
+            .or_insert_with(|| exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Pre-compile a set of graphs (the coordinator warms its variants up
+    /// front so first requests don't pay compile latency).
+    pub fn warmup(&self, graphs: &[&str]) -> Result<()> {
+        for g in graphs {
+            self.executable(g)?;
+        }
+        Ok(())
+    }
+
+    // -- marshalling --------------------------------------------------------
+
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let ty = match t.dtype() {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.raw_bytes())
+            .map_err(|e| anyhow!("literal from tensor shape {:?}: {e}", t.shape))
+    }
+
+    pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => Data::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e}"))?,
+            ),
+            xla::ElementType::S32 => Data::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e}"))?,
+            ),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+
+    fn check_spec(t: &Tensor, spec: &TensorSpec, what: &str) -> Result<()> {
+        if t.shape != spec.shape {
+            bail!(
+                "{what} {:?}: shape {:?} does not match spec {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+        }
+        if t.dtype() != spec.dtype()? {
+            bail!("{what} {:?}: dtype mismatch", spec.name);
+        }
+        Ok(())
+    }
+
+    /// Execute a graph and decompose the (tupled) result into tensors.
+    fn execute(&self, graph: &GraphSpec, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        if args.len() != graph.expected_arg_count() {
+            bail!(
+                "graph {} expects {} args, got {}",
+                graph.name,
+                graph.expected_arg_count(),
+                args.len()
+            );
+        }
+        let exe = self.executable(&graph.name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {}: {e}", graph.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", graph.name))?;
+        // Graphs are lowered with return_tuple=True: decompose host-side.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {}: {e}", graph.name))?;
+        parts.iter().map(Self::literal_to_tensor).collect()
+    }
+
+    /// Run a forward graph: `outputs = f(params, inputs)`.
+    ///
+    /// `params` must match the graph's param list (names, order, shapes) —
+    /// the flatten_params contract. Returns the graph outputs.
+    pub fn run_fwd(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if graph.kind != "fwd" {
+            bail!("run_fwd on non-fwd graph {}", graph.name);
+        }
+        let mut args = Vec::with_capacity(graph.expected_arg_count());
+        self.marshal_params(graph, params, &mut args)?;
+        if inputs.len() != graph.inputs.len() {
+            bail!(
+                "graph {} wants {} inputs, got {}",
+                graph.name,
+                graph.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&graph.inputs) {
+            Self::check_spec(t, spec, "input")?;
+            args.push(Self::tensor_to_literal(t)?);
+        }
+        self.execute(graph, &args)
+    }
+
+    /// Run one fused train step:
+    /// `(params', m', v', loss) = step(params, m, v, step_no, batch...)`.
+    ///
+    /// Updates `params`, `m`, `v` in place and returns the loss.
+    pub fn run_train_step(
+        &self,
+        graph: &GraphSpec,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        step_no: f32,
+        batch: &[Tensor],
+    ) -> Result<f32> {
+        if graph.kind != "train" {
+            bail!("run_train_step on non-train graph {}", graph.name);
+        }
+        let np = graph.params.len();
+        let mut args = Vec::with_capacity(graph.expected_arg_count());
+        self.marshal_params(graph, params, &mut args)?;
+        self.marshal_params(graph, m, &mut args)?;
+        self.marshal_params(graph, v, &mut args)?;
+        args.push(Self::tensor_to_literal(&Tensor::scalar_f32(step_no))?);
+        if batch.len() != graph.inputs.len() {
+            bail!(
+                "graph {} wants {} batch tensors, got {}",
+                graph.name,
+                graph.inputs.len(),
+                batch.len()
+            );
+        }
+        for (t, spec) in batch.iter().zip(&graph.inputs) {
+            Self::check_spec(t, spec, "batch input")?;
+            args.push(Self::tensor_to_literal(t)?);
+        }
+        let mut out = self.execute(graph, &args)?;
+        if out.len() != 3 * np + 1 {
+            bail!(
+                "train graph {} returned {} tensors, expected {}",
+                graph.name,
+                out.len(),
+                3 * np + 1
+            );
+        }
+        let loss_t = out.pop().unwrap();
+        let loss = loss_t.as_f32()?[0];
+        // Write back in flat order: params, m, v.
+        for (dst_store, chunk) in [(&mut *params, 0), (&mut *m, 1), (&mut *v, 2)] {
+            for (i, spec) in graph.params.iter().enumerate() {
+                let t = std::mem::replace(
+                    &mut out[chunk * np + i],
+                    Tensor::zeros(&[], Dtype::F32),
+                );
+                debug_assert_eq!(t.shape, spec.shape, "update for {}", spec.name);
+                dst_store.insert(spec.name.clone(), t);
+            }
+        }
+        Ok(loss)
+    }
+
+    fn marshal_params(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        args: &mut Vec<xla::Literal>,
+    ) -> Result<()> {
+        if params.len() != graph.params.len() {
+            bail!(
+                "graph {} wants {} params, store has {}",
+                graph.name,
+                graph.params.len(),
+                params.len()
+            );
+        }
+        for spec in &graph.params {
+            let t = params
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("param {:?} missing for graph {}", spec.name, graph.name))?;
+            Self::check_spec(t, spec, "param")
+                .with_context(|| format!("marshalling params for {}", graph.name))?;
+            args.push(Self::tensor_to_literal(t)?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = Engine::tensor_to_literal(&t).unwrap();
+        let back = Engine::literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[4], vec![-1, 0, 7, 42]);
+        let lit = Engine::tensor_to_literal(&t).unwrap();
+        assert_eq!(Engine::literal_to_tensor(&lit).unwrap(), t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.25);
+        let lit = Engine::tensor_to_literal(&t).unwrap();
+        assert_eq!(Engine::literal_to_tensor(&lit).unwrap(), t);
+    }
+}

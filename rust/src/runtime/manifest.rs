@@ -1,0 +1,319 @@
+//! `artifacts/manifest.json` — the machine-readable index the AOT exporter
+//! writes and the runtime trusts. One `GraphSpec` per lowered HLO module.
+//! Parsed with the in-tree JSON codec ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context as _};
+
+use crate::tensor::Dtype;
+use crate::util::Json;
+use crate::Result;
+
+/// Shape + dtype of one graph input/output/parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn dtype(&self) -> Result<Dtype> {
+        Dtype::from_tag(&self.dtype)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered graph: fwd or train, for one (model, variant, batch).
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub variant: String,
+    /// "fwd" | "train"
+    pub kind: String,
+    pub batch: usize,
+    /// Parameter order — the flatten_params contract with Python.
+    pub params: Vec<TensorSpec>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Resolved rank per factorized layer (layer prefix -> r).
+    pub ranks: BTreeMap<String, usize>,
+    pub n_params: usize,
+    /// Model config (vocab/seq/d/... depending on model).
+    pub config: BTreeMap<String, usize>,
+    pub sha256_16: String,
+}
+
+impl GraphSpec {
+    /// Total literal count the executable expects:
+    /// fwd: params + inputs; train: 3*params (params, m, v) + step + inputs.
+    pub fn expected_arg_count(&self) -> usize {
+        match self.kind.as_str() {
+            "train" => 3 * self.params.len() + 1 + self.inputs.len(),
+            _ => self.params.len() + self.inputs.len(),
+        }
+    }
+
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("graph {} config missing key {key:?}", self.name))
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let mut ranks = BTreeMap::new();
+        if let Some(r) = v.get("ranks") {
+            for (k, rv) in r.as_obj()? {
+                ranks.insert(k.clone(), rv.as_usize()?);
+            }
+        }
+        let mut config = BTreeMap::new();
+        if let Some(c) = v.get("config") {
+            for (k, cv) in c.as_obj()? {
+                if let Ok(u) = cv.as_usize() {
+                    config.insert(k.clone(), u);
+                }
+            }
+        }
+        Ok(GraphSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            file: v.req("file")?.as_str()?.to_string(),
+            model: v.req("model")?.as_str()?.to_string(),
+            variant: v.req("variant")?.as_str()?.to_string(),
+            kind: v.req("kind")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            params: specs("params")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            ranks,
+            n_params: v.usize_or("n_params", 0),
+            config,
+            sha256_16: v.str_or("sha256_16", ""),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    pub model: String,
+    pub variant: String,
+    pub file: String,
+    pub n_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: usize,
+    pub graphs: Vec<GraphSpec>,
+    pub checkpoints: Vec<CheckpointSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} — run `make artifacts`?"))?;
+        let mut m = Self::parse(&text).context("parsing manifest.json")?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v.req("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let graphs = v
+            .req("graphs")?
+            .as_arr()?
+            .iter()
+            .map(GraphSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut checkpoints = Vec::new();
+        if let Some(cs) = v.get("checkpoints") {
+            for c in cs.as_arr()? {
+                checkpoints.push(CheckpointSpec {
+                    model: c.req("model")?.as_str()?.to_string(),
+                    variant: c.req("variant")?.as_str()?.to_string(),
+                    file: c.req("file")?.as_str()?.to_string(),
+                    n_params: c.usize_or("n_params", 0),
+                });
+            }
+        }
+        Ok(Manifest {
+            format,
+            graphs,
+            checkpoints,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .iter()
+            .find(|g| g.name == name)
+            .ok_or_else(|| anyhow!("graph {name:?} not in manifest ({} graphs)", self.graphs.len()))
+    }
+
+    /// Find a graph by (model, variant, kind) with the largest batch <= cap
+    /// (or the largest available when `cap` is None).
+    pub fn find(
+        &self,
+        model: &str,
+        variant: &str,
+        kind: &str,
+        cap: Option<usize>,
+    ) -> Result<&GraphSpec> {
+        self.graphs
+            .iter()
+            .filter(|g| g.model == model && g.variant == variant && g.kind == kind)
+            .filter(|g| cap.map_or(true, |c| g.batch <= c))
+            .max_by_key(|g| g.batch)
+            .ok_or_else(|| {
+                anyhow!("no graph for model={model} variant={variant} kind={kind} cap={cap:?}")
+            })
+    }
+
+    /// All distinct variants available for a model.
+    pub fn variants(&self, model: &str) -> Vec<String> {
+        let mut vs: Vec<String> = self
+            .graphs
+            .iter()
+            .filter(|g| g.model == model)
+            .map(|g| g.variant.clone())
+            .collect();
+        vs.sort();
+        vs.dedup();
+        vs
+    }
+
+    pub fn checkpoint(&self, model: &str, variant: &str) -> Result<PathBuf> {
+        self.checkpoints
+            .iter()
+            .find(|c| c.model == model && c.variant == variant)
+            .map(|c| self.dir.join(&c.file))
+            .ok_or_else(|| anyhow!("no init checkpoint for {model}/{variant}"))
+    }
+
+    pub fn graph_path(&self, g: &GraphSpec) -> PathBuf {
+        self.dir.join(&g.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+            "format": 1,
+            "graphs": [
+                {"name": "m_dense_fwd_b1", "file": "a.hlo.txt", "model": "m",
+                 "variant": "dense", "kind": "fwd", "batch": 1,
+                 "params": [{"name": "w", "shape": [2,2], "dtype": "f32"}],
+                 "inputs": [{"name": "x", "shape": [1,2], "dtype": "f32"}],
+                 "outputs": [{"name": "out", "shape": [1,2], "dtype": "f32"}],
+                 "ranks": {"fc": 8},
+                 "n_params": 4, "config": {"d": 64}},
+                {"name": "m_dense_fwd_b8", "file": "b.hlo.txt", "model": "m",
+                 "variant": "dense", "kind": "fwd", "batch": 8,
+                 "params": [{"name": "w", "shape": [2,2], "dtype": "f32"}],
+                 "inputs": [{"name": "x", "shape": [8,2], "dtype": "f32"}],
+                 "outputs": [{"name": "out", "shape": [8,2], "dtype": "f32"}],
+                 "n_params": 4},
+                {"name": "m_dense_train_b8", "file": "c.hlo.txt", "model": "m",
+                 "variant": "dense", "kind": "train", "batch": 8,
+                 "params": [{"name": "w", "shape": [2,2], "dtype": "f32"}],
+                 "inputs": [{"name": "x", "shape": [8,2], "dtype": "f32"},
+                             {"name": "y", "shape": [8], "dtype": "i32"}],
+                 "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+                 "n_params": 4}
+            ],
+            "checkpoints": [
+                {"model": "m", "variant": "dense", "file": "init/m.gtz", "n_params": 4}
+            ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn find_prefers_largest_batch_under_cap() {
+        let m = toy_manifest();
+        assert_eq!(m.find("m", "dense", "fwd", None).unwrap().batch, 8);
+        assert_eq!(m.find("m", "dense", "fwd", Some(4)).unwrap().batch, 1);
+        assert!(m.find("m", "dense", "fwd", Some(0)).is_err());
+        assert!(m.find("m", "led_r25", "fwd", None).is_err());
+    }
+
+    #[test]
+    fn arg_count_formula() {
+        let m = toy_manifest();
+        assert_eq!(m.graph("m_dense_fwd_b1").unwrap().expected_arg_count(), 2);
+        // train: 3*1 params + step + 2 inputs
+        assert_eq!(m.graph("m_dense_train_b8").unwrap().expected_arg_count(), 6);
+    }
+
+    #[test]
+    fn ranks_and_config_parse() {
+        let m = toy_manifest();
+        let g = m.graph("m_dense_fwd_b1").unwrap();
+        assert_eq!(g.ranks["fc"], 8);
+        assert_eq!(g.config_usize("d").unwrap(), 64);
+        assert!(g.config_usize("missing").is_err());
+    }
+
+    #[test]
+    fn variants_and_checkpoints() {
+        let m = toy_manifest();
+        assert_eq!(m.variants("m"), vec!["dense".to_string()]);
+        assert!(m.checkpoint("m", "dense").is_ok());
+        assert!(m.checkpoint("m", "led_r10").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        assert!(Manifest::parse(r#"{"format": 9, "graphs": []}"#).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_dtype() {
+        let s = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: "f32".into() };
+        assert_eq!(s.dtype().unwrap(), Dtype::F32);
+        assert_eq!(s.numel(), 6);
+        let bad = TensorSpec { name: "x".into(), shape: vec![], dtype: "f64".into() };
+        assert!(bad.dtype().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute forever.
+//!
+//! The `xla` crate wraps the PJRT C API: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+//!
+//! Python builds the artifacts once (`make artifacts`); this module is the
+//! only place the process touches XLA, and nothing here ever calls back into
+//! Python.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{GraphSpec, Manifest, TensorSpec};

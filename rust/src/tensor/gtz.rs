@@ -1,0 +1,166 @@
+//! GTZ checkpoint format — the byte-level contract with `python/compile/aot.py`.
+//!
+//! ```text
+//! "GTZ1" | u32 count | repeat count times:
+//!   u16 name_len | name utf8 | u8 dtype(0=f32,1=i32) | u8 ndim
+//!   | ndim x u64 dims | raw little-endian data
+//! ```
+//!
+//! All integers little-endian. `python/tests/test_aot.py::test_gtz_roundtrip`
+//! pins the same layout from the Python side.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context as _};
+
+use super::{Data, Dtype, ParamStore, Tensor};
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"GTZ1";
+
+pub fn read(path: impl AsRef<Path>) -> Result<ParamStore> {
+    let path = path.as_ref();
+    let buf = fs::read(path).with_context(|| format!("reading GTZ {path:?}"))?;
+    parse(&buf).with_context(|| format!("parsing GTZ {path:?}"))
+}
+
+pub fn parse(buf: &[u8]) -> Result<ParamStore> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > buf.len() {
+            bail!("GTZ truncated at offset {} (want {n} bytes)", *off);
+        }
+        let s = &buf[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+
+    if take(&mut off, 4)? != MAGIC {
+        bail!("bad GTZ magic");
+    }
+    let count = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+    let mut store = ParamStore::new();
+    for _ in 0..count {
+        let nlen = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(&mut off, nlen)?)
+            .map_err(|e| anyhow!("bad tensor name utf8: {e}"))?
+            .to_string();
+        let dtype = Dtype::from_code(take(&mut off, 1)?[0])?;
+        let ndim = take(&mut off, 1)?[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = take(&mut off, n * dtype.size_bytes())?;
+        let data = match dtype {
+            Dtype::F32 => Data::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+            Dtype::I32 => Data::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            ),
+        };
+        store.insert(name, Tensor { shape, data });
+    }
+    if off != buf.len() {
+        bail!("GTZ has {} trailing bytes", buf.len() - off);
+    }
+    Ok(store)
+}
+
+pub fn write(path: impl AsRef<Path>, store: &ParamStore) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let mut f = fs::File::create(path).with_context(|| format!("creating GTZ {path:?}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(store.len() as u32).to_le_bytes())?;
+    for (name, t) in store.iter() {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long: {name:?}");
+        }
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype().code(), t.ndim() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        f.write_all(t.raw_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("block0/w", Tensor::from_f32(&[2, 3], vec![1., -2., 3.5, 0., 1e-9, 6.]));
+        s.insert("block0/bias", Tensor::from_f32(&[3], vec![0.1, 0.2, 0.3]));
+        s.insert("toks", Tensor::from_i32(&[4], vec![1, -5, 7, 0]));
+        s.insert("step", Tensor::scalar_f32(12.0));
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gtz_test_{}", std::process::id()));
+        let path = dir.join("s.gtz");
+        let s = sample_store();
+        write(&path, &s).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.len(), s.len());
+        for ((n1, t1), (n2, t2)) in s.iter().zip(back.iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join(format!("gtz_trunc_{}", std::process::id()));
+        let path = dir.join("s.gtz");
+        write(&path, &sample_store()).unwrap();
+        let buf = std::fs::read(&path).unwrap();
+        for cut in [5, 9, 12, buf.len() - 1] {
+            assert!(parse(&buf[..cut]).is_err(), "cut at {cut} should fail");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let dir = std::env::temp_dir().join(format!("gtz_trail_{}", std::process::id()));
+        let path = dir.join("s.gtz");
+        write(&path, &sample_store()).unwrap();
+        let mut buf = std::fs::read(&path).unwrap();
+        buf.push(0);
+        assert!(parse(&buf).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("gtz_empty_{}", std::process::id()));
+        let path = dir.join("e.gtz");
+        write(&path, &ParamStore::new()).unwrap();
+        assert_eq!(read(&path).unwrap().len(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,361 @@
+//! Tensor container + named parameter store + the GTZ checkpoint format.
+//!
+//! `Tensor` is deliberately simple: a shape plus row-major data in one of the
+//! two dtypes the artifact graphs use (f32, i32). Heavy math lives in
+//! [`crate::linalg`] on 2-D views; the runtime marshals `Tensor`s to PJRT
+//! literals zero-copy from the raw bytes.
+
+pub mod gtz;
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// Element type of a [`Tensor`]. Matches the manifest's `"f32"`/`"i32"` tags
+/// and GTZ dtype codes 0/1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        match c {
+            0 => Ok(Dtype::F32),
+            1 => Ok(Dtype::I32),
+            _ => bail!("unknown GTZ dtype code {c}"),
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Result<Self> {
+        match tag {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype tag {tag:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Row-major dense tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize], dtype: Dtype) -> Self {
+        let n = shape.iter().product();
+        let data = match dtype {
+            Dtype::F32 => Data::F32(vec![0.0; n]),
+            Dtype::I32 => Data::I32(vec![0; n]),
+        };
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Data::F32(_) => Dtype::F32,
+            Data::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Raw little-endian bytes (the in-memory layout; x86/aarch64 are LE).
+    pub fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            Data::F32(v) => bytemuck_cast_slice_f32(v),
+            Data::I32(v) => bytemuck_cast_slice_i32(v),
+        }
+    }
+
+    /// Reinterpret as a 2-D (rows, cols) view, collapsing leading dims.
+    /// For a conv HWIO weight (kh, kw, cin, cout) this yields the paper's
+    /// (kh*kw*cin, cout) rearrangement.
+    pub fn as_matrix_2d(&self) -> Result<(usize, usize, &[f32])> {
+        if self.ndim() < 2 {
+            bail!("need >=2 dims, got {:?}", self.shape);
+        }
+        let cols = *self.shape.last().unwrap();
+        let rows = self.len() / cols;
+        Ok((rows, cols, self.as_f32()?))
+    }
+
+    /// Frobenius norm (f32 tensors).
+    pub fn fro_norm(&self) -> f64 {
+        match &self.data {
+            Data::F32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+            Data::I32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+        }
+    }
+}
+
+fn bytemuck_cast_slice_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_cast_slice_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// An ordered, named collection of tensors — a model checkpoint.
+///
+/// Ordering follows the Python `flatten_params` contract (depth-first,
+/// key-sorted), which is also the order the AOT manifest records and the
+/// order the runtime marshals literals in. `ParamStore` preserves insertion
+/// order and supports name lookup.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if let Some(i) = self.index_of(&name) {
+            self.tensors[i] = t;
+        } else {
+            self.names.push(name);
+            self.tensors.push(t);
+        }
+    }
+
+    /// Remove a tensor by name, returning it.
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        let i = self.index_of(name)?;
+        self.names.remove(i);
+        Some(self.tensors.remove(i))
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index_of(name).map(|i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.index_of(name).map(move |i| &mut self.tensors[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(String::as_str).zip(self.tensors.iter())
+    }
+
+    /// Total number of scalar parameters.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::len).sum()
+    }
+
+    /// Re-sort into the canonical flatten_params order (depth-first sorted
+    /// keys == plain lexicographic sort on the slash-joined names, given '/'
+    /// sorts below all alphanumerics used in our names).
+    pub fn sort_canonical(&mut self) {
+        let mut idx: Vec<usize> = (0..self.names.len()).collect();
+        idx.sort_by(|&a, &b| self.names[a].cmp(&self.names[b]));
+        self.names = idx.iter().map(|&i| self.names[i].clone()).collect();
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        // drain in index order without cloning tensor data
+        let mut old: Vec<Option<Tensor>> = std::mem::take(&mut self.tensors).into_iter().map(Some).collect();
+        for &i in &idx {
+            tensors.push(old[i].take().expect("index used twice"));
+        }
+        self.tensors = tensors;
+    }
+
+    /// Reorder to match an explicit name list (the manifest's param order).
+    pub fn reorder_to(&mut self, order: &[String]) -> Result<()> {
+        if order.len() != self.names.len() {
+            bail!(
+                "param count mismatch: store has {}, manifest wants {}",
+                self.names.len(),
+                order.len()
+            );
+        }
+        let mut new_tensors = Vec::with_capacity(order.len());
+        for name in order {
+            let i = self
+                .index_of(name)
+                .ok_or_else(|| anyhow!("param {name:?} missing from store"))?;
+            new_tensors.push(self.tensors[i].clone());
+        }
+        self.names = order.to_vec();
+        self.tensors = new_tensors;
+        Ok(())
+    }
+
+    pub fn load_gtz(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        gtz::read(path)
+    }
+
+    pub fn save_gtz(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        gtz::write(path, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_basics() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        let (r, c, d) = t.as_matrix_2d().unwrap();
+        assert_eq!((r, c), (2, 3));
+        assert_eq!(d[4], 5.0);
+        assert_eq!(t.raw_bytes().len(), 24);
+    }
+
+    #[test]
+    fn conv_weight_collapses_to_paper_rearrangement() {
+        let t = Tensor::zeros(&[3, 3, 8, 16], Dtype::F32);
+        let (r, c, _) = t.as_matrix_2d().unwrap();
+        assert_eq!((r, c), (72, 16)); // (kh*kw*cin, cout)
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar_f32(7.0);
+        assert_eq!(t.ndim(), 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn store_insert_get_replace() {
+        let mut s = ParamStore::new();
+        s.insert("a/w", Tensor::zeros(&[2, 2], Dtype::F32));
+        s.insert("a/bias", Tensor::zeros(&[2], Dtype::F32));
+        assert_eq!(s.len(), 2);
+        s.insert("a/w", Tensor::from_f32(&[1], vec![9.0]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("a/w").unwrap().len(), 1);
+        assert!(s.remove("a/w").is_some());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn sort_canonical_matches_python_flatten_order() {
+        let mut s = ParamStore::new();
+        for n in ["b/y", "a", "b/x"] {
+            s.insert(n, Tensor::zeros(&[1], Dtype::F32));
+        }
+        s.sort_canonical();
+        assert_eq!(s.names(), &["a", "b/x", "b/y"]);
+    }
+
+    #[test]
+    fn reorder_to_manifest_order() {
+        let mut s = ParamStore::new();
+        s.insert("x", Tensor::from_f32(&[1], vec![1.0]));
+        s.insert("y", Tensor::from_f32(&[1], vec![2.0]));
+        s.reorder_to(&["y".into(), "x".into()]).unwrap();
+        assert_eq!(s.names(), &["y", "x"]);
+        assert_eq!(s.tensors[0].as_f32().unwrap()[0], 2.0);
+        assert!(s.reorder_to(&["y".into()]).is_err());
+        assert!(s.clone().reorder_to(&["y".into(), "z".into()]).is_err());
+    }
+
+    #[test]
+    fn n_params_sums() {
+        let mut s = ParamStore::new();
+        s.insert("w", Tensor::zeros(&[4, 5], Dtype::F32));
+        s.insert("b", Tensor::zeros(&[5], Dtype::F32));
+        assert_eq!(s.n_params(), 25);
+    }
+}

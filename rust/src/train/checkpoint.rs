@@ -1,0 +1,58 @@
+//! Checkpoint management: named GTZ snapshots under a run directory.
+
+use std::path::{Path, PathBuf};
+
+use crate::tensor::ParamStore;
+use crate::Result;
+
+/// Save `params` as `<dir>/<name>.gtz`, creating directories as needed.
+pub fn save(dir: impl AsRef<Path>, name: &str, params: &ParamStore) -> Result<PathBuf> {
+    let path = dir.as_ref().join(format!("{name}.gtz"));
+    params.save_gtz(&path)?;
+    Ok(path)
+}
+
+/// Load `<dir>/<name>.gtz`.
+pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<ParamStore> {
+    ParamStore::load_gtz(dir.as_ref().join(format!("{name}.gtz")))
+}
+
+/// List checkpoint names in a directory (without the .gtz suffix).
+pub fn list(dir: impl AsRef<Path>) -> Vec<String> {
+    let Ok(entries) = std::fs::read_dir(dir.as_ref()) else {
+        return vec![];
+    };
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            name.strip_suffix(".gtz").map(String::from)
+        })
+        .collect();
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Dtype, Tensor};
+
+    #[test]
+    fn save_load_list() {
+        let dir = std::env::temp_dir().join(format!("gf_ckpt_{}", std::process::id()));
+        let mut p = ParamStore::new();
+        p.insert("w", Tensor::zeros(&[2, 2], Dtype::F32));
+        save(&dir, "step100", &p).unwrap();
+        save(&dir, "step200", &p).unwrap();
+        assert_eq!(list(&dir), vec!["step100", "step200"]);
+        let back = load(&dir, "step100").unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn list_missing_dir_is_empty() {
+        assert!(list("/nonexistent/path/xyz").is_empty());
+    }
+}

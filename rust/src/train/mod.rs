@@ -1,0 +1,138 @@
+//! Training driver: the Rust loop around the fused `train_step` artifacts.
+//!
+//! The AOT graph does everything numeric (fwd + bwd through the Pallas
+//! custom VJPs + Adam); this module owns the loop: data iteration, step
+//! counting, loss logging, and GTZ checkpointing. By-design training is
+//! just: load the `led_rXX` init checkpoint, drive its train graph.
+
+pub mod checkpoint;
+
+use crate::data::{batch, Dataset, Split};
+use crate::runtime::{Engine, GraphSpec};
+use crate::tensor::{Dtype, ParamStore, Tensor};
+use crate::Result;
+
+/// Loss history entry.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub seconds: f64,
+}
+
+/// Training state for one (model, variant).
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    graph: GraphSpec,
+    pub params: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+    pub step: usize,
+    pub history: Vec<StepLog>,
+}
+
+impl<'e> Trainer<'e> {
+    /// Start from a checkpoint (usually the JAX-exported init).
+    pub fn new(engine: &'e Engine, graph: &GraphSpec, mut params: ParamStore) -> Result<Self> {
+        let order: Vec<String> = graph.params.iter().map(|p| p.name.clone()).collect();
+        params.reorder_to(&order)?;
+        let zeros = |store: &ParamStore| {
+            let mut z = ParamStore::new();
+            for (name, t) in store.iter() {
+                z.insert(name, Tensor::zeros(&t.shape, Dtype::F32));
+            }
+            z
+        };
+        let m = zeros(&params);
+        let v = zeros(&params);
+        Ok(Self {
+            engine,
+            graph: graph.clone(),
+            params,
+            m,
+            v,
+            step: 0,
+            history: Vec::new(),
+        })
+    }
+
+    /// Load the manifest's init checkpoint for (model, variant) and build a
+    /// trainer on its train graph.
+    pub fn from_init(engine: &'e Engine, model: &str, variant: &str) -> Result<Self> {
+        let graph = engine.manifest().find(model, variant, "train", None)?.clone();
+        let ckpt = engine.manifest().checkpoint(model, variant)?;
+        let params = ParamStore::load_gtz(ckpt)?;
+        Self::new(engine, &graph, params)
+    }
+
+    pub fn graph(&self) -> &GraphSpec {
+        &self.graph
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.graph.batch
+    }
+
+    /// One optimizer step on a batch; returns the loss.
+    pub fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
+        self.step += 1;
+        let t0 = std::time::Instant::now();
+        let loss = self.engine.run_train_step(
+            &self.graph,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
+            self.step as f32,
+            batch,
+        )?;
+        self.history.push(StepLog {
+            step: self.step,
+            loss,
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+        Ok(loss)
+    }
+
+    /// Train a classifier for `steps` over a dataset, streaming fresh
+    /// synthetic batches (no epoch structure needed — infinite data).
+    pub fn train_classifier(
+        &mut self,
+        ds: &dyn Dataset,
+        steps: usize,
+        image_hw: Option<(usize, usize, usize)>,
+        mut log: impl FnMut(&StepLog),
+    ) -> Result<()> {
+        let bsz = self.batch_size();
+        for i in 0..steps {
+            let (x, y) = batch(ds, Split::Train, i * bsz, bsz, image_hw);
+            self.train_step(&[x, y])?;
+            log(self.history.last().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Pretrain the causal LM on the ICL corpus (single-tensor batches).
+    pub fn train_lm(
+        &mut self,
+        corpus: &crate::data::lm::LmCorpus,
+        steps: usize,
+        mut log: impl FnMut(&StepLog),
+    ) -> Result<()> {
+        let bsz = self.batch_size();
+        for i in 0..steps {
+            let x = corpus.batch(i * bsz, bsz);
+            self.train_step(&[x])?;
+            log(self.history.last().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the last `n` steps (resilience to step noise).
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|l| l.loss).sum::<f32>() / tail.len() as f32
+    }
+}

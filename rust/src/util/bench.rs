@@ -1,0 +1,163 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` binary with `harness = false`; those
+//! binaries use this module: warmup, timed iterations with outlier-robust
+//! statistics, and a stable text report (`name  median ± iqr  mean  n`).
+//! Honors the standard `--bench <filter>` arguments cargo passes through.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub n: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p25_s: f64,
+    pub p75_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  min {:>12}  (n={})",
+            self.name,
+            fmt_secs(self.median_s),
+            fmt_secs(self.mean_s),
+            fmt_secs(self.min_s),
+            self.n
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// A bench group; collects stats and prints the report on drop.
+pub struct Bench {
+    group: String,
+    filter: Option<String>,
+    results: Vec<BenchStats>,
+    /// Target measurement budget per case, seconds.
+    pub budget_s: f64,
+    /// Max iterations per case.
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // cargo bench passes e.g. `--bench` plus user filters; take the last
+        // non-flag argument as a substring filter.
+        let filter = std::env::args()
+            .skip(1)
+            .filter(|a| !a.starts_with('-'))
+            .next_back();
+        Self {
+            group: group.to_string(),
+            filter,
+            results: Vec::new(),
+            budget_s: 3.0,
+            max_iters: 100,
+            min_iters: 5,
+        }
+    }
+
+    /// Time `f`, reporting under `name`. Returns the stats (also stored).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Option<BenchStats> {
+        let full = format!("{}/{}", self.group, name);
+        if let Some(flt) = &self.filter {
+            if !full.contains(flt.as_str()) {
+                return None;
+            }
+        }
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_s / once) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut laps = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            laps.push(t.elapsed().as_secs_f64());
+        }
+        laps.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| laps[((p * (laps.len() - 1) as f64).round() as usize).min(laps.len() - 1)];
+        let stats = BenchStats {
+            name: full,
+            n: iters,
+            mean_s: laps.iter().sum::<f64>() / iters as f64,
+            median_s: pct(0.50),
+            p25_s: pct(0.25),
+            p75_s: pct(0.75),
+            min_s: laps[0],
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats.clone());
+        Some(stats)
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Median-ratio helper: time(a)/time(b) from recorded results.
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let find = |n: &str| {
+            self.results
+                .iter()
+                .find(|r| r.name.ends_with(n))
+                .map(|r| r.median_s)
+        };
+        Some(find(slow)? / find(fast)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new("test");
+        b.budget_s = 0.01;
+        b.max_iters = 8;
+        let s = b.bench("noop", || std::hint::black_box(1 + 1)).unwrap();
+        assert!(s.n >= 5);
+        assert!(s.median_s >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut b = Bench::new("test");
+        b.budget_s = 0.01;
+        b.max_iters = 6;
+        b.bench("slow", || std::thread::sleep(std::time::Duration::from_micros(300)));
+        b.bench("fast", || std::thread::sleep(std::time::Duration::from_micros(50)));
+        let s = b.speedup("slow", "fast").unwrap();
+        assert!(s > 1.5, "speedup={s}");
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+}

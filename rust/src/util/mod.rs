@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, timing helpers, and the
+//! offline replacements for unavailable crates (JSON codec, bench harness).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use bench::Bench;
+pub use json::Value as Json;
+pub use rng::Pcg64;
+pub use timer::Stopwatch;

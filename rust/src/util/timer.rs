@@ -1,0 +1,91 @@
+//! Wall-clock measurement helpers used by the experiment harnesses.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch that accumulates laps; reports mean/median/p95 in seconds.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<Duration>,
+    start: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    /// Stop the current lap and record it. Returns the lap duration.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.take().expect("lap() without start()").elapsed();
+        self.laps.push(d);
+        d
+    }
+
+    /// Time a closure as one lap and pass its value through.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let v = f();
+        self.lap();
+        v
+    }
+
+    pub fn count(&self) -> usize {
+        self.laps.len()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.laps.iter().map(Duration::as_secs_f64).sum()
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.laps.is_empty() {
+            0.0
+        } else {
+            self.total_secs() / self.laps.len() as f64
+        }
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.percentile_secs(50.0)
+    }
+
+    pub fn p95_secs(&self) -> f64 {
+        self.percentile_secs(95.0)
+    }
+
+    pub fn percentile_secs(&self, p: f64) -> f64 {
+        if self.laps.is_empty() {
+            return 0.0;
+        }
+        let mut xs: Vec<f64> = self.laps.iter().map(Duration::as_secs_f64).collect();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.time(|| std::hint::black_box(1 + 1));
+        }
+        assert_eq!(sw.count(), 3);
+        assert!(sw.mean_secs() >= 0.0);
+        assert!(sw.p95_secs() >= sw.median_secs() || sw.count() < 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lap_without_start_panics() {
+        Stopwatch::new().lap();
+    }
+}

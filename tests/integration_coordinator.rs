@@ -1,0 +1,149 @@
+//! End-to-end coordinator test: real engine, real graphs, concurrent
+//! clients through the thread-based serving loop.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use greenformer::coordinator::{
+    serve_classifier, BatcherConfig, RoutePolicy, Router, Tier,
+};
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{Dataset, Split};
+use greenformer::runtime::Engine;
+use greenformer::tensor::ParamStore;
+
+fn init_params(model: &str, variant: &str) -> ParamStore {
+    let eng = Engine::load_default().expect("artifacts missing — run `make artifacts`");
+    ParamStore::load_gtz(eng.manifest().checkpoint(model, variant).unwrap()).unwrap()
+}
+
+#[test]
+fn serves_concurrent_requests_exactly_once() {
+    let mut stores = HashMap::new();
+    stores.insert("dense".to_string(), init_params("text", "dense"));
+    stores.insert("led_r25".to_string(), init_params("text", "led_r25"));
+    let router = Router::new(
+        RoutePolicy::Tiered {
+            quality: "dense".into(),
+            balanced: "dense".into(),
+            fast: "led_r25".into(),
+        },
+        stores.keys().cloned().collect(),
+    )
+    .unwrap();
+    let handle = serve_classifier(
+        greenformer::artifacts_dir(),
+        "text",
+        stores,
+        router,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+        },
+        256,
+    )
+    .unwrap();
+
+    let ds = PolarityTask::new(64, 1);
+    let n = 48;
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let h = handle.clone();
+        let ex = ds.example(Split::Eval, i);
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+            let resp = h.classify(ex.tokens, tier).unwrap();
+            (resp.variant, resp.label)
+        }));
+    }
+    let mut fast = 0;
+    let mut quality = 0;
+    for (i, j) in joins.into_iter().enumerate() {
+        let (variant, label) = j.join().unwrap();
+        assert!(label < 4);
+        if i % 2 == 0 {
+            assert_eq!(variant, "led_r25");
+            fast += 1;
+        } else {
+            assert_eq!(variant, "dense");
+            quality += 1;
+        }
+    }
+    assert_eq!(fast + quality, n);
+
+    let m = &handle.metrics;
+    assert_eq!(
+        m.responses.load(std::sync::atomic::Ordering::Relaxed),
+        n as u64
+    );
+    assert_eq!(
+        m.requests.load(std::sync::atomic::Ordering::Relaxed),
+        n as u64
+    );
+    assert_eq!(m.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    let counts = m.variant_counts();
+    assert_eq!(counts["led_r25"], fast as u64);
+    assert_eq!(counts["dense"], quality as u64);
+    // Latency histogram saw every response.
+    assert!(m.latency_percentile_us(99.0) > 0);
+}
+
+#[test]
+fn rejects_unknown_variant_at_startup() {
+    let mut stores = HashMap::new();
+    stores.insert("dense".to_string(), init_params("text", "dense"));
+    // Router validated against its own list, but the server needs graphs for
+    // every *store* key; a bogus store key must fail startup synchronously.
+    stores.insert("led_r99".to_string(), init_params("text", "dense"));
+    let router = Router::new(
+        RoutePolicy::Static("dense".into()),
+        stores.keys().cloned().collect(),
+    )
+    .unwrap();
+    let res = serve_classifier(
+        greenformer::artifacts_dir(),
+        "text",
+        stores,
+        router,
+        BatcherConfig::default(),
+        16,
+    );
+    assert!(res.is_err());
+}
+
+#[test]
+fn deadline_flushes_partial_batches() {
+    // A single request into a max_batch=8 server must still be answered
+    // (deadline path), well within a generous timeout.
+    let mut stores = HashMap::new();
+    stores.insert("dense".to_string(), init_params("text", "dense"));
+    let router = Router::new(
+        RoutePolicy::Static("dense".into()),
+        stores.keys().cloned().collect(),
+    )
+    .unwrap();
+    let handle = serve_classifier(
+        greenformer::artifacts_dir(),
+        "text",
+        stores,
+        router,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        16,
+    )
+    .unwrap();
+    let ds = PolarityTask::new(64, 2);
+    let ex = ds.example(Split::Eval, 0);
+    let resp = handle.classify(ex.tokens, Tier::Quality).unwrap();
+    assert_eq!(resp.variant, "dense");
+    // The executed batch padded 7 rows.
+    assert_eq!(
+        handle
+            .metrics
+            .padded_rows
+            .load(std::sync::atomic::Ordering::Relaxed),
+        7
+    );
+}

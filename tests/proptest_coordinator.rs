@@ -1,0 +1,162 @@
+//! Randomized property tests for the coordinator's pure logic
+//! (in-tree generator over `Pcg64` — proptest is unavailable offline, the
+//! methodology is the same: many random cases per invariant, with the
+//! failing seed printed on panic).
+//!
+//! Invariants (see coordinator::server docs):
+//! * batches never exceed max_batch; size-triggered flushes are exactly full;
+//! * every pushed id appears in exactly one flushed batch, in FIFO order;
+//! * padding rows = artifact batch − members, never negative;
+//! * the deadline flush fires iff the oldest pending waited ≥ max_wait;
+//! * routing always returns an available variant.
+
+use std::time::{Duration, Instant};
+
+use greenformer::coordinator::batcher::{plan, Batcher, BatcherConfig};
+use greenformer::coordinator::{RoutePolicy, Router, Tier};
+use greenformer::util::Pcg64;
+
+const CASES: usize = 300;
+
+#[test]
+fn batcher_never_exceeds_max_and_preserves_fifo() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed, 100);
+        let max_batch = 1 + rng.below(16);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_secs(3600), // size-only in this test
+        });
+        let n = rng.below(120);
+        let now = Instant::now();
+        let mut flushed: Vec<usize> = Vec::new();
+        for id in 0..n {
+            if let Some(batch) = b.push(id, now) {
+                assert_eq!(batch.len(), max_batch, "seed {seed}: size flush must be full");
+                flushed.extend(batch);
+            }
+        }
+        if let Some(batch) = b.flush() {
+            assert!(batch.len() <= max_batch, "seed {seed}");
+            flushed.extend(batch);
+        }
+        // Exactly-once, FIFO.
+        assert_eq!(flushed, (0..n).collect::<Vec<_>>(), "seed {seed}");
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+#[test]
+fn plan_padding_arithmetic() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed, 101);
+        let artifact = 1 + rng.below(64);
+        let members = rng.below(artifact + 1);
+        let ids: Vec<usize> = (0..members).collect();
+        let p = plan(ids.clone(), artifact);
+        assert_eq!(p.members, ids);
+        assert_eq!(p.pad_rows, artifact - members, "seed {seed}");
+        assert_eq!(p.members.len() + p.pad_rows, artifact);
+    }
+}
+
+#[test]
+fn deadline_flush_fires_exactly_when_oldest_expires() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed, 102);
+        let wait_ms = 1 + rng.below(50) as u64;
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(wait_ms),
+        });
+        let t0 = Instant::now();
+        let n = 1 + rng.below(10);
+        for id in 0..n {
+            // All pushed within the window.
+            b.push(id, t0 + Duration::from_millis(rng.below(wait_ms as usize) as u64));
+        }
+        // Hmm: oldest is the FIRST push at t0+something; poll before t0+wait
+        // of the first push must not flush if strictly before.
+        assert!(
+            b.poll_deadline(t0).is_none(),
+            "seed {seed}: cannot flush before any deadline"
+        );
+        let late = t0 + Duration::from_millis(wait_ms * 3);
+        let batch = b.poll_deadline(late).expect("must flush after the window");
+        assert_eq!(batch.len(), n, "seed {seed}");
+        assert!(b.poll_deadline(late).is_none(), "seed {seed}: no double flush");
+    }
+}
+
+#[test]
+fn time_to_deadline_is_monotone_nonincreasing() {
+    let mut b = Batcher::new(BatcherConfig {
+        max_batch: 100,
+        max_wait: Duration::from_millis(100),
+    });
+    let t0 = Instant::now();
+    b.push(0, t0);
+    let d1 = b.time_to_deadline(t0).unwrap();
+    let d2 = b.time_to_deadline(t0 + Duration::from_millis(40)).unwrap();
+    let d3 = b.time_to_deadline(t0 + Duration::from_millis(200)).unwrap();
+    assert!(d1 >= d2);
+    assert_eq!(d3, Duration::ZERO);
+}
+
+#[test]
+fn router_always_returns_available_variant() {
+    let variants: Vec<String> = vec!["dense".into(), "led_r50".into(), "led_r10".into()];
+    let policies = [
+        RoutePolicy::Static("led_r50".into()),
+        RoutePolicy::Tiered {
+            quality: "dense".into(),
+            balanced: "led_r50".into(),
+            fast: "led_r10".into(),
+        },
+        RoutePolicy::Adaptive {
+            quality: "dense".into(),
+            balanced: "led_r50".into(),
+            fast: "led_r10".into(),
+            low: 3,
+            high: 9,
+        },
+    ];
+    for policy in policies {
+        let r = Router::new(policy, variants.clone()).unwrap();
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..CASES {
+            let tier = match rng.below(3) {
+                0 => Tier::Quality,
+                1 => Tier::Balanced,
+                _ => Tier::Fast,
+            };
+            let depth = rng.below(40);
+            let v = r.route(tier, depth);
+            assert!(variants.iter().any(|a| a == v));
+        }
+    }
+}
+
+#[test]
+fn adaptive_router_is_monotone_in_depth() {
+    // Deeper queue must never route to a *slower* (higher-quality) variant.
+    let ladder = ["dense", "led_r50", "led_r10"]; // quality -> fast
+    let rung = |v: &str| ladder.iter().position(|&l| l == v).unwrap();
+    let r = Router::new(
+        RoutePolicy::Adaptive {
+            quality: "dense".into(),
+            balanced: "led_r50".into(),
+            fast: "led_r10".into(),
+            low: 4,
+            high: 12,
+        },
+        ladder.iter().map(|s| s.to_string()).collect(),
+    )
+    .unwrap();
+    let mut prev = 0;
+    for depth in 0..40 {
+        let cur = rung(r.route(Tier::Quality, depth));
+        assert!(cur >= prev, "depth {depth}: rung went backwards");
+        prev = cur;
+    }
+}

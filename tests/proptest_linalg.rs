@@ -1,0 +1,176 @@
+//! Randomized property tests over the linalg substrate (in-tree generator;
+//! see proptest_coordinator.rs for the methodology note).
+
+use greenformer::factorize::{rank_for, Solver, MIN_RANK, RANK_MULTIPLE};
+use greenformer::linalg::{
+    factors_from_svd, jacobi_svd, randomized_svd, snmf_factorize, svd_factorize, thin_qr, Matrix,
+};
+use greenformer::util::Pcg64;
+
+fn rand_matrix(rng: &mut Pcg64, max_dim: usize) -> Matrix {
+    let m = 2 + rng.below(max_dim - 1);
+    let n = 2 + rng.below(max_dim - 1);
+    Matrix::randn(m, n, 1.0, rng)
+}
+
+#[test]
+fn svd_truncation_matches_eckart_young_everywhere() {
+    let mut rng = Pcg64::seeded(1);
+    for case in 0..40 {
+        let a = rand_matrix(&mut rng, 40);
+        let svd = jacobi_svd(&a);
+        let k = svd.s.len();
+        let r = 1 + rng.below(k);
+        let (fa, fb) = factors_from_svd(&svd, r);
+        let err2 = {
+            let d = a.sub(&fa.matmul(&fb)).fro_norm();
+            d * d
+        };
+        let tail2: f64 = svd.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!(
+            (err2 - tail2).abs() <= 1e-3 * (1.0 + tail2),
+            "case {case}: err2={err2} tail2={tail2} ({}x{}, r={r})",
+            a.rows,
+            a.cols
+        );
+    }
+}
+
+#[test]
+fn svd_singular_values_match_gram_trace() {
+    // sum sigma_i^2 == ||A||_F^2 (trace identity), any shape.
+    let mut rng = Pcg64::seeded(2);
+    for _ in 0..40 {
+        let a = rand_matrix(&mut rng, 32);
+        let svd = jacobi_svd(&a);
+        let sum2: f64 = svd.s.iter().map(|&s| (s as f64) * (s as f64)).sum();
+        let fro2 = a.fro_norm().powi(2);
+        assert!((sum2 - fro2).abs() < 1e-3 * (1.0 + fro2), "{sum2} vs {fro2}");
+    }
+}
+
+#[test]
+fn qr_reconstruction_and_orthogonality_random_shapes() {
+    let mut rng = Pcg64::seeded(3);
+    for _ in 0..30 {
+        let n = 1 + rng.below(24);
+        let m = n + rng.below(40);
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        let (q, r) = thin_qr(&a);
+        let qr = q.matmul(&r);
+        for (x, y) in qr.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 2e-3 * (1.0 + y.abs()));
+        }
+        let qtq = q.matmul_tn(&q);
+        for i in 0..n {
+            for j in 0..n {
+                let want = (i == j) as u8 as f32;
+                assert!((qtq.at(i, j) - want).abs() < 2e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn rsvd_error_bounded_by_oversampled_optimum() {
+    let mut rng = Pcg64::seeded(4);
+    for _ in 0..10 {
+        let m = 40 + rng.below(60);
+        let n = 40 + rng.below(60);
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        let r = 4 + rng.below(12);
+        let exact = jacobi_svd(&a);
+        let tail2: f64 = exact.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        let approx = randomized_svd(&a, r, 10, 2);
+        let (fa, fb) = factors_from_svd(&approx, r);
+        let err2 = {
+            let d = a.sub(&fa.matmul(&fb)).fro_norm();
+            d * d
+        };
+        assert!(err2 <= tail2 * 1.10 + 1e-6, "err2={err2} optimal={tail2}");
+    }
+}
+
+#[test]
+fn snmf_invariants_random_shapes() {
+    let mut rng = Pcg64::seeded(5);
+    for case in 0..15 {
+        let m = 6 + rng.below(24);
+        let n = 6 + rng.below(24);
+        let w = Matrix::randn(m, n, 1.0, &mut rng);
+        let r = 2 + rng.below(m.min(n) / 2);
+        let (a, b) = snmf_factorize(&w, r, 25, case);
+        assert_eq!((a.rows, a.cols), (m, r));
+        assert_eq!((b.rows, b.cols), (r, n));
+        assert!(b.data.iter().all(|&x| x >= 0.0), "case {case}: B must be >= 0");
+        assert!(a.data.iter().all(|x| x.is_finite()));
+        let rel = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+        assert!(rel < 1.05, "case {case}: rel={rel} (should approximate)");
+    }
+}
+
+#[test]
+fn all_solvers_shapes_and_determinism() {
+    let mut rng = Pcg64::seeded(6);
+    for case in 0..20 {
+        let w = rand_matrix(&mut rng, 30);
+        let r = 1 + rng.below(w.rows.min(w.cols));
+        for solver in [Solver::Random, Solver::Svd, Solver::Snmf] {
+            let (a1, b1) = solver.factorize(&w, r, 8, case);
+            let (a2, b2) = solver.factorize(&w, r, 8, case);
+            assert_eq!((a1.rows, a1.cols), (w.rows, r));
+            assert_eq!((b1.rows, b1.cols), (r, w.cols));
+            assert_eq!(a1.data, a2.data, "{solver} must be deterministic");
+            assert_eq!(b1.data, b2.data);
+        }
+    }
+}
+
+#[test]
+fn rank_policy_invariants_random_inputs() {
+    let mut rng = Pcg64::seeded(7);
+    for _ in 0..2000 {
+        let m = 1 + rng.below(5000);
+        let n = 1 + rng.below(5000);
+        let ratio = rng.next_f64() * 0.98 + 0.01;
+        if let Some(r) = rank_for(m, n, ratio) {
+            assert!(r * (m + n) < m * n, "gate violated: ({m},{n},{ratio})->{r}");
+            assert!(r >= MIN_RANK);
+            assert!(r % RANK_MULTIPLE == 0);
+        }
+    }
+}
+
+#[test]
+fn svd_factorize_randomized_path_consistent_with_exact() {
+    // The should_randomize() switch must not change results materially.
+    let mut rng = Pcg64::seeded(8);
+    let a = Matrix::randn(200, 180, 1.0, &mut rng); // triggers rSVD path
+    let r = 16;
+    let (fa, fb) = svd_factorize(&a, r);
+    let exact = jacobi_svd(&a);
+    let tail2: f64 = exact.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+    let err2 = {
+        let d = a.sub(&fa.matmul(&fb)).fro_norm();
+        d * d
+    };
+    assert!(err2 <= tail2 * 1.05, "err2={err2} tail2={tail2}");
+}
+
+#[test]
+fn gemm_associativity_of_led_product() {
+    // (x a) b == x (a b) within f32 tolerance — the fusion the LED kernel
+    // relies on.
+    let mut rng = Pcg64::seeded(9);
+    for _ in 0..20 {
+        let x = Matrix::randn(8 + rng.below(24), 8 + rng.below(24), 1.0, &mut rng);
+        let r = 1 + rng.below(8);
+        let a = Matrix::randn(x.cols, r, 1.0, &mut rng);
+        let b = Matrix::randn(r, 6 + rng.below(20), 1.0, &mut rng);
+        let left = x.matmul(&a).matmul(&b);
+        let right = x.matmul(&a.matmul(&b));
+        for (u, v) in left.data.iter().zip(&right.data) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()));
+        }
+    }
+}

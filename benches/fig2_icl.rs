@@ -14,7 +14,10 @@ use greenformer::train::Trainer;
 use greenformer::util::Bench;
 
 fn main() {
-    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let Ok(engine) = Engine::load_default() else {
+        eprintln!("SKIP fig2_icl bench: AOT artifacts / PJRT runtime unavailable");
+        return;
+    };
     let params = ExpParams::quick();
     let pretrain_steps = std::env::var("GREENFORMER_STEPS")
         .ok()

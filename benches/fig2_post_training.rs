@@ -13,7 +13,10 @@ use greenformer::tensor::ParamStore;
 use greenformer::util::Bench;
 
 fn main() {
-    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let Ok(engine) = Engine::load_default() else {
+        eprintln!("SKIP fig2_post_training bench: AOT artifacts / PJRT runtime unavailable");
+        return;
+    };
     let params = ExpParams::quick();
 
     let result = post_training(&engine, &params, Solver::Svd).expect("post-training harness");

@@ -14,7 +14,10 @@ fn main() {
     println!("\n== E5: cost model ==\n{}", render_cost_table(&rows));
 
     // Predicted vs measured: text fwd at every variant.
-    let engine = Engine::load_default().expect("artifacts missing: run `make artifacts`");
+    let Ok(engine) = Engine::load_default() else {
+        eprintln!("SKIP table_cost_model measured half: AOT artifacts / PJRT runtime unavailable");
+        return;
+    };
     let ds = PolarityTask::new(64, 42);
     let mut bench = Bench::new("text_fwd_b32");
     bench.max_iters = 30;

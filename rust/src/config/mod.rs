@@ -195,7 +195,8 @@ impl ExperimentConfig {
         }
         if let Some(s) = v.get("serve") {
             cfg.serve.max_batch = s.usize_or("max_batch", cfg.serve.max_batch);
-            cfg.serve.max_wait_ms = s.usize_or("max_wait_ms", cfg.serve.max_wait_ms as usize) as u64;
+            cfg.serve.max_wait_ms =
+                s.usize_or("max_wait_ms", cfg.serve.max_wait_ms as usize) as u64;
             cfg.serve.queue_capacity = s.usize_or("queue_capacity", cfg.serve.queue_capacity);
         }
         Ok(cfg)

@@ -8,7 +8,6 @@
 //! * `Adaptive` — load shedding: queue depth picks the rung, so latency is
 //!   bounded by degrading quality exactly as Figure 2 prices it.
 
-
 /// Client-requested quality tier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Tier {

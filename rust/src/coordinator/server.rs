@@ -223,7 +223,15 @@ fn dispatch_loop(
                 if let Some(ids) = batcher.push(pendings.len() - 1, Instant::now()) {
                     let taken = std::mem::take(pendings);
                     depth.fetch_sub(taken.len(), Ordering::Relaxed);
-                    run_batch(&engine, &graphs[&variant], &variants[&variant], &variant, ids, taken, &metrics);
+                    run_batch(
+                        &engine,
+                        &graphs[&variant],
+                        &variants[&variant],
+                        &variant,
+                        ids,
+                        taken,
+                        &metrics,
+                    );
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -232,7 +240,15 @@ fn dispatch_loop(
                     if let Some(ids) = batcher.poll_deadline(now) {
                         let taken = std::mem::take(pendings);
                         depth.fetch_sub(taken.len(), Ordering::Relaxed);
-                        run_batch(&engine, &graphs[variant], &variants[variant], variant, ids, taken, &metrics);
+                        run_batch(
+                            &engine,
+                            &graphs[variant],
+                            &variants[variant],
+                            variant,
+                            ids,
+                            taken,
+                            &metrics,
+                        );
                     }
                 }
             }
@@ -242,7 +258,15 @@ fn dispatch_loop(
                     if let Some(ids) = batcher.flush() {
                         let taken = std::mem::take(pendings);
                         depth.fetch_sub(taken.len(), Ordering::Relaxed);
-                        run_batch(&engine, &graphs[variant], &variants[variant], variant, ids, taken, &metrics);
+                        run_batch(
+                            &engine,
+                            &graphs[variant],
+                            &variants[variant],
+                            variant,
+                            ids,
+                            taken,
+                            &metrics,
+                        );
                     }
                 }
                 break;

@@ -233,7 +233,8 @@ mod tests {
         for ds in all_text_tasks(64, 0) {
             for i in 0..50 {
                 let ex = ds.example(Split::Train, i);
-                assert!(ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < vocab::SIZE), "{}", ds.name());
+                let in_range = ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < vocab::SIZE);
+                assert!(in_range, "{}", ds.name());
                 assert!(ex.label < ds.num_classes());
                 assert_eq!(ex.tokens.len(), 64);
             }

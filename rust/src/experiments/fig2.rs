@@ -147,7 +147,8 @@ pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
                 params.eval_examples,
                 hw,
             )?;
-            let (lg, li) = latency_inputs(engine, model, variant, ds.as_ref(), *is_image, params.seed)?;
+            let (lg, li) =
+                latency_inputs(engine, model, variant, ds.as_ref(), *is_image, params.seed)?;
             let lat = measure_latency(engine, &lg, &trainer.params, &li, 2, params.latency_iters)?
                 / lg.batch as f64;
             if variant == "dense" {

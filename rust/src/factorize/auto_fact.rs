@@ -145,10 +145,10 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
             });
             continue;
         }
-        let matches_filter = cfg
-            .submodules
-            .as_ref()
-            .map_or(true, |subs| subs.iter().any(|s| layer.name.contains(s.as_str())));
+        let matches_filter = match &cfg.submodules {
+            Some(subs) => subs.iter().any(|s| layer.name.contains(s.as_str())),
+            None => true,
+        };
         if !matches_filter {
             report.layers.push(LayerDecision {
                 name: layer.name,

@@ -137,11 +137,8 @@ mod tests {
     #[test]
     fn retained_energy_actually_reached() {
         // Reconstruction at the energy rank must keep >= tau of the energy.
-        let mut rng = Pcg64::seeded(84);
-        let w = {
-            // decaying spectrum
-            crate::experiments::tables::trained_like_matrix(48, 40, 1.0, 5)
-        };
+        // (decaying spectrum, like trained weights)
+        let w = crate::experiments::tables::trained_like_matrix(48, 40, 1.0, 5);
         let tau = 0.9;
         let spec = Spectrum::of(&w);
         let r = spec.rank_for_energy(tau);

@@ -6,7 +6,6 @@
 //! Rust-factorized checkpoint shapes must agree exactly, so any change here
 //! must be made in both places.
 
-
 /// Factor ranks are rounded down to a multiple of this (TPU lane
 /// granularity; DESIGN.md §4).
 pub const RANK_MULTIPLE: usize = 8;

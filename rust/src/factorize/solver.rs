@@ -3,7 +3,6 @@
 use std::fmt;
 use std::str::FromStr;
 
-
 use crate::linalg::{snmf_factorize, svd_factorize, Matrix};
 use crate::util::Pcg64;
 
@@ -102,9 +101,10 @@ mod tests {
     fn random_factor_scale_near_glorot() {
         let (a, b) = random_factorize(64, 48, 16, 0);
         let prod = a.matmul(&b);
+        let n = prod.data.len() as f64;
         let var = {
-            let mean: f64 = prod.data.iter().map(|&x| x as f64).sum::<f64>() / prod.data.len() as f64;
-            prod.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / prod.data.len() as f64
+            let mean: f64 = prod.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+            prod.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n
         };
         let glorot = 2.0 / (64.0 + 48.0);
         assert!(var > glorot * 0.2 && var < glorot * 5.0, "var={var} glorot={glorot}");

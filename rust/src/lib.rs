@@ -57,14 +57,30 @@ pub mod util;
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
 
-/// Locate the artifacts directory: `$GREENFORMER_ARTIFACTS` or `./artifacts`
-/// relative to the workspace root (walking up from the current directory so
-/// tests, examples and benches all find it).
+/// Locate the artifacts directory: `$GREENFORMER_ARTIFACTS` (when set and
+/// non-empty) or the nearest `artifacts/` holding a `manifest.json`, walking
+/// up from the current directory so tests, examples and benches all find it.
+/// Falls back to the relative `artifacts` path when nothing is found.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("GREENFORMER_ARTIFACTS") {
-        return p.into();
+    resolve_artifacts_dir(
+        std::env::var_os("GREENFORMER_ARTIFACTS"),
+        std::env::current_dir().ok(),
+    )
+}
+
+/// Testable core of [`artifacts_dir`]: the env override and starting
+/// directory are explicit so the resolution rules can be pinned by unit
+/// tests without touching process-global state.
+fn resolve_artifacts_dir(
+    env_override: Option<std::ffi::OsString>,
+    cwd: Option<std::path::PathBuf>,
+) -> std::path::PathBuf {
+    if let Some(p) = env_override {
+        if !p.is_empty() {
+            return std::path::PathBuf::from(p);
+        }
     }
-    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = cwd.unwrap_or_else(|| ".".into());
     loop {
         let cand = dir.join("artifacts");
         if cand.join("manifest.json").exists() {
@@ -73,5 +89,65 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         if !dir.pop() {
             return "artifacts".into();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::path::{Path, PathBuf};
+
+    use super::resolve_artifacts_dir;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gf_artdir_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn env_override_wins_even_without_manifest() {
+        let got = resolve_artifacts_dir(Some("/somewhere/else".into()), Some("/tmp".into()));
+        assert_eq!(got, Path::new("/somewhere/else"));
+    }
+
+    #[test]
+    fn empty_env_override_is_ignored() {
+        let base = scratch("empty_env");
+        let got = resolve_artifacts_dir(Some("".into()), Some(base.clone()));
+        assert_ne!(got, Path::new(""));
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn walk_up_finds_nearest_manifest() {
+        let base = scratch("walk");
+        let deep = base.join("a").join("b");
+        std::fs::create_dir_all(&deep).unwrap();
+        let far = base.join("artifacts");
+        std::fs::create_dir_all(&far).unwrap();
+        std::fs::write(far.join("manifest.json"), "{}").unwrap();
+        assert_eq!(resolve_artifacts_dir(None, Some(deep.clone())), far);
+
+        // A nearer artifacts/manifest.json must shadow the farther one.
+        let near = base.join("a").join("artifacts");
+        std::fs::create_dir_all(&near).unwrap();
+        std::fs::write(near.join("manifest.json"), "{}").unwrap();
+        assert_eq!(resolve_artifacts_dir(None, Some(deep)), near);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn miss_falls_back_to_relative_path() {
+        let base = scratch("miss").join("no").join("manifest").join("here");
+        std::fs::create_dir_all(&base).unwrap();
+        let got = resolve_artifacts_dir(None, Some(base.clone()));
+        // Ancestors outside the scratch dir could legitimately hold a real
+        // artifacts tree; the contract is: either an existing manifest dir,
+        // or the bare relative fallback.
+        assert!(
+            got == Path::new("artifacts") || got.join("manifest.json").exists(),
+            "unexpected fallback: {got:?}"
+        );
+        std::fs::remove_dir_all(&base).ok();
     }
 }

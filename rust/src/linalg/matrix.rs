@@ -204,7 +204,8 @@ pub fn matmul_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut
         let mut start = 0usize;
         while start < m {
             let rows = rows_per.min(m - start);
-            let (chunk, tail) = rest.split_at_mut(rows * n);
+            let taken = std::mem::take(&mut rest);
+            let (chunk, tail) = taken.split_at_mut(rows * n);
             rest = tail;
             let a_chunk = &a[start * k..(start + rows) * k];
             handles.push(scope.spawn(move || {

@@ -16,7 +16,7 @@ pub fn randomized_svd(a: &Matrix, r: usize, oversample: usize, power_iters: usiz
     let k = (r + oversample).min(m.min(n));
     // Deterministic sketch: seeded from the problem size so repeated
     // factorizations of the same layer reproduce bit-identically.
-    let mut rng = Pcg64::new(0x5eed ^ (m as u64) << 20 ^ (n as u64), r as u64);
+    let mut rng = Pcg64::new(0x5eed ^ ((m as u64) << 20) ^ (n as u64), r as u64);
     let omega = Matrix::randn(n, k, 1.0, &mut rng);
     let mut y = a.matmul(&omega); // (m, k)
     // Power iterations with re-orthonormalization for spectral accuracy.

@@ -199,7 +199,14 @@ fn main() -> Result<()> {
             let mut params = ParamStore::load_gtz(&ckpt)?;
             let graph = eng.manifest().find(&model, &variant, "fwd", None)?.clone();
             params.reorder_to(&graph.params.iter().map(|p| p.name.clone()).collect::<Vec<_>>())?;
-            let ev = greenformer::eval::eval_classifier(&eng, &graph, &params, ds.as_ref(), examples, hw)?;
+            let ev = greenformer::eval::eval_classifier(
+                &eng,
+                &graph,
+                &params,
+                ds.as_ref(),
+                examples,
+                hw,
+            )?;
             println!(
                 "{model}/{variant} on {task}: acc {:.3} ({}/{})  {:.2} ms/batch  {:.0} ex/s",
                 ev.accuracy(),

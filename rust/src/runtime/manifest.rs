@@ -198,7 +198,10 @@ impl Manifest {
         self.graphs
             .iter()
             .filter(|g| g.model == model && g.variant == variant && g.kind == kind)
-            .filter(|g| cap.map_or(true, |c| g.batch <= c))
+            .filter(|g| match cap {
+                Some(c) => g.batch <= c,
+                None => true,
+            })
             .max_by_key(|g| g.batch)
             .ok_or_else(|| {
                 anyhow!("no graph for model={model} variant={variant} kind={kind} cap={cap:?}")

@@ -250,7 +250,8 @@ impl ParamStore {
         self.names = idx.iter().map(|&i| self.names[i].clone()).collect();
         let mut tensors = Vec::with_capacity(self.tensors.len());
         // drain in index order without cloning tensor data
-        let mut old: Vec<Option<Tensor>> = std::mem::take(&mut self.tensors).into_iter().map(Some).collect();
+        let mut old: Vec<Option<Tensor>> =
+            std::mem::take(&mut self.tensors).into_iter().map(Some).collect();
         for &i in &idx {
             tensors.push(old[i].take().expect("index used twice"));
         }

@@ -60,10 +60,7 @@ impl Bench {
     pub fn new(group: &str) -> Self {
         // cargo bench passes e.g. `--bench` plus user filters; take the last
         // non-flag argument as a substring filter.
-        let filter = std::env::args()
-            .skip(1)
-            .filter(|a| !a.starts_with('-'))
-            .next_back();
+        let filter = std::env::args().skip(1).filter(|a| !a.starts_with('-')).next_back();
         Self {
             group: group.to_string(),
             filter,
@@ -86,8 +83,7 @@ impl Bench {
         let t0 = Instant::now();
         std::hint::black_box(f());
         let once = t0.elapsed().as_secs_f64().max(1e-9);
-        let iters = ((self.budget_s / once) as usize)
-            .clamp(self.min_iters, self.max_iters);
+        let iters = ((self.budget_s / once) as usize).clamp(self.min_iters, self.max_iters);
 
         let mut laps = Vec::with_capacity(iters);
         for _ in 0..iters {
@@ -96,7 +92,8 @@ impl Bench {
             laps.push(t.elapsed().as_secs_f64());
         }
         laps.sort_by(|a, b| a.total_cmp(b));
-        let pct = |p: f64| laps[((p * (laps.len() - 1) as f64).round() as usize).min(laps.len() - 1)];
+        let last = laps.len() - 1;
+        let pct = |p: f64| laps[((p * last as f64).round() as usize).min(last)];
         let stats = BenchStats {
             name: full,
             n: iters,

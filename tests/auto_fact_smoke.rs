@@ -1,0 +1,161 @@
+//! End-to-end smoke test of the paper's one-liner over a purely synthetic,
+//! in-memory checkpoint — no GTZ file and no AOT artifacts required, so this
+//! runs (and must pass) on a completely fresh checkout.
+//!
+//! The weights are built exactly rank-8 plus 1% noise, so the SVD solver at
+//! `Rank::Ratio(0.25)` (which resolves to rank ≥ 16 for these shapes) must
+//! reconstruct them almost losslessly while cutting the parameter count.
+
+use greenformer::factorize::auto_fact::Decision;
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::linalg::Matrix;
+use greenformer::model::{classify, LayerKind};
+use greenformer::tensor::{Dtype, ParamStore, Tensor};
+use greenformer::util::Pcg64;
+
+fn low_rank_noisy(m: usize, n: usize, k: usize, rng: &mut Pcg64) -> Matrix {
+    let u = Matrix::randn(m, k, 1.0, rng);
+    let v = Matrix::randn(k, n, 1.0, rng);
+    let mut w = u.matmul(&v);
+    for x in w.data.iter_mut() {
+        *x += rng.normal_f32() * 0.01;
+    }
+    w
+}
+
+fn add_linear(
+    store: &mut ParamStore,
+    originals: &mut Vec<(String, Matrix)>,
+    rng: &mut Pcg64,
+    prefix: &str,
+    m: usize,
+    n: usize,
+) {
+    let w = low_rank_noisy(m, n, 8, rng);
+    store.insert(format!("{prefix}/w"), Tensor::from_f32(&[m, n], w.data.clone()));
+    originals.push((prefix.to_string(), w));
+}
+
+/// A small transformer-shaped checkpoint: three factorizable linears, one
+/// gate-rejected linear, an embedding and a layernorm.
+fn synthetic_store(rng: &mut Pcg64) -> (ParamStore, Vec<(String, Matrix)>) {
+    let mut s = ParamStore::new();
+    let mut originals = Vec::new();
+    add_linear(&mut s, &mut originals, rng, "block0/attn/q", 128, 128);
+    s.insert("block0/attn/q/bias", Tensor::zeros(&[128], Dtype::F32));
+    add_linear(&mut s, &mut originals, rng, "block0/fc1", 128, 256);
+    add_linear(&mut s, &mut originals, rng, "block0/fc2", 256, 128);
+    s.insert("embed/table", Tensor::zeros(&[512, 64], Dtype::F32));
+    s.insert("head/w", Tensor::zeros(&[16, 16], Dtype::F32));
+    s.insert("ln/g", Tensor::zeros(&[64], Dtype::F32));
+    s.insert("ln/bias", Tensor::zeros(&[64], Dtype::F32));
+    (s, originals)
+}
+
+fn as_matrix(t: &Tensor) -> Matrix {
+    let (rows, cols, data) = t.as_matrix_2d().unwrap();
+    Matrix::from_vec(rows, cols, data.to_vec())
+}
+
+#[test]
+fn auto_fact_smoke_shrinks_params_with_bounded_error() {
+    let mut rng = Pcg64::seeded(2024);
+    let (mut store, originals) = synthetic_store(&mut rng);
+    let before = store.n_params();
+
+    let report = auto_fact(
+        &mut store,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.25),
+            solver: Solver::Svd,
+            num_iter: 50,
+            submodules: None,
+        },
+    )
+    .unwrap();
+
+    // The three big linears factorize; the rest stay put.
+    assert_eq!(report.n_factorized(), 3, "{report}");
+    assert_eq!(report.params_before, before);
+    assert_eq!(report.params_after, store.n_params());
+    assert!(store.n_params() < before, "{} -> {}", before, store.n_params());
+    assert!(report.compression() < 0.5, "compression {}", report.compression());
+
+    // Per-layer decisions: Eq.-1 gate keeps head/w dense; embedding and
+    // layernorm are not applicable.
+    let decision = |name: &str| {
+        report
+            .layers
+            .iter()
+            .find(|l| l.name == name)
+            .unwrap_or_else(|| panic!("no decision for {name}"))
+            .decision
+            .clone()
+    };
+    assert_eq!(decision("block0/attn/q"), Decision::Factorized { rank: 16 });
+    assert_eq!(decision("block0/fc1"), Decision::Factorized { rank: 16 });
+    assert_eq!(decision("head"), Decision::GateRejected);
+    assert_eq!(decision("embed"), Decision::NotApplicable);
+    assert_eq!(decision("ln"), Decision::NotApplicable);
+
+    // LED shapes replace the dense weights.
+    assert!(store.get("block0/attn/q/w").is_none());
+    assert_eq!(store.get("block0/attn/q/a").unwrap().shape, vec![128, 16]);
+    assert_eq!(store.get("block0/attn/q/b").unwrap().shape, vec![16, 128]);
+    assert!(store.get("block0/attn/q/bias").is_some());
+    assert!(store.get("head/w").is_some());
+    assert!(store.get("embed/table").is_some());
+
+    // Reconstruction error stays bounded: rank-8 + 1% noise truncated at
+    // rank 16 must be nearly lossless.
+    for (prefix, w) in &originals {
+        let a = as_matrix(store.get(&format!("{prefix}/a")).unwrap());
+        let b = as_matrix(store.get(&format!("{prefix}/b")).unwrap());
+        let rel = w.sub(&a.matmul(&b)).fro_norm() / w.fro_norm();
+        assert!(rel < 0.05, "{prefix}: rel recon error {rel}");
+    }
+    for l in &report.layers {
+        if let Decision::Factorized { .. } = l.decision {
+            let e = l.recon_error.expect("SVD reports reconstruction error");
+            assert!(e < 0.05, "{}: reported error {e}", l.name);
+        }
+    }
+
+    // The factorized store reclassifies as LED layers, in canonical order.
+    let layers = classify(&store);
+    let kind = |name: &str| layers.iter().find(|l| l.name == name).unwrap().kind;
+    assert_eq!(kind("block0/attn/q"), LayerKind::LedLinear);
+    assert_eq!(kind("block0/fc1"), LayerKind::LedLinear);
+    assert_eq!(kind("head"), LayerKind::Linear);
+    let names = store.names().to_vec();
+    let mut sorted = names.clone();
+    sorted.sort();
+    assert_eq!(names, sorted, "store must stay canonically sorted");
+}
+
+#[test]
+fn auto_fact_smoke_respects_submodule_filter() {
+    let mut rng = Pcg64::seeded(7);
+    let (mut store, _) = synthetic_store(&mut rng);
+
+    let report = auto_fact(
+        &mut store,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.25),
+            solver: Solver::Svd,
+            num_iter: 50,
+            submodules: Some(vec!["fc1".to_string()]),
+        },
+    )
+    .unwrap();
+
+    assert_eq!(report.n_factorized(), 1, "{report}");
+    assert!(store.get("block0/fc1/a").is_some());
+    assert!(store.get("block0/attn/q/w").is_some(), "filtered layer must stay dense");
+    let filtered = report
+        .layers
+        .iter()
+        .filter(|l| l.decision == Decision::Filtered)
+        .count();
+    assert_eq!(filtered, 3, "q, fc2 and head are filtered out");
+}

@@ -1,0 +1,28 @@
+//! Shared helper for artifact-dependent integration tests: hand out the
+//! engine over the default artifacts dir, or print why the caller skips.
+//!
+//! (Lives in a subdirectory so cargo does not treat it as a test target.)
+
+use greenformer::runtime::Engine;
+
+/// The engine over the default artifacts dir, or `None` (with a printed
+/// skip reason) when artifacts or the PJRT runtime are unavailable. Skip
+/// reasons go to stderr; run with `cargo test -- --nocapture` (CI does) to
+/// see them from passing tests.
+pub fn engine(suite: &str) -> Option<Engine> {
+    let dir = greenformer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "SKIP {suite}: no AOT artifacts at {dir:?} \
+             (build them with `make artifacts` / python/compile/aot.py)"
+        );
+        return None;
+    }
+    match Engine::load(dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP {suite}: engine unavailable: {err:#}");
+            None
+        }
+    }
+}

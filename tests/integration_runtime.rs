@@ -3,21 +3,31 @@
 //! These require `make artifacts` to have run; they are the proof that the
 //! three layers compose: JAX-exported HLO (with Pallas kernels inlined) ×
 //! Rust marshalling × the Greenformer toolkit's factorized checkpoints.
+//!
+//! Hermetic-by-default: when the artifacts are absent (fresh checkout, CI)
+//! or the PJRT runtime is unavailable (offline `xla` stub), every test
+//! skips with a visible reason instead of failing.
 
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{batch, Split};
 use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
-use greenformer::runtime::Engine;
 use greenformer::tensor::ParamStore;
 use greenformer::train::Trainer;
 
-fn engine() -> Engine {
-    Engine::load_default().expect("artifacts missing — run `make artifacts` first")
+mod common;
+
+macro_rules! engine_or_skip {
+    () => {
+        match common::engine("integration_runtime") {
+            Some(eng) => eng,
+            None => return,
+        }
+    };
 }
 
 #[test]
 fn manifest_lists_all_models_and_variants() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let m = eng.manifest();
     for model in ["text", "image", "lm"] {
         let vs = m.variants(model);
@@ -28,7 +38,7 @@ fn manifest_lists_all_models_and_variants() {
 
 #[test]
 fn fwd_runs_and_output_shape_matches_manifest() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let g = eng.manifest().find("text", "dense", "fwd", Some(8)).unwrap().clone();
     let params = ParamStore::load_gtz(eng.manifest().checkpoint("text", "dense").unwrap()).unwrap();
     let ds = PolarityTask::new(g.inputs[0].shape[1], 0);
@@ -41,7 +51,7 @@ fn fwd_runs_and_output_shape_matches_manifest() {
 
 #[test]
 fn fwd_rejects_wrong_shapes_and_missing_params() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let g = eng.manifest().find("text", "dense", "fwd", Some(1)).unwrap().clone();
     let params = ParamStore::load_gtz(eng.manifest().checkpoint("text", "dense").unwrap()).unwrap();
     // Wrong input shape.
@@ -57,7 +67,7 @@ fn fwd_rejects_wrong_shapes_and_missing_params() {
 
 #[test]
 fn train_step_reduces_loss_on_fixed_batch() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let mut trainer = Trainer::from_init(&eng, "text", "dense").unwrap();
     let ds = PolarityTask::new(64, 0);
     let (x, y) = batch(&ds, Split::Train, 0, trainer.batch_size(), None);
@@ -74,7 +84,7 @@ fn train_step_reduces_loss_on_fixed_batch() {
 
 #[test]
 fn by_design_factorized_variant_trains_too() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let mut trainer = Trainer::from_init(&eng, "text", "led_r25").unwrap();
     let ds = PolarityTask::new(64, 0);
     let (x, y) = batch(&ds, Split::Train, 0, trainer.batch_size(), None);
@@ -93,7 +103,7 @@ fn rust_factorized_checkpoint_loads_into_led_graph() {
     // expects, and — when the dense weights genuinely have low rank, as
     // trained weights do (the paper's premise) — the factorized logits
     // must track the dense ones closely.
-    let eng = engine();
+    let eng = engine_or_skip!();
     let mut dense =
         ParamStore::load_gtz(eng.manifest().checkpoint("text", "dense").unwrap()).unwrap();
     // Rebuild every 2-D weight as an exactly rank-8 product so the SVD
@@ -167,7 +177,7 @@ fn rust_factorized_checkpoint_loads_into_led_graph() {
 
 #[test]
 fn snmf_factorized_checkpoint_also_runs() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let dense = ParamStore::load_gtz(eng.manifest().checkpoint("text", "dense").unwrap()).unwrap();
     let mut fact = dense;
     auto_fact(
@@ -189,7 +199,7 @@ fn snmf_factorized_checkpoint_also_runs() {
 
 #[test]
 fn executable_cache_hits() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let g = eng.manifest().find("text", "dense", "fwd", Some(1)).unwrap().clone();
     let before = eng.cached_executables();
     eng.executable(&g.name).unwrap();
@@ -201,7 +211,7 @@ fn executable_cache_hits() {
 
 #[test]
 fn image_model_runs_both_variants() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let ds = greenformer::data::image::ShapesTask::new(0);
     for variant in ["dense", "led_r50"] {
         let g = eng.manifest().find("image", variant, "fwd", Some(8)).unwrap().clone();
@@ -215,7 +225,7 @@ fn image_model_runs_both_variants() {
 
 #[test]
 fn lm_fwd_produces_vocab_logits() {
-    let eng = engine();
+    let eng = engine_or_skip!();
     let g = eng.manifest().find("lm", "dense", "fwd", Some(1)).unwrap().clone();
     let params = ParamStore::load_gtz(eng.manifest().checkpoint("lm", "dense").unwrap()).unwrap();
     let corpus = greenformer::data::lm::LmCorpus::new(g.inputs[0].shape[1], 0);

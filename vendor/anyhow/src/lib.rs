@@ -1,0 +1,220 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no network and no registry cache, so the
+//! workspace vendors the small part of `anyhow` it actually uses as a plain
+//! path crate (see DESIGN.md §7). Provided surface:
+//!
+//! * [`Error`] — a context chain with `Display` (`{}` shows the outermost
+//!   message, `{:#}` the full `outer: inner: ...` chain) and an
+//!   anyhow-style multi-line `Debug`.
+//! * [`Result<T>`] with the error type defaulted to [`Error`].
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on any
+//!   `Result<T, E>` whose error converts into [`Error`] (std errors via the
+//!   blanket `From`, and `Error` itself).
+//!
+//! Like the real crate, `Error` deliberately does not implement
+//! `std::error::Error`: that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent.
+
+use std::fmt;
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error: `chain[0]` is the outermost message/context, the
+/// rest are the causes from outer to inner.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Every std error converts, capturing its `source()` chain. (Coherent with
+/// the reflexive `From<T> for T` because `Error: !std::error::Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` on fallible results.
+pub trait Context<T, E> {
+    /// Wrap the error value, if any, with the given context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value, if any, with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with implicit captures),
+/// a single printable value, or format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+/// Return early with an [`anyhow!`] error when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let x = 3;
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("captured {x}").to_string(), "captured 3");
+        assert_eq!(anyhow!("args {} {}", 1, 2).to_string(), "args 1 2");
+        let s = String::from("owned");
+        assert_eq!(anyhow!(s).to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_errors() {
+        let e: Result<()> = Err(io_err()).context("reading file");
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let inner: Result<()> = Err(anyhow!("inner"));
+        let outer = inner.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{outer:#}"), "outer 1: inner");
+        assert_eq!(outer.root_cause(), "inner");
+        assert_eq!(outer.chain().count(), 2);
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e: Result<()> = Err(io_err()).context("ctx");
+        let text = format!("{:?}", e.unwrap_err());
+        assert!(text.starts_with("ctx"));
+        assert!(text.contains("Caused by:"));
+        assert!(text.contains("gone"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<Error>();
+    }
+}

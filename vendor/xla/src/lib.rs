@@ -1,0 +1,337 @@
+//! Types-only offline stub of the PJRT/XLA bindings.
+//!
+//! The real backend (`xla_extension` over the PJRT C API) is unavailable in
+//! the offline build environment, so this crate provides the exact type
+//! surface `greenformer::runtime::engine` compiles against:
+//!
+//! * Host-side [`Literal`] marshalling is **fully functional** (shape +
+//!   dtype + little-endian bytes), so tensor↔literal round-trips and their
+//!   tests work without any XLA installation.
+//! * Device plumbing ([`PjRtClient::cpu`], compilation, execution) returns
+//!   a clear "PJRT runtime unavailable" error; everything that needs a real
+//!   device skips gracefully on that error (see DESIGN.md §7).
+//!
+//! Swapping in the real bindings is a one-line change in the workspace
+//! manifest; the API below mirrors the `xla` crate that wraps
+//! `xla_extension` 0.5.x.
+//!
+//! Like the real PJRT wrapper, the client and executable types are
+//! `Rc`-based and therefore `!Send`: each thread that executes graphs must
+//! own its client (the coordinator relies on this discipline).
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Stub error: a message, `Display`able into the caller's `anyhow` chain.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT runtime unavailable (offline `xla` stub; link the real \
+             xla_extension bindings to execute graphs)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// XLA element types (subset + headroom; matches PJRT's primitive types).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element, when fixed-width.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy + sealed::Sealed {
+    const TY: ElementType;
+    fn from_le_bytes(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl sealed::Sealed for $t {}
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn from_le_bytes(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("element width"))
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(u32, ElementType::U32);
+native!(u64, ElementType::U64);
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Array {
+        ty: ElementType,
+        dims: Vec<i64>,
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: dense array bytes or a tuple of literals. Fully
+/// functional (this is what the marshalling tests exercise).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// Build an array literal from a shape and raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        let want = numel * ty.size_bytes();
+        if untyped_data.len() != want {
+            return Err(Error::new(format!(
+                "literal data is {} bytes but shape {dims:?} of {ty:?} needs {want}",
+                untyped_data.len()
+            )));
+        }
+        Ok(Literal {
+            repr: Repr::Array {
+                ty,
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                data: untyped_data.to_vec(),
+            },
+        })
+    }
+
+    /// Build a tuple literal (what executables return with `return_tuple`).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            repr: Repr::Tuple(parts),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.repr {
+            Repr::Array { ty, dims, .. } => Ok(ArrayShape {
+                ty: *ty,
+                dims: dims.clone(),
+            }),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+
+    /// Raw little-endian bytes of an array literal.
+    pub fn raw_bytes(&self) -> Result<&[u8]> {
+        match &self.repr {
+            Repr::Array { data, .. } => Ok(data),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no raw bytes")),
+        }
+    }
+
+    /// Decode an array literal into a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::Array { ty, data, .. } => {
+                if *ty != T::TY {
+                    return Err(Error::new(format!(
+                        "literal is {ty:?}, requested {:?}",
+                        T::TY
+                    )));
+                }
+                let width = ty.size_bytes();
+                Ok(data.chunks_exact(width).map(T::from_le_bytes).collect())
+            }
+            Repr::Tuple(_) => Err(Error::new("tuple literal cannot convert to a vector")),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(parts) => Ok(parts),
+            Repr::Array { .. } => Err(Error::new("array literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module text (held verbatim; the stub cannot compile it).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path:?}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _proto: proto.clone(),
+        }
+    }
+}
+
+/// A device-resident buffer produced by an execution.
+pub struct PjRtBuffer {
+    literal: Literal,
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable. `!Send`, like the real `Rc`-based wrapper.
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+}
+
+/// A PJRT client. `!Send`: each executing thread owns its own client.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    /// The offline stub has no PJRT plugin, so client creation fails with a
+    /// descriptive error; callers treat that as "runtime unavailable" and
+    /// skip device work.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let mk = Literal::create_from_shape_and_untyped_data;
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = mk(ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_rejects_wrong_byte_count() {
+        let mk = Literal::create_from_shape_and_untyped_data;
+        assert!(mk(ElementType::S32, &[2], &[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let mk = Literal::create_from_shape_and_untyped_data;
+        let a = mk(ElementType::S32, &[1], &[1, 0, 0, 0]).unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert!(t.array_shape().is_err());
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+}

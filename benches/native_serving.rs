@@ -1,0 +1,129 @@
+//! Artifact-free serving bench: dense vs LED variants through the full
+//! queue → router → batcher → native-backend path.
+//!
+//! Measures end-to-end request throughput (req/s) and p50/p95 client latency
+//! at equal batch size for dense, Ratio(0.5) and Ratio(0.25) LED variants of
+//! the default text classifier — the serving-level realization of Figure 2's
+//! speedup axis. Runs hermetically (no artifacts, no PJRT) and prints a
+//! machine-readable `BENCH_NATIVE_SERVING {...}` JSON line.
+//!
+//! Env: GREENFORMER_BENCH_REQUESTS (default 192) scales the measurement.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use greenformer::backend::native::{demo_variants, TextModelCfg};
+use greenformer::coordinator::{serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{Dataset, Split};
+use greenformer::tensor::ParamStore;
+
+const MAX_BATCH: usize = 8;
+const CLIENTS: usize = 8;
+
+struct VariantStats {
+    name: String,
+    rps: f64,
+    p50_us: u64,
+    p95_us: u64,
+}
+
+fn bench_variant(name: &str, store: ParamStore, requests: usize) -> VariantStats {
+    let mut variants = HashMap::new();
+    variants.insert(name.to_string(), store);
+    let router = Router::new(RoutePolicy::Static(name.to_string()), vec![name.to_string()])
+        .expect("router");
+    let handle = serve_classifier_native(
+        "text",
+        variants,
+        router,
+        BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(2),
+        },
+        4096,
+    )
+    .expect("serve_classifier_native");
+
+    let ds = PolarityTask::new(64, 7);
+    let per = requests.div_ceil(CLIENTS);
+    let total = per * CLIENTS;
+    let examples: Vec<Vec<i32>> = (0..total).map(|i| ds.example(Split::Eval, i).tokens).collect();
+
+    // Warm caches/threads outside the timed region (histogram noise from
+    // these 8 requests is negligible against `total`).
+    for toks in examples.iter().take(MAX_BATCH) {
+        handle.classify(toks.clone(), Tier::Quality).expect("warmup");
+    }
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let h = handle.clone();
+            let exs = &examples;
+            scope.spawn(move || {
+                for i in 0..per {
+                    h.classify(exs[c * per + i].clone(), Tier::Quality)
+                        .expect("serving failed");
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    VariantStats {
+        name: name.to_string(),
+        rps: total as f64 / elapsed,
+        p50_us: handle.metrics.latency_percentile_us(50.0),
+        p95_us: handle.metrics.latency_percentile_us(95.0),
+    }
+}
+
+fn main() {
+    let requests: usize = std::env::var("GREENFORMER_BENCH_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(192);
+    let cfg = TextModelCfg::default();
+    // Same seed → identical dense checkpoint across both ratio calls.
+    let (dense, led50) = demo_variants(&cfg, 42, 0.5).expect("variants");
+    let (_, led25) = demo_variants(&cfg, 42, 0.25).expect("variants");
+
+    println!(
+        "== native serving: dense vs LED (batch={MAX_BATCH}, clients={CLIENTS}, \
+         requests={requests}, d={} ff={} seq={}) ==",
+        cfg.d, cfg.ff, cfg.seq
+    );
+    println!("{:<10} {:>10} {:>10} {:>10}", "variant", "req/s", "p50(us)", "p95(us)");
+
+    let cases = [("dense", dense), ("led_r50", led50), ("led_r25", led25)];
+    let mut stats = Vec::new();
+    for (name, store) in cases {
+        let s = bench_variant(name, store, requests);
+        println!("{:<10} {:>10.1} {:>10} {:>10}", s.name, s.rps, s.p50_us, s.p95_us);
+        stats.push(s);
+    }
+
+    let get = |n: &str| stats.iter().find(|s| s.name == n).expect("stat");
+    let (d, r50, r25) = (get("dense"), get("led_r50"), get("led_r25"));
+    println!(
+        "speedup vs dense: led_r50 {:.2}x  led_r25 {:.2}x",
+        r50.rps / d.rps,
+        r25.rps / d.rps
+    );
+    println!(
+        "BENCH_NATIVE_SERVING {{\"requests\":{requests},\"max_batch\":{MAX_BATCH},\
+         \"dense_rps\":{:.2},\"led_r50_rps\":{:.2},\"led_r25_rps\":{:.2},\
+         \"dense_p50_us\":{},\"dense_p95_us\":{},\"led_r50_p50_us\":{},\"led_r50_p95_us\":{},\
+         \"led_r25_p50_us\":{},\"led_r25_p95_us\":{},\"led_r25_speedup\":{:.3}}}",
+        d.rps,
+        r50.rps,
+        r25.rps,
+        d.p50_us,
+        d.p95_us,
+        r50.p50_us,
+        r50.p95_us,
+        r25.p50_us,
+        r25.p95_us,
+        r25.rps / d.rps
+    );
+}

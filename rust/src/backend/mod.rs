@@ -1,0 +1,150 @@
+//! Execution backends: one trait, two engines.
+//!
+//! The serving stack (coordinator), the evaluation harnesses and the CLI all
+//! execute forward passes through the [`Backend`] trait instead of talking to
+//! the PJRT [`Engine`] directly:
+//!
+//! * [`PjrtBackend`] — wraps [`Engine`] unchanged: AOT HLO artifacts,
+//!   compiled once, executed forever. Preferred whenever artifacts exist and
+//!   the PJRT runtime is available (fastest, and the only backend that can
+//!   run `train` graphs).
+//! * [`native::NativeBackend`] — a pure-Rust interpreter that walks the
+//!   checkpoint's layer structure (via [`crate::model::classify`]) and
+//!   executes the classifier/LM forward pass on the blocked, multithreaded
+//!   GEMM in [`crate::linalg::matrix`]. No artifacts, no FFI: the serving
+//!   path runs — and is tested — end-to-end on a fresh checkout.
+//!
+//! Selection is automatic in [`crate::coordinator::serve_classifier`]
+//! (PJRT when artifacts resolve, native otherwise) and explicit via the CLI
+//! `--backend {native,pjrt}` flag. See DESIGN.md §8 for the trait contract.
+
+pub mod native;
+
+use crate::runtime::{Engine, GraphSpec};
+use crate::tensor::{ParamStore, Tensor};
+use crate::Result;
+
+pub use native::NativeBackend;
+
+/// Which engine a [`Backend`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust interpreter (always available).
+    Native,
+    /// PJRT over AOT HLO artifacts (needs `artifacts/` + the XLA runtime).
+    Pjrt,
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Native => write!(f, "native"),
+            BackendKind::Pjrt => write!(f, "pjrt"),
+        }
+    }
+}
+
+/// A forward-pass executor. Implementations must be usable from a single
+/// thread that owns them (the coordinator's dispatcher); they are not
+/// required to be `Send` (the PJRT client wrapper is `Rc`-based).
+pub trait Backend {
+    /// Human-readable platform tag (e.g. `"cpu"` / `"native-cpu"`).
+    fn platform(&self) -> String;
+
+    /// Which engine this is.
+    fn kind(&self) -> BackendKind;
+
+    /// Whether this backend can execute `graph`. Capability query used by
+    /// callers that hold a mixed graph set.
+    fn supports(&self, graph: &GraphSpec) -> bool;
+
+    /// Run a forward graph: `outputs = f(params, inputs)`.
+    fn run_fwd(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>>;
+}
+
+/// [`Backend`] over the PJRT [`Engine`] — a thin newtype so backend
+/// selection sites name the engine explicitly.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    /// Load the engine over an artifacts directory.
+    pub fn load(dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        Ok(Self {
+            engine: Engine::load(dir)?,
+        })
+    }
+
+    pub fn from_engine(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn supports(&self, graph: &GraphSpec) -> bool {
+        self.engine.manifest().graph(&graph.name).is_ok()
+    }
+
+    fn run_fwd(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.engine.run_fwd(graph, params, inputs)
+    }
+}
+
+/// The engine itself is a backend, so existing `&Engine` call sites coerce
+/// straight into `&dyn Backend` APIs (eval, experiments, examples).
+impl Backend for Engine {
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn supports(&self, graph: &GraphSpec) -> bool {
+        self.manifest().graph(&graph.name).is_ok()
+    }
+
+    fn run_fwd(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        Engine::run_fwd(self, graph, params, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_renders() {
+        assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::Pjrt.to_string(), "pjrt");
+    }
+}

@@ -1,0 +1,1097 @@
+//! `NativeBackend` — a pure-Rust CPU interpreter for the forward pass.
+//!
+//! NeuralMatrix (arXiv 2305.14405) observes that entire networks reduce to
+//! plain linear matrix operations; this module takes that literally: the
+//! checkpoint's layer structure is recovered with [`crate::model::classify`]
+//! and executed directly over the [`ParamStore`] — Embedding → transformer
+//! blocks of LayerNorm / attention / Linear-or-LED → logits for the text and
+//! LM models, and the Conv2d/CED im2col path for the image model. Every GEMM
+//! routes through the cache-blocked, multithreaded
+//! [`crate::linalg::matrix::matmul_into`], so the dense-vs-LED speedup the
+//! paper prices is directly measurable on CPU (LED executes as two skinny
+//! GEMMs, never materializing `a·b`).
+//!
+//! Because LED/CED keep each layer's I/O signature, one interpreter runs any
+//! mixture of dense and factorized layers — the same dispatch-on-keys
+//! contract as `python/compile/layers.py`. Graph metadata comes from the AOT
+//! manifest when present, or from [`synth_fwd_graph`], which synthesizes a
+//! [`GraphSpec`] for any checkpoint so the serving stack runs hermetically
+//! (no `artifacts/`, no PJRT).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail};
+
+use crate::linalg::matrix::matmul_into;
+use crate::model::classify;
+use crate::runtime::{GraphSpec, TensorSpec};
+use crate::tensor::{Dtype, ParamStore, Tensor};
+use crate::util::Pcg64;
+use crate::Result;
+
+use super::{Backend, BackendKind};
+
+/// Pure-Rust forward-pass interpreter. Stateless and `Send`: any thread can
+/// own one (unlike the PJRT client).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        let threads = std::thread::available_parallelism().map_or(1, |p| p.get());
+        format!("native-cpu ({threads} threads)")
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn supports(&self, graph: &GraphSpec) -> bool {
+        graph.kind == "fwd"
+    }
+
+    fn run_fwd(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if graph.kind != "fwd" {
+            bail!("native backend only executes fwd graphs, got {}", graph.kind);
+        }
+        if inputs.len() != 1 {
+            bail!("graph {} wants 1 input, got {}", graph.name, inputs.len());
+        }
+        let x = &inputs[0];
+        let spec = graph
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("graph {} has no input spec", graph.name))?;
+        if x.shape != spec.shape {
+            bail!(
+                "input shape {:?} does not match graph {} spec {:?}",
+                x.shape,
+                graph.name,
+                spec.shape
+            );
+        }
+        if x.ndim() == 4 {
+            return Ok(vec![image_fwd(params, x)?]);
+        }
+        if x.ndim() != 2 {
+            bail!("expected (batch, seq) tokens or (b, h, w, c) pixels, got {:?}", x.shape);
+        }
+        let (b, s) = (x.shape[0], x.shape[1]);
+        let tokens = x.as_i32()?;
+        let heads = heads_for(graph);
+        // LM graphs emit per-position logits (B, S, vocab); classifiers pool
+        // to (B, classes).
+        let causal = graph.outputs.first().is_some_and(|o| o.shape.len() == 3);
+        let out = if causal {
+            lm_fwd(params, tokens, b, s, heads)?
+        } else {
+            classifier_fwd(params, tokens, b, s, heads)?
+        };
+        Ok(vec![out])
+    }
+}
+
+/// Attention head count: the manifest's `config.heads` when recorded, else
+/// the model-zoo defaults (`python/compile/model.py`).
+fn heads_for(graph: &GraphSpec) -> usize {
+    graph
+        .config_usize("heads")
+        .unwrap_or_else(|_| default_heads(&graph.model))
+}
+
+fn default_heads(model: &str) -> usize {
+    if model == "lm" {
+        6
+    } else {
+        4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph synthesis (hermetic serving: no manifest required)
+// ---------------------------------------------------------------------------
+
+/// Synthesize a fwd [`GraphSpec`] for a checkpoint by inspecting its layer
+/// structure — the native analogue of the AOT manifest entry. Dimensions
+/// (seq, d, classes, image size) are recovered from the parameters
+/// themselves; `model` picks the architecture family (`"image"` is detected
+/// from a `conv1` group, tokens otherwise, with `"lm"` selecting
+/// per-position logits).
+///
+/// The attention head count is *not* recoverable from the parameters, so
+/// `config.heads` is set to the model-zoo default (4 for text, 6 for lm) —
+/// the same contract the AOT exporter uses. A checkpoint built with a
+/// non-default head count must override `config["heads"]` on the returned
+/// spec before executing it.
+pub fn synth_fwd_graph(
+    model: &str,
+    variant: &str,
+    batch: usize,
+    params: &ParamStore,
+) -> Result<GraphSpec> {
+    if batch == 0 {
+        bail!("synth_fwd_graph: batch must be positive");
+    }
+    let layers = classify(params);
+    let find = |name: &str| layers.iter().find(|l| l.name == name);
+
+    let tensor_specs: Vec<TensorSpec> = params
+        .iter()
+        .map(|(n, t)| TensorSpec {
+            name: n.to_string(),
+            shape: t.shape.clone(),
+            dtype: match t.dtype() {
+                Dtype::F32 => "f32",
+                Dtype::I32 => "i32",
+            }
+            .to_string(),
+        })
+        .collect();
+    let mut ranks = BTreeMap::new();
+    for l in &layers {
+        if let Some(r) = l.rank {
+            ranks.insert(l.name.clone(), r);
+        }
+    }
+    let mut config = BTreeMap::new();
+
+    let (inputs, outputs) = if let Some(conv1) = find("conv1") {
+        let (kh, kw) = conv1.kernel.ok_or_else(|| anyhow!("conv1 without kernel dims"))?;
+        let cin = conv1.in_dim / (kh * kw).max(1);
+        let c2 = find("conv2")
+            .ok_or_else(|| anyhow!("image checkpoint missing conv2"))?
+            .out_dim;
+        let fc1 = find("fc1").ok_or_else(|| anyhow!("image checkpoint missing fc1"))?;
+        let classes = find("fc2")
+            .ok_or_else(|| anyhow!("image checkpoint missing fc2"))?
+            .out_dim;
+        // flat = (hw/4)^2 * c2 after two 2x2 pools.
+        let q = fc1.in_dim / c2.max(1);
+        let side = (q as f64).sqrt().round() as usize;
+        if side * side != q || fc1.in_dim % c2.max(1) != 0 {
+            bail!("cannot infer image size from fc1 ({}) / conv2 ({c2}) dims", fc1.in_dim);
+        }
+        let hw = side * 4;
+        config.insert("hw".to_string(), hw);
+        config.insert("classes".to_string(), classes);
+        (
+            vec![TensorSpec {
+                name: "pixels".to_string(),
+                shape: vec![batch, hw, hw, cin],
+                dtype: "f32".to_string(),
+            }],
+            vec![TensorSpec {
+                name: "logits".to_string(),
+                shape: vec![batch, classes],
+                dtype: "f32".to_string(),
+            }],
+        )
+    } else {
+        let embed = find("embed").ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
+        let pos = find("pos").ok_or_else(|| anyhow!("checkpoint missing pos/table"))?;
+        let head = find("head").ok_or_else(|| anyhow!("checkpoint missing head"))?;
+        let (vocab, d, seq, width) = (embed.in_dim, embed.out_dim, pos.in_dim, head.out_dim);
+        let heads = default_heads(model);
+        config.insert("vocab".to_string(), vocab);
+        config.insert("seq".to_string(), seq);
+        config.insert("d".to_string(), d);
+        config.insert("heads".to_string(), heads);
+        config.insert("classes".to_string(), width);
+        let out_shape = if model == "lm" {
+            vec![batch, seq, width]
+        } else {
+            vec![batch, width]
+        };
+        (
+            vec![TensorSpec {
+                name: "tokens".to_string(),
+                shape: vec![batch, seq],
+                dtype: "i32".to_string(),
+            }],
+            vec![TensorSpec {
+                name: "logits".to_string(),
+                shape: out_shape,
+                dtype: "f32".to_string(),
+            }],
+        )
+    };
+
+    Ok(GraphSpec {
+        name: format!("{model}_{variant}_fwd_native_b{batch}"),
+        file: String::new(),
+        model: model.to_string(),
+        variant: variant.to_string(),
+        kind: "fwd".to_string(),
+        batch,
+        params: tensor_specs,
+        inputs,
+        outputs,
+        ranks,
+        n_params: params.n_params(),
+        config,
+        sha256_16: String::new(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Random init (hermetic tests / benches / demos without AOT checkpoints)
+// ---------------------------------------------------------------------------
+
+/// Text-classifier dimensions; the default mirrors `TextConfig` in
+/// `python/compile/model.py`. Keep `heads` at the model-zoo default for the
+/// model name you serve under (text = 4, lm = 6) unless you also override
+/// `config["heads"]` on the synthesized graph — [`synth_fwd_graph`] cannot
+/// recover the head count from the parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TextModelCfg {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ff: usize,
+    pub classes: usize,
+}
+
+impl Default for TextModelCfg {
+    fn default() -> Self {
+        Self {
+            vocab: 512,
+            seq: 64,
+            d: 128,
+            heads: 4,
+            layers: 2,
+            ff: 512,
+            classes: 4,
+        }
+    }
+}
+
+/// Deterministic random init of a dense text classifier in the canonical
+/// parameter layout (same group names as the JAX exporter, so `classify`,
+/// `auto_fact` and the native interpreter all recognize it).
+pub fn init_text_params(cfg: &TextModelCfg, seed: u64) -> ParamStore {
+    let mut rng = Pcg64::new(seed, 7);
+    let mut s = ParamStore::new();
+    let glorot = |rng: &mut Pcg64, k: usize, n: usize| -> Tensor {
+        let limit = (6.0 / (k + n) as f64).sqrt() as f32;
+        let mut data = vec![0.0f32; k * n];
+        for v in data.iter_mut() {
+            *v = (rng.next_f32() * 2.0 - 1.0) * limit;
+        }
+        Tensor::from_f32(&[k, n], data)
+    };
+    let table = |rng: &mut Pcg64, rows: usize, d: usize| -> Tensor {
+        let mut data = vec![0.0f32; rows * d];
+        rng.fill_normal(&mut data, 0.02);
+        Tensor::from_f32(&[rows, d], data)
+    };
+    let ones = |n: usize| Tensor::from_f32(&[n], vec![1.0; n]);
+
+    s.insert("embed/table", table(&mut rng, cfg.vocab, cfg.d));
+    s.insert("pos/table", table(&mut rng, cfg.seq, cfg.d));
+    for i in 0..cfg.layers {
+        for proj in ["q", "k", "v", "o"] {
+            s.insert(format!("block{i}/attn/{proj}/w"), glorot(&mut rng, cfg.d, cfg.d));
+            s.insert(
+                format!("block{i}/attn/{proj}/bias"),
+                Tensor::zeros(&[cfg.d], Dtype::F32),
+            );
+        }
+        for ln in ["ln1", "ln2"] {
+            s.insert(format!("block{i}/{ln}/g"), ones(cfg.d));
+            s.insert(format!("block{i}/{ln}/bias"), Tensor::zeros(&[cfg.d], Dtype::F32));
+        }
+        s.insert(format!("block{i}/fc1/w"), glorot(&mut rng, cfg.d, cfg.ff));
+        s.insert(format!("block{i}/fc1/bias"), Tensor::zeros(&[cfg.ff], Dtype::F32));
+        s.insert(format!("block{i}/fc2/w"), glorot(&mut rng, cfg.ff, cfg.d));
+        s.insert(format!("block{i}/fc2/bias"), Tensor::zeros(&[cfg.d], Dtype::F32));
+    }
+    s.insert("head/w", glorot(&mut rng, cfg.d, cfg.classes));
+    s.insert("head/bias", Tensor::zeros(&[cfg.classes], Dtype::F32));
+    s.insert("ln_f/g", ones(cfg.d));
+    s.insert("ln_f/bias", Tensor::zeros(&[cfg.d], Dtype::F32));
+    s.sort_canonical();
+    s
+}
+
+/// Hermetic dense + LED variant pair: random-init dense and its
+/// `auto_fact(Rank::Ratio(ratio))` factorization with the Random solver.
+/// Shared by the artifact-free serving test, bench and `serve-demo` so the
+/// recipe stays in one place. The Random solver keeps construction instant
+/// (SVD on the default 128×512 layers costs seconds) and serving semantics
+/// depend only on factor *shapes*; LED numerics are pinned separately by
+/// `tests/proptest_backend.rs`.
+pub fn demo_variants(
+    cfg: &TextModelCfg,
+    seed: u64,
+    ratio: f64,
+) -> Result<(ParamStore, ParamStore)> {
+    let dense = init_text_params(cfg, seed);
+    let mut led = dense.clone();
+    let report = crate::factorize::auto_fact(
+        &mut led,
+        &crate::factorize::AutoFactConfig {
+            rank: crate::factorize::Rank::Ratio(ratio),
+            solver: crate::factorize::Solver::Random,
+            num_iter: 0,
+            submodules: None,
+        },
+    )?;
+    if report.n_factorized() == 0 {
+        bail!("no layer passed the Eq.-1 gate at ratio {ratio} for this model size");
+    }
+    Ok((dense, led))
+}
+
+// ---------------------------------------------------------------------------
+// Layer primitives
+// ---------------------------------------------------------------------------
+
+fn pname(prefix: &str, leaf: &str) -> String {
+    if prefix.is_empty() {
+        leaf.to_string()
+    } else {
+        format!("{prefix}/{leaf}")
+    }
+}
+
+/// `y(rows, n) = x(rows, k) @ W + bias`, dispatching dense `w` vs LED/CED
+/// `a·b` on the keys present (the layers.py contract). Factorized layers run
+/// as two GEMMs through the rank bottleneck — the low-rank product is never
+/// materialized. Returns `(n, y)`.
+pub fn apply_linear(
+    params: &ParamStore,
+    prefix: &str,
+    rows: usize,
+    k: usize,
+    x: &[f32],
+) -> Result<(usize, Vec<f32>)> {
+    debug_assert_eq!(x.len(), rows * k);
+    let mut y;
+    let n;
+    if let Some(w) = params.get(&pname(prefix, "w")) {
+        let (wk, wn, wd) = w.as_matrix_2d()?;
+        if wk != k {
+            bail!("{prefix}: input dim {k} does not match weight {wk}x{wn}");
+        }
+        n = wn;
+        y = vec![0.0f32; rows * n];
+        matmul_into(rows, k, n, x, wd, &mut y);
+    } else if let (Some(a), Some(b)) =
+        (params.get(&pname(prefix, "a")), params.get(&pname(prefix, "b")))
+    {
+        let (ak, r, ad) = a.as_matrix_2d()?;
+        let (br, bn, bd) = b.as_matrix_2d()?;
+        if ak != k || br != r {
+            bail!("{prefix}: LED factor shapes {ak}x{r} / {br}x{bn} do not chain from dim {k}");
+        }
+        n = bn;
+        let mut h = vec![0.0f32; rows * r];
+        matmul_into(rows, k, r, x, ad, &mut h);
+        y = vec![0.0f32; rows * n];
+        matmul_into(rows, r, n, &h, bd, &mut y);
+    } else {
+        bail!("no linear weights (w or a/b) under group {prefix:?}");
+    }
+    if let Some(bias) = params.get(&pname(prefix, "bias")) {
+        let bd = bias.as_f32()?;
+        if bd.len() != n {
+            bail!("{prefix}: bias len {} does not match output dim {n}", bd.len());
+        }
+        for row in y.chunks_exact_mut(n) {
+            for (v, &bv) in row.iter_mut().zip(bd) {
+                *v += bv;
+            }
+        }
+    }
+    Ok((n, y))
+}
+
+fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Result<()> {
+    let g = params
+        .get(&pname(prefix, "g"))
+        .ok_or_else(|| anyhow!("missing layernorm gain {prefix:?}"))?
+        .as_f32()?;
+    let bias = params
+        .get(&pname(prefix, "bias"))
+        .ok_or_else(|| anyhow!("missing layernorm bias {prefix:?}"))?
+        .as_f32()?;
+    if g.len() != d || bias.len() != d {
+        bail!("{prefix}: layernorm dims {}/{} != {d}", g.len(), bias.len());
+    }
+    const EPS: f32 = 1e-5;
+    for row in x.chunks_exact_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * g[j] + bias[j];
+        }
+    }
+    Ok(())
+}
+
+/// tanh-approximated GELU (the JAX default the AOT graphs lower).
+fn gelu(x: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let t = C * (*v + 0.044715 * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + t.tanh());
+    }
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// In-place row softmax with max-subtraction.
+fn softmax_rows(x: &mut [f32], cols: usize) {
+    for row in x.chunks_exact_mut(cols) {
+        let mut max = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            if v > max {
+                max = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transformer forward (text classifier + causal LM)
+// ---------------------------------------------------------------------------
+
+/// Token + position embedding: x(b·s, d).
+fn embed(params: &ParamStore, tokens: &[i32], b: usize, s: usize) -> Result<(usize, Vec<f32>)> {
+    let table = params
+        .get("embed/table")
+        .ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
+    let (vocab, d) = (table.shape[0], table.shape[1]);
+    let td = table.as_f32()?;
+    let pos = params
+        .get("pos/table")
+        .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?;
+    if pos.shape.len() != 2 || pos.shape[1] != d || pos.shape[0] < s {
+        bail!("pos/table {:?} incompatible with seq {s} / d {d}", pos.shape);
+    }
+    let pd = pos.as_f32()?;
+    let mut x = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for si in 0..s {
+            let t = tokens[bi * s + si];
+            if t < 0 || t as usize >= vocab {
+                bail!("token id {t} out of range (vocab {vocab})");
+            }
+            let row = &td[t as usize * d..(t as usize + 1) * d];
+            let prow = &pd[si * d..(si + 1) * d];
+            let dst = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+            for ((dv, &rv), &pv) in dst.iter_mut().zip(row).zip(prow) {
+                *dv = rv + pv;
+            }
+        }
+    }
+    Ok((d, x))
+}
+
+/// Count contiguous transformer blocks, erroring if any `block*` parameter
+/// lies beyond the contiguous range — a gap (pruned/renamed block, or a
+/// missing `ln1/g`) would otherwise silently truncate the model and return
+/// plausible-looking but wrong logits.
+fn num_blocks(params: &ParamStore) -> Result<usize> {
+    let mut n = 0;
+    while params.get(&format!("block{n}/ln1/g")).is_some() {
+        n += 1;
+    }
+    for name in params.names() {
+        if let Some(rest) = name.strip_prefix("block") {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(i) = digits.parse::<usize>() {
+                if i >= n {
+                    bail!(
+                        "checkpoint has {name:?} but only {n} contiguous blocks \
+                         (missing block{n}/ln1/g?)"
+                    );
+                }
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Multi-head self-attention over x(b·s, d); returns the o-projected context.
+#[allow(clippy::too_many_arguments)]
+fn attention(
+    params: &ParamStore,
+    prefix: &str,
+    b: usize,
+    s: usize,
+    d: usize,
+    heads: usize,
+    causal: bool,
+    x: &[f32],
+) -> Result<Vec<f32>> {
+    if heads == 0 || d % heads != 0 {
+        bail!("{prefix}: d={d} not divisible by heads={heads}");
+    }
+    let dk = d / heads;
+    let rows = b * s;
+    let (dq, q) = apply_linear(params, &pname(prefix, "q"), rows, d, x)?;
+    let (dkk, kk) = apply_linear(params, &pname(prefix, "k"), rows, d, x)?;
+    let (dv, v) = apply_linear(params, &pname(prefix, "v"), rows, d, x)?;
+    if dq != d || dkk != d || dv != d {
+        bail!("{prefix}: projection output dims {dq}/{dkk}/{dv} != d {d}");
+    }
+    let scale = 1.0 / (dk as f32).sqrt();
+    let mut ctx = vec![0.0f32; rows * d];
+    let mut qh = vec![0.0f32; s * dk];
+    let mut kt = vec![0.0f32; dk * s]; // k gathered pre-transposed: (dk, s)
+    let mut vh = vec![0.0f32; s * dk];
+    let mut scores = vec![0.0f32; s * s];
+    let mut oh = vec![0.0f32; s * dk];
+    for bi in 0..b {
+        for h in 0..heads {
+            for si in 0..s {
+                let src = (bi * s + si) * d + h * dk;
+                qh[si * dk..(si + 1) * dk].copy_from_slice(&q[src..src + dk]);
+                vh[si * dk..(si + 1) * dk].copy_from_slice(&v[src..src + dk]);
+                for ki in 0..dk {
+                    kt[ki * s + si] = kk[src + ki];
+                }
+            }
+            // scores(s, s) = qh @ kh^T * scale, with the causal mask applied
+            // before softmax (masked logits pinned to -1e9, like the graphs).
+            scores.fill(0.0);
+            matmul_into(s, dk, s, &qh, &kt, &mut scores);
+            for i in 0..s {
+                let row = &mut scores[i * s..(i + 1) * s];
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+                if causal {
+                    for v in row[i + 1..].iter_mut() {
+                        *v = -1e9;
+                    }
+                }
+            }
+            softmax_rows(&mut scores, s);
+            oh.fill(0.0);
+            matmul_into(s, s, dk, &scores, &vh, &mut oh);
+            for si in 0..s {
+                let dst = (bi * s + si) * d + h * dk;
+                ctx[dst..dst + dk].copy_from_slice(&oh[si * dk..(si + 1) * dk]);
+            }
+        }
+    }
+    let (do_, out) = apply_linear(params, &pname(prefix, "o"), rows, d, &ctx)?;
+    if do_ != d {
+        bail!("{prefix}: o-projection output dim {do_} != d {d}");
+    }
+    Ok(out)
+}
+
+/// Pre-LN transformer block, in place: x += attn(ln1(x)); x += ffn(ln2(x)).
+#[allow(clippy::too_many_arguments)]
+fn transformer_block(
+    params: &ParamStore,
+    prefix: &str,
+    b: usize,
+    s: usize,
+    d: usize,
+    heads: usize,
+    causal: bool,
+    x: &mut [f32],
+) -> Result<()> {
+    let rows = b * s;
+    let mut xn = x.to_vec();
+    layernorm(params, &pname(prefix, "ln1"), d, &mut xn)?;
+    let attn = attention(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn)?;
+    for (v, a) in x.iter_mut().zip(&attn) {
+        *v += a;
+    }
+    let mut xn = x.to_vec();
+    layernorm(params, &pname(prefix, "ln2"), d, &mut xn)?;
+    let (ff, mut h) = apply_linear(params, &pname(prefix, "fc1"), rows, d, &xn)?;
+    gelu(&mut h);
+    let (d2, y) = apply_linear(params, &pname(prefix, "fc2"), rows, ff, &h)?;
+    if d2 != d {
+        bail!("{prefix}: fc2 output dim {d2} != d {d}");
+    }
+    for (v, a) in x.iter_mut().zip(&y) {
+        *v += a;
+    }
+    Ok(())
+}
+
+/// Shared trunk: embed, blocks, final layernorm. Returns (d, x(b·s, d)).
+fn trunk(
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    heads: usize,
+    causal: bool,
+) -> Result<(usize, Vec<f32>)> {
+    let (d, mut x) = embed(params, tokens, b, s)?;
+    for i in 0..num_blocks(params)? {
+        transformer_block(params, &format!("block{i}"), b, s, d, heads, causal, &mut x)?;
+    }
+    layernorm(params, "ln_f", d, &mut x)?;
+    Ok((d, x))
+}
+
+/// Text classifier: mean-pool over tokens, then the head → (b, classes).
+fn classifier_fwd(
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    heads: usize,
+) -> Result<Tensor> {
+    let (d, x) = trunk(params, tokens, b, s, heads, false)?;
+    let mut pooled = vec![0.0f32; b * d];
+    for bi in 0..b {
+        let dst = &mut pooled[bi * d..(bi + 1) * d];
+        for si in 0..s {
+            let src = &x[(bi * s + si) * d..(bi * s + si + 1) * d];
+            for (dv, &sv) in dst.iter_mut().zip(src) {
+                *dv += sv;
+            }
+        }
+        let inv = 1.0 / s as f32;
+        for v in dst.iter_mut() {
+            *v *= inv;
+        }
+    }
+    let (classes, logits) = apply_linear(params, "head", b, d, &pooled)?;
+    Ok(Tensor::from_f32(&[b, classes], logits))
+}
+
+/// Causal LM: per-position next-token logits (b, s, vocab).
+fn lm_fwd(params: &ParamStore, tokens: &[i32], b: usize, s: usize, heads: usize) -> Result<Tensor> {
+    let (d, x) = trunk(params, tokens, b, s, heads, true)?;
+    let (vocab, logits) = apply_linear(params, "head", b * s, d, &x)?;
+    Ok(Tensor::from_f32(&[b, s, vocab], logits))
+}
+
+// ---------------------------------------------------------------------------
+// CNN forward (image classifier, Conv2d/CED im2col path)
+// ---------------------------------------------------------------------------
+
+/// SAME-padded stride-1 im2col: (b·h·w, kh·kw·c) patches in HWIO column
+/// order, matching the collapsed conv weight layout of `as_matrix_2d`.
+fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize, kh: usize, kw: usize) -> Vec<f32> {
+    let (ph, pw) = (kh / 2, kw / 2);
+    let cols = kh * kw * c;
+    let mut out = vec![0.0f32; b * h * w * cols];
+    for bi in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let row = ((bi * h + y) * w + xx) * cols;
+                for ky in 0..kh {
+                    let sy = y as isize + ky as isize - ph as isize;
+                    if sy < 0 || sy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for kx in 0..kw {
+                        let sx = xx as isize + kx as isize - pw as isize;
+                        if sx < 0 || sx >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + sy as usize) * w + sx as usize) * c;
+                        let dst = row + (ky * kw + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 max pool over (b, h, w, c) row-major data. Requires even h, w.
+fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Result<(usize, usize, Vec<f32>)> {
+    if h % 2 != 0 || w % 2 != 0 {
+        bail!("maxpool2 needs even spatial dims, got {h}x{w}");
+    }
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; b * oh * ow * c];
+    for bi in 0..b {
+        for y in 0..oh {
+            for xx in 0..ow {
+                let dst = ((bi * oh + y) * ow + xx) * c;
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let src = ((bi * h + 2 * y + dy) * w + 2 * xx + dx) * c;
+                    for ci in 0..c {
+                        let v = x[src + ci];
+                        if (dy, dx) == (0, 0) || v > out[dst + ci] {
+                            out[dst + ci] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((oh, ow, out))
+}
+
+fn conv_kernel(params: &ParamStore, prefix: &str) -> Result<(usize, usize, usize)> {
+    let t = params
+        .get(&pname(prefix, "w"))
+        .or_else(|| params.get(&pname(prefix, "a")))
+        .ok_or_else(|| anyhow!("no conv weights under group {prefix:?}"))?;
+    if t.ndim() != 4 {
+        bail!("{prefix}: conv weight must be 4-D HWIO, got {:?}", t.shape);
+    }
+    Ok((t.shape[0], t.shape[1], t.shape[2]))
+}
+
+/// CNN classifier: conv1 → relu → pool → conv2 → relu → pool → fc1 → relu →
+/// fc2 (the `image` model of the zoo). CED conv layers execute as
+/// im2col · a2d · b2d — two GEMMs through the rank bottleneck.
+fn image_fwd(params: &ParamStore, x: &Tensor) -> Result<Tensor> {
+    let (b, mut h, mut w, mut c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut cur = x.as_f32()?.to_vec();
+    for conv in ["conv1", "conv2"] {
+        let (kh, kw, cin) = conv_kernel(params, conv)?;
+        if cin != c {
+            bail!("{conv}: input channels {c} != weight cin {cin}");
+        }
+        let cols = im2col(&cur, b, h, w, c, kh, kw);
+        let (cout, mut y) = apply_linear(params, conv, b * h * w, kh * kw * c, &cols)?;
+        relu(&mut y);
+        let (oh, ow, pooled) = maxpool2(&y, b, h, w, cout)?;
+        cur = pooled;
+        h = oh;
+        w = ow;
+        c = cout;
+    }
+    // (b, h, w, c) row-major flattens directly to (b, h·w·c).
+    let flat = h * w * c;
+    let (fc, mut f1) = apply_linear(params, "fc1", b, flat, &cur)?;
+    relu(&mut f1);
+    let (classes, logits) = apply_linear(params, "fc2", b, fc, &f1)?;
+    Ok(Tensor::from_f32(&[b, classes], logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+    use crate::linalg::Matrix;
+
+    fn small_cfg() -> TextModelCfg {
+        TextModelCfg {
+            vocab: 96,
+            seq: 12,
+            d: 32,
+            heads: 4,
+            layers: 1,
+            ff: 64,
+            classes: 3,
+        }
+    }
+
+    fn tokens_for(cfg: &TextModelCfg, b: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let toks: Vec<i32> = (0..b * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        Tensor::from_i32(&[b, cfg.seq], toks)
+    }
+
+    #[test]
+    fn apply_linear_dense_matches_matrix_matmul() {
+        let mut rng = Pcg64::seeded(10);
+        let (m, k, n) = (5, 7, 9);
+        let x = Matrix::randn(m, k, 1.0, &mut rng);
+        let w = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut s = ParamStore::new();
+        s.insert("fc/w", Tensor::from_f32(&[k, n], w.data.clone()));
+        s.insert("fc/bias", Tensor::zeros(&[n], Dtype::F32));
+        let (nn, y) = apply_linear(&s, "fc", m, k, &x.data).unwrap();
+        assert_eq!(nn, n);
+        let want = x.matmul(&w);
+        for (a, b) in y.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn apply_linear_led_matches_dense_of_product() {
+        let mut rng = Pcg64::seeded(11);
+        let (m, k, r, n) = (4, 16, 3, 10);
+        let a = Matrix::randn(k, r, 0.5, &mut rng);
+        let b = Matrix::randn(r, n, 0.5, &mut rng);
+        let w = a.matmul(&b);
+        let x = Matrix::randn(m, k, 1.0, &mut rng);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 0.3);
+
+        let mut dense = ParamStore::new();
+        dense.insert("fc/w", Tensor::from_f32(&[k, n], w.data.clone()));
+        dense.insert("fc/bias", Tensor::from_f32(&[n], bias.clone()));
+        let mut led = ParamStore::new();
+        led.insert("fc/a", Tensor::from_f32(&[k, r], a.data.clone()));
+        led.insert("fc/b", Tensor::from_f32(&[r, n], b.data.clone()));
+        led.insert("fc/bias", Tensor::from_f32(&[n], bias));
+
+        let (_, yd) = apply_linear(&dense, "fc", m, k, &x.data).unwrap();
+        let (_, yl) = apply_linear(&led, "fc", m, k, &x.data).unwrap();
+        for (d, l) in yd.iter().zip(&yl) {
+            assert!((d - l).abs() <= 1e-4 * (1.0 + d.abs()), "{d} vs {l}");
+        }
+    }
+
+    #[test]
+    fn text_forward_shapes_and_determinism() {
+        let cfg = small_cfg();
+        let params = init_text_params(&cfg, 1);
+        let g = synth_fwd_graph("text", "dense", 3, &params).unwrap();
+        assert_eq!(g.inputs[0].shape, vec![3, cfg.seq]);
+        assert_eq!(g.outputs[0].shape, vec![3, cfg.classes]);
+        let x = tokens_for(&cfg, 3, 2);
+        let be = NativeBackend::new();
+        let out1 = be.run_fwd(&g, &params, &[x.clone()]).unwrap();
+        let out2 = be.run_fwd(&g, &params, &[x]).unwrap();
+        assert_eq!(out1[0].shape, vec![3, cfg.classes]);
+        assert_eq!(out1[0], out2[0]);
+        let logits = out1[0].as_f32().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn auto_fact_checkpoint_serves_through_same_interpreter() {
+        // LED/CED keep the layer I/O signature: one interpreter must run the
+        // SVD-factorized checkpoint unchanged. (Exact LED≡dense equivalence
+        // is pinned by tests/proptest_backend.rs with exact factors.)
+        let cfg = small_cfg();
+        let params = init_text_params(&cfg, 3);
+        let mut fact = params.clone();
+        let report = auto_fact(
+            &mut fact,
+            &AutoFactConfig {
+                rank: Rank::Ratio(0.5),
+                solver: Solver::Svd,
+                num_iter: 10,
+                submodules: None,
+            },
+        )
+        .unwrap();
+        assert!(report.n_factorized() > 0);
+        assert!(fact.n_params() < params.n_params());
+        let gf = synth_fwd_graph("text", "led", 2, &fact).unwrap();
+        let x = tokens_for(&cfg, 2, 4);
+        let yf = NativeBackend::new().run_fwd(&gf, &fact, &[x]).unwrap();
+        assert_eq!(yf[0].shape, vec![2, cfg.classes]);
+        assert!(yf[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn lm_forward_emits_per_position_logits() {
+        let cfg = TextModelCfg {
+            vocab: 64,
+            seq: 8,
+            d: 24,
+            heads: 6,
+            layers: 1,
+            ff: 48,
+            classes: 64, // head width = vocab for the LM
+        };
+        let params = init_text_params(&cfg, 5);
+        let g = synth_fwd_graph("lm", "dense", 2, &params).unwrap();
+        assert_eq!(g.outputs[0].shape, vec![2, cfg.seq, 64]);
+        let x = tokens_for(&cfg, 2, 6);
+        let out = NativeBackend::new().run_fwd(&g, &params, &[x]).unwrap();
+        assert_eq!(out[0].shape, vec![2, cfg.seq, 64]);
+    }
+
+    #[test]
+    fn causal_lm_ignores_future_tokens() {
+        let cfg = TextModelCfg {
+            vocab: 64,
+            seq: 8,
+            d: 24,
+            heads: 6,
+            layers: 1,
+            ff: 48,
+            classes: 64,
+        };
+        let params = init_text_params(&cfg, 7);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let mut a: Vec<i32> = (0..cfg.seq as i32).collect();
+        let out_a = NativeBackend::new()
+            .run_fwd(&g, &params, &[Tensor::from_i32(&[1, cfg.seq], a.clone())])
+            .unwrap();
+        // Change the last token: logits at earlier positions must not move.
+        a[cfg.seq - 1] = 63;
+        let out_b = NativeBackend::new()
+            .run_fwd(&g, &params, &[Tensor::from_i32(&[1, cfg.seq], a)])
+            .unwrap();
+        let (la, lb) = (out_a[0].as_f32().unwrap(), out_b[0].as_f32().unwrap());
+        let vocab = 64;
+        for p in 0..cfg.seq - 1 {
+            for j in 0..vocab {
+                let (x, y) = (la[p * vocab + j], lb[p * vocab + j]);
+                assert!((x - y).abs() < 1e-5, "pos {p}: {x} vs {y}");
+            }
+        }
+    }
+
+    fn tiny_image_params(seed: u64) -> ParamStore {
+        // 8x8 inputs: conv1 1->4, conv2 4->8, fc1 (2*2*8)->16, fc2 16->3.
+        let mut rng = Pcg64::seeded(seed);
+        let mut s = ParamStore::new();
+        let randn = |rng: &mut Pcg64, shape: &[usize]| {
+            let mut d = vec![0.0f32; shape.iter().product()];
+            rng.fill_normal(&mut d, 0.2);
+            Tensor::from_f32(shape, d)
+        };
+        s.insert("conv1/w", randn(&mut rng, &[3, 3, 1, 4]));
+        s.insert("conv1/bias", Tensor::zeros(&[4], Dtype::F32));
+        s.insert("conv2/w", randn(&mut rng, &[3, 3, 4, 8]));
+        s.insert("conv2/bias", Tensor::zeros(&[8], Dtype::F32));
+        s.insert("fc1/w", randn(&mut rng, &[32, 16]));
+        s.insert("fc1/bias", Tensor::zeros(&[16], Dtype::F32));
+        s.insert("fc2/w", randn(&mut rng, &[16, 3]));
+        s.insert("fc2/bias", Tensor::zeros(&[3], Dtype::F32));
+        s.sort_canonical();
+        s
+    }
+
+    #[test]
+    fn image_forward_shapes_and_synth_inference() {
+        let params = tiny_image_params(8);
+        let g = synth_fwd_graph("image", "dense", 2, &params).unwrap();
+        assert_eq!(g.inputs[0].shape, vec![2, 8, 8, 1]);
+        assert_eq!(g.outputs[0].shape, vec![2, 3]);
+        let mut rng = Pcg64::seeded(9);
+        let mut px = vec![0.0f32; 2 * 8 * 8];
+        rng.fill_normal(&mut px, 1.0);
+        let x = Tensor::from_f32(&[2, 8, 8, 1], px);
+        let out = NativeBackend::new().run_fwd(&g, &params, &[x]).unwrap();
+        assert_eq!(out[0].shape, vec![2, 3]);
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ced_conv_matches_dense_of_product() {
+        // conv with w = reshape(a2d @ b2d) must agree with the CED path.
+        let mut rng = Pcg64::seeded(12);
+        let (kh, kw, cin, r, cout) = (3, 3, 2, 4, 6);
+        let a2 = Matrix::randn(kh * kw * cin, r, 0.3, &mut rng);
+        let b2 = Matrix::randn(r, cout, 0.3, &mut rng);
+        let w2 = a2.matmul(&b2);
+        let mut dense = ParamStore::new();
+        dense.insert("conv1/w", Tensor::from_f32(&[kh, kw, cin, cout], w2.data.clone()));
+        dense.insert("conv1/bias", Tensor::zeros(&[cout], Dtype::F32));
+        let mut ced = ParamStore::new();
+        ced.insert("conv1/a", Tensor::from_f32(&[kh, kw, cin, r], a2.data.clone()));
+        ced.insert("conv1/b", Tensor::from_f32(&[1, 1, r, cout], b2.data.clone()));
+        ced.insert("conv1/bias", Tensor::zeros(&[cout], Dtype::F32));
+        let (b, h, w) = (1, 4, 4);
+        let mut px = vec![0.0f32; b * h * w * cin];
+        rng.fill_normal(&mut px, 1.0);
+        let cols = im2col(&px, b, h, w, cin, kh, kw);
+        let (_, yd) = apply_linear(&dense, "conv1", b * h * w, kh * kw * cin, &cols).unwrap();
+        let (_, yc) = apply_linear(&ced, "conv1", b * h * w, kh * kw * cin, &cols).unwrap();
+        for (d, c) in yd.iter().zip(&yc) {
+            assert!((d - c).abs() <= 1e-4 * (1.0 + d.abs()), "{d} vs {c}");
+        }
+    }
+
+    #[test]
+    fn maxpool_and_im2col_basics() {
+        // 1x2x2x1 pool picks the max.
+        let (oh, ow, p) = maxpool2(&[1.0, 3.0, 2.0, 0.5], 1, 2, 2, 1).unwrap();
+        assert_eq!((oh, ow), (1, 1));
+        assert_eq!(p, vec![3.0]);
+        assert!(maxpool2(&[0.0; 3], 1, 3, 1, 1).is_err());
+        // im2col of a 1x1 image with 3x3 kernel: center tap only.
+        let cols = im2col(&[5.0], 1, 1, 1, 1, 3, 3);
+        assert_eq!(cols.len(), 9);
+        assert_eq!(cols[4], 5.0);
+        assert_eq!(cols.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_tokens_and_bad_shapes() {
+        let cfg = small_cfg();
+        let params = init_text_params(&cfg, 13);
+        let g = synth_fwd_graph("text", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let bad = Tensor::from_i32(&[1, cfg.seq], vec![cfg.vocab as i32; cfg.seq]);
+        assert!(be.run_fwd(&g, &params, &[bad]).is_err());
+        let wrong_shape = Tensor::from_i32(&[2, cfg.seq], vec![0; 2 * cfg.seq]);
+        assert!(be.run_fwd(&g, &params, &[wrong_shape]).is_err());
+    }
+
+    #[test]
+    fn non_contiguous_blocks_error_instead_of_truncating() {
+        let cfg = small_cfg();
+        let mut params = init_text_params(&cfg, 15);
+        // Rename block0 to block2: the model must refuse to run, not
+        // silently skip the layer.
+        for leaf in ["ln1/g", "ln1/bias"] {
+            let t = params.remove(&format!("block0/{leaf}")).unwrap();
+            params.insert(format!("block2/{leaf}"), t);
+        }
+        params.sort_canonical();
+        assert!(num_blocks(&params).is_err());
+        let g = synth_fwd_graph("text", "dense", 1, &params).unwrap();
+        let x = tokens_for(&cfg, 1, 16);
+        assert!(NativeBackend::new().run_fwd(&g, &params, &[x]).is_err());
+    }
+
+    #[test]
+    fn demo_variants_builds_a_factorized_pair() {
+        let (dense, led) = demo_variants(&small_cfg(), 21, 0.25).unwrap();
+        assert!(led.n_params() < dense.n_params());
+        assert!(led.get("block0/fc1/a").is_some());
+        assert!(dense.get("block0/fc1/w").is_some());
+    }
+
+    #[test]
+    fn synth_graph_records_ranks_and_config() {
+        let cfg = small_cfg();
+        let mut params = init_text_params(&cfg, 14);
+        auto_fact(
+            &mut params,
+            &AutoFactConfig {
+                rank: Rank::Ratio(0.5),
+                solver: Solver::Svd,
+                num_iter: 5,
+                submodules: None,
+            },
+        )
+        .unwrap();
+        let g = synth_fwd_graph("text", "led_r50", 4, &params).unwrap();
+        assert!(!g.ranks.is_empty());
+        assert_eq!(g.config["seq"], cfg.seq);
+        assert_eq!(g.config["d"], cfg.d);
+        assert_eq!(g.config["heads"], 4);
+        assert_eq!(g.batch, 4);
+        assert_eq!(g.n_params, params.n_params());
+    }
+}

@@ -1,14 +1,17 @@
-//! Serving coordinator: dynamic batching + variant routing over the PJRT
-//! engine. Greenformer's serving story is "same model, a family of
-//! factorized variants at different speed/quality points"; the coordinator
-//! turns that into a runtime policy:
+//! Serving coordinator: dynamic batching + variant routing over a
+//! [`crate::backend::Backend`]. Greenformer's serving story is "same model,
+//! a family of factorized variants at different speed/quality points"; the
+//! coordinator turns that into a runtime policy:
 //!
 //! * [`batcher`] — size-or-deadline dynamic batching with padding to the
 //!   artifact batch size (pure assembly logic, proptest-able).
 //! * [`router`] — picks the variant per request: static pinning, per-request
 //!   tier, or adaptive load-shedding (deep queue → lower-rank variant, the
 //!   latency/quality trade Figure 2 quantifies).
-//! * [`server`] — the tokio loop tying queue → batcher → engine → responses.
+//! * [`server`] — the dispatcher thread tying queue → batcher → backend →
+//!   responses. Backend selection is automatic (PJRT when artifacts resolve,
+//!   the native interpreter otherwise) or pinned via
+//!   [`server::serve_classifier_native`].
 //! * [`metrics`] — counters + latency histogram.
 
 pub mod batcher;
@@ -19,4 +22,7 @@ pub mod server;
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, Tier};
-pub use server::{serve_classifier, ClassifyRequest, ClassifyResponse, ServerHandle};
+pub use server::{
+    serve_classifier, serve_classifier_native, serve_classifier_with, ClassifyRequest,
+    ClassifyResponse, ServeResult, ServerHandle,
+};

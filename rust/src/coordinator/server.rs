@@ -1,16 +1,25 @@
-//! The serving loop: queue → router → batcher → engine → responses.
+//! The serving loop: queue → router → batcher → backend → responses.
 //!
 //! Thread-based (the offline build has no async runtime — and none is
-//! needed: PJRT execution is the only blocking operation and it is CPU
+//! needed: graph execution is the only blocking operation and it is CPU
 //! bound). One dispatcher thread owns all batchers; execution happens on the
 //! dispatcher so batches are strictly ordered per variant. Clients block on
 //! a oneshot-style channel; concurrency comes from client threads.
 //!
-//! Invariants (pinned by rust/tests/proptest_coordinator.rs):
+//! Execution goes through the [`Backend`] abstraction: the PJRT engine when
+//! AOT artifacts resolve, the pure-Rust [`NativeBackend`] otherwise — so the
+//! full serving path runs (and is tested, see
+//! `tests/integration_serving_native.rs`) on a fresh checkout with no
+//! `artifacts/` and no XLA runtime.
+//!
+//! Invariants (pinned by rust/tests/proptest_coordinator.rs and the serving
+//! integration tests):
 //! * every submitted request receives exactly one response or an error;
 //! * executed batches never exceed the artifact batch size;
 //! * padding rows never produce responses;
-//! * responses carry the variant that actually served them.
+//! * responses carry the variant that actually served them;
+//! * a malformed request (wrong token length) gets an error response and
+//!   never panics the dispatcher.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -23,15 +32,20 @@ use anyhow::anyhow;
 use super::batcher::{plan, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::{Router, Tier};
-use crate::runtime::Engine;
+use crate::backend::{native, Backend, NativeBackend, PjrtBackend};
+use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
+
+/// Per-request outcome sent back over the response channel: the response, or
+/// a rejection/failure message (`String`, so the channel stays `Send`).
+pub type ServeResult = std::result::Result<ClassifyResponse, String>;
 
 /// A text-classification request: tokens (seq,) + quality tier.
 pub struct ClassifyRequest {
     pub tokens: Vec<i32>,
     pub tier: Tier,
-    resp: SyncSender<ClassifyResponse>,
+    resp: SyncSender<ServeResult>,
 }
 
 #[derive(Clone, Debug)]
@@ -64,7 +78,11 @@ impl ServerHandle {
                 resp: tx,
             })
             .map_err(|_| anyhow!("server shut down"))?;
-        rx.recv().map_err(|_| anyhow!("request dropped (batch failed)"))
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(anyhow!("request rejected: {msg}")),
+            Err(_) => Err(anyhow!("request dropped (server shut down mid-batch)")),
+        }
     }
 
     /// Non-blocking submit; Err(tokens) when the queue is full.
@@ -72,7 +90,7 @@ impl ServerHandle {
         &self,
         tokens: Vec<i32>,
         tier: Tier,
-    ) -> std::result::Result<Receiver<ClassifyResponse>, Vec<i32>> {
+    ) -> std::result::Result<Receiver<ServeResult>, Vec<i32>> {
         let (tx, rx) = sync_channel(1);
         let req = ClassifyRequest {
             tokens,
@@ -100,22 +118,116 @@ impl ServerHandle {
 struct Pending {
     tokens: Vec<i32>,
     arrived: Instant,
-    resp: SyncSender<ClassifyResponse>,
+    resp: SyncSender<ServeResult>,
 }
 
-/// Spawn the serving loop for one model family.
+/// What a backend factory hands the dispatcher: the executor plus one fwd
+/// graph (real or synthesized) per variant.
+pub type BackendBundle = (Box<dyn Backend>, HashMap<String, GraphSpec>);
+
+/// Resolve the PJRT bundle over a loaded engine: one fwd graph per variant
+/// (largest batch ≤ `max_batch`, falling back to the largest available),
+/// with the executable cache warmed so first requests don't pay compile
+/// time. Startup errors (missing graph, compile failure) are returned.
+fn pjrt_bundle(
+    engine: Engine,
+    model: &str,
+    variants: &HashMap<String, ParamStore>,
+    max_batch: usize,
+) -> Result<BackendBundle> {
+    let mut graphs = HashMap::new();
+    for name in variants.keys() {
+        let g = engine
+            .manifest()
+            .find(model, name, "fwd", Some(max_batch.max(1)))
+            .or_else(|_| engine.manifest().find(model, name, "fwd", None))
+            .cloned()?;
+        engine.executable(&g.name)?;
+        graphs.insert(name.clone(), g);
+    }
+    Ok((Box::new(PjrtBackend::from_engine(engine)), graphs))
+}
+
+/// Build the native bundle: synthesize a fwd spec per variant directly from
+/// its checkpoint — no artifacts required.
+fn native_bundle(
+    model: &str,
+    variants: &HashMap<String, ParamStore>,
+    max_batch: usize,
+) -> Result<BackendBundle> {
+    let mut graphs = HashMap::new();
+    for (name, store) in variants {
+        let g = native::synth_fwd_graph(model, name, max_batch.max(1), store)?;
+        graphs.insert(name.clone(), g);
+    }
+    Ok((Box::new(NativeBackend::new()), graphs))
+}
+
+/// Spawn the serving loop for one model family, selecting the backend
+/// automatically: PJRT when `artifacts_dir` holds a manifest and the runtime
+/// loads, the native interpreter otherwise. With artifacts present, a
+/// variant without a fwd graph is still a synchronous startup error (it
+/// signals a store/manifest mismatch, not a missing runtime).
 ///
-/// `variants` maps variant name → its trained/factorized checkpoint. Each
-/// variant must have a fwd graph in the manifest; the largest batch ≤
-/// `cfg.max_batch` is used. Requests route per `router`.
-///
-/// The dispatcher thread builds its *own* [`Engine`] over `artifacts_dir`:
-/// the PJRT client wrapper is `Rc`-based and cannot cross threads, so each
-/// thread that executes graphs owns a client. Startup errors (bad variant,
-/// missing graph, compile failure) are reported synchronously.
+/// `variants` maps variant name → its trained/factorized checkpoint.
+/// Requests route per `router`. The dispatcher thread builds its *own*
+/// backend: the PJRT client wrapper is `Rc`-based and cannot cross threads,
+/// so the thread that executes graphs owns the client.
 pub fn serve_classifier(
     artifacts_dir: std::path::PathBuf,
     model: &str,
+    variants: HashMap<String, ParamStore>,
+    router: Router,
+    cfg: BatcherConfig,
+    queue_capacity: usize,
+) -> Result<ServerHandle> {
+    let model = model.to_string();
+    let max_batch = cfg.max_batch;
+    serve_classifier_with(
+        move |variants| {
+            if artifacts_dir.join("manifest.json").exists() {
+                match Engine::load(artifacts_dir.clone()) {
+                    Ok(engine) => return pjrt_bundle(engine, &model, variants, max_batch),
+                    Err(e) => {
+                        eprintln!("PJRT runtime unavailable ({e:#}); serving on native backend");
+                    }
+                }
+            }
+            native_bundle(&model, variants, max_batch)
+        },
+        variants,
+        router,
+        cfg,
+        queue_capacity,
+    )
+}
+
+/// [`serve_classifier`] pinned to the native backend — fully hermetic, used
+/// by the artifact-free serving tests and benches.
+pub fn serve_classifier_native(
+    model: &str,
+    variants: HashMap<String, ParamStore>,
+    router: Router,
+    cfg: BatcherConfig,
+    queue_capacity: usize,
+) -> Result<ServerHandle> {
+    let model = model.to_string();
+    let max_batch = cfg.max_batch;
+    serve_classifier_with(
+        move |variants| native_bundle(&model, variants, max_batch),
+        variants,
+        router,
+        cfg,
+        queue_capacity,
+    )
+}
+
+/// Core serving entry point, generic over how the backend is built. The
+/// factory runs *on the dispatcher thread* (backends need not be `Send`) and
+/// must return a graph for every variant key; its error is reported
+/// synchronously from this call.
+pub fn serve_classifier_with(
+    factory: impl FnOnce(&HashMap<String, ParamStore>) -> Result<BackendBundle> + Send + 'static,
     variants: HashMap<String, ParamStore>,
     router: Router,
     cfg: BatcherConfig,
@@ -129,39 +241,34 @@ pub fn serve_classifier(
 
     let metrics_bg = metrics.clone();
     let depth_bg = depth.clone();
-    let model = model.to_string();
     std::thread::Builder::new()
         .name("gf-dispatch".into())
         .spawn(move || {
-            // Engine lives on this thread for its whole life.
-            let engine = match Engine::load(artifacts_dir) {
-                Ok(e) => e,
+            // The backend lives on this thread for its whole life.
+            let (backend, graphs) = match factory(&variants) {
+                Ok(bundle) => bundle,
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            // Resolve one fwd graph per variant and warm the executable
-            // cache so first requests don't pay compile time.
-            let mut graphs = HashMap::new();
             for name in variants.keys() {
-                let g = engine
-                    .manifest()
-                    .find(&model, name, "fwd", Some(cfg.max_batch.max(1)))
-                    .or_else(|_| engine.manifest().find(&model, name, "fwd", None))
-                    .cloned();
-                match g.and_then(|g| engine.executable(&g.name).map(|_| g)) {
-                    Ok(g) => {
-                        graphs.insert(name.clone(), g);
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
+                if !graphs.contains_key(name) {
+                    let _ = ready_tx.send(Err(anyhow!("backend returned no graph for {name:?}")));
+                    return;
                 }
             }
             let _ = ready_tx.send(Ok(()));
-            dispatch_loop(engine, graphs, variants, router, cfg, rx, metrics_bg, depth_bg);
+            dispatch_loop(
+                backend.as_ref(),
+                graphs,
+                variants,
+                router,
+                cfg,
+                rx,
+                metrics_bg,
+                depth_bg,
+            );
         })
         .expect("spawning dispatcher");
 
@@ -173,8 +280,8 @@ pub fn serve_classifier(
 
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop(
-    engine: Engine,
-    graphs: HashMap<String, crate::runtime::GraphSpec>,
+    backend: &dyn Backend,
+    graphs: HashMap<String, GraphSpec>,
     variants: HashMap<String, ParamStore>,
     router: Router,
     cfg: BatcherConfig,
@@ -224,7 +331,7 @@ fn dispatch_loop(
                     let taken = std::mem::take(pendings);
                     depth.fetch_sub(taken.len(), Ordering::Relaxed);
                     run_batch(
-                        &engine,
+                        backend,
                         &graphs[&variant],
                         &variants[&variant],
                         &variant,
@@ -241,7 +348,7 @@ fn dispatch_loop(
                         let taken = std::mem::take(pendings);
                         depth.fetch_sub(taken.len(), Ordering::Relaxed);
                         run_batch(
-                            &engine,
+                            backend,
                             &graphs[variant],
                             &variants[variant],
                             variant,
@@ -259,7 +366,7 @@ fn dispatch_loop(
                         let taken = std::mem::take(pendings);
                         depth.fetch_sub(taken.len(), Ordering::Relaxed);
                         run_batch(
-                            &engine,
+                            backend,
                             &graphs[variant],
                             &variants[variant],
                             variant,
@@ -276,8 +383,8 @@ fn dispatch_loop(
 }
 
 fn run_batch(
-    engine: &Engine,
-    graph: &crate::runtime::GraphSpec,
+    backend: &dyn Backend,
+    graph: &GraphSpec,
     params: &ParamStore,
     variant: &str,
     ids: Vec<usize>,
@@ -287,18 +394,45 @@ fn run_batch(
     let artifact_batch = graph.batch;
     let seq = graph.inputs[0].shape[1];
     let classes = graph.outputs[0].shape[1];
-    let p = plan(ids, artifact_batch);
+
+    // Bounds-check requests against the graph: token length vs the seq dim,
+    // and token ids vs the vocab when the graph records it. A malformed
+    // request gets an error response; it must never panic the dispatcher or
+    // fail the well-formed requests co-batched with it.
+    let vocab = graph.config_usize("vocab").ok();
+    let mut valid = Vec::with_capacity(ids.len());
+    for i in ids {
+        let toks = &pendings[i].tokens;
+        let reject = if toks.len() != seq {
+            Some(format!("token length {} does not match model seq {seq}", toks.len()))
+        } else if let Some(v) = vocab {
+            toks.iter()
+                .find(|&&t| t < 0 || t as usize >= v)
+                .map(|&t| format!("token id {t} out of range (vocab {v})"))
+        } else {
+            None
+        };
+        match reject {
+            None => valid.push(i),
+            Some(msg) => {
+                metrics.record_error();
+                let _ = pendings[i].resp.send(Err(msg));
+            }
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let p = plan(valid, artifact_batch);
 
     let mut toks = Vec::with_capacity(artifact_batch * seq);
     for &i in &p.members {
-        let t = &pendings[i].tokens;
-        assert_eq!(t.len(), seq, "request seq mismatch");
-        toks.extend_from_slice(t);
+        toks.extend_from_slice(&pendings[i].tokens);
     }
     toks.resize(artifact_batch * seq, 0); // PAD rows
     let x = Tensor::from_i32(&[artifact_batch, seq], toks);
 
-    match engine.run_fwd(graph, params, &[x]) {
+    match backend.run_fwd(graph, params, &[x]) {
         Ok(out) => {
             let logits = out[0].as_f32().expect("f32 logits");
             metrics.record_batch(p.members.len(), p.pad_rows, variant);
@@ -314,18 +448,22 @@ fn run_batch(
                     .unwrap_or(0);
                 let latency = finished.duration_since(pend.arrived);
                 metrics.record_latency(latency);
-                let _ = pend.resp.send(ClassifyResponse {
+                let _ = pend.resp.send(Ok(ClassifyResponse {
                     logits: row_logits,
                     label,
                     variant: variant.to_string(),
                     latency,
-                });
+                }));
             }
         }
         Err(e) => {
-            metrics.record_error();
             eprintln!("batch execution failed on {variant}: {e:#}");
-            // Dropping pendings closes their channels; clients see an error.
+            for &i in &p.members {
+                metrics.record_error();
+                let _ = pendings[i]
+                    .resp
+                    .send(Err(format!("batch execution failed: {e:#}")));
+            }
         }
     }
 }

@@ -1,9 +1,14 @@
 //! Evaluation harnesses: classifier accuracy and in-context-learning
 //! accuracy, plus the latency instrumentation Figure 2's speedup axis needs.
+//!
+//! All harnesses execute through [`Backend`], so the same evaluation runs on
+//! the PJRT engine (artifacts present) or the native CPU interpreter
+//! (hermetic checkouts) — `&Engine` call sites coerce unchanged.
 
+use crate::backend::Backend;
 use crate::data::lm::{compose_prompt, IclPrompt};
 use crate::data::{batch, vocab, Dataset, Split};
-use crate::runtime::{Engine, GraphSpec};
+use crate::runtime::GraphSpec;
 use crate::tensor::{ParamStore, Tensor};
 use crate::util::Stopwatch;
 use crate::Result;
@@ -38,7 +43,7 @@ fn argmax(row: &[f32]) -> usize {
 /// Evaluate a classifier graph on `examples` held-out examples.
 /// `image_hw` selects the image collation path.
 pub fn eval_classifier(
-    engine: &Engine,
+    backend: &dyn Backend,
     graph: &GraphSpec,
     params: &ParamStore,
     ds: &dyn Dataset,
@@ -60,7 +65,7 @@ pub fn eval_classifier(
     let batches = examples.div_ceil(bsz);
     for bi in 0..batches {
         let (x, y) = batch(ds, Split::Eval, bi * bsz, bsz, image_hw);
-        let out = sw.time(|| engine.run_fwd(graph, params, &[x]))?;
+        let out = sw.time(|| backend.run_fwd(graph, params, &[x]))?;
         let logits = out[0].as_f32()?;
         let labels = y.as_i32()?;
         let take = (examples - total).min(bsz);
@@ -99,7 +104,7 @@ pub fn score_prompt(logits: &Tensor, row: usize, prompt: &IclPrompt) -> Result<u
 
 /// Few-shot evaluation of the causal LM on a text task.
 pub fn eval_icl(
-    engine: &Engine,
+    backend: &dyn Backend,
     graph: &GraphSpec,
     params: &ParamStore,
     task: &dyn Dataset,
@@ -122,7 +127,7 @@ pub fn eval_icl(
             toks.extend_from_slice(&p.tokens);
         }
         let x = Tensor::from_i32(&[bsz, seq], toks);
-        let out = sw.time(|| engine.run_fwd(graph, params, &[x]))?;
+        let out = sw.time(|| backend.run_fwd(graph, params, &[x]))?;
         let take = (examples - total).min(bsz);
         for (i, p) in prompts.iter().take(take).enumerate() {
             if score_prompt(&out[0], i, p)? == p.label {
@@ -143,7 +148,7 @@ pub fn eval_icl(
 /// Median latency (seconds) of a single forward pass of `graph`, after
 /// `warmup` discarded runs — the speedup axis of Figure 2.
 pub fn measure_latency(
-    engine: &Engine,
+    backend: &dyn Backend,
     graph: &GraphSpec,
     params: &ParamStore,
     inputs: &[Tensor],
@@ -151,11 +156,11 @@ pub fn measure_latency(
     iters: usize,
 ) -> Result<f64> {
     for _ in 0..warmup {
-        engine.run_fwd(graph, params, inputs)?;
+        backend.run_fwd(graph, params, inputs)?;
     }
     let mut sw = Stopwatch::new();
     for _ in 0..iters {
-        sw.time(|| engine.run_fwd(graph, params, inputs))?;
+        sw.time(|| backend.run_fwd(graph, params, inputs))?;
     }
     Ok(sw.median_secs())
 }

@@ -30,6 +30,9 @@
 //! * [`runtime`] — PJRT engine: loads AOT HLO-text artifacts (built once by
 //!   `python/compile/aot.py`), compiles, caches, executes. Python never runs
 //!   at request time.
+//! * [`backend`] — the execution abstraction: one `Backend` trait over the
+//!   PJRT engine and a pure-Rust `NativeBackend` interpreter, so serving and
+//!   evaluation run hermetically when artifacts are absent (DESIGN.md §8).
 //! * [`train`] — training driver over the fused `train_step` artifacts.
 //! * [`coordinator`] — serving: dynamic batcher, variant router, in-context
 //!   learning prompt composer, metrics.
@@ -40,6 +43,7 @@
 //! * [`eval`] — accuracy evaluation harnesses shared by examples/benches.
 //! * [`experiments`] — Figure-2 / table regeneration harnesses.
 
+pub mod backend;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -7,8 +7,12 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
+use greenformer::backend::native::{demo_variants, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::NativeBackend;
 use greenformer::config::ExperimentConfig;
-use greenformer::coordinator::{serve_classifier, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::coordinator::{
+    serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+};
 use greenformer::data::image::{all_image_tasks, HW};
 use greenformer::data::text::all_text_tasks;
 use greenformer::data::Dataset;
@@ -22,7 +26,7 @@ use greenformer::Result;
 const USAGE: &str = "\
 greenformer — factorization toolkit for efficient DNNs (paper reproduction)
 
-USAGE: greenformer [--artifacts DIR] <command> [options]
+USAGE: greenformer [--artifacts DIR] [--backend auto|native|pjrt] <command> [options]
 
 COMMANDS:
   info                                  show the artifact manifest summary
@@ -32,12 +36,16 @@ COMMANDS:
   train     [--model text] [--variant dense] [--task polarity]
             [--steps 300] [--out-dir runs]
   eval      --ckpt F [--model text] [--variant dense] [--task polarity]
-            [--examples 256]
+            [--examples 256] [--batch 8]
   run       --config F                  config-driven experiment (JSON)
   fig2      [--use-case by-design|post-training|icl] [--quick]
   report-cost                           cost-model table (E5)
   report-solvers                        solver comparison table (E6)
   serve-demo [--requests 200] [--train-steps 60]
+
+Backends: pjrt executes the AOT artifacts; native is the pure-Rust CPU
+interpreter (no artifacts needed). auto picks pjrt when artifacts exist.
+eval and serve-demo honor --backend; train/fig2/run need pjrt artifacts.
 
 Tasks: polarity | topic | matching (text), shapes | blobs (image).
 Env: GREENFORMER_ARTIFACTS, GREENFORMER_STEPS, GREENFORMER_EVAL.";
@@ -82,12 +90,42 @@ impl Args {
     }
 }
 
-fn engine(args: &Args) -> Result<Engine> {
-    let dir = args
-        .get("--artifacts")
+fn artifacts_dir_arg(args: &Args) -> PathBuf {
+    args.get("--artifacts")
         .map(PathBuf::from)
-        .unwrap_or_else(greenformer::artifacts_dir);
-    Engine::load(dir)
+        .unwrap_or_else(greenformer::artifacts_dir)
+}
+
+fn engine(args: &Args) -> Result<Engine> {
+    Engine::load(artifacts_dir_arg(args))
+}
+
+/// Resolved `--backend` choice (auto = pjrt when a manifest exists).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BackendChoice {
+    Native,
+    Pjrt,
+}
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    match args.get_or("--backend", "auto").as_str() {
+        "native" => Ok(BackendChoice::Native),
+        "pjrt" => Ok(BackendChoice::Pjrt),
+        "auto" => {
+            // Probe the whole PJRT path: artifacts may exist while the
+            // runtime is the offline stub — auto must fall back to native
+            // then, matching serve_classifier's documented behavior. (The
+            // probe engine is discarded; a second load at use time is an
+            // accepted one-off CLI startup cost.)
+            let dir = artifacts_dir_arg(args);
+            if dir.join("manifest.json").exists() && Engine::load(dir).is_ok() {
+                Ok(BackendChoice::Pjrt)
+            } else {
+                Ok(BackendChoice::Native)
+            }
+        }
+        other => anyhow::bail!("unknown backend {other:?} (native|pjrt|auto)"),
+    }
 }
 
 fn find_task(name: &str, seed: u64) -> Result<(Box<dyn Dataset>, bool)> {
@@ -188,7 +226,6 @@ fn main() -> Result<()> {
             println!("saved {path:?}");
         }
         "eval" => {
-            let eng = engine(&args)?;
             let model = args.get_or("--model", "text");
             let variant = args.get_or("--variant", "dense");
             let task = args.get_or("--task", "polarity");
@@ -197,18 +234,39 @@ fn main() -> Result<()> {
             let (ds, is_image) = find_task(&task, 42)?;
             let hw = is_image.then_some((HW, HW, 1usize));
             let mut params = ParamStore::load_gtz(&ckpt)?;
-            let graph = eng.manifest().find(&model, &variant, "fwd", None)?.clone();
-            params.reorder_to(&graph.params.iter().map(|p| p.name.clone()).collect::<Vec<_>>())?;
-            let ev = greenformer::eval::eval_classifier(
-                &eng,
-                &graph,
-                &params,
-                ds.as_ref(),
-                examples,
-                hw,
-            )?;
+            let choice = backend_choice(&args)?;
+            let ev = match choice {
+                BackendChoice::Pjrt => {
+                    let eng = engine(&args)?;
+                    let graph = eng.manifest().find(&model, &variant, "fwd", None)?.clone();
+                    params.reorder_to(
+                        &graph.params.iter().map(|p| p.name.clone()).collect::<Vec<_>>(),
+                    )?;
+                    greenformer::eval::eval_classifier(
+                        &eng,
+                        &graph,
+                        &params,
+                        ds.as_ref(),
+                        examples,
+                        hw,
+                    )?
+                }
+                BackendChoice::Native => {
+                    let batch = args.parse_or("--batch", 8usize);
+                    let graph = synth_fwd_graph(&model, &variant, batch, &params)?;
+                    greenformer::eval::eval_classifier(
+                        &NativeBackend::new(),
+                        &graph,
+                        &params,
+                        ds.as_ref(),
+                        examples,
+                        hw,
+                    )?
+                }
+            };
             println!(
-                "{model}/{variant} on {task}: acc {:.3} ({}/{})  {:.2} ms/batch  {:.0} ex/s",
+                "{model}/{variant} on {task} [{:?}]: acc {:.3} ({}/{})  {:.2} ms/batch  {:.0} ex/s",
+                choice,
                 ev.accuracy(),
                 ev.correct,
                 ev.total,
@@ -294,20 +352,33 @@ fn run_config(eng: &Engine, cfg: &ExperimentConfig) -> Result<()> {
 }
 
 fn serve_demo(args: &Args, requests: usize, train_steps: usize) -> Result<()> {
-    let art_dir = args
-        .get("--artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(greenformer::artifacts_dir);
-    let eng = engine(args)?;
+    let art_dir = artifacts_dir_arg(args);
+    let choice = backend_choice(args)?;
     let (ds, _) = find_task("polarity", 42)?;
 
-    // Train dense + one factorized variant briefly so routing has a ladder.
-    println!("preparing variants (training {train_steps} steps each)...");
     let mut stores = HashMap::new();
-    for variant in ["dense", "led_r25"] {
-        let mut t = Trainer::from_init(&eng, "text", variant)?;
-        t.train_classifier(ds.as_ref(), train_steps, None, |_| {})?;
-        stores.insert(variant.to_string(), t.params);
+    match choice {
+        BackendChoice::Pjrt => {
+            // Train dense + one factorized variant briefly so routing has a
+            // quality/speed ladder.
+            let eng = engine(args)?;
+            println!("preparing variants (training {train_steps} steps each)...");
+            for variant in ["dense", "led_r25"] {
+                let mut t = Trainer::from_init(&eng, "text", variant)?;
+                t.train_classifier(ds.as_ref(), train_steps, None, |_| {})?;
+                stores.insert(variant.to_string(), t.params);
+            }
+        }
+        BackendChoice::Native => {
+            // Hermetic demo: random-init dense + a factorized variant (see
+            // demo_variants for the Random-solver rationale). The routing/
+            // batching/metrics path is identical; accuracy is meaningless
+            // without training.
+            println!("native backend: serving random-init checkpoints (no training)");
+            let (dense, led) = demo_variants(&TextModelCfg::default(), 42, 0.25)?;
+            stores.insert("dense".to_string(), dense);
+            stores.insert("led_r25".to_string(), led);
+        }
     }
 
     let router = Router::new(
@@ -321,15 +392,19 @@ fn serve_demo(args: &Args, requests: usize, train_steps: usize) -> Result<()> {
         stores.keys().cloned().collect(),
     )?;
 
-    drop(eng);
-    let handle = serve_classifier(
-        art_dir,
-        "text",
-        stores,
-        router,
-        BatcherConfig::default(),
-        1024,
-    )?;
+    let handle = match choice {
+        BackendChoice::Pjrt => serve_classifier(
+            art_dir,
+            "text",
+            stores,
+            router,
+            BatcherConfig::default(),
+            1024,
+        )?,
+        BackendChoice::Native => {
+            serve_classifier_native("text", stores, router, BatcherConfig::default(), 1024)?
+        }
+    };
 
     let mut joins = Vec::new();
     for i in 0..requests {

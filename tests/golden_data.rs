@@ -1,0 +1,117 @@
+//! Golden-value regression for the deterministic data generators.
+//!
+//! Pins the first Train example of each of the 5 synthetic tasks at seed 0:
+//! full token sequences + labels for the text tasks, and label + strided
+//! pixel probes + total mass for the image tasks. Every downstream accuracy
+//! number in the experiments is a function of these streams, so a PCG64 or
+//! data-pipeline refactor that silently shifts them must fail here first
+//! (and update these constants deliberately).
+//!
+//! Derivation: the values were cross-checked against an independent PCG64
+//! implementation (numpy's, same XSL-RR 128/64 output function). Token
+//! values are exact; pixel probes carry a small tolerance for libm ulp
+//! differences in the Box–Muller/Gaussian path.
+
+use greenformer::data::image::{BlobsTask, ShapesTask, HW};
+use greenformer::data::text::{MatchingTask, PolarityTask, TopicTask};
+use greenformer::data::{Dataset, Split};
+
+const SEQ: usize = 64;
+
+#[rustfmt::skip]
+const POLARITY_TOKENS: [i32; 64] = [
+    1, 111, 66, 380, 475, 64, 68, 200, 402, 57, 449, 389, 219, 413, 361, 108,
+    173, 142, 45, 337, 420, 252, 395, 125, 248, 178, 490, 56, 122, 157, 18, 178,
+    413, 305, 310, 403, 185, 152, 321, 472, 480, 328, 158, 208, 117, 323, 510, 413,
+    490, 271, 90, 137, 329, 253, 499, 189, 295, 125, 190, 54, 432, 337, 48, 507,
+];
+
+#[rustfmt::skip]
+const TOPIC_TOKENS: [i32; 64] = [
+    1, 396, 490, 355, 238, 210, 382, 416, 312, 241, 119, 254, 476, 454, 442, 450,
+    245, 425, 389, 94, 234, 145, 138, 309, 316, 453, 328, 341, 358, 507, 285, 309,
+    229, 496, 336, 378, 433, 129, 505, 210, 344, 370, 124, 330, 359, 365, 351, 235,
+    386, 413, 208, 345, 484, 302, 421, 430, 373, 123, 300, 366, 293, 271, 328, 428,
+];
+
+#[rustfmt::skip]
+const MATCHING_TOKENS: [i32; 64] = [
+    1, 461, 463, 390, 391, 312, 469, 324, 400, 442, 507, 473, 344, 412, 289, 213,
+    262, 422, 342, 301, 326, 333, 395, 349, 375, 435, 496, 479, 359, 464, 424, 475,
+    2, 439, 485, 386, 423, 385, 403, 369, 442, 364, 441, 489, 401, 355, 424, 343,
+    420, 332, 213, 262, 437, 284, 374, 480, 314, 388, 411, 279, 409, 440, 303, 482,
+];
+
+/// Pixel probe positions: every 49th pixel of the 28×28 image.
+const PIX_IDX: [usize; 16] = [
+    0, 49, 98, 147, 196, 245, 294, 343, 392, 441, 490, 539, 588, 637, 686, 735,
+];
+
+#[rustfmt::skip]
+const SHAPES_PROBES: [f32; 16] = [
+    0.0, 0.126298, 0.0, 0.0566745, 0.0, 0.00977657, 0.0, 0.0513239,
+    0.0, 0.0, 0.016975, 0.0970927, 0.0, 0.0, 0.0881016, 0.0,
+];
+const SHAPES_SUM: f64 = 70.351784;
+
+#[rustfmt::skip]
+const BLOBS_PROBES: [f32; 16] = [
+    0.057342, 0.0645856, 0.0813607, 0.0247114, 0.0428923, 0.00321283, 0.0, 0.0,
+    0.0059928, 0.104664, 0.00801224, 0.0141336, 0.0, 0.893152, 0.0432883, 0.269171,
+];
+const BLOBS_SUM: f64 = 55.678268;
+
+const PIX_TOL: f32 = 1e-3;
+const SUM_TOL: f64 = 0.2;
+
+#[test]
+fn polarity_seed0_first_example_pinned() {
+    let ex = PolarityTask::new(SEQ, 0).example(Split::Train, 0);
+    assert_eq!(ex.label, 0);
+    assert_eq!(ex.tokens, POLARITY_TOKENS.to_vec());
+}
+
+#[test]
+fn topic_seed0_first_example_pinned() {
+    let ex = TopicTask::new(SEQ, 0).example(Split::Train, 0);
+    assert_eq!(ex.label, 1);
+    assert_eq!(ex.tokens, TOPIC_TOKENS.to_vec());
+}
+
+#[test]
+fn matching_seed0_first_example_pinned() {
+    let ex = MatchingTask::new(SEQ, 0).example(Split::Train, 0);
+    assert_eq!(ex.label, 0); // ENTAIL: premise pair repeats in the hypothesis
+    assert_eq!(ex.tokens, MATCHING_TOKENS.to_vec());
+    // Structural cross-check of the pinned stream.
+    assert_eq!(ex.tokens[32], 2); // SEP at seq/2
+    assert_eq!((ex.tokens[15], ex.tokens[16]), (213, 262)); // premise (s, a)
+    assert_eq!((ex.tokens[50], ex.tokens[51]), (213, 262)); // entailed restatement
+}
+
+fn check_image(pixels: &[f32], probes: &[f32; 16], sum: f64, tag: &str) {
+    assert_eq!(pixels.len(), HW * HW, "{tag}");
+    for (&i, &want) in PIX_IDX.iter().zip(probes) {
+        let got = pixels[i];
+        assert!((got - want).abs() < PIX_TOL, "{tag} pixel {i}: {got} vs {want}");
+    }
+    let total: f64 = pixels.iter().map(|&p| p as f64).sum();
+    assert!((total - sum).abs() < SUM_TOL, "{tag} sum: {total} vs {sum}");
+}
+
+#[test]
+fn shapes_seed0_first_example_pinned() {
+    let ex = ShapesTask::new(0).example(Split::Train, 0);
+    assert_eq!(ex.label, 0); // square
+    check_image(&ex.pixels, &SHAPES_PROBES, SHAPES_SUM, "shapes");
+}
+
+#[test]
+fn blobs_seed0_first_example_pinned() {
+    let ex = BlobsTask::new(0).example(Split::Train, 0);
+    assert_eq!(ex.label, 3); // bump in quadrant (21, 21)
+    check_image(&ex.pixels, &BLOBS_PROBES, BLOBS_SUM, "blobs");
+    // The quadrant-3 bump dominates: the probe inside it is the brightest.
+    let bright = PIX_IDX.iter().map(|&i| ex.pixels[i]).fold(0.0f32, f32::max);
+    assert!((bright - 0.893152).abs() < PIX_TOL);
+}

@@ -1,0 +1,190 @@
+//! End-to-end coordinator test over the native backend.
+//!
+//! Hermetic by construction: runs — never skips — on a fresh checkout with
+//! no `artifacts/` directory and no PJRT runtime. Variants are built in
+//! Rust (random-init dense + its Random-solver `auto_fact` factorization;
+//! see `demo_variants`) and served through the full queue → router →
+//! batcher → backend path with concurrent client threads.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use greenformer::backend::native::{demo_variants, TextModelCfg};
+use greenformer::coordinator::{
+    serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+};
+use greenformer::data::text::PolarityTask;
+use greenformer::data::{Dataset, Split};
+use greenformer::tensor::ParamStore;
+
+const SEQ: usize = 64;
+
+fn model_cfg() -> TextModelCfg {
+    // Full vocab (PolarityTask emits ids up to 511) but a slim trunk so the
+    // SVD factorization + serving stays fast in CI.
+    TextModelCfg {
+        vocab: 512,
+        seq: SEQ,
+        d: 64,
+        heads: 4,
+        layers: 2,
+        ff: 128,
+        classes: 4,
+    }
+}
+
+/// dense + led_r25 variant checkpoints, built without any artifacts (see
+/// `demo_variants` for the Random-solver rationale).
+fn variant_stores() -> HashMap<String, ParamStore> {
+    let (dense, led) = demo_variants(&model_cfg(), 42, 0.25).unwrap();
+    let mut m = HashMap::new();
+    m.insert("dense".to_string(), dense);
+    m.insert("led_r25".to_string(), led);
+    m
+}
+
+fn tiered_router(stores: &HashMap<String, ParamStore>) -> Router {
+    Router::new(
+        RoutePolicy::Tiered {
+            quality: "dense".into(),
+            balanced: "dense".into(),
+            fast: "led_r25".into(),
+        },
+        stores.keys().cloned().collect(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn serves_concurrent_requests_exactly_once_on_native_backend() {
+    let stores = variant_stores();
+    let router = tiered_router(&stores);
+    let handle = serve_classifier_native(
+        "text",
+        stores,
+        router,
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(3),
+        },
+        256,
+    )
+    .unwrap();
+
+    let ds = PolarityTask::new(SEQ, 1);
+    let n = 48;
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let h = handle.clone();
+        let ex = ds.example(Split::Eval, i);
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+            let resp = h.classify(ex.tokens, tier).unwrap();
+            (resp.variant, resp.label, resp.logits.len())
+        }));
+    }
+    let mut fast = 0u64;
+    let mut quality = 0u64;
+    for (i, j) in joins.into_iter().enumerate() {
+        // Exactly one response per request; variant labels match routing.
+        let (variant, label, width) = j.join().unwrap();
+        assert!(label < 4);
+        assert_eq!(width, 4);
+        if i % 2 == 0 {
+            assert_eq!(variant, "led_r25");
+            fast += 1;
+        } else {
+            assert_eq!(variant, "dense");
+            quality += 1;
+        }
+    }
+    assert_eq!(fast + quality, n as u64);
+
+    // Metrics totals reconcile: every request answered, none errored, pad
+    // rows never produced a response.
+    let m = &handle.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.responses.load(Ordering::Relaxed), n as u64);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    let batches = m.batches.load(Ordering::Relaxed);
+    let padded = m.padded_rows.load(Ordering::Relaxed);
+    assert!(batches > 0);
+    // real rows + pad rows fill the executed batches exactly.
+    assert_eq!(batches * 8, n as u64 + padded);
+    let counts = m.variant_counts();
+    assert_eq!(counts["led_r25"], fast);
+    assert_eq!(counts["dense"], quality);
+    assert!(m.latency_percentile_us(99.0) > 0);
+}
+
+#[test]
+fn bad_token_length_gets_error_response_not_a_dispatcher_panic() {
+    let stores = variant_stores();
+    let router = Router::new(
+        RoutePolicy::Static("dense".into()),
+        stores.keys().cloned().collect(),
+    )
+    .unwrap();
+    let handle = serve_classifier_native(
+        "text",
+        stores,
+        router,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        16,
+    )
+    .unwrap();
+
+    // Wrong sequence length: must be rejected with an error, not a panic.
+    let err = handle.classify(vec![1, 2, 3], Tier::Quality);
+    assert!(err.is_err(), "short request must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("token length"), "unexpected error: {msg}");
+
+    // Out-of-range token id (vocab is 512): rejected individually, without
+    // failing the rest of its batch.
+    let err = handle.classify(vec![600; SEQ], Tier::Quality);
+    assert!(err.is_err(), "out-of-vocab request must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("out of range"), "unexpected error: {msg}");
+
+    // The server survives and keeps answering well-formed requests.
+    let ds = PolarityTask::new(SEQ, 2);
+    let ex = ds.example(Split::Eval, 0);
+    let resp = handle.classify(ex.tokens, Tier::Quality).unwrap();
+    assert_eq!(resp.variant, "dense");
+
+    let m = &handle.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), 3);
+    assert_eq!(m.responses.load(Ordering::Relaxed), 1);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn serve_classifier_auto_falls_back_to_native_without_artifacts() {
+    // Point at a directory with no manifest: selection must fall back to the
+    // native backend and still serve.
+    let stores = variant_stores();
+    let router = tiered_router(&stores);
+    let handle = serve_classifier(
+        std::env::temp_dir().join("gf-no-artifacts-here"),
+        "text",
+        stores,
+        router,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        32,
+    )
+    .unwrap();
+    let ds = PolarityTask::new(SEQ, 3);
+    let resp = handle
+        .classify(ds.example(Split::Eval, 1).tokens, Tier::Fast)
+        .unwrap();
+    assert_eq!(resp.variant, "led_r25");
+    assert_eq!(handle.metrics.errors.load(Ordering::Relaxed), 0);
+}

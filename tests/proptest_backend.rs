@@ -1,0 +1,143 @@
+//! Randomized property tests for the native backend (in-tree generator over
+//! `Pcg64` — proptest is unavailable offline; the methodology is the same:
+//! many random cases per invariant, failing seed printed on panic). Runs
+//! hermetically: no artifacts, no PJRT.
+//!
+//! Invariants:
+//! * LED forward `x·a·b + bias` ≡ dense forward `x·w + bias` when `w = a·b`
+//!   exactly, within 1e-4 (relative) — the paper's signature-preservation
+//!   contract, at the layer level and through the whole model;
+//! * `NativeBackend` output is invariant to batch padding: extra PAD rows
+//!   never change the logits of real rows.
+
+use greenformer::backend::native::{self, init_text_params, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{Backend, NativeBackend};
+use greenformer::linalg::Matrix;
+use greenformer::tensor::{ParamStore, Tensor};
+use greenformer::util::Pcg64;
+
+const CASES: usize = 60;
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn led_forward_equals_dense_when_factors_exact() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Pcg64::new(seed, 200);
+        let m = 1 + rng.below(16);
+        let k = 1 + rng.below(48);
+        let n = 1 + rng.below(48);
+        let r = 1 + rng.below(k.min(n));
+        let a = Matrix::randn(k, r, 0.7, &mut rng);
+        let b = Matrix::randn(r, n, 0.7, &mut rng);
+        let w = a.matmul(&b);
+        let mut bias = vec![0.0f32; n];
+        rng.fill_normal(&mut bias, 0.5);
+        let x = Matrix::randn(m, k, 1.0, &mut rng);
+
+        let mut dense = ParamStore::new();
+        dense.insert("fc/w", Tensor::from_f32(&[k, n], w.data.clone()));
+        dense.insert("fc/bias", Tensor::from_f32(&[n], bias.clone()));
+        let mut led = ParamStore::new();
+        led.insert("fc/a", Tensor::from_f32(&[k, r], a.data.clone()));
+        led.insert("fc/b", Tensor::from_f32(&[r, n], b.data.clone()));
+        led.insert("fc/bias", Tensor::from_f32(&[n], bias));
+
+        let (nd, yd) = native::apply_linear(&dense, "fc", m, k, &x.data).unwrap();
+        let (nl, yl) = native::apply_linear(&led, "fc", m, k, &x.data).unwrap();
+        assert_eq!(nd, n, "seed {seed}");
+        assert_eq!(nl, n, "seed {seed}");
+        for (d, l) in yd.iter().zip(&yl) {
+            assert!(close(*d, *l, 1e-4), "seed {seed} (m={m} k={k} n={n} r={r}): {d} vs {l}");
+        }
+    }
+}
+
+#[test]
+fn whole_model_led_forward_matches_dense_when_factors_exact() {
+    // Replace both FFN weights of a one-block model with exact a·b products
+    // and check the end-to-end logits agree (through embeddings, layernorms,
+    // attention and GELU).
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(seed, 201);
+        let cfg = TextModelCfg {
+            vocab: 64,
+            seq: 10,
+            d: 32,
+            heads: 4,
+            layers: 1,
+            ff: 48,
+            classes: 4,
+        };
+        let mut dense = init_text_params(&cfg, seed);
+        let mut led = dense.clone();
+        for (prefix, k, n) in [("block0/fc1", cfg.d, cfg.ff), ("block0/fc2", cfg.ff, cfg.d)] {
+            let r = 1 + rng.below(k.min(n) / 2);
+            let a = Matrix::randn(k, r, 0.15, &mut rng);
+            let b = Matrix::randn(r, n, 0.15, &mut rng);
+            let w = a.matmul(&b);
+            dense.insert(format!("{prefix}/w"), Tensor::from_f32(&[k, n], w.data));
+            led.remove(&format!("{prefix}/w"));
+            led.insert(format!("{prefix}/a"), Tensor::from_f32(&[k, r], a.data));
+            led.insert(format!("{prefix}/b"), Tensor::from_f32(&[r, n], b.data));
+        }
+        led.sort_canonical();
+
+        let batch = 1 + rng.below(3);
+        let toks: Vec<i32> = (0..batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let x = Tensor::from_i32(&[batch, cfg.seq], toks);
+        let be = NativeBackend::new();
+        let gd = synth_fwd_graph("text", "dense", batch, &dense).unwrap();
+        let gl = synth_fwd_graph("text", "led", batch, &led).unwrap();
+        let yd = be.run_fwd(&gd, &dense, &[x.clone()]).unwrap();
+        let yl = be.run_fwd(&gl, &led, &[x]).unwrap();
+        for (d, l) in yd[0].as_f32().unwrap().iter().zip(yl[0].as_f32().unwrap()) {
+            assert!(close(*d, *l, 1e-3), "seed {seed}: {d} vs {l}");
+        }
+    }
+}
+
+#[test]
+fn native_output_invariant_to_batch_padding() {
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::new(seed, 202);
+        let cfg = TextModelCfg {
+            vocab: 96,
+            seq: 8 + rng.below(9),
+            d: 32,
+            heads: 4,
+            layers: 1 + rng.below(2),
+            ff: 48,
+            classes: 4,
+        };
+        let params = init_text_params(&cfg, seed);
+        let b = 1 + rng.below(4);
+        let pad = 1 + rng.below(5);
+        let toks: Vec<i32> = (0..b * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let mut padded = toks.clone();
+        padded.resize((b + pad) * cfg.seq, 0); // PAD rows of token 0
+
+        let be = NativeBackend::new();
+        let g1 = synth_fwd_graph("text", "dense", b, &params).unwrap();
+        let g2 = synth_fwd_graph("text", "dense", b + pad, &params).unwrap();
+        let y1 = be
+            .run_fwd(&g1, &params, &[Tensor::from_i32(&[b, cfg.seq], toks)])
+            .unwrap();
+        let y2 = be
+            .run_fwd(&g2, &params, &[Tensor::from_i32(&[b + pad, cfg.seq], padded)])
+            .unwrap();
+        assert_eq!(y1[0].shape, vec![b, cfg.classes]);
+        assert_eq!(y2[0].shape, vec![b + pad, cfg.classes]);
+        let (l1, l2) = (y1[0].as_f32().unwrap(), y2[0].as_f32().unwrap());
+        for i in 0..b * cfg.classes {
+            assert!(
+                (l1[i] - l2[i]).abs() < 1e-5,
+                "seed {seed} idx {i}: {} vs {}",
+                l1[i],
+                l2[i]
+            );
+        }
+    }
+}

@@ -9,7 +9,7 @@
 
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{batch, Split};
-use greenformer::experiments::{by_design, ExpParams};
+use greenformer::experiments::{by_design, ExpParams, FigEnv};
 use greenformer::runtime::Engine;
 use greenformer::train::Trainer;
 use greenformer::util::Bench;
@@ -22,7 +22,7 @@ fn main() {
     let params = ExpParams::quick();
 
     // Regenerate and print the panel (the paper artifact).
-    let result = by_design(&engine, &params).expect("by-design harness");
+    let result = by_design(&FigEnv::Pjrt(&engine), &params).expect("by-design harness");
     println!("\n{}", result.render());
 
     // Timing series: one fused train step, dense vs factorized.

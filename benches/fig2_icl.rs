@@ -7,7 +7,7 @@
 //! Full panel: `GREENFORMER_STEPS=600 GREENFORMER_EVAL=256 cargo bench --bench fig2_icl`
 
 use greenformer::data::lm::LmCorpus;
-use greenformer::experiments::{icl, ExpParams};
+use greenformer::experiments::{icl, ExpParams, FigEnv};
 use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
 use greenformer::runtime::Engine;
 use greenformer::train::Trainer;
@@ -30,7 +30,8 @@ fn main() {
     trainer.train_lm(&corpus, pretrain_steps, |_| {}).unwrap();
     let lm_params = trainer.params.clone();
 
-    let result = icl(&engine, &params, Some(lm_params.clone()), 0).expect("icl harness");
+    let result =
+        icl(&FigEnv::Pjrt(&engine), &params, Some(lm_params.clone()), 0).expect("icl harness");
     println!("\n{}", result.render());
 
     // Timing series: one batched LM forward, dense vs factorized.

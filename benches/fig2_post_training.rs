@@ -6,7 +6,7 @@
 //!
 //! Full panel: `GREENFORMER_STEPS=300 GREENFORMER_EVAL=256 cargo bench --bench fig2_post_training`
 
-use greenformer::experiments::{post_training, ExpParams};
+use greenformer::experiments::{post_training, ExpParams, FigEnv};
 use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
 use greenformer::runtime::Engine;
 use greenformer::tensor::ParamStore;
@@ -19,7 +19,8 @@ fn main() {
     };
     let params = ExpParams::quick();
 
-    let result = post_training(&engine, &params, Solver::Svd).expect("post-training harness");
+    let result =
+        post_training(&FigEnv::Pjrt(&engine), &params, Solver::Svd).expect("post-training harness");
     println!("\n{}", result.render());
 
     // Timing series: auto_fact latency per solver on the text init.

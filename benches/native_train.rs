@@ -1,0 +1,60 @@
+//! Artifact-free training bench: dense vs LED through the native
+//! fwd+bwd+Adam interpreter.
+//!
+//! Measures steps/sec on the default text classifier for the dense model
+//! and its Ratio(0.5) LED factorization — the training-side realization of
+//! Figure 2's speedup axis (a factorized layer's backward is four skinny
+//! GEMMs through the rank bottleneck instead of two wide ones). Runs
+//! hermetically (no artifacts, no PJRT) and prints a machine-readable
+//! `BENCH_NATIVE_TRAIN {...}` JSON line.
+//!
+//! Env: GREENFORMER_BENCH_TRAIN_STEPS (default 24) scales the measurement.
+
+use std::time::Instant;
+
+use greenformer::backend::native::{demo_variants, TextModelCfg};
+use greenformer::backend::NativeBackend;
+use greenformer::data::text::PolarityTask;
+use greenformer::tensor::ParamStore;
+use greenformer::train::Trainer;
+
+const BACKEND: NativeBackend = NativeBackend;
+const BATCH: usize = 8;
+const WARMUP: usize = 2;
+
+fn bench_variant(name: &str, params: ParamStore, ds: &PolarityTask, steps: usize) -> f64 {
+    let mut trainer = Trainer::native(&BACKEND, "text", name, BATCH, params).expect("trainer");
+    trainer.train_classifier(ds, WARMUP, None, |_| {}).expect("warmup");
+    let t0 = Instant::now();
+    trainer.train_classifier(ds, steps, None, |_| {}).expect("train");
+    let sps = steps as f64 / t0.elapsed().as_secs_f64();
+    let last = trainer.recent_loss(4);
+    println!("{name:<10} {sps:>8.2} steps/s   (loss after {} steps: {last:.4})", trainer.step);
+    sps
+}
+
+fn main() {
+    let steps: usize = std::env::var("GREENFORMER_BENCH_TRAIN_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let cfg = TextModelCfg::default();
+    // Random-solver factorization: construction speed only — training cost
+    // depends on factor shapes, not values.
+    let (dense, led50) = demo_variants(&cfg, 42, 0.5).expect("variants");
+    let ds = PolarityTask::new(cfg.seq, 7);
+
+    println!(
+        "== native training: dense vs LED (batch={BATCH}, steps={steps}, d={} ff={} seq={}) ==",
+        cfg.d, cfg.ff, cfg.seq
+    );
+    let dense_sps = bench_variant("dense", dense, &ds, steps);
+    let led_sps = bench_variant("led_r50", led50, &ds, steps);
+    println!("train speedup led_r50 vs dense: {:.2}x", led_sps / dense_sps);
+    println!(
+        "BENCH_NATIVE_TRAIN {{\"steps\":{steps},\"batch\":{BATCH},\
+         \"dense_steps_per_sec\":{dense_sps:.3},\"led_r50_steps_per_sec\":{led_sps:.3},\
+         \"led_r50_speedup\":{:.3}}}",
+        led_sps / dense_sps
+    );
+}

@@ -1,0 +1,804 @@
+"""Derive the pinned loss curves for tests/golden_native_train.rs.
+
+Independent numpy/float32 reimplementation of the native training path
+(`rust/src/backend/{native,grad}.rs`): PCG64 streams, the synthetic data
+generators, the deterministic inits, forward, backward and Adam — with the
+same accumulation *order* as the Rust code (GEMMs accumulate over k
+sequentially per output element; reductions are fixed-order sequential
+sums), so the two implementations agree to float32 transcendental-ulp noise
+(~1e-6 on these losses by an injected-noise experiment — well inside the
+2e-3 tolerance of tests/golden_native_train.rs; keep the two in sync).
+
+Validation: before deriving anything, the script regenerates the pinned
+constants of tests/golden_data.rs (polarity tokens, blobs probes) from its
+own PCG64 + generators; a mismatch aborts. That cross-checks the entire
+random-stream plumbing against the Rust implementation, which itself was
+cross-checked against numpy's PCG64 in PR 2.
+
+Usage:
+    python3 python/tools/derive_native_train_golden.py          # goldens
+    python3 python/tools/derive_native_train_golden.py --learn  # also run the
+        300-step learning sanity check backing integration_train_native.rs
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+import numpy as np
+
+F = np.float32
+MASK128 = (1 << 128) - 1
+MULT = 0x2360ED051FC65DA44385DF649FCCF645
+
+
+# ---------------------------------------------------------------------------
+# PCG64 (XSL-RR 128/64) — mirror of rust/src/util/rng.rs
+# ---------------------------------------------------------------------------
+
+class Pcg64:
+    def __init__(self, seed: int, stream: int):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK128
+        self.next_u64()
+        self.state = (self.state + (seed & 0xFFFFFFFFFFFFFFFF)) & MASK128
+        self.next_u64()
+
+    @classmethod
+    def seeded(cls, seed: int) -> "Pcg64":
+        return cls(seed, 0)
+
+    def next_u64(self) -> int:
+        self.state = (self.state * MULT + self.inc) & MASK128
+        rot = self.state >> 122
+        xsl = ((self.state >> 64) ^ self.state) & 0xFFFFFFFFFFFFFFFF
+        return ((xsl >> rot) | (xsl << (64 - rot) if rot else 0)) & 0xFFFFFFFFFFFFFFFF
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def next_f32(self) -> np.float32:
+        return F(self.next_f64())
+
+    def below(self, n: int) -> int:
+        zone = 0xFFFFFFFFFFFFFFFF - (0xFFFFFFFFFFFFFFFF % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def normal(self) -> float:
+        while True:
+            u1 = self.next_f64()
+            if u1 > 1e-12:
+                u2 = self.next_f64()
+                return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def normal_f32(self) -> np.float32:
+        return F(self.normal())
+
+    def fill_normal(self, n: int, sigma: float) -> np.ndarray:
+        s = F(sigma)
+        return np.array([self.normal_f32() * s for _ in range(n)], dtype=F)
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# ---------------------------------------------------------------------------
+# Synthetic tasks — mirrors of rust/src/data/{text,image}.rs
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 512
+CLS, SEP = 1, 2
+WORDS = 11  # LABEL_BASE(3) + NUM_LABELS(8)
+TRAIN_STREAM = 1
+HW = 28
+
+
+def _rng_for_text(seed: int, index: int) -> Pcg64:
+    mixed = (seed ^ ((index * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)) & 0xFFFFFFFFFFFFFFFF
+    return Pcg64(mixed, TRAIN_STREAM)
+
+
+def polarity_example(seq: int, task_seed: int, index: int):
+    """PolarityTask::example(Train, index)."""
+    rng = _rng_for_text(task_seed ^ 0x70, index)
+    label = rng.below(2)
+    maj = 2 + rng.below(5)
+    minor = rng.below(maj)
+    n_pos, n_neg = (maj, minor) if label == 1 else (minor, maj)
+    filler_base = WORDS + 40
+    filler_count = VOCAB_SIZE - filler_base
+    toks = [filler_base + rng.below(filler_count) for _ in range(seq)]
+    toks[0] = CLS
+    positions = list(range(1, seq))
+    rng.shuffle(positions)
+    for k_i, pos in enumerate(positions[: n_pos + n_neg]):
+        if k_i < n_pos:
+            toks[pos] = WORDS + rng.below(20)
+        else:
+            toks[pos] = WORDS + 20 + rng.below(20)
+    return toks, label
+
+
+def _rng_for_image(seed: int, index: int) -> Pcg64:
+    mixed = (seed ^ ((index * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)) & 0xFFFFFFFFFFFFFFFF
+    return Pcg64(mixed, TRAIN_STREAM + 10)
+
+
+def blobs_example(task_seed: int, index: int):
+    """BlobsTask::example(Train, index)."""
+    rng = _rng_for_image(task_seed ^ 0x81, index)
+    label = rng.below(4)
+    img = np.zeros(HW * HW, dtype=F)
+
+    def bump(cx: float, cy: float, sigma: float, amp: float):
+        a = F(amp)
+        for y in range(HW):
+            for x in range(HW):
+                d2 = (x - cx) ** 2 + (y - cy) ** 2
+                img[y * HW + x] += a * F(math.exp(-d2 / (2.0 * sigma * sigma)))
+
+    qx = 7.0 if label % 2 == 0 else 21.0
+    qy = 7.0 if label < 2 else 21.0
+    j1 = (rng.next_f64() - 0.5) * 6.0
+    j2 = (rng.next_f64() - 0.5) * 6.0
+    sig = 2.0 + rng.next_f64() * 1.5
+    bump(qx + j1, qy + j2, sig, 0.9)
+    bump(rng.next_f64() * HW, rng.next_f64() * HW, 2.0, 0.35)
+    s = F(0.05)
+    for i in range(HW * HW):
+        img[i] = min(max(img[i] + rng.normal_f32() * s, F(0.0)), F(1.0))
+    return img, label
+
+
+# ---------------------------------------------------------------------------
+# Inits — mirrors of init_text_params / init_image_params
+# ---------------------------------------------------------------------------
+
+def glorot(rng: Pcg64, k: int, n: int) -> np.ndarray:
+    limit = F(math.sqrt(6.0 / (k + n)))
+    out = np.empty(k * n, dtype=F)
+    two, one = F(2.0), F(1.0)
+    for i in range(k * n):
+        out[i] = (rng.next_f32() * two - one) * limit
+    return out.reshape(k, n)
+
+
+def init_text_params(cfg: dict, seed: int) -> dict:
+    rng = Pcg64(seed, 7)
+    p = {}
+    v, s, d, ff, classes, layers = (
+        cfg["vocab"], cfg["seq"], cfg["d"], cfg["ff"], cfg["classes"], cfg["layers"],
+    )
+    p["embed/table"] = rng.fill_normal(v * d, 0.02).reshape(v, d)
+    p["pos/table"] = rng.fill_normal(s * d, 0.02).reshape(s, d)
+    for i in range(layers):
+        for proj in ["q", "k", "v", "o"]:
+            p[f"block{i}/attn/{proj}/w"] = glorot(rng, d, d)
+            p[f"block{i}/attn/{proj}/bias"] = np.zeros(d, dtype=F)
+        for ln in ["ln1", "ln2"]:
+            p[f"block{i}/{ln}/g"] = np.ones(d, dtype=F)
+            p[f"block{i}/{ln}/bias"] = np.zeros(d, dtype=F)
+        p[f"block{i}/fc1/w"] = glorot(rng, d, ff)
+        p[f"block{i}/fc1/bias"] = np.zeros(ff, dtype=F)
+        p[f"block{i}/fc2/w"] = glorot(rng, ff, d)
+        p[f"block{i}/fc2/bias"] = np.zeros(d, dtype=F)
+    p["head/w"] = glorot(rng, d, classes)
+    p["head/bias"] = np.zeros(classes, dtype=F)
+    p["ln_f/g"] = np.ones(d, dtype=F)
+    p["ln_f/bias"] = np.zeros(d, dtype=F)
+    return p
+
+
+def uniform4(rng: Pcg64, shape, fan_in: int, fan_out: int) -> np.ndarray:
+    limit = F(math.sqrt(6.0 / (fan_in + fan_out)))
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=F)
+    two, one = F(2.0), F(1.0)
+    for i in range(n):
+        out[i] = (rng.next_f32() * two - one) * limit
+    return out.reshape(shape)
+
+
+def init_image_params(cfg: dict, seed: int) -> dict:
+    rng = Pcg64(seed, 8)
+    hw, ch, classes, c1, c2, fc = (
+        cfg["hw"], cfg["ch"], cfg["classes"], cfg["c1"], cfg["c2"], cfg["fc"],
+    )
+    flat = (hw // 4) * (hw // 4) * c2
+    rf = 9
+    p = {}
+    p["conv1/w"] = uniform4(rng, (3, 3, ch, c1), rf * ch, rf * c1)
+    p["conv1/bias"] = np.zeros(c1, dtype=F)
+    p["conv2/w"] = uniform4(rng, (3, 3, c1, c2), rf * c1, rf * c2)
+    p["conv2/bias"] = np.zeros(c2, dtype=F)
+    p["fc1/w"] = uniform4(rng, (flat, fc), flat, fc)
+    p["fc1/bias"] = np.zeros(fc, dtype=F)
+    p["fc2/w"] = uniform4(rng, (fc, classes), fc, classes)
+    p["fc2/bias"] = np.zeros(classes, dtype=F)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# f32 primitives with Rust-matched accumulation order
+# ---------------------------------------------------------------------------
+
+def mm(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(m,k)@(k,n) accumulating over k in order, like matmul_into."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out = np.zeros((m, n), dtype=F)
+    for p in range(k):
+        out += a[:, p : p + 1] * b[p : p + 1, :]
+    return out
+
+
+def seq_sum(x: np.ndarray) -> np.ndarray:
+    """Sequential sum over the last axis (Rust row-order f32 accumulation)."""
+    acc = np.zeros(x.shape[:-1], dtype=F)
+    for j in range(x.shape[-1]):
+        acc = acc + x[..., j]
+    return acc
+
+
+def apply_linear(params: dict, prefix: str, x: np.ndarray) -> np.ndarray:
+    if f"{prefix}/w" in params:
+        w = params[f"{prefix}/w"]
+        w2 = w.reshape(-1, w.shape[-1])
+        y = mm(x, w2)
+    else:
+        a = params[f"{prefix}/a"].reshape(-1, params[f"{prefix}/a"].shape[-1])
+        b = params[f"{prefix}/b"].reshape(-1, params[f"{prefix}/b"].shape[-1])
+        y = mm(mm(x, a), b)
+    bias = params.get(f"{prefix}/bias")
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+LN_EPS = F(1e-5)
+
+
+def layernorm(params: dict, prefix: str, x: np.ndarray) -> np.ndarray:
+    d = x.shape[-1]
+    g, bias = params[f"{prefix}/g"], params[f"{prefix}/bias"]
+    mean = (seq_sum(x) / F(d))[:, None]
+    var = (seq_sum((x - mean) * (x - mean)) / F(d))[:, None]
+    inv = F(1.0) / np.sqrt(var + LN_EPS)
+    return (x - mean) * inv * g + bias
+
+
+def gelu(x: np.ndarray) -> np.ndarray:
+    c, a, half, one = F(0.7978846), F(0.044715), F(0.5), F(1.0)
+    t = c * (x + a * x * x * x)
+    return half * x * (one + np.tanh(t))
+
+
+def softmax_rows(x: np.ndarray) -> np.ndarray:
+    mx = np.max(x, axis=-1, keepdims=True)
+    e = np.exp(x - mx)
+    s = seq_sum(e)[..., None]
+    return e * (F(1.0) / s)
+
+
+def embed_fwd(params: dict, tokens: np.ndarray) -> np.ndarray:
+    b, s = tokens.shape
+    table, pos = params["embed/table"], params["pos/table"]
+    d = table.shape[1]
+    x = np.empty((b * s, d), dtype=F)
+    for bi in range(b):
+        for si in range(s):
+            x[bi * s + si] = table[tokens[bi, si]] + pos[si]
+    return x
+
+
+def attention_fwd(params: dict, prefix: str, b, s, d, heads, causal, x):
+    dk = d // heads
+    q = apply_linear(params, f"{prefix}/q", x)
+    k = apply_linear(params, f"{prefix}/k", x)
+    v = apply_linear(params, f"{prefix}/v", x)
+    scale = F(1.0 / math.sqrt(dk))
+    ctx = np.zeros((b * s, d), dtype=F)
+    probs = np.zeros((b * heads, s, s), dtype=F)
+    for bi in range(b):
+        rows = slice(bi * s, (bi + 1) * s)
+        for h in range(heads):
+            cols = slice(h * dk, (h + 1) * dk)
+            qh, kh, vh = q[rows, cols], k[rows, cols], v[rows, cols]
+            scores = mm(qh, kh.T.copy()) * scale
+            if causal:
+                for i in range(s):
+                    scores[i, i + 1 :] = F(-1e9)
+            p = softmax_rows(scores)
+            probs[bi * heads + h] = p
+            ctx[rows, cols] = mm(p, vh)
+    out = apply_linear(params, f"{prefix}/o", ctx)
+    return {"q": q, "k": k, "v": v, "probs": probs, "ctx": ctx}, out
+
+
+def block_fwd(params: dict, prefix: str, b, s, d, heads, causal, x):
+    tape = {"x_in": x.copy()}
+    xn1 = layernorm(params, f"{prefix}/ln1", x)
+    tape["xn1"] = xn1
+    tape["attn"], attn_out = attention_fwd(params, f"{prefix}/attn", b, s, d, heads, causal, xn1)
+    x = x + attn_out
+    tape["x_mid"] = x.copy()
+    xn2 = layernorm(params, f"{prefix}/ln2", x)
+    tape["xn2"] = xn2
+    h_pre = apply_linear(params, f"{prefix}/fc1", xn2)
+    tape["h_pre"] = h_pre
+    h_act = gelu(h_pre)
+    tape["h_act"] = h_act
+    x = x + apply_linear(params, f"{prefix}/fc2", h_act)
+    return tape, x
+
+
+def num_blocks(params: dict) -> int:
+    n = 0
+    while f"block{n}/ln1/g" in params:
+        n += 1
+    return n
+
+
+def trunk_fwd(params: dict, tokens: np.ndarray, heads: int, causal: bool):
+    b, s = tokens.shape
+    x = embed_fwd(params, tokens)
+    d = x.shape[1]
+    blocks = []
+    for i in range(num_blocks(params)):
+        tape, x = block_fwd(params, f"block{i}", b, s, d, heads, causal, x)
+        blocks.append(tape)
+    pre = x.copy()
+    out = layernorm(params, "ln_f", x)
+    return {"d": d, "blocks": blocks, "x_pre_lnf": pre, "x_out": out}
+
+
+def softmax_xent(logits: np.ndarray, labels: np.ndarray):
+    rows, width = logits.shape
+    inv_rows = F(1.0) / F(rows)
+    d = np.zeros_like(logits)
+    total = F(0.0)
+    for i in range(rows):
+        row = logits[i]
+        mx = np.max(row)
+        e = np.exp(row - mx)
+        ssum = F(0.0)
+        for j in range(width):
+            ssum = ssum + e[j]
+        total = total + (mx + np.log(ssum) - row[labels[i]])
+        inv = F(1.0) / ssum
+        p = e * inv
+        onehot = np.zeros(width, dtype=F)
+        onehot[labels[i]] = F(1.0)
+        d[i] = (p - onehot) * inv_rows
+    return total * inv_rows, d
+
+
+# ---------------------------------------------------------------------------
+# Backward — mirror of rust/src/backend/grad.rs
+# ---------------------------------------------------------------------------
+
+def linear_bwd(params, prefix, x, dy, grads):
+    if f"{prefix}/w" in params:
+        w = params[f"{prefix}/w"]
+        w2 = w.reshape(-1, w.shape[-1])
+        grads[f"{prefix}/w"] = mm(x.T.copy(), dy).reshape(w.shape)
+        dx = mm(dy, w2.T.copy())
+    else:
+        a4, b4 = params[f"{prefix}/a"], params[f"{prefix}/b"]
+        a = a4.reshape(-1, a4.shape[-1])
+        b = b4.reshape(-1, b4.shape[-1])
+        h = mm(x, a)
+        grads[f"{prefix}/b"] = mm(h.T.copy(), dy).reshape(b4.shape)
+        dh = mm(dy, b.T.copy())
+        grads[f"{prefix}/a"] = mm(x.T.copy(), dh).reshape(a4.shape)
+        dx = mm(dh, a.T.copy())
+    if f"{prefix}/bias" in params:
+        db = np.zeros(dy.shape[1], dtype=F)
+        for r in range(dy.shape[0]):
+            db += dy[r]
+        grads[f"{prefix}/bias"] = db
+    return dx
+
+
+def layernorm_bwd(params, prefix, x_pre, dy, grads):
+    d = x_pre.shape[-1]
+    g = params[f"{prefix}/g"]
+    inv_d = F(1.0 / d)
+    mean = (seq_sum(x_pre) / F(d))[:, None]
+    var = (seq_sum((x_pre - mean) * (x_pre - mean)) / F(d))[:, None]
+    inv = F(1.0) / np.sqrt(var + LN_EPS)
+    xhat = (x_pre - mean) * inv
+    dxhat = dy * g
+    dgain = np.zeros(d, dtype=F)
+    dbias = np.zeros(d, dtype=F)
+    for r in range(dy.shape[0]):
+        dgain += dy[r] * xhat[r]
+        dbias += dy[r]
+    m1 = (seq_sum(dxhat) * inv_d)[:, None]
+    m2 = (seq_sum(dxhat * xhat) * inv_d)[:, None]
+    dx = (dxhat - m1 - xhat * m2) * inv
+    grads[f"{prefix}/g"] = grads.get(f"{prefix}/g", np.zeros(d, dtype=F)) + dgain
+    grads[f"{prefix}/bias"] = grads.get(f"{prefix}/bias", np.zeros(d, dtype=F)) + dbias
+    return dx
+
+
+def gelu_bwd(h_pre, dy):
+    c, a, half, one, three = F(0.7978846), F(0.044715), F(0.5), F(1.0), F(3.0)
+    u = c * (h_pre + a * h_pre * h_pre * h_pre)
+    t = np.tanh(u)
+    du = c * (one + three * a * h_pre * h_pre)
+    return dy * (half * (one + t) + half * h_pre * (one - t * t) * du)
+
+
+def attention_bwd(params, prefix, tape, b, s, d, heads, x, dout, grads):
+    dk = d // heads
+    scale = F(1.0 / math.sqrt(dk))
+    dctx = linear_bwd(params, f"{prefix}/o", tape["ctx"], dout, grads)
+    dq = np.zeros((b * s, d), dtype=F)
+    dkm = np.zeros((b * s, d), dtype=F)
+    dv = np.zeros((b * s, d), dtype=F)
+    for bi in range(b):
+        rows = slice(bi * s, (bi + 1) * s)
+        for h in range(heads):
+            cols = slice(h * dk, (h + 1) * dk)
+            qh, kh, vh = tape["q"][rows, cols], tape["k"][rows, cols], tape["v"][rows, cols]
+            dch = dctx[rows, cols]
+            ph = tape["probs"][bi * heads + h]
+            dprobs = mm(dch, vh.T.copy())
+            dvh = mm(ph.T.copy(), dch)
+            dscores = np.zeros((s, s), dtype=F)
+            for i in range(s):
+                dot = F(0.0)
+                for j in range(s):
+                    dot = dot + ph[i, j] * dprobs[i, j]
+                dscores[i] = ph[i] * (dprobs[i] - dot) * scale
+            dqh = mm(dscores, kh)
+            dkh = mm(dscores.T.copy(), qh)
+            dq[rows, cols] = dqh
+            dkm[rows, cols] = dkh
+            dv[rows, cols] = dvh
+    dx = linear_bwd(params, f"{prefix}/q", x, dq, grads)
+    dx = dx + linear_bwd(params, f"{prefix}/k", x, dkm, grads)
+    dx = dx + linear_bwd(params, f"{prefix}/v", x, dv, grads)
+    return dx
+
+
+def block_bwd(params, prefix, tape, b, s, d, heads, dx_out, grads):
+    dh_act = linear_bwd(params, f"{prefix}/fc2", tape["h_act"], dx_out, grads)
+    dh_pre = gelu_bwd(tape["h_pre"], dh_act)
+    dxn2 = linear_bwd(params, f"{prefix}/fc1", tape["xn2"], dh_pre, grads)
+    dln2 = layernorm_bwd(params, f"{prefix}/ln2", tape["x_mid"], dxn2, grads)
+    dmid = dx_out + dln2
+    dxn1 = attention_bwd(
+        params, f"{prefix}/attn", tape["attn"], b, s, d, heads, tape["xn1"], dmid, grads
+    )
+    dln1 = layernorm_bwd(params, f"{prefix}/ln1", tape["x_in"], dxn1, grads)
+    return dmid + dln1
+
+
+def trunk_bwd(params, tokens, tape, heads, dx_out, grads):
+    b, s = tokens.shape
+    d = tape["d"]
+    dx = layernorm_bwd(params, "ln_f", tape["x_pre_lnf"], dx_out, grads)
+    for i in reversed(range(len(tape["blocks"]))):
+        dx = block_bwd(params, f"block{i}", tape["blocks"][i], b, s, d, heads, dx, grads)
+    table, pos = params["embed/table"], params["pos/table"]
+    dtable = np.zeros_like(table)
+    dpos = np.zeros_like(pos)
+    for bi in range(b):
+        for si in range(s):
+            row = dx[bi * s + si]
+            dtable[tokens[bi, si]] += row
+            dpos[si] += row
+    grads["embed/table"] = dtable
+    grads["pos/table"] = dpos
+
+
+def classifier_loss_grads(params, tokens, labels, heads):
+    b, s = tokens.shape
+    tape = trunk_fwd(params, tokens, heads, causal=False)
+    d = tape["d"]
+    inv_s = F(1.0 / s)
+    pooled = np.zeros((b, d), dtype=F)
+    for bi in range(b):
+        for si in range(s):
+            pooled[bi] += tape["x_out"][bi * s + si]
+        pooled[bi] *= inv_s
+    logits = apply_linear(params, "head", pooled)
+    loss, dlogits = softmax_xent(logits, labels)
+    grads = {}
+    dpooled = linear_bwd(params, "head", pooled, dlogits, grads)
+    dx = np.zeros((b * s, d), dtype=F)
+    for bi in range(b):
+        for si in range(s):
+            dx[bi * s + si] = dpooled[bi] * inv_s
+    trunk_bwd(params, tokens, tape, heads, dx, grads)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Image model (im2col conv path)
+# ---------------------------------------------------------------------------
+
+def im2col(x, b, h, w, c, kh, kw):
+    ph, pw = kh // 2, kw // 2
+    x4 = x.reshape(b, h, w, c)
+    out = np.zeros((b, h, w, kh, kw, c), dtype=F)
+    for ky in range(kh):
+        sy0, sy1 = max(0, ph - ky), min(h, h + ph - ky)
+        dy0 = sy0 + ky - ph
+        for kx in range(kw):
+            sx0, sx1 = max(0, pw - kx), min(w, w + pw - kx)
+            dx0 = sx0 + kx - pw
+            out[:, sy0:sy1, sx0:sx1, ky, kx, :] = x4[
+                :, dy0 : dy0 + (sy1 - sy0), dx0 : dx0 + (sx1 - sx0), :
+            ]
+    return out.reshape(b * h * w, kh * kw * c)
+
+
+def col2im(dcols, b, h, w, c, kh, kw):
+    ph, pw = kh // 2, kw // 2
+    d6 = dcols.reshape(b, h, w, kh, kw, c)
+    dx = np.zeros((b, h, w, c), dtype=F)
+    for ky in range(kh):
+        sy0, sy1 = max(0, ph - ky), min(h, h + ph - ky)
+        dy0 = sy0 + ky - ph
+        for kx in range(kw):
+            sx0, sx1 = max(0, pw - kx), min(w, w + pw - kx)
+            dx0 = sx0 + kx - pw
+            dx[:, dy0 : dy0 + (sy1 - sy0), dx0 : dx0 + (sx1 - sx0), :] += d6[
+                :, sy0:sy1, sx0:sx1, ky, kx, :
+            ]
+    return dx.reshape(b * h * w * c)
+
+
+def maxpool2_idx(y, b, h, w, c):
+    oh, ow = h // 2, w // 2
+    y4 = y.reshape(b, h, w, c)
+    cand = np.stack(
+        [
+            y4[:, 0::2, 0::2, :],
+            y4[:, 0::2, 1::2, :],
+            y4[:, 1::2, 0::2, :],
+            y4[:, 1::2, 1::2, :],
+        ],
+        axis=0,
+    )
+    pick = np.argmax(cand, axis=0)  # first max — same tie-break as Rust
+    out = np.take_along_axis(cand, pick[None], axis=0)[0]
+    # Flat source index in the (b, h, w, c) layout.
+    bi, yi, xi, ci = np.meshgrid(
+        np.arange(b), np.arange(oh), np.arange(ow), np.arange(c), indexing="ij"
+    )
+    sy = 2 * yi + (pick // 2)
+    sx = 2 * xi + (pick % 2)
+    idx = ((bi * h + sy) * w + sx) * c + ci
+    return oh, ow, out.reshape(b * oh * ow, c).reshape(-1, c), idx.reshape(-1)
+
+
+def image_loss_grads(params, pixels, labels):
+    b, h, w, c = pixels.shape
+    cur = pixels.reshape(b * h * w, c).astype(F).reshape(-1)
+    tapes = []
+    for conv in ["conv1", "conv2"]:
+        wkey = f"{conv}/w" if f"{conv}/w" in params else f"{conv}/a"
+        kh, kw, cin = params[wkey].shape[:3]
+        cols = im2col(cur, b, h, w, c, kh, kw)
+        y_pre = apply_linear(params, conv, cols)
+        cout = y_pre.shape[1]
+        y_act = np.maximum(y_pre, F(0.0))
+        oh, ow, pooled, pool_idx = maxpool2_idx(y_act.reshape(-1), b, h, w, cout)
+        tapes.append(
+            {"cols": cols, "y_pre": y_pre, "pool_idx": pool_idx, "dims": (h, w, c, cout, kh, kw)}
+        )
+        cur = pooled.reshape(-1)
+        h, w, c = oh, ow, cout
+    flat = h * w * c
+    flat_in = cur.reshape(b, flat)
+    f1_pre = apply_linear(params, "fc1", flat_in)
+    f1_act = np.maximum(f1_pre, F(0.0))
+    logits = apply_linear(params, "fc2", f1_act)
+    loss, dlogits = softmax_xent(logits, labels)
+
+    grads = {}
+    df1_act = linear_bwd(params, "fc2", f1_act, dlogits, grads)
+    df1_pre = np.where(f1_pre > 0, df1_act, F(0.0))
+    dcur = linear_bwd(params, "fc1", flat_in, df1_pre, grads).reshape(-1)
+    for conv, tape in reversed(list(zip(["conv1", "conv2"], tapes))):
+        th, tw, tc, cout, kh, kw = tape["dims"]
+        dy_act = np.zeros(b * th * tw * cout, dtype=F)
+        np.add.at(dy_act, tape["pool_idx"], dcur)
+        dy_pre = np.where(
+            tape["y_pre"].reshape(-1) > 0, dy_act, F(0.0)
+        ).reshape(b * th * tw, cout)
+        dcols = linear_bwd(params, conv, tape["cols"], dy_pre, grads)
+        dcur = col2im(dcols, b, th, tw, tc, kh, kw)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Adam — mirror of grad::adam_step
+# ---------------------------------------------------------------------------
+
+LR, B1, B2, EPS = F(1e-3), F(0.9), F(0.999), F(1e-8)
+
+
+def adam_step(params, m, v, grads, step):
+    bc1 = F(1.0) - B1 ** F(step)
+    bc2 = F(1.0) - B2 ** F(step)
+    one = F(1.0)
+    for name in params:
+        g = grads.get(name, np.zeros_like(params[name])).reshape(params[name].shape)
+        m[name] = B1 * m[name] + (one - B1) * g
+        v[name] = B2 * v[name] + (one - B2) * g * g
+        mhat = m[name] / bc1
+        vhat = v[name] / bc2
+        params[name] = params[name] - LR * mhat / (np.sqrt(vhat) + EPS)
+
+
+# ---------------------------------------------------------------------------
+# Validation against the PR-2 pinned golden data
+# ---------------------------------------------------------------------------
+
+POLARITY_TOKENS = [
+    1, 111, 66, 380, 475, 64, 68, 200, 402, 57, 449, 389, 219, 413, 361, 108,
+    173, 142, 45, 337, 420, 252, 395, 125, 248, 178, 490, 56, 122, 157, 18, 178,
+    413, 305, 310, 403, 185, 152, 321, 472, 480, 328, 158, 208, 117, 323, 510, 413,
+    490, 271, 90, 137, 329, 253, 499, 189, 295, 125, 190, 54, 432, 337, 48, 507,
+]
+PIX_IDX = [0, 49, 98, 147, 196, 245, 294, 343, 392, 441, 490, 539, 588, 637, 686, 735]
+BLOBS_PROBES = [
+    0.057342, 0.0645856, 0.0813607, 0.0247114, 0.0428923, 0.00321283, 0.0, 0.0,
+    0.0059928, 0.104664, 0.00801224, 0.0141336, 0.0, 0.893152, 0.0432883, 0.269171,
+]
+BLOBS_SUM = 55.678268
+
+
+def validate_streams():
+    toks, label = polarity_example(64, 0, 0)
+    assert label == 0, label
+    assert toks == POLARITY_TOKENS, "polarity stream mismatch"
+    img, label = blobs_example(0, 0)
+    assert label == 3, label
+    for i, want in zip(PIX_IDX, BLOBS_PROBES):
+        assert abs(float(img[i]) - want) < 1e-3, (i, float(img[i]), want)
+    assert abs(float(np.sum(img.astype(np.float64))) - BLOBS_SUM) < 0.2
+    print("stream validation OK (polarity tokens + blobs probes reproduce golden_data.rs)")
+
+
+# ---------------------------------------------------------------------------
+# Golden derivation
+# ---------------------------------------------------------------------------
+
+TEXT_CFG = {"vocab": 512, "seq": 64, "d": 32, "heads": 4, "layers": 1, "ff": 64, "classes": 4}
+IMAGE_CFG = {"hw": 28, "ch": 1, "classes": 4, "c1": 4, "c2": 8, "fc": 16}
+
+
+def derive_text(steps=10, batch=8, init_seed=1, task_seed=0):
+    params = init_text_params(TEXT_CFG, init_seed)
+    m = {k: np.zeros_like(t) for k, t in params.items()}
+    v = {k: np.zeros_like(t) for k, t in params.items()}
+    losses = []
+    for step in range(1, steps + 1):
+        start = (step - 1) * batch
+        toks = np.array(
+            [polarity_example(64, task_seed, start + i)[0] for i in range(batch)], dtype=np.int64
+        )
+        labels = np.array(
+            [polarity_example(64, task_seed, start + i)[1] for i in range(batch)], dtype=np.int64
+        )
+        loss, grads = classifier_loss_grads(params, toks, labels, TEXT_CFG["heads"])
+        adam_step(params, m, v, grads, step)
+        losses.append(float(loss))
+        print(f"  text step {step}: loss {loss:.6f}")
+    return losses
+
+
+def derive_image(steps=6, batch=4, init_seed=2, task_seed=0):
+    params = init_image_params(IMAGE_CFG, init_seed)
+    m = {k: np.zeros_like(t) for k, t in params.items()}
+    v = {k: np.zeros_like(t) for k, t in params.items()}
+    losses = []
+    for step in range(1, steps + 1):
+        start = (step - 1) * batch
+        exs = [blobs_example(task_seed, start + i) for i in range(batch)]
+        pixels = np.stack([e[0] for e in exs]).reshape(batch, HW, HW, 1).astype(F)
+        labels = np.array([e[1] for e in exs], dtype=np.int64)
+        loss, grads = image_loss_grads(params, pixels, labels)
+        adam_step(params, m, v, grads, step)
+        losses.append(float(loss))
+        print(f"  image step {step}: loss {loss:.6f}")
+    return losses
+
+
+def fmt(losses):
+    return ", ".join(f"{l:.6}" for l in losses)
+
+
+def learning_check():
+    """Fast (BLAS matmul) sanity run backing the thresholds in
+    tests/integration_train_native.rs: by-design LED-r50 text model, 300
+    steps on polarity, then held-out accuracy. Not bit-matched to Rust —
+    dynamics-level validation only."""
+    global mm, seq_sum
+    mm_exact, seq_exact = mm, seq_sum
+    mm = lambda a, b: (a @ b).astype(F)  # noqa: E731
+    seq_sum = lambda x: np.sum(x, axis=-1, dtype=F)  # noqa: E731
+    try:
+        params = init_text_params(TEXT_CFG, 42)
+        # LED-r50 by design: SVD-factorize every layer the Eq.-1 gate accepts
+        # (attn 32x32 -> r8, fc1/fc2 -> r8; head 32x4 rejected).
+        for prefix, r in [
+            ("block0/attn/q", 8), ("block0/attn/k", 8), ("block0/attn/v", 8),
+            ("block0/attn/o", 8), ("block0/fc1", 8), ("block0/fc2", 8),
+        ]:
+            w = params.pop(f"{prefix}/w")
+            u, s, vt = np.linalg.svd(w.astype(np.float64), full_matrices=False)
+            params[f"{prefix}/a"] = (u[:, :r] * s[:r]).astype(F)
+            params[f"{prefix}/b"] = vt[:r].astype(F)
+        m = {k: np.zeros_like(t) for k, t in params.items()}
+        v = {k: np.zeros_like(t) for k, t in params.items()}
+        losses = []
+        for step in range(1, 301):
+            start = (step - 1) * 8
+            exs = [polarity_example(64, 0, start + i) for i in range(8)]
+            toks = np.array([e[0] for e in exs], dtype=np.int64)
+            labels = np.array([e[1] for e in exs], dtype=np.int64)
+            loss, grads = classifier_loss_grads(params, toks, labels, 4)
+            adam_step(params, m, v, grads, step)
+            losses.append(float(loss))
+        early = sum(losses[:10]) / 10
+        late = sum(losses[-20:]) / 20
+        # Eval split (stream 2) accuracy.
+        correct = 0
+        for i in range(128):
+            rng_toks, label = eval_polarity_example(64, 0, i)
+            tape = trunk_fwd(params, np.array([rng_toks], dtype=np.int64), 4, False)
+            pooled = np.mean(tape["x_out"], axis=0, dtype=F)[None, :]
+            logits = apply_linear(params, "head", pooled)
+            if int(np.argmax(logits[0, :2])) == label:
+                correct += 1
+        print(f"learning check: early loss {early:.4f} late {late:.4f} "
+              f"eval acc {correct}/128 = {correct / 128:.3f}")
+    finally:
+        mm, seq_sum = mm_exact, seq_exact
+
+
+def eval_polarity_example(seq, task_seed, index):
+    """PolarityTask::example(Eval, index) — stream 2."""
+    mixed = (
+        (task_seed ^ 0x70) ^ ((index * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
+    ) & 0xFFFFFFFFFFFFFFFF
+    rng = Pcg64(mixed, 2)
+    label = rng.below(2)
+    maj = 2 + rng.below(5)
+    minor = rng.below(maj)
+    n_pos, n_neg = (maj, minor) if label == 1 else (minor, maj)
+    filler_base = WORDS + 40
+    toks = [filler_base + rng.below(VOCAB_SIZE - filler_base) for _ in range(seq)]
+    toks[0] = CLS
+    positions = list(range(1, seq))
+    rng.shuffle(positions)
+    for k_i, pos in enumerate(positions[: n_pos + n_neg]):
+        toks[pos] = (WORDS + rng.below(20)) if k_i < n_pos else (WORDS + 20 + rng.below(20))
+    return toks, label
+
+
+if __name__ == "__main__":
+    validate_streams()
+    print("deriving text golden (polarity, dense d=32, 10 steps)...")
+    text = derive_text()
+    print("deriving image golden (blobs, dense c1=4/c2=8, 6 steps)...")
+    image = derive_image()
+    print()
+    print(f"const TEXT_LOSSES: [f32; {len(text)}] = [{fmt(text)}];")
+    print(f"const IMAGE_LOSSES: [f32; {len(image)}] = [{fmt(image)}];")
+    if "--learn" in sys.argv:
+        learning_check()

@@ -1,23 +1,25 @@
 //! Execution backends: one trait, two engines.
 //!
-//! The serving stack (coordinator), the evaluation harnesses and the CLI all
-//! execute forward passes through the [`Backend`] trait instead of talking to
-//! the PJRT [`Engine`] directly:
+//! The serving stack (coordinator), the training driver, the evaluation
+//! harnesses and the CLI all execute graphs through the [`Backend`] trait
+//! instead of talking to the PJRT [`Engine`] directly:
 //!
 //! * [`PjrtBackend`] — wraps [`Engine`] unchanged: AOT HLO artifacts,
 //!   compiled once, executed forever. Preferred whenever artifacts exist and
-//!   the PJRT runtime is available (fastest, and the only backend that can
-//!   run `train` graphs).
+//!   the PJRT runtime is available; `train` graphs run as one fused
+//!   fwd+bwd+Adam executable.
 //! * [`native::NativeBackend`] — a pure-Rust interpreter that walks the
 //!   checkpoint's layer structure (via [`crate::model::classify`]) and
-//!   executes the classifier/LM forward pass on the blocked, multithreaded
-//!   GEMM in [`crate::linalg::matrix`]. No artifacts, no FFI: the serving
-//!   path runs — and is tested — end-to-end on a fresh checkout.
+//!   executes the classifier/LM/CNN forward pass on the blocked,
+//!   multithreaded GEMM in [`crate::linalg::matrix`] — and, since PR 3, the
+//!   matching backward pass + Adam in [`grad`], so the full
+//!   factorize→train→eval loop runs with no artifacts and no FFI.
 //!
 //! Selection is automatic in [`crate::coordinator::serve_classifier`]
 //! (PJRT when artifacts resolve, native otherwise) and explicit via the CLI
-//! `--backend {native,pjrt}` flag. See DESIGN.md §8 for the trait contract.
+//! `--backend {native,pjrt}` flag. See DESIGN.md §8–§9 for the contract.
 
+pub mod grad;
 pub mod native;
 
 use crate::runtime::{Engine, GraphSpec};
@@ -44,9 +46,9 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
-/// A forward-pass executor. Implementations must be usable from a single
-/// thread that owns them (the coordinator's dispatcher); they are not
-/// required to be `Send` (the PJRT client wrapper is `Rc`-based).
+/// A graph executor. Implementations must be usable from a single thread
+/// that owns them (the coordinator's dispatcher); they are not required to
+/// be `Send` (the PJRT client wrapper is `Rc`-based).
 pub trait Backend {
     /// Human-readable platform tag (e.g. `"cpu"` / `"native-cpu"`).
     fn platform(&self) -> String;
@@ -65,6 +67,25 @@ pub trait Backend {
         params: &ParamStore,
         inputs: &[Tensor],
     ) -> Result<Vec<Tensor>>;
+
+    /// Run one fused train step on a `train` graph:
+    /// `(params', m', v', loss) = step(params, m, v, step_no, batch...)`,
+    /// updating `params`/`m`/`v` in place and returning the loss. PJRT
+    /// executes the AOT-lowered step; the native backend runs the
+    /// [`grad`] interpreter. The default refuses, so purely-forward
+    /// backends stay trivially implementable.
+    fn run_train_step(
+        &self,
+        graph: &GraphSpec,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        step_no: f32,
+        batch: &[Tensor],
+    ) -> Result<f32> {
+        let _ = (graph, params, m, v, step_no, batch);
+        anyhow::bail!("backend {:?} cannot execute train graphs", self.platform())
+    }
 }
 
 /// [`Backend`] over the PJRT [`Engine`] — a thin newtype so backend
@@ -111,6 +132,18 @@ impl Backend for PjrtBackend {
     ) -> Result<Vec<Tensor>> {
         self.engine.run_fwd(graph, params, inputs)
     }
+
+    fn run_train_step(
+        &self,
+        graph: &GraphSpec,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        step_no: f32,
+        batch: &[Tensor],
+    ) -> Result<f32> {
+        self.engine.run_train_step(graph, params, m, v, step_no, batch)
+    }
 }
 
 /// The engine itself is a backend, so existing `&Engine` call sites coerce
@@ -135,6 +168,18 @@ impl Backend for Engine {
         inputs: &[Tensor],
     ) -> Result<Vec<Tensor>> {
         Engine::run_fwd(self, graph, params, inputs)
+    }
+
+    fn run_train_step(
+        &self,
+        graph: &GraphSpec,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        step_no: f32,
+        batch: &[Tensor],
+    ) -> Result<f32> {
+        Engine::run_train_step(self, graph, params, m, v, step_no, batch)
     }
 }
 

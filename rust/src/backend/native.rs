@@ -53,7 +53,7 @@ impl Backend for NativeBackend {
     }
 
     fn supports(&self, graph: &GraphSpec) -> bool {
-        graph.kind == "fwd"
+        graph.kind == "fwd" || graph.kind == "train"
     }
 
     fn run_fwd(
@@ -100,11 +100,31 @@ impl Backend for NativeBackend {
         };
         Ok(vec![out])
     }
+
+    fn run_train_step(
+        &self,
+        graph: &GraphSpec,
+        params: &mut ParamStore,
+        m: &mut ParamStore,
+        v: &mut ParamStore,
+        step_no: f32,
+        batch: &[Tensor],
+    ) -> Result<f32> {
+        super::grad::native_train_step(
+            graph,
+            params,
+            m,
+            v,
+            step_no,
+            batch,
+            &super::grad::AdamConfig::default(),
+        )
+    }
 }
 
 /// Attention head count: the manifest's `config.heads` when recorded, else
 /// the model-zoo defaults (`python/compile/model.py`).
-fn heads_for(graph: &GraphSpec) -> usize {
+pub(crate) fn heads_for(graph: &GraphSpec) -> usize {
     graph
         .config_usize("heads")
         .unwrap_or_else(|_| default_heads(&graph.model))
@@ -244,6 +264,36 @@ pub fn synth_fwd_graph(
     })
 }
 
+/// Synthesize a *train* [`GraphSpec`] for a checkpoint: the native analogue
+/// of the AOT fused `train_step` manifest entry. The graph shares
+/// [`synth_fwd_graph`]'s inferred dimensions; its batch signature follows
+/// `python/compile/aot.py`: classifiers take `(tokens|pixels, labels)`, the
+/// causal LM takes tokens alone (next-token targets are the shifted input).
+/// The single output is the scalar loss.
+pub fn synth_train_graph(
+    model: &str,
+    variant: &str,
+    batch: usize,
+    params: &ParamStore,
+) -> Result<GraphSpec> {
+    let mut g = synth_fwd_graph(model, variant, batch, params)?;
+    g.name = format!("{model}_{variant}_train_native_b{batch}");
+    g.kind = "train".to_string();
+    if model != "lm" {
+        g.inputs.push(TensorSpec {
+            name: "labels".to_string(),
+            shape: vec![batch],
+            dtype: "i32".to_string(),
+        });
+    }
+    g.outputs = vec![TensorSpec {
+        name: "loss".to_string(),
+        shape: vec![],
+        dtype: "f32".to_string(),
+    }];
+    Ok(g)
+}
+
 // ---------------------------------------------------------------------------
 // Random init (hermetic tests / benches / demos without AOT checkpoints)
 // ---------------------------------------------------------------------------
@@ -326,6 +376,62 @@ pub fn init_text_params(cfg: &TextModelCfg, seed: u64) -> ParamStore {
     s
 }
 
+/// CNN-classifier dimensions; the default mirrors `ImageConfig` in
+/// `python/compile/model.py` (28×28 grayscale, conv1→conv2→fc1→fc2 with two
+/// 2×2 max-pools).
+#[derive(Clone, Copy, Debug)]
+pub struct ImageModelCfg {
+    pub hw: usize,
+    pub ch: usize,
+    pub classes: usize,
+    pub c1: usize,
+    pub c2: usize,
+    pub fc: usize,
+}
+
+impl Default for ImageModelCfg {
+    fn default() -> Self {
+        Self {
+            hw: 28,
+            ch: 1,
+            classes: 4,
+            c1: 16,
+            c2: 32,
+            fc: 128,
+        }
+    }
+}
+
+/// Deterministic random init of a dense CNN classifier in the canonical
+/// parameter layout (`conv1`, `conv2`, `fc1`, `fc2` — the `image` model of
+/// the zoo). Conv weights are HWIO with conv-aware Glorot fan
+/// (`rf·cin`/`rf·cout`), matching `python/compile/layers.py::glorot`.
+pub fn init_image_params(cfg: &ImageModelCfg, seed: u64) -> ParamStore {
+    assert!(cfg.hw % 4 == 0, "image size must survive two 2x2 pools");
+    let mut rng = Pcg64::new(seed, 8);
+    let mut s = ParamStore::new();
+    let uniform = |rng: &mut Pcg64, shape: &[usize], fan_in: usize, fan_out: usize| -> Tensor {
+        let limit = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+        let mut data = vec![0.0f32; shape.iter().product()];
+        for v in data.iter_mut() {
+            *v = (rng.next_f32() * 2.0 - 1.0) * limit;
+        }
+        Tensor::from_f32(shape, data)
+    };
+    let flat = (cfg.hw / 4) * (cfg.hw / 4) * cfg.c2;
+    let rf = 9; // 3x3 kernels throughout, like the zoo
+    s.insert("conv1/w", uniform(&mut rng, &[3, 3, cfg.ch, cfg.c1], rf * cfg.ch, rf * cfg.c1));
+    s.insert("conv1/bias", Tensor::zeros(&[cfg.c1], Dtype::F32));
+    s.insert("conv2/w", uniform(&mut rng, &[3, 3, cfg.c1, cfg.c2], rf * cfg.c1, rf * cfg.c2));
+    s.insert("conv2/bias", Tensor::zeros(&[cfg.c2], Dtype::F32));
+    s.insert("fc1/w", uniform(&mut rng, &[flat, cfg.fc], flat, cfg.fc));
+    s.insert("fc1/bias", Tensor::zeros(&[cfg.fc], Dtype::F32));
+    s.insert("fc2/w", uniform(&mut rng, &[cfg.fc, cfg.classes], cfg.fc, cfg.classes));
+    s.insert("fc2/bias", Tensor::zeros(&[cfg.classes], Dtype::F32));
+    s.sort_canonical();
+    s
+}
+
 /// Hermetic dense + LED variant pair: random-init dense and its
 /// `auto_fact(Rank::Ratio(ratio))` factorization with the Random solver.
 /// Shared by the artifact-free serving test, bench and `serve-demo` so the
@@ -359,7 +465,7 @@ pub fn demo_variants(
 // Layer primitives
 // ---------------------------------------------------------------------------
 
-fn pname(prefix: &str, leaf: &str) -> String {
+pub(crate) fn pname(prefix: &str, leaf: &str) -> String {
     if prefix.is_empty() {
         leaf.to_string()
     } else {
@@ -419,7 +525,7 @@ pub fn apply_linear(
     Ok((n, y))
 }
 
-fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Result<()> {
+pub(crate) fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Result<()> {
     let g = params
         .get(&pname(prefix, "g"))
         .ok_or_else(|| anyhow!("missing layernorm gain {prefix:?}"))?
@@ -444,7 +550,7 @@ fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Resu
 }
 
 /// tanh-approximated GELU (the JAX default the AOT graphs lower).
-fn gelu(x: &mut [f32]) {
+pub(crate) fn gelu(x: &mut [f32]) {
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     for v in x.iter_mut() {
         let t = C * (*v + 0.044715 * *v * *v * *v);
@@ -452,7 +558,7 @@ fn gelu(x: &mut [f32]) {
     }
 }
 
-fn relu(x: &mut [f32]) {
+pub(crate) fn relu(x: &mut [f32]) {
     for v in x.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
@@ -461,7 +567,7 @@ fn relu(x: &mut [f32]) {
 }
 
 /// In-place row softmax with max-subtraction.
-fn softmax_rows(x: &mut [f32], cols: usize) {
+pub(crate) fn softmax_rows(x: &mut [f32], cols: usize) {
     for row in x.chunks_exact_mut(cols) {
         let mut max = f32::NEG_INFINITY;
         for &v in row.iter() {
@@ -486,7 +592,12 @@ fn softmax_rows(x: &mut [f32], cols: usize) {
 // ---------------------------------------------------------------------------
 
 /// Token + position embedding: x(b·s, d).
-fn embed(params: &ParamStore, tokens: &[i32], b: usize, s: usize) -> Result<(usize, Vec<f32>)> {
+pub(crate) fn embed(
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+) -> Result<(usize, Vec<f32>)> {
     let table = params
         .get("embed/table")
         .ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
@@ -521,7 +632,7 @@ fn embed(params: &ParamStore, tokens: &[i32], b: usize, s: usize) -> Result<(usi
 /// lies beyond the contiguous range — a gap (pruned/renamed block, or a
 /// missing `ln1/g`) would otherwise silently truncate the model and return
 /// plausible-looking but wrong logits.
-fn num_blocks(params: &ParamStore) -> Result<usize> {
+pub(crate) fn num_blocks(params: &ParamStore) -> Result<usize> {
     let mut n = 0;
     while params.get(&format!("block{n}/ln1/g")).is_some() {
         n += 1;
@@ -543,6 +654,12 @@ fn num_blocks(params: &ParamStore) -> Result<usize> {
 }
 
 /// Multi-head self-attention over x(b·s, d); returns the o-projected context.
+///
+/// NOTE: `grad::attention_fwd` mirrors this op-for-op while recording a
+/// tape; any numeric change here (scale placement, mask value, loop order)
+/// must be made there too, or train-time and eval-time forwards diverge.
+/// The same applies to `transformer_block`/`grad::block_fwd`,
+/// `trunk`/`grad::trunk_fwd` and `maxpool2`/`grad::maxpool2_idx`.
 #[allow(clippy::too_many_arguments)]
 fn attention(
     params: &ParamStore,
@@ -703,7 +820,15 @@ fn lm_fwd(params: &ParamStore, tokens: &[i32], b: usize, s: usize, heads: usize)
 
 /// SAME-padded stride-1 im2col: (b·h·w, kh·kw·c) patches in HWIO column
 /// order, matching the collapsed conv weight layout of `as_matrix_2d`.
-fn im2col(x: &[f32], b: usize, h: usize, w: usize, c: usize, kh: usize, kw: usize) -> Vec<f32> {
+pub(crate) fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
     let (ph, pw) = (kh / 2, kw / 2);
     let cols = kh * kw * c;
     let mut out = vec![0.0f32; b * h * w * cols];
@@ -758,7 +883,7 @@ fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Result<(usize,
     Ok((oh, ow, out))
 }
 
-fn conv_kernel(params: &ParamStore, prefix: &str) -> Result<(usize, usize, usize)> {
+pub(crate) fn conv_kernel(params: &ParamStore, prefix: &str) -> Result<(usize, usize, usize)> {
     let t = params
         .get(&pname(prefix, "w"))
         .or_else(|| params.get(&pname(prefix, "a")))
@@ -1070,6 +1195,60 @@ mod tests {
         assert!(led.n_params() < dense.n_params());
         assert!(led.get("block0/fc1/a").is_some());
         assert!(dense.get("block0/fc1/w").is_some());
+    }
+
+    #[test]
+    fn synth_train_graph_batch_signatures() {
+        let cfg = small_cfg();
+        let params = init_text_params(&cfg, 17);
+        let g = synth_train_graph("text", "dense", 4, &params).unwrap();
+        assert_eq!(g.kind, "train");
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[1].shape, vec![4]);
+        assert_eq!(g.inputs[1].dtype, "i32");
+        assert_eq!(g.outputs[0].shape, Vec::<usize>::new());
+        // The LM trains on tokens alone.
+        let g = synth_train_graph("lm", "dense", 2, &params).unwrap();
+        assert_eq!(g.inputs.len(), 1);
+        // Image: pixels + labels.
+        let img = init_image_params(
+            &ImageModelCfg {
+                hw: 8,
+                ch: 1,
+                classes: 3,
+                c1: 4,
+                c2: 8,
+                fc: 16,
+            },
+            3,
+        );
+        let g = synth_train_graph("image", "dense", 2, &img).unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].shape, vec![2, 8, 8, 1]);
+    }
+
+    #[test]
+    fn init_image_params_shapes_and_forward() {
+        let cfg = ImageModelCfg {
+            hw: 8,
+            ch: 1,
+            classes: 3,
+            c1: 4,
+            c2: 8,
+            fc: 16,
+        };
+        let params = init_image_params(&cfg, 5);
+        assert_eq!(params.get("conv2/w").unwrap().shape, vec![3, 3, 4, 8]);
+        assert_eq!(params.get("fc1/w").unwrap().shape, vec![2 * 2 * 8, 16]);
+        let g = synth_fwd_graph("image", "dense", 2, &params).unwrap();
+        let mut rng = Pcg64::seeded(6);
+        let mut px = vec![0.0f32; 2 * 8 * 8];
+        rng.fill_normal(&mut px, 1.0);
+        let out = NativeBackend::new()
+            .run_fwd(&g, &params, &[Tensor::from_f32(&[2, 8, 8, 1], px)])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![2, 3]);
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
     }
 
     #[test]

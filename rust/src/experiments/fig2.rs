@@ -7,21 +7,188 @@
 //! * left  (`by_design`)      — factorize at init, then train.
 //! * center(`post_training`)  — train dense, factorize the checkpoint, eval.
 //! * right (`icl`)            — pretrain an LM once, factorize, few-shot eval.
+//!
+//! The harnesses are backend-generic through [`FigEnv`]: the PJRT
+//! environment trains/evals the AOT graphs from the manifest, while the
+//! native environment synthesizes graphs and random inits on the pure-Rust
+//! interpreter — so every panel runs end-to-end on a fresh checkout with no
+//! artifacts (`fig2 --backend native`). Use small step budgets there: the
+//! interpreter is an order of magnitude slower than compiled XLA.
 
 use std::collections::BTreeMap;
 
+use anyhow::bail;
+
+use crate::backend::native::{
+    init_image_params, init_text_params, synth_fwd_graph, synth_train_graph, ImageModelCfg,
+    TextModelCfg,
+};
+use crate::backend::{Backend, NativeBackend};
 use crate::data::image::{all_image_tasks, HW};
 use crate::data::lm::LmCorpus;
 use crate::data::text::all_text_tasks;
 use crate::data::{batch, Dataset, Split};
 use crate::eval::{eval_classifier, eval_icl, measure_latency};
 use crate::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::ParamStore;
 use crate::train::Trainer;
 use crate::Result;
 
 use super::ExpParams;
+
+const NATIVE: NativeBackend = NativeBackend;
+
+/// Model-zoo configuration for the artifact-free environment. Text and
+/// image default to the AOT zoo dimensions; the LM is deliberately smaller
+/// than the zoo's (d=192, 4 layers) because the native interpreter pretrains
+/// it from scratch — the full-scale ICL panel stays a PJRT workload
+/// (DESIGN.md §9).
+#[derive(Clone, Copy, Debug)]
+pub struct NativeFigCfg {
+    pub text: TextModelCfg,
+    pub image: ImageModelCfg,
+    pub lm: TextModelCfg,
+    /// Train and eval batch size for the synthesized graphs.
+    pub batch: usize,
+    /// Init seed (per-model streams are derived from it).
+    pub seed: u64,
+    /// Solver for factorization-at-init (by-design variants).
+    pub solver: Solver,
+}
+
+impl Default for NativeFigCfg {
+    fn default() -> Self {
+        Self {
+            text: TextModelCfg::default(),
+            image: ImageModelCfg::default(),
+            lm: TextModelCfg {
+                vocab: 512,
+                seq: 128,
+                d: 96,
+                heads: 6,
+                layers: 2,
+                ff: 384,
+                classes: 512, // head width = vocab for the LM
+            },
+            batch: 8,
+            seed: 42,
+            solver: Solver::Svd,
+        }
+    }
+}
+
+impl NativeFigCfg {
+    /// Init checkpoint for (model, variant): random dense init, factorized
+    /// at init for `led_rXX` variants (factorization-by-design). Layers the
+    /// Eq.-1 gate rejects stay dense — same policy as the AOT exporter.
+    fn init_params(&self, model: &str, variant: &str) -> Result<ParamStore> {
+        let mut params = match model {
+            "text" => init_text_params(&self.text, self.seed),
+            "lm" => init_text_params(&self.lm, self.seed ^ 0x4c4d),
+            "image" => {
+                // Text seq is configurable (tasks generate at any length via
+                // task_seq), but the image tasks render at a fixed size.
+                if self.image.hw != HW {
+                    bail!(
+                        "native fig2 env: image tasks are generated at the fixed {HW}x{HW}; \
+                         cfg.image.hw = {} cannot match them",
+                        self.image.hw
+                    );
+                }
+                init_image_params(&self.image, self.seed ^ 0x494d47)
+            }
+            other => bail!("native fig2 env has no model {other:?}"),
+        };
+        if variant == "dense" {
+            return Ok(params);
+        }
+        let Some(ratio) = ratio_of(variant) else {
+            bail!("cannot derive a rank ratio from variant {variant:?}");
+        };
+        auto_fact(
+            &mut params,
+            &AutoFactConfig {
+                rank: Rank::Ratio(ratio),
+                solver: self.solver,
+                num_iter: 50,
+                submodules: None,
+            },
+        )?;
+        Ok(params)
+    }
+
+    /// Synthesized graphs default `config["heads"]` to the model-zoo value
+    /// (it is not recoverable from the parameters); stamp this env's actual
+    /// head count so non-default `TextModelCfg::heads` are honored.
+    fn override_heads(&self, model: &str, graph: &mut GraphSpec) {
+        let heads = match model {
+            "text" => Some(self.text.heads),
+            "lm" => Some(self.lm.heads),
+            _ => None,
+        };
+        if let Some(h) = heads {
+            graph.config.insert("heads".to_string(), h);
+        }
+    }
+}
+
+/// Where a Figure-2 harness gets graphs, init checkpoints and execution.
+pub enum FigEnv<'a> {
+    /// AOT manifest + PJRT engine (compiled graphs, exported inits).
+    Pjrt(&'a Engine),
+    /// Hermetic: synthesized graphs + random inits on the native backend.
+    Native(NativeFigCfg),
+}
+
+impl FigEnv<'_> {
+    pub fn backend(&self) -> &dyn Backend {
+        match self {
+            FigEnv::Pjrt(engine) => *engine,
+            FigEnv::Native(_) => &NATIVE,
+        }
+    }
+
+    /// A trainer over the (model, variant) init checkpoint.
+    pub fn trainer(&self, model: &str, variant: &str) -> Result<Trainer<'_>> {
+        match self {
+            FigEnv::Pjrt(engine) => Trainer::from_init(engine, model, variant),
+            FigEnv::Native(cfg) => {
+                let params = cfg.init_params(model, variant)?;
+                let mut graph = synth_train_graph(model, variant, cfg.batch, &params)?;
+                cfg.override_heads(model, &mut graph);
+                Trainer::new(&NATIVE, &graph, params)
+            }
+        }
+    }
+
+    /// The fwd graph a checkpoint evaluates through. PJRT reads the
+    /// manifest; native synthesizes the spec from the parameters (which is
+    /// what lets post-training factorized stores — whose shapes the manifest
+    /// never saw — evaluate immediately).
+    pub fn fwd_graph(&self, model: &str, variant: &str, params: &ParamStore) -> Result<GraphSpec> {
+        match self {
+            FigEnv::Pjrt(engine) => {
+                Ok(engine.manifest().find(model, variant, "fwd", None)?.clone())
+            }
+            FigEnv::Native(cfg) => {
+                let mut graph = synth_fwd_graph(model, variant, cfg.batch, params)?;
+                cfg.override_heads(model, &mut graph);
+                Ok(graph)
+            }
+        }
+    }
+
+    /// Sequence length the text-task generators must run at: the text
+    /// model's context (the AOT zoo is lowered at 64; the native env reads
+    /// its configured `text.seq`, so shrunken-interpreter configs work).
+    fn task_seq(&self) -> usize {
+        match self {
+            FigEnv::Pjrt(_) => 64,
+            FigEnv::Native(cfg) => cfg.text.seq,
+        }
+    }
+}
 
 /// One (task, variant) measurement.
 #[derive(Clone, Debug)]
@@ -90,29 +257,28 @@ impl Fig2Result {
     }
 }
 
-fn text_tasks(seed: u64) -> Vec<Box<dyn Dataset>> {
-    all_text_tasks(64, seed)
+fn text_tasks(env: &FigEnv, seed: u64) -> Vec<Box<dyn Dataset>> {
+    all_text_tasks(env.task_seq(), seed)
 }
 
+/// Latency measurement inputs: the fwd graph plus one batch-shaped input
+/// (throughput-optimal configuration, mirrors the paper's batched timing).
 fn latency_inputs(
-    engine: &Engine,
+    env: &FigEnv,
     model: &str,
     variant: &str,
+    store: &ParamStore,
     ds: &dyn Dataset,
     image: bool,
-    seed: u64,
-) -> Result<(crate::runtime::GraphSpec, Vec<crate::tensor::Tensor>)> {
-    // Latency is measured on the largest fwd batch (throughput-optimal
-    // configuration, mirrors the paper's GPU batched timing).
-    let graph = engine.manifest().find(model, variant, "fwd", None)?.clone();
+) -> Result<(GraphSpec, Vec<crate::tensor::Tensor>)> {
+    let graph = env.fwd_graph(model, variant, store)?;
     let hw = image.then_some((HW, HW, 1usize));
     let (x, _) = batch(ds, Split::Eval, 0, graph.batch, hw);
-    let _ = seed;
     Ok((graph, vec![x]))
 }
 
 /// Panel 1: factorization-by-design over 3 text + 2 image tasks.
-pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
+pub fn by_design(env: &FigEnv, params: &ExpParams) -> Result<Fig2Result> {
     let mut result = Fig2Result {
         use_case: "by-design".into(),
         ..Default::default()
@@ -120,7 +286,7 @@ pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
 
     // (model, dataset, image?) tuples for all five tasks.
     let mut workloads: Vec<(&str, Box<dyn Dataset>, bool)> = Vec::new();
-    for ds in text_tasks(params.seed) {
+    for ds in text_tasks(env, params.seed) {
         workloads.push(("text", ds, false));
     }
     for ds in all_image_tasks(params.seed) {
@@ -134,13 +300,13 @@ pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
         let mut variants = vec!["dense".to_string()];
         variants.extend(params.ratios.iter().map(|&r| ExpParams::variant_for(r)));
         for variant in &variants {
-            // Train from the exported init (random-init LED for by-design;
-            // the init checkpoints were factorized at init by the exporter).
-            let mut trainer = Trainer::from_init(engine, model, variant)?;
+            // Train from the init (random-init LED for by-design; the init
+            // checkpoints were factorized at init).
+            let mut trainer = env.trainer(model, variant)?;
             trainer.train_classifier(ds.as_ref(), params.steps, hw, |_| {})?;
-            let fwd = engine.manifest().find(model, variant, "fwd", None)?.clone();
+            let fwd = env.fwd_graph(model, variant, &trainer.params)?;
             let ev = eval_classifier(
-                engine,
+                env.backend(),
                 &fwd,
                 &trainer.params,
                 ds.as_ref(),
@@ -148,9 +314,10 @@ pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
                 hw,
             )?;
             let (lg, li) =
-                latency_inputs(engine, model, variant, ds.as_ref(), *is_image, params.seed)?;
-            let lat = measure_latency(engine, &lg, &trainer.params, &li, 2, params.latency_iters)?
-                / lg.batch as f64;
+                latency_inputs(env, model, variant, &trainer.params, ds.as_ref(), *is_image)?;
+            let lat =
+                measure_latency(env.backend(), &lg, &trainer.params, &li, 2, params.latency_iters)?
+                    / lg.batch as f64;
             if variant == "dense" {
                 dense_acc = ev.accuracy();
                 dense_latency = lat;
@@ -172,14 +339,14 @@ pub fn by_design(engine: &Engine, params: &ExpParams) -> Result<Fig2Result> {
 
 /// Panel 2: post-training factorization (train dense once per task, then
 /// factorize the trained checkpoint at each ratio with `solver`).
-pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Result<Fig2Result> {
+pub fn post_training(env: &FigEnv, params: &ExpParams, solver: Solver) -> Result<Fig2Result> {
     let mut result = Fig2Result {
         use_case: format!("post-training ({solver})"),
         ..Default::default()
     };
 
     let mut workloads: Vec<(&str, Box<dyn Dataset>, bool)> = Vec::new();
-    for ds in text_tasks(params.seed) {
+    for ds in text_tasks(env, params.seed) {
         workloads.push(("text", ds, false));
     }
     for ds in all_image_tasks(params.seed) {
@@ -189,12 +356,12 @@ pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Res
     for (model, ds, is_image) in &workloads {
         let hw = is_image.then_some((HW, HW, 1usize));
         // 1. Train the dense model.
-        let mut trainer = Trainer::from_init(engine, model, "dense")?;
+        let mut trainer = env.trainer(model, "dense")?;
         trainer.train_classifier(ds.as_ref(), params.steps, hw, |_| {})?;
         let dense_params = trainer.params.clone();
-        let fwd_dense = engine.manifest().find(model, "dense", "fwd", None)?.clone();
+        let fwd_dense = env.fwd_graph(model, "dense", &dense_params)?;
         let ev = eval_classifier(
-            engine,
+            env.backend(),
             &fwd_dense,
             &dense_params,
             ds.as_ref(),
@@ -202,9 +369,9 @@ pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Res
             hw,
         )?;
         let dense_acc = ev.accuracy();
-        let (lg, li) = latency_inputs(engine, model, "dense", ds.as_ref(), *is_image, params.seed)?;
+        let (lg, li) = latency_inputs(env, model, "dense", &dense_params, ds.as_ref(), *is_image)?;
         let dense_latency =
-            measure_latency(engine, &lg, &dense_params, &li, 2, params.latency_iters)?
+            measure_latency(env.backend(), &lg, &dense_params, &li, 2, params.latency_iters)?
                 / lg.batch as f64;
         result.points.push(Fig2Point {
             task: ds.name().to_string(),
@@ -230,11 +397,17 @@ pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Res
                     submodules: None,
                 },
             )?;
-            let fwd = engine.manifest().find(model, &variant, "fwd", None)?.clone();
-            let ev = eval_classifier(engine, &fwd, &fact, ds.as_ref(), params.eval_examples, hw)?;
-            let (lg, li) =
-                latency_inputs(engine, model, &variant, ds.as_ref(), *is_image, params.seed)?;
-            let lat = measure_latency(engine, &lg, &fact, &li, 2, params.latency_iters)?
+            let fwd = env.fwd_graph(model, &variant, &fact)?;
+            let ev = eval_classifier(
+                env.backend(),
+                &fwd,
+                &fact,
+                ds.as_ref(),
+                params.eval_examples,
+                hw,
+            )?;
+            let (lg, li) = latency_inputs(env, model, &variant, &fact, ds.as_ref(), *is_image)?;
+            let lat = measure_latency(env.backend(), &lg, &fact, &li, 2, params.latency_iters)?
                 / lg.batch as f64;
             result.points.push(Fig2Point {
                 task: ds.name().to_string(),
@@ -257,7 +430,7 @@ pub fn post_training(engine: &Engine, params: &ExpParams, solver: Solver) -> Res
 /// Pass a pretrained `lm_params` to skip the expensive pretraining (the
 /// `icl_serving` example and the bench share one pretrained checkpoint).
 pub fn icl(
-    engine: &Engine,
+    env: &FigEnv,
     params: &ExpParams,
     lm_params: Option<ParamStore>,
     pretrain_steps: usize,
@@ -271,22 +444,22 @@ pub fn icl(
     let dense_params = match lm_params {
         Some(p) => p,
         None => {
-            let mut trainer = Trainer::from_init(engine, "lm", "dense")?;
-            let corpus = LmCorpus::new(128, params.seed);
+            let mut trainer = env.trainer("lm", "dense")?;
+            let corpus = LmCorpus::new(trainer.graph().inputs[0].shape[1], params.seed);
             trainer.train_lm(&corpus, pretrain_steps, |_| {})?;
             trainer.params
         }
     };
 
-    let tasks = text_tasks(params.seed);
-    let fwd_dense = engine.manifest().find("lm", "dense", "fwd", None)?.clone();
+    let tasks = text_tasks(env, params.seed);
+    let fwd_dense = env.fwd_graph("lm", "dense", &dense_params)?;
 
     // Dense baseline per task.
     let mut dense_acc = BTreeMap::new();
     let mut dense_lat = 0.0;
     for ds in &tasks {
         let ev = eval_icl(
-            engine,
+            env.backend(),
             &fwd_dense,
             &dense_params,
             ds.as_ref(),
@@ -323,10 +496,10 @@ pub fn icl(
                 submodules: None,
             },
         )?;
-        let fwd = engine.manifest().find("lm", &variant, "fwd", None)?.clone();
+        let fwd = env.fwd_graph("lm", &variant, &fact)?;
         for ds in &tasks {
             let ev = eval_icl(
-                engine,
+                env.backend(),
                 &fwd,
                 &fact,
                 ds.as_ref(),
@@ -411,5 +584,76 @@ mod tests {
     fn ratio_parse() {
         assert_eq!(ratio_of("led_r25"), Some(0.25));
         assert_eq!(ratio_of("dense"), None);
+    }
+
+    #[test]
+    fn native_env_builds_by_design_inits() {
+        let cfg = NativeFigCfg {
+            text: TextModelCfg {
+                vocab: 64,
+                seq: 12,
+                d: 32,
+                heads: 4,
+                layers: 1,
+                ff: 64,
+                classes: 3,
+            },
+            solver: Solver::Random, // instant (shapes are what this pins)
+            ..Default::default()
+        };
+        let dense = cfg.init_params("text", "dense").unwrap();
+        let led = cfg.init_params("text", "led_r50").unwrap();
+        assert!(led.n_params() < dense.n_params());
+        assert!(led.get("block0/fc1/a").is_some());
+        assert!(cfg.init_params("text", "weird").is_err());
+        assert!(cfg.init_params("vision", "dense").is_err());
+    }
+
+    #[test]
+    fn native_env_trainer_and_fwd_graph_agree_on_batch() {
+        let cfg = NativeFigCfg {
+            text: TextModelCfg {
+                vocab: 64,
+                seq: 12,
+                d: 16,
+                heads: 4,
+                layers: 1,
+                ff: 32,
+                classes: 3,
+            },
+            batch: 4,
+            ..Default::default()
+        };
+        let env = FigEnv::Native(cfg);
+        let trainer = env.trainer("text", "dense").unwrap();
+        assert_eq!(trainer.batch_size(), 4);
+        assert_eq!(trainer.graph().kind, "train");
+        let g = env.fwd_graph("text", "dense", &trainer.params).unwrap();
+        assert_eq!(g.batch, 4);
+        assert_eq!(g.kind, "fwd");
+    }
+
+    #[test]
+    fn native_env_honors_non_default_head_count() {
+        // synth_*_graph defaults heads to the zoo value (4 for text); the
+        // env must stamp its cfg's actual count onto both graph kinds.
+        let cfg = NativeFigCfg {
+            text: TextModelCfg {
+                vocab: 64,
+                seq: 12,
+                d: 16,
+                heads: 8,
+                layers: 1,
+                ff: 32,
+                classes: 3,
+            },
+            batch: 2,
+            ..Default::default()
+        };
+        let env = FigEnv::Native(cfg);
+        let trainer = env.trainer("text", "dense").unwrap();
+        assert_eq!(trainer.graph().config["heads"], 8);
+        let g = env.fwd_graph("text", "dense", &trainer.params).unwrap();
+        assert_eq!(g.config["heads"], 8);
     }
 }

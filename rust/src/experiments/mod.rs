@@ -8,7 +8,7 @@
 pub mod fig2;
 pub mod tables;
 
-pub use fig2::{by_design, icl, post_training, Fig2Point, Fig2Result};
+pub use fig2::{by_design, icl, post_training, Fig2Point, Fig2Result, FigEnv, NativeFigCfg};
 pub use tables::{cost_table, solver_table, CostRow, SolverRow};
 
 /// Scale parameters shared by the harnesses.

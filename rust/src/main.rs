@@ -38,14 +38,16 @@ COMMANDS:
   eval      --ckpt F [--model text] [--variant dense] [--task polarity]
             [--examples 256] [--batch 8]
   run       --config F                  config-driven experiment (JSON)
-  fig2      [--use-case by-design|post-training|icl] [--quick]
+  fig2      [--use-case by-design|post-training|icl] [--quick] [--steps N]
   report-cost                           cost-model table (E5)
   report-solvers                        solver comparison table (E6)
   serve-demo [--requests 200] [--train-steps 60]
 
 Backends: pjrt executes the AOT artifacts; native is the pure-Rust CPU
-interpreter (no artifacts needed). auto picks pjrt when artifacts exist.
-eval and serve-demo honor --backend; train/fig2/run need pjrt artifacts.
+interpreter (no artifacts needed — it trains too, via the grad module).
+eval, fig2 and serve-demo honor --backend; train/run need pjrt artifacts.
+Native fig2 runs artifact-free end to end; keep step budgets small
+(--quick / --steps / GREENFORMER_STEPS) — it is interpreted, not compiled.
 
 Tasks: polarity | topic | matching (text), shapes | blobs (image).
 Env: GREENFORMER_ARTIFACTS, GREENFORMER_STEPS, GREENFORMER_EVAL.";
@@ -280,18 +282,35 @@ fn main() -> Result<()> {
             run_config(&eng, &cfg)?;
         }
         "fig2" => {
-            let eng = engine(&args)?;
             let quick = args.has("--quick");
-            let params = if quick {
+            let mut params = if quick {
                 ExpParams::quick()
             } else {
                 ExpParams::full()
             };
-            let use_case = args.get_or("--use-case", "post-training");
+            if let Some(steps) = args.get("--steps") {
+                params.steps = steps.parse()?;
+            }
+            let eng;
+            let env = match backend_choice(&args)? {
+                BackendChoice::Pjrt => {
+                    eng = engine(&args)?;
+                    experiments::FigEnv::Pjrt(&eng)
+                }
+                BackendChoice::Native => {
+                    println!("native backend: synthesized graphs, random inits, CPU interpreter");
+                    experiments::FigEnv::Native(experiments::NativeFigCfg::default())
+                }
+            };
+            // Accept both spellings: by-design / by_design etc.
+            let use_case = args.get_or("--use-case", "post-training").replace('_', "-");
+            // An explicit --steps budget also caps the ICL LM pretrain, so
+            // `--backend native --steps N` stays N-step cheap end to end.
+            let pretrain = args.parse_or("--steps", if quick { 150 } else { 600 });
             let result = match use_case.as_str() {
-                "by-design" => experiments::by_design(&eng, &params)?,
-                "post-training" => experiments::post_training(&eng, &params, Solver::Svd)?,
-                "icl" => experiments::icl(&eng, &params, None, if quick { 150 } else { 600 })?,
+                "by-design" => experiments::by_design(&env, &params)?,
+                "post-training" => experiments::post_training(&env, &params, Solver::Svd)?,
+                "icl" => experiments::icl(&env, &params, None, pretrain)?,
                 other => anyhow::bail!("unknown use case {other:?}"),
             };
             print!("{}", result.render());

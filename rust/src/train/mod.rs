@@ -1,12 +1,20 @@
-//! Training driver: the Rust loop around the fused `train_step` artifacts.
+//! Training driver: the Rust loop around a [`Backend`]'s train step.
 //!
-//! The AOT graph does everything numeric (fwd + bwd through the Pallas
-//! custom VJPs + Adam); this module owns the loop: data iteration, step
-//! counting, loss logging, and GTZ checkpointing. By-design training is
-//! just: load the `led_rXX` init checkpoint, drive its train graph.
+//! The loop is backend-generic: the PJRT engine executes one fused AOT
+//! `train_step` graph (fwd + bwd through the Pallas custom VJPs + Adam),
+//! while the native backend runs the pure-Rust interpreter in
+//! [`crate::backend::grad`] — same contract, no artifacts. This module owns
+//! everything around the step: data iteration, step counting, loss logging,
+//! optimizer-state allocation, and GTZ checkpointing. By-design training is
+//! just: load (or synthesize) the `led_rXX` init checkpoint, drive its train
+//! graph.
 
 pub mod checkpoint;
 
+use anyhow::{anyhow, bail};
+
+use crate::backend::native::synth_train_graph;
+use crate::backend::{Backend, NativeBackend};
 use crate::data::{batch, Dataset, Split};
 use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{Dtype, ParamStore, Tensor};
@@ -22,7 +30,7 @@ pub struct StepLog {
 
 /// Training state for one (model, variant).
 pub struct Trainer<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn Backend,
     graph: GraphSpec,
     pub params: ParamStore,
     m: ParamStore,
@@ -32,23 +40,64 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
-    /// Start from a checkpoint (usually the JAX-exported init).
-    pub fn new(engine: &'e Engine, graph: &GraphSpec, mut params: ParamStore) -> Result<Self> {
-        let order: Vec<String> = graph.params.iter().map(|p| p.name.clone()).collect();
-        params.reorder_to(&order)?;
-        let zeros = |store: &ParamStore| {
-            let mut z = ParamStore::new();
-            for (name, t) in store.iter() {
-                z.insert(name, Tensor::zeros(&t.shape, Dtype::F32));
+    /// Start from a checkpoint (a JAX-exported init, a random
+    /// [`crate::backend::native::init_text_params`], or any trained store).
+    ///
+    /// The checkpoint must carry exactly the graph's declared trainable
+    /// parameters: optimizer state (`m`/`v`) is allocated strictly from
+    /// `graph.params`, every tensor is checked against its spec's shape and
+    /// dtype, and entries the graph does not declare are an error — a
+    /// misaligned store must fail loudly here, not train silently.
+    pub fn new(
+        backend: &'e dyn Backend,
+        graph: &GraphSpec,
+        mut params: ParamStore,
+    ) -> Result<Self> {
+        let mut ordered = ParamStore::new();
+        let mut m = ParamStore::new();
+        let mut v = ParamStore::new();
+        for spec in &graph.params {
+            let t = params.remove(&spec.name).ok_or_else(|| {
+                anyhow!(
+                    "trainable param {:?} required by graph {} is missing from the checkpoint",
+                    spec.name,
+                    graph.name
+                )
+            })?;
+            if t.shape != spec.shape {
+                bail!(
+                    "trainable param {:?}: checkpoint shape {:?} does not match graph {} \
+                     spec {:?}",
+                    spec.name,
+                    t.shape,
+                    graph.name,
+                    spec.shape
+                );
             }
-            z
-        };
-        let m = zeros(&params);
-        let v = zeros(&params);
+            if t.dtype() != spec.dtype()? {
+                bail!(
+                    "trainable param {:?}: checkpoint dtype does not match graph {} spec {:?}",
+                    spec.name,
+                    graph.name,
+                    spec.dtype
+                );
+            }
+            m.insert(spec.name.clone(), Tensor::zeros(&spec.shape, Dtype::F32));
+            v.insert(spec.name.clone(), Tensor::zeros(&spec.shape, Dtype::F32));
+            ordered.insert(spec.name.clone(), t);
+        }
+        if !params.is_empty() {
+            bail!(
+                "checkpoint entries not declared trainable by graph {}: {:?} \
+                 (train the matching variant, or strip them first)",
+                graph.name,
+                params.names()
+            );
+        }
         Ok(Self {
-            engine,
+            backend,
             graph: graph.clone(),
-            params,
+            params: ordered,
             m,
             v,
             step: 0,
@@ -57,12 +106,31 @@ impl<'e> Trainer<'e> {
     }
 
     /// Load the manifest's init checkpoint for (model, variant) and build a
-    /// trainer on its train graph.
+    /// trainer on its AOT train graph (the PJRT path).
     pub fn from_init(engine: &'e Engine, model: &str, variant: &str) -> Result<Self> {
         let graph = engine.manifest().find(model, variant, "train", None)?.clone();
         let ckpt = engine.manifest().checkpoint(model, variant)?;
         let params = ParamStore::load_gtz(ckpt)?;
         Self::new(engine, &graph, params)
+    }
+
+    /// Build a trainer over a checkpoint on the native backend, synthesizing
+    /// the train graph from the parameters themselves — fully artifact-free.
+    ///
+    /// The synthesized graph carries the model-zoo default head count
+    /// (text = 4, lm = 6); a non-default count is not recoverable from the
+    /// parameters, so construct the graph yourself (`synth_train_graph` +
+    /// `config["heads"]` override, as `experiments::FigEnv` does) and use
+    /// [`Trainer::new`] when you need one.
+    pub fn native(
+        backend: &'e NativeBackend,
+        model: &str,
+        variant: &str,
+        batch: usize,
+        params: ParamStore,
+    ) -> Result<Self> {
+        let graph = synth_train_graph(model, variant, batch, &params)?;
+        Self::new(backend, &graph, params)
     }
 
     pub fn graph(&self) -> &GraphSpec {
@@ -77,7 +145,7 @@ impl<'e> Trainer<'e> {
     pub fn train_step(&mut self, batch: &[Tensor]) -> Result<f32> {
         self.step += 1;
         let t0 = std::time::Instant::now();
-        let loss = self.engine.run_train_step(
+        let loss = self.backend.run_train_step(
             &self.graph,
             &mut self.params,
             &mut self.m,
@@ -128,11 +196,120 @@ impl<'e> Trainer<'e> {
     }
 
     /// Mean loss over the last `n` steps (resilience to step noise).
+    /// NaN when no steps have run yet.
     pub fn recent_loss(&self, n: usize) -> f32 {
         let tail = &self.history[self.history.len().saturating_sub(n)..];
         if tail.is_empty() {
             return f32::NAN;
         }
         tail.iter().map(|l| l.loss).sum::<f32>() / tail.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{init_text_params, TextModelCfg};
+    use crate::data::text::PolarityTask;
+
+    const BACKEND: NativeBackend = NativeBackend;
+
+    fn tiny_cfg() -> TextModelCfg {
+        TextModelCfg {
+            vocab: 512,
+            seq: 16,
+            d: 16,
+            heads: 2,
+            layers: 1,
+            ff: 32,
+            classes: 4,
+        }
+    }
+
+    fn tiny_trainer() -> Trainer<'static> {
+        let params = init_text_params(&tiny_cfg(), 11);
+        Trainer::native(&BACKEND, "text", "dense", 4, params).unwrap()
+    }
+
+    #[test]
+    fn recent_loss_is_nan_with_no_history() {
+        let t = tiny_trainer();
+        assert!(t.recent_loss(5).is_nan());
+        assert!(t.recent_loss(0).is_nan());
+    }
+
+    #[test]
+    fn train_classifier_step_accounting() {
+        let mut t = tiny_trainer();
+        let ds = PolarityTask::new(16, 0);
+        let mut seen = Vec::new();
+        t.train_classifier(&ds, 3, None, |log| seen.push(log.step)).unwrap();
+        assert_eq!(t.step, 3);
+        assert_eq!(t.history.len(), 3);
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert!(t.history.iter().all(|l| l.loss.is_finite()));
+        assert!(!t.recent_loss(2).is_nan());
+        // recent_loss(n > history) averages what exists.
+        let all: f32 = t.history.iter().map(|l| l.loss).sum::<f32>() / 3.0;
+        assert!((t.recent_loss(100) - all).abs() < 1e-6);
+    }
+
+    #[test]
+    fn train_lm_step_accounting() {
+        let cfg = TextModelCfg {
+            vocab: 512,
+            seq: 32,
+            d: 12,
+            heads: 6,
+            layers: 1,
+            ff: 24,
+            classes: 512,
+        };
+        let params = init_text_params(&cfg, 12);
+        let mut t = Trainer::native(&BACKEND, "lm", "dense", 2, params).unwrap();
+        let corpus = crate::data::lm::LmCorpus::new(32, 0);
+        t.train_lm(&corpus, 2, |_| {}).unwrap();
+        assert_eq!(t.step, 2);
+        assert_eq!(t.history.len(), 2);
+        assert!(t.history.iter().all(|l| l.loss.is_finite() && l.loss > 0.0));
+    }
+
+    #[test]
+    fn new_rejects_undeclared_checkpoint_entries() {
+        let mut params = init_text_params(&tiny_cfg(), 13);
+        let graph = synth_train_graph("text", "dense", 4, &params).unwrap();
+        params.insert("rogue/buffer", Tensor::zeros(&[4], Dtype::F32));
+        let err = Trainer::new(&BACKEND, &graph, params).unwrap_err().to_string();
+        assert!(err.contains("rogue/buffer"), "{err}");
+        assert!(err.contains("not declared trainable"), "{err}");
+    }
+
+    #[test]
+    fn new_rejects_shape_mismatch() {
+        let params = init_text_params(&tiny_cfg(), 14);
+        let graph = synth_train_graph("text", "dense", 4, &params).unwrap();
+        let mut bad = params.clone();
+        bad.insert("head/bias", Tensor::zeros(&[7], Dtype::F32));
+        let err = Trainer::new(&BACKEND, &graph, bad).unwrap_err().to_string();
+        assert!(err.contains("head/bias"), "{err}");
+        assert!(err.contains("shape"), "{err}");
+        // Missing param errors clearly too.
+        let mut missing = params.clone();
+        missing.remove("ln_f/g");
+        let err = Trainer::new(&BACKEND, &graph, missing).unwrap_err().to_string();
+        assert!(err.contains("ln_f/g"), "{err}");
+        assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn optimizer_state_matches_graph_params_exactly() {
+        let t = tiny_trainer();
+        assert_eq!(t.m.len(), t.graph.params.len());
+        assert_eq!(t.v.len(), t.graph.params.len());
+        assert_eq!(t.params.len(), t.graph.params.len());
+        // Store order follows the graph's declared order.
+        let want: Vec<&str> = t.graph.params.iter().map(|p| p.name.as_str()).collect();
+        let got: Vec<&str> = t.params.names().iter().map(String::as_str).collect();
+        assert_eq!(got, want);
     }
 }

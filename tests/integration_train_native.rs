@@ -1,0 +1,157 @@
+//! End-to-end native training, hermetic (no artifacts, no PJRT): the
+//! factorize→train→eval loop that PR 3 makes artifact-free.
+//!
+//! * `by_design_led_model_learns_polarity` — the fig2-smoke satellite: train
+//!   a tiny by-design LED text model a few hundred steps, assert the loss
+//!   decreases and held-out accuracy beats chance.
+//! * `fig2_by_design_native_smoke` / `fig2_post_training_native_smoke` —
+//!   drive the actual Figure-2 harnesses through `FigEnv::Native` at a tiny
+//!   scale: every (task, variant) point must come back populated.
+
+use greenformer::backend::native::{init_text_params, synth_fwd_graph, ImageModelCfg, TextModelCfg};
+use greenformer::backend::NativeBackend;
+use greenformer::data::text::PolarityTask;
+use greenformer::eval::eval_classifier;
+use greenformer::experiments::{by_design, post_training, ExpParams, FigEnv, NativeFigCfg};
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::train::Trainer;
+
+const BACKEND: NativeBackend = NativeBackend;
+
+fn tiny_text() -> TextModelCfg {
+    TextModelCfg {
+        vocab: 512, // full task vocabulary
+        seq: 64,    // task native length
+        d: 32,
+        heads: 4,
+        layers: 1,
+        ff: 64,
+        classes: 4,
+    }
+}
+
+fn tiny_env() -> NativeFigCfg {
+    NativeFigCfg {
+        text: tiny_text(),
+        image: ImageModelCfg {
+            hw: 28,
+            ch: 1,
+            classes: 4,
+            c1: 8,
+            c2: 16,
+            fc: 32,
+        },
+        batch: 8,
+        seed: 42,
+        solver: Solver::Svd,
+        ..Default::default()
+    }
+}
+
+fn smoke_params() -> ExpParams {
+    ExpParams {
+        steps: 15,
+        eval_examples: 32,
+        ratios: vec![0.5],
+        latency_iters: 2,
+        k_shots: 4,
+        seed: 42,
+    }
+}
+
+#[test]
+fn by_design_led_model_learns_polarity() {
+    let cfg = tiny_text();
+    let mut params = init_text_params(&cfg, 42);
+    let report = auto_fact(
+        &mut params,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.5),
+            solver: Solver::Svd,
+            num_iter: 10,
+            submodules: None,
+        },
+    )
+    .unwrap();
+    assert!(report.n_factorized() > 0, "by-design init must factorize something");
+
+    let ds = PolarityTask::new(cfg.seq, 0);
+    let mut trainer = Trainer::native(&BACKEND, "text", "led_r50", 8, params).unwrap();
+    trainer.train_classifier(&ds, 300, None, |_| {}).unwrap();
+    assert_eq!(trainer.step, 300);
+
+    let early: f32 =
+        trainer.history[..10].iter().map(|l| l.loss).sum::<f32>() / 10.0;
+    let late = trainer.recent_loss(20);
+    assert!(
+        late < early - 0.05,
+        "loss did not decrease: early {early:.4} late {late:.4}"
+    );
+
+    let graph = synth_fwd_graph("text", "led_r50", 8, &trainer.params).unwrap();
+    let ev = eval_classifier(&BACKEND, &graph, &trainer.params, &ds, 128, None).unwrap();
+    // Chance is 0.5 on the binary task; 128 examples put 3σ at ~0.13.
+    assert!(
+        ev.accuracy() > 0.6,
+        "by-design LED model should beat chance: acc {:.3} ({}/{})",
+        ev.accuracy(),
+        ev.correct,
+        ev.total
+    );
+}
+
+#[test]
+fn fig2_by_design_native_smoke() {
+    let env = FigEnv::Native(tiny_env());
+    let result = by_design(&env, &smoke_params()).unwrap();
+    // 5 tasks × (dense + led_r50).
+    assert_eq!(result.points.len(), 10, "{:#?}", result.points);
+    for p in &result.points {
+        assert!((0.0..=1.0).contains(&p.accuracy), "{p:?}");
+        assert!(p.latency > 0.0, "{p:?}");
+        assert!(p.rel_performance.is_finite(), "{p:?}");
+        assert!(p.n_params > 0, "{p:?}");
+    }
+    // LED variants are genuinely smaller on the text tasks.
+    let dense = result
+        .points
+        .iter()
+        .find(|p| p.task == "polarity" && p.variant == "dense")
+        .unwrap();
+    let led = result
+        .points
+        .iter()
+        .find(|p| p.task == "polarity" && p.variant == "led_r50")
+        .unwrap();
+    assert!(led.n_params < dense.n_params);
+    assert_eq!(led.ratio, Some(0.5));
+    // The render is the CLI artifact; it must include the averages block.
+    let text = result.render();
+    assert!(text.contains("averaged across tasks"), "{text}");
+}
+
+#[test]
+fn fig2_post_training_native_smoke() {
+    let env = FigEnv::Native(tiny_env());
+    let result = post_training(&env, &smoke_params(), Solver::Svd).unwrap();
+    assert_eq!(result.points.len(), 10, "{:#?}", result.points);
+    for p in &result.points {
+        assert!((0.0..=1.0).contains(&p.accuracy), "{p:?}");
+        assert!(p.latency > 0.0, "{p:?}");
+    }
+    // Post-training factorization happened on the *trained* checkpoint:
+    // factorized points carry fewer params than their dense baseline.
+    for task in ["polarity", "topic", "matching"] {
+        let dense = result
+            .points
+            .iter()
+            .find(|p| p.task == task && p.variant == "dense")
+            .unwrap();
+        let led = result
+            .points
+            .iter()
+            .find(|p| p.task == task && p.variant == "led_r50")
+            .unwrap();
+        assert!(led.n_params < dense.n_params, "{task}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Artifact-free KV-cached decode bench: dense vs LED variants of the
+//! synthetic causal LM through the native backend's incremental-decoding
+//! path (`DecodeSession` + `run_decode_step`).
+//!
+//! Measures the two numbers that price a generation server — prefill wall
+//! time and single-token decode latency (p50/p95 + tokens/sec) — for the
+//! dense checkpoint and its Ratio(0.5)/Ratio(0.25) LED factorizations.
+//! Decode steps are matvec-bound, so the LED rank reduction lands directly
+//! on the per-token hot path: this is Figure 2's speedup axis where
+//! production inference actually spends its time. Runs hermetically (no
+//! artifacts, no PJRT) and prints a machine-readable
+//! `BENCH_NATIVE_DECODE {...}` JSON line.
+//!
+//! Env: GREENFORMER_BENCH_DECODE_TOKENS (default 48) scales the generation
+//! length; GREENFORMER_BENCH_DECODE_ITERS (default 3) the repetitions.
+
+use greenformer::backend::native::{demo_variants, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::NativeBackend;
+use greenformer::eval::measure_decode_latency;
+use greenformer::tensor::ParamStore;
+use greenformer::util::Pcg64;
+
+const PROMPT_TOKENS: usize = 16;
+
+struct DecodeStats {
+    name: String,
+    tokens_per_sec: f64,
+    prefill_ms: f64,
+    p50_us: f64,
+    p95_us: f64,
+}
+
+fn bench_variant(
+    name: &str,
+    store: &ParamStore,
+    prompt: &[i32],
+    new_tokens: usize,
+    iters: usize,
+) -> DecodeStats {
+    let graph = synth_fwd_graph("lm", name, 1, store).expect("synth graph");
+    let lat = measure_decode_latency(
+        &NativeBackend::new(),
+        &graph,
+        store,
+        prompt,
+        new_tokens,
+        1,
+        iters,
+    )
+    .expect("measure_decode_latency");
+    DecodeStats {
+        name: name.to_string(),
+        tokens_per_sec: lat.tokens_per_sec,
+        prefill_ms: lat.prefill_s * 1e3,
+        p50_us: lat.per_token_p50_s * 1e6,
+        p95_us: lat.per_token_p95_s * 1e6,
+    }
+}
+
+fn main() {
+    let env_usize = |key: &str, default: usize| {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let iters = env_usize("GREENFORMER_BENCH_DECODE_ITERS", 3).max(1);
+    let cfg = TextModelCfg::lm_default();
+    let new_tokens = env_usize("GREENFORMER_BENCH_DECODE_TOKENS", 48)
+        .clamp(1, cfg.seq - PROMPT_TOKENS);
+
+    // Same seed → identical dense checkpoint across both ratio calls.
+    let (dense, led50) = demo_variants(&cfg, 42, 0.5).expect("variants");
+    let (_, led25) = demo_variants(&cfg, 42, 0.25).expect("variants");
+    let mut rng = Pcg64::seeded(7);
+    let prompt: Vec<i32> = (0..PROMPT_TOKENS).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    println!(
+        "== native decode: dense vs LED (d={} ff={} layers={} vocab={}, prompt={PROMPT_TOKENS}, \
+         new={new_tokens}, iters={iters}) ==",
+        cfg.d, cfg.ff, cfg.layers, cfg.vocab
+    );
+    println!(
+        "{:<10} {:>10} {:>12} {:>12} {:>12}",
+        "variant", "tok/s", "prefill(ms)", "p50(us/tok)", "p95(us/tok)"
+    );
+
+    let cases = [("dense", &dense), ("led_r50", &led50), ("led_r25", &led25)];
+    let mut stats = Vec::new();
+    for (name, store) in cases {
+        let s = bench_variant(name, store, &prompt, new_tokens, iters);
+        println!(
+            "{:<10} {:>10.1} {:>12.2} {:>12.1} {:>12.1}",
+            s.name, s.tokens_per_sec, s.prefill_ms, s.p50_us, s.p95_us
+        );
+        stats.push(s);
+    }
+
+    let get = |n: &str| stats.iter().find(|s| s.name == n).expect("stat");
+    let (d, r50, r25) = (get("dense"), get("led_r50"), get("led_r25"));
+    println!(
+        "decode speedup vs dense: led_r50 {:.2}x  led_r25 {:.2}x",
+        r50.tokens_per_sec / d.tokens_per_sec,
+        r25.tokens_per_sec / d.tokens_per_sec
+    );
+    println!(
+        "BENCH_NATIVE_DECODE {{\"prompt_tokens\":{PROMPT_TOKENS},\"new_tokens\":{new_tokens},\
+         \"iters\":{iters},\"dense_tps\":{:.2},\"led_r50_tps\":{:.2},\"led_r25_tps\":{:.2},\
+         \"dense_prefill_ms\":{:.3},\"led_r50_prefill_ms\":{:.3},\"led_r25_prefill_ms\":{:.3},\
+         \"dense_p50_us\":{:.1},\"dense_p95_us\":{:.1},\"led_r50_p50_us\":{:.1},\
+         \"led_r50_p95_us\":{:.1},\"led_r25_p50_us\":{:.1},\"led_r25_p95_us\":{:.1},\
+         \"led_r50_speedup\":{:.3},\"led_r25_speedup\":{:.3}}}",
+        d.tokens_per_sec,
+        r50.tokens_per_sec,
+        r25.tokens_per_sec,
+        d.prefill_ms,
+        r50.prefill_ms,
+        r25.prefill_ms,
+        d.p50_us,
+        d.p95_us,
+        r50.p50_us,
+        r50.p95_us,
+        r25.p50_us,
+        r25.p95_us,
+        r50.tokens_per_sec / d.tokens_per_sec,
+        r25.tokens_per_sec / d.tokens_per_sec
+    );
+}

@@ -1,0 +1,585 @@
+//! KV-cached incremental decoding for the native LM path.
+//!
+//! The full-sequence forward pass ([`super::native`]) recomputes every
+//! prefix position on every call — fine for scoring a fixed window, hopeless
+//! for autoregressive generation, where production inference spends its
+//! time. This module adds the serving-side counterpart: a [`DecodeSession`]
+//! that owns per-layer key/value caches, so appending one token costs one
+//! row of projections plus attention over the cache instead of a full
+//! re-encode of the prefix.
+//!
+//! Numerics are **bit-identical** to the full forward pass, not merely
+//! close: every GEMM routes through the same
+//! [`crate::linalg::matrix::matmul_into`] (whose k-dimension accumulation
+//! order per output element does not depend on the row count), causally
+//! masked score logits are pinned to the same `-1e9` before the same
+//! softmax (where they underflow to exactly `0.0`), and zero attention
+//! weights are skipped identically in the context GEMM. The
+//! KV-cache ≡ full-recompute equivalence is pinned for dense and LED models
+//! by `tests/proptest_decode.rs`.
+//!
+//! Because LED factors keep each layer's I/O signature, one decode path
+//! serves any mixture of dense and factorized layers — the per-token GEMMs
+//! shrink with the rank, which is exactly where Greenformer's speedup shows
+//! up on the decode hot path (`benches/native_decode.rs` pins the number).
+//!
+//! Sampling ([`SamplingCfg`] / [`sample_token`]) is driven by the seeded
+//! [`Pcg64`] stream, so a fixed seed reproduces the same token stream
+//! byte-for-byte — the determinism contract the coordinator's streaming
+//! `generate` endpoint and the CLI both rely on.
+
+use anyhow::{anyhow, bail};
+
+use crate::linalg::matrix::matmul_into;
+use crate::runtime::GraphSpec;
+use crate::tensor::{ParamStore, Tensor};
+use crate::util::Pcg64;
+use crate::Result;
+
+use super::native::{apply_linear, gelu, heads_for, layernorm, num_blocks, pname, softmax_rows};
+use super::Backend;
+
+/// RNG stream id for sampling draws — distinct from the dataset/solver/init
+/// streams so seeding a sampler never perturbs any other randomness.
+const SAMPLE_STREAM: u64 = 0x5a17;
+
+/// Per-layer key/value cache rows, appended as positions are decoded.
+#[derive(Clone, Debug, Default)]
+struct LayerKv {
+    /// Keys, row-major `(len, d)` — one d-wide row per cached position.
+    k: Vec<f32>,
+    /// Values, row-major `(len, d)`.
+    v: Vec<f32>,
+}
+
+/// Mutable state of one in-flight autoregressive decode: the per-layer KV
+/// caches plus the model dimensions they were sized for.
+///
+/// A session is created once per generation ([`DecodeSession::new`]), fed a
+/// prompt via one prefill call to [`Backend::run_decode_step`], then
+/// advanced one token at a time. The session owns only the caches — the
+/// parameters stay in the caller's [`ParamStore`], so many sessions can
+/// share one checkpoint.
+#[derive(Clone, Debug)]
+pub struct DecodeSession {
+    /// Residual width.
+    d: usize,
+    /// Attention head count (from the graph config / model-zoo default).
+    heads: usize,
+    /// Logit width of the LM head.
+    vocab: usize,
+    /// Positional capacity: rows of `pos/table` the model was built with.
+    max_seq: usize,
+    /// Positions decoded so far (cache rows per layer).
+    len: usize,
+    layers: Vec<LayerKv>,
+}
+
+impl DecodeSession {
+    /// Open a session for an LM graph + checkpoint pair.
+    ///
+    /// The graph must be a `fwd` graph with per-position logits `(B, S, V)`
+    /// — the shape contract that marks the causal LM family. Classifier
+    /// graphs are refused: their pooled head has no per-position
+    /// distribution to sample from.
+    pub fn new(graph: &GraphSpec, params: &ParamStore) -> Result<Self> {
+        if graph.kind != "fwd" {
+            bail!("decode sessions need a fwd graph, got kind {:?}", graph.kind);
+        }
+        let out = graph
+            .outputs
+            .first()
+            .ok_or_else(|| anyhow!("graph {} has no output spec", graph.name))?;
+        if out.shape.len() != 3 {
+            bail!(
+                "decode sessions need an LM graph with per-position logits (B, S, vocab); \
+                 {} emits {:?} (a classifier)",
+                graph.name,
+                out.shape
+            );
+        }
+        let vocab = out.shape[2];
+        let embed = params
+            .get("embed/table")
+            .ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
+        let d = embed.shape[1];
+        let heads = heads_for(graph);
+        if heads == 0 || d % heads != 0 {
+            bail!("d={d} not divisible by heads={heads}");
+        }
+        let pos = params
+            .get("pos/table")
+            .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?;
+        if pos.shape.len() != 2 || pos.shape[1] != d {
+            bail!("pos/table {:?} incompatible with d {d}", pos.shape);
+        }
+        let max_seq = graph.config_usize("seq").unwrap_or(pos.shape[0]).min(pos.shape[0]);
+        let n_layers = num_blocks(params)?;
+        Ok(Self {
+            d,
+            heads,
+            vocab,
+            max_seq,
+            len: 0,
+            layers: (0..n_layers).map(|_| LayerKv::default()).collect(),
+        })
+    }
+
+    /// Positions decoded so far (prompt + generated, cached per layer).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before the first prefill.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The model's positional capacity (rows of `pos/table`).
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Positions that can still be appended before the context is full.
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.len
+    }
+
+    /// Logit width of the LM head (the sampling distribution's support).
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Bytes currently held by the KV caches across all layers.
+    pub fn cache_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| std::mem::size_of_val(l.k.as_slice()) + std::mem::size_of_val(l.v.as_slice()))
+            .sum()
+    }
+
+    /// Drop all cached positions, keeping the allocations for reuse.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+        }
+    }
+}
+
+/// The native implementation of [`Backend::run_decode_step`]: append
+/// `new_tokens` (the whole prompt on prefill, a single token per step after
+/// that) to the session's KV caches and return the logits of the **last**
+/// appended position as a `(vocab,)` tensor.
+///
+/// All chunk rows run as one batch of GEMM rows — prefill gets the same
+/// blocked-GEMM efficiency as the full forward — while attention for row
+/// `i` of the chunk sees cache positions `0..=p0+i` (causal mask identical
+/// to the full pass).
+pub(crate) fn native_decode_step(
+    params: &ParamStore,
+    session: &mut DecodeSession,
+    new_tokens: &[i32],
+) -> Result<Tensor> {
+    let n = new_tokens.len();
+    if n == 0 {
+        bail!("decode step needs at least one new token");
+    }
+    let p0 = session.len;
+    if p0 + n > session.max_seq {
+        bail!(
+            "decode overflows the positional capacity: {p0} cached + {n} new > seq {}",
+            session.max_seq
+        );
+    }
+    let (d, heads) = (session.d, session.heads);
+    let dk = d / heads;
+
+    // Token + position embedding of the chunk, at absolute positions
+    // p0..p0+n (native::embed assumes position 0 — decode cannot reuse it).
+    let table = params
+        .get("embed/table")
+        .ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
+    let vocab_rows = table.shape[0];
+    let td = table.as_f32()?;
+    let pd = params
+        .get("pos/table")
+        .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?
+        .as_f32()?;
+    let mut x = vec![0.0f32; n * d];
+    for (si, &t) in new_tokens.iter().enumerate() {
+        if t < 0 || t as usize >= vocab_rows {
+            bail!("token id {t} out of range (vocab {vocab_rows})");
+        }
+        let row = &td[t as usize * d..(t as usize + 1) * d];
+        let prow = &pd[(p0 + si) * d..(p0 + si + 1) * d];
+        let dst = &mut x[si * d..(si + 1) * d];
+        for ((dv, &rv), &pv) in dst.iter_mut().zip(row).zip(prow) {
+            *dv = rv + pv;
+        }
+    }
+
+    let len = p0 + n;
+    let scale = 1.0 / (dk as f32).sqrt();
+    for (li, layer) in session.layers.iter_mut().enumerate() {
+        let prefix = format!("block{li}");
+
+        // Attention sublayer: project the chunk, append K/V to the cache,
+        // then score each chunk row against every cached position.
+        let mut xn = x.clone();
+        layernorm(params, &pname(&prefix, "ln1"), d, &mut xn)?;
+        let ap = pname(&prefix, "attn");
+        let (dq, q) = apply_linear(params, &pname(&ap, "q"), n, d, &xn)?;
+        let (dkk, knew) = apply_linear(params, &pname(&ap, "k"), n, d, &xn)?;
+        let (dv, vnew) = apply_linear(params, &pname(&ap, "v"), n, d, &xn)?;
+        if dq != d || dkk != d || dv != d {
+            bail!("{ap}: projection output dims {dq}/{dkk}/{dv} != d {d}");
+        }
+        layer.k.extend_from_slice(&knew);
+        layer.v.extend_from_slice(&vnew);
+        debug_assert_eq!(layer.k.len(), len * d);
+
+        let mut ctx = vec![0.0f32; n * d];
+        let mut qh = vec![0.0f32; n * dk];
+        let mut kt = vec![0.0f32; dk * len]; // cache keys gathered pre-transposed: (dk, len)
+        let mut vh = vec![0.0f32; len * dk];
+        let mut scores = vec![0.0f32; n * len];
+        let mut oh = vec![0.0f32; n * dk];
+        for h in 0..heads {
+            for si in 0..n {
+                let src = si * d + h * dk;
+                qh[si * dk..(si + 1) * dk].copy_from_slice(&q[src..src + dk]);
+            }
+            for pi in 0..len {
+                let src = pi * d + h * dk;
+                vh[pi * dk..(pi + 1) * dk].copy_from_slice(&layer.v[src..src + dk]);
+                for ki in 0..dk {
+                    kt[ki * len + pi] = layer.k[src + ki];
+                }
+            }
+            // scores(n, len) = qh @ kt * scale; chunk row i may only see
+            // cache positions 0..=p0+i (mask pinned to -1e9 pre-softmax,
+            // exactly like the full pass — it underflows to 0.0 there too).
+            scores.fill(0.0);
+            matmul_into(n, dk, len, &qh, &kt, &mut scores);
+            for i in 0..n {
+                let row = &mut scores[i * len..(i + 1) * len];
+                for v in row.iter_mut() {
+                    *v *= scale;
+                }
+                for v in row[p0 + i + 1..].iter_mut() {
+                    *v = -1e9;
+                }
+            }
+            softmax_rows(&mut scores, len);
+            oh.fill(0.0);
+            matmul_into(n, len, dk, &scores, &vh, &mut oh);
+            for si in 0..n {
+                let dst = si * d + h * dk;
+                ctx[dst..dst + dk].copy_from_slice(&oh[si * dk..(si + 1) * dk]);
+            }
+        }
+        let (do_, attn) = apply_linear(params, &pname(&ap, "o"), n, d, &ctx)?;
+        if do_ != d {
+            bail!("{ap}: o-projection output dim {do_} != d {d}");
+        }
+        for (v, a) in x.iter_mut().zip(&attn) {
+            *v += a;
+        }
+
+        // FFN sublayer (dense or LED — apply_linear dispatches on keys).
+        let mut xn = x.clone();
+        layernorm(params, &pname(&prefix, "ln2"), d, &mut xn)?;
+        let (ff, mut hmid) = apply_linear(params, &pname(&prefix, "fc1"), n, d, &xn)?;
+        gelu(&mut hmid);
+        let (d2, y) = apply_linear(params, &pname(&prefix, "fc2"), n, ff, &hmid)?;
+        if d2 != d {
+            bail!("{prefix}: fc2 output dim {d2} != d {d}");
+        }
+        for (v, a) in x.iter_mut().zip(&y) {
+            *v += a;
+        }
+    }
+    session.len = len;
+
+    // Final layernorm + LM head on the last chunk row only — earlier rows'
+    // logits were (or could have been) emitted by earlier steps.
+    layernorm(params, "ln_f", d, &mut x)?;
+    let last = &x[(n - 1) * d..n * d];
+    let (vocab, logits) = apply_linear(params, "head", 1, d, last)?;
+    if vocab != session.vocab {
+        bail!("head width {vocab} does not match the graph's logit width {}", session.vocab);
+    }
+    Ok(Tensor::from_f32(&[vocab], logits))
+}
+
+// ---------------------------------------------------------------------------
+// Sampling
+// ---------------------------------------------------------------------------
+
+/// How to turn next-token logits into a token: greedy (`temperature == 0`),
+/// or temperature softmax optionally restricted to the `top_k` highest
+/// logits. Draws come from a dedicated seeded [`Pcg64`] stream, so the same
+/// seed reproduces the same token stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SamplingCfg {
+    /// Softmax temperature; `<= 0.0` selects greedy argmax decoding.
+    pub temperature: f32,
+    /// Restrict sampling to the k highest logits; `0` disables the filter.
+    pub top_k: usize,
+    /// Seed of the sampling RNG stream.
+    pub seed: u64,
+}
+
+impl SamplingCfg {
+    /// Deterministic greedy decoding (the default).
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    /// The seeded sampler RNG for this configuration.
+    pub fn rng(&self) -> Pcg64 {
+        Pcg64::new(self.seed, SAMPLE_STREAM)
+    }
+}
+
+/// First index of the maximum logit (ties break to the lowest index, like
+/// the eval harness's argmax).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sample one token id from next-token `logits` under `cfg`, advancing
+/// `rng`. Greedy when `cfg.temperature <= 0.0` (the rng is untouched then,
+/// so greedy streams are reproducible regardless of seed).
+pub fn sample_token(logits: &[f32], cfg: &SamplingCfg, rng: &mut Pcg64) -> usize {
+    debug_assert!(!logits.is_empty());
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        // Descending by logit, ties ascending by index — deterministic.
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
+        idx.truncate(cfg.top_k);
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| f64::from((logits[i] - max) * inv_t).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
+// ---------------------------------------------------------------------------
+// Generation driver
+// ---------------------------------------------------------------------------
+
+/// What one [`generate`] run produced.
+#[derive(Clone, Debug)]
+pub struct GenerateOutcome {
+    /// Generated token ids, in order (the prompt is not repeated).
+    pub tokens: Vec<i32>,
+    /// Prompt length consumed by the prefill.
+    pub prefill_tokens: usize,
+    /// Total positions held in the KV cache at the end (prompt + appended).
+    pub positions_used: usize,
+}
+
+/// Autoregressive generation: one prefill over `prompt`, then single-token
+/// decode steps, sampling each next token under `cfg`. Stops after
+/// `max_new` tokens or when the positional capacity is exhausted (whichever
+/// comes first — the final sampled token never needs to be appended).
+/// `on_token(index, token)` fires as each token is sampled, enabling
+/// streaming consumers.
+///
+/// Works on any [`Backend`] that implements
+/// [`Backend::run_decode_step`] — the PJRT backend refuses (AOT graphs are
+/// fixed-shape full-sequence executables), the native backend implements it.
+pub fn generate(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    prompt: &[i32],
+    max_new: usize,
+    cfg: &SamplingCfg,
+    mut on_token: impl FnMut(usize, i32),
+) -> Result<GenerateOutcome> {
+    if prompt.is_empty() {
+        bail!("generate needs a non-empty prompt");
+    }
+    if max_new == 0 {
+        bail!("generate needs max_new >= 1");
+    }
+    let mut session = DecodeSession::new(graph, params)?;
+    let mut logits_t = backend.run_decode_step(graph, params, &mut session, prompt)?;
+    let mut rng = cfg.rng();
+    let mut tokens = Vec::with_capacity(max_new);
+    loop {
+        let tok = sample_token(logits_t.as_f32()?, cfg, &mut rng) as i32;
+        on_token(tokens.len(), tok);
+        tokens.push(tok);
+        if tokens.len() >= max_new || session.remaining() == 0 {
+            break;
+        }
+        logits_t = backend.run_decode_step(graph, params, &mut session, &[tok])?;
+    }
+    Ok(GenerateOutcome {
+        tokens,
+        prefill_tokens: prompt.len(),
+        positions_used: session.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+    use crate::backend::NativeBackend;
+
+    fn lm_cfg() -> TextModelCfg {
+        TextModelCfg {
+            vocab: 48,
+            seq: 10,
+            d: 24,
+            heads: 6,
+            layers: 1,
+            ff: 32,
+            classes: 48,
+        }
+    }
+
+    #[test]
+    fn session_rejects_classifier_graphs() {
+        let cfg = TextModelCfg {
+            classes: 4,
+            ..lm_cfg()
+        };
+        let params = init_text_params(&cfg, 1);
+        let g = synth_fwd_graph("text", "dense", 1, &params).unwrap();
+        assert!(DecodeSession::new(&g, &params).is_err());
+    }
+
+    #[test]
+    fn decode_matches_full_forward_smoke() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 2);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let toks: Vec<i32> = (0..cfg.seq as i32).map(|t| t % cfg.vocab as i32).collect();
+        let full = be
+            .run_fwd(&g, &params, &[Tensor::from_i32(&[1, cfg.seq], toks.clone())])
+            .unwrap();
+        let full_logits = full[0].as_f32().unwrap();
+
+        let mut session = DecodeSession::new(&g, &params).unwrap();
+        // Prefill 4 tokens, then append the rest one at a time; each step's
+        // logits must equal the full forward's row at that position.
+        let l = be.run_decode_step(&g, &params, &mut session, &toks[..4]).unwrap();
+        let want = &full_logits[3 * cfg.vocab..4 * cfg.vocab];
+        for (a, b) in l.as_f32().unwrap().iter().zip(want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        for p in 4..cfg.seq {
+            let l = be.run_decode_step(&g, &params, &mut session, &toks[p..p + 1]).unwrap();
+            let want = &full_logits[p * cfg.vocab..(p + 1) * cfg.vocab];
+            for (a, b) in l.as_f32().unwrap().iter().zip(want) {
+                assert!((a - b).abs() < 1e-5, "pos {p}: {a} vs {b}");
+            }
+        }
+        assert_eq!(session.len(), cfg.seq);
+        assert_eq!(session.remaining(), 0);
+        assert!(session.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn decode_refuses_overflow_and_bad_tokens() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 3);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let mut session = DecodeSession::new(&g, &params).unwrap();
+        let too_long = vec![0i32; cfg.seq + 1];
+        assert!(be.run_decode_step(&g, &params, &mut session, &too_long).is_err());
+        assert!(be
+            .run_decode_step(&g, &params, &mut session, &[cfg.vocab as i32])
+            .is_err());
+        assert!(be.run_decode_step(&g, &params, &mut session, &[]).is_err());
+        // A valid prefill still works after the failed attempts (the
+        // overflow/range checks fire before any cache mutation).
+        session.reset();
+        assert!(be.run_decode_step(&g, &params, &mut session, &[0, 1, 2]).is_ok());
+        assert_eq!(session.len(), 3);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax_and_ignores_rng() {
+        let logits = [0.1f32, 2.0, -1.0, 2.0];
+        let cfg = SamplingCfg::greedy();
+        let mut rng = cfg.rng();
+        let before = rng.clone().next_u64();
+        assert_eq!(sample_token(&logits, &cfg, &mut rng), 1);
+        assert_eq!(rng.next_u64(), before, "greedy must not consume rng draws");
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0f32, 5.0, 4.0, -3.0, 1.0];
+        let cfg = SamplingCfg {
+            temperature: 1.0,
+            top_k: 2,
+            seed: 9,
+        };
+        let mut rng = cfg.rng();
+        for _ in 0..64 {
+            let t = sample_token(&logits, &cfg, &mut rng);
+            assert!(t == 1 || t == 2, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn fixed_seed_reproduces_the_stream() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 4);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let s = SamplingCfg {
+            temperature: 0.9,
+            top_k: 16,
+            seed: 77,
+        };
+        let a = generate(&be, &g, &params, &[1, 2, 3], 6, &s, |_, _| {}).unwrap();
+        let b = generate(&be, &g, &params, &[1, 2, 3], 6, &s, |_, _| {}).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.prefill_tokens, 3);
+        assert_eq!(a.positions_used, 3 + 6 - 1); // final token is never appended
+    }
+
+    #[test]
+    fn generate_stops_at_positional_capacity() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 5);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let prompt = vec![0i32; cfg.seq - 2];
+        let mut seen = Vec::new();
+        let out = generate(&be, &g, &params, &prompt, 50, &SamplingCfg::greedy(), |i, t| {
+            seen.push((i, t));
+        })
+        .unwrap();
+        // seq-2 prompt positions leave room to append 2 more: 3 sampled
+        // tokens total (the last one is sampled without being appended).
+        assert_eq!(out.tokens.len(), 3);
+        assert_eq!(out.positions_used, cfg.seq);
+        assert_eq!(seen.len(), out.tokens.len());
+        assert_eq!(seen.last().unwrap().1, *out.tokens.last().unwrap());
+    }
+}

@@ -40,9 +40,13 @@ use super::native::{
 /// `python/compile/model.py` (the values baked into the AOT train graphs).
 #[derive(Clone, Copy, Debug)]
 pub struct AdamConfig {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay β₁.
     pub b1: f32,
+    /// Second-moment decay β₂.
     pub b2: f32,
+    /// Denominator stabilizer ε.
     pub eps: f32,
 }
 
@@ -66,10 +70,12 @@ pub struct Grads {
 }
 
 impl Grads {
+    /// Gradient buffer for a parameter name.
     pub fn get(&self, name: &str) -> Option<&[f32]> {
         self.map.get(name).map(Vec::as_slice)
     }
 
+    /// Names of all parameters with accumulated gradients.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(String::as_str)
     }
@@ -198,7 +204,7 @@ pub fn linear_bwd(
 
 const LN_EPS: f32 = 1e-5;
 
-/// Backward through the LayerNorm in [`layernorm`]: `x_pre` is the
+/// Backward through the forward interpreter's LayerNorm: `x_pre` is the
 /// *pre-normalization* input (stats are recomputed — cheaper than taping
 /// mean/var per row). Accumulates gain/bias gradients, returns dx.
 pub fn layernorm_bwd(

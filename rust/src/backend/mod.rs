@@ -13,12 +13,51 @@
 //!   executes the classifier/LM/CNN forward pass on the blocked,
 //!   multithreaded GEMM in [`crate::linalg::matrix`] — and, since PR 3, the
 //!   matching backward pass + Adam in [`grad`], so the full
-//!   factorize→train→eval loop runs with no artifacts and no FFI.
+//!   factorize→train→eval loop runs with no artifacts and no FFI — and,
+//!   since PR 4, KV-cached incremental decoding in [`decode`], so the LM
+//!   path generates autoregressively instead of re-scoring full windows.
 //!
 //! Selection is automatic in [`crate::coordinator::serve_classifier`]
 //! (PJRT when artifacts resolve, native otherwise) and explicit via the CLI
-//! `--backend {native,pjrt}` flag. See DESIGN.md §8–§9 for the contract.
+//! `--backend {native,pjrt}` flag. See DESIGN.md §8–§10 for the contract.
+//!
+//! # Examples
+//!
+//! Run a forward pass hermetically: random-init a checkpoint, synthesize
+//! its graph, execute on the native interpreter:
+//!
+//! ```
+//! use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+//! use greenformer::backend::{Backend, NativeBackend};
+//! use greenformer::tensor::Tensor;
+//!
+//! let cfg = TextModelCfg { vocab: 64, seq: 8, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 };
+//! let params = init_text_params(&cfg, 7);
+//! let graph = synth_fwd_graph("text", "dense", 2, &params).unwrap();
+//! let x = Tensor::from_i32(&[2, 8], vec![1; 16]);
+//! let out = NativeBackend::new().run_fwd(&graph, &params, &[x]).unwrap();
+//! assert_eq!(out[0].shape, vec![2, 3]);
+//! ```
+//!
+//! Generate from a causal LM with the KV cache (greedy sampling):
+//!
+//! ```
+//! use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+//! use greenformer::backend::{generate, NativeBackend, SamplingCfg};
+//!
+//! // An LM is a text model whose head width equals its vocab.
+//! let cfg = TextModelCfg { vocab: 48, seq: 12, d: 24, heads: 6, layers: 1, ff: 32, classes: 48 };
+//! let params = init_text_params(&cfg, 7);
+//! let graph = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+//! let out = generate(
+//!     &NativeBackend::new(), &graph, &params,
+//!     &[1, 2, 3], 4, &SamplingCfg::greedy(), |_, _| {},
+//! )
+//! .unwrap();
+//! assert_eq!(out.tokens.len(), 4);
+//! ```
 
+pub mod decode;
 pub mod grad;
 pub mod native;
 
@@ -26,6 +65,7 @@ use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
 
+pub use decode::{generate, sample_token, DecodeSession, GenerateOutcome, SamplingCfg};
 pub use native::NativeBackend;
 
 /// Which engine a [`Backend`] is.
@@ -86,6 +126,31 @@ pub trait Backend {
         let _ = (graph, params, m, v, step_no, batch);
         anyhow::bail!("backend {:?} cannot execute train graphs", self.platform())
     }
+
+    /// Advance one KV-cached decode session: append `new_tokens` (the whole
+    /// prompt on the first call, one sampled token per call after that) and
+    /// return the next-token logits of the last appended position as a
+    /// `(vocab,)` tensor.
+    ///
+    /// The native backend implements this with numerics identical to
+    /// [`Backend::run_fwd`] on the full prefix (see [`decode`] for the
+    /// argument). The default — and therefore PJRT — refuses: the AOT fwd
+    /// graphs are fixed-shape full-sequence executables with no cache
+    /// inputs, so incremental decoding is a native-only capability for now.
+    fn run_decode_step(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        session: &mut DecodeSession,
+        new_tokens: &[i32],
+    ) -> Result<Tensor> {
+        let _ = (graph, params, session, new_tokens);
+        anyhow::bail!(
+            "backend {:?} cannot run incremental decode (KV-cached generation is native-only; \
+             AOT fwd graphs are fixed-shape full-sequence executables)",
+            self.platform()
+        )
+    }
 }
 
 /// [`Backend`] over the PJRT [`Engine`] — a thin newtype so backend
@@ -102,10 +167,12 @@ impl PjrtBackend {
         })
     }
 
+    /// Wrap an already-loaded engine.
     pub fn from_engine(engine: Engine) -> Self {
         Self { engine }
     }
 
+    /// The wrapped PJRT engine.
     pub fn engine(&self) -> &Engine {
         &self.engine
     }

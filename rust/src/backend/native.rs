@@ -37,6 +37,7 @@ use super::{Backend, BackendKind};
 pub struct NativeBackend;
 
 impl NativeBackend {
+    /// The interpreter (zero-sized; construction is free).
     pub fn new() -> Self {
         NativeBackend
     }
@@ -119,6 +120,16 @@ impl Backend for NativeBackend {
             batch,
             &super::grad::AdamConfig::default(),
         )
+    }
+
+    fn run_decode_step(
+        &self,
+        _graph: &GraphSpec,
+        params: &ParamStore,
+        session: &mut super::DecodeSession,
+        new_tokens: &[i32],
+    ) -> Result<Tensor> {
+        super::decode::native_decode_step(params, session, new_tokens)
     }
 }
 
@@ -305,12 +316,19 @@ pub fn synth_train_graph(
 /// recover the head count from the parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct TextModelCfg {
+    /// Vocabulary size (embedding rows).
     pub vocab: usize,
+    /// Context length (positional-table rows).
     pub seq: usize,
+    /// Residual width.
     pub d: usize,
+    /// Attention heads (must divide `d`).
     pub heads: usize,
+    /// Transformer blocks.
     pub layers: usize,
+    /// FFN hidden width.
     pub ff: usize,
+    /// Head output width (classes for classifiers, vocab for the LM).
     pub classes: usize,
 }
 
@@ -324,6 +342,24 @@ impl Default for TextModelCfg {
             layers: 2,
             ff: 512,
             classes: 4,
+        }
+    }
+}
+
+impl TextModelCfg {
+    /// Synthetic causal-LM dimensions for hermetic decode tests, benches and
+    /// the `generate` CLI: head width = vocab (per-position next-token
+    /// logits) and `heads` at the model-zoo `"lm"` default of 6, so
+    /// synthesized graphs need no head-count override.
+    pub fn lm_default() -> Self {
+        Self {
+            vocab: 512,
+            seq: 96,
+            d: 192,
+            heads: 6,
+            layers: 2,
+            ff: 768,
+            classes: 512,
         }
     }
 }
@@ -381,11 +417,17 @@ pub fn init_text_params(cfg: &TextModelCfg, seed: u64) -> ParamStore {
 /// 2×2 max-pools).
 #[derive(Clone, Copy, Debug)]
 pub struct ImageModelCfg {
+    /// Input image side length (must survive two 2×2 pools).
     pub hw: usize,
+    /// Input channels.
     pub ch: usize,
+    /// Output classes.
     pub classes: usize,
+    /// conv1 output channels.
     pub c1: usize,
+    /// conv2 output channels.
     pub c2: usize,
+    /// fc1 hidden width.
     pub fc: usize,
 }
 

@@ -13,22 +13,32 @@ use crate::factorize::{AutoFactConfig, Rank, Solver};
 use crate::util::Json;
 use crate::Result;
 
+/// A full experiment description: what to train, how to factorize, how to
+/// evaluate and serve.
 #[derive(Clone, Debug, Default)]
 pub struct ExperimentConfig {
+    /// Identity: name, model family, task, seed.
     pub experiment: Experiment,
+    /// Training budget and logging cadence.
     pub train: TrainConfig,
+    /// Factorization policy (ratio/rank, solver, filter).
     pub factorize: FactorizeConfig,
+    /// Evaluation budget.
     pub eval: EvalConfig,
+    /// Serving/batching limits.
     pub serve: ServeConfig,
 }
 
+/// Experiment identity block.
 #[derive(Clone, Debug)]
 pub struct Experiment {
+    /// Human-readable experiment name.
     pub name: String,
     /// "text" | "image" | "lm"
     pub model: String,
     /// Task name: polarity | topic | matching | shapes | blobs
     pub task: String,
+    /// Seed for data generation and inits.
     pub seed: u64,
 }
 
@@ -43,10 +53,14 @@ impl Default for Experiment {
     }
 }
 
+/// Training budget.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Optimizer steps to run.
     pub steps: usize,
+    /// Batch size (must match an available train graph).
     pub batch: usize,
+    /// Print a loss line every this many steps.
     pub log_every: usize,
     /// Evaluate on this many held-out examples after training.
     pub eval_examples: usize,
@@ -63,13 +77,16 @@ impl Default for TrainConfig {
     }
 }
 
+/// Factorization policy.
 #[derive(Clone, Debug)]
 pub struct FactorizeConfig {
     /// Rank ratio in (0, 1]; `rank` takes precedence when set.
     pub ratio: Option<f64>,
     /// Fixed integer rank.
     pub rank: Option<usize>,
+    /// Solver name (`random` / `svd` / `snmf`).
     pub solver: String,
+    /// SNMF iteration budget.
     pub num_iter: usize,
     /// Submodule filter (substring match), empty = all.
     pub submodules: Vec<String>,
@@ -88,6 +105,7 @@ impl Default for FactorizeConfig {
 }
 
 impl FactorizeConfig {
+    /// Resolve into the [`AutoFactConfig`] the library call takes.
     pub fn to_auto_fact(&self) -> Result<AutoFactConfig> {
         let rank = match (self.rank, self.ratio) {
             (Some(r), _) => Rank::Fixed(r),
@@ -117,9 +135,12 @@ impl FactorizeConfig {
     }
 }
 
+/// Evaluation budget.
 #[derive(Clone, Debug)]
 pub struct EvalConfig {
+    /// Held-out examples to score.
     pub examples: usize,
+    /// Exemplars per ICL prompt (LM experiments).
     pub k_shots: usize,
 }
 
@@ -132,12 +153,14 @@ impl Default for EvalConfig {
     }
 }
 
+/// Serving/batching limits.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Max requests per dynamic batch (padded to the artifact batch size).
     pub max_batch: usize,
     /// Batch assembly deadline in milliseconds.
     pub max_wait_ms: u64,
+    /// Dispatcher queue capacity (submits block when full).
     pub queue_capacity: usize,
 }
 
@@ -152,12 +175,14 @@ impl Default for ServeConfig {
 }
 
 impl ExperimentConfig {
+    /// Load and parse a config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .map_err(|e| anyhow!("reading config {:?}: {e}", path.as_ref()))?;
         Self::parse(&text)
     }
 
+    /// Parse config JSON; absent fields keep their defaults.
     pub fn parse(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
         let mut cfg = ExperimentConfig::default();

@@ -9,6 +9,7 @@
 
 use std::time::{Duration, Instant};
 
+/// Size/deadline limits of the dynamic batcher.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Max real requests per executed batch (≤ artifact batch size).
@@ -44,6 +45,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher under `cfg`.
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.max_batch > 0, "max_batch must be positive");
         Self {
@@ -53,10 +55,12 @@ impl Batcher {
         }
     }
 
+    /// The configured limits.
     pub fn config(&self) -> BatcherConfig {
         self.cfg
     }
 
+    /// Requests currently queued.
     pub fn pending(&self) -> usize {
         self.queued.len()
     }

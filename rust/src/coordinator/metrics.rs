@@ -11,27 +11,47 @@ pub const BUCKETS_US: [u64; 12] = [
     100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 1_000_000,
 ];
 
+/// Shared serving counters. Classify work counts requests/responses/batches;
+/// decode work additionally counts *tokens* — one generation is one request
+/// and one response, but its cost is `prefill_tokens + generated_tokens`
+/// decode steps, and throughput only reconciles against
+/// `benches/native_decode.rs` when tallied per token.
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests submitted (classify + generate).
     pub requests: AtomicU64,
+    /// Terminal successes: classify rows answered + generations completed.
     pub responses: AtomicU64,
+    /// Classify batches executed.
     pub batches: AtomicU64,
+    /// Padding rows executed across all classify batches.
     pub padded_rows: AtomicU64,
+    /// Requests rejected or failed (classify + generate).
     pub errors: AtomicU64,
+    /// Prompt tokens consumed by decode prefill steps.
+    pub prefill_tokens: AtomicU64,
+    /// Tokens sampled and streamed by decode sessions.
+    pub generated_tokens: AtomicU64,
+    /// Decode sessions run to completion (`Done` sent).
+    pub decode_sessions: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     per_variant: Mutex<HashMap<String, u64>>,
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one submitted request (classify or generate).
     pub fn record_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one executed classify batch: `real` answered rows plus
+    /// `padded` PAD rows, served by `variant`.
     pub fn record_batch(&self, real: usize, padded: usize, variant: &str) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.responses.fetch_add(real as u64, Ordering::Relaxed);
@@ -44,6 +64,7 @@ impl Metrics {
             .or_insert(0) += real as u64;
     }
 
+    /// Record one request's end-to-end latency.
     pub fn record_latency(&self, d: Duration) {
         let us = d.as_micros() as u64;
         self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
@@ -51,8 +72,32 @@ impl Metrics {
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one rejected/failed request.
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tally one prefill step's prompt tokens.
+    pub fn record_prefill_tokens(&self, n: usize) {
+        self.prefill_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Tally sampled-and-streamed tokens.
+    pub fn record_generated_tokens(&self, n: usize) {
+        self.generated_tokens.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// One generation ran to completion on `variant`: counts as one
+    /// response (its per-token work is already in the token counters).
+    pub fn record_decode_done(&self, variant: &str) {
+        self.decode_sessions.fetch_add(1, Ordering::Relaxed);
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        *self
+            .per_variant
+            .lock()
+            .unwrap()
+            .entry(variant.to_string())
+            .or_insert(0) += 1;
     }
 
     /// Approximate latency percentile from the histogram (upper bound of the
@@ -78,6 +123,7 @@ impl Metrics {
         u64::MAX
     }
 
+    /// Mean recorded latency, microseconds.
     pub fn mean_latency_us(&self) -> f64 {
         let n = self
             .latency_buckets
@@ -91,6 +137,7 @@ impl Metrics {
         }
     }
 
+    /// Successful responses per serving variant.
     pub fn variant_counts(&self) -> HashMap<String, u64> {
         self.per_variant.lock().unwrap().clone()
     }
@@ -105,14 +152,19 @@ impl Metrics {
         real / (batches as f64 * artifact_batch as f64)
     }
 
+    /// One-line human-readable rollup of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} batches={} pad={} err={} p50={}us p95={}us mean={:.0}us",
+            "requests={} responses={} batches={} pad={} err={} sessions={} prefill_tok={} \
+             gen_tok={} p50={}us p95={}us mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.decode_sessions.load(Ordering::Relaxed),
+            self.prefill_tokens.load(Ordering::Relaxed),
+            self.generated_tokens.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
             self.mean_latency_us(),
@@ -135,6 +187,24 @@ mod tests {
         assert_eq!(m.padded_rows.load(Ordering::Relaxed), 6);
         assert_eq!(m.variant_counts()["dense"], 2);
         assert!((m.batch_occupancy(8) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_token_counters_reconcile() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_prefill_tokens(16);
+        for _ in 0..4 {
+            m.record_generated_tokens(1);
+        }
+        m.record_decode_done("led_r25");
+        assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), 16);
+        assert_eq!(m.generated_tokens.load(Ordering::Relaxed), 4);
+        assert_eq!(m.decode_sessions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 1);
+        assert_eq!(m.variant_counts()["led_r25"], 1);
+        let s = m.summary();
+        assert!(s.contains("prefill_tok=16") && s.contains("gen_tok=4"), "{s}");
     }
 
     #[test]

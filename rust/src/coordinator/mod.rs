@@ -11,8 +11,34 @@
 //! * [`server`] — the dispatcher thread tying queue → batcher → backend →
 //!   responses. Backend selection is automatic (PJRT when artifacts resolve,
 //!   the native interpreter otherwise) or pinned via
-//!   [`server::serve_classifier_native`].
-//! * [`metrics`] — counters + latency histogram.
+//!   [`server::serve_classifier_native`]. Two request kinds share the
+//!   queue: batched classify, and KV-cached streaming `generate`
+//!   (single-token decode steps scheduled round-robin between batches).
+//! * [`metrics`] — counters (incl. per-token prefill/generated tallies) +
+//!   latency histogram.
+//!
+//! # Examples
+//!
+//! Stand up a hermetic single-variant classifier server and classify one
+//! window (no artifacts, no PJRT):
+//!
+//! ```
+//! use std::collections::HashMap;
+//! use greenformer::backend::native::{init_text_params, TextModelCfg};
+//! use greenformer::coordinator::{
+//!     serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+//! };
+//!
+//! let cfg = TextModelCfg { vocab: 64, seq: 8, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 };
+//! let mut variants = HashMap::new();
+//! variants.insert("dense".to_string(), init_text_params(&cfg, 1));
+//! let router = Router::new(RoutePolicy::Static("dense".into()), vec!["dense".into()]).unwrap();
+//! let handle =
+//!     serve_classifier_native("text", variants, router, BatcherConfig::default(), 64).unwrap();
+//! let resp = handle.classify(vec![1; 8], Tier::Quality).unwrap();
+//! assert_eq!(resp.variant, "dense");
+//! assert!(resp.label < 3);
+//! ```
 
 pub mod batcher;
 pub mod metrics;
@@ -24,5 +50,6 @@ pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, Tier};
 pub use server::{
     serve_classifier, serve_classifier_native, serve_classifier_with, ClassifyRequest,
-    ClassifyResponse, ServeResult, ServerHandle,
+    ClassifyResponse, GenerateRequest, GenerateResponse, Request, ServeResult, ServerHandle,
+    TokenEvent,
 };

@@ -19,8 +19,10 @@ pub enum Tier {
     Fast,
 }
 
+/// How the router maps (tier, queue depth) onto a variant.
 #[derive(Clone, Debug)]
 pub enum RoutePolicy {
+    /// Everything on one pinned variant.
     Static(String),
     /// Tier → variant name.
     Tiered {
@@ -39,6 +41,7 @@ pub enum RoutePolicy {
     },
 }
 
+/// Validated routing policy over the variants that actually exist.
 #[derive(Clone, Debug)]
 pub struct Router {
     policy: RoutePolicy,
@@ -47,6 +50,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Build a router, rejecting policies that name unknown variants.
     pub fn new(policy: RoutePolicy, available: Vec<String>) -> crate::Result<Self> {
         let check = |v: &String| -> crate::Result<()> {
             if available.iter().any(|a| a == v) {
@@ -76,6 +80,7 @@ impl Router {
         Ok(Self { policy, available })
     }
 
+    /// The validated variant names.
     pub fn available(&self) -> &[String] {
         &self.available
     }

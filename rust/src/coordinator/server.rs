@@ -1,29 +1,47 @@
-//! The serving loop: queue → router → batcher → backend → responses.
+//! The serving loop: queue → router → batcher/decoder → backend → responses.
 //!
 //! Thread-based (the offline build has no async runtime — and none is
 //! needed: graph execution is the only blocking operation and it is CPU
-//! bound). One dispatcher thread owns all batchers; execution happens on the
-//! dispatcher so batches are strictly ordered per variant. Clients block on
-//! a oneshot-style channel; concurrency comes from client threads.
+//! bound). One dispatcher thread owns all batchers and all in-flight decode
+//! sessions; execution happens on the dispatcher so batches are strictly
+//! ordered per variant. Clients block on a oneshot-style channel (classify)
+//! or consume a streaming token channel (generate); concurrency comes from
+//! client threads.
+//!
+//! Two request kinds share one queue and one router:
+//!
+//! * [`ClassifyRequest`] — one token window in, one [`ClassifyResponse`]
+//!   out, dynamically batched per variant.
+//! * [`GenerateRequest`] — KV-cached autoregressive decoding
+//!   ([`crate::backend::DecodeSession`]): one prefill, then single-token
+//!   steps scheduled round-robin *between* classify batches, each sampled
+//!   token streamed to the client as a [`TokenEvent`] the moment it exists.
 //!
 //! Execution goes through the [`Backend`] abstraction: the PJRT engine when
 //! AOT artifacts resolve, the pure-Rust [`NativeBackend`] otherwise — so the
 //! full serving path runs (and is tested, see
 //! `tests/integration_serving_native.rs`) on a fresh checkout with no
-//! `artifacts/` and no XLA runtime.
+//! `artifacts/` and no XLA runtime. Generation is native-only: PJRT's
+//! fixed-shape fwd graphs refuse `run_decode_step` and the client receives
+//! a clean [`TokenEvent::Failed`].
 //!
 //! Invariants (pinned by rust/tests/proptest_coordinator.rs and the serving
 //! integration tests):
-//! * every submitted request receives exactly one response or an error;
+//! * every submitted request receives exactly one terminal outcome — a
+//!   classify response/error, or a `Done`/`Failed` event ending its stream;
 //! * executed batches never exceed the artifact batch size;
 //! * padding rows never produce responses;
 //! * responses carry the variant that actually served them;
-//! * a malformed request (wrong token length) gets an error response and
-//!   never panics the dispatcher.
+//! * a malformed request (wrong token length, out-of-range ids, classify on
+//!   an LM variant, generate on a classifier variant) gets an error
+//!   response and never panics the dispatcher;
+//! * a fixed sampling seed reproduces the same token stream.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -32,51 +50,122 @@ use anyhow::anyhow;
 use super::batcher::{plan, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::{Router, Tier};
-use crate::backend::{native, Backend, NativeBackend, PjrtBackend};
+use crate::backend::{
+    native, sample_token, Backend, DecodeSession, NativeBackend, PjrtBackend, SamplingCfg,
+};
 use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
+use crate::util::Pcg64;
 use crate::Result;
 
-/// Per-request outcome sent back over the response channel: the response, or
-/// a rejection/failure message (`String`, so the channel stays `Send`).
+/// Per-request outcome sent back over the classify response channel: the
+/// response, or a rejection/failure message (`String`, so the channel stays
+/// `Send`).
 pub type ServeResult = std::result::Result<ClassifyResponse, String>;
+
+/// Anything a client can submit to the dispatcher queue.
+pub enum Request {
+    /// Classifier inference over one token window (dynamically batched).
+    Classify(ClassifyRequest),
+    /// KV-cached autoregressive generation (streamed tokens).
+    Generate(GenerateRequest),
+}
 
 /// A text-classification request: tokens (seq,) + quality tier.
 pub struct ClassifyRequest {
+    /// Token window; must match the variant graph's `seq` dimension.
     pub tokens: Vec<i32>,
+    /// Requested quality tier (the router maps it to a variant).
     pub tier: Tier,
     resp: SyncSender<ServeResult>,
 }
 
+/// One classify outcome: logits, argmax label, serving variant, latency.
 #[derive(Clone, Debug)]
 pub struct ClassifyResponse {
+    /// Class logits of this request's row.
     pub logits: Vec<f32>,
+    /// Argmax over `logits`.
     pub label: usize,
+    /// The variant that actually served the request.
     pub variant: String,
+    /// Queue + batch + execution time as seen by this request.
+    pub latency: Duration,
+}
+
+/// An autoregressive generation request: prompt in, token stream out.
+pub struct GenerateRequest {
+    /// Prompt token ids (prefilled in one step; must fit the model's
+    /// positional capacity).
+    pub prompt: Vec<i32>,
+    /// Maximum number of tokens to generate (≥ 1).
+    pub max_new: usize,
+    /// Sampling policy (greedy / top-k / temperature, seeded).
+    pub sampling: SamplingCfg,
+    /// Requested quality tier (the router maps it to a variant).
+    pub tier: Tier,
+    /// When the client submitted the request (latency is measured from
+    /// here, so queue wait is included).
+    submitted: Instant,
+    resp: SyncSender<TokenEvent>,
+}
+
+/// One event on a generation stream. Clients receive zero or more `Token`
+/// events followed by exactly one terminal `Done` or `Failed`.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// One sampled token, streamed as soon as the decode step produced it.
+    Token {
+        /// 0-based position of this token in the generated stream.
+        index: usize,
+        /// The sampled token id.
+        token: i32,
+    },
+    /// Generation finished; carries the full result.
+    Done(GenerateResponse),
+    /// Generation was rejected or died mid-stream; no further events follow.
+    Failed(String),
+}
+
+/// Terminal summary of one generation.
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    /// All generated token ids, in stream order (prompt not repeated).
+    pub tokens: Vec<i32>,
+    /// The variant that actually served the generation.
+    pub variant: String,
+    /// Prompt length consumed by the prefill step.
+    pub prefill_tokens: usize,
+    /// Submission-to-`Done` wall time as seen by this request.
     pub latency: Duration,
 }
 
 /// Handle returned by [`serve_classifier`]: submit requests, inspect
-/// metrics. Dropping all clones shuts the dispatcher down (after a flush).
+/// metrics. Dropping all clones shuts the dispatcher down (after a flush —
+/// in-flight generations run to completion since their token streams may
+/// outlive the handle).
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: SyncSender<ClassifyRequest>,
+    tx: SyncSender<Request>,
+    /// Shared serving counters (requests, per-token decode counters,
+    /// latency histogram).
     pub metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
 }
 
 impl ServerHandle {
-    /// Submit a request and block until the batch containing it executes.
+    /// Submit a classify request and block until the batch containing it
+    /// executes.
     pub fn classify(&self, tokens: Vec<i32>, tier: Tier) -> Result<ClassifyResponse> {
         let (tx, rx) = sync_channel(1);
         self.metrics.record_request();
         self.depth.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(ClassifyRequest {
+            .send(Request::Classify(ClassifyRequest {
                 tokens,
                 tier,
                 resp: tx,
-            })
+            }))
             .map_err(|_| anyhow!("server shut down"))?;
         match rx.recv() {
             Ok(Ok(resp)) => Ok(resp),
@@ -85,7 +174,7 @@ impl ServerHandle {
         }
     }
 
-    /// Non-blocking submit; Err(tokens) when the queue is full.
+    /// Non-blocking classify submit; Err(tokens) when the queue is full.
     pub fn try_classify(
         &self,
         tokens: Vec<i32>,
@@ -97,19 +186,70 @@ impl ServerHandle {
             tier,
             resp: tx,
         };
-        match self.tx.try_send(req) {
+        match self.tx.try_send(Request::Classify(req)) {
             Ok(()) => {
                 self.metrics.record_request();
                 self.depth.fetch_add(1, Ordering::Relaxed);
                 Ok(rx)
             }
-            Err(TrySendError::Full(req)) | Err(TrySendError::Disconnected(req)) => {
-                Err(req.tokens)
+            Err(TrySendError::Full(Request::Classify(req)))
+            | Err(TrySendError::Disconnected(Request::Classify(req))) => Err(req.tokens),
+            Err(_) => unreachable!("classify submit returned a non-classify request"),
+        }
+    }
+
+    /// Submit a generation request; returns the token stream immediately.
+    ///
+    /// The stream yields one [`TokenEvent::Token`] per sampled token as the
+    /// dispatcher advances the session (interleaved with classify batches),
+    /// then a terminal [`TokenEvent::Done`] or [`TokenEvent::Failed`]. The
+    /// channel is buffered for the whole stream, so a slow consumer never
+    /// blocks the dispatcher.
+    pub fn generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> Result<Receiver<TokenEvent>> {
+        let (tx, rx) = sync_channel(max_new + 2);
+        self.metrics.record_request();
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Request::Generate(GenerateRequest {
+                prompt,
+                max_new,
+                sampling,
+                tier,
+                submitted: Instant::now(),
+                resp: tx,
+            }))
+            .map_err(|_| anyhow!("server shut down"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience over [`ServerHandle::generate`]: drain the
+    /// stream and return the terminal [`GenerateResponse`].
+    pub fn generate_collect(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> Result<GenerateResponse> {
+        let rx = self.generate(prompt, max_new, sampling, tier)?;
+        loop {
+            match rx.recv() {
+                Ok(TokenEvent::Token { .. }) => continue,
+                Ok(TokenEvent::Done(resp)) => return Ok(resp),
+                Ok(TokenEvent::Failed(msg)) => return Err(anyhow!("generate rejected: {msg}")),
+                Err(_) => return Err(anyhow!("generate dropped (server shut down mid-stream)")),
             }
         }
     }
 
-    /// Requests submitted but not yet answered (the adaptive router's input).
+    /// Requests submitted but not yet answered (the adaptive router's
+    /// input). In-flight generations count until their terminal event.
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
@@ -119,6 +259,23 @@ struct Pending {
     tokens: Vec<i32>,
     arrived: Instant,
     resp: SyncSender<ServeResult>,
+}
+
+/// One in-flight generation owned by the dispatcher: the KV-cache session
+/// plus everything needed to sample, stream and finish it.
+struct ActiveDecode {
+    variant: String,
+    session: DecodeSession,
+    sampling: SamplingCfg,
+    rng: Pcg64,
+    max_new: usize,
+    /// Sampled tokens so far; the last one is what the next decode step
+    /// appends to the cache.
+    tokens: Vec<i32>,
+    prefill_tokens: usize,
+    /// Client submission time (latency includes queue wait).
+    arrived: Instant,
+    resp: SyncSender<TokenEvent>,
 }
 
 /// What a backend factory hands the dispatcher: the executor plus one fwd
@@ -203,7 +360,11 @@ pub fn serve_classifier(
 }
 
 /// [`serve_classifier`] pinned to the native backend — fully hermetic, used
-/// by the artifact-free serving tests and benches.
+/// by the artifact-free serving tests and benches. Despite the name the
+/// model family is the caller's choice: pass `model = "lm"` with LM
+/// checkpoints (head width = vocab) to stand up a generation server —
+/// classify requests are then rejected per-request, generate requests
+/// stream tokens.
 pub fn serve_classifier_native(
     model: &str,
     variants: HashMap<String, ParamStore>,
@@ -235,7 +396,7 @@ pub fn serve_classifier_with(
 ) -> Result<ServerHandle> {
     let metrics = Arc::new(Metrics::new());
     let depth = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = sync_channel::<ClassifyRequest>(queue_capacity);
+    let (tx, rx) = sync_channel::<Request>(queue_capacity);
     // Rendezvous for startup success/failure.
     let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
 
@@ -285,7 +446,7 @@ fn dispatch_loop(
     variants: HashMap<String, ParamStore>,
     router: Router,
     cfg: BatcherConfig,
-    rx: Receiver<ClassifyRequest>,
+    rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
 ) {
@@ -301,6 +462,10 @@ fn dispatch_loop(
             (k.clone(), (Batcher::new(eff), Vec::new()))
         })
         .collect();
+    // In-flight generations, advanced one token per loop iteration in
+    // round-robin order — so long generations never starve classify batches
+    // and sustained classify traffic never starves generations.
+    let mut active: VecDeque<ActiveDecode> = VecDeque::new();
 
     loop {
         let now = Instant::now();
@@ -309,13 +474,24 @@ fn dispatch_loop(
             .filter_map(|(b, _)| b.time_to_deadline(now))
             .min();
 
-        let msg = match next_deadline {
-            Some(d) => rx.recv_timeout(d),
-            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        let msg = if active.is_empty() {
+            match next_deadline {
+                Some(d) => rx.recv_timeout(d),
+                None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            }
+        } else {
+            // Runnable decode work exists: never block. Drain the queue
+            // opportunistically; an empty queue falls through to the
+            // timeout arm, which flushes due classify batches.
+            match rx.try_recv() {
+                Ok(m) => Ok(m),
+                Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+                Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+            }
         };
 
         match msg {
-            Ok(req) => {
+            Ok(Request::Classify(req)) => {
                 let variant = router
                     .route(req.tier, depth.load(Ordering::Relaxed))
                     .to_string();
@@ -339,6 +515,13 @@ fn dispatch_loop(
                         taken,
                         &metrics,
                     );
+                }
+            }
+            Ok(Request::Generate(req)) => {
+                if let Some(state) =
+                    start_decode(backend, &graphs, &variants, &router, req, &metrics, &depth)
+                {
+                    active.push_back(state);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
@@ -376,8 +559,167 @@ fn dispatch_loop(
                         );
                     }
                 }
+                // Token streams may outlive the submitting handle — run
+                // every in-flight generation to completion before exiting.
+                while let Some(mut state) = active.pop_front() {
+                    while !advance_decode(backend, &graphs, &variants, &mut state, &metrics, &depth)
+                    {
+                    }
+                }
                 break;
             }
+        }
+
+        // Advance exactly one decode step per loop iteration, whatever the
+        // iteration otherwise did — so sustained classify traffic (a never-
+        // empty queue) cannot starve generations, and sessions round-robin
+        // among themselves.
+        if let Some(mut state) = active.pop_front() {
+            if !advance_decode(backend, &graphs, &variants, &mut state, &metrics, &depth) {
+                active.push_back(state);
+            }
+        }
+    }
+}
+
+/// Reject/fail one generation: error metrics, depth bookkeeping, terminal
+/// event. (Send failures are fine — the client may have gone away.)
+fn decode_failed(
+    resp: &SyncSender<TokenEvent>,
+    msg: String,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    metrics.record_error();
+    depth.fetch_sub(1, Ordering::Relaxed);
+    let _ = resp.send(TokenEvent::Failed(msg));
+}
+
+/// Route + validate + prefill one generation request. Returns the active
+/// session when it must keep running, `None` when it already finished
+/// (single-token generations) or failed.
+fn start_decode(
+    backend: &dyn Backend,
+    graphs: &HashMap<String, GraphSpec>,
+    variants: &HashMap<String, ParamStore>,
+    router: &Router,
+    req: GenerateRequest,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) -> Option<ActiveDecode> {
+    let variant = router
+        .route(req.tier, depth.load(Ordering::Relaxed))
+        .to_string();
+    let graph = &graphs[&variant];
+    let store = &variants[&variant];
+    if req.max_new == 0 {
+        decode_failed(&req.resp, "max_new must be >= 1".to_string(), metrics, depth);
+        return None;
+    }
+    if req.prompt.is_empty() {
+        decode_failed(&req.resp, "prompt must be non-empty".to_string(), metrics, depth);
+        return None;
+    }
+    let mut session = match DecodeSession::new(graph, store) {
+        Ok(s) => s,
+        Err(e) => {
+            decode_failed(
+                &req.resp,
+                format!("variant {variant:?} cannot decode: {e:#}"),
+                metrics,
+                depth,
+            );
+            return None;
+        }
+    };
+    let logits = match backend.run_decode_step(graph, store, &mut session, &req.prompt) {
+        Ok(t) => t,
+        Err(e) => {
+            decode_failed(&req.resp, format!("prefill failed: {e:#}"), metrics, depth);
+            return None;
+        }
+    };
+    metrics.record_prefill_tokens(req.prompt.len());
+    let rng = req.sampling.rng();
+    let mut state = ActiveDecode {
+        variant,
+        session,
+        sampling: req.sampling,
+        rng,
+        max_new: req.max_new,
+        tokens: Vec::with_capacity(req.max_new),
+        prefill_tokens: req.prompt.len(),
+        arrived: req.submitted,
+        resp: req.resp,
+    };
+    if emit_token(&mut state, &logits, metrics, depth) {
+        None
+    } else {
+        Some(state)
+    }
+}
+
+/// Sample + stream one token from `logits`. Returns true when the session
+/// reached a terminal state (Done sent) — the caller then drops it.
+fn emit_token(
+    state: &mut ActiveDecode,
+    logits: &Tensor,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) -> bool {
+    let data = match logits.as_f32() {
+        Ok(d) => d,
+        Err(e) => {
+            decode_failed(
+                &state.resp,
+                format!("decode produced non-f32 logits: {e:#}"),
+                metrics,
+                depth,
+            );
+            return true;
+        }
+    };
+    let tok = sample_token(data, &state.sampling, &mut state.rng) as i32;
+    let _ = state.resp.send(TokenEvent::Token {
+        index: state.tokens.len(),
+        token: tok,
+    });
+    state.tokens.push(tok);
+    metrics.record_generated_tokens(1);
+    if state.tokens.len() >= state.max_new || state.session.remaining() == 0 {
+        let latency = Instant::now().duration_since(state.arrived);
+        metrics.record_latency(latency);
+        metrics.record_decode_done(&state.variant);
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = state.resp.send(TokenEvent::Done(GenerateResponse {
+            tokens: state.tokens.clone(),
+            variant: state.variant.clone(),
+            prefill_tokens: state.prefill_tokens,
+            latency,
+        }));
+        return true;
+    }
+    false
+}
+
+/// Append the last sampled token and emit the next one. Returns true when
+/// the session is finished (Done or Failed sent).
+fn advance_decode(
+    backend: &dyn Backend,
+    graphs: &HashMap<String, GraphSpec>,
+    variants: &HashMap<String, ParamStore>,
+    state: &mut ActiveDecode,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) -> bool {
+    let graph = &graphs[&state.variant];
+    let store = &variants[&state.variant];
+    let tok = *state.tokens.last().expect("active decode has at least one sampled token");
+    match backend.run_decode_step(graph, store, &mut state.session, &[tok]) {
+        Ok(logits) => emit_token(state, &logits, metrics, depth),
+        Err(e) => {
+            decode_failed(&state.resp, format!("decode step failed: {e:#}"), metrics, depth);
+            true
         }
     }
 }
@@ -391,6 +733,19 @@ fn run_batch(
     pendings: Vec<Pending>,
     metrics: &Metrics,
 ) {
+    // Classify needs pooled (batch, classes) logits; an LM variant emits
+    // per-position logits and must reject cleanly rather than misread its
+    // seq dim as the class count.
+    if graph.outputs[0].shape.len() != 2 {
+        for i in ids {
+            metrics.record_error();
+            let _ = pendings[i].resp.send(Err(format!(
+                "variant {variant:?} serves per-position LM logits; classify is unsupported — \
+                 submit a generate request instead"
+            )));
+        }
+        return;
+    }
     let artifact_batch = graph.batch;
     let seq = graph.inputs[0].shape[1];
     let classes = graph.outputs[0].shape[1];

@@ -8,6 +8,7 @@
 use super::{Dataset, Example, Split};
 use crate::util::Pcg64;
 
+/// Image side length: every image task renders at HW×HW grayscale.
 pub const HW: usize = 28;
 
 fn rng_for(seed: u64, split: Split, index: usize) -> Pcg64 {
@@ -26,6 +27,7 @@ pub struct ShapesTask {
 }
 
 impl ShapesTask {
+    /// Task deterministic in `seed` (images render at [`HW`]×[`HW`]).
     pub fn new(seed: u64) -> Self {
         Self { seed }
     }
@@ -117,6 +119,7 @@ pub struct BlobsTask {
 }
 
 impl BlobsTask {
+    /// Task deterministic in `seed` (images render at [`HW`]×[`HW`]).
     pub fn new(seed: u64) -> Self {
         Self { seed }
     }
@@ -179,6 +182,7 @@ impl Dataset for BlobsTask {
     }
 }
 
+/// The two image tasks at the fixed [`HW`]×[`HW`] render size.
 pub fn all_image_tasks(seed: u64) -> Vec<Box<dyn Dataset>> {
     vec![Box::new(ShapesTask::new(seed)), Box::new(BlobsTask::new(seed))]
 }

@@ -48,12 +48,14 @@ fn serialize(tokens: &[i32], label: usize, snippet_len: usize, rng: &mut Pcg64) 
 /// examples from all three text tasks, concatenated to `seq` tokens.
 pub struct LmCorpus {
     tasks: Vec<Box<dyn Dataset>>,
+    /// Tokens per pretraining sequence (the LM's context length).
     pub seq: usize,
     seed: u64,
     snippet_len: usize,
 }
 
 impl LmCorpus {
+    /// Corpus of `seq`-token sequences, deterministic in `seed`.
     pub fn new(seq: usize, seed: u64) -> Self {
         Self {
             // Snippets come from the tasks' own generators at their native
@@ -96,10 +98,12 @@ impl LmCorpus {
 pub struct IclPrompt {
     /// (seq,) tokens, PAD-left so the query's label slot is the last token.
     pub tokens: Vec<i32>,
+    /// Gold class of the query example.
     pub label: usize,
     /// Position of the token *before* the label slot (the LM predicts the
     /// label at this position's output).
     pub predict_pos: usize,
+    /// Number of classes the task (and so the label-token slice) uses.
     pub num_classes: usize,
 }
 

@@ -25,12 +25,17 @@ use crate::tensor::Tensor;
 
 /// Shared vocabulary layout (matches LMConfig.vocab = TextConfig.vocab = 512).
 pub mod vocab {
+    /// Vocabulary size shared by every text task and the LM.
     pub const SIZE: usize = 512;
+    /// Padding token id (also the PAD-row filler in serving batches).
     pub const PAD: i32 = 0;
+    /// Sequence-start marker.
     pub const CLS: i32 = 1;
+    /// Segment separator (matching task, ICL example boundaries).
     pub const SEP: i32 = 2;
     /// Label tokens: LABEL_BASE + class id (up to 8 classes).
     pub const LABEL_BASE: i32 = 3;
+    /// Number of reserved label-token slots.
     pub const NUM_LABELS: i32 = 8;
     /// First ordinary word id.
     pub const WORDS: i32 = LABEL_BASE + NUM_LABELS; // 11
@@ -41,13 +46,17 @@ pub mod vocab {
 pub struct Example {
     /// For text: token ids (padded to seq). For images: HxWxC pixels.
     pub tokens: Vec<i32>,
+    /// For images: row-major (h, w, c) pixel values; empty for text.
     pub pixels: Vec<f32>,
+    /// Ground-truth class id.
     pub label: usize,
 }
 
 /// A deterministic, indexable synthetic dataset.
 pub trait Dataset: Send + Sync {
+    /// Task name as the CLI spells it (`polarity`, `shapes`, …).
     fn name(&self) -> &str;
+    /// Number of classes the task uses.
     fn num_classes(&self) -> usize;
     /// Generate the i-th example of the given split ("train"/"eval" streams
     /// use disjoint RNG streams).
@@ -58,13 +67,17 @@ pub trait Dataset: Send + Sync {
     }
 }
 
+/// Which disjoint example stream to draw from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// Training stream.
     Train,
+    /// Held-out evaluation stream.
     Eval,
 }
 
 impl Split {
+    /// The RNG stream id backing this split (disjoint by construction).
     pub fn stream(self) -> u64 {
         match self {
             Split::Train => 1,

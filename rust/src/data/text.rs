@@ -21,10 +21,14 @@ pub struct PolarityTask {
 }
 
 impl PolarityTask {
+    /// First of the 20 positive-keyword token ids.
     pub const POS_BASE: i32 = vocab::WORDS; // 20 positive keywords
+    /// First of the 20 negative-keyword token ids.
     pub const NEG_BASE: i32 = vocab::WORDS + 20; // 20 negative keywords
+    /// First filler (non-evidential) token id.
     pub const FILLER_BASE: i32 = vocab::WORDS + 40;
 
+    /// Task over `seq`-token examples, deterministic in `seed`.
     pub fn new(seq: usize, seed: u64) -> Self {
         Self { seq, seed }
     }
@@ -81,10 +85,14 @@ pub struct TopicTask {
 }
 
 impl TopicTask {
+    /// First topic-keyword token id (topics own contiguous ranges).
     pub const TOPIC_BASE: i32 = vocab::WORDS + 80;
+    /// Keywords per topic.
     pub const PER_TOPIC: usize = 24;
+    /// First filler token id.
     pub const FILLER_BASE: i32 = Self::TOPIC_BASE + 4 * Self::PER_TOPIC as i32;
 
+    /// Task over `seq`-token examples, deterministic in `seed`.
     pub fn new(seq: usize, seed: u64) -> Self {
         Self { seq, seed }
     }
@@ -141,16 +149,25 @@ pub struct MatchingTask {
 }
 
 impl MatchingTask {
+    /// First subject token id.
     pub const SUBJ_BASE: i32 = vocab::WORDS + 200;
+    /// Number of subject tokens.
     pub const NUM_SUBJ: usize = 32;
+    /// First attribute token id.
     pub const ATTR_BASE: i32 = Self::SUBJ_BASE + Self::NUM_SUBJ as i32;
+    /// Number of attribute tokens.
     pub const NUM_ATTR: usize = 32;
+    /// First filler token id.
     pub const FILLER_BASE: i32 = Self::ATTR_BASE + Self::NUM_ATTR as i32;
 
+    /// Label id: hypothesis restates the premise.
     pub const ENTAIL: usize = 0;
+    /// Label id: hypothesis contradicts the premise's attribute.
     pub const CONTRADICT: usize = 1;
+    /// Label id: hypothesis talks about an unrelated subject.
     pub const NEUTRAL: usize = 2;
 
+    /// Task over `seq`-token examples (`seq >= 12`), deterministic in `seed`.
     pub fn new(seq: usize, seed: u64) -> Self {
         assert!(seq >= 12, "matching needs seq >= 12");
         Self { seq, seed }

@@ -5,7 +5,7 @@
 //! the PJRT engine (artifacts present) or the native CPU interpreter
 //! (hermetic checkouts) — `&Engine` call sites coerce unchanged.
 
-use crate::backend::Backend;
+use crate::backend::{sample_token, Backend, DecodeSession, SamplingCfg};
 use crate::data::lm::{compose_prompt, IclPrompt};
 use crate::data::{batch, vocab, Dataset, Split};
 use crate::runtime::GraphSpec;
@@ -16,7 +16,9 @@ use crate::Result;
 /// Accuracy + timing of one evaluation run.
 #[derive(Clone, Debug)]
 pub struct EvalResult {
+    /// Correctly classified examples.
     pub correct: usize,
+    /// Examples scored.
     pub total: usize,
     /// Seconds per forward batch (median).
     pub sec_per_batch: f64,
@@ -25,6 +27,7 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
+    /// correct / total.
     pub fn accuracy(&self) -> f64 {
         self.correct as f64 / self.total.max(1) as f64
     }
@@ -142,6 +145,82 @@ pub fn eval_icl(
         total,
         sec_per_batch: sec,
         throughput: bsz as f64 / sec.max(1e-12),
+    })
+}
+
+/// Latency profile of KV-cached autoregressive decoding: the prefill cost
+/// and the per-token step distribution — the two numbers that price a
+/// generation server, reported separately because factorization moves them
+/// differently (prefill is GEMM-bound like training, decode steps are
+/// matvec-bound).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeLatency {
+    /// Median prefill wall time (seconds) over the prompt.
+    pub prefill_s: f64,
+    /// Median single-token decode step (seconds).
+    pub per_token_p50_s: f64,
+    /// 95th-percentile single-token decode step (seconds).
+    pub per_token_p95_s: f64,
+    /// Aggregate decode throughput: generated tokens / total step time.
+    pub tokens_per_sec: f64,
+    /// Prompt length each iteration prefilled.
+    pub prefill_tokens: usize,
+    /// Tokens generated per iteration.
+    pub new_tokens: usize,
+}
+
+/// Measure KV-cached decode latency on `graph`/`params`: each iteration
+/// opens a fresh [`DecodeSession`], prefills `prompt`, then generates
+/// `new_tokens` greedily, timing the prefill and every single-token step
+/// (`warmup` whole iterations are discarded). Requires a backend that
+/// implements [`Backend::run_decode_step`] — i.e. the native interpreter.
+pub fn measure_decode_latency(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    prompt: &[i32],
+    new_tokens: usize,
+    warmup: usize,
+    iters: usize,
+) -> Result<DecodeLatency> {
+    if prompt.is_empty() || new_tokens == 0 || iters == 0 {
+        anyhow::bail!("measure_decode_latency needs a prompt, new_tokens >= 1 and iters >= 1");
+    }
+    let greedy = SamplingCfg::greedy();
+    let mut rng = greedy.rng();
+    let mut sw_prefill = Stopwatch::new();
+    let mut sw_step = Stopwatch::new();
+    for it in 0..warmup + iters {
+        let measured = it >= warmup;
+        let mut session = DecodeSession::new(graph, params)?;
+        let mut logits = if measured {
+            sw_prefill.time(|| backend.run_decode_step(graph, params, &mut session, prompt))?
+        } else {
+            backend.run_decode_step(graph, params, &mut session, prompt)?
+        };
+        for _ in 0..new_tokens {
+            if session.remaining() == 0 {
+                anyhow::bail!(
+                    "prompt {} + new_tokens {new_tokens} exceeds the model's seq capacity {}",
+                    prompt.len(),
+                    session.max_seq()
+                );
+            }
+            let tok = sample_token(logits.as_f32()?, &greedy, &mut rng) as i32;
+            logits = if measured {
+                sw_step.time(|| backend.run_decode_step(graph, params, &mut session, &[tok]))?
+            } else {
+                backend.run_decode_step(graph, params, &mut session, &[tok])?
+            };
+        }
+    }
+    Ok(DecodeLatency {
+        prefill_s: sw_prefill.median_secs(),
+        per_token_p50_s: sw_step.median_secs(),
+        per_token_p95_s: sw_step.p95_secs(),
+        tokens_per_sec: (iters * new_tokens) as f64 / sw_step.total_secs().max(1e-12),
+        prefill_tokens: prompt.len(),
+        new_tokens,
     })
 }
 

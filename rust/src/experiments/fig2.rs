@@ -46,8 +46,11 @@ const NATIVE: NativeBackend = NativeBackend;
 /// (DESIGN.md §9).
 #[derive(Clone, Copy, Debug)]
 pub struct NativeFigCfg {
+    /// Text-classifier dims.
     pub text: TextModelCfg,
+    /// CNN-classifier dims.
     pub image: ImageModelCfg,
+    /// Causal-LM dims (head width = vocab).
     pub lm: TextModelCfg,
     /// Train and eval batch size for the synthesized graphs.
     pub batch: usize,
@@ -142,6 +145,7 @@ pub enum FigEnv<'a> {
 }
 
 impl FigEnv<'_> {
+    /// The executor this environment runs on.
     pub fn backend(&self) -> &dyn Backend {
         match self {
             FigEnv::Pjrt(engine) => *engine,
@@ -193,9 +197,13 @@ impl FigEnv<'_> {
 /// One (task, variant) measurement.
 #[derive(Clone, Debug)]
 pub struct Fig2Point {
+    /// Task name.
     pub task: String,
+    /// Variant name (`dense` or `led_rXX`).
     pub variant: String,
+    /// Rank ratio (None for dense).
     pub ratio: Option<f64>,
+    /// Held-out accuracy.
     pub accuracy: f64,
     /// accuracy / dense accuracy on the same task.
     pub rel_performance: f64,
@@ -203,13 +211,16 @@ pub struct Fig2Point {
     pub latency: f64,
     /// dense latency / this latency.
     pub speedup: f64,
+    /// Total parameter count of the measured checkpoint.
     pub n_params: usize,
 }
 
 /// A panel: points plus the per-ratio averages the figure actually plots.
 #[derive(Clone, Debug, Default)]
 pub struct Fig2Result {
+    /// Which panel (`by-design` / `post-training` / `icl`).
     pub use_case: String,
+    /// All measured (task, variant) points.
     pub points: Vec<Fig2Point>,
 }
 
@@ -234,6 +245,7 @@ impl Fig2Result {
             .collect()
     }
 
+    /// Render the panel as the aligned text table the CLI prints.
     pub fn render(&self) -> String {
         let mut s = format!("== Figure 2 ({}) ==\n", self.use_case);
         s.push_str("task         variant    acc    rel-perf  latency(ms)  speedup  params\n");

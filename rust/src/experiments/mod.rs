@@ -22,7 +22,9 @@ pub struct ExpParams {
     pub ratios: Vec<f64>,
     /// Latency measurement iterations.
     pub latency_iters: usize,
+    /// Exemplars per ICL prompt.
     pub k_shots: usize,
+    /// Seed for data/inits across the harness.
     pub seed: u64,
 }
 
@@ -54,12 +56,14 @@ impl ExpParams {
         p
     }
 
+    /// Full-reproduction preset; env vars override.
     pub fn full() -> Self {
         let mut p = Self::default();
         p.apply_env();
         p
     }
 
+    /// Apply `GREENFORMER_STEPS` / `GREENFORMER_EVAL` overrides.
     pub fn apply_env(&mut self) {
         if let Ok(s) = std::env::var("GREENFORMER_STEPS") {
             if let Ok(v) = s.parse() {

@@ -11,16 +11,25 @@ use crate::Result;
 /// One row of the params/FLOPs/speedup table (E5).
 #[derive(Clone, Debug)]
 pub struct CostRow {
+    /// Layer label (shape family).
     pub layer: String,
+    /// Weight rows.
     pub m: usize,
+    /// Weight cols.
     pub n: usize,
+    /// Requested rank ratio.
     pub ratio: f64,
+    /// Resolved rank (None = Eq.-1 gate rejected).
     pub rank: Option<usize>,
+    /// Dense parameter count (m·n).
     pub dense_params: usize,
+    /// Factorized parameter count (r·(m+n), or m·n when rejected).
     pub fact_params: usize,
+    /// Theoretical FLOPs speedup of the factorization.
     pub flops_speedup: f64,
     /// MXU-utilization-discounted TPU estimate (DESIGN.md §4).
     pub tpu_speedup_est: f64,
+    /// LED working-set VMEM estimate, bytes.
     pub vmem_bytes: usize,
 }
 
@@ -63,6 +72,7 @@ pub fn cost_table(ratios: &[f64]) -> Vec<CostRow> {
     rows
 }
 
+/// Render [`cost_table`] rows as the aligned text table the CLI prints.
 pub fn render_cost_table(rows: &[CostRow]) -> String {
     let mut s = String::from(
         "layer                 m     n   ratio  rank  params(dense->fact)  flops-speedup  tpu-est  vmem(KiB)\n",
@@ -89,8 +99,11 @@ pub fn render_cost_table(rows: &[CostRow]) -> String {
 /// at a given ratio, on a trained-like (decaying-spectrum) weight matrix.
 #[derive(Clone, Debug)]
 pub struct SolverRow {
+    /// Which solver produced the factors.
     pub solver: Solver,
+    /// Requested rank ratio.
     pub ratio: f64,
+    /// Resolved rank.
     pub rank: usize,
     /// ‖W − AB‖_F / ‖W‖_F.
     pub recon_error: f64,
@@ -143,6 +156,7 @@ pub fn solver_table(ratios: &[f64], num_iter: usize) -> Vec<SolverRow> {
     rows
 }
 
+/// Render [`solver_table`] rows as the aligned text table the CLI prints.
 pub fn render_solver_table(rows: &[SolverRow]) -> String {
     let mut s = String::from("solver   ratio  rank  recon-error  seconds\n");
     for r in rows {

@@ -23,6 +23,7 @@ use super::{Rank, Solver};
 pub struct AutoFactConfig {
     /// Target rank: fixed or a ratio of each layer's r_max.
     pub rank: Rank,
+    /// Factor solver: Random init, truncated SVD, or Semi-NMF.
     pub solver: Solver,
     /// Iterations for SNMF (the paper's `num_iter`).
     pub num_iter: usize,
@@ -56,12 +57,18 @@ pub enum Decision {
     NotApplicable,
 }
 
+/// Per-layer record of what [`auto_fact`] did and why.
 #[derive(Clone, Debug)]
 pub struct LayerDecision {
+    /// Layer group name (e.g. `block0/fc1`).
     pub name: String,
+    /// Classified layer kind (Linear, Conv2d, …).
     pub kind: LayerKind,
+    /// Collapsed weight rows (input dim, kh·kw·cin for convs).
     pub m: usize,
+    /// Collapsed weight cols (output dim).
     pub n: usize,
+    /// The outcome for this layer.
     pub decision: Decision,
     /// Relative reconstruction error ‖W − AB‖_F / ‖W‖_F (None for Random,
     /// which does not approximate).
@@ -71,12 +78,16 @@ pub struct LayerDecision {
 /// Summary returned by [`auto_fact`].
 #[derive(Clone, Debug, Default)]
 pub struct FactReport {
+    /// One decision per walked layer, in canonical order.
     pub layers: Vec<LayerDecision>,
+    /// Total parameter count before factorization.
     pub params_before: usize,
+    /// Total parameter count after factorization.
     pub params_after: usize,
 }
 
 impl FactReport {
+    /// How many layers were actually replaced with factors.
     pub fn n_factorized(&self) -> usize {
         self.layers
             .iter()
@@ -84,6 +95,7 @@ impl FactReport {
             .count()
     }
 
+    /// Parameter ratio after/before (1.0 = nothing factorized).
     pub fn compression(&self) -> f64 {
         self.params_after as f64 / self.params_before.max(1) as f64
     }
@@ -125,6 +137,31 @@ impl fmt::Display for FactReport {
 /// Equivalent to the paper's
 /// `fact_model = greenformer.auto_fact(module, rank, solver, num_iter,
 /// submodules)` applied to the model's state dict.
+///
+/// # Examples
+///
+/// Factorize a random-init text classifier at half of each layer's
+/// break-even rank (hermetic — no artifacts needed):
+///
+/// ```
+/// use greenformer::backend::native::{init_text_params, TextModelCfg};
+/// use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+///
+/// let mut params = init_text_params(&TextModelCfg::default(), 42);
+/// let before = params.n_params();
+/// let report = auto_fact(
+///     &mut params,
+///     &AutoFactConfig {
+///         rank: Rank::Ratio(0.5),
+///         solver: Solver::Random, // instant; use Svd post-training
+///         num_iter: 0,
+///         submodules: None,
+///     },
+/// )
+/// .unwrap();
+/// assert!(report.n_factorized() > 0);
+/// assert!(params.n_params() < before);
+/// ```
 pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactReport> {
     let mut report = FactReport {
         params_before: params.n_params(),

@@ -18,10 +18,12 @@ use super::rank::{r_max, MIN_RANK, RANK_MULTIPLE};
 pub struct Spectrum {
     /// Squared singular values, descending.
     pub energies: Vec<f64>,
+    /// Total spectral energy (Σ σ_i² = ‖W‖_F²).
     pub total: f64,
 }
 
 impl Spectrum {
+    /// Compute the spectrum of `w` via the one-sided Jacobi SVD.
     pub fn of(w: &Matrix) -> Self {
         let svd = jacobi_svd(w);
         let energies: Vec<f64> = svd.s.iter().map(|&s| (s as f64) * (s as f64)).collect();

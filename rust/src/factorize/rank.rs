@@ -23,7 +23,9 @@ pub fn r_max(m: usize, n: usize) -> f64 {
 /// each layer's own r_max (the paper's "dynamic rank across all layers").
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Rank {
+    /// One concrete rank for every layer (still subject to the Eq.-1 gate).
     Fixed(usize),
+    /// A fraction of each layer's own r_max (the paper's dynamic rank).
     Ratio(f64),
 }
 

@@ -48,11 +48,15 @@ pub fn layer_flops(layer: &LayerInfo, tokens: usize) -> u64 {
 /// Whole-checkpoint totals.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CostSummary {
+    /// Total weight parameters (biases excluded).
     pub weight_params: usize,
+    /// MAC-based FLOPs per token/position.
     pub flops_per_token: u64,
+    /// Weight footprint in bytes (f32).
     pub weight_bytes: usize,
 }
 
+/// Sum the per-layer cost model over a classified checkpoint.
 pub fn summarize(layers: &[LayerInfo]) -> CostSummary {
     let mut s = CostSummary::default();
     for l in layers {

@@ -32,16 +32,22 @@
 //!   at request time.
 //! * [`backend`] — the execution abstraction: one `Backend` trait over the
 //!   PJRT engine and a pure-Rust `NativeBackend` interpreter, so serving and
-//!   evaluation run hermetically when artifacts are absent (DESIGN.md §8).
+//!   evaluation run hermetically when artifacts are absent (DESIGN.md §8);
+//!   includes KV-cached incremental decoding for the LM path (§10).
 //! * [`train`] — training driver over the fused `train_step` artifacts.
-//! * [`coordinator`] — serving: dynamic batcher, variant router, in-context
-//!   learning prompt composer, metrics.
+//! * [`coordinator`] — serving: dynamic batcher, variant router, streaming
+//!   KV-cached generation, in-context learning prompt composer, metrics.
 //! * [`data`] — synthetic task suite (3 text + 2 image + LM corpus) and the
 //!   tokenizer; see DESIGN.md §3 for the substitution rationale.
 //! * [`flops`] — analytical cost model: params/FLOPs/VMEM/MXU estimates,
 //!   the source of the paper's "theoretical computational cost" gate.
 //! * [`eval`] — accuracy evaluation harnesses shared by examples/benches.
 //! * [`experiments`] — Figure-2 / table regeneration harnesses.
+//!
+//! ARCHITECTURE.md maps every subsystem and walks the request lifecycle
+//! (client → router → batcher/decoder → backend).
+
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod config;

@@ -11,9 +11,13 @@ use std::fmt;
 use crate::util::Pcg64;
 
 #[derive(Clone, PartialEq)]
+/// Row-major f32 matrix — the substrate every solver computes on.
 pub struct Matrix {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major elements, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
@@ -27,6 +31,7 @@ impl fmt::Debug for Matrix {
 const PARALLEL_FLOP_THRESHOLD: usize = 1 << 21;
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix {
             rows,
@@ -35,11 +40,13 @@ impl Matrix {
         }
     }
 
+    /// Wrap row-major `data` (must be exactly `rows * cols` long).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(rows * cols, data.len(), "matrix shape/data mismatch");
         Matrix { rows, cols, data }
     }
 
+    /// Build element-wise from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -50,6 +57,7 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// The n×n identity.
     pub fn eye(n: usize) -> Self {
         Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
@@ -62,25 +70,30 @@ impl Matrix {
     }
 
     #[inline]
+    /// Element (i, j).
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Mutable element (i, j).
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         &mut self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Row i as a contiguous slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Mutable row i.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Materialized transpose (cache-blocked).
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness on big matrices.
@@ -97,16 +110,19 @@ impl Matrix {
         out
     }
 
+    /// Frobenius norm, accumulated in f64.
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// In-place scalar multiply.
     pub fn scale(&mut self, s: f32) {
         for v in &mut self.data {
             *v *= s;
         }
     }
 
+    /// Element-wise difference `self - other` (shapes must match).
     pub fn sub(&self, other: &Matrix) -> Matrix {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Matrix {

@@ -10,6 +10,7 @@
 
 use super::Matrix;
 
+/// A thin SVD `A = U · diag(s) · Vᵀ`.
 pub struct Svd {
     /// (m, k) with orthonormal columns, k = min(m, n).
     pub u: Matrix,

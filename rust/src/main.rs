@@ -7,8 +7,8 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use greenformer::backend::native::{demo_variants, synth_fwd_graph, TextModelCfg};
-use greenformer::backend::NativeBackend;
+use greenformer::backend::native::{demo_variants, init_text_params, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{generate as lm_generate, NativeBackend, SamplingCfg};
 use greenformer::config::ExperimentConfig;
 use greenformer::coordinator::{
     serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
@@ -42,10 +42,17 @@ COMMANDS:
   report-cost                           cost-model table (E5)
   report-solvers                        solver comparison table (E6)
   serve-demo [--requests 200] [--train-steps 60]
+  generate  [--max-new 32] [--temperature 0.0] [--top-k 0] [--seed 42]
+            [--prompt "3,17,42" | --prompt-len 16] [--ratio 0.25]
+            [--model-seed 42] [--stats]
+            KV-cached autoregressive decoding on a synthetic LM
+            (artifact-free; random init, factorized when --ratio is given)
 
 Backends: pjrt executes the AOT artifacts; native is the pure-Rust CPU
-interpreter (no artifacts needed — it trains too, via the grad module).
-eval, fig2 and serve-demo honor --backend; train/run need pjrt artifacts.
+interpreter (no artifacts needed — it trains too, via the grad module, and
+decodes incrementally via the KV cache). eval, fig2, serve-demo and
+generate honor --backend; train/run need pjrt artifacts; generate is
+native-only (AOT fwd graphs have no cache inputs).
 Native fig2 runs artifact-free end to end; keep step budgets small
 (--quick / --steps / GREENFORMER_STEPS) — it is interpreted, not compiled.
 
@@ -330,6 +337,7 @@ fn main() -> Result<()> {
                 args.parse_or("--train-steps", 60usize),
             )?;
         }
+        "generate" => generate_cmd(&args)?,
         "help" | "--help" | "-h" => println!("{USAGE}"),
         other => {
             anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
@@ -367,6 +375,101 @@ fn run_config(eng: &Engine, cfg: &ExperimentConfig) -> Result<()> {
         ev.accuracy(),
         ev.sec_per_batch * 1e3
     );
+    Ok(())
+}
+
+/// `generate`: KV-cached autoregressive decoding on a synthetic LM —
+/// artifact-free, streaming each sampled token to stdout as it exists.
+/// Native-only: the PJRT AOT fwd graphs are fixed-shape full-sequence
+/// executables with no cache inputs, so `--backend pjrt` is refused.
+fn generate_cmd(args: &Args) -> Result<()> {
+    if backend_choice(args)? == BackendChoice::Pjrt {
+        anyhow::bail!(
+            "generate needs --backend native: KV-cached decoding is native-only \
+             (AOT fwd graphs have no cache inputs)"
+        );
+    }
+    let max_new = args.parse_or("--max-new", 32usize);
+    let sampling = SamplingCfg {
+        temperature: args.parse_or("--temperature", 0.0f32),
+        top_k: args.parse_or("--top-k", 0usize),
+        seed: args.parse_or("--seed", 42u64),
+    };
+    let cfg = TextModelCfg::lm_default();
+    let mut params = init_text_params(&cfg, args.parse_or("--model-seed", 42u64));
+    let mut variant = "dense".to_string();
+    if let Some(r) = args.get("--ratio") {
+        let ratio: f64 = r.parse()?;
+        let report = greenformer::factorize::auto_fact(
+            &mut params,
+            &greenformer::factorize::AutoFactConfig {
+                rank: greenformer::factorize::Rank::Ratio(ratio),
+                solver: Solver::Random,
+                num_iter: 0,
+                submodules: None,
+            },
+        )?;
+        variant = format!("led_r{}", (ratio * 100.0).round() as usize);
+        println!("factorized {} layers at ratio {ratio} (Random solver)", report.n_factorized());
+    }
+    let graph = synth_fwd_graph("lm", &variant, 1, &params)?;
+    let prompt: Vec<i32> = match args.get("--prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.trim().parse::<i32>())
+            .collect::<std::result::Result<_, _>>()?,
+        None => {
+            let n = args.parse_or("--prompt-len", 16usize).max(1);
+            let mut rng = greenformer::util::Pcg64::new(sampling.seed, 11);
+            (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+        }
+    };
+    println!(
+        "lm/{variant} (native): d={} layers={} vocab={} seq={} | prompt {} tokens, max_new {}",
+        cfg.d,
+        cfg.layers,
+        cfg.vocab,
+        cfg.seq,
+        prompt.len(),
+        max_new
+    );
+    let be = NativeBackend::new();
+    let t0 = std::time::Instant::now();
+    print!("generated:");
+    let out = lm_generate(&be, &graph, &params, &prompt, max_new, &sampling, |_, t| {
+        print!(" {t}");
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+    })?;
+    println!();
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{} tokens in {:.3}s ({:.1} tok/s end to end, {} positions cached)",
+        out.tokens.len(),
+        secs,
+        out.tokens.len() as f64 / secs.max(1e-12),
+        out.positions_used
+    );
+    if args.has("--stats") {
+        let room = cfg.seq.saturating_sub(prompt.len());
+        if room == 0 {
+            println!("(prompt fills the context; no per-token profile to measure)");
+            return Ok(());
+        }
+        let budget = room.min(max_new);
+        let lat = greenformer::eval::measure_decode_latency(
+            &be, &graph, &params, &prompt, budget, 1, 3,
+        )?;
+        println!(
+            "decode profile: prefill {:.2} ms ({} tok), per-token p50 {:.3} ms p95 {:.3} ms, \
+             {:.1} tok/s steady-state",
+            lat.prefill_s * 1e3,
+            lat.prefill_tokens,
+            lat.per_token_p50_s * 1e3,
+            lat.per_token_p95_s * 1e3,
+            lat.tokens_per_sec
+        );
+    }
     Ok(())
 }
 

@@ -21,13 +21,17 @@ use crate::tensor::ParamStore;
 /// What a parameter group is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {
+    /// Dense linear layer (`w` + optional `bias`).
     Linear,
+    /// Dense 2-D convolution (HWIO `w`).
     Conv2d,
     /// Already-factorized linear (LED).
     LedLinear,
     /// Already-factorized conv (CED).
     CedConv2d,
+    /// Lookup table (`embed/table`, `pos/table`).
     Embedding,
+    /// LayerNorm gain + bias.
     LayerNorm,
     /// Anything unrecognized (left untouched by auto_fact).
     Other,
@@ -38,10 +42,12 @@ pub enum LayerKind {
 pub struct LayerInfo {
     /// Group prefix, e.g. `block0/attn/q` (empty for root-level tensors).
     pub name: String,
+    /// Classified kind.
     pub kind: LayerKind,
     /// For Linear/LED: (in, out). For Conv/CED: (kh·kw·cin, cout) — the
     /// paper's rearrangement. For Embedding: (vocab, dim).
     pub in_dim: usize,
+    /// Output dimension.
     pub out_dim: usize,
     /// Conv spatial kernel (kh, kw) when applicable.
     pub kernel: Option<(usize, usize)>,

@@ -17,6 +17,8 @@ use super::manifest::{GraphSpec, Manifest, TensorSpec};
 use crate::tensor::{Data, Dtype, ParamStore, Tensor};
 use crate::Result;
 
+/// The PJRT execution engine: client + manifest + compiled-executable
+/// cache. Everything artifact-backed runs through here.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -41,10 +43,12 @@ impl Engine {
         Self::load(crate::artifacts_dir())
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `"cpu"`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -90,6 +94,7 @@ impl Engine {
 
     // -- marshalling --------------------------------------------------------
 
+    /// Marshal a [`Tensor`] into a PJRT literal (zero-copy from raw bytes).
     pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         let ty = match t.dtype() {
             Dtype::F32 => xla::ElementType::F32,
@@ -99,6 +104,7 @@ impl Engine {
             .map_err(|e| anyhow!("literal from tensor shape {:?}: {e}", t.shape))
     }
 
+    /// Marshal a PJRT literal back into a [`Tensor`].
     pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit
             .array_shape()

@@ -14,16 +14,21 @@ use crate::Result;
 /// Shape + dtype of one graph input/output/parameter.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter / input / output name.
     pub name: String,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Dtype tag (`"f32"` / `"i32"`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Parsed [`Dtype`] of this spec.
     pub fn dtype(&self) -> Result<Dtype> {
         Dtype::from_tag(&self.dtype)
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -45,22 +50,31 @@ impl TensorSpec {
 /// One AOT-lowered graph: fwd or train, for one (model, variant, batch).
 #[derive(Clone, Debug)]
 pub struct GraphSpec {
+    /// Unique graph name (e.g. `text_dense_fwd_b8`).
     pub name: String,
+    /// HLO-text file, relative to the artifacts dir (empty for synthesized).
     pub file: String,
+    /// Model family (`text` / `image` / `lm`).
     pub model: String,
+    /// Variant name (`dense`, `led_r25`, …).
     pub variant: String,
     /// "fwd" | "train"
     pub kind: String,
+    /// Static batch size the graph was lowered for.
     pub batch: usize,
     /// Parameter order — the flatten_params contract with Python.
     pub params: Vec<TensorSpec>,
+    /// Runtime inputs (tokens / pixels / labels).
     pub inputs: Vec<TensorSpec>,
+    /// Graph outputs (logits or loss).
     pub outputs: Vec<TensorSpec>,
     /// Resolved rank per factorized layer (layer prefix -> r).
     pub ranks: BTreeMap<String, usize>,
+    /// Total scalar parameter count.
     pub n_params: usize,
     /// Model config (vocab/seq/d/... depending on model).
     pub config: BTreeMap<String, usize>,
+    /// First 16 hex chars of the HLO file's sha256 (empty for synthesized).
     pub sha256_16: String,
 }
 
@@ -74,6 +88,7 @@ impl GraphSpec {
         }
     }
 
+    /// Required integer config entry (vocab/seq/d/heads/…).
     pub fn config_usize(&self, key: &str) -> Result<usize> {
         self.config
             .get(key)
@@ -121,23 +136,34 @@ impl GraphSpec {
     }
 }
 
+/// One exported init checkpoint (model, variant) → GTZ file.
 #[derive(Clone, Debug)]
 pub struct CheckpointSpec {
+    /// Model family.
     pub model: String,
+    /// Variant name.
     pub variant: String,
+    /// GTZ file, relative to the artifacts dir.
     pub file: String,
+    /// Total scalar parameter count.
     pub n_params: usize,
 }
 
+/// The parsed `manifest.json`: every lowered graph + exported checkpoint.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Manifest format version (1).
     pub format: usize,
+    /// All lowered graphs.
     pub graphs: Vec<GraphSpec>,
+    /// All exported init checkpoints.
     pub checkpoints: Vec<CheckpointSpec>,
+    /// Directory the manifest was loaded from (file paths are relative).
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Load `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
         let path = dir.join("manifest.json");
@@ -148,6 +174,7 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Parse manifest JSON text (the `dir` field is left empty).
     pub fn parse(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
         let format = v.req("format")?.as_usize()?;
@@ -179,6 +206,7 @@ impl Manifest {
         })
     }
 
+    /// Graph by exact name.
     pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
         self.graphs
             .iter()
@@ -221,6 +249,7 @@ impl Manifest {
         vs
     }
 
+    /// Absolute path of the init checkpoint for (model, variant).
     pub fn checkpoint(&self, model: &str, variant: &str) -> Result<PathBuf> {
         self.checkpoints
             .iter()
@@ -229,6 +258,7 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no init checkpoint for {model}/{variant}"))
     }
 
+    /// Absolute path of a graph's HLO-text file.
     pub fn graph_path(&self, g: &GraphSpec) -> PathBuf {
         self.dir.join(&g.file)
     }

@@ -20,12 +20,14 @@ use crate::Result;
 
 const MAGIC: &[u8; 4] = b"GTZ1";
 
+/// Read and parse a GTZ checkpoint file.
 pub fn read(path: impl AsRef<Path>) -> Result<ParamStore> {
     let path = path.as_ref();
     let buf = fs::read(path).with_context(|| format!("reading GTZ {path:?}"))?;
     parse(&buf).with_context(|| format!("parsing GTZ {path:?}"))
 }
 
+/// Parse GTZ bytes into a [`ParamStore`] (store order = file order).
 pub fn parse(buf: &[u8]) -> Result<ParamStore> {
     let mut off = 0usize;
     let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
@@ -75,6 +77,7 @@ pub fn parse(buf: &[u8]) -> Result<ParamStore> {
     Ok(store)
 }
 
+/// Write `store` as a GTZ file (creating parent directories).
 pub fn write(path: impl AsRef<Path>, store: &ParamStore) -> Result<()> {
     let path = path.as_ref();
     if let Some(parent) = path.parent() {

@@ -15,11 +15,14 @@ use crate::Result;
 /// and GTZ dtype codes 0/1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (token ids, labels).
     I32,
 }
 
 impl Dtype {
+    /// GTZ dtype code (0 = f32, 1 = i32).
     pub fn code(self) -> u8 {
         match self {
             Dtype::F32 => 0,
@@ -27,6 +30,7 @@ impl Dtype {
         }
     }
 
+    /// Decode a GTZ dtype code.
     pub fn from_code(c: u8) -> Result<Self> {
         match c {
             0 => Ok(Dtype::F32),
@@ -35,6 +39,7 @@ impl Dtype {
         }
     }
 
+    /// Decode a manifest dtype tag (`"f32"` / `"i32"`).
     pub fn from_tag(tag: &str) -> Result<Self> {
         match tag {
             "f32" => Ok(Dtype::F32),
@@ -43,6 +48,7 @@ impl Dtype {
         }
     }
 
+    /// Bytes per element (both dtypes are 4-byte).
     pub fn size_bytes(self) -> usize {
         4
     }
@@ -51,17 +57,23 @@ impl Dtype {
 /// Row-major dense tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Data {
+    /// f32 elements.
     F32(Vec<f32>),
+    /// i32 elements.
     I32(Vec<i32>),
 }
 
+/// A shaped, row-major tensor in one of the two artifact dtypes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// The elements.
     pub data: Data,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape and dtype.
     pub fn zeros(shape: &[usize], dtype: Dtype) -> Self {
         let n = shape.iter().product();
         let data = match dtype {
@@ -74,6 +86,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap f32 `data` under `shape` (lengths must agree).
     pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor {
@@ -82,6 +95,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap i32 `data` under `shape` (lengths must agree).
     pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor {
@@ -90,6 +104,7 @@ impl Tensor {
         }
     }
 
+    /// A 0-D f32 scalar.
     pub fn scalar_f32(v: f32) -> Self {
         Tensor {
             shape: vec![],
@@ -97,6 +112,7 @@ impl Tensor {
         }
     }
 
+    /// Element dtype.
     pub fn dtype(&self) -> Dtype {
         match self.data {
             Data::F32(_) => Dtype::F32,
@@ -104,18 +120,22 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Number of dimensions.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }
 
+    /// Elements as an f32 slice (errors on i32 tensors).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             Data::F32(v) => Ok(v),
@@ -123,6 +143,7 @@ impl Tensor {
         }
     }
 
+    /// Mutable f32 elements.
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             Data::F32(v) => Ok(v),
@@ -130,6 +151,7 @@ impl Tensor {
         }
     }
 
+    /// Elements as an i32 slice (errors on f32 tensors).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             Data::I32(v) => Ok(v),
@@ -187,10 +209,12 @@ pub struct ParamStore {
 }
 
 impl ParamStore {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert or replace the tensor under `name` (insertion order kept).
     pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
         let name = name.into();
         if let Some(i) = self.index_of(&name) {
@@ -208,30 +232,37 @@ impl ParamStore {
         Some(self.tensors.remove(i))
     }
 
+    /// Position of `name` in the store order.
     pub fn index_of(&self, name: &str) -> Option<usize> {
         self.names.iter().position(|n| n == name)
     }
 
+    /// Tensor by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.index_of(name).map(|i| &self.tensors[i])
     }
 
+    /// Mutable tensor by name.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
         self.index_of(name).map(move |i| &mut self.tensors[i])
     }
 
+    /// Number of named tensors.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when the store holds nothing.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
 
+    /// All names, in store order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
+    /// Iterate (name, tensor) pairs in store order.
     pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
         self.names.iter().map(String::as_str).zip(self.tensors.iter())
     }
@@ -279,10 +310,12 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Load a checkpoint from a GTZ file.
     pub fn load_gtz(path: impl AsRef<std::path::Path>) -> Result<Self> {
         gtz::read(path)
     }
 
+    /// Write the checkpoint as a GTZ file.
     pub fn save_gtz(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         gtz::write(path, self)
     }

@@ -23,8 +23,11 @@ use crate::Result;
 /// Loss history entry.
 #[derive(Clone, Copy, Debug)]
 pub struct StepLog {
+    /// 1-based optimizer step number.
     pub step: usize,
+    /// Training loss at this step.
     pub loss: f32,
+    /// Wall time of the step, seconds.
     pub seconds: f64,
 }
 
@@ -32,10 +35,13 @@ pub struct StepLog {
 pub struct Trainer<'e> {
     backend: &'e dyn Backend,
     graph: GraphSpec,
+    /// Current model parameters (updated in place every step).
     pub params: ParamStore,
     m: ParamStore,
     v: ParamStore,
+    /// Optimizer steps taken so far.
     pub step: usize,
+    /// Per-step loss/time log.
     pub history: Vec<StepLog>,
 }
 
@@ -133,10 +139,12 @@ impl<'e> Trainer<'e> {
         Self::new(backend, &graph, params)
     }
 
+    /// The train graph this trainer executes.
     pub fn graph(&self) -> &GraphSpec {
         &self.graph
     }
 
+    /// The graph's static batch size.
     pub fn batch_size(&self) -> usize {
         self.graph.batch
     }

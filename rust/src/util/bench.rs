@@ -10,16 +10,24 @@ use std::time::Instant;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// `group/case` label.
     pub name: String,
+    /// Timed iterations.
     pub n: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// 25th-percentile seconds.
     pub p25_s: f64,
+    /// 75th-percentile seconds.
     pub p75_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
 }
 
 impl BenchStats {
+    /// One formatted report row.
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} median {:>12}  mean {:>12}  min {:>12}  (n={})",
@@ -32,6 +40,7 @@ impl BenchStats {
     }
 }
 
+/// Human-scale duration formatting (ns/µs/ms/s).
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1} ns", s * 1e9)
@@ -53,10 +62,12 @@ pub struct Bench {
     pub budget_s: f64,
     /// Max iterations per case.
     pub max_iters: usize,
+    /// Min iterations per case.
     pub min_iters: usize,
 }
 
 impl Bench {
+    /// Bench group named `group`, honoring cargo's trailing filter arg.
     pub fn new(group: &str) -> Self {
         // cargo bench passes e.g. `--bench` plus user filters; take the last
         // non-flag argument as a substring filter.
@@ -108,6 +119,7 @@ impl Bench {
         Some(stats)
     }
 
+    /// All stats recorded so far.
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }

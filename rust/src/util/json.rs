@@ -13,16 +13,24 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed JSON value.
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number, held as f64.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object (keys sorted, which the codec round-trips canonically).
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -39,6 +47,7 @@ impl Value {
 
     // -- typed accessors ----------------------------------------------------
 
+    /// Object field by key (None when absent or not an object).
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -46,10 +55,12 @@ impl Value {
         }
     }
 
+    /// Object field by key, erroring when absent.
     pub fn req(&self, key: &str) -> Result<&Value> {
         self.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
     }
 
+    /// This value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -57,6 +68,7 @@ impl Value {
         }
     }
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -64,6 +76,7 @@ impl Value {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_f64()?;
         if n < 0.0 || n.fract() != 0.0 {
@@ -72,6 +85,7 @@ impl Value {
         Ok(n as usize)
     }
 
+    /// This value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -79,6 +93,7 @@ impl Value {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -86,6 +101,7 @@ impl Value {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -101,16 +117,19 @@ impl Value {
             .to_string()
     }
 
+    /// Field as usize, with a default when absent or invalid.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_usize().ok()).unwrap_or(default)
     }
 
+    /// Field as f64 when present and numeric.
     pub fn f64_opt(&self, key: &str) -> Option<f64> {
         self.get(key).and_then(|v| v.as_f64().ok())
     }
 
     // -- serialization ------------------------------------------------------
 
+    /// Serialize back to compact JSON text.
     pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

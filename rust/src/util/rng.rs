@@ -31,6 +31,7 @@ impl Pcg64 {
         Self::new(seed, 0)
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -73,6 +74,7 @@ impl Pcg64 {
         }
     }
 
+    /// Standard normal as f32.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }

@@ -10,10 +10,12 @@ pub struct Stopwatch {
 }
 
 impl Stopwatch {
+    /// Empty stopwatch.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Begin a lap.
     pub fn start(&mut self) {
         self.start = Some(Instant::now());
     }
@@ -33,14 +35,17 @@ impl Stopwatch {
         v
     }
 
+    /// Number of recorded laps.
     pub fn count(&self) -> usize {
         self.laps.len()
     }
 
+    /// Sum of all laps, seconds.
     pub fn total_secs(&self) -> f64 {
         self.laps.iter().map(Duration::as_secs_f64).sum()
     }
 
+    /// Mean lap, seconds.
     pub fn mean_secs(&self) -> f64 {
         if self.laps.is_empty() {
             0.0
@@ -49,14 +54,17 @@ impl Stopwatch {
         }
     }
 
+    /// Median lap, seconds.
     pub fn median_secs(&self) -> f64 {
         self.percentile_secs(50.0)
     }
 
+    /// 95th-percentile lap, seconds.
     pub fn p95_secs(&self) -> f64 {
         self.percentile_secs(95.0)
     }
 
+    /// Arbitrary-percentile lap (nearest-rank), seconds.
     pub fn percentile_secs(&self, p: f64) -> f64 {
         if self.laps.is_empty() {
             return 0.0;

@@ -11,8 +11,10 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use greenformer::backend::native::{demo_variants, TextModelCfg};
+use greenformer::backend::SamplingCfg;
 use greenformer::coordinator::{
     serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+    TokenEvent,
 };
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{Dataset, Split};
@@ -161,6 +163,168 @@ fn bad_token_length_gets_error_response_not_a_dispatcher_panic() {
     assert_eq!(m.requests.load(Ordering::Relaxed), 3);
     assert_eq!(m.responses.load(Ordering::Relaxed), 1);
     assert_eq!(m.errors.load(Ordering::Relaxed), 2);
+}
+
+/// Small causal LM family (head width = vocab, heads at the zoo's "lm"
+/// default of 6 — the server synthesizes its graphs internally, so the cfg
+/// must match the default).
+fn lm_cfg() -> TextModelCfg {
+    TextModelCfg {
+        vocab: 64,
+        seq: 16,
+        d: 24,
+        heads: 6,
+        layers: 1,
+        ff: 48,
+        classes: 64,
+    }
+}
+
+fn lm_stores() -> HashMap<String, ParamStore> {
+    let (dense, led) = demo_variants(&lm_cfg(), 7, 0.5).unwrap();
+    let mut m = HashMap::new();
+    m.insert("dense".to_string(), dense);
+    m.insert("led_r50".to_string(), led);
+    m
+}
+
+fn lm_server() -> greenformer::coordinator::ServerHandle {
+    let stores = lm_stores();
+    let router = Router::new(
+        RoutePolicy::Tiered {
+            quality: "dense".into(),
+            balanced: "dense".into(),
+            fast: "led_r50".into(),
+        },
+        stores.keys().cloned().collect(),
+    )
+    .unwrap();
+    serve_classifier_native("lm", stores, router, BatcherConfig::default(), 128).unwrap()
+}
+
+#[test]
+fn generate_streams_tokens_and_reconciles_per_token_metrics() {
+    let handle = lm_server();
+    let prompt_len = 4usize;
+    let max_new = 8usize;
+
+    // Streaming contract: Token events with sequential indices, then Done
+    // carrying the same tokens in order.
+    let sampling = SamplingCfg {
+        temperature: 0.8,
+        top_k: 8,
+        seed: 1,
+    };
+    let rx = handle
+        .generate(vec![1, 2, 3, 4], max_new, sampling, Tier::Quality)
+        .unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        match rx.recv().expect("stream ended without a terminal event") {
+            TokenEvent::Token { index, token } => {
+                assert_eq!(index, streamed.len(), "token indices must be sequential");
+                streamed.push(token);
+            }
+            TokenEvent::Done(resp) => break resp,
+            TokenEvent::Failed(msg) => panic!("generation failed: {msg}"),
+        }
+    };
+    assert_eq!(streamed, done.tokens);
+    assert_eq!(done.tokens.len(), max_new);
+    assert_eq!(done.prefill_tokens, prompt_len);
+    assert_eq!(done.variant, "dense");
+
+    // Concurrent generations across tiers; fixed seeds reproduce streams.
+    let n_clients = 6usize;
+    let mut joins = Vec::new();
+    for i in 0..n_clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+            let s = SamplingCfg {
+                temperature: 0.8,
+                top_k: 8,
+                seed: i as u64,
+            };
+            let resp = h.generate_collect(vec![1, 2, 3, 4], max_new, s, tier).unwrap();
+            (i, resp)
+        }));
+    }
+    for j in joins {
+        let (i, resp) = j.join().unwrap();
+        assert_eq!(resp.tokens.len(), max_new);
+        let expect = if i % 2 == 0 { "led_r50" } else { "dense" };
+        assert_eq!(resp.variant, expect, "client {i}");
+        // Replaying the same seed on the same tier reproduces the stream.
+        let s = SamplingCfg {
+            temperature: 0.8,
+            top_k: 8,
+            seed: i as u64,
+        };
+        let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+        let replay = handle.generate_collect(vec![1, 2, 3, 4], max_new, s, tier).unwrap();
+        assert_eq!(replay.tokens, resp.tokens, "client {i}: seed must reproduce the stream");
+    }
+
+    // Per-token metrics reconcile: one request per generation, prompt
+    // tokens tallied by prefill, streamed tokens tallied one by one.
+    let m = &handle.metrics;
+    let generations = (1 + n_clients + n_clients) as u64; // streamed + clients + replays
+    assert_eq!(m.requests.load(Ordering::Relaxed), generations);
+    assert_eq!(m.responses.load(Ordering::Relaxed), generations);
+    assert_eq!(m.decode_sessions.load(Ordering::Relaxed), generations);
+    assert_eq!(
+        m.prefill_tokens.load(Ordering::Relaxed),
+        generations * prompt_len as u64
+    );
+    assert_eq!(
+        m.generated_tokens.load(Ordering::Relaxed),
+        generations * max_new as u64
+    );
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(handle.queue_depth(), 0);
+    let counts = m.variant_counts();
+    assert_eq!(counts["dense"] + counts["led_r50"], generations);
+}
+
+#[test]
+fn classify_and_generate_reject_mismatched_model_families_cleanly() {
+    // Classify against an LM family: per-request error, no panic.
+    let lm = lm_server();
+    let err = lm.classify(vec![1; 16], Tier::Quality);
+    assert!(err.is_err(), "classify on an LM variant must error");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("classify is unsupported"), "unexpected error: {msg}");
+    // The server keeps decoding fine afterwards.
+    let resp = lm
+        .generate_collect(vec![1, 2], 3, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 3);
+
+    // Generate against a classifier family: Failed event, no panic.
+    let stores = variant_stores();
+    let router = tiered_router(&stores);
+    let text =
+        serve_classifier_native("text", stores, router, BatcherConfig::default(), 32).unwrap();
+    let err = text.generate_collect(vec![1, 2, 3], 4, SamplingCfg::greedy(), Tier::Quality);
+    assert!(err.is_err(), "generate on a classifier variant must fail");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("cannot decode"), "unexpected error: {msg}");
+    // And classify still works.
+    let ds = PolarityTask::new(SEQ, 5);
+    let ok = text.classify(ds.example(Split::Eval, 0).tokens, Tier::Quality).unwrap();
+    assert_eq!(ok.variant, "dense");
+    // Bad generate requests error rather than hang: empty prompt, zero
+    // budget, over-capacity prompt.
+    let lm2 = lm_server();
+    assert!(lm2.generate_collect(vec![], 4, SamplingCfg::greedy(), Tier::Quality).is_err());
+    assert!(lm2.generate_collect(vec![1], 0, SamplingCfg::greedy(), Tier::Quality).is_err());
+    assert!(lm2
+        .generate_collect(vec![0; 17], 4, SamplingCfg::greedy(), Tier::Quality)
+        .is_err());
+    assert!(lm2
+        .generate_collect(vec![64], 4, SamplingCfg::greedy(), Tier::Quality)
+        .is_err(), "out-of-vocab prompt token must fail the prefill");
 }
 
 #[test]

@@ -1,10 +1,32 @@
 //! E7 — kernel-level speedup: dense GEMM vs the factorized (LED) product at
 //! paper-relevant shapes, in the Rust substrate (the same ratio the Pallas
 //! kernel realizes on TPU; the analytical TPU estimate is printed alongside).
+//!
+//! Since PR 5 this bench also reports **old-vs-new kernel** GFLOP/s: the
+//! pre-PR-5 serial i-k-j loop is kept as `matmul_into_reference` and timed
+//! against the packed, pool-parallel `matmul_into` (plus the column-split
+//! GEMV at the batch-1 decode shape), so the kernel-layer speedup is
+//! *measured* on every run — emitted as a machine-readable
+//! `BENCH_KERNELS {...}` JSON line that `python/tools/collect_bench.py`
+//! persists into `BENCH_KERNELS.json`.
 
 use greenformer::flops::roofline::led_tpu_speedup_estimate;
-use greenformer::linalg::Matrix;
+use greenformer::linalg::{matmul_into, matmul_into_reference, Matrix};
 use greenformer::util::{Bench, Pcg64};
+
+/// GFLOP/s for an (m, k, n) GEMM at `secs` per iteration.
+fn gflops(m: usize, k: usize, n: usize, secs: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9
+}
+
+struct KernelRow {
+    label: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    ref_gflops: f64,
+    new_gflops: f64,
+}
 
 fn main() {
     let shapes: &[(&str, usize, usize, usize)] = &[
@@ -37,5 +59,74 @@ fn main() {
         if let Some(s) = bench.speedup(&format!("dense/{label}"), &format!("led/{label}")) {
             println!("    -> measured CPU speedup {label}: {s:.2}x");
         }
+    }
+
+    // ---------------------------------------------------------------------
+    // Old vs new kernel layer: legacy serial baseline vs packed/pooled GEMM
+    // and the m=1 decode GEMV. Same inputs, same accumulation order — the
+    // delta is pure kernel engineering.
+    // ---------------------------------------------------------------------
+    println!("\n== kernel layer: legacy serial vs packed parallel ==");
+    let mut bench = Bench::new("kernels_old_vs_new");
+    bench.max_iters = 20;
+    let gemm_shapes: &[(&str, usize, usize, usize)] = &[
+        ("gemm_256x768x768", 256, 768, 768),
+        ("gemm_256x768x3072", 256, 768, 3072),
+        ("gemm_256x128x128", 256, 128, 128),
+        ("gemv_1x768x3072", 1, 768, 3072),
+        ("gemv_1x192x768", 1, 192, 768),
+    ];
+    let mut rows: Vec<KernelRow> = Vec::new();
+    for &(label, m, k, n) in gemm_shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut out = vec![0.0f32; m * n];
+        let old = bench.bench(&format!("old/{label}"), || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul_into_reference(m, k, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(out[0])
+        });
+        let new = bench.bench(&format!("new/{label}"), || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul_into(m, k, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(out[0])
+        });
+        if let (Some(old), Some(new)) = (old, new) {
+            let row = KernelRow {
+                label: label.to_string(),
+                m,
+                k,
+                n,
+                ref_gflops: gflops(m, k, n, old.median_s),
+                new_gflops: gflops(m, k, n, new.median_s),
+            };
+            println!(
+                "    -> {label}: old {:.2} GFLOP/s  new {:.2} GFLOP/s  ({:.2}x)",
+                row.ref_gflops,
+                row.new_gflops,
+                row.new_gflops / row.ref_gflops
+            );
+            rows.push(row);
+        }
+    }
+
+    if !rows.is_empty() {
+        let cases: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"label\":\"{}\",\"m\":{},\"k\":{},\"n\":{},\"ref_gflops\":{:.3},\
+                     \"new_gflops\":{:.3},\"speedup\":{:.3}}}",
+                    r.label,
+                    r.m,
+                    r.k,
+                    r.n,
+                    r.ref_gflops,
+                    r.new_gflops,
+                    r.new_gflops / r.ref_gflops
+                )
+            })
+            .collect();
+        println!("BENCH_KERNELS {{\"cases\":[{}]}}", cases.join(","));
     }
 }

@@ -1,7 +1,10 @@
-//! L3 hot-path microbenches: the linalg substrate (GEMM, SVD variants, QR)
-//! — the profile targets of the §Perf pass.
+//! L3 hot-path microbenches: the linalg substrate (GEMM/GEMV old vs new,
+//! transposed products, SVD variants, QR) — the profile targets of the
+//! DESIGN.md §11 kernel layer.
 
-use greenformer::linalg::{jacobi_svd, randomized_svd, svd_factorize, thin_qr, Matrix};
+use greenformer::linalg::{
+    jacobi_svd, matmul_into, matmul_into_reference, randomized_svd, svd_factorize, thin_qr, Matrix,
+};
 use greenformer::util::{Bench, Pcg64};
 
 fn main() {
@@ -13,7 +16,46 @@ fn main() {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
         bench.bench(&format!("{n}x{n}"), || a.matmul(&b));
+        bench.bench(&format!("{n}x{n}_legacy_serial"), || {
+            let mut out = vec![0.0f32; n * n];
+            matmul_into_reference(n, n, n, &a.data, &b.data, &mut out);
+            out
+        });
+        if let Some(s) = bench.speedup(&format!("{n}x{n}_legacy_serial"), &format!("{n}x{n}")) {
+            println!("    -> kernel speedup {n}x{n}: {s:.2}x");
+        }
     }
+
+    // The m=1 decode shape: column-split GEMV vs the serial baseline.
+    let mut bench = Bench::new("gemv");
+    bench.max_iters = 50;
+    for (k, n) in [(192usize, 768usize), (768, 3072)] {
+        let a = Matrix::randn(1, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut out = vec![0.0f32; n];
+        bench.bench(&format!("new_1x{k}x{n}"), || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul_into(1, k, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(out[0])
+        });
+        bench.bench(&format!("old_1x{k}x{n}"), || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul_into_reference(1, k, n, &a.data, &b.data, &mut out);
+            std::hint::black_box(out[0])
+        });
+        if let Some(s) = bench.speedup(&format!("old_1x{k}x{n}"), &format!("new_1x{k}x{n}")) {
+            println!("    -> gemv speedup 1x{k}x{n}: {s:.2}x");
+        }
+    }
+
+    // Transposed products, now routed through the packed parallel kernels.
+    let mut bench = Bench::new("matmul_tn_nt");
+    bench.max_iters = 30;
+    let a = Matrix::randn(512, 256, 1.0, &mut rng);
+    let b = Matrix::randn(512, 384, 1.0, &mut rng);
+    bench.bench("tn_256x512x384", || a.matmul_tn(&b));
+    let c = Matrix::randn(384, 256, 1.0, &mut rng);
+    bench.bench("nt_512x256x384", || a.matmul_nt(&c));
 
     let mut bench = Bench::new("svd");
     bench.max_iters = 10;

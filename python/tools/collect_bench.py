@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Run the hermetic benches and persist their BENCH_* JSON lines.
+
+Every perf-relevant bench prints a machine-readable marker line::
+
+    BENCH_KERNELS {...}
+    BENCH_NATIVE_DECODE {...}
+    BENCH_NATIVE_SERVING {...}
+    BENCH_NATIVE_TRAIN {...}
+
+This tool runs ``cargo bench --bench <name>`` for each requested bench,
+scrapes those lines, and appends one run record per marker to
+``BENCH_<MARKER>.json`` at the repo root::
+
+    {"runs": [{"ts": ..., "git": ..., "bench": ..., "data": {...}}, ...]}
+
+so the perf trajectory accumulates across commits/CI runs instead of
+evaporating in build logs. Wired into CI as a non-gating step.
+
+Usage:
+    python3 python/tools/collect_bench.py            # default bench set
+    python3 python/tools/collect_bench.py --quick    # small env-scaled run
+    python3 python/tools/collect_bench.py --benches kernel_speedup
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import re
+import subprocess
+import sys
+
+DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving"]
+
+# Env knobs that keep the --quick run short enough for CI.
+QUICK_ENV = {
+    "GREENFORMER_BENCH_REQUESTS": "64",
+    "GREENFORMER_BENCH_DECODE_TOKENS": "32",
+    "GREENFORMER_BENCH_DECODE_ITERS": "2",
+    "GREENFORMER_BENCH_TRAIN_STEPS": "8",
+}
+
+MARKER_RE = re.compile(r"^(BENCH_[A-Z0-9_]+) (\{.*\})\s*$")
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))
+
+
+def git_rev(root: str) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=root,
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        return out.stdout.strip()
+    except Exception:  # noqa: BLE001 - best effort; benches still persist
+        return "unknown"
+
+
+def run_bench(root: str, name: str, quick: bool) -> list[tuple[str, dict]]:
+    """Run one bench binary, return (marker, payload) pairs it printed."""
+    env = dict(os.environ)
+    if quick:
+        for k, v in QUICK_ENV.items():
+            env.setdefault(k, v)
+    cmd = ["cargo", "bench", "--bench", name]
+    print(f"[collect_bench] running: {' '.join(cmd)}", flush=True)
+    proc = subprocess.run(cmd, cwd=root, env=env, capture_output=True, text=True)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        raise RuntimeError(f"bench {name} failed with rc={proc.returncode}")
+    found = []
+    for line in proc.stdout.splitlines():
+        m = MARKER_RE.match(line.strip())
+        if not m:
+            continue
+        try:
+            found.append((m.group(1), json.loads(m.group(2))))
+        except json.JSONDecodeError as e:
+            print(f"[collect_bench] bad JSON after {m.group(1)}: {e}", file=sys.stderr)
+    return found
+
+
+def persist(root: str, marker: str, bench: str, data: dict, rev: str) -> str:
+    path = os.path.join(root, f"{marker}.json")
+    doc = {"runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    runs = doc.setdefault("runs", [])
+    runs.append(
+        {
+            "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(timespec="seconds"),
+            "git": rev,
+            "bench": bench,
+            "data": data,
+        }
+    )
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--benches", nargs="+", default=DEFAULT_BENCHES)
+    ap.add_argument("--quick", action="store_true", help="scale benches down via env knobs")
+    args = ap.parse_args()
+
+    root = repo_root()
+    rev = git_rev(root)
+    persisted = []
+    failures = 0
+    for bench in args.benches:
+        try:
+            markers = run_bench(root, bench, args.quick)
+        except RuntimeError as e:
+            print(f"[collect_bench] {e}", file=sys.stderr)
+            failures += 1
+            continue
+        if not markers:
+            print(f"[collect_bench] {bench}: no BENCH_* line found", file=sys.stderr)
+        for marker, data in markers:
+            persisted.append(persist(root, marker, bench, data, rev))
+    for p in persisted:
+        print(f"[collect_bench] wrote {p}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

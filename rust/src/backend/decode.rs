@@ -8,13 +8,15 @@
 //! row of projections plus attention over the cache instead of a full
 //! re-encode of the prefix.
 //!
-//! Numerics are **bit-identical** to the full forward pass, not merely
-//! close: every GEMM routes through the same
+//! Numerics are **value-identical** to the full forward pass (exact to the
+//! last bit, up to the sign of zero): every GEMM routes through the same
 //! [`crate::linalg::matrix::matmul_into`] (whose k-dimension accumulation
 //! order per output element does not depend on the row count), causally
 //! masked score logits are pinned to the same `-1e9` before the same
-//! softmax (where they underflow to exactly `0.0`), and zero attention
-//! weights are skipped identically in the context GEMM. The
+//! softmax (where they underflow to exactly `0.0`), and those exactly-zero
+//! attention weights contribute exactly-zero terms to the context GEMM —
+//! `acc + ±0.0` leaves every accumulator's value unchanged, and no
+//! downstream op distinguishes `-0.0` from `+0.0` (DESIGN.md §10–§11). The
 //! KV-cache ≡ full-recompute equivalence is pinned for dense and LED models
 //! by `tests/proptest_decode.rs`.
 //!
@@ -30,13 +32,17 @@
 
 use anyhow::{anyhow, bail};
 
+use crate::linalg::gemm::Activation;
 use crate::linalg::matrix::matmul_into;
+use crate::linalg::workspace::Workspace;
 use crate::runtime::GraphSpec;
 use crate::tensor::{ParamStore, Tensor};
 use crate::util::Pcg64;
 use crate::Result;
 
-use super::native::{apply_linear, gelu, heads_for, layernorm, num_blocks, pname, softmax_rows};
+use super::native::{
+    apply_linear_named, heads_for, layernorm_named, num_blocks, softmax_rows, LinearNames,
+};
 use super::Backend;
 
 /// RNG stream id for sampling draws — distinct from the dataset/solver/init
@@ -50,6 +56,49 @@ struct LayerKv {
     k: Vec<f32>,
     /// Values, row-major `(len, d)`.
     v: Vec<f32>,
+}
+
+impl LayerKv {
+    /// Cache with capacity for `cap` f32s per side reserved up front, so
+    /// appending tokens never reallocates mid-generation.
+    fn with_capacity(cap: usize) -> Self {
+        LayerKv { k: Vec::with_capacity(cap), v: Vec::with_capacity(cap) }
+    }
+}
+
+/// Parameter names of one transformer block, resolved once per session so
+/// the per-token step does zero string formatting (and therefore zero
+/// string allocation).
+#[derive(Clone, Debug)]
+struct BlockNames {
+    ln1_g: String,
+    ln1_bias: String,
+    ln2_g: String,
+    ln2_bias: String,
+    q: LinearNames,
+    k: LinearNames,
+    v: LinearNames,
+    o: LinearNames,
+    fc1: LinearNames,
+    fc2: LinearNames,
+}
+
+impl BlockNames {
+    fn new(i: usize) -> Self {
+        let p = format!("block{i}");
+        BlockNames {
+            ln1_g: format!("{p}/ln1/g"),
+            ln1_bias: format!("{p}/ln1/bias"),
+            ln2_g: format!("{p}/ln2/g"),
+            ln2_bias: format!("{p}/ln2/bias"),
+            q: LinearNames::new(&format!("{p}/attn/q")),
+            k: LinearNames::new(&format!("{p}/attn/k")),
+            v: LinearNames::new(&format!("{p}/attn/v")),
+            o: LinearNames::new(&format!("{p}/attn/o")),
+            fc1: LinearNames::new(&format!("{p}/fc1")),
+            fc2: LinearNames::new(&format!("{p}/fc2")),
+        }
+    }
 }
 
 /// Mutable state of one in-flight autoregressive decode: the per-layer KV
@@ -73,6 +122,14 @@ pub struct DecodeSession {
     /// Positions decoded so far (cache rows per layer).
     len: usize,
     layers: Vec<LayerKv>,
+    /// Per-block parameter names, resolved once at session creation.
+    names: Vec<BlockNames>,
+    /// LM-head parameter names.
+    head: LinearNames,
+    /// Scratch arena for the step's activations; attention scratch is sized
+    /// by `max_seq`, so every post-prefill step reuses identical buffers
+    /// (cloning a session starts a fresh, unwarmed arena).
+    ws: Workspace,
 }
 
 impl DecodeSession {
@@ -121,7 +178,10 @@ impl DecodeSession {
             vocab,
             max_seq,
             len: 0,
-            layers: (0..n_layers).map(|_| LayerKv::default()).collect(),
+            layers: (0..n_layers).map(|_| LayerKv::with_capacity(max_seq * d)).collect(),
+            names: (0..n_layers).map(BlockNames::new).collect(),
+            head: LinearNames::new("head"),
+            ws: Workspace::new(),
         })
     }
 
@@ -166,6 +226,19 @@ impl DecodeSession {
             l.v.clear();
         }
     }
+
+    /// Scratch-arena takes that had to allocate because no retired buffer
+    /// fit. Constant across steady-state decode steps (every post-prefill
+    /// step requests identical buffer sizes) — the zero-allocation contract
+    /// `tests/decode_alloc_steady.rs` pins.
+    pub fn scratch_alloc_misses(&self) -> usize {
+        self.ws.alloc_misses()
+    }
+
+    /// Reset the scratch arena's take/miss counters (buffers are kept).
+    pub fn reset_scratch_stats(&mut self) {
+        self.ws.reset_stats();
+    }
 }
 
 /// The native implementation of [`Backend::run_decode_step`]: append
@@ -193,7 +266,7 @@ pub(crate) fn native_decode_step(
             session.max_seq
         );
     }
-    let (d, heads) = (session.d, session.heads);
+    let (d, heads, max_seq) = (session.d, session.heads, session.max_seq);
     let dk = d / heads;
 
     // Token + position embedding of the chunk, at absolute positions
@@ -207,7 +280,11 @@ pub(crate) fn native_decode_step(
         .get("pos/table")
         .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?
         .as_f32()?;
-    let mut x = vec![0.0f32; n * d];
+    // Disjoint field borrows: the KV caches and the scratch arena live in
+    // different session fields, so the layer loop can hold both.
+    let s = &mut *session;
+    let ws = &mut s.ws;
+    let mut x = ws.take_zeroed(n * d);
     for (si, &t) in new_tokens.iter().enumerate() {
         if t < 0 || t as usize >= vocab_rows {
             bail!("token id {t} out of range (vocab {vocab_rows})");
@@ -222,30 +299,34 @@ pub(crate) fn native_decode_step(
 
     let len = p0 + n;
     let scale = 1.0 / (dk as f32).sqrt();
-    for (li, layer) in session.layers.iter_mut().enumerate() {
-        let prefix = format!("block{li}");
-
+    // Step scratch. Attention buffers are sized by the positional capacity,
+    // not the live cache length, so every post-prefill step requests the
+    // same lengths and the arena serves them without touching the
+    // allocator (the contract `scratch_alloc_misses` exposes).
+    let mut xn = ws.take_zeroed(n * d);
+    let mut ctx = ws.take_zeroed(n * d);
+    let mut qh = ws.take_zeroed(n * dk);
+    let mut kt = ws.take_zeroed(dk * max_seq); // cache keys pre-transposed: (dk, len)
+    let mut vh = ws.take_zeroed(max_seq * dk);
+    let mut scores = ws.take_zeroed(n * max_seq);
+    let mut oh = ws.take_zeroed(n * dk);
+    for (layer, names) in s.layers.iter_mut().zip(&s.names) {
         // Attention sublayer: project the chunk, append K/V to the cache,
         // then score each chunk row against every cached position.
-        let mut xn = x.clone();
-        layernorm(params, &pname(&prefix, "ln1"), d, &mut xn)?;
-        let ap = pname(&prefix, "attn");
-        let (dq, q) = apply_linear(params, &pname(&ap, "q"), n, d, &xn)?;
-        let (dkk, knew) = apply_linear(params, &pname(&ap, "k"), n, d, &xn)?;
-        let (dv, vnew) = apply_linear(params, &pname(&ap, "v"), n, d, &xn)?;
+        xn.copy_from_slice(&x);
+        layernorm_named(params, &names.ln1_g, &names.ln1_bias, d, &mut xn)?;
+        let (dq, q) = apply_linear_named(params, &names.q, n, d, &xn, Activation::None, ws)?;
+        let (dkk, knew) = apply_linear_named(params, &names.k, n, d, &xn, Activation::None, ws)?;
+        let (dv, vnew) = apply_linear_named(params, &names.v, n, d, &xn, Activation::None, ws)?;
         if dq != d || dkk != d || dv != d {
-            bail!("{ap}: projection output dims {dq}/{dkk}/{dv} != d {d}");
+            bail!("{}: projection output dims {dq}/{dkk}/{dv} != d {d}", names.q.prefix);
         }
         layer.k.extend_from_slice(&knew);
         layer.v.extend_from_slice(&vnew);
+        ws.give(knew);
+        ws.give(vnew);
         debug_assert_eq!(layer.k.len(), len * d);
 
-        let mut ctx = vec![0.0f32; n * d];
-        let mut qh = vec![0.0f32; n * dk];
-        let mut kt = vec![0.0f32; dk * len]; // cache keys gathered pre-transposed: (dk, len)
-        let mut vh = vec![0.0f32; len * dk];
-        let mut scores = vec![0.0f32; n * len];
-        let mut oh = vec![0.0f32; n * dk];
         for h in 0..heads {
             for si in 0..n {
                 let src = si * d + h * dk;
@@ -261,8 +342,8 @@ pub(crate) fn native_decode_step(
             // scores(n, len) = qh @ kt * scale; chunk row i may only see
             // cache positions 0..=p0+i (mask pinned to -1e9 pre-softmax,
             // exactly like the full pass — it underflows to 0.0 there too).
-            scores.fill(0.0);
-            matmul_into(n, dk, len, &qh, &kt, &mut scores);
+            scores[..n * len].fill(0.0);
+            matmul_into(n, dk, len, &qh, &kt[..dk * len], &mut scores[..n * len]);
             for i in 0..n {
                 let row = &mut scores[i * len..(i + 1) * len];
                 for v in row.iter_mut() {
@@ -272,46 +353,57 @@ pub(crate) fn native_decode_step(
                     *v = -1e9;
                 }
             }
-            softmax_rows(&mut scores, len);
+            softmax_rows(&mut scores[..n * len], len);
             oh.fill(0.0);
-            matmul_into(n, len, dk, &scores, &vh, &mut oh);
+            matmul_into(n, len, dk, &scores[..n * len], &vh[..len * dk], &mut oh);
             for si in 0..n {
                 let dst = si * d + h * dk;
                 ctx[dst..dst + dk].copy_from_slice(&oh[si * dk..(si + 1) * dk]);
             }
         }
-        let (do_, attn) = apply_linear(params, &pname(&ap, "o"), n, d, &ctx)?;
+        let (do_, attn) = apply_linear_named(params, &names.o, n, d, &ctx, Activation::None, ws)?;
+        ws.give(q);
         if do_ != d {
-            bail!("{ap}: o-projection output dim {do_} != d {d}");
+            bail!("{}: o-projection output dim {do_} != d {d}", names.o.prefix);
         }
         for (v, a) in x.iter_mut().zip(&attn) {
             *v += a;
         }
+        ws.give(attn);
 
-        // FFN sublayer (dense or LED — apply_linear dispatches on keys).
-        let mut xn = x.clone();
-        layernorm(params, &pname(&prefix, "ln2"), d, &mut xn)?;
-        let (ff, mut hmid) = apply_linear(params, &pname(&prefix, "fc1"), n, d, &xn)?;
-        gelu(&mut hmid);
-        let (d2, y) = apply_linear(params, &pname(&prefix, "fc2"), n, ff, &hmid)?;
+        // FFN sublayer (dense or LED — the linear dispatches on keys); the
+        // GELU runs in fc1's GEMM epilogue.
+        xn.copy_from_slice(&x);
+        layernorm_named(params, &names.ln2_g, &names.ln2_bias, d, &mut xn)?;
+        let (ff, hmid) = apply_linear_named(params, &names.fc1, n, d, &xn, Activation::Gelu, ws)?;
+        let (d2, y) = apply_linear_named(params, &names.fc2, n, ff, &hmid, Activation::None, ws)?;
         if d2 != d {
-            bail!("{prefix}: fc2 output dim {d2} != d {d}");
+            bail!("{}: fc2 output dim {d2} != d {d}", names.fc2.prefix);
         }
         for (v, a) in x.iter_mut().zip(&y) {
             *v += a;
         }
+        ws.give(hmid);
+        ws.give(y);
     }
-    session.len = len;
+    s.len = len;
 
     // Final layernorm + LM head on the last chunk row only — earlier rows'
     // logits were (or could have been) emitted by earlier steps.
-    layernorm(params, "ln_f", d, &mut x)?;
+    layernorm_named(params, "ln_f/g", "ln_f/bias", d, &mut x)?;
     let last = &x[(n - 1) * d..n * d];
-    let (vocab, logits) = apply_linear(params, "head", 1, d, last)?;
-    if vocab != session.vocab {
-        bail!("head width {vocab} does not match the graph's logit width {}", session.vocab);
+    let (vocab, logits) = apply_linear_named(params, &s.head, 1, d, last, Activation::None, ws)?;
+    if vocab != s.vocab {
+        bail!("head width {vocab} does not match the graph's logit width {}", s.vocab);
     }
-    Ok(Tensor::from_f32(&[vocab], logits))
+    // The logits tensor is the step's output and the single unavoidable
+    // per-token allocation; every interpreter-internal buffer goes back to
+    // the arena.
+    let out = Tensor::from_f32(&[vocab], logits.clone());
+    for buf in [logits, x, xn, ctx, qh, kt, vh, scores, oh] {
+        ws.give(buf);
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------

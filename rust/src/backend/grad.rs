@@ -27,6 +27,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail};
 
 use crate::linalg::matrix::matmul_into;
+use crate::linalg::workspace::{with_thread_ws, Workspace};
 use crate::runtime::GraphSpec;
 use crate::tensor::{Dtype, ParamStore, Tensor};
 use crate::Result;
@@ -100,20 +101,43 @@ impl Grads {
 // Small dense helpers (all GEMMs through matmul_into)
 // ---------------------------------------------------------------------------
 
+/// GEMM into a fresh buffer — used when the product is *kept* (gradient
+/// accumulators handed to [`Grads`], tape entries).
 fn mm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n];
     matmul_into(m, k, n, a, b, &mut out);
     out
 }
 
-fn transpose(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+/// GEMM into a workspace buffer — used for scratch products the caller
+/// `give`s back, so steady-state training reuses the same allocations.
+fn mm_ws(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], ws: &mut Workspace) -> Vec<f32> {
+    let mut out = ws.take_zeroed(m * n);
+    matmul_into(m, k, n, a, b, &mut out);
+    out
+}
+
+fn transpose_into(rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * cols);
-    let mut out = vec![0.0f32; rows * cols];
+    debug_assert_eq!(out.len(), rows * cols);
     for i in 0..rows {
         for j in 0..cols {
             out[j * rows + i] = x[i * cols + j];
         }
     }
+}
+
+#[cfg(test)]
+fn transpose(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    transpose_into(rows, cols, x, &mut out);
+    out
+}
+
+/// Transpose into a workspace buffer (caller `give`s it back).
+fn transpose_ws(rows: usize, cols: usize, x: &[f32], ws: &mut Workspace) -> Vec<f32> {
+    let mut out = ws.take_zeroed(rows * cols);
+    transpose_into(rows, cols, x, &mut out);
     out
 }
 
@@ -142,6 +166,23 @@ pub fn linear_bwd(
     dy: &[f32],
     grads: &mut Grads,
 ) -> Result<Vec<f32>> {
+    let mut ws = Workspace::new();
+    linear_bwd_ws(params, prefix, rows, k, x, dy, grads, &mut ws)
+}
+
+/// [`linear_bwd`] with the transpose/bottleneck scratch drawn from `ws`
+/// (the form the training interpreter calls in its hot loop).
+#[allow(clippy::too_many_arguments)]
+fn linear_bwd_ws(
+    params: &ParamStore,
+    prefix: &str,
+    rows: usize,
+    k: usize,
+    x: &[f32],
+    dy: &[f32],
+    grads: &mut Grads,
+    ws: &mut Workspace,
+) -> Result<Vec<f32>> {
     debug_assert_eq!(x.len(), rows * k);
     let n;
     let dx;
@@ -155,11 +196,13 @@ pub fn linear_bwd(
             bail!("{prefix}: dy len {} != rows {rows} x n {n}", dy.len());
         }
         // dW(k, n) = x^T(k, rows) @ dy(rows, n)
-        let xt = transpose(rows, k, x);
+        let xt = transpose_ws(rows, k, x, ws);
         grads.acc(pname(prefix, "w"), mm(k, rows, n, &xt, dy));
+        ws.give(xt);
         // dx(rows, k) = dy(rows, n) @ W^T(n, k)
-        let wt = transpose(k, n, wd);
+        let wt = transpose_ws(k, n, wd, ws);
         dx = mm(rows, n, k, dy, &wt);
+        ws.give(wt);
     } else if let (Some(a), Some(b)) =
         (params.get(&pname(prefix, "a")), params.get(&pname(prefix, "b")))
     {
@@ -173,19 +216,25 @@ pub fn linear_bwd(
             bail!("{prefix}: dy len {} != rows {rows} x n {n}", dy.len());
         }
         // Recompute the rank bottleneck h = x·a (cheaper than taping it).
-        let h = mm(rows, k, r, x, ad);
+        let h = mm_ws(rows, k, r, x, ad, ws);
         // dB(r, n) = h^T @ dy
-        let ht = transpose(rows, r, &h);
+        let ht = transpose_ws(rows, r, &h, ws);
         grads.acc(pname(prefix, "b"), mm(r, rows, n, &ht, dy));
+        ws.give(ht);
         // dh(rows, r) = dy @ B^T
-        let bt = transpose(r, n, bd);
-        let dh = mm(rows, n, r, dy, &bt);
+        let bt = transpose_ws(r, n, bd, ws);
+        let dh = mm_ws(rows, n, r, dy, &bt, ws);
+        ws.give(bt);
         // dA(k, r) = x^T @ dh
-        let xt = transpose(rows, k, x);
+        let xt = transpose_ws(rows, k, x, ws);
         grads.acc(pname(prefix, "a"), mm(k, rows, r, &xt, &dh));
+        ws.give(xt);
         // dx(rows, k) = dh @ A^T
-        let at = transpose(k, r, ad);
+        let at = transpose_ws(k, r, ad, ws);
         dx = mm(rows, r, k, &dh, &at);
+        ws.give(at);
+        ws.give(dh);
+        ws.give(h);
     } else {
         bail!("no linear weights (w or a/b) under group {prefix:?}");
     }
@@ -347,6 +396,7 @@ fn attention_fwd(
     heads: usize,
     causal: bool,
     x: &[f32],
+    ws: &mut Workspace,
 ) -> Result<(AttnTape, Vec<f32>)> {
     if heads == 0 || d % heads != 0 {
         bail!("{prefix}: d={d} not divisible by heads={heads}");
@@ -362,11 +412,11 @@ fn attention_fwd(
     let scale = 1.0 / (dk as f32).sqrt();
     let mut ctx = vec![0.0f32; rows * d];
     let mut probs = vec![0.0f32; b * heads * s * s];
-    let mut qh = vec![0.0f32; s * dk];
-    let mut kt = vec![0.0f32; dk * s];
-    let mut vh = vec![0.0f32; s * dk];
-    let mut scores = vec![0.0f32; s * s];
-    let mut oh = vec![0.0f32; s * dk];
+    let mut qh = ws.take_zeroed(s * dk);
+    let mut kt = ws.take_zeroed(dk * s);
+    let mut vh = ws.take_zeroed(s * dk);
+    let mut scores = ws.take_zeroed(s * s);
+    let mut oh = ws.take_zeroed(s * dk);
     for bi in 0..b {
         for h in 0..heads {
             for si in 0..s {
@@ -405,6 +455,11 @@ fn attention_fwd(
     if do_ != d {
         bail!("{prefix}: o-projection output dim {do_} != d {d}");
     }
+    ws.give(qh);
+    ws.give(kt);
+    ws.give(vh);
+    ws.give(scores);
+    ws.give(oh);
     Ok((
         AttnTape {
             q,
@@ -431,18 +486,20 @@ fn attention_bwd(
     x: &[f32],
     dout: &[f32],
     grads: &mut Grads,
+    ws: &mut Workspace,
 ) -> Result<Vec<f32>> {
     let dk = d / heads;
     let rows = b * s;
     let scale = 1.0 / (dk as f32).sqrt();
-    let dctx = linear_bwd(params, &pname(prefix, "o"), rows, d, &tape.ctx, dout, grads)?;
-    let mut dq = vec![0.0f32; rows * d];
-    let mut dkm = vec![0.0f32; rows * d];
-    let mut dv = vec![0.0f32; rows * d];
-    let mut qh = vec![0.0f32; s * dk];
-    let mut kh = vec![0.0f32; s * dk];
-    let mut vh = vec![0.0f32; s * dk];
-    let mut dch = vec![0.0f32; s * dk];
+    let dctx = linear_bwd_ws(params, &pname(prefix, "o"), rows, d, &tape.ctx, dout, grads, ws)?;
+    let mut dq = ws.take_zeroed(rows * d);
+    let mut dkm = ws.take_zeroed(rows * d);
+    let mut dv = ws.take_zeroed(rows * d);
+    let mut qh = ws.take_zeroed(s * dk);
+    let mut kh = ws.take_zeroed(s * dk);
+    let mut vh = ws.take_zeroed(s * dk);
+    let mut dch = ws.take_zeroed(s * dk);
+    let mut dscores = ws.take_zeroed(s * s);
     for bi in 0..b {
         for h in 0..heads {
             for si in 0..s {
@@ -454,15 +511,14 @@ fn attention_bwd(
             }
             let ph = &tape.probs[(bi * heads + h) * s * s..(bi * heads + h + 1) * s * s];
             // dprobs(s, s) = dctx_h @ v_h^T
-            let vt = transpose(s, dk, &vh);
-            let dprobs = mm(s, dk, s, &dch, &vt);
+            let vt = transpose_ws(s, dk, &vh, ws);
+            let dprobs = mm_ws(s, dk, s, &dch, &vt, ws);
             // dv_h(s, dk) = probs^T @ dctx_h
-            let pt = transpose(s, s, ph);
-            let dvh = mm(s, s, dk, &pt, &dch);
+            let pt = transpose_ws(s, s, ph, ws);
+            let dvh = mm_ws(s, s, dk, &pt, &dch, ws);
             // Softmax backward per row; the causal mask needs no special
             // handling — masked probabilities are exactly 0 (exp of a
             // -1e9-shifted logit underflows), so their dscores vanish.
-            let mut dscores = vec![0.0f32; s * s];
             for i in 0..s {
                 let prow = &ph[i * s..(i + 1) * s];
                 let dprow = &dprobs[i * s..(i + 1) * s];
@@ -476,20 +532,32 @@ fn attention_bwd(
                 }
             }
             // dq_h = dscores @ k_h;  dk_h = dscores^T @ q_h
-            let dqh = mm(s, s, dk, &dscores, &kh);
-            let dst_t = transpose(s, s, &dscores);
-            let dkh = mm(s, s, dk, &dst_t, &qh);
+            let dqh = mm_ws(s, s, dk, &dscores, &kh, ws);
+            let dst_t = transpose_ws(s, s, &dscores, ws);
+            let dkh = mm_ws(s, s, dk, &dst_t, &qh, ws);
             for si in 0..s {
                 let dst = (bi * s + si) * d + h * dk;
                 dq[dst..dst + dk].copy_from_slice(&dqh[si * dk..(si + 1) * dk]);
                 dkm[dst..dst + dk].copy_from_slice(&dkh[si * dk..(si + 1) * dk]);
                 dv[dst..dst + dk].copy_from_slice(&dvh[si * dk..(si + 1) * dk]);
             }
+            ws.give(vt);
+            ws.give(dprobs);
+            ws.give(pt);
+            ws.give(dvh);
+            ws.give(dqh);
+            ws.give(dst_t);
+            ws.give(dkh);
         }
     }
-    let mut dx = linear_bwd(params, &pname(prefix, "q"), rows, d, x, &dq, grads)?;
-    add_into(&mut dx, &linear_bwd(params, &pname(prefix, "k"), rows, d, x, &dkm, grads)?);
-    add_into(&mut dx, &linear_bwd(params, &pname(prefix, "v"), rows, d, x, &dv, grads)?);
+    let mut dx = linear_bwd_ws(params, &pname(prefix, "q"), rows, d, x, &dq, grads, ws)?;
+    let dxk = linear_bwd_ws(params, &pname(prefix, "k"), rows, d, x, &dkm, grads, ws)?;
+    add_into(&mut dx, &dxk);
+    let dxv = linear_bwd_ws(params, &pname(prefix, "v"), rows, d, x, &dv, grads, ws)?;
+    add_into(&mut dx, &dxv);
+    for buf in [dq, dkm, dv, qh, kh, vh, dch, dscores, dctx, dxk, dxv] {
+        ws.give(buf);
+    }
     Ok(dx)
 }
 
@@ -520,13 +588,14 @@ fn block_fwd(
     heads: usize,
     causal: bool,
     x: &mut Vec<f32>,
+    ws: &mut Workspace,
 ) -> Result<BlockTape> {
     let rows = b * s;
     let x_in = x.clone();
     let mut xn1 = x.clone();
     layernorm(params, &pname(prefix, "ln1"), d, &mut xn1)?;
     let (attn, attn_out) =
-        attention_fwd(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn1)?;
+        attention_fwd(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn1, ws)?;
     add_into(x, &attn_out);
     let x_mid = x.clone();
     let mut xn2 = x.clone();
@@ -562,16 +631,21 @@ fn block_bwd(
     heads: usize,
     dx_out: &[f32],
     grads: &mut Grads,
+    ws: &mut Workspace,
 ) -> Result<Vec<f32>> {
     let rows = b * s;
     // FFN half: x_out = x_mid + fc2(gelu(fc1(ln2(x_mid))))
-    let dh_act =
-        linear_bwd(params, &pname(prefix, "fc2"), rows, tape.ff, &tape.h_act, dx_out, grads)?;
+    let fc2 = pname(prefix, "fc2");
+    let dh_act = linear_bwd_ws(params, &fc2, rows, tape.ff, &tape.h_act, dx_out, grads, ws)?;
     let dh_pre = gelu_bwd(&tape.h_pre, &dh_act);
-    let dxn2 = linear_bwd(params, &pname(prefix, "fc1"), rows, d, &tape.xn2, &dh_pre, grads)?;
+    ws.give(dh_act);
+    let fc1 = pname(prefix, "fc1");
+    let dxn2 = linear_bwd_ws(params, &fc1, rows, d, &tape.xn2, &dh_pre, grads, ws)?;
     let dln2 = layernorm_bwd(params, &pname(prefix, "ln2"), d, &tape.x_mid, &dxn2, grads)?;
+    ws.give(dxn2);
     let mut dmid = dx_out.to_vec(); // residual branch
     add_into(&mut dmid, &dln2);
+    ws.give(dln2);
     // Attention half: x_mid = x_in + attn(ln1(x_in))
     let dxn1 = attention_bwd(
         params,
@@ -584,10 +658,13 @@ fn block_bwd(
         &tape.xn1,
         &dmid,
         grads,
+        ws,
     )?;
     let dln1 = layernorm_bwd(params, &pname(prefix, "ln1"), d, &tape.x_in, &dxn1, grads)?;
+    ws.give(dxn1);
     let mut dx_in = dmid;
     add_into(&mut dx_in, &dln1);
+    ws.give(dln1);
     Ok(dx_in)
 }
 
@@ -607,11 +684,12 @@ fn trunk_fwd(
     s: usize,
     heads: usize,
     causal: bool,
+    ws: &mut Workspace,
 ) -> Result<TrunkTape> {
     let (d, mut x) = embed(params, tokens, b, s)?;
     let mut blocks = Vec::new();
     for i in 0..num_blocks(params)? {
-        blocks.push(block_fwd(params, &format!("block{i}"), b, s, d, heads, causal, &mut x)?);
+        blocks.push(block_fwd(params, &format!("block{i}"), b, s, d, heads, causal, &mut x, ws)?);
     }
     let x_pre_lnf = x.clone();
     layernorm(params, "ln_f", d, &mut x)?;
@@ -634,11 +712,12 @@ fn trunk_bwd(
     heads: usize,
     dx_out: &[f32],
     grads: &mut Grads,
+    ws: &mut Workspace,
 ) -> Result<()> {
     let d = tape.d;
     let mut dx = layernorm_bwd(params, "ln_f", d, &tape.x_pre_lnf, dx_out, grads)?;
     for (i, block) in tape.blocks.iter().enumerate().rev() {
-        dx = block_bwd(params, &format!("block{i}"), block, b, s, d, heads, &dx, grads)?;
+        dx = block_bwd(params, &format!("block{i}"), block, b, s, d, heads, &dx, grads, ws)?;
     }
     // Embedding: x = table[token] + pos[position]; scatter-add both tables.
     let table = params.get("embed/table").ok_or_else(|| anyhow!("missing embed/table"))?;
@@ -663,6 +742,7 @@ fn trunk_bwd(
 // Model-level loss + gradients
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn classifier_loss_grads(
     params: &ParamStore,
     tokens: &[i32],
@@ -670,8 +750,9 @@ fn classifier_loss_grads(
     b: usize,
     s: usize,
     heads: usize,
+    ws: &mut Workspace,
 ) -> Result<(f32, Grads)> {
-    let tape = trunk_fwd(params, tokens, b, s, heads, false)?;
+    let tape = trunk_fwd(params, tokens, b, s, heads, false, ws)?;
     let d = tape.d;
     // Mean-pool over tokens (same op order as native::classifier_fwd).
     let mut pooled = vec![0.0f32; b * d];
@@ -688,7 +769,7 @@ fn classifier_loss_grads(
     let (classes, logits) = apply_linear(params, "head", b, d, &pooled)?;
     let (loss, dlogits) = softmax_xent(&logits, labels, b, classes)?;
     let mut grads = Grads::default();
-    let dpooled = linear_bwd(params, "head", b, d, &pooled, &dlogits, &mut grads)?;
+    let dpooled = linear_bwd_ws(params, "head", b, d, &pooled, &dlogits, &mut grads, ws)?;
     // Pool backward: every position receives dpooled / s.
     let mut dx = vec![0.0f32; b * s * d];
     for bi in 0..b {
@@ -700,7 +781,7 @@ fn classifier_loss_grads(
             }
         }
     }
-    trunk_bwd(params, tokens, &tape, b, s, heads, &dx, &mut grads)?;
+    trunk_bwd(params, tokens, &tape, b, s, heads, &dx, &mut grads, ws)?;
     Ok((loss, grads))
 }
 
@@ -712,6 +793,7 @@ fn lm_loss_grads(
     b: usize,
     s_full: usize,
     heads: usize,
+    ws: &mut Workspace,
 ) -> Result<(f32, Grads)> {
     if s_full < 2 {
         bail!("LM training needs seq >= 2, got {s_full}");
@@ -725,14 +807,14 @@ fn lm_loss_grads(
             labels.push(tokens[bi * s_full + si + 1]);
         }
     }
-    let tape = trunk_fwd(params, &tokens_in, b, s, heads, true)?;
+    let tape = trunk_fwd(params, &tokens_in, b, s, heads, true, ws)?;
     let d = tape.d;
     let rows = b * s;
     let (vocab, logits) = apply_linear(params, "head", rows, d, &tape.x_out)?;
     let (loss, dlogits) = softmax_xent(&logits, &labels, rows, vocab)?;
     let mut grads = Grads::default();
-    let dx = linear_bwd(params, "head", rows, d, &tape.x_out, &dlogits, &mut grads)?;
-    trunk_bwd(params, &tokens_in, &tape, b, s, heads, &dx, &mut grads)?;
+    let dx = linear_bwd_ws(params, "head", rows, d, &tape.x_out, &dlogits, &mut grads, ws)?;
+    trunk_bwd(params, &tokens_in, &tape, b, s, heads, &dx, &mut grads, ws)?;
     Ok((loss, grads))
 }
 
@@ -829,6 +911,7 @@ fn image_loss_grads(
     params: &ParamStore,
     x: &Tensor,
     labels: &[i32],
+    ws: &mut Workspace,
 ) -> Result<(f32, Grads)> {
     let (b, mut h, mut w, mut c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut cur = x.as_f32()?.to_vec();
@@ -863,9 +946,9 @@ fn image_loss_grads(
     let (loss, dlogits) = softmax_xent(&logits, labels, b, classes)?;
 
     let mut grads = Grads::default();
-    let df1_act = linear_bwd(params, "fc2", b, fc, &f1_act, &dlogits, &mut grads)?;
+    let df1_act = linear_bwd_ws(params, "fc2", b, fc, &f1_act, &dlogits, &mut grads, ws)?;
     let df1_pre = relu_bwd(&f1_pre, &df1_act);
-    let mut dcur = linear_bwd(params, "fc1", b, flat, &flat_in, &df1_pre, &mut grads)?;
+    let mut dcur = linear_bwd_ws(params, "fc1", b, flat, &flat_in, &df1_pre, &mut grads, ws)?;
     for (conv, tape) in ["conv1", "conv2"].into_iter().zip(&tapes).rev() {
         let (th, tw, tc, cout, kh, kw) = tape.dims;
         // Pool backward: route each pooled gradient to its argmax source.
@@ -874,8 +957,16 @@ fn image_loss_grads(
             dy_act[i] += g;
         }
         let dy_pre = relu_bwd(&tape.y_pre, &dy_act);
-        let dcols =
-            linear_bwd(params, conv, b * th * tw, kh * kw * tc, &tape.cols, &dy_pre, &mut grads)?;
+        let dcols = linear_bwd_ws(
+            params,
+            conv,
+            b * th * tw,
+            kh * kw * tc,
+            &tape.cols,
+            &dy_pre,
+            &mut grads,
+            ws,
+        )?;
         dcur = col2im(&dcols, b, th, tw, tc, kh, kw);
     }
     Ok((loss, grads))
@@ -892,6 +983,18 @@ pub fn loss_and_grads(
     graph: &GraphSpec,
     params: &ParamStore,
     batch: &[Tensor],
+) -> Result<(f32, Grads)> {
+    with_thread_ws(|ws| loss_and_grads_ws(graph, params, batch, ws))
+}
+
+/// [`loss_and_grads`] with scratch drawn from `ws`; the training loop
+/// reuses one per-thread workspace across steps so steady-state training
+/// stops hitting the allocator for transposes and per-head scratch.
+fn loss_and_grads_ws(
+    graph: &GraphSpec,
+    params: &ParamStore,
+    batch: &[Tensor],
+    ws: &mut Workspace,
 ) -> Result<(f32, Grads)> {
     if batch.len() != graph.inputs.len() {
         bail!(
@@ -919,7 +1022,7 @@ pub fn loss_and_grads(
             .get(1)
             .ok_or_else(|| anyhow!("image train graph {} needs labels", graph.name))?
             .as_i32()?;
-        return image_loss_grads(params, x, labels);
+        return image_loss_grads(params, x, labels, ws);
     }
     if x.ndim() != 2 {
         bail!("expected (batch, seq) tokens or (b, h, w, c) pixels, got {:?}", x.shape);
@@ -928,9 +1031,9 @@ pub fn loss_and_grads(
     let tokens = x.as_i32()?;
     if batch.len() == 2 {
         let labels = batch[1].as_i32()?;
-        classifier_loss_grads(params, tokens, labels, b, s, heads)
+        classifier_loss_grads(params, tokens, labels, b, s, heads, ws)
     } else {
-        lm_loss_grads(params, tokens, b, s, heads)
+        lm_loss_grads(params, tokens, b, s, heads, ws)
     }
 }
 

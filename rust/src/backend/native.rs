@@ -22,7 +22,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail};
 
+use crate::linalg::gemm::{matmul_bias_into, Activation};
 use crate::linalg::matrix::matmul_into;
+use crate::linalg::workspace::{with_thread_ws, Workspace};
 use crate::model::classify;
 use crate::runtime::{GraphSpec, TensorSpec};
 use crate::tensor::{Dtype, ParamStore, Tensor};
@@ -83,7 +85,7 @@ impl Backend for NativeBackend {
             );
         }
         if x.ndim() == 4 {
-            return Ok(vec![image_fwd(params, x)?]);
+            return with_thread_ws(|ws| Ok(vec![image_fwd(params, x, ws)?]));
         }
         if x.ndim() != 2 {
             bail!("expected (batch, seq) tokens or (b, h, w, c) pixels, got {:?}", x.shape);
@@ -92,13 +94,16 @@ impl Backend for NativeBackend {
         let tokens = x.as_i32()?;
         let heads = heads_for(graph);
         // LM graphs emit per-position logits (B, S, vocab); classifiers pool
-        // to (B, classes).
+        // to (B, classes). Activation buffers come from the calling thread's
+        // workspace, so steady-state serving reuses them across requests.
         let causal = graph.outputs.first().is_some_and(|o| o.shape.len() == 3);
-        let out = if causal {
-            lm_fwd(params, tokens, b, s, heads)?
-        } else {
-            classifier_fwd(params, tokens, b, s, heads)?
-        };
+        let out = with_thread_ws(|ws| {
+            if causal {
+                lm_fwd(params, tokens, b, s, heads, ws)
+            } else {
+                classifier_fwd(params, tokens, b, s, heads, ws)
+            }
+        })?;
         Ok(vec![out])
     }
 
@@ -515,10 +520,101 @@ pub(crate) fn pname(prefix: &str, leaf: &str) -> String {
     }
 }
 
+/// Pre-resolved parameter names of one linear/conv group (`w`, `a`, `b`,
+/// `bias` leaves). Hot paths build these once (per request, or per decode
+/// *session*) so the per-op interpreter loop does zero string formatting.
+#[derive(Clone, Debug)]
+pub(crate) struct LinearNames {
+    /// The group prefix, kept for error messages.
+    pub(crate) prefix: String,
+    w: String,
+    a: String,
+    b: String,
+    bias: String,
+}
+
+impl LinearNames {
+    /// Resolve the leaf names under `prefix`.
+    pub(crate) fn new(prefix: &str) -> Self {
+        LinearNames {
+            prefix: prefix.to_string(),
+            w: pname(prefix, "w"),
+            a: pname(prefix, "a"),
+            b: pname(prefix, "b"),
+            bias: pname(prefix, "bias"),
+        }
+    }
+}
+
+/// Workspace-backed fused linear: `y(rows, n) = act(x(rows, k) @ W + bias)`,
+/// dispatching dense `w` vs LED/CED `a·b` on the keys present (the layers.py
+/// contract). The bias add and activation run inside the GEMM epilogue
+/// (bit-identical to the unfused sequence), factorized layers run as two
+/// GEMMs through the rank bottleneck, and `y` (plus the LED intermediate)
+/// comes from `ws` — callers `give` it back when done, making steady-state
+/// interpretation allocation-free. Returns `(n, y)`.
+pub(crate) fn apply_linear_named(
+    params: &ParamStore,
+    names: &LinearNames,
+    rows: usize,
+    k: usize,
+    x: &[f32],
+    act: Activation,
+    ws: &mut Workspace,
+) -> Result<(usize, Vec<f32>)> {
+    debug_assert_eq!(x.len(), rows * k);
+    let bias = match params.get(&names.bias) {
+        Some(t) => Some(t.as_f32()?),
+        None => None,
+    };
+    let check_bias = |n: usize| -> Result<()> {
+        if let Some(bd) = bias {
+            if bd.len() != n {
+                bail!("{}: bias len {} does not match output dim {n}", names.prefix, bd.len());
+            }
+        }
+        Ok(())
+    };
+    let n;
+    let mut y;
+    if let Some(w) = params.get(&names.w) {
+        let (wk, wn, wd) = w.as_matrix_2d()?;
+        if wk != k {
+            bail!("{}: input dim {k} does not match weight {wk}x{wn}", names.prefix);
+        }
+        n = wn;
+        check_bias(n)?;
+        y = ws.take_zeroed(rows * n);
+        matmul_bias_into(rows, k, n, x, wd, bias, act, &mut y);
+    } else if let (Some(a), Some(b)) = (params.get(&names.a), params.get(&names.b)) {
+        let (ak, r, ad) = a.as_matrix_2d()?;
+        let (br, bn, bd) = b.as_matrix_2d()?;
+        if ak != k || br != r {
+            bail!(
+                "{}: LED factor shapes {ak}x{r} / {br}x{bn} do not chain from dim {k}",
+                names.prefix
+            );
+        }
+        n = bn;
+        check_bias(n)?;
+        let mut h = ws.take_zeroed(rows * r);
+        matmul_into(rows, k, r, x, ad, &mut h);
+        y = ws.take_zeroed(rows * n);
+        matmul_bias_into(rows, r, n, &h, bd, bias, act, &mut y);
+        ws.give(h);
+    } else {
+        bail!("no linear weights (w or a/b) under group {:?}", names.prefix);
+    }
+    Ok((n, y))
+}
+
 /// `y(rows, n) = x(rows, k) @ W + bias`, dispatching dense `w` vs LED/CED
 /// `a·b` on the keys present (the layers.py contract). Factorized layers run
 /// as two GEMMs through the rank bottleneck — the low-rank product is never
 /// materialized. Returns `(n, y)`.
+///
+/// Convenience wrapper over [`apply_linear_named`] with a throwaway
+/// workspace; the interpreters call the workspace-backed form directly.
 pub fn apply_linear(
     params: &ParamStore,
     prefix: &str,
@@ -526,58 +622,30 @@ pub fn apply_linear(
     k: usize,
     x: &[f32],
 ) -> Result<(usize, Vec<f32>)> {
-    debug_assert_eq!(x.len(), rows * k);
-    let mut y;
-    let n;
-    if let Some(w) = params.get(&pname(prefix, "w")) {
-        let (wk, wn, wd) = w.as_matrix_2d()?;
-        if wk != k {
-            bail!("{prefix}: input dim {k} does not match weight {wk}x{wn}");
-        }
-        n = wn;
-        y = vec![0.0f32; rows * n];
-        matmul_into(rows, k, n, x, wd, &mut y);
-    } else if let (Some(a), Some(b)) =
-        (params.get(&pname(prefix, "a")), params.get(&pname(prefix, "b")))
-    {
-        let (ak, r, ad) = a.as_matrix_2d()?;
-        let (br, bn, bd) = b.as_matrix_2d()?;
-        if ak != k || br != r {
-            bail!("{prefix}: LED factor shapes {ak}x{r} / {br}x{bn} do not chain from dim {k}");
-        }
-        n = bn;
-        let mut h = vec![0.0f32; rows * r];
-        matmul_into(rows, k, r, x, ad, &mut h);
-        y = vec![0.0f32; rows * n];
-        matmul_into(rows, r, n, &h, bd, &mut y);
-    } else {
-        bail!("no linear weights (w or a/b) under group {prefix:?}");
-    }
-    if let Some(bias) = params.get(&pname(prefix, "bias")) {
-        let bd = bias.as_f32()?;
-        if bd.len() != n {
-            bail!("{prefix}: bias len {} does not match output dim {n}", bd.len());
-        }
-        for row in y.chunks_exact_mut(n) {
-            for (v, &bv) in row.iter_mut().zip(bd) {
-                *v += bv;
-            }
-        }
-    }
-    Ok((n, y))
+    let names = LinearNames::new(prefix);
+    let mut ws = Workspace::new();
+    apply_linear_named(params, &names, rows, k, x, Activation::None, &mut ws)
 }
 
-pub(crate) fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Result<()> {
+/// LayerNorm with pre-resolved gain/bias parameter names (the decode hot
+/// path resolves them once per session).
+pub(crate) fn layernorm_named(
+    params: &ParamStore,
+    gname: &str,
+    bname: &str,
+    d: usize,
+    x: &mut [f32],
+) -> Result<()> {
     let g = params
-        .get(&pname(prefix, "g"))
-        .ok_or_else(|| anyhow!("missing layernorm gain {prefix:?}"))?
+        .get(gname)
+        .ok_or_else(|| anyhow!("missing layernorm gain {gname:?}"))?
         .as_f32()?;
     let bias = params
-        .get(&pname(prefix, "bias"))
-        .ok_or_else(|| anyhow!("missing layernorm bias {prefix:?}"))?
+        .get(bname)
+        .ok_or_else(|| anyhow!("missing layernorm bias {bname:?}"))?
         .as_f32()?;
     if g.len() != d || bias.len() != d {
-        bail!("{prefix}: layernorm dims {}/{} != {d}", g.len(), bias.len());
+        bail!("{gname}: layernorm dims {}/{} != {d}", g.len(), bias.len());
     }
     const EPS: f32 = 1e-5;
     for row in x.chunks_exact_mut(d) {
@@ -591,21 +659,20 @@ pub(crate) fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f3
     Ok(())
 }
 
-/// tanh-approximated GELU (the JAX default the AOT graphs lower).
+pub(crate) fn layernorm(params: &ParamStore, prefix: &str, d: usize, x: &mut [f32]) -> Result<()> {
+    layernorm_named(params, &pname(prefix, "g"), &pname(prefix, "bias"), d, x)
+}
+
+/// tanh-approximated GELU (the JAX default the AOT graphs lower). Delegates
+/// to the kernel layer's [`crate::linalg::gemm::gelu_slice`] — the same
+/// code the fused epilogue runs, so fused and unfused paths agree bit for
+/// bit.
 pub(crate) fn gelu(x: &mut [f32]) {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    for v in x.iter_mut() {
-        let t = C * (*v + 0.044715 * *v * *v * *v);
-        *v = 0.5 * *v * (1.0 + t.tanh());
-    }
+    crate::linalg::gemm::gelu_slice(x);
 }
 
 pub(crate) fn relu(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
+    crate::linalg::gemm::relu_slice(x);
 }
 
 /// In-place row softmax with max-subtraction.
@@ -633,12 +700,13 @@ pub(crate) fn softmax_rows(x: &mut [f32], cols: usize) {
 // Transformer forward (text classifier + causal LM)
 // ---------------------------------------------------------------------------
 
-/// Token + position embedding: x(b·s, d).
-pub(crate) fn embed(
+/// Token + position embedding: x(b·s, d), with `x` checked out of `ws`.
+pub(crate) fn embed_ws(
     params: &ParamStore,
     tokens: &[i32],
     b: usize,
     s: usize,
+    ws: &mut Workspace,
 ) -> Result<(usize, Vec<f32>)> {
     let table = params
         .get("embed/table")
@@ -652,7 +720,7 @@ pub(crate) fn embed(
         bail!("pos/table {:?} incompatible with seq {s} / d {d}", pos.shape);
     }
     let pd = pos.as_f32()?;
-    let mut x = vec![0.0f32; b * s * d];
+    let mut x = ws.take_zeroed(b * s * d);
     for bi in 0..b {
         for si in 0..s {
             let t = tokens[bi * s + si];
@@ -668,6 +736,18 @@ pub(crate) fn embed(
         }
     }
     Ok((d, x))
+}
+
+/// Token + position embedding: x(b·s, d). Allocating wrapper over
+/// [`embed_ws`] for the training tape, which owns its buffers.
+pub(crate) fn embed(
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+) -> Result<(usize, Vec<f32>)> {
+    let mut ws = Workspace::new();
+    embed_ws(params, tokens, b, s, &mut ws)
 }
 
 /// Count contiguous transformer blocks, erroring if any `block*` parameter
@@ -712,25 +792,50 @@ fn attention(
     heads: usize,
     causal: bool,
     x: &[f32],
+    ws: &mut Workspace,
 ) -> Result<Vec<f32>> {
     if heads == 0 || d % heads != 0 {
         bail!("{prefix}: d={d} not divisible by heads={heads}");
     }
     let dk = d / heads;
     let rows = b * s;
-    let (dq, q) = apply_linear(params, &pname(prefix, "q"), rows, d, x)?;
-    let (dkk, kk) = apply_linear(params, &pname(prefix, "k"), rows, d, x)?;
-    let (dv, v) = apply_linear(params, &pname(prefix, "v"), rows, d, x)?;
+    let (dq, q) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "q")),
+        rows,
+        d,
+        x,
+        Activation::None,
+        ws,
+    )?;
+    let (dkk, kk) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "k")),
+        rows,
+        d,
+        x,
+        Activation::None,
+        ws,
+    )?;
+    let (dv, v) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "v")),
+        rows,
+        d,
+        x,
+        Activation::None,
+        ws,
+    )?;
     if dq != d || dkk != d || dv != d {
         bail!("{prefix}: projection output dims {dq}/{dkk}/{dv} != d {d}");
     }
     let scale = 1.0 / (dk as f32).sqrt();
-    let mut ctx = vec![0.0f32; rows * d];
-    let mut qh = vec![0.0f32; s * dk];
-    let mut kt = vec![0.0f32; dk * s]; // k gathered pre-transposed: (dk, s)
-    let mut vh = vec![0.0f32; s * dk];
-    let mut scores = vec![0.0f32; s * s];
-    let mut oh = vec![0.0f32; s * dk];
+    let mut ctx = ws.take_zeroed(rows * d);
+    let mut qh = ws.take_zeroed(s * dk);
+    let mut kt = ws.take_zeroed(dk * s); // k gathered pre-transposed: (dk, s)
+    let mut vh = ws.take_zeroed(s * dk);
+    let mut scores = ws.take_zeroed(s * s);
+    let mut oh = ws.take_zeroed(s * dk);
     for bi in 0..b {
         for h in 0..heads {
             for si in 0..s {
@@ -765,10 +870,27 @@ fn attention(
             }
         }
     }
-    let (do_, out) = apply_linear(params, &pname(prefix, "o"), rows, d, &ctx)?;
+    let (do_, out) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "o")),
+        rows,
+        d,
+        &ctx,
+        Activation::None,
+        ws,
+    )?;
     if do_ != d {
         bail!("{prefix}: o-projection output dim {do_} != d {d}");
     }
+    ws.give(q);
+    ws.give(kk);
+    ws.give(v);
+    ws.give(ctx);
+    ws.give(qh);
+    ws.give(kt);
+    ws.give(vh);
+    ws.give(scores);
+    ws.give(oh);
     Ok(out)
 }
 
@@ -783,29 +905,51 @@ fn transformer_block(
     heads: usize,
     causal: bool,
     x: &mut [f32],
+    ws: &mut Workspace,
 ) -> Result<()> {
     let rows = b * s;
-    let mut xn = x.to_vec();
+    let mut xn = ws.take_copied(x);
     layernorm(params, &pname(prefix, "ln1"), d, &mut xn)?;
-    let attn = attention(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn)?;
+    let attn = attention(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn, ws)?;
     for (v, a) in x.iter_mut().zip(&attn) {
         *v += a;
     }
-    let mut xn = x.to_vec();
+    ws.give(attn);
+    xn.copy_from_slice(x);
     layernorm(params, &pname(prefix, "ln2"), d, &mut xn)?;
-    let (ff, mut h) = apply_linear(params, &pname(prefix, "fc1"), rows, d, &xn)?;
-    gelu(&mut h);
-    let (d2, y) = apply_linear(params, &pname(prefix, "fc2"), rows, ff, &h)?;
+    // fc1's GELU runs in the GEMM epilogue — no second pass over (rows, ff).
+    let (ff, h) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "fc1")),
+        rows,
+        d,
+        &xn,
+        Activation::Gelu,
+        ws,
+    )?;
+    let (d2, y) = apply_linear_named(
+        params,
+        &LinearNames::new(&pname(prefix, "fc2")),
+        rows,
+        ff,
+        &h,
+        Activation::None,
+        ws,
+    )?;
     if d2 != d {
         bail!("{prefix}: fc2 output dim {d2} != d {d}");
     }
     for (v, a) in x.iter_mut().zip(&y) {
         *v += a;
     }
+    ws.give(h);
+    ws.give(y);
+    ws.give(xn);
     Ok(())
 }
 
-/// Shared trunk: embed, blocks, final layernorm. Returns (d, x(b·s, d)).
+/// Shared trunk: embed, blocks, final layernorm. Returns (d, x(b·s, d))
+/// with `x` checked out of `ws`.
 fn trunk(
     params: &ParamStore,
     tokens: &[i32],
@@ -813,10 +957,11 @@ fn trunk(
     s: usize,
     heads: usize,
     causal: bool,
+    ws: &mut Workspace,
 ) -> Result<(usize, Vec<f32>)> {
-    let (d, mut x) = embed(params, tokens, b, s)?;
+    let (d, mut x) = embed_ws(params, tokens, b, s, ws)?;
     for i in 0..num_blocks(params)? {
-        transformer_block(params, &format!("block{i}"), b, s, d, heads, causal, &mut x)?;
+        transformer_block(params, &format!("block{i}"), b, s, d, heads, causal, &mut x, ws)?;
     }
     layernorm(params, "ln_f", d, &mut x)?;
     Ok((d, x))
@@ -829,9 +974,10 @@ fn classifier_fwd(
     b: usize,
     s: usize,
     heads: usize,
+    ws: &mut Workspace,
 ) -> Result<Tensor> {
-    let (d, x) = trunk(params, tokens, b, s, heads, false)?;
-    let mut pooled = vec![0.0f32; b * d];
+    let (d, x) = trunk(params, tokens, b, s, heads, false, ws)?;
+    let mut pooled = ws.take_zeroed(b * d);
     for bi in 0..b {
         let dst = &mut pooled[bi * d..(bi + 1) * d];
         for si in 0..s {
@@ -845,15 +991,38 @@ fn classifier_fwd(
             *v *= inv;
         }
     }
-    let (classes, logits) = apply_linear(params, "head", b, d, &pooled)?;
-    Ok(Tensor::from_f32(&[b, classes], logits))
+    let (classes, logits) =
+        apply_linear_named(params, &LinearNames::new("head"), b, d, &pooled, Activation::None, ws)?;
+    let out = Tensor::from_f32(&[b, classes], logits.clone());
+    ws.give(logits);
+    ws.give(pooled);
+    ws.give(x);
+    Ok(out)
 }
 
 /// Causal LM: per-position next-token logits (b, s, vocab).
-fn lm_fwd(params: &ParamStore, tokens: &[i32], b: usize, s: usize, heads: usize) -> Result<Tensor> {
-    let (d, x) = trunk(params, tokens, b, s, heads, true)?;
-    let (vocab, logits) = apply_linear(params, "head", b * s, d, &x)?;
-    Ok(Tensor::from_f32(&[b, s, vocab], logits))
+fn lm_fwd(
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    heads: usize,
+    ws: &mut Workspace,
+) -> Result<Tensor> {
+    let (d, x) = trunk(params, tokens, b, s, heads, true, ws)?;
+    let (vocab, logits) = apply_linear_named(
+        params,
+        &LinearNames::new("head"),
+        b * s,
+        d,
+        &x,
+        Activation::None,
+        ws,
+    )?;
+    let out = Tensor::from_f32(&[b, s, vocab], logits.clone());
+    ws.give(logits);
+    ws.give(x);
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -861,8 +1030,10 @@ fn lm_fwd(params: &ParamStore, tokens: &[i32], b: usize, s: usize, heads: usize)
 // ---------------------------------------------------------------------------
 
 /// SAME-padded stride-1 im2col: (b·h·w, kh·kw·c) patches in HWIO column
-/// order, matching the collapsed conv weight layout of `as_matrix_2d`.
-pub(crate) fn im2col(
+/// order, matching the collapsed conv weight layout of `as_matrix_2d`, with
+/// the patch buffer checked out of `ws`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn im2col_ws(
     x: &[f32],
     b: usize,
     h: usize,
@@ -870,10 +1041,12 @@ pub(crate) fn im2col(
     c: usize,
     kh: usize,
     kw: usize,
+    ws: &mut Workspace,
 ) -> Vec<f32> {
     let (ph, pw) = (kh / 2, kw / 2);
     let cols = kh * kw * c;
-    let mut out = vec![0.0f32; b * h * w * cols];
+    // Zero-filled: padding taps are simply never written.
+    let mut out = ws.take_zeroed(b * h * w * cols);
     for bi in 0..b {
         for y in 0..h {
             for xx in 0..w {
@@ -899,13 +1072,34 @@ pub(crate) fn im2col(
     out
 }
 
+/// Allocating [`im2col_ws`] wrapper for the training tape and tests.
+pub(crate) fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let mut ws = Workspace::new();
+    im2col_ws(x, b, h, w, c, kh, kw, &mut ws)
+}
+
 /// 2×2 max pool over (b, h, w, c) row-major data. Requires even h, w.
-fn maxpool2(x: &[f32], b: usize, h: usize, w: usize, c: usize) -> Result<(usize, usize, Vec<f32>)> {
+fn maxpool2(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ws: &mut Workspace,
+) -> Result<(usize, usize, Vec<f32>)> {
     if h % 2 != 0 || w % 2 != 0 {
         bail!("maxpool2 needs even spatial dims, got {h}x{w}");
     }
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![0.0f32; b * oh * ow * c];
+    let mut out = ws.take_zeroed(b * oh * ow * c);
     for bi in 0..b {
         for y in 0..oh {
             for xx in 0..ow {
@@ -938,19 +1132,30 @@ pub(crate) fn conv_kernel(params: &ParamStore, prefix: &str) -> Result<(usize, u
 
 /// CNN classifier: conv1 → relu → pool → conv2 → relu → pool → fc1 → relu →
 /// fc2 (the `image` model of the zoo). CED conv layers execute as
-/// im2col · a2d · b2d — two GEMMs through the rank bottleneck.
-fn image_fwd(params: &ParamStore, x: &Tensor) -> Result<Tensor> {
+/// im2col · a2d · b2d — two GEMMs through the rank bottleneck; the ReLUs
+/// run in the conv/fc GEMM epilogues.
+fn image_fwd(params: &ParamStore, x: &Tensor, ws: &mut Workspace) -> Result<Tensor> {
     let (b, mut h, mut w, mut c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let mut cur = x.as_f32()?.to_vec();
+    let mut cur = ws.take_copied(x.as_f32()?);
     for conv in ["conv1", "conv2"] {
         let (kh, kw, cin) = conv_kernel(params, conv)?;
         if cin != c {
             bail!("{conv}: input channels {c} != weight cin {cin}");
         }
-        let cols = im2col(&cur, b, h, w, c, kh, kw);
-        let (cout, mut y) = apply_linear(params, conv, b * h * w, kh * kw * c, &cols)?;
-        relu(&mut y);
-        let (oh, ow, pooled) = maxpool2(&y, b, h, w, cout)?;
+        let cols = im2col_ws(&cur, b, h, w, c, kh, kw, ws);
+        let (cout, y) = apply_linear_named(
+            params,
+            &LinearNames::new(conv),
+            b * h * w,
+            kh * kw * c,
+            &cols,
+            Activation::Relu,
+            ws,
+        )?;
+        let (oh, ow, pooled) = maxpool2(&y, b, h, w, cout, ws)?;
+        ws.give(cur);
+        ws.give(cols);
+        ws.give(y);
         cur = pooled;
         h = oh;
         w = ow;
@@ -958,10 +1163,15 @@ fn image_fwd(params: &ParamStore, x: &Tensor) -> Result<Tensor> {
     }
     // (b, h, w, c) row-major flattens directly to (b, h·w·c).
     let flat = h * w * c;
-    let (fc, mut f1) = apply_linear(params, "fc1", b, flat, &cur)?;
-    relu(&mut f1);
-    let (classes, logits) = apply_linear(params, "fc2", b, fc, &f1)?;
-    Ok(Tensor::from_f32(&[b, classes], logits))
+    let (fc, f1) =
+        apply_linear_named(params, &LinearNames::new("fc1"), b, flat, &cur, Activation::Relu, ws)?;
+    let (classes, logits) =
+        apply_linear_named(params, &LinearNames::new("fc2"), b, fc, &f1, Activation::None, ws)?;
+    let out = Tensor::from_f32(&[b, classes], logits.clone());
+    ws.give(logits);
+    ws.give(f1);
+    ws.give(cur);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1190,11 +1400,12 @@ mod tests {
 
     #[test]
     fn maxpool_and_im2col_basics() {
+        let mut ws = Workspace::new();
         // 1x2x2x1 pool picks the max.
-        let (oh, ow, p) = maxpool2(&[1.0, 3.0, 2.0, 0.5], 1, 2, 2, 1).unwrap();
+        let (oh, ow, p) = maxpool2(&[1.0, 3.0, 2.0, 0.5], 1, 2, 2, 1, &mut ws).unwrap();
         assert_eq!((oh, ow), (1, 1));
         assert_eq!(p, vec![3.0]);
-        assert!(maxpool2(&[0.0; 3], 1, 3, 1, 1).is_err());
+        assert!(maxpool2(&[0.0; 3], 1, 3, 1, 1, &mut ws).is_err());
         // im2col of a 1x1 image with 3x3 kernel: center tap only.
         let cols = im2col(&[5.0], 1, 1, 1, 1, 3, 3);
         assert_eq!(cols.len(), 9);

@@ -3,8 +3,9 @@
 //! We cannot execute Mosaic kernels on CPU, so TPU performance is *estimated*
 //! from the kernel's structure: per-program VMEM footprint (must fit the
 //! 16 MiB budget) and MXU utilization (how full the 128×128 systolic tiles
-//! are for the two skinny GEMMs LED emits). These numbers are reported in
-//! EXPERIMENTS.md §Perf next to the measured CPU wall-clock ratios.
+//! are for the two skinny GEMMs LED emits). These numbers are printed by
+//! `benches/kernel_speedup.rs` next to the measured CPU wall-clock ratios
+//! (see DESIGN.md §4 and §11).
 
 /// VMEM per core on the modeled TPU (v4-class), bytes.
 pub const VMEM_BUDGET: usize = 16 * 1024 * 1024;

@@ -21,8 +21,10 @@
 //! Layer map (see DESIGN.md):
 //! * [`factorize`] — the paper's contribution: `auto_fact`, LED/CED
 //!   replacement, rank policy (Eq. 1), solver dispatch, submodule filtering.
-//! * [`linalg`] — from-scratch numerical substrate: blocked parallel matmul,
-//!   Householder QR, one-sided Jacobi SVD, randomized SVD, Semi-NMF.
+//! * [`linalg`] — from-scratch numerical substrate: packed SIMD-tiled GEMM
+//!   + column-split GEMV with fused epilogues over a persistent worker
+//!   pool, workspace arenas, Householder QR, one-sided Jacobi SVD,
+//!   randomized SVD, Semi-NMF.
 //! * [`tensor`] — tensor container + the GTZ checkpoint format shared with
 //!   the Python build path.
 //! * [`model`] — module-tree reconstruction from parameter names; per-layer

@@ -1,0 +1,489 @@
+//! Packed, cache-tiled GEMM / GEMV kernels with fused epilogues.
+//!
+//! This is the dense compute core every solver, interpreter and gradient
+//! pass runs on. Three kernels sit behind one dispatch:
+//!
+//! * **Packed GEMM** — BLIS-style `NC`/`KC`/`MC` cache blocking around an
+//!   `MR×NR = 8×8` register microkernel. A- and B-panels are packed into
+//!   contiguous, zero-padded buffers (reused across row blocks and calls
+//!   via thread-local scratch), so the microkernel's inner loop is pure
+//!   contiguous loads + 8-wide multiply-adds that LLVM vectorizes.
+//! * **Column-split GEMV** — the `m = 1` case (every per-token decode
+//!   matmul) cannot be row-parallelized; it is split over output columns
+//!   across the [`super::pool`] workers instead.
+//! * **Fused epilogues** — [`matmul_bias_into`] adds the bias row and
+//!   applies an optional activation while the output tile is still hot,
+//!   removing the separate read-modify-write passes the interpreters used
+//!   to make over every activation buffer.
+//!
+//! # Accumulation-order compatibility
+//!
+//! Every path — reference, packed, GEMV, serial or pooled, any tile size —
+//! accumulates each output element through a *single* f32 accumulator chain
+//! in ascending k order: `((out + a₀·b₀) + a₁·b₁) + …`. k-blocking only
+//! round-trips the running sum through memory (exact for f32), row/column
+//! splits never touch the k order, and the epilogue runs strictly after the
+//! full sum, exactly where the unfused bias/activation passes ran. The
+//! result is **bit-identical** across every dispatch boundary — the
+//! property `tests/proptest_linalg.rs` pins against
+//! [`matmul_into_reference`] and the property the KV-cache decode path
+//! (DESIGN.md §10) and the golden training curves rely on.
+
+use std::cell::RefCell;
+
+use super::pool;
+
+/// Register microkernel tile rows.
+const MR: usize = 8;
+/// Register microkernel tile columns (one 8-wide SIMD vector of f32).
+const NR: usize = 8;
+/// k-dimension cache block: one packed B panel spans `KC` rows.
+const KC: usize = 256;
+/// Row cache block: one packed A panel spans up to `MC` rows.
+const MC: usize = 64;
+/// Column cache block: B panels cover `NC` columns per pass.
+const NC: usize = 1024;
+
+/// Below this many multiply-adds the packing overhead loses to the plain
+/// serial loop.
+const PACKED_MIN_MACS: usize = 1 << 15;
+/// Below this many multiply-adds a GEMM runs on one thread.
+const GEMM_PARALLEL_MIN_MACS: usize = 1 << 19;
+/// Below this many multiply-adds a GEMV runs on one thread.
+const GEMV_PARALLEL_MIN_MACS: usize = 100_000;
+/// Minimum columns per GEMV shard (keeps per-task work vectorizable).
+const GEMV_MIN_COLS_PER_TASK: usize = 64;
+
+/// Activation fused into the GEMM epilogue by [`matmul_bias_into`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Activation {
+    /// No activation.
+    #[default]
+    None,
+    /// tanh-approximated GELU (same formula as the JAX graphs).
+    Gelu,
+    /// max(0, x).
+    Relu,
+}
+
+/// tanh-approximated GELU in place (the JAX default the AOT graphs lower).
+/// Single source of truth: the interpreters and the fused epilogue both
+/// call this, so fused vs unfused execution is bit-identical.
+pub fn gelu_slice(x: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let t = C * (*v + 0.044715 * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + t.tanh());
+    }
+}
+
+/// ReLU in place.
+pub fn relu_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `out(m,n) += a(m,k) @ b(k,n)`, all row-major. Parallel packed GEMM (or
+/// column-split GEMV when `m == 1`); numerically identical to
+/// [`matmul_into_reference`] bit for bit.
+pub fn matmul_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    matmul_bias_into(m, k, n, a, b, None, Activation::None, out);
+}
+
+/// `out(m,n) = act(out + a(m,k) @ b(k,n) + bias)` with the bias add and
+/// activation fused into the kernel's final pass over each output tile.
+///
+/// `bias` (length `n`, broadcast over rows) and `act` apply strictly after
+/// the complete k-sum of each element — the same value the unfused
+/// GEMM-then-bias-then-activation sequence produces, bit for bit. With
+/// `bias = None` and `Activation::None` this is exactly [`matmul_into`].
+/// `out` still participates as the accumulator base, so pass a zeroed
+/// buffer for plain `y = act(x·W + b)` semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bias_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k, "gemm: a length");
+    debug_assert_eq!(b.len(), k * n, "gemm: b length");
+    debug_assert_eq!(out.len(), m * n, "gemm: out length");
+    if let Some(bias) = bias {
+        debug_assert_eq!(bias.len(), n, "gemm: bias length");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Nothing to accumulate; the epilogue still applies.
+        for row in out.chunks_exact_mut(n) {
+            apply_epilogue(row, bias, act);
+        }
+        return;
+    }
+    if m == 1 {
+        gemv(k, n, a, b, bias, act, out);
+        return;
+    }
+    let macs = m * k * n;
+    if macs < PACKED_MIN_MACS {
+        matmul_into_reference(m, k, n, a, b, out);
+        for row in out.chunks_exact_mut(n) {
+            apply_epilogue(row, bias, act);
+        }
+        return;
+    }
+    let width = pool::parallelism();
+    if macs < GEMM_PARALLEL_MIN_MACS || width <= 1 {
+        packed_gemm_serial(m, k, n, a, b, bias, act, out);
+        return;
+    }
+    // Shard rows across the pool, MR-aligned so shards tile cleanly. Each
+    // shard packs its own B panels (thread-local scratch): redundant work of
+    // O(k·n) copies per shard against O(m·k·n / shards) MACs each, accepted
+    // to keep tasks fully independent — sharing one packed B across shards
+    // needs cross-task synchronization the single-job pool deliberately
+    // avoids. Revisit if shard counts grow past ~16.
+    let n_tasks = width.min(m.div_ceil(MR));
+    let rows_per = m.div_ceil(n_tasks).div_ceil(MR) * MR;
+    let n_tasks = m.div_ceil(rows_per);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool::run(n_tasks, &|t| {
+        let r0 = t * rows_per;
+        let r1 = (r0 + rows_per).min(m);
+        let a_sub = &a[r0 * k..r1 * k];
+        // SAFETY: tasks own disjoint row ranges [r0, r1) of `out`.
+        let o_sub = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
+        packed_gemm_serial(r1 - r0, k, n, a_sub, b, bias, act, o_sub);
+    });
+}
+
+/// The legacy serial i-k-j kernel (pre-PR-5 `matmul_rows`, minus the dead
+/// `a != 0` branch that defeated vectorization on dense inputs). Kept as
+/// the measured baseline for `benches/kernel_speedup.rs` and as the parity
+/// oracle for `tests/proptest_linalg.rs`; not used on any hot path above
+/// the small-problem cutoff.
+pub fn matmul_into_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Bias + activation over one finished output row (or row fragment, with
+/// `bias` pre-sliced to match).
+fn apply_epilogue(row: &mut [f32], bias: Option<&[f32]>, act: Activation) {
+    if let Some(bias) = bias {
+        debug_assert_eq!(row.len(), bias.len());
+        for (v, &bv) in row.iter_mut().zip(bias) {
+            *v += bv;
+        }
+    }
+    match act {
+        Activation::None => {}
+        Activation::Gelu => gelu_slice(row),
+        Activation::Relu => relu_slice(row),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMV (m = 1): column-split parallel
+// ---------------------------------------------------------------------------
+
+/// `out(n) += a(k) @ b(k,n)` over columns `[j0, j1)`; `out` holds exactly
+/// that range. k-outer order streams `b`'s rows contiguously (vectorized),
+/// and each element keeps the ascending-k single-accumulator chain.
+fn gemv_range(k: usize, n: usize, j0: usize, j1: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), j1 - j0);
+    debug_assert_eq!(a.len(), k);
+    for (p, &av) in a.iter().enumerate() {
+        let brow = &b[p * n + j0..p * n + j1];
+        for (o, &bv) in out.iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+    }
+}
+
+fn gemv(
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    let macs = k * n;
+    let width = pool::parallelism();
+    if macs < GEMV_PARALLEL_MIN_MACS || width <= 1 || n < 2 * GEMV_MIN_COLS_PER_TASK {
+        gemv_range(k, n, 0, n, a, b, out);
+        apply_epilogue(out, bias, act);
+        return;
+    }
+    let n_tasks = width.min(n / GEMV_MIN_COLS_PER_TASK).max(1);
+    let cols_per = n.div_ceil(n_tasks);
+    let n_tasks = n.div_ceil(cols_per);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool::run(n_tasks, &|t| {
+        let j0 = t * cols_per;
+        let j1 = (j0 + cols_per).min(n);
+        // SAFETY: tasks own disjoint column ranges [j0, j1) of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(optr.0.add(j0), j1 - j0) };
+        gemv_range(k, n, j0, j1, a, b, o);
+        apply_epilogue(o, bias.map(|bs| &bs[j0..j1]), act);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Packed GEMM
+// ---------------------------------------------------------------------------
+
+/// Raw `*mut f32` that tasks offset into disjoint regions.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: every use derives non-overlapping sub-slices per task.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+thread_local! {
+    /// Per-thread packing scratch `(apack, bpack)`, reused across calls so
+    /// steady-state GEMMs do zero heap allocation.
+    static PACK_BUFS: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Serial packed GEMM over the caller's row range. Loop nest (outside in):
+/// `jc` over `NC` column blocks, `pc` over `KC` k blocks (B packed once per
+/// `(jc, pc)` and reused across every row block), `ic` over `MC` row blocks
+/// (A packed per `(ic, pc)`), then `NR`-wide B micro-panels × `MR`-tall A
+/// micro-panels into the register tile. The epilogue is applied to each
+/// tile on the final k block, while it is still in registers.
+#[allow(clippy::too_many_arguments)]
+fn packed_gemm_serial(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    PACK_BUFS.with(|cell| {
+        let mut bufs = cell.borrow_mut();
+        let (apack, bpack) = &mut *bufs;
+        let kc_blocks = k.div_ceil(KC);
+        for jc in (0..n).step_by(NC) {
+            let ncb = NC.min(n - jc);
+            let n_jp = ncb.div_ceil(NR);
+            for (kb, pc) in (0..k).step_by(KC).enumerate() {
+                let kcb = KC.min(k - pc);
+                let last_k = kb == kc_blocks - 1;
+                pack_b(b, n, pc, kcb, jc, ncb, bpack);
+                for ic in (0..m).step_by(MC) {
+                    let mcb = MC.min(m - ic);
+                    let n_ip = mcb.div_ceil(MR);
+                    pack_a(a, k, pc, kcb, ic, mcb, apack);
+                    for jp in 0..n_jp {
+                        let jr = jp * NR;
+                        let nr = NR.min(ncb - jr);
+                        let bpanel = &bpack[jp * kcb * NR..(jp + 1) * kcb * NR];
+                        for ip in 0..n_ip {
+                            let ir = ip * MR;
+                            let mr = MR.min(mcb - ir);
+                            let apanel = &apack[ip * kcb * MR..(ip + 1) * kcb * MR];
+                            micro_tile(
+                                kcb,
+                                apanel,
+                                bpanel,
+                                out,
+                                n,
+                                ic + ir,
+                                jc + jr,
+                                mr,
+                                nr,
+                                last_k,
+                                bias,
+                                act,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack `b[pc..pc+kcb, jc..jc+ncb]` into `NR`-wide column micro-panels
+/// (`panel[p*NR + c]`), zero-padding the final partial panel so the
+/// microkernel never branches on width.
+fn pack_b(b: &[f32], n: usize, pc: usize, kcb: usize, jc: usize, ncb: usize, bpack: &mut Vec<f32>) {
+    let n_jp = ncb.div_ceil(NR);
+    bpack.clear();
+    bpack.resize(n_jp * kcb * NR, 0.0);
+    for p in 0..kcb {
+        let brow = &b[(pc + p) * n + jc..(pc + p) * n + jc + ncb];
+        for jp in 0..n_jp {
+            let jr = jp * NR;
+            let nr = NR.min(ncb - jr);
+            let dst = (jp * kcb + p) * NR;
+            bpack[dst..dst + nr].copy_from_slice(&brow[jr..jr + nr]);
+        }
+    }
+}
+
+/// Pack `a[ic..ic+mcb, pc..pc+kcb]` into `MR`-tall row micro-panels
+/// transposed to k-major (`panel[p*MR + r]`), zero-padding the final
+/// partial panel. Padded rows multiply real B values by 0.0 into lanes the
+/// store mask discards, so they never touch live output.
+fn pack_a(a: &[f32], k: usize, pc: usize, kcb: usize, ic: usize, mcb: usize, apack: &mut Vec<f32>) {
+    let n_ip = mcb.div_ceil(MR);
+    apack.clear();
+    apack.resize(n_ip * kcb * MR, 0.0);
+    for ip in 0..n_ip {
+        let ir = ip * MR;
+        let mr = MR.min(mcb - ir);
+        for r in 0..mr {
+            let arow = &a[(ic + ir + r) * k + pc..(ic + ir + r) * k + pc + kcb];
+            let base = ip * kcb * MR + r;
+            for (p, &v) in arow.iter().enumerate() {
+                apack[base + p * MR] = v;
+            }
+        }
+    }
+}
+
+/// One `MR×NR` register tile: load the live `mr×nr` region of `out` into
+/// the tile (padded lanes zero), run the microkernel over the packed
+/// panels, then store the live region back — applying the fused epilogue
+/// if this was the final k block.
+#[allow(clippy::too_many_arguments)]
+fn micro_tile(
+    kcb: usize,
+    apanel: &[f32],
+    bpanel: &[f32],
+    out: &mut [f32],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+    mr: usize,
+    nr: usize,
+    last_k: bool,
+    bias: Option<&[f32]>,
+    act: Activation,
+) {
+    let mut tile = [0.0f32; MR * NR];
+    for r in 0..mr {
+        let src = &out[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + nr];
+        tile[r * NR..r * NR + nr].copy_from_slice(src);
+    }
+    microkernel(kcb, apanel, bpanel, &mut tile);
+    for r in 0..mr {
+        let dst = &mut out[(row0 + r) * ldc + col0..(row0 + r) * ldc + col0 + nr];
+        dst.copy_from_slice(&tile[r * NR..r * NR + nr]);
+        if last_k {
+            apply_epilogue(dst, bias.map(|bs| &bs[col0..col0 + nr]), act);
+        }
+    }
+}
+
+/// The register microkernel: `tile(MR,NR) += apanel ᵀ-major @ bpanel`. For
+/// each k step it broadcasts `MR` A values against one `NR`-wide B vector —
+/// fixed-size array rows that LLVM keeps in SIMD registers and lowers to
+/// 8-wide multiply-add sequences.
+#[inline(always)]
+fn microkernel(kcb: usize, apanel: &[f32], bpanel: &[f32], tile: &mut [f32; MR * NR]) {
+    debug_assert!(apanel.len() >= kcb * MR);
+    debug_assert!(bpanel.len() >= kcb * NR);
+    for p in 0..kcb {
+        let av: &[f32; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[f32; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
+        for (r, &ar) in av.iter().enumerate() {
+            let trow = &mut tile[r * NR..r * NR + NR];
+            for (t, &bb) in trow.iter_mut().zip(bv) {
+                *t += ar * bb;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randv(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: {x} vs {y}");
+        }
+    }
+
+    // Module-level smoke only: the exhaustive bitwise parity matrix
+    // (adversarial shapes, GEMV serial + parallel, fused epilogues,
+    // concurrent submitters) lives in tests/proptest_linalg.rs.
+
+    #[test]
+    fn packed_matches_reference_bitwise() {
+        let mut rng = Pcg64::seeded(11);
+        for (m, k, n) in [(2, 3, 5), (13, 29, 31), (65, 257, 129)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            // Non-zero initial out pins the += accumulate semantics too.
+            let init = randv(&mut rng, m * n);
+            let mut got = init.clone();
+            let mut want = init.clone();
+            matmul_into(m, k, n, &a, &b, &mut got);
+            matmul_into_reference(m, k, n, &a, &b, &mut want);
+            assert_bits_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn k_zero_is_epilogue_only() {
+        let mut out = vec![1.0f32, -2.0, 3.0, -4.0];
+        matmul_into(2, 0, 2, &[], &[], &mut out);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, -4.0]);
+        let bias = [0.5f32, 0.5];
+        matmul_bias_into(2, 0, 2, &[], &[], Some(&bias), Activation::Relu, &mut out);
+        assert_eq!(out, vec![1.5, 0.0, 3.5, 0.0]);
+    }
+
+    #[test]
+    fn parallel_path_matches_reference_bitwise() {
+        // Big enough to cross GEMM_PARALLEL_MIN_MACS.
+        let mut rng = Pcg64::seeded(14);
+        let (m, k, n) = (96, 130, 120);
+        assert!(m * k * n >= GEMM_PARALLEL_MIN_MACS);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        matmul_into(m, k, n, &a, &b, &mut got);
+        matmul_into_reference(m, k, n, &a, &b, &mut want);
+        assert_bits_eq(&got, &want);
+    }
+}

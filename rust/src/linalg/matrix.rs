@@ -1,14 +1,17 @@
-//! Row-major dense matrix with a blocked, multithreaded GEMM.
+//! Row-major dense matrix over the [`super::gemm`] kernel layer.
 //!
 //! The GEMM is the hot path of every solver (and of the `table_solvers` /
-//! `kernel_speedup` benches): i-k-j loop order over B-transposed-free layout
-//! with 64-wide j-blocks keeps the inner loop vectorizable by LLVM, and row
-//! blocks are distributed over `std::thread::scope` workers above a size
-//! threshold. See EXPERIMENTS.md §Perf for the measured roofline.
+//! `kernel_speedup` benches). Since PR 5 the heavy lifting lives in
+//! [`super::gemm`]: a packed, cache-tiled, pool-parallel kernel with a
+//! column-split GEMV for the `m = 1` case — `Matrix::matmul`,
+//! `matmul_tn` and `matmul_nt` all route through it. See DESIGN.md §11
+//! for the kernel design and the measured roofline.
 
 use std::fmt;
 
 use crate::util::Pcg64;
+
+pub use super::gemm::matmul_into;
 
 #[derive(Clone, PartialEq)]
 /// Row-major f32 matrix — the substrate every solver computes on.
@@ -26,9 +29,6 @@ impl fmt::Debug for Matrix {
         write!(f, "Matrix({}x{})", self.rows, self.cols)
     }
 }
-
-/// Below this many scalar multiply-adds, threading overhead dominates.
-const PARALLEL_FLOP_THRESHOLD: usize = 1 << 21;
 
 impl Matrix {
     /// All-zero matrix.
@@ -147,106 +147,21 @@ impl Matrix {
         out
     }
 
-    /// C = A^T @ B without materializing A^T.
+    /// C = A^T @ B. Materializes the (cache-blocked) transpose of A and
+    /// runs the packed parallel GEMM — per output element the k-sum is the
+    /// same ascending-order chain the old fused loop produced, so results
+    /// are unchanged while gradient/attention-path transposed products now
+    /// parallelize like every other GEMM.
     pub fn matmul_tn(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
-        let (m, k, n) = (self.cols, self.rows, b.cols);
-        let mut out = Matrix::zeros(m, n);
-        // out[i][j] = sum_p a[p][i] * b[p][j] — i-p-j order keeps b row-contiguous.
-        for p in 0..k {
-            let arow = self.row(p);
-            let brow = b.row(p);
-            for i in 0..m {
-                let a = arow[i];
-                if a != 0.0 {
-                    let orow = &mut out.data[i * n..(i + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += a * bv;
-                    }
-                }
-            }
-        }
-        out
+        self.transpose().matmul(b)
     }
 
-    /// C = A @ B^T without materializing B^T.
+    /// C = A @ B^T. Same strategy as [`Matrix::matmul_tn`]: one blocked
+    /// transpose, then the packed parallel GEMM.
     pub fn matmul_nt(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_nt shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (a, bb) in arow.iter().zip(brow) {
-                    acc += a * bb;
-                }
-                orow[j] = acc;
-            }
-        }
-        out
-    }
-}
-
-/// Core GEMM: out(m,n) += a(m,k) @ b(k,n), all row-major, out zero on entry.
-///
-/// i-k-j ordering: the inner j loop streams both `b`'s row and `out`'s row
-/// contiguously, which LLVM auto-vectorizes. Row-blocks are sharded across
-/// threads when the problem is big enough to amortize spawn cost.
-pub fn matmul_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-
-    let flops = m * k * n;
-    let threads = if flops < PARALLEL_FLOP_THRESHOLD {
-        1
-    } else {
-        std::thread::available_parallelism().map_or(1, |p| p.get()).min(m.max(1))
-    };
-
-    if threads <= 1 {
-        matmul_rows(0, m, k, n, a, b, out);
-        return;
-    }
-
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        // Split `out` into disjoint row chunks; each worker owns its slice.
-        let mut rest = out;
-        let mut handles = Vec::new();
-        let mut start = 0usize;
-        while start < m {
-            let rows = rows_per.min(m - start);
-            let taken = std::mem::take(&mut rest);
-            let (chunk, tail) = taken.split_at_mut(rows * n);
-            rest = tail;
-            let a_chunk = &a[start * k..(start + rows) * k];
-            handles.push(scope.spawn(move || {
-                matmul_rows(0, rows, k, n, a_chunk, b, chunk);
-            }));
-            start += rows;
-        }
-        for h in handles {
-            h.join().expect("gemm worker panicked");
-        }
-    });
-}
-
-fn matmul_rows(i0: usize, i1: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32]) {
-    for i in i0..i1 {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av != 0.0 {
-                let brow = &b[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
+        self.matmul(&b.transpose())
     }
 }
 
@@ -288,7 +203,7 @@ mod tests {
     #[test]
     fn matmul_parallel_path_matches() {
         let mut rng = Pcg64::seeded(2);
-        // big enough to cross PARALLEL_FLOP_THRESHOLD
+        // big enough to cross the pool-parallel dispatch threshold
         let a = Matrix::randn(256, 128, 1.0, &mut rng);
         let b = Matrix::randn(128, 256, 1.0, &mut rng);
         assert_close(&a.matmul(&b), &naive_matmul(&a, &b), 1e-3);

@@ -3,7 +3,14 @@
 //! The post-training factorization path runs entirely in Rust, so the three
 //! Greenformer solvers need a numerical core:
 //!
-//! * [`matrix`] — row-major `Matrix`, blocked + multithreaded GEMM,
+//! * [`gemm`] — the kernel layer: packed, cache-tiled GEMM with an 8×8
+//!   register microkernel, column-split parallel GEMV for the batch-1
+//!   decode step, and fused bias/GELU/ReLU epilogues (DESIGN.md §11).
+//! * [`pool`] — lazily-initialized persistent worker pool the parallel
+//!   kernels dispatch on (replaces per-call thread spawn/join).
+//! * [`workspace`] — checkout/checkin scratch arena the interpreters
+//!   thread through their hot paths for zero steady-state allocation.
+//! * [`matrix`] — row-major `Matrix` over the [`gemm`] kernels,
 //!   transposes, norms.
 //! * [`qr`] — Householder thin QR (orthonormal bases for the randomized
 //!   range finder).
@@ -19,15 +26,20 @@
 //! mirror `python/tests/test_solvers.py`; property tests live with each
 //! module and in `rust/tests/proptest_linalg.rs`.
 
+pub mod gemm;
 pub mod matrix;
+pub mod pool;
 pub mod qr;
 pub mod rsvd;
 pub mod snmf;
 pub mod solve;
 pub mod svd;
+pub mod workspace;
 
+pub use gemm::{matmul_bias_into, matmul_into, matmul_into_reference, Activation};
 pub use matrix::Matrix;
 pub use qr::thin_qr;
+pub use workspace::Workspace;
 pub use rsvd::randomized_svd;
 pub use snmf::snmf_factorize;
 pub use svd::{factors_from_svd, jacobi_svd, svd_factorize, Svd};

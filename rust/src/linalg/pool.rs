@@ -1,0 +1,324 @@
+//! Lazily-initialized persistent worker pool for the parallel kernels.
+//!
+//! The pre-PR-5 GEMM spawned and joined OS threads on *every* call
+//! (`std::thread::scope`), which put a ~100 µs floor under every parallel
+//! matmul and made fine-grained parallelism (the batch-1 decode GEMV) a
+//! guaranteed loss. This pool spawns `available_parallelism() - 1` workers
+//! once, on first use, and then dispatches jobs with a condvar wake — cheap
+//! enough that kernels in the 100 µs range profit from splitting.
+//!
+//! Design (see DESIGN.md §11):
+//!
+//! * **One job at a time.** A job is a lifetime-erased `&dyn Fn(usize)`
+//!   task closure plus a task count. Workers and the submitting thread
+//!   drain a shared atomic task counter, so load-balancing is automatic.
+//! * **Submitter participates.** The caller runs tasks too; with no
+//!   workers (single-core, spawn failure) everything still completes.
+//! * **Busy or nested ⇒ serial.** If the pool is occupied (another thread
+//!   is mid-job) or the caller *is* a pool worker, [`run`] simply executes
+//!   the tasks inline. That makes the pool deadlock-free under nesting and
+//!   correct under concurrent submitters without a job queue.
+//! * **Completion is a hard barrier.** [`run`] returns only after every
+//!   task has finished *and* every worker has left the job, which is what
+//!   makes the lifetime erasure of the task closure sound.
+//!
+//! Numerics are unaffected by the pool: tasks own disjoint output regions
+//! and every kernel's per-element accumulation order is independent of the
+//! task split (the invariant `tests/proptest_linalg.rs` pins bitwise).
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Cap on spawned workers (callers participate, so the effective parallel
+/// width is `workers + 1`). Far above the shard counts our kernels use.
+const MAX_WORKERS: usize = 31;
+
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+type TaskFn = dyn Fn(usize) + Sync;
+
+/// Lifetime-erased pointer to the job's task closure. Only dereferenced
+/// between job publication and the completion barrier, while the submitter
+/// keeps the closure alive.
+#[derive(Clone, Copy)]
+struct JobPtr(*const TaskFn);
+
+// SAFETY: the pointer is only dereferenced under the job protocol (see
+// `run_tasks`); the type is shared across threads as an opaque value.
+unsafe impl Send for JobPtr {}
+
+#[derive(Clone, Copy)]
+struct Job {
+    f: JobPtr,
+    n_tasks: usize,
+    epoch: u64,
+}
+
+struct State {
+    job: Option<Job>,
+    epoch: u64,
+    /// Workers currently inside the published job.
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Next task index to claim (reset per job, under the state lock).
+    next_task: AtomicUsize,
+    /// Tasks not yet completed (reset per job, under the state lock).
+    remaining: AtomicUsize,
+    /// Set when a task panicked; the submitter re-raises after the barrier.
+    poisoned: AtomicBool,
+}
+
+struct Pool {
+    shared: &'static Shared,
+    workers: usize,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State { job: None, epoch: 0, active: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_task: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+        }));
+        let want = parallelism();
+        let mut workers = 0;
+        for _ in 1..want {
+            let ok = std::thread::Builder::new()
+                .name("gf-kernel-worker".into())
+                .spawn(move || worker_loop(shared))
+                .is_ok();
+            if ok {
+                workers += 1;
+            }
+        }
+        Pool { shared, workers }
+    })
+}
+
+/// Parallel width the kernels plan for: `available_parallelism()` capped at
+/// the pool's worker limit. Cached after the first call (the OS query can
+/// itself allocate, and the kernel dispatch consults this on every GEMM);
+/// does not spawn the pool — dispatch thresholds check this before deciding
+/// to go parallel at all.
+pub fn parallelism() -> usize {
+    static WIDTH: OnceLock<usize> = OnceLock::new();
+    *WIDTH.get_or_init(|| {
+        std::thread::available_parallelism().map_or(1, |p| p.get()).min(MAX_WORKERS + 1)
+    })
+}
+
+/// Run `f(0..n_tasks)` across the worker pool, returning once every task
+/// has completed. Tasks may run on pool workers and/or the calling thread,
+/// each index exactly once, in no particular order — callers must make
+/// tasks independent (disjoint output regions).
+///
+/// Falls back to inline serial execution when the pool is busy, when called
+/// from inside a pool task (nesting), or when no workers could be spawned.
+///
+/// # Panics
+///
+/// If a task panics, the panic is captured, the job still runs to
+/// completion (remaining tasks execute), and `run` panics on the calling
+/// thread afterwards — workers survive.
+pub fn run(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_tasks == 0 {
+        return;
+    }
+    if n_tasks == 1 || IS_POOL_WORKER.with(|w| w.get()) {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let p = pool();
+    if p.workers == 0 || !p.try_run(n_tasks, f) {
+        for i in 0..n_tasks {
+            f(i);
+        }
+    }
+}
+
+impl Pool {
+    /// Publish a job and help drain it. Returns false (without running
+    /// anything) if the pool is unavailable; the caller then runs serially.
+    fn try_run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) -> bool {
+        let job = {
+            let mut st = match self.shared.state.try_lock() {
+                Ok(st) => st,
+                Err(_) => return false,
+            };
+            if st.job.is_some() || st.active > 0 {
+                return false;
+            }
+            // No worker is inside `run_tasks` (active == 0), so the
+            // counters can be reset without racing a stale job.
+            self.shared.next_task.store(0, Ordering::SeqCst);
+            self.shared.remaining.store(n_tasks, Ordering::SeqCst);
+            self.shared.poisoned.store(false, Ordering::SeqCst);
+            st.epoch += 1;
+            // SAFETY: lifetime erasure. `try_run` does not return until
+            // every task has completed and every worker has left the job
+            // (the barrier below), so the closure strictly outlives every
+            // dereference of this pointer.
+            let f_static: &'static TaskFn =
+                unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static TaskFn>(f) };
+            let job = Job { f: JobPtr(f_static as *const TaskFn), n_tasks, epoch: st.epoch };
+            st.job = Some(job);
+            self.shared.work_cv.notify_all();
+            job
+        };
+
+        // The submitter drains tasks alongside the workers.
+        run_tasks(self.shared, job);
+
+        // Barrier: all tasks done AND all workers out of the job. The
+        // second condition is what lets the closure be dropped safely and
+        // the counters be reset by the next submission.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while self.shared.remaining.load(Ordering::SeqCst) != 0 || st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if self.shared.poisoned.load(Ordering::SeqCst) {
+            panic!("kernel pool task panicked");
+        }
+        true
+    }
+}
+
+/// Claim and execute tasks from the shared counter until exhausted.
+fn run_tasks(shared: &Shared, job: Job) {
+    // SAFETY: see `try_run` — the closure is alive for the whole job.
+    let f: &TaskFn = unsafe { &*job.f.0 };
+    loop {
+        let i = shared.next_task.fetch_add(1, Ordering::SeqCst);
+        if i >= job.n_tasks {
+            break;
+        }
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            shared.poisoned.store(true, Ordering::SeqCst);
+        }
+        if shared.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last task overall: wake the submitter (lock pairs the wake
+            // with its condition check so the notification cannot be lost).
+            let _st = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                match st.job {
+                    Some(job) if job.epoch != seen_epoch => {
+                        seen_epoch = job.epoch;
+                        st.active += 1;
+                        break job;
+                    }
+                    _ => st = shared.work_cv.wait(st).unwrap(),
+                }
+            }
+        };
+        run_tasks(shared, job);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for n in [1usize, 2, 3, 7, 16, 61] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "task {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_run_completes_serially() {
+        let total = AtomicU64::new(0);
+        run(4, &|_| {
+            // Nested call must not deadlock; it runs inline.
+            run(8, &|j| {
+                total.fetch_add(j as u64 + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * (1 + 8) * 8 / 2);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        let sums: Vec<u64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let acc = AtomicU64::new(0);
+                        run(32, &|i| {
+                            acc.fetch_add(i as u64, Ordering::SeqCst);
+                        });
+                        acc.load(Ordering::SeqCst)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for s in sums {
+            assert_eq!(s, (0..32).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let result = std::panic::catch_unwind(|| {
+            run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic must propagate to the submitter");
+        // The pool must still work afterwards.
+        let acc = AtomicU64::new(0);
+        run(8, &|i| {
+            acc.fetch_add(i as u64, Ordering::SeqCst);
+        });
+        assert_eq!(acc.load(Ordering::SeqCst), (0..8).sum::<u64>());
+    }
+
+    #[test]
+    fn parallelism_is_positive() {
+        assert!(parallelism() >= 1);
+    }
+}

@@ -1,0 +1,228 @@
+//! Reusable scratch arena for the native interpreters.
+//!
+//! The forward, backward and decode interpreters need a dozen-odd `Vec<f32>`
+//! activation/scratch buffers per op; allocating them fresh on every call
+//! put the allocator on the per-token hot path. A [`Workspace`] is a
+//! checkout/checkin pool of buffers: `take_zeroed` hands out an owned,
+//! zero-filled `Vec<f32>` (reusing a retired buffer's capacity whenever one
+//! fits), `give` retires it for reuse. Because buffers are *owned* while
+//! checked out there is no lifetime entanglement — the arena only holds the
+//! free list.
+//!
+//! Steady-state contract: once a request/step shape has been seen, every
+//! subsequent identical step is allocation-free (the decode interpreter
+//! sizes its attention scratch by the session's `max_seq`, so every
+//! post-prefill step requests identical lengths). [`Workspace::alloc_misses`]
+//! counts takes that had to grow — `tests/decode_alloc_steady.rs` pins it at
+//! zero across steady-state decode steps, alongside a counting-allocator
+//! check of the whole step.
+//!
+//! Ownership of the [`Workspace`] follows the execution context: each
+//! [`crate::backend::DecodeSession`] owns one (sessions migrate between
+//! dispatcher threads), while the forward and training interpreters share a
+//! per-thread arena via [`with_thread_ws`].
+
+use std::cell::RefCell;
+
+/// Checkout/checkin pool of `f32` scratch buffers. See the module docs.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    takes: usize,
+    misses: usize,
+}
+
+impl Workspace {
+    /// Empty arena (no buffers retained yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop the smallest retired buffer whose capacity fits `len` (best fit
+    /// keeps big buffers available for big requests), cleared and ready to
+    /// fill; allocates (and counts a miss) when nothing fits.
+    fn pop_fit(&mut self, len: usize) -> Vec<f32> {
+        self.takes += 1;
+        let mut best: Option<usize> = None;
+        for (i, buf) in self.free.iter().enumerate() {
+            if buf.capacity() < len {
+                continue;
+            }
+            match best {
+                Some(j) if self.free[j].capacity() <= buf.capacity() => {}
+                _ => best = Some(i),
+            }
+        }
+        let mut buf = match best {
+            Some(i) => self.free.swap_remove(i),
+            None => {
+                if len > 0 {
+                    self.misses += 1;
+                }
+                Vec::with_capacity(len)
+            }
+        };
+        buf.clear();
+        buf
+    }
+
+    /// Check out a zero-filled buffer of exactly `len` elements (the form
+    /// GEMM accumulator targets and scatter-written buffers need).
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.pop_fit(len);
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Check out a buffer initialized as a copy of `src` — a single write
+    /// pass, skipping the zero fill `take_zeroed` would immediately have
+    /// overwritten.
+    pub fn take_copied(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut buf = self.pop_fit(src.len());
+        buf.extend_from_slice(src);
+        buf
+    }
+
+    /// Retire a buffer for reuse. Order is irrelevant; zero-capacity
+    /// buffers are dropped instead of retained.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Takes served since construction (or [`Workspace::reset_stats`]).
+    pub fn takes(&self) -> usize {
+        self.takes
+    }
+
+    /// Takes that had to allocate because no retired buffer fit. Zero
+    /// across identical steps ⇒ the arena is in steady state.
+    pub fn alloc_misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Reset the `takes`/`alloc_misses` counters (buffers are kept).
+    pub fn reset_stats(&mut self) {
+        self.takes = 0;
+        self.misses = 0;
+    }
+}
+
+impl Clone for Workspace {
+    /// Cloning yields a fresh, empty arena: scratch capacity is an
+    /// execution-context resource, not data, so a cloned
+    /// [`crate::backend::DecodeSession`] warms its own.
+    fn clone(&self) -> Self {
+        Workspace::new()
+    }
+}
+
+thread_local! {
+    static THREAD_WS: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with this thread's shared [`Workspace`] (created on first use,
+/// retained for the thread's lifetime so repeated interpreter calls on the
+/// same thread — the serving dispatcher, the training loop — reuse their
+/// buffers).
+///
+/// # Panics
+///
+/// Nested calls on the same thread panic (`RefCell` double borrow); callers
+/// borrow once at the interpreter entry point and pass `&mut Workspace`
+/// down.
+pub fn with_thread_ws<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    THREAD_WS.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_capacity_after_give() {
+        let mut ws = Workspace::new();
+        let a = ws.take_zeroed(128);
+        assert_eq!(a.len(), 128);
+        assert_eq!(ws.alloc_misses(), 1);
+        ws.give(a);
+        let b = ws.take_zeroed(64);
+        assert!(b.capacity() >= 128, "should reuse the retired buffer");
+        assert_eq!(ws.alloc_misses(), 1, "steady take must not miss");
+        assert!(b.iter().all(|&v| v == 0.0));
+        ws.give(b);
+        assert_eq!(ws.takes(), 2);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take_zeroed(1024);
+        let small = ws.take_zeroed(32);
+        ws.give(big);
+        ws.give(small);
+        let got = ws.take_zeroed(16);
+        assert!(got.capacity() < 1024, "picked the big buffer for a tiny take");
+        ws.give(got);
+        let got = ws.take_zeroed(512);
+        assert!(got.capacity() >= 1024, "big take must get the big buffer");
+    }
+
+    #[test]
+    fn zeroes_previous_contents() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_zeroed(8);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        let b = ws.take_zeroed(8);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_copied_reuses_and_copies_exactly() {
+        let mut ws = Workspace::new();
+        ws.give(vec![9.0f32; 32]);
+        let src = [1.0f32, -2.0, 3.0];
+        let buf = ws.take_copied(&src);
+        assert_eq!(buf, vec![1.0, -2.0, 3.0]);
+        assert!(buf.capacity() >= 32, "should reuse the retired buffer");
+        assert_eq!(ws.alloc_misses(), 0);
+    }
+
+    #[test]
+    fn clone_is_fresh_and_stats_reset() {
+        let mut ws = Workspace::new();
+        ws.give(ws_buf());
+        let mut c = ws.clone();
+        assert_eq!(c.takes(), 0);
+        // A clone has no retained buffers: first take misses.
+        let _ = c.take_zeroed(4);
+        assert_eq!(c.alloc_misses(), 1);
+        ws.reset_stats();
+        assert_eq!(ws.takes(), 0);
+        assert_eq!(ws.alloc_misses(), 0);
+    }
+
+    fn ws_buf() -> Vec<f32> {
+        vec![1.0; 16]
+    }
+
+    #[test]
+    fn thread_ws_is_reused_across_calls() {
+        let cap = with_thread_ws(|ws| {
+            let buf = ws.take_zeroed(256);
+            let cap = buf.capacity();
+            ws.give(buf);
+            cap
+        });
+        let misses = with_thread_ws(|ws| {
+            ws.reset_stats();
+            let buf = ws.take_zeroed(cap.min(256));
+            let m = ws.alloc_misses();
+            ws.give(buf);
+            m
+        });
+        assert_eq!(misses, 0);
+    }
+}

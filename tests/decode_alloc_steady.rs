@@ -1,0 +1,96 @@
+//! Steady-state decode must not touch the allocator (PR 5 acceptance).
+//!
+//! Two layers of verification:
+//!
+//! 1. **Workspace misses** — `DecodeSession::scratch_alloc_misses()` must
+//!    not move across post-warmup steps: every interpreter buffer is served
+//!    from the session's arena.
+//! 2. **A counting global allocator** — the *total* allocation count of a
+//!    steady-state `run_decode_step` call must be constant and tiny (the
+//!    returned logits `Tensor` is the single unavoidable per-token
+//!    allocation; a small fixed bound covers its shape/data vectors).
+//!
+//! This file deliberately contains exactly one `#[test]` so no sibling test
+//! thread pollutes the allocation counters (integration tests are separate
+//! binaries, so other suites cannot interfere). The model is sized so every
+//! per-token GEMV stays under the kernel's parallel thresholds — pool
+//! workers would otherwise allocate pack scratch on their own threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{Backend, DecodeSession, NativeBackend};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_decode_steps_do_not_allocate_in_the_interpreter() {
+    // Small dims keep every GEMM/GEMV on the calling thread (serial kernel
+    // paths) so the counter sees only this test's allocations.
+    let cfg = TextModelCfg {
+        vocab: 64,
+        seq: 24,
+        d: 24,
+        heads: 6,
+        layers: 2,
+        ff: 48,
+        classes: 64,
+    };
+    let params = init_text_params(&cfg, 11);
+    let graph = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+    let be = NativeBackend::new();
+    let mut session = DecodeSession::new(&graph, &params).unwrap();
+
+    // Prefill + two warmup steps: the arena learns the step's buffer sizes.
+    be.run_decode_step(&graph, &params, &mut session, &[1, 2, 3, 4]).unwrap();
+    for t in 0..2 {
+        be.run_decode_step(&graph, &params, &mut session, &[t]).unwrap();
+    }
+
+    // Steady state: workspace misses frozen, per-step allocation count
+    // constant and bounded by the logits-tensor output.
+    session.reset_scratch_stats();
+    let mut per_step = Vec::new();
+    for t in 0..8 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let logits = be.run_decode_step(&graph, &params, &mut session, &[10 + t]).unwrap();
+        let after = ALLOCS.load(Ordering::Relaxed);
+        per_step.push(after - before);
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(
+        session.scratch_alloc_misses(),
+        0,
+        "workspace had to allocate in steady state"
+    );
+    let first = per_step[0];
+    assert!(
+        per_step.iter().all(|&c| c == first),
+        "per-step allocation counts drifted: {per_step:?}"
+    );
+    // The returned (vocab,) Tensor is the only per-token allocation the
+    // interpreter performs; a few allocs cover its data + shape vectors.
+    assert!(first <= 4, "steady-state decode step made {first} allocations");
+}

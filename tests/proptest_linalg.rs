@@ -3,7 +3,8 @@
 
 use greenformer::factorize::{rank_for, Solver, MIN_RANK, RANK_MULTIPLE};
 use greenformer::linalg::{
-    factors_from_svd, jacobi_svd, randomized_svd, snmf_factorize, svd_factorize, thin_qr, Matrix,
+    factors_from_svd, jacobi_svd, matmul_bias_into, matmul_into, matmul_into_reference,
+    randomized_svd, snmf_factorize, svd_factorize, thin_qr, Activation, Matrix,
 };
 use greenformer::util::Pcg64;
 
@@ -155,6 +156,173 @@ fn svd_factorize_randomized_path_consistent_with_exact() {
         d * d
     };
     assert!(err2 <= tail2 * 1.05, "err2={err2} tail2={tail2}");
+}
+
+// ---------------------------------------------------------------------------
+// PR-5 kernel layer: packed GEMM / GEMV / fused epilogues vs the reference
+// serial kernel. Equality is asserted BITWISE: every dispatch path keeps the
+// same ascending-k single-accumulator chain per output element, so the pool
+// split, the packing, and the epilogue fusion must not change even one ulp.
+// ---------------------------------------------------------------------------
+
+fn randv(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn assert_bits_eq(tag: &str, a: &[f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn gemm_bitwise_parity_adversarial_shapes() {
+    let mut rng = Pcg64::seeded(20);
+    // m=1 GEMV (serial and column-split parallel), k=0, single tile,
+    // non-divisible MR/NR/KC remainders, and sizes crossing both the packed
+    // and the pool-parallel dispatch thresholds.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 9),
+        (1, 300, 500),
+        (1, 512, 768),
+        (5, 0, 7),
+        (8, 8, 8),
+        (3, 1, 2),
+        (13, 29, 31),
+        (17, 257, 63),
+        (64, 64, 64),
+        (100, 300, 200),
+        (96, 130, 120),
+        (257, 129, 65),
+    ];
+    for &(m, k, n) in shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        // Random initial out contents pin the += accumulate semantics.
+        let init = randv(&mut rng, m * n);
+        let mut got = init.clone();
+        let mut want = init;
+        matmul_into(m, k, n, &a, &b, &mut got);
+        matmul_into_reference(m, k, n, &a, &b, &mut want);
+        assert_bits_eq(&format!("{m}x{k}x{n}"), &got, &want);
+    }
+}
+
+#[test]
+fn gemm_pool_parallel_equals_serial_reference() {
+    // Big enough that the row-sharded pool path definitely engages (when
+    // the pool is free; a busy pool falls back serially, which must be —
+    // and is — indistinguishable). Repeat to catch scheduling variance.
+    let mut rng = Pcg64::seeded(21);
+    let (m, k, n) = (160, 200, 192);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let mut want = vec![0.0f32; m * n];
+    matmul_into_reference(m, k, n, &a, &b, &mut want);
+    for round in 0..5 {
+        let mut got = vec![0.0f32; m * n];
+        matmul_into(m, k, n, &a, &b, &mut got);
+        assert_bits_eq(&format!("round {round}"), &got, &want);
+    }
+}
+
+#[test]
+fn fused_epilogue_bitwise_equals_unfused_passes() {
+    use greenformer::linalg::gemm::{gelu_slice, relu_slice};
+    let mut rng = Pcg64::seeded(22);
+    // (1, 512, 768) crosses the GEMV parallel threshold, so the fused
+    // epilogue's per-shard bias slicing is exercised on the pooled path too.
+    let shapes =
+        [(1usize, 64usize, 96usize), (1, 512, 768), (7, 33, 65), (80, 200, 160), (2, 0, 5)];
+    for &(m, k, n) in &shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        for act in [Activation::None, Activation::Gelu, Activation::Relu] {
+            let mut fused = vec![0.0f32; m * n];
+            matmul_bias_into(m, k, n, &a, &b, Some(&bias), act, &mut fused);
+            let mut plain = vec![0.0f32; m * n];
+            matmul_into(m, k, n, &a, &b, &mut plain);
+            for row in plain.chunks_exact_mut(n) {
+                for (v, &bv) in row.iter_mut().zip(&bias) {
+                    *v += bv;
+                }
+                match act {
+                    Activation::None => {}
+                    Activation::Gelu => gelu_slice(row),
+                    Activation::Relu => relu_slice(row),
+                }
+            }
+            assert_bits_eq(&format!("{m}x{k}x{n} {act:?}"), &fused, &plain);
+        }
+    }
+}
+
+#[test]
+fn matmul_tn_nt_match_f64_naive_at_parallel_sizes() {
+    // tn/nt now route through the packed parallel kernels; check against an
+    // independent f64-accumulated oracle at sizes that engage them.
+    let mut rng = Pcg64::seeded(23);
+    let a = Matrix::randn(150, 90, 1.0, &mut rng);
+    let b = Matrix::randn(150, 110, 1.0, &mut rng);
+    let tn = a.matmul_tn(&b);
+    for i in 0..90 {
+        for j in 0..110 {
+            let mut acc = 0.0f64;
+            for p in 0..150 {
+                acc += a.at(p, i) as f64 * b.at(p, j) as f64;
+            }
+            let got = tn.at(i, j);
+            assert!((got as f64 - acc).abs() < 1e-3 * (1.0 + acc.abs()), "tn {i},{j}");
+        }
+    }
+    let c = Matrix::randn(120, 90, 1.0, &mut rng);
+    let nt = a.matmul_nt(&c);
+    for i in 0..150 {
+        for j in 0..120 {
+            let mut acc = 0.0f64;
+            for p in 0..90 {
+                acc += a.at(i, p) as f64 * c.at(j, p) as f64;
+            }
+            let got = nt.at(i, j);
+            assert!((got as f64 - acc).abs() < 1e-3 * (1.0 + acc.abs()), "nt {i},{j}");
+        }
+    }
+}
+
+#[test]
+fn gemm_concurrent_callers_stay_bitwise_deterministic() {
+    // Many threads hammering the kernels at once: whoever wins the pool
+    // runs sharded, the rest fall back serially — results must be
+    // identical either way.
+    let mut rng = Pcg64::seeded(24);
+    let (m, k, n) = (96, 128, 112);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let mut want = vec![0.0f32; m * n];
+    matmul_into_reference(m, k, n, &a, &b, &mut want);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                scope.spawn(|| {
+                    for _ in 0..4 {
+                        let mut got = vec![0.0f32; m * n];
+                        matmul_into(m, k, n, &a, &b, &mut got);
+                        for (x, y) in got.iter().zip(&want) {
+                            assert_eq!(x.to_bits(), y.to_bits());
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
 }
 
 #[test]

@@ -11,12 +11,19 @@
 //! artifacts, no PJRT) and prints a machine-readable
 //! `BENCH_NATIVE_DECODE {...}` JSON line.
 //!
+//! Also measures the continuous-batching win: aggregate tokens/sec of
+//! decoding N concurrent streams with stacked batched steps (one GEMM per
+//! token step) vs round-robin solo steps (one GEMV chain per stream) — the
+//! scheduler change SERVING.md documents.
+//!
 //! Env: GREENFORMER_BENCH_DECODE_TOKENS (default 48) scales the generation
-//! length; GREENFORMER_BENCH_DECODE_ITERS (default 3) the repetitions.
+//! length; GREENFORMER_BENCH_DECODE_ITERS (default 3) the repetitions;
+//! GREENFORMER_BENCH_DECODE_SESSIONS (default 8) the concurrent streams in
+//! the batched-vs-roundrobin comparison.
 
 use greenformer::backend::native::{demo_variants, synth_fwd_graph, TextModelCfg};
 use greenformer::backend::NativeBackend;
-use greenformer::eval::measure_decode_latency;
+use greenformer::eval::{measure_batched_decode, measure_decode_latency, BatchedDecodeThroughput};
 use greenformer::tensor::ParamStore;
 use greenformer::util::Pcg64;
 
@@ -57,11 +64,41 @@ fn bench_variant(
     }
 }
 
+fn bench_batched(
+    name: &str,
+    store: &ParamStore,
+    vocab: usize,
+    sessions: usize,
+    new_tokens: usize,
+    iters: usize,
+) -> BatchedDecodeThroughput {
+    let graph = synth_fwd_graph("lm", name, 1, store).expect("synth graph");
+    // Distinct prompts per stream (seeded off the stream index) so the
+    // batch carries genuinely independent KV caches.
+    let prompts: Vec<Vec<i32>> = (0..sessions)
+        .map(|i| {
+            let mut rng = Pcg64::new(100 + i as u64, 13);
+            (0..PROMPT_TOKENS).map(|_| rng.below(vocab) as i32).collect()
+        })
+        .collect();
+    measure_batched_decode(
+        &NativeBackend::new(),
+        &graph,
+        store,
+        &prompts,
+        new_tokens,
+        1,
+        iters,
+    )
+    .expect("measure_batched_decode")
+}
+
 fn main() {
     let env_usize = |key: &str, default: usize| {
         std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
     };
     let iters = env_usize("GREENFORMER_BENCH_DECODE_ITERS", 3).max(1);
+    let sessions = env_usize("GREENFORMER_BENCH_DECODE_SESSIONS", 8).max(2);
     let cfg = TextModelCfg::lm_default();
     let new_tokens = env_usize("GREENFORMER_BENCH_DECODE_TOKENS", 48)
         .clamp(1, cfg.seq - PROMPT_TOKENS);
@@ -100,13 +137,38 @@ fn main() {
         r50.tokens_per_sec / d.tokens_per_sec,
         r25.tokens_per_sec / d.tokens_per_sec
     );
+
+    // Continuous batching: N concurrent streams, stacked step vs round-robin.
+    println!(
+        "\n== continuous batching: {sessions} streams, stacked step vs round-robin =="
+    );
+    println!(
+        "{:<10} {:>14} {:>16} {:>10}",
+        "variant", "batched(tok/s)", "roundrobin(tok/s)", "speedup"
+    );
+    let db = bench_batched("dense", &dense, cfg.vocab, sessions, new_tokens, iters);
+    println!(
+        "{:<10} {:>14.1} {:>16.1} {:>9.2}x",
+        "dense", db.batched_tps, db.roundrobin_tps, db.speedup()
+    );
+    let lb = bench_batched("led_r25", &led25, cfg.vocab, sessions, new_tokens, iters);
+    println!(
+        "{:<10} {:>14.1} {:>16.1} {:>9.2}x",
+        "led_r25", lb.batched_tps, lb.roundrobin_tps, lb.speedup()
+    );
+
     println!(
         "BENCH_NATIVE_DECODE {{\"prompt_tokens\":{PROMPT_TOKENS},\"new_tokens\":{new_tokens},\
          \"iters\":{iters},\"dense_tps\":{:.2},\"led_r50_tps\":{:.2},\"led_r25_tps\":{:.2},\
          \"dense_prefill_ms\":{:.3},\"led_r50_prefill_ms\":{:.3},\"led_r25_prefill_ms\":{:.3},\
          \"dense_p50_us\":{:.1},\"dense_p95_us\":{:.1},\"led_r50_p50_us\":{:.1},\
          \"led_r50_p95_us\":{:.1},\"led_r25_p50_us\":{:.1},\"led_r25_p95_us\":{:.1},\
-         \"led_r50_speedup\":{:.3},\"led_r25_speedup\":{:.3}}}",
+         \"led_r50_speedup\":{:.3},\"led_r25_speedup\":{:.3},\
+         \"batch_sessions\":{sessions},\
+         \"dense_batched_tps\":{:.2},\"dense_roundrobin_tps\":{:.2},\
+         \"dense_batched_speedup\":{:.3},\
+         \"led_r25_batched_tps\":{:.2},\"led_r25_roundrobin_tps\":{:.2},\
+         \"led_r25_batched_speedup\":{:.3}}}",
         d.tokens_per_sec,
         r50.tokens_per_sec,
         r25.tokens_per_sec,
@@ -120,6 +182,12 @@ fn main() {
         r25.p50_us,
         r25.p95_us,
         r50.tokens_per_sec / d.tokens_per_sec,
-        r25.tokens_per_sec / d.tokens_per_sec
+        r25.tokens_per_sec / d.tokens_per_sec,
+        db.batched_tps,
+        db.roundrobin_tps,
+        db.speedup(),
+        lb.batched_tps,
+        lb.roundrobin_tps,
+        lb.speedup()
     );
 }

@@ -13,7 +13,9 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use greenformer::backend::native::{demo_variants, TextModelCfg};
-use greenformer::coordinator::{serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::coordinator::{
+    serve_classifier_native, BatcherConfig, RoutePolicy, Router, ServeConfig, Tier,
+};
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{Dataset, Split};
 use greenformer::tensor::ParamStore;
@@ -37,11 +39,13 @@ fn bench_variant(name: &str, store: ParamStore, requests: usize) -> VariantStats
         "text",
         variants,
         router,
-        BatcherConfig {
-            max_batch: MAX_BATCH,
-            max_wait: Duration::from_millis(2),
-        },
-        4096,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: MAX_BATCH,
+                max_wait: Duration::from_millis(2),
+            },
+            4096,
+        ),
     )
     .expect("serve_classifier_native");
 

@@ -15,7 +15,7 @@
 
 use std::collections::HashMap;
 
-use greenformer::coordinator::{serve_classifier, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::coordinator::{serve_classifier, RoutePolicy, Router, ServeConfig, Tier};
 use greenformer::data::lm::LmCorpus;
 use greenformer::data::text::all_text_tasks;
 use greenformer::data::{Dataset, Split};
@@ -102,8 +102,7 @@ fn main() -> greenformer::Result<()> {
         "text",
         stores,
         router,
-        BatcherConfig::default(),
-        1024,
+        ServeConfig::default(),
     )?;
     let ds = greenformer::data::text::PolarityTask::new(64, 42);
     let mut joins = Vec::new();

@@ -40,7 +40,21 @@ QUICK_ENV = {
     "GREENFORMER_BENCH_REQUESTS": "64",
     "GREENFORMER_BENCH_DECODE_TOKENS": "32",
     "GREENFORMER_BENCH_DECODE_ITERS": "2",
+    "GREENFORMER_BENCH_DECODE_SESSIONS": "4",
     "GREENFORMER_BENCH_TRAIN_STEPS": "8",
+}
+
+# Headline fields worth surfacing per marker (everything is persisted; these
+# just get echoed so a CI log shows the trajectory-relevant numbers).
+HIGHLIGHTS = {
+    "BENCH_NATIVE_DECODE": [
+        "led_r25_speedup",
+        "dense_batched_speedup",
+        "led_r25_batched_speedup",
+    ],
+    "BENCH_NATIVE_SERVING": ["led_r25_speedup"],
+    "BENCH_KERNELS": [],
+    "BENCH_NATIVE_TRAIN": [],
 }
 
 MARKER_RE = re.compile(r"^(BENCH_[A-Z0-9_]+) (\{.*\})\s*$")
@@ -135,6 +149,11 @@ def main() -> int:
             print(f"[collect_bench] {bench}: no BENCH_* line found", file=sys.stderr)
         for marker, data in markers:
             persisted.append(persist(root, marker, bench, data, rev))
+            shown = [
+                f"{k}={data[k]}" for k in HIGHLIGHTS.get(marker, []) if k in data
+            ]
+            if shown:
+                print(f"[collect_bench] {marker}: {' '.join(shown)}")
     for p in persisted:
         print(f"[collect_bench] wrote {p}")
     return 1 if failures else 0

@@ -30,11 +30,13 @@
 //! byte-for-byte — the determinism contract the coordinator's streaming
 //! `generate` endpoint and the CLI both rely on.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail};
 
 use crate::linalg::gemm::Activation;
 use crate::linalg::matrix::matmul_into;
-use crate::linalg::workspace::Workspace;
+use crate::linalg::workspace::{with_thread_ws, Workspace};
 use crate::runtime::GraphSpec;
 use crate::tensor::{ParamStore, Tensor};
 use crate::util::Pcg64;
@@ -101,6 +103,16 @@ impl BlockNames {
     }
 }
 
+/// All pre-resolved parameter names of one model: per-block names plus the
+/// LM head. Depends only on the layer count, so sessions over the same
+/// checkpoint share one set behind an `Arc` — the batched decode step can
+/// then hold the names while mutably borrowing every session's KV caches.
+#[derive(Debug)]
+struct ModelNames {
+    blocks: Vec<BlockNames>,
+    head: LinearNames,
+}
+
 /// Mutable state of one in-flight autoregressive decode: the per-layer KV
 /// caches plus the model dimensions they were sized for.
 ///
@@ -122,10 +134,10 @@ pub struct DecodeSession {
     /// Positions decoded so far (cache rows per layer).
     len: usize,
     layers: Vec<LayerKv>,
-    /// Per-block parameter names, resolved once at session creation.
-    names: Vec<BlockNames>,
-    /// LM-head parameter names.
-    head: LinearNames,
+    /// Per-block + head parameter names, resolved once at session creation
+    /// and shared (`Arc`) so batched steps can borrow them independently of
+    /// the sessions' mutable cache state.
+    names: Arc<ModelNames>,
     /// Scratch arena for the step's activations; attention scratch is sized
     /// by `max_seq`, so every post-prefill step reuses identical buffers
     /// (cloning a session starts a fresh, unwarmed arena).
@@ -179,8 +191,10 @@ impl DecodeSession {
             max_seq,
             len: 0,
             layers: (0..n_layers).map(|_| LayerKv::with_capacity(max_seq * d)).collect(),
-            names: (0..n_layers).map(BlockNames::new).collect(),
-            head: LinearNames::new("head"),
+            names: Arc::new(ModelNames {
+                blocks: (0..n_layers).map(BlockNames::new).collect(),
+                head: LinearNames::new("head"),
+            }),
             ws: Workspace::new(),
         })
     }
@@ -310,7 +324,7 @@ pub(crate) fn native_decode_step(
     let mut vh = ws.take_zeroed(max_seq * dk);
     let mut scores = ws.take_zeroed(n * max_seq);
     let mut oh = ws.take_zeroed(n * dk);
-    for (layer, names) in s.layers.iter_mut().zip(&s.names) {
+    for (layer, names) in s.layers.iter_mut().zip(&s.names.blocks) {
         // Attention sublayer: project the chunk, append K/V to the cache,
         // then score each chunk row against every cached position.
         xn.copy_from_slice(&x);
@@ -392,7 +406,7 @@ pub(crate) fn native_decode_step(
     // logits were (or could have been) emitted by earlier steps.
     layernorm_named(params, "ln_f/g", "ln_f/bias", d, &mut x)?;
     let last = &x[(n - 1) * d..n * d];
-    let (vocab, logits) = apply_linear_named(params, &s.head, 1, d, last, Activation::None, ws)?;
+    let (vocab, logits) = apply_linear_named(params, &s.names.head, 1, d, last, Activation::None, ws)?;
     if vocab != s.vocab {
         bail!("head width {vocab} does not match the graph's logit width {}", s.vocab);
     }
@@ -400,10 +414,193 @@ pub(crate) fn native_decode_step(
     // per-token allocation; every interpreter-internal buffer goes back to
     // the arena.
     let out = Tensor::from_f32(&[vocab], logits.clone());
-    for buf in [logits, x, xn, ctx, qh, kt, vh, scores, oh] {
-        ws.give(buf);
-    }
+    ws.give_all([logits, x, xn, ctx, qh, kt, vh, scores, oh]);
     Ok(out)
+}
+
+/// The native implementation of [`Backend::run_decode_step_batched`]: advance
+/// `m = sessions.len()` post-prefill sessions one token each, stacking every
+/// per-session linear projection into one m-row GEMM.
+///
+/// Per transformer block, the six projections (q/k/v/o/fc1/fc2) and the LM
+/// head run as single `(m, ·)` GEMMs over the stacked current-token rows —
+/// continuous batching's whole point: at m concurrent streams the per-step
+/// GEMV becomes a packed GEMM that the blocked kernel layer can tile.
+/// Attention stays per-session (each session scores its own KV cache at its
+/// own length) and LayerNorm/residuals are per-row, so every session's
+/// logits are **value-identical** to what a solo [`native_decode_step`] call
+/// would have produced: `matmul_into` accumulates each output element over k
+/// in an order independent of the row count, and no other op mixes rows
+/// (pinned by `tests/proptest_batched_decode.rs`).
+///
+/// All sessions must share one checkpoint (`params`) — same width, head
+/// count, vocab, layer count and positional capacity — and must be past
+/// prefill with at least one free position. Stacked scratch comes from the
+/// calling thread's workspace (the dispatcher sweeps from one thread, so
+/// steady-state sweeps at a stable batch size are allocation-free); the
+/// per-session arenas keep serving the solo prefill/step paths.
+pub(crate) fn native_decode_step_batched(
+    params: &ParamStore,
+    sessions: &mut [&mut DecodeSession],
+    tokens: &[i32],
+) -> Result<Vec<Tensor>> {
+    let m = sessions.len();
+    if m == 0 {
+        bail!("batched decode needs at least one session");
+    }
+    if tokens.len() != m {
+        bail!("batched decode got {m} sessions but {} tokens", tokens.len());
+    }
+    if m == 1 {
+        // Solo step: keep the session-owned arena warm (the single-stream
+        // zero-allocation contract of tests/decode_alloc_steady.rs).
+        return Ok(vec![native_decode_step(params, sessions[0], tokens)?]);
+    }
+    let (d, heads, vocab, max_seq) = {
+        let s0 = &sessions[0];
+        (s0.d, s0.heads, s0.vocab, s0.max_seq)
+    };
+    let n_layers = sessions[0].layers.len();
+    let table = params
+        .get("embed/table")
+        .ok_or_else(|| anyhow!("checkpoint missing embed/table"))?;
+    let vocab_rows = table.shape[0];
+    let td = table.as_f32()?;
+    let pd = params
+        .get("pos/table")
+        .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?
+        .as_f32()?;
+    // Validate everything before touching any cache: a rejected batch must
+    // leave every session exactly as it was.
+    for (i, (s, &t)) in sessions.iter().zip(tokens).enumerate() {
+        if s.d != d || s.heads != heads || s.vocab != vocab || s.max_seq != max_seq
+            || s.layers.len() != n_layers
+        {
+            bail!(
+                "session {i} is incompatible with session 0: \
+                 d {}/{d}, heads {}/{heads}, vocab {}/{vocab}, seq {}/{max_seq}, layers {}/{n_layers}",
+                s.d, s.heads, s.vocab, s.max_seq, s.layers.len()
+            );
+        }
+        if s.is_empty() {
+            bail!("session {i} has no prefilled positions; batched steps are post-prefill only");
+        }
+        if s.remaining() == 0 {
+            bail!("session {i} is at its positional capacity {max_seq}");
+        }
+        if t < 0 || t as usize >= vocab_rows {
+            bail!("token id {t} out of range (vocab {vocab_rows})");
+        }
+    }
+    let names = sessions[0].names.clone();
+    let dk = d / heads;
+    let scale = 1.0 / (dk as f32).sqrt();
+
+    with_thread_ws(|ws| {
+        // Stacked current-token activations: row i = embed[token_i] +
+        // pos[len_i] (each session sits at its own absolute position).
+        let mut x = ws.take_zeroed(m * d);
+        for ((dst, &t), s) in x.chunks_exact_mut(d).zip(tokens).zip(&*sessions) {
+            let row = &td[t as usize * d..(t as usize + 1) * d];
+            let prow = &pd[s.len * d..(s.len + 1) * d];
+            for ((dv, &rv), &pv) in dst.iter_mut().zip(row).zip(prow) {
+                *dv = rv + pv;
+            }
+        }
+
+        // Stacked scratch (m rows); attention scratch is per-session, sized
+        // by the positional capacity so every sweep at the same m reuses
+        // identical buffers.
+        let mut xn = ws.take_zeroed(m * d);
+        let mut ctx = ws.take_zeroed(m * d);
+        let mut kt = ws.take_zeroed(dk * max_seq); // cache keys pre-transposed: (dk, len)
+        let mut vh = ws.take_zeroed(max_seq * dk);
+        let mut scores = ws.take_zeroed(max_seq);
+        let mut oh = ws.take_zeroed(dk);
+        for (l, nb) in names.blocks.iter().enumerate() {
+            // Attention sublayer: one stacked projection per q/k/v, then
+            // per-session cache append + scoring (cache lengths differ).
+            xn.copy_from_slice(&x);
+            layernorm_named(params, &nb.ln1_g, &nb.ln1_bias, d, &mut xn)?;
+            let (dq, q) = apply_linear_named(params, &nb.q, m, d, &xn, Activation::None, ws)?;
+            let (dkk, knew) = apply_linear_named(params, &nb.k, m, d, &xn, Activation::None, ws)?;
+            let (dv, vnew) = apply_linear_named(params, &nb.v, m, d, &xn, Activation::None, ws)?;
+            if dq != d || dkk != d || dv != d {
+                bail!("{}: projection output dims {dq}/{dkk}/{dv} != d {d}", nb.q.prefix);
+            }
+            for (i, s) in sessions.iter_mut().enumerate() {
+                let layer = &mut s.layers[l];
+                layer.k.extend_from_slice(&knew[i * d..(i + 1) * d]);
+                layer.v.extend_from_slice(&vnew[i * d..(i + 1) * d]);
+                let len = s.len + 1;
+                debug_assert_eq!(layer.k.len(), len * d);
+                for h in 0..heads {
+                    let qrow = &q[i * d + h * dk..i * d + (h + 1) * dk];
+                    for pi in 0..len {
+                        let src = pi * d + h * dk;
+                        vh[pi * dk..(pi + 1) * dk].copy_from_slice(&layer.v[src..src + dk]);
+                        for ki in 0..dk {
+                            kt[ki * len + pi] = layer.k[src + ki];
+                        }
+                    }
+                    // The appended row is the last cache position, so it
+                    // attends to everything: no causal mask to apply (same
+                    // as the solo single-token step).
+                    scores[..len].fill(0.0);
+                    matmul_into(1, dk, len, qrow, &kt[..dk * len], &mut scores[..len]);
+                    for v in scores[..len].iter_mut() {
+                        *v *= scale;
+                    }
+                    softmax_rows(&mut scores[..len], len);
+                    oh.fill(0.0);
+                    matmul_into(1, len, dk, &scores[..len], &vh[..len * dk], &mut oh);
+                    ctx[i * d + h * dk..i * d + (h + 1) * dk].copy_from_slice(&oh);
+                }
+            }
+            ws.give(q);
+            ws.give(knew);
+            ws.give(vnew);
+            let (do_, attn) = apply_linear_named(params, &nb.o, m, d, &ctx, Activation::None, ws)?;
+            if do_ != d {
+                bail!("{}: o-projection output dim {do_} != d {d}", nb.o.prefix);
+            }
+            for (v, a) in x.iter_mut().zip(&attn) {
+                *v += a;
+            }
+            ws.give(attn);
+
+            // FFN sublayer, stacked: (m, d) → (m, ff) → (m, d).
+            xn.copy_from_slice(&x);
+            layernorm_named(params, &nb.ln2_g, &nb.ln2_bias, d, &mut xn)?;
+            let (ff, hmid) = apply_linear_named(params, &nb.fc1, m, d, &xn, Activation::Gelu, ws)?;
+            let (d2, y) = apply_linear_named(params, &nb.fc2, m, ff, &hmid, Activation::None, ws)?;
+            if d2 != d {
+                bail!("{}: fc2 output dim {d2} != d {d}", nb.fc2.prefix);
+            }
+            for (v, a) in x.iter_mut().zip(&y) {
+                *v += a;
+            }
+            ws.give(hmid);
+            ws.give(y);
+        }
+        for s in sessions.iter_mut() {
+            s.len += 1;
+        }
+
+        // Final layernorm + LM head, stacked: every row is some session's
+        // newest position, so all m rows get logits in one GEMM.
+        layernorm_named(params, "ln_f/g", "ln_f/bias", d, &mut x)?;
+        let (hv, logits) = apply_linear_named(params, &names.head, m, d, &x, Activation::None, ws)?;
+        if hv != vocab {
+            bail!("head width {hv} does not match the graph's logit width {vocab}");
+        }
+        let out = logits
+            .chunks_exact(vocab)
+            .map(|row| Tensor::from_f32(&[vocab], row.to_vec()))
+            .collect();
+        ws.give_all([logits, x, xn, ctx, kt, vh, scores, oh]);
+        Ok(out)
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -531,6 +728,106 @@ pub fn generate(
     })
 }
 
+/// Generate from several prompts concurrently, advancing all streams one
+/// token per step through [`Backend::run_decode_step_batched`] — per layer,
+/// the streams' projections run as one stacked GEMM instead of one GEMV
+/// each (the library-level form of the coordinator's continuous batching).
+///
+/// Each stream prefills individually, then all live streams step together;
+/// a stream leaves the batch when it has sampled `max_new` tokens or filled
+/// its positional capacity, without stalling the others. `cfgs` supplies one
+/// sampling policy per prompt (each stream draws from its own seeded RNG),
+/// so stream `i` reproduces exactly what
+/// [`generate`]`(backend, graph, params, &prompts[i], max_new, &cfgs[i], ..)`
+/// would emit — the batched step is value-identical to the solo step.
+///
+/// # Examples
+///
+/// ```
+/// use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+/// use greenformer::backend::{generate_batched, NativeBackend, SamplingCfg};
+///
+/// let cfg = TextModelCfg { vocab: 48, seq: 12, d: 24, heads: 6, layers: 1, ff: 32, classes: 48 };
+/// let params = init_text_params(&cfg, 7);
+/// let graph = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+/// let prompts = vec![vec![1, 2, 3], vec![4, 5]];
+/// let cfgs = vec![SamplingCfg::greedy(); 2];
+/// let outs =
+///     generate_batched(&NativeBackend::new(), &graph, &params, &prompts, 4, &cfgs).unwrap();
+/// assert_eq!(outs.len(), 2);
+/// assert!(outs.iter().all(|o| o.tokens.len() == 4));
+/// ```
+pub fn generate_batched(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    cfgs: &[SamplingCfg],
+) -> Result<Vec<GenerateOutcome>> {
+    if prompts.is_empty() {
+        bail!("generate_batched needs at least one prompt");
+    }
+    if cfgs.len() != prompts.len() {
+        bail!("generate_batched got {} prompts but {} sampling configs", prompts.len(), cfgs.len());
+    }
+    if max_new == 0 {
+        bail!("generate_batched needs max_new >= 1");
+    }
+    struct Stream {
+        session: DecodeSession,
+        rng: Pcg64,
+        cfg: SamplingCfg,
+        tokens: Vec<i32>,
+        done: bool,
+    }
+    let mut streams = Vec::with_capacity(prompts.len());
+    for (prompt, cfg) in prompts.iter().zip(cfgs) {
+        if prompt.is_empty() {
+            bail!("generate_batched needs non-empty prompts");
+        }
+        let mut session = DecodeSession::new(graph, params)?;
+        let logits = backend.run_decode_step(graph, params, &mut session, prompt)?;
+        let mut rng = cfg.rng();
+        let tok = sample_token(logits.as_f32()?, cfg, &mut rng) as i32;
+        let done = max_new == 1 || session.remaining() == 0;
+        streams.push(Stream { session, rng, cfg: *cfg, tokens: vec![tok], done });
+    }
+    loop {
+        let mut idx = Vec::new();
+        let mut toks = Vec::new();
+        let mut live = Vec::new();
+        for (i, st) in streams.iter_mut().enumerate() {
+            if !st.done {
+                idx.push(i);
+                toks.push(*st.tokens.last().expect("stream sampled at least one token"));
+                live.push(&mut st.session);
+            }
+        }
+        if idx.is_empty() {
+            break;
+        }
+        let all_logits = backend.run_decode_step_batched(graph, params, &mut live, &toks)?;
+        for (i, logits) in idx.into_iter().zip(all_logits) {
+            let st = &mut streams[i];
+            let tok = sample_token(logits.as_f32()?, &st.cfg, &mut st.rng) as i32;
+            st.tokens.push(tok);
+            if st.tokens.len() >= max_new || st.session.remaining() == 0 {
+                st.done = true;
+            }
+        }
+    }
+    Ok(streams
+        .into_iter()
+        .zip(prompts)
+        .map(|(st, prompt)| GenerateOutcome {
+            tokens: st.tokens,
+            prefill_tokens: prompt.len(),
+            positions_used: st.session.len(),
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,6 +950,65 @@ mod tests {
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.prefill_tokens, 3);
         assert_eq!(a.positions_used, 3 + 6 - 1); // final token is never appended
+    }
+
+    #[test]
+    fn generate_batched_matches_solo_streams() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 6);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        // Staggered prompt lengths: the third stream exhausts its positional
+        // capacity mid-run and leaves the batch while the others keep going.
+        let prompts = vec![vec![1, 2, 3], vec![4, 5], vec![6i32; 7]];
+        let cfgs = vec![
+            SamplingCfg::greedy(),
+            SamplingCfg { temperature: 0.9, top_k: 8, seed: 3 },
+            SamplingCfg { temperature: 0.7, top_k: 0, seed: 4 },
+        ];
+        let batched = generate_batched(&be, &g, &params, &prompts, 5, &cfgs).unwrap();
+        for ((prompt, s), out) in prompts.iter().zip(&cfgs).zip(&batched) {
+            let solo = generate(&be, &g, &params, prompt, 5, s, |_, _| {}).unwrap();
+            assert_eq!(out.tokens, solo.tokens, "batched stream must equal its solo replay");
+            assert_eq!(out.positions_used, solo.positions_used);
+            assert_eq!(out.prefill_tokens, prompt.len());
+        }
+        assert_eq!(batched[0].tokens.len(), 5);
+        assert_eq!(batched[2].tokens.len(), 4, "capacity-bound stream leaves early");
+    }
+
+    #[test]
+    fn batched_step_validates_before_mutating() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 8);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let mut a = DecodeSession::new(&g, &params).unwrap();
+        let mut b = DecodeSession::new(&g, &params).unwrap();
+        be.run_decode_step(&g, &params, &mut a, &[1, 2]).unwrap();
+        be.run_decode_step(&g, &params, &mut b, &[3]).unwrap();
+        // One out-of-vocab token rejects the whole batch, leaving both
+        // sessions untouched.
+        {
+            let mut sessions = vec![&mut a, &mut b];
+            assert!(native_decode_step_batched(&params, &mut sessions, &[0, cfg.vocab as i32])
+                .is_err());
+        }
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 1);
+        // An un-prefilled session is refused too.
+        let mut fresh = DecodeSession::new(&g, &params).unwrap();
+        {
+            let mut sessions = vec![&mut a, &mut fresh];
+            assert!(native_decode_step_batched(&params, &mut sessions, &[0, 0]).is_err());
+        }
+        assert_eq!(a.len(), 2);
+        // The same batch with valid tokens then advances both sessions.
+        let mut sessions = vec![&mut a, &mut b];
+        let out = native_decode_step_batched(&params, &mut sessions, &[0, 1]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 2);
     }
 
     #[test]

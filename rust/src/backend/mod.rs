@@ -65,7 +65,9 @@ use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
 
-pub use decode::{generate, sample_token, DecodeSession, GenerateOutcome, SamplingCfg};
+pub use decode::{
+    generate, generate_batched, sample_token, DecodeSession, GenerateOutcome, SamplingCfg,
+};
 pub use native::NativeBackend;
 
 /// Which engine a [`Backend`] is.
@@ -150,6 +152,38 @@ pub trait Backend {
              AOT fwd graphs are fixed-shape full-sequence executables)",
             self.platform()
         )
+    }
+
+    /// Advance `m = sessions.len()` post-prefill decode sessions one token
+    /// each: append `tokens[i]` to `sessions[i]` and return one `(vocab,)`
+    /// next-token logits tensor per session, in order.
+    ///
+    /// This is the continuous-batching step: the native backend stacks the
+    /// sessions' per-layer projections into single m-row GEMMs
+    /// ([`decode::native_decode_step_batched`]), with per-session results
+    /// value-identical to m solo [`Backend::run_decode_step`] calls. The
+    /// default advances the sessions sequentially — semantically equivalent,
+    /// so any backend that decodes at all participates in batched serving.
+    /// All sessions must share `params`/`graph` (one model variant).
+    fn run_decode_step_batched(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        sessions: &mut [&mut DecodeSession],
+        tokens: &[i32],
+    ) -> Result<Vec<Tensor>> {
+        if sessions.len() != tokens.len() {
+            anyhow::bail!(
+                "batched decode got {} sessions but {} tokens",
+                sessions.len(),
+                tokens.len()
+            );
+        }
+        sessions
+            .iter_mut()
+            .zip(tokens)
+            .map(|(s, t)| self.run_decode_step(graph, params, s, std::slice::from_ref(t)))
+            .collect()
     }
 }
 

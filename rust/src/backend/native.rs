@@ -136,6 +136,16 @@ impl Backend for NativeBackend {
     ) -> Result<Tensor> {
         super::decode::native_decode_step(params, session, new_tokens)
     }
+
+    fn run_decode_step_batched(
+        &self,
+        _graph: &GraphSpec,
+        params: &ParamStore,
+        sessions: &mut [&mut super::DecodeSession],
+        tokens: &[i32],
+    ) -> Result<Vec<Tensor>> {
+        super::decode::native_decode_step_batched(params, sessions, tokens)
+    }
 }
 
 /// Attention head count: the manifest's `config.heads` when recorded, else

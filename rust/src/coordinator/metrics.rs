@@ -34,6 +34,16 @@ pub struct Metrics {
     pub generated_tokens: AtomicU64,
     /// Decode sessions run to completion (`Done` sent).
     pub decode_sessions: AtomicU64,
+    /// Continuous-batching decode sweeps executed (one stacked step over
+    /// every active session of one variant).
+    pub merged_steps: AtomicU64,
+    /// Session-tokens advanced by merged steps: each merged step of batch
+    /// size m contributes m. `merged_step_tokens / merged_steps` is the
+    /// mean decode batch occupancy.
+    pub merged_step_tokens: AtomicU64,
+    /// Generate requests shed by admission control before any decode work
+    /// (terminal `Rejected` sent; disjoint from `errors`).
+    pub shed_requests: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     per_variant: Mutex<HashMap<String, u64>>,
@@ -100,6 +110,29 @@ impl Metrics {
             .or_insert(0) += 1;
     }
 
+    /// Count one continuous-batching decode sweep that advanced `sessions`
+    /// concurrent sessions by one token each.
+    pub fn record_decode_step(&self, sessions: usize) {
+        self.merged_steps.fetch_add(1, Ordering::Relaxed);
+        self.merged_step_tokens.fetch_add(sessions as u64, Ordering::Relaxed);
+    }
+
+    /// Count one generate request shed by admission control.
+    pub fn record_shed(&self) {
+        self.shed_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mean decode batch occupancy: sessions advanced per merged step
+    /// (1.0 = the scheduler only ever had one live stream; higher means the
+    /// stacked GEMMs actually carried concurrent streams).
+    pub fn decode_batch_occupancy(&self) -> f64 {
+        let steps = self.merged_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.merged_step_tokens.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
     /// Approximate latency percentile from the histogram (upper bound of the
     /// bucket containing the p-quantile), in microseconds.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
@@ -155,14 +188,18 @@ impl Metrics {
     /// One-line human-readable rollup of every counter.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} batches={} pad={} err={} sessions={} prefill_tok={} \
-             gen_tok={} p50={}us p95={}us mean={:.0}us",
+            "requests={} responses={} batches={} pad={} err={} shed={} sessions={} \
+             merged_steps={} occupancy={:.2} prefill_tok={} gen_tok={} p50={}us p95={}us \
+             mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
+            self.shed_requests.load(Ordering::Relaxed),
             self.decode_sessions.load(Ordering::Relaxed),
+            self.merged_steps.load(Ordering::Relaxed),
+            self.decode_batch_occupancy(),
             self.prefill_tokens.load(Ordering::Relaxed),
             self.generated_tokens.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0),
@@ -205,6 +242,21 @@ mod tests {
         assert_eq!(m.variant_counts()["led_r25"], 1);
         let s = m.summary();
         assert!(s.contains("prefill_tok=16") && s.contains("gen_tok=4"), "{s}");
+    }
+
+    #[test]
+    fn merged_step_and_shed_counters_reconcile() {
+        let m = Metrics::new();
+        assert_eq!(m.decode_batch_occupancy(), 0.0);
+        m.record_decode_step(3);
+        m.record_decode_step(1);
+        m.record_shed();
+        assert_eq!(m.merged_steps.load(Ordering::Relaxed), 2);
+        assert_eq!(m.merged_step_tokens.load(Ordering::Relaxed), 4);
+        assert_eq!(m.shed_requests.load(Ordering::Relaxed), 1);
+        assert!((m.decode_batch_occupancy() - 2.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("merged_steps=2") && s.contains("shed=1"), "{s}");
     }
 
     #[test]

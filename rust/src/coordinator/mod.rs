@@ -8,14 +8,19 @@
 //! * [`router`] — picks the variant per request: static pinning, per-request
 //!   tier, or adaptive load-shedding (deep queue → lower-rank variant, the
 //!   latency/quality trade Figure 2 quantifies).
-//! * [`server`] — the dispatcher thread tying queue → batcher → backend →
-//!   responses. Backend selection is automatic (PJRT when artifacts resolve,
-//!   the native interpreter otherwise) or pinned via
+//! * [`server`] — the dispatcher thread tying queue → batcher/scheduler →
+//!   backend → responses. Backend selection is automatic (PJRT when
+//!   artifacts resolve, the native interpreter otherwise) or pinned via
 //!   [`server::serve_classifier_native`]. Two request kinds share the
-//!   queue: batched classify, and KV-cached streaming `generate`
-//!   (single-token decode steps scheduled round-robin between batches).
-//! * [`metrics`] — counters (incl. per-token prefill/generated tallies) +
-//!   latency histogram.
+//!   queue: batched classify, and KV-cached streaming `generate` under
+//!   continuous batching — every dispatcher sweep advances all live
+//!   sessions one token as a single stacked GEMM step per variant, with
+//!   admission control ([`server::ServeConfig::max_sessions`]) shedding
+//!   excess streams via a typed [`server::TokenEvent::Rejected`]. The
+//!   decode/classify interleave is configurable
+//!   ([`server::FairnessConfig`]); SERVING.md documents the full model.
+//! * [`metrics`] — counters (incl. per-token prefill/generated tallies,
+//!   merged-step/occupancy/shed gauges) + latency histogram.
 //!
 //! # Examples
 //!
@@ -26,7 +31,7 @@
 //! use std::collections::HashMap;
 //! use greenformer::backend::native::{init_text_params, TextModelCfg};
 //! use greenformer::coordinator::{
-//!     serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+//!     serve_classifier_native, RoutePolicy, Router, ServeConfig, Tier,
 //! };
 //!
 //! let cfg = TextModelCfg { vocab: 64, seq: 8, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 };
@@ -34,7 +39,7 @@
 //! variants.insert("dense".to_string(), init_text_params(&cfg, 1));
 //! let router = Router::new(RoutePolicy::Static("dense".into()), vec!["dense".into()]).unwrap();
 //! let handle =
-//!     serve_classifier_native("text", variants, router, BatcherConfig::default(), 64).unwrap();
+//!     serve_classifier_native("text", variants, router, ServeConfig::default()).unwrap();
 //! let resp = handle.classify(vec![1; 8], Tier::Quality).unwrap();
 //! assert_eq!(resp.variant, "dense");
 //! assert!(resp.label < 3);
@@ -50,6 +55,6 @@ pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, Tier};
 pub use server::{
     serve_classifier, serve_classifier_native, serve_classifier_with, ClassifyRequest,
-    ClassifyResponse, GenerateRequest, GenerateResponse, Request, ServeResult, ServerHandle,
-    TokenEvent,
+    ClassifyResponse, FairnessConfig, GenerateRequest, GenerateResponse, Request, ServeConfig,
+    ServeResult, ServerHandle, ShedReason, TokenEvent,
 };

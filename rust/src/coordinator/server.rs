@@ -13,9 +13,17 @@
 //! * [`ClassifyRequest`] — one token window in, one [`ClassifyResponse`]
 //!   out, dynamically batched per variant.
 //! * [`GenerateRequest`] — KV-cached autoregressive decoding
-//!   ([`crate::backend::DecodeSession`]): one prefill, then single-token
-//!   steps scheduled round-robin *between* classify batches, each sampled
-//!   token streamed to the client as a [`TokenEvent`] the moment it exists.
+//!   ([`crate::backend::DecodeSession`]) under **continuous batching**:
+//!   each dispatcher iteration runs one *decode sweep* that advances every
+//!   active session one token as a single stacked
+//!   [`Backend::run_decode_step_batched`] call per variant, with each
+//!   sampled token streamed to its client as a [`TokenEvent`] the moment it
+//!   exists. New sessions prefill on arrival and merge into the next sweep;
+//!   finished sessions drop out without stalling the batch. Admission is
+//!   controlled by [`ServeConfig::max_sessions`] — beyond it, requests are
+//!   shed with a typed [`TokenEvent::Rejected`] — and the decode/classify
+//!   interleave is governed by [`FairnessConfig`]. See SERVING.md for the
+//!   full serving model.
 //!
 //! Execution goes through the [`Backend`] abstraction: the PJRT engine when
 //! AOT artifacts resolve, the pure-Rust [`NativeBackend`] otherwise — so the
@@ -28,7 +36,11 @@
 //! Invariants (pinned by rust/tests/proptest_coordinator.rs and the serving
 //! integration tests):
 //! * every submitted request receives exactly one terminal outcome — a
-//!   classify response/error, or a `Done`/`Failed` event ending its stream;
+//!   classify response/error, or a `Done`/`Failed`/`Rejected` event ending
+//!   its stream;
+//! * a batched decode sweep is value-identical to advancing each session
+//!   solo (`tests/proptest_batched_decode.rs`), so continuous batching
+//!   never changes any stream's tokens;
 //! * executed batches never exceed the artifact batch size;
 //! * padding rows never produce responses;
 //! * responses carry the variant that actually served them;
@@ -37,7 +49,7 @@
 //!   response and never panics the dispatcher;
 //! * a fixed sampling seed reproduces the same token stream.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
@@ -111,7 +123,7 @@ pub struct GenerateRequest {
 }
 
 /// One event on a generation stream. Clients receive zero or more `Token`
-/// events followed by exactly one terminal `Done` or `Failed`.
+/// events followed by exactly one terminal `Done`, `Failed` or `Rejected`.
 #[derive(Clone, Debug)]
 pub enum TokenEvent {
     /// One sampled token, streamed as soon as the decode step produced it.
@@ -125,6 +137,36 @@ pub enum TokenEvent {
     Done(GenerateResponse),
     /// Generation was rejected or died mid-stream; no further events follow.
     Failed(String),
+    /// Admission control shed the request before any decode work ran; no
+    /// further events follow. Unlike [`TokenEvent::Failed`] the request was
+    /// well-formed — the server chose load over latency collapse, and the
+    /// client may retry later.
+    Rejected(ShedReason),
+}
+
+/// Why admission control shed a generate request (the typed counterpart of
+/// the free-text [`TokenEvent::Failed`] message, so clients can branch on
+/// it and retry policies stay mechanical).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The decode scheduler already holds [`ServeConfig::max_sessions`]
+    /// concurrent sessions.
+    SessionsFull {
+        /// Live decode sessions when the request was dequeued.
+        active: usize,
+        /// The configured admission ceiling.
+        max: usize,
+    },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::SessionsFull { active, max } => {
+                write!(f, "decode scheduler at capacity ({active}/{max} sessions)")
+            }
+        }
+    }
 }
 
 /// Terminal summary of one generation.
@@ -201,10 +243,13 @@ impl ServerHandle {
     /// Submit a generation request; returns the token stream immediately.
     ///
     /// The stream yields one [`TokenEvent::Token`] per sampled token as the
-    /// dispatcher advances the session (interleaved with classify batches),
-    /// then a terminal [`TokenEvent::Done`] or [`TokenEvent::Failed`]. The
-    /// channel is buffered for the whole stream, so a slow consumer never
-    /// blocks the dispatcher.
+    /// dispatcher's continuous-batching sweeps advance the session
+    /// (stacked with every other live session of the same variant), then a
+    /// terminal [`TokenEvent::Done`] or [`TokenEvent::Failed`] — or a
+    /// single [`TokenEvent::Rejected`] when admission control sheds the
+    /// request at the [`ServeConfig::max_sessions`] ceiling. The channel is
+    /// buffered for the whole stream, so a slow consumer never blocks the
+    /// dispatcher.
     pub fn generate(
         &self,
         prompt: Vec<i32>,
@@ -243,6 +288,9 @@ impl ServerHandle {
                 Ok(TokenEvent::Token { .. }) => continue,
                 Ok(TokenEvent::Done(resp)) => return Ok(resp),
                 Ok(TokenEvent::Failed(msg)) => return Err(anyhow!("generate rejected: {msg}")),
+                Ok(TokenEvent::Rejected(reason)) => {
+                    return Err(anyhow!("generate shed: {reason}"))
+                }
                 Err(_) => return Err(anyhow!("generate dropped (server shut down mid-stream)")),
             }
         }
@@ -320,6 +368,107 @@ fn native_bundle(
     Ok((Box::new(NativeBackend::new()), graphs))
 }
 
+/// Decode/classify interleave policy for the dispatcher loop — the explicit
+/// form of what used to be hard-coded ("one decode token per idle
+/// iteration").
+///
+/// Each dispatcher iteration ingests at most `drain_per_sweep` queued
+/// requests (classify admission + generate prefills), then runs
+/// `sweeps_per_iteration` decode sweeps, each advancing *every* active
+/// session one token. The defaults (8 / 1) mean a sustained classify
+/// backlog can delay a decode sweep by at most eight ingests, and decode
+/// work can never starve classify ingestion — see SERVING.md for the
+/// fairness analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FairnessConfig {
+    /// Queued requests ingested per dispatcher iteration before decoding
+    /// resumes (must be ≥ 1).
+    pub drain_per_sweep: usize,
+    /// Decode sweeps per dispatcher iteration (must be ≥ 1; each sweep is
+    /// one stacked token step over all active sessions).
+    pub sweeps_per_iteration: usize,
+}
+
+impl Default for FairnessConfig {
+    fn default() -> Self {
+        FairnessConfig { drain_per_sweep: 8, sweeps_per_iteration: 1 }
+    }
+}
+
+/// Serving policy for one dispatcher: dynamic-batching shape, queue bound,
+/// decode admission ceiling, and the decode/classify fairness policy.
+///
+/// Backpressure is layered: the submit queue holds at most
+/// `queue_capacity` requests (blocking [`ServerHandle::classify`] /
+/// [`ServerHandle::generate`] block there; [`ServerHandle::try_classify`]
+/// fails fast), and at most `max_sessions` generate requests hold live
+/// decode sessions — beyond that the dispatcher sheds with a typed
+/// [`TokenEvent::Rejected`] instead of letting per-token latency collapse
+/// for every stream.
+///
+/// # Examples
+///
+/// ```
+/// use greenformer::coordinator::{BatcherConfig, FairnessConfig, ServeConfig};
+///
+/// let cfg = ServeConfig {
+///     max_sessions: 4,     // admission ceiling: shed the 5th concurrent stream
+///     queue_capacity: 32,  // bounded submit queue
+///     ..ServeConfig::default()
+/// };
+/// assert_eq!(cfg.fairness, FairnessConfig::default());
+/// assert_eq!(cfg.batcher.max_batch, BatcherConfig::default().max_batch);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Classify dynamic-batching shape (size-or-deadline per variant).
+    pub batcher: BatcherConfig,
+    /// Bound of the shared submit queue (requests, classify + generate).
+    pub queue_capacity: usize,
+    /// Maximum concurrent decode sessions before generate requests are
+    /// shed with [`ShedReason::SessionsFull`] (must be ≥ 1).
+    pub max_sessions: usize,
+    /// Decode/classify interleave policy.
+    pub fairness: FairnessConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batcher: BatcherConfig::default(),
+            queue_capacity: 256,
+            max_sessions: 64,
+            fairness: FairnessConfig::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Convenience for the common "tune the batcher, default the rest"
+    /// call sites.
+    pub fn with_batcher(batcher: BatcherConfig, queue_capacity: usize) -> Self {
+        ServeConfig { batcher, queue_capacity, ..ServeConfig::default() }
+    }
+
+    /// Reject zero-valued knobs that would wedge the dispatcher (a queue
+    /// that admits nothing, a scheduler that never decodes).
+    fn validate(&self) -> Result<()> {
+        if self.queue_capacity == 0 {
+            anyhow::bail!("ServeConfig.queue_capacity must be >= 1");
+        }
+        if self.max_sessions == 0 {
+            anyhow::bail!("ServeConfig.max_sessions must be >= 1");
+        }
+        if self.fairness.drain_per_sweep == 0 {
+            anyhow::bail!("FairnessConfig.drain_per_sweep must be >= 1");
+        }
+        if self.fairness.sweeps_per_iteration == 0 {
+            anyhow::bail!("FairnessConfig.sweeps_per_iteration must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// Spawn the serving loop for one model family, selecting the backend
 /// automatically: PJRT when `artifacts_dir` holds a manifest and the runtime
 /// loads, the native interpreter otherwise. With artifacts present, a
@@ -335,11 +484,10 @@ pub fn serve_classifier(
     model: &str,
     variants: HashMap<String, ParamStore>,
     router: Router,
-    cfg: BatcherConfig,
-    queue_capacity: usize,
+    cfg: ServeConfig,
 ) -> Result<ServerHandle> {
     let model = model.to_string();
-    let max_batch = cfg.max_batch;
+    let max_batch = cfg.batcher.max_batch;
     serve_classifier_with(
         move |variants| {
             if artifacts_dir.join("manifest.json").exists() {
@@ -355,7 +503,6 @@ pub fn serve_classifier(
         variants,
         router,
         cfg,
-        queue_capacity,
     )
 }
 
@@ -369,17 +516,15 @@ pub fn serve_classifier_native(
     model: &str,
     variants: HashMap<String, ParamStore>,
     router: Router,
-    cfg: BatcherConfig,
-    queue_capacity: usize,
+    cfg: ServeConfig,
 ) -> Result<ServerHandle> {
     let model = model.to_string();
-    let max_batch = cfg.max_batch;
+    let max_batch = cfg.batcher.max_batch;
     serve_classifier_with(
         move |variants| native_bundle(&model, variants, max_batch),
         variants,
         router,
         cfg,
-        queue_capacity,
     )
 }
 
@@ -391,12 +536,12 @@ pub fn serve_classifier_with(
     factory: impl FnOnce(&HashMap<String, ParamStore>) -> Result<BackendBundle> + Send + 'static,
     variants: HashMap<String, ParamStore>,
     router: Router,
-    cfg: BatcherConfig,
-    queue_capacity: usize,
+    cfg: ServeConfig,
 ) -> Result<ServerHandle> {
+    cfg.validate()?;
     let metrics = Arc::new(Metrics::new());
     let depth = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = sync_channel::<Request>(queue_capacity);
+    let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
     // Rendezvous for startup success/failure.
     let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
 
@@ -445,7 +590,7 @@ fn dispatch_loop(
     graphs: HashMap<String, GraphSpec>,
     variants: HashMap<String, ParamStore>,
     router: Router,
-    cfg: BatcherConfig,
+    cfg: ServeConfig,
     rx: Receiver<Request>,
     metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
@@ -456,16 +601,17 @@ fn dispatch_loop(
         .map(|k| {
             // Effective per-variant max batch: bounded by the artifact.
             let eff = BatcherConfig {
-                max_batch: cfg.max_batch.min(graphs[k].batch),
-                max_wait: cfg.max_wait,
+                max_batch: cfg.batcher.max_batch.min(graphs[k].batch),
+                max_wait: cfg.batcher.max_wait,
             };
             (k.clone(), (Batcher::new(eff), Vec::new()))
         })
         .collect();
-    // In-flight generations, advanced one token per loop iteration in
-    // round-robin order — so long generations never starve classify batches
-    // and sustained classify traffic never starves generations.
-    let mut active: VecDeque<ActiveDecode> = VecDeque::new();
+    // In-flight generations under continuous batching: every decode sweep
+    // advances all of them one token, stacked into one batched step per
+    // variant. Sessions join after their prefill and leave on completion
+    // without stalling the others.
+    let mut active: Vec<ActiveDecode> = Vec::new();
 
     loop {
         let now = Instant::now();
@@ -474,109 +620,231 @@ fn dispatch_loop(
             .filter_map(|(b, _)| b.time_to_deadline(now))
             .min();
 
-        let msg = if active.is_empty() {
+        // Ingest phase: block only when there is no decode work; otherwise
+        // take what the queue already holds, bounded by the fairness policy
+        // so a deep classify backlog delays the next decode sweep by at
+        // most `drain_per_sweep` ingests.
+        let first = if active.is_empty() {
             match next_deadline {
                 Some(d) => rx.recv_timeout(d),
                 None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
             }
         } else {
-            // Runnable decode work exists: never block. Drain the queue
-            // opportunistically; an empty queue falls through to the
-            // timeout arm, which flushes due classify batches.
             match rx.try_recv() {
                 Ok(m) => Ok(m),
                 Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
                 Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
             }
         };
+        let mut disconnected = false;
+        match first {
+            Ok(msg) => {
+                handle_request(
+                    msg, backend, &graphs, &variants, &router, &mut batchers, &mut active, &cfg,
+                    &metrics, &depth,
+                );
+                for _ in 1..cfg.fairness.drain_per_sweep {
+                    match rx.try_recv() {
+                        Ok(msg) => handle_request(
+                            msg, backend, &graphs, &variants, &router, &mut batchers, &mut active,
+                            &cfg, &metrics, &depth,
+                        ),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            disconnected = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+        }
 
-        match msg {
-            Ok(Request::Classify(req)) => {
-                let variant = router
-                    .route(req.tier, depth.load(Ordering::Relaxed))
-                    .to_string();
-                let (batcher, pendings) = batchers
-                    .get_mut(&variant)
-                    .expect("router validated variants at build");
-                pendings.push(Pending {
-                    tokens: req.tokens,
-                    arrived: Instant::now(),
-                    resp: req.resp,
-                });
-                if let Some(ids) = batcher.push(pendings.len() - 1, Instant::now()) {
+        // Deadline pass every iteration (not just on an idle timeout): with
+        // live decode sessions the loop never blocks, and a partial classify
+        // batch must still flush once its max_wait expires.
+        flush_due_batches(backend, &graphs, &variants, &mut batchers, &metrics, &depth);
+
+        if disconnected {
+            // All handles dropped: flush whatever is queued and exit.
+            for (variant, (batcher, pendings)) in batchers.iter_mut() {
+                if let Some(ids) = batcher.flush() {
                     let taken = std::mem::take(pendings);
                     depth.fetch_sub(taken.len(), Ordering::Relaxed);
                     run_batch(
                         backend,
-                        &graphs[&variant],
-                        &variants[&variant],
-                        &variant,
+                        &graphs[variant],
+                        &variants[variant],
+                        variant,
                         ids,
                         taken,
                         &metrics,
                     );
                 }
             }
-            Ok(Request::Generate(req)) => {
-                if let Some(state) =
-                    start_decode(backend, &graphs, &variants, &router, req, &metrics, &depth)
-                {
-                    active.push_back(state);
-                }
+            // Token streams may outlive the submitting handle — sweep every
+            // in-flight generation to completion before exiting.
+            while !active.is_empty() {
+                decode_sweep(backend, &graphs, &variants, &mut active, &metrics, &depth);
             }
-            Err(RecvTimeoutError::Timeout) => {
-                let now = Instant::now();
-                for (variant, (batcher, pendings)) in batchers.iter_mut() {
-                    if let Some(ids) = batcher.poll_deadline(now) {
-                        let taken = std::mem::take(pendings);
-                        depth.fetch_sub(taken.len(), Ordering::Relaxed);
-                        run_batch(
-                            backend,
-                            &graphs[variant],
-                            &variants[variant],
-                            variant,
-                            ids,
-                            taken,
-                            &metrics,
-                        );
-                    }
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => {
-                // All handles dropped: flush whatever is queued and exit.
-                for (variant, (batcher, pendings)) in batchers.iter_mut() {
-                    if let Some(ids) = batcher.flush() {
-                        let taken = std::mem::take(pendings);
-                        depth.fetch_sub(taken.len(), Ordering::Relaxed);
-                        run_batch(
-                            backend,
-                            &graphs[variant],
-                            &variants[variant],
-                            variant,
-                            ids,
-                            taken,
-                            &metrics,
-                        );
-                    }
-                }
-                // Token streams may outlive the submitting handle — run
-                // every in-flight generation to completion before exiting.
-                while let Some(mut state) = active.pop_front() {
-                    while !advance_decode(backend, &graphs, &variants, &mut state, &metrics, &depth)
-                    {
-                    }
-                }
-                break;
-            }
+            break;
         }
 
-        // Advance exactly one decode step per loop iteration, whatever the
-        // iteration otherwise did — so sustained classify traffic (a never-
-        // empty queue) cannot starve generations, and sessions round-robin
-        // among themselves.
-        if let Some(mut state) = active.pop_front() {
-            if !advance_decode(backend, &graphs, &variants, &mut state, &metrics, &depth) {
-                active.push_back(state);
+        // Decode phase: each sweep advances every active session one token
+        // — one stacked batched step per variant — so sustained classify
+        // traffic (a never-empty queue) cannot starve generations, and no
+        // session can starve another.
+        for _ in 0..cfg.fairness.sweeps_per_iteration {
+            if active.is_empty() {
+                break;
+            }
+            decode_sweep(backend, &graphs, &variants, &mut active, &metrics, &depth);
+        }
+    }
+}
+
+/// Execute every classify batch whose `max_wait` deadline has passed.
+fn flush_due_batches(
+    backend: &dyn Backend,
+    graphs: &HashMap<String, GraphSpec>,
+    variants: &HashMap<String, ParamStore>,
+    batchers: &mut HashMap<String, (Batcher, Vec<Pending>)>,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    let now = Instant::now();
+    for (variant, (batcher, pendings)) in batchers.iter_mut() {
+        if let Some(ids) = batcher.poll_deadline(now) {
+            let taken = std::mem::take(pendings);
+            depth.fetch_sub(taken.len(), Ordering::Relaxed);
+            run_batch(
+                backend,
+                &graphs[variant],
+                &variants[variant],
+                variant,
+                ids,
+                taken,
+                metrics,
+            );
+        }
+    }
+}
+
+/// Ingest one queued request: admit a classify row into its variant's
+/// batcher (executing the batch if it filled), or admit/shed + prefill a
+/// generation. Runs on the dispatcher thread.
+#[allow(clippy::too_many_arguments)]
+fn handle_request(
+    msg: Request,
+    backend: &dyn Backend,
+    graphs: &HashMap<String, GraphSpec>,
+    variants: &HashMap<String, ParamStore>,
+    router: &Router,
+    batchers: &mut HashMap<String, (Batcher, Vec<Pending>)>,
+    active: &mut Vec<ActiveDecode>,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    match msg {
+        Request::Classify(req) => {
+            let variant = router
+                .route(req.tier, depth.load(Ordering::Relaxed))
+                .to_string();
+            let (batcher, pendings) = batchers
+                .get_mut(&variant)
+                .expect("router validated variants at build");
+            pendings.push(Pending {
+                tokens: req.tokens,
+                arrived: Instant::now(),
+                resp: req.resp,
+            });
+            if let Some(ids) = batcher.push(pendings.len() - 1, Instant::now()) {
+                let taken = std::mem::take(pendings);
+                depth.fetch_sub(taken.len(), Ordering::Relaxed);
+                run_batch(
+                    backend,
+                    &graphs[&variant],
+                    &variants[&variant],
+                    &variant,
+                    ids,
+                    taken,
+                    metrics,
+                );
+            }
+        }
+        Request::Generate(req) => {
+            // Admission control: beyond the session ceiling, shed with a
+            // typed rejection instead of letting every stream's per-token
+            // latency collapse. Sheds are terminal and counted separately
+            // from errors (the request was well-formed).
+            if active.len() >= cfg.max_sessions {
+                metrics.record_shed();
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let _ = req.resp.send(TokenEvent::Rejected(ShedReason::SessionsFull {
+                    active: active.len(),
+                    max: cfg.max_sessions,
+                }));
+                return;
+            }
+            if let Some(state) = start_decode(backend, graphs, variants, router, req, metrics, depth)
+            {
+                active.push(state);
+            }
+        }
+    }
+}
+
+/// One continuous-batching decode sweep: advance every active session one
+/// token, stacked into a single [`Backend::run_decode_step_batched`] call
+/// per variant (sessions only stack over a shared checkpoint). Finished
+/// sessions leave `active`; survivors are regrouped by variant, preserving
+/// arrival order within each variant.
+fn decode_sweep(
+    backend: &dyn Backend,
+    graphs: &HashMap<String, GraphSpec>,
+    variants: &HashMap<String, ParamStore>,
+    active: &mut Vec<ActiveDecode>,
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) {
+    let mut groups: Vec<(String, Vec<ActiveDecode>)> = Vec::new();
+    for state in active.drain(..) {
+        match groups.iter_mut().find(|(v, _)| *v == state.variant) {
+            Some((_, members)) => members.push(state),
+            None => groups.push((state.variant.clone(), vec![state])),
+        }
+    }
+    for (variant, mut group) in groups {
+        let graph = &graphs[&variant];
+        let store = &variants[&variant];
+        let tokens: Vec<i32> = group
+            .iter()
+            .map(|s| *s.tokens.last().expect("active decode has at least one sampled token"))
+            .collect();
+        let step = {
+            let mut sessions: Vec<&mut DecodeSession> =
+                group.iter_mut().map(|s| &mut s.session).collect();
+            backend.run_decode_step_batched(graph, store, &mut sessions, &tokens)
+        };
+        match step {
+            Ok(all_logits) => {
+                metrics.record_decode_step(group.len());
+                for (mut state, logits) in group.into_iter().zip(all_logits) {
+                    if !emit_token(&mut state, &logits, metrics, depth) {
+                        active.push(state);
+                    }
+                }
+            }
+            Err(e) => {
+                // The stacked step validates every session before touching
+                // any cache, so a failure is systemic (malformed model) and
+                // fails the whole group — each member gets its terminal
+                // event.
+                for state in group {
+                    decode_failed(&state.resp, format!("decode step failed: {e:#}"), metrics, depth);
+                }
             }
         }
     }
@@ -700,28 +968,6 @@ fn emit_token(
         return true;
     }
     false
-}
-
-/// Append the last sampled token and emit the next one. Returns true when
-/// the session is finished (Done or Failed sent).
-fn advance_decode(
-    backend: &dyn Backend,
-    graphs: &HashMap<String, GraphSpec>,
-    variants: &HashMap<String, ParamStore>,
-    state: &mut ActiveDecode,
-    metrics: &Metrics,
-    depth: &AtomicUsize,
-) -> bool {
-    let graph = &graphs[&state.variant];
-    let store = &variants[&state.variant];
-    let tok = *state.tokens.last().expect("active decode has at least one sampled token");
-    match backend.run_decode_step(graph, store, &mut state.session, &[tok]) {
-        Ok(logits) => emit_token(state, &logits, metrics, depth),
-        Err(e) => {
-            decode_failed(&state.resp, format!("decode step failed: {e:#}"), metrics, depth);
-            true
-        }
-    }
 }
 
 fn run_batch(

@@ -224,6 +224,153 @@ pub fn measure_decode_latency(
     })
 }
 
+/// Aggregate throughput of decoding several concurrent streams, measured
+/// under the two scheduling policies the coordinator has known: round-robin
+/// (each stream advanced by its own solo [`Backend::run_decode_step`], the
+/// pre-continuous-batching dispatcher) and stacked (all streams advanced by
+/// one [`Backend::run_decode_step_batched`] call per token step).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchedDecodeThroughput {
+    /// Concurrent streams decoded.
+    pub sessions: usize,
+    /// Tokens generated per stream per iteration.
+    pub new_tokens: usize,
+    /// Aggregate tokens/sec with all streams stacked into one batched step.
+    pub batched_tps: f64,
+    /// Aggregate tokens/sec advancing each stream with its own solo step.
+    pub roundrobin_tps: f64,
+}
+
+impl BatchedDecodeThroughput {
+    /// Stacked throughput over round-robin throughput (> 1.0 when the
+    /// packed GEMM wins).
+    pub fn speedup(&self) -> f64 {
+        self.batched_tps / self.roundrobin_tps.max(1e-12)
+    }
+}
+
+/// Measure continuous-batching decode throughput: each iteration prefills
+/// one fresh [`DecodeSession`] per prompt, then generates `new_tokens`
+/// greedily per stream — once advancing every stream with solo steps
+/// (round-robin) and once advancing all of them with stacked batched steps.
+/// Only the post-prefill token steps are timed (prefill cost is
+/// [`measure_decode_latency`]'s number). The two schedules are
+/// value-identical by construction, and this harness re-checks that: it
+/// fails if the token streams diverge. Requires a backend with a native
+/// decode path; `warmup` whole iterations are discarded.
+///
+/// # Examples
+///
+/// ```
+/// use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+/// use greenformer::backend::NativeBackend;
+/// use greenformer::eval::measure_batched_decode;
+///
+/// let cfg = TextModelCfg { vocab: 48, seq: 12, d: 24, heads: 6, layers: 1, ff: 32, classes: 48 };
+/// let params = init_text_params(&cfg, 7);
+/// let graph = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+/// let prompts = vec![vec![1, 2, 3], vec![4, 5, 6]];
+/// let t = measure_batched_decode(&NativeBackend::new(), &graph, &params, &prompts, 4, 0, 1)
+///     .unwrap();
+/// assert_eq!(t.sessions, 2);
+/// assert!(t.batched_tps > 0.0 && t.roundrobin_tps > 0.0);
+/// ```
+pub fn measure_batched_decode(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    prompts: &[Vec<i32>],
+    new_tokens: usize,
+    warmup: usize,
+    iters: usize,
+) -> Result<BatchedDecodeThroughput> {
+    if prompts.is_empty() || new_tokens == 0 || iters == 0 {
+        anyhow::bail!("measure_batched_decode needs prompts, new_tokens >= 1 and iters >= 1");
+    }
+    let m = prompts.len();
+    let greedy = SamplingCfg::greedy();
+    let mut rng = greedy.rng();
+    // Prefill all streams and sample each one's first next-token.
+    let prefill = |sessions: &mut Vec<DecodeSession>,
+                   last: &mut Vec<i32>,
+                   rng: &mut crate::util::Pcg64|
+     -> Result<()> {
+        sessions.clear();
+        last.clear();
+        for prompt in prompts {
+            let mut s = DecodeSession::new(graph, params)?;
+            let logits = backend.run_decode_step(graph, params, &mut s, prompt)?;
+            if s.remaining() < new_tokens {
+                anyhow::bail!(
+                    "prompt {} + new_tokens {new_tokens} exceeds the model's seq capacity {}",
+                    prompt.len(),
+                    s.max_seq()
+                );
+            }
+            last.push(sample_token(logits.as_f32()?, &greedy, rng) as i32);
+            sessions.push(s);
+        }
+        Ok(())
+    };
+
+    let mut sw_rr = Stopwatch::new();
+    let mut sw_batched = Stopwatch::new();
+    let mut sessions: Vec<DecodeSession> = Vec::with_capacity(m);
+    let mut last: Vec<i32> = Vec::with_capacity(m);
+    let mut rr_streams: Vec<Vec<i32>> = Vec::new();
+    let mut batched_streams: Vec<Vec<i32>> = Vec::new();
+    for it in 0..warmup + iters {
+        let measured = it >= warmup;
+
+        // Round-robin schedule: one solo step per stream per token.
+        prefill(&mut sessions, &mut last, &mut rng)?;
+        rr_streams = last.iter().map(|&t| vec![t]).collect();
+        for _ in 0..new_tokens {
+            for (i, s) in sessions.iter_mut().enumerate() {
+                let tok = last[i];
+                let logits = if measured {
+                    sw_rr.time(|| backend.run_decode_step(graph, params, s, &[tok]))?
+                } else {
+                    backend.run_decode_step(graph, params, s, &[tok])?
+                };
+                last[i] = sample_token(logits.as_f32()?, &greedy, &mut rng) as i32;
+                rr_streams[i].push(last[i]);
+            }
+        }
+
+        // Stacked schedule: one batched step over all streams per token.
+        prefill(&mut sessions, &mut last, &mut rng)?;
+        batched_streams = last.iter().map(|&t| vec![t]).collect();
+        for _ in 0..new_tokens {
+            let step = {
+                let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+                if measured {
+                    sw_batched
+                        .time(|| backend.run_decode_step_batched(graph, params, &mut refs, &last))?
+                } else {
+                    backend.run_decode_step_batched(graph, params, &mut refs, &last)?
+                }
+            };
+            for (i, logits) in step.iter().enumerate() {
+                last[i] = sample_token(logits.as_f32()?, &greedy, &mut rng) as i32;
+                batched_streams[i].push(last[i]);
+            }
+        }
+    }
+    // Greedy decoding + value-identical steps ⇒ the schedules must agree.
+    anyhow::ensure!(
+        rr_streams == batched_streams,
+        "batched decode diverged from round-robin decode"
+    );
+    let total = (iters * m * new_tokens) as f64;
+    Ok(BatchedDecodeThroughput {
+        sessions: m,
+        new_tokens,
+        batched_tps: total / sw_batched.total_secs().max(1e-12),
+        roundrobin_tps: total / sw_rr.total_secs().max(1e-12),
+    })
+}
+
 /// Median latency (seconds) of a single forward pass of `graph`, after
 /// `warmup` discarded runs — the speedup axis of Figure 2.
 pub fn measure_latency(

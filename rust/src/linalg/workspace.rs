@@ -19,8 +19,10 @@
 //!
 //! Ownership of the [`Workspace`] follows the execution context: each
 //! [`crate::backend::DecodeSession`] owns one (sessions migrate between
-//! dispatcher threads), while the forward and training interpreters share a
-//! per-thread arena via [`with_thread_ws`].
+//! dispatcher threads), while the forward, training and *batched decode*
+//! interpreters share a per-thread arena via [`with_thread_ws`] — the
+//! continuous-batching sweep's stacked activations are sized by the live
+//! batch, which belongs to the dispatcher thread, not to any one session.
 
 use std::cell::RefCell;
 
@@ -88,6 +90,14 @@ impl Workspace {
     pub fn give(&mut self, buf: Vec<f32>) {
         if buf.capacity() > 0 {
             self.free.push(buf);
+        }
+    }
+
+    /// Retire a batch of buffers — the interpreter epilogues return their
+    /// whole scratch set in one call.
+    pub fn give_all(&mut self, bufs: impl IntoIterator<Item = Vec<f32>>) {
+        for buf in bufs {
+            self.give(buf);
         }
     }
 

@@ -8,10 +8,12 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use greenformer::backend::native::{demo_variants, init_text_params, synth_fwd_graph, TextModelCfg};
-use greenformer::backend::{generate as lm_generate, NativeBackend, SamplingCfg};
+use greenformer::backend::{
+    generate as lm_generate, generate_batched as lm_generate_batched, NativeBackend, SamplingCfg,
+};
 use greenformer::config::ExperimentConfig;
 use greenformer::coordinator::{
-    serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
+    serve_classifier, serve_classifier_native, RoutePolicy, Router, ServeConfig, Tier,
 };
 use greenformer::data::image::{all_image_tasks, HW};
 use greenformer::data::text::all_text_tasks;
@@ -41,12 +43,14 @@ COMMANDS:
   fig2      [--use-case by-design|post-training|icl] [--quick] [--steps N]
   report-cost                           cost-model table (E5)
   report-solvers                        solver comparison table (E6)
-  serve-demo [--requests 200] [--train-steps 60]
+  serve-demo [--requests 200] [--train-steps 60] [--max-sessions 64]
   generate  [--max-new 32] [--temperature 0.0] [--top-k 0] [--seed 42]
             [--prompt "3,17,42" | --prompt-len 16] [--ratio 0.25]
-            [--model-seed 42] [--stats]
+            [--model-seed 42] [--stats] [--sessions 1]
             KV-cached autoregressive decoding on a synthetic LM
-            (artifact-free; random init, factorized when --ratio is given)
+            (artifact-free; random init, factorized when --ratio is given).
+            --sessions N decodes N staggered prompts concurrently through
+            the continuous-batching stacked step (see SERVING.md)
 
 Backends: pjrt executes the AOT artifacts; native is the pure-Rust CPU
 interpreter (no artifacts needed — it trains too, via the grad module, and
@@ -434,6 +438,35 @@ fn generate_cmd(args: &Args) -> Result<()> {
         max_new
     );
     let be = NativeBackend::new();
+    let sessions = args.parse_or("--sessions", 1usize).max(1);
+    if sessions > 1 {
+        // Continuous-batching path: decode N streams concurrently, one
+        // stacked GEMM step per token. Streams get distinct prompts (the
+        // base prompt plus per-stream random ones) so the printout shows
+        // genuinely independent generations.
+        let mut rng = greenformer::util::Pcg64::new(sampling.seed, 23);
+        let mut prompts = vec![prompt.clone()];
+        for _ in 1..sessions {
+            let n = prompt.len().max(1);
+            prompts.push((0..n).map(|_| rng.below(cfg.vocab) as i32).collect());
+        }
+        let cfgs = vec![sampling; sessions];
+        let t0 = std::time::Instant::now();
+        let outs = lm_generate_batched(&be, &graph, &params, &prompts, max_new, &cfgs)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let mut total = 0usize;
+        for (i, out) in outs.iter().enumerate() {
+            total += out.tokens.len();
+            let shown: Vec<String> = out.tokens.iter().map(|t| t.to_string()).collect();
+            println!("stream {i}: {}", shown.join(" "));
+        }
+        println!(
+            "{sessions} streams x {max_new} tokens: {total} tokens in {secs:.3}s \
+             ({:.1} tok/s aggregate, stacked steps)",
+            total as f64 / secs.max(1e-12)
+        );
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     print!("generated:");
     let out = lm_generate(&be, &graph, &params, &prompt, max_new, &sampling, |_, t| {
@@ -514,18 +547,13 @@ fn serve_demo(args: &Args, requests: usize, train_steps: usize) -> Result<()> {
         stores.keys().cloned().collect(),
     )?;
 
+    let cfg = ServeConfig {
+        max_sessions: args.parse_or("--max-sessions", ServeConfig::default().max_sessions),
+        ..ServeConfig::default()
+    };
     let handle = match choice {
-        BackendChoice::Pjrt => serve_classifier(
-            art_dir,
-            "text",
-            stores,
-            router,
-            BatcherConfig::default(),
-            1024,
-        )?,
-        BackendChoice::Native => {
-            serve_classifier_native("text", stores, router, BatcherConfig::default(), 1024)?
-        }
+        BackendChoice::Pjrt => serve_classifier(art_dir, "text", stores, router, cfg)?,
+        BackendChoice::Native => serve_classifier_native("text", stores, router, cfg)?,
     };
 
     let mut joins = Vec::new();

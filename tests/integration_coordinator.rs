@@ -8,7 +8,9 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use greenformer::coordinator::{serve_classifier, BatcherConfig, RoutePolicy, Router, Tier};
+use greenformer::coordinator::{
+    serve_classifier, BatcherConfig, RoutePolicy, Router, ServeConfig, Tier,
+};
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{Dataset, Split};
 use greenformer::tensor::ParamStore;
@@ -50,11 +52,13 @@ fn serves_concurrent_requests_exactly_once() {
         "text",
         stores,
         router,
-        BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(3),
-        },
-        256,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(3),
+            },
+            256,
+        ),
     )
     .unwrap();
 
@@ -119,8 +123,7 @@ fn rejects_unknown_variant_at_startup() {
         "text",
         stores,
         router,
-        BatcherConfig::default(),
-        16,
+        ServeConfig::with_batcher(BatcherConfig::default(), 16),
     );
     assert!(res.is_err());
 }
@@ -141,11 +144,13 @@ fn deadline_flushes_partial_batches() {
         "text",
         stores,
         router,
-        BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(2),
-        },
-        16,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+            },
+            16,
+        ),
     )
     .unwrap();
     let ds = PolarityTask::new(64, 2);

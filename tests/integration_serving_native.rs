@@ -13,8 +13,8 @@ use std::time::Duration;
 use greenformer::backend::native::{demo_variants, TextModelCfg};
 use greenformer::backend::SamplingCfg;
 use greenformer::coordinator::{
-    serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, Tier,
-    TokenEvent,
+    serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, ServeConfig,
+    ShedReason, Tier, TokenEvent,
 };
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{Dataset, Split};
@@ -66,11 +66,13 @@ fn serves_concurrent_requests_exactly_once_on_native_backend() {
         "text",
         stores,
         router,
-        BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(3),
-        },
-        256,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(3),
+            },
+            256,
+        ),
     )
     .unwrap();
 
@@ -132,11 +134,13 @@ fn bad_token_length_gets_error_response_not_a_dispatcher_panic() {
         "text",
         stores,
         router,
-        BatcherConfig {
-            max_batch: 4,
-            max_wait: Duration::from_millis(2),
-        },
-        16,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+            16,
+        ),
     )
     .unwrap();
 
@@ -189,6 +193,10 @@ fn lm_stores() -> HashMap<String, ParamStore> {
 }
 
 fn lm_server() -> greenformer::coordinator::ServerHandle {
+    lm_server_with(ServeConfig::with_batcher(BatcherConfig::default(), 128))
+}
+
+fn lm_server_with(cfg: ServeConfig) -> greenformer::coordinator::ServerHandle {
     let stores = lm_stores();
     let router = Router::new(
         RoutePolicy::Tiered {
@@ -199,7 +207,7 @@ fn lm_server() -> greenformer::coordinator::ServerHandle {
         stores.keys().cloned().collect(),
     )
     .unwrap();
-    serve_classifier_native("lm", stores, router, BatcherConfig::default(), 128).unwrap()
+    serve_classifier_native("lm", stores, router, cfg).unwrap()
 }
 
 #[test]
@@ -227,6 +235,7 @@ fn generate_streams_tokens_and_reconciles_per_token_metrics() {
             }
             TokenEvent::Done(resp) => break resp,
             TokenEvent::Failed(msg) => panic!("generation failed: {msg}"),
+            TokenEvent::Rejected(reason) => panic!("generation shed: {reason}"),
         }
     };
     assert_eq!(streamed, done.tokens);
@@ -285,6 +294,90 @@ fn generate_streams_tokens_and_reconciles_per_token_metrics() {
     assert_eq!(handle.queue_depth(), 0);
     let counts = m.variant_counts();
     assert_eq!(counts["dense"] + counts["led_r50"], generations);
+
+    // Continuous-batching counters reconcile exactly regardless of how the
+    // scheduler happened to group the streams: each generation's first token
+    // comes from its prefill, so every generation contributes exactly
+    // `max_new - 1` session-tokens to merged sweeps, however batched.
+    assert_eq!(
+        m.merged_step_tokens.load(Ordering::Relaxed),
+        generations * (max_new as u64 - 1)
+    );
+    let merged_steps = m.merged_steps.load(Ordering::Relaxed);
+    assert!(merged_steps >= 1);
+    assert!(merged_steps <= generations * (max_new as u64 - 1));
+    assert!(m.decode_batch_occupancy() >= 1.0);
+    assert_eq!(m.shed_requests.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn sequential_load_pins_occupancy_at_one_and_admission_sheds_above_capacity() {
+    // Phase 1 — strictly sequential load: `generate_collect` blocks until
+    // Done and the single-threaded dispatcher retires a session before the
+    // next ingest, so every merged sweep carries exactly one session and
+    // occupancy is exactly 1.0.
+    let handle = lm_server();
+    let max_new = 6usize;
+    let gens = 3u64;
+    for i in 0..gens {
+        let s = SamplingCfg {
+            temperature: 0.8,
+            top_k: 8,
+            seed: i,
+        };
+        let resp = handle.generate_collect(vec![1, 2, 3], max_new, s, Tier::Quality).unwrap();
+        assert_eq!(resp.tokens.len(), max_new);
+    }
+    let m = &handle.metrics;
+    let sweep_tokens = gens * (max_new as u64 - 1); // first token of each stream is prefill's
+    assert_eq!(m.merged_step_tokens.load(Ordering::Relaxed), sweep_tokens);
+    assert_eq!(m.merged_steps.load(Ordering::Relaxed), sweep_tokens);
+    assert!((m.decode_batch_occupancy() - 1.0).abs() < f64::EPSILON);
+    assert_eq!(m.shed_requests.load(Ordering::Relaxed), 0);
+
+    // Phase 2 — admission control: with max_sessions = 1, a second stream
+    // submitted while the first is mid-generation is shed with a typed
+    // rejection, counted separately from errors, and the first stream is
+    // unaffected. Stream A runs the longest schedule the capacity allows
+    // (14 sweeps) so B's request is dequeued while A is still live.
+    let handle = lm_server_with(ServeConfig {
+        max_sessions: 1,
+        ..ServeConfig::default()
+    });
+    let max_new = 15usize; // prompt 1 + 14 appended fills seq = 16 exactly
+    let rx_a = handle
+        .generate(vec![1], max_new, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    let rx_b = handle
+        .generate(vec![2], 4, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+
+    match rx_b.recv().expect("shed stream must get a terminal event") {
+        TokenEvent::Rejected(ShedReason::SessionsFull { active, max }) => {
+            assert_eq!(active, 1);
+            assert_eq!(max, 1);
+        }
+        other => panic!("expected a typed shed, got {other:?}"),
+    }
+    assert!(rx_b.recv().is_err(), "no events may follow a rejection");
+
+    let done = loop {
+        match rx_a.recv().expect("stream A ended without a terminal event") {
+            TokenEvent::Token { .. } => {}
+            TokenEvent::Done(resp) => break resp,
+            other => panic!("stream A must survive the shed, got {other:?}"),
+        }
+    };
+    assert_eq!(done.tokens.len(), max_new);
+
+    // Requests reconcile: admitted + shed, with sheds disjoint from errors.
+    let m = &handle.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+    assert_eq!(m.responses.load(Ordering::Relaxed), 1);
+    assert_eq!(m.shed_requests.load(Ordering::Relaxed), 1);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.merged_step_tokens.load(Ordering::Relaxed), max_new as u64 - 1);
+    assert_eq!(handle.queue_depth(), 0);
 }
 
 #[test]
@@ -304,8 +397,13 @@ fn classify_and_generate_reject_mismatched_model_families_cleanly() {
     // Generate against a classifier family: Failed event, no panic.
     let stores = variant_stores();
     let router = tiered_router(&stores);
-    let text =
-        serve_classifier_native("text", stores, router, BatcherConfig::default(), 32).unwrap();
+    let text = serve_classifier_native(
+        "text",
+        stores,
+        router,
+        ServeConfig::with_batcher(BatcherConfig::default(), 32),
+    )
+    .unwrap();
     let err = text.generate_collect(vec![1, 2, 3], 4, SamplingCfg::greedy(), Tier::Quality);
     assert!(err.is_err(), "generate on a classifier variant must fail");
     let msg = format!("{:#}", err.unwrap_err());
@@ -338,11 +436,13 @@ fn serve_classifier_auto_falls_back_to_native_without_artifacts() {
         "text",
         stores,
         router,
-        BatcherConfig {
-            max_batch: 4,
-            max_wait: Duration::from_millis(2),
-        },
-        32,
+        ServeConfig::with_batcher(
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+            32,
+        ),
     )
     .unwrap();
     let ds = PolarityTask::new(SEQ, 3);

@@ -1,0 +1,238 @@
+//! Randomized property tests for continuous-batching decode (in-tree
+//! generator over `Pcg64` — proptest is unavailable offline; the
+//! methodology is the same: many random cases per invariant, failing seed
+//! printed on panic). Runs hermetically: no artifacts, no PJRT.
+//!
+//! Invariants:
+//! * a stacked `run_decode_step_batched` over m concurrent sessions produces,
+//!   for every session, logits identical (within 1e-5 — in practice
+//!   bit-identical, see `backend::decode`) to advancing that session alone
+//!   with solo `run_decode_step` calls, for dense **and** LED models, under
+//!   a schedule where streams join late and leave early (dynamic
+//!   join/leave, the coordinator's sweep shape);
+//! * `generate_batched` reproduces `generate` stream-for-stream under mixed
+//!   sampling policies.
+
+use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{
+    generate, generate_batched, Backend, DecodeSession, NativeBackend, SamplingCfg,
+};
+use greenformer::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use greenformer::runtime::GraphSpec;
+use greenformer::tensor::ParamStore;
+use greenformer::util::Pcg64;
+
+const TOL: f32 = 1e-5;
+
+/// Random small LM dims. `d >= 18` so the Eq.-1 gate (MIN_RANK = 8) accepts
+/// the attention/FFN layers of the LED cases.
+fn rand_lm_cfg(rng: &mut Pcg64) -> TextModelCfg {
+    let heads = if rng.below(2) == 0 { 3 } else { 4 };
+    let dk = 6 + rng.below(4); // 6..=9 → d in 18..=36
+    let vocab = 32 + rng.below(33);
+    TextModelCfg {
+        vocab,
+        seq: 8 + rng.below(7),
+        d: heads * dk,
+        heads,
+        layers: 1 + rng.below(2),
+        ff: 24 + rng.below(33),
+        classes: vocab, // head width = vocab: causal LM
+    }
+}
+
+/// Synthesized LM graph with the cfg's actual head count stamped in (the
+/// zoo default of 6 is not recoverable from the parameters).
+fn lm_graph(cfg: &TextModelCfg, variant: &str, params: &ParamStore) -> GraphSpec {
+    let mut g = synth_fwd_graph("lm", variant, 1, params).unwrap();
+    g.config.insert("heads".to_string(), cfg.heads);
+    g
+}
+
+/// Random-solver LED factorization at Ratio(0.5); panics if the random cfg
+/// was too small for any layer to pass the Eq.-1 gate.
+fn factorize(params: &mut ParamStore, seed: u64) {
+    let report = auto_fact(
+        params,
+        &AutoFactConfig {
+            rank: Rank::Ratio(0.5),
+            solver: Solver::Random,
+            num_iter: 0,
+            submodules: None,
+        },
+    )
+    .unwrap();
+    assert!(report.n_factorized() > 0, "seed {seed}: cfg too small for the Eq.-1 gate");
+}
+
+/// One simulated stream: mirrored sessions (one advanced through the
+/// stacked batched step, one through solo steps) fed identical tokens on an
+/// identical schedule.
+struct Stream {
+    /// Global step at which the stream prefills and joins the batch.
+    start: usize,
+    /// Batched token steps the stream runs before leaving.
+    steps: usize,
+    prompt: Vec<i32>,
+    batched: Option<DecodeSession>,
+    solo: Option<DecodeSession>,
+}
+
+#[test]
+fn stacked_step_matches_solo_steps_with_staggered_join_leave() {
+    let be = NativeBackend::new();
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed, 310);
+        let cfg = rand_lm_cfg(&mut rng);
+        let mut params = init_text_params(&cfg, seed ^ 0xBA);
+        let mut variant = "dense";
+        if seed % 2 == 1 {
+            // LED case: the batched path must dispatch a/b factors per layer.
+            factorize(&mut params, seed);
+            variant = "led_r50";
+        }
+        let g = lm_graph(&cfg, variant, &params);
+
+        // 2–4 streams with random prompts, random join times and random
+        // step budgets bounded by each stream's positional headroom.
+        let n_streams = 2 + rng.below(3);
+        let mut streams: Vec<Stream> = (0..n_streams)
+            .map(|_| {
+                let plen = 1 + rng.below(cfg.seq - 2);
+                let room = cfg.seq - plen;
+                Stream {
+                    start: rng.below(3),
+                    steps: 1 + rng.below(room),
+                    prompt: (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                    batched: None,
+                    solo: None,
+                }
+            })
+            .collect();
+        let last_step = streams.iter().map(|s| s.start + s.steps).max().unwrap();
+
+        for t in 0..last_step {
+            // Join phase: prefill both replicas of streams starting now and
+            // check they agree from the first logits on.
+            for (i, st) in streams.iter_mut().enumerate() {
+                if st.start != t {
+                    continue;
+                }
+                let mut b = DecodeSession::new(&g, &params).unwrap();
+                let lb = be.run_decode_step(&g, &params, &mut b, &st.prompt).unwrap();
+                let mut s = DecodeSession::new(&g, &params).unwrap();
+                let ls = be.run_decode_step(&g, &params, &mut s, &st.prompt).unwrap();
+                for (a, c) in lb.as_f32().unwrap().iter().zip(ls.as_f32().unwrap()) {
+                    assert!((a - c).abs() <= TOL, "seed {seed} ({variant}) stream {i} prefill");
+                }
+                st.batched = Some(b);
+                st.solo = Some(s);
+            }
+
+            // Live streams this step (joined, not yet out of budget) get one
+            // shared random token each.
+            let live: Vec<usize> = streams
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.start <= t && t < s.start + s.steps)
+                .map(|(i, _)| i)
+                .collect();
+            if live.is_empty() {
+                continue;
+            }
+            let toks: Vec<i32> =
+                live.iter().map(|_| rng.below(cfg.vocab) as i32).collect();
+
+            // Stacked step over all live streams at once (`live` is
+            // ascending, so this single `iter_mut` pass matches its order)...
+            let stacked = {
+                let mut refs: Vec<&mut DecodeSession> = streams
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| live.contains(i))
+                    .map(|(_, st)| st.batched.as_mut().unwrap())
+                    .collect();
+                be.run_decode_step_batched(&g, &params, &mut refs, &toks).unwrap()
+            };
+            // ...must match each stream's solo step on the same token.
+            for ((&i, tok), logits) in live.iter().zip(&toks).zip(&stacked) {
+                let st = &mut streams[i];
+                let solo = be
+                    .run_decode_step(&g, &params, st.solo.as_mut().unwrap(), &[*tok])
+                    .unwrap();
+                for (j, (a, c)) in logits
+                    .as_f32()
+                    .unwrap()
+                    .iter()
+                    .zip(solo.as_f32().unwrap())
+                    .enumerate()
+                {
+                    assert!(
+                        (a - c).abs() <= TOL,
+                        "seed {seed} ({variant}) stream {i} step {t} logit {j}: \
+                         batched {a} vs solo {c}"
+                    );
+                }
+                assert_eq!(
+                    st.batched.as_ref().unwrap().len(),
+                    st.solo.as_ref().unwrap().len(),
+                    "seed {seed} stream {i}: cache lengths diverged"
+                );
+            }
+        }
+        // Every stream ran its full schedule.
+        for (i, st) in streams.iter().enumerate() {
+            let got = st.batched.as_ref().unwrap().len();
+            assert_eq!(
+                got,
+                st.prompt.len() + st.steps,
+                "seed {seed} stream {i}: expected full schedule"
+            );
+        }
+    }
+}
+
+#[test]
+fn generate_batched_reproduces_generate_per_stream() {
+    let be = NativeBackend::new();
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(seed, 311);
+        let cfg = rand_lm_cfg(&mut rng);
+        let mut params = init_text_params(&cfg, seed ^ 0x77);
+        let mut variant = "dense";
+        if seed % 2 == 1 {
+            factorize(&mut params, seed);
+            variant = "led_r50";
+        }
+        let g = lm_graph(&cfg, variant, &params);
+
+        let n = 2 + rng.below(3);
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                let plen = 1 + rng.below(cfg.seq - 1);
+                (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect()
+            })
+            .collect();
+        let cfgs: Vec<SamplingCfg> = (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    SamplingCfg::greedy()
+                } else {
+                    SamplingCfg { temperature: 0.9, top_k: 8, seed: seed * 31 + i as u64 }
+                }
+            })
+            .collect();
+        let max_new = 1 + rng.below(6);
+
+        let batched = generate_batched(&be, &g, &params, &prompts, max_new, &cfgs).unwrap();
+        for (i, ((prompt, s), out)) in prompts.iter().zip(&cfgs).zip(&batched).enumerate() {
+            let solo = generate(&be, &g, &params, prompt, max_new, s, |_, _| {}).unwrap();
+            assert_eq!(
+                out.tokens, solo.tokens,
+                "seed {seed} ({variant}) stream {i}: batched stream diverged from solo"
+            );
+            assert_eq!(out.positions_used, solo.positions_used, "seed {seed} stream {i}");
+            assert_eq!(out.prefill_tokens, prompt.len(), "seed {seed} stream {i}");
+        }
+    }
+}

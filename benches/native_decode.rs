@@ -16,14 +16,24 @@
 //! token step) vs round-robin solo steps (one GEMV chain per stream) — the
 //! scheduler change SERVING.md documents.
 //!
+//! And the speculative-decoding win: the dense target decoded plain vs
+//! drafted by its own SVD LED factorization (`build_draft_params`) and
+//! verified k tokens per stacked pass — reporting `spec_tps`,
+//! `spec_speedup` and `acceptance_rate` (the fraction of cheap drafts the
+//! dense model accepted, the paper's accuracy-retention claim as a serving
+//! number).
+//!
 //! Env: GREENFORMER_BENCH_DECODE_TOKENS (default 48) scales the generation
 //! length; GREENFORMER_BENCH_DECODE_ITERS (default 3) the repetitions;
 //! GREENFORMER_BENCH_DECODE_SESSIONS (default 8) the concurrent streams in
-//! the batched-vs-roundrobin comparison.
+//! the batched-vs-roundrobin comparison; GREENFORMER_BENCH_SPEC_K (default
+//! 4) the per-round draft length of the speculative comparison.
 
 use greenformer::backend::native::{demo_variants, synth_fwd_graph, TextModelCfg};
-use greenformer::backend::NativeBackend;
-use greenformer::eval::{measure_batched_decode, measure_decode_latency, BatchedDecodeThroughput};
+use greenformer::backend::{build_draft_params, NativeBackend, SpecConfig};
+use greenformer::eval::{
+    measure_batched_decode, measure_decode_latency, measure_spec_decode, BatchedDecodeThroughput,
+};
 use greenformer::tensor::ParamStore;
 use greenformer::util::Pcg64;
 
@@ -157,6 +167,41 @@ fn main() {
         "led_r25", lb.batched_tps, lb.roundrobin_tps, lb.speedup()
     );
 
+    // Speculative decoding: dense target, SVD LED draft of itself at r25.
+    // (The LED variants above use the Random solver for shape realism; the
+    // draft must *approximate* the target, so it gets the SVD path.)
+    let spec_k = env_usize("GREENFORMER_BENCH_SPEC_K", 4).max(1);
+    let spec = SpecConfig { draft_ratio: 0.25, k: spec_k, ..Default::default() };
+    let draft = build_draft_params(&dense, spec.draft_ratio).expect("draft factorization");
+    let dense_graph = synth_fwd_graph("lm", "dense", 1, &dense).expect("synth graph");
+    let sp = measure_spec_decode(
+        &NativeBackend::new(),
+        &dense_graph,
+        &dense,
+        &draft,
+        &prompt,
+        new_tokens,
+        &spec,
+        1,
+        iters,
+    )
+    .expect("measure_spec_decode");
+    println!(
+        "\n== speculative decoding: dense target, SVD LED draft r25, k={spec_k} =="
+    );
+    println!(
+        "{:<10} {:>12} {:>12} {:>10} {:>12}",
+        "schedule", "spec(tok/s)", "plain(tok/s)", "speedup", "acceptance"
+    );
+    println!(
+        "{:<10} {:>12.1} {:>12.1} {:>9.2}x {:>12.2}",
+        "greedy",
+        sp.spec_tps,
+        sp.plain_tps,
+        sp.speedup(),
+        sp.acceptance_rate
+    );
+
     println!(
         "BENCH_NATIVE_DECODE {{\"prompt_tokens\":{PROMPT_TOKENS},\"new_tokens\":{new_tokens},\
          \"iters\":{iters},\"dense_tps\":{:.2},\"led_r50_tps\":{:.2},\"led_r25_tps\":{:.2},\
@@ -168,7 +213,9 @@ fn main() {
          \"dense_batched_tps\":{:.2},\"dense_roundrobin_tps\":{:.2},\
          \"dense_batched_speedup\":{:.3},\
          \"led_r25_batched_tps\":{:.2},\"led_r25_roundrobin_tps\":{:.2},\
-         \"led_r25_batched_speedup\":{:.3}}}",
+         \"led_r25_batched_speedup\":{:.3},\
+         \"spec_k\":{spec_k},\"spec_tps\":{:.2},\"spec_plain_tps\":{:.2},\
+         \"spec_speedup\":{:.3},\"acceptance_rate\":{:.3}}}",
         d.tokens_per_sec,
         r50.tokens_per_sec,
         r25.tokens_per_sec,
@@ -188,6 +235,10 @@ fn main() {
         db.speedup(),
         lb.batched_tps,
         lb.roundrobin_tps,
-        lb.speedup()
+        lb.speedup(),
+        sp.spec_tps,
+        sp.plain_tps,
+        sp.speedup(),
+        sp.acceptance_rate
     );
 }

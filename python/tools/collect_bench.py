@@ -41,6 +41,7 @@ QUICK_ENV = {
     "GREENFORMER_BENCH_DECODE_TOKENS": "32",
     "GREENFORMER_BENCH_DECODE_ITERS": "2",
     "GREENFORMER_BENCH_DECODE_SESSIONS": "4",
+    "GREENFORMER_BENCH_SPEC_K": "3",
     "GREENFORMER_BENCH_TRAIN_STEPS": "8",
 }
 
@@ -51,6 +52,8 @@ HIGHLIGHTS = {
         "led_r25_speedup",
         "dense_batched_speedup",
         "led_r25_batched_speedup",
+        "spec_speedup",
+        "acceptance_rate",
     ],
     "BENCH_NATIVE_SERVING": ["led_r25_speedup"],
     "BENCH_KERNELS": [],

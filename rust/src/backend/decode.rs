@@ -241,6 +241,38 @@ impl DecodeSession {
         }
     }
 
+    /// Truncate the cache back to `len` positions, discarding every newer
+    /// row (allocations are kept). This is the speculative-decode rollback
+    /// primitive: rejected draft suffixes are erased so the cache holds
+    /// exactly the accepted prefix — because each cached K/V row depends
+    /// only on its own position's activations and the rows before it, the
+    /// surviving prefix is bit-identical to a session that never saw the
+    /// rejected tokens (pinned by `tests/proptest_spec_decode.rs`). A `len`
+    /// at or beyond the current length is a no-op.
+    pub fn truncate(&mut self, len: usize) {
+        if len >= self.len {
+            return;
+        }
+        self.len = len;
+        for l in &mut self.layers {
+            l.k.truncate(len * self.d);
+            l.v.truncate(len * self.d);
+        }
+    }
+
+    /// Raw K/V cache rows of one layer, each row-major `(len, d)` — exposed
+    /// so equivalence tests can compare cache *state* (not just behavior)
+    /// bit-for-bit, e.g. post-rollback vs a fresh replay of the accepted
+    /// prefix. `None` if `layer` is out of range.
+    pub fn layer_kv(&self, layer: usize) -> Option<(&[f32], &[f32])> {
+        self.layers.get(layer).map(|l| (l.k.as_slice(), l.v.as_slice()))
+    }
+
+    /// Number of transformer blocks (and therefore KV cache layers).
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
     /// Scratch-arena takes that had to allocate because no retired buffer
     /// fit. Constant across steady-state decode steps (every post-prefill
     /// step requests identical buffer sizes) — the zero-allocation contract
@@ -268,6 +300,34 @@ pub(crate) fn native_decode_step(
     params: &ParamStore,
     session: &mut DecodeSession,
     new_tokens: &[i32],
+) -> Result<Tensor> {
+    decode_chunk(params, session, new_tokens, false)
+}
+
+/// The native implementation of [`Backend::run_decode_step_multi`]: same
+/// chunk append as [`native_decode_step`], but the LM head runs over **all**
+/// `n` chunk rows, returning `(n, vocab)` logits — row `i` is the next-token
+/// distribution after chunk position `i`. This is the speculative-verify
+/// primitive: one stacked pass scores every drafted position, and each row
+/// is value-identical to what a solo per-token step would have produced
+/// (the chunk shares every op with the solo path; only the head's row count
+/// differs, and `matmul_into`'s per-element accumulation order does not
+/// depend on the row count).
+pub(crate) fn native_decode_step_multi(
+    params: &ParamStore,
+    session: &mut DecodeSession,
+    new_tokens: &[i32],
+) -> Result<Tensor> {
+    decode_chunk(params, session, new_tokens, true)
+}
+
+/// Shared chunk-append core of the two step flavors; `all_rows` picks
+/// whether the LM head covers the whole chunk or just its last row.
+fn decode_chunk(
+    params: &ParamStore,
+    session: &mut DecodeSession,
+    new_tokens: &[i32],
+    all_rows: bool,
 ) -> Result<Tensor> {
     let n = new_tokens.len();
     if n == 0 {
@@ -402,18 +462,26 @@ pub(crate) fn native_decode_step(
     }
     s.len = len;
 
-    // Final layernorm + LM head on the last chunk row only — earlier rows'
-    // logits were (or could have been) emitted by earlier steps.
+    // Final layernorm, then the LM head: over every chunk row for the
+    // multi-row (speculative verify) flavor, over the last row only for the
+    // classic step — earlier rows' logits were (or could have been) emitted
+    // by earlier steps.
     layernorm_named(params, "ln_f/g", "ln_f/bias", d, &mut x)?;
-    let last = &x[(n - 1) * d..n * d];
-    let (vocab, logits) = apply_linear_named(params, &s.names.head, 1, d, last, Activation::None, ws)?;
+    let rows = if all_rows { n } else { 1 };
+    let head_in = if all_rows { &x[..] } else { &x[(n - 1) * d..n * d] };
+    let (vocab, logits) =
+        apply_linear_named(params, &s.names.head, rows, d, head_in, Activation::None, ws)?;
     if vocab != s.vocab {
         bail!("head width {vocab} does not match the graph's logit width {}", s.vocab);
     }
     // The logits tensor is the step's output and the single unavoidable
     // per-token allocation; every interpreter-internal buffer goes back to
     // the arena.
-    let out = Tensor::from_f32(&[vocab], logits.clone());
+    let out = if all_rows {
+        Tensor::from_f32(&[n, vocab], logits.clone())
+    } else {
+        Tensor::from_f32(&[vocab], logits.clone())
+    };
     ws.give_all([logits, x, xn, ctx, qh, kt, vh, scores, oh]);
     Ok(out)
 }
@@ -634,8 +702,10 @@ impl SamplingCfg {
 }
 
 /// First index of the maximum logit (ties break to the lowest index, like
-/// the eval harness's argmax).
-fn argmax(row: &[f32]) -> usize {
+/// the eval harness's argmax). Shared with the speculative engine so the
+/// draft/verify accept rule uses the exact argmax `sample_token` greedy
+/// decoding uses.
+pub(crate) fn argmax(row: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in row.iter().enumerate() {
         if v > row[best] {
@@ -690,6 +760,11 @@ pub struct GenerateOutcome {
 /// `on_token(index, token)` fires as each token is sampled, enabling
 /// streaming consumers.
 ///
+/// An empty `prompt` or `max_new == 0` is a degenerate-but-valid request:
+/// it returns a clean empty outcome (no tokens, no positions consumed, no
+/// model work) rather than an error, so streaming callers get their normal
+/// terminator without pre-filtering.
+///
 /// Works on any [`Backend`] that implements
 /// [`Backend::run_decode_step`] — the PJRT backend refuses (AOT graphs are
 /// fixed-shape full-sequence executables), the native backend implements it.
@@ -702,11 +777,8 @@ pub fn generate(
     cfg: &SamplingCfg,
     mut on_token: impl FnMut(usize, i32),
 ) -> Result<GenerateOutcome> {
-    if prompt.is_empty() {
-        bail!("generate needs a non-empty prompt");
-    }
-    if max_new == 0 {
-        bail!("generate needs max_new >= 1");
+    if prompt.is_empty() || max_new == 0 {
+        return Ok(GenerateOutcome { tokens: Vec::new(), prefill_tokens: 0, positions_used: 0 });
     }
     let mut session = DecodeSession::new(graph, params)?;
     let mut logits_t = backend.run_decode_step(graph, params, &mut session, prompt)?;
@@ -765,17 +837,13 @@ pub fn generate_batched(
     max_new: usize,
     cfgs: &[SamplingCfg],
 ) -> Result<Vec<GenerateOutcome>> {
-    if prompts.is_empty() {
-        bail!("generate_batched needs at least one prompt");
-    }
     if cfgs.len() != prompts.len() {
         bail!("generate_batched got {} prompts but {} sampling configs", prompts.len(), cfgs.len());
     }
-    if max_new == 0 {
-        bail!("generate_batched needs max_new >= 1");
-    }
     struct Stream {
-        session: DecodeSession,
+        /// `None` for degenerate streams (empty prompt / `max_new == 0`)
+        /// that never prefill and never join the batch.
+        session: Option<DecodeSession>,
         rng: Pcg64,
         cfg: SamplingCfg,
         tokens: Vec<i32>,
@@ -783,15 +851,24 @@ pub fn generate_batched(
     }
     let mut streams = Vec::with_capacity(prompts.len());
     for (prompt, cfg) in prompts.iter().zip(cfgs) {
-        if prompt.is_empty() {
-            bail!("generate_batched needs non-empty prompts");
+        // A degenerate stream yields a clean empty outcome (same contract
+        // as solo `generate`) without stalling or poisoning the others.
+        if prompt.is_empty() || max_new == 0 {
+            streams.push(Stream {
+                session: None,
+                rng: cfg.rng(),
+                cfg: *cfg,
+                tokens: Vec::new(),
+                done: true,
+            });
+            continue;
         }
         let mut session = DecodeSession::new(graph, params)?;
         let logits = backend.run_decode_step(graph, params, &mut session, prompt)?;
         let mut rng = cfg.rng();
         let tok = sample_token(logits.as_f32()?, cfg, &mut rng) as i32;
         let done = max_new == 1 || session.remaining() == 0;
-        streams.push(Stream { session, rng, cfg: *cfg, tokens: vec![tok], done });
+        streams.push(Stream { session: Some(session), rng, cfg: *cfg, tokens: vec![tok], done });
     }
     loop {
         let mut idx = Vec::new();
@@ -801,7 +878,7 @@ pub fn generate_batched(
             if !st.done {
                 idx.push(i);
                 toks.push(*st.tokens.last().expect("stream sampled at least one token"));
-                live.push(&mut st.session);
+                live.push(st.session.as_mut().expect("live streams have sessions"));
             }
         }
         if idx.is_empty() {
@@ -812,7 +889,9 @@ pub fn generate_batched(
             let st = &mut streams[i];
             let tok = sample_token(logits.as_f32()?, &st.cfg, &mut st.rng) as i32;
             st.tokens.push(tok);
-            if st.tokens.len() >= max_new || st.session.remaining() == 0 {
+            if st.tokens.len() >= max_new
+                || st.session.as_ref().is_some_and(|s| s.remaining() == 0)
+            {
                 st.done = true;
             }
         }
@@ -822,8 +901,8 @@ pub fn generate_batched(
         .zip(prompts)
         .map(|(st, prompt)| GenerateOutcome {
             tokens: st.tokens,
-            prefill_tokens: prompt.len(),
-            positions_used: st.session.len(),
+            prefill_tokens: if st.session.is_some() { prompt.len() } else { 0 },
+            positions_used: st.session.map_or(0, |s| s.len()),
         })
         .collect())
 }
@@ -1009,6 +1088,108 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(a.len(), 3);
         assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn multi_row_step_matches_solo_rows_bitwise() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 9);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let prompt = [1i32, 2, 3];
+        let chunk = [5i32, 7, 11];
+
+        let mut multi = DecodeSession::new(&g, &params).unwrap();
+        be.run_decode_step(&g, &params, &mut multi, &prompt).unwrap();
+        let rows = native_decode_step_multi(&params, &mut multi, &chunk).unwrap();
+        assert_eq!(rows.shape, vec![chunk.len(), cfg.vocab]);
+
+        let mut solo = DecodeSession::new(&g, &params).unwrap();
+        be.run_decode_step(&g, &params, &mut solo, &prompt).unwrap();
+        for (i, t) in chunk.iter().enumerate() {
+            let l = be.run_decode_step(&g, &params, &mut solo, &[*t]).unwrap();
+            let want = l.as_f32().unwrap();
+            let got = &rows.as_f32().unwrap()[i * cfg.vocab..(i + 1) * cfg.vocab];
+            assert_eq!(got, want, "row {i}: multi-row verify logits must be bit-identical");
+        }
+        assert_eq!(multi.len(), solo.len());
+    }
+
+    #[test]
+    fn truncate_restores_exact_prefix_cache() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 10);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+
+        let mut s = DecodeSession::new(&g, &params).unwrap();
+        be.run_decode_step(&g, &params, &mut s, &[1, 2, 3, 4]).unwrap();
+        be.run_decode_step(&g, &params, &mut s, &[5, 6, 7]).unwrap();
+        s.truncate(4);
+        assert_eq!(s.len(), 4);
+
+        let mut fresh = DecodeSession::new(&g, &params).unwrap();
+        be.run_decode_step(&g, &params, &mut fresh, &[1, 2, 3, 4]).unwrap();
+        for l in 0..s.num_layers() {
+            let (k, v) = s.layer_kv(l).unwrap();
+            let (fk, fv) = fresh.layer_kv(l).unwrap();
+            assert_eq!(k, fk, "layer {l}: rolled-back keys differ from fresh prefix");
+            assert_eq!(v, fv, "layer {l}: rolled-back values differ from fresh prefix");
+        }
+        // Truncating to the current or a larger length is a no-op.
+        s.truncate(4);
+        s.truncate(100);
+        assert_eq!(s.len(), 4);
+        // Post-rollback decode continues identically to the fresh session.
+        let a = be.run_decode_step(&g, &params, &mut s, &[9]).unwrap();
+        let b = be.run_decode_step(&g, &params, &mut fresh, &[9]).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn generate_yields_clean_empty_outcomes_on_degenerate_input() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 11);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        let mut fired = 0;
+        let empty_prompt =
+            generate(&be, &g, &params, &[], 4, &SamplingCfg::greedy(), |_, _| fired += 1).unwrap();
+        assert!(empty_prompt.tokens.is_empty());
+        assert_eq!(empty_prompt.prefill_tokens, 0);
+        assert_eq!(empty_prompt.positions_used, 0);
+        let zero_new =
+            generate(&be, &g, &params, &[1, 2], 0, &SamplingCfg::greedy(), |_, _| fired += 1)
+                .unwrap();
+        assert!(zero_new.tokens.is_empty());
+        assert_eq!(zero_new.positions_used, 0);
+        assert_eq!(fired, 0, "degenerate generations must not emit tokens");
+    }
+
+    #[test]
+    fn generate_batched_skips_degenerate_streams_cleanly() {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 12);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        let be = NativeBackend::new();
+        // An empty-prompt stream rides along with two real ones.
+        let prompts = vec![vec![1, 2, 3], vec![], vec![4, 5]];
+        let cfgs = vec![SamplingCfg::greedy(); 3];
+        let outs = generate_batched(&be, &g, &params, &prompts, 4, &cfgs).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert!(outs[1].tokens.is_empty());
+        assert_eq!(outs[1].positions_used, 0);
+        for i in [0usize, 2] {
+            let solo =
+                generate(&be, &g, &params, &prompts[i], 4, &cfgs[i], |_, _| {}).unwrap();
+            assert_eq!(outs[i].tokens, solo.tokens, "stream {i} diverged from solo");
+            assert_eq!(outs[i].tokens.len(), 4);
+        }
+        // max_new == 0 empties every stream; an all-empty batch is fine too.
+        let outs = generate_batched(&be, &g, &params, &prompts, 0, &cfgs).unwrap();
+        assert!(outs.iter().all(|o| o.tokens.is_empty() && o.positions_used == 0));
+        let outs = generate_batched(&be, &g, &params, &[], 4, &[]).unwrap();
+        assert!(outs.is_empty());
     }
 
     #[test]

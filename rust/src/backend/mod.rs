@@ -60,6 +60,7 @@
 pub mod decode;
 pub mod grad;
 pub mod native;
+pub mod spec;
 
 use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
@@ -69,6 +70,10 @@ pub use decode::{
     generate, generate_batched, sample_token, DecodeSession, GenerateOutcome, SamplingCfg,
 };
 pub use native::NativeBackend;
+pub use spec::{
+    build_draft_params, generate_speculative, SpecConfig, SpecGenerateOutcome, SpecSession,
+    SpecStep,
+};
 
 /// Which engine a [`Backend`] is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -184,6 +189,40 @@ pub trait Backend {
             .zip(tokens)
             .map(|(s, t)| self.run_decode_step(graph, params, s, std::slice::from_ref(t)))
             .collect()
+    }
+
+    /// Append a chunk of `new_tokens` to one session and return the
+    /// next-token logits of **every** appended position as an
+    /// `(n, vocab)` tensor — row `i` is the distribution after chunk
+    /// position `i`.
+    ///
+    /// This is the speculative-decode verify primitive: the target model
+    /// scores all k drafted tokens in one stacked pass instead of k solo
+    /// steps. The native backend runs it as a single chunk
+    /// ([`decode::native_decode_step_multi`]); the default advances the
+    /// session one token at a time and stacks the rows, which is
+    /// value-identical (each solo step sees exactly the prefix the chunk
+    /// row would have seen), so any backend that decodes at all can verify
+    /// drafts.
+    fn run_decode_step_multi(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        session: &mut DecodeSession,
+        new_tokens: &[i32],
+    ) -> Result<Tensor> {
+        if new_tokens.is_empty() {
+            anyhow::bail!("multi-row decode step needs at least one new token");
+        }
+        let mut rows: Vec<f32> = Vec::new();
+        let mut vocab = 0;
+        for t in new_tokens {
+            let logits = self.run_decode_step(graph, params, session, std::slice::from_ref(t))?;
+            let row = logits.as_f32()?;
+            vocab = row.len();
+            rows.extend_from_slice(row);
+        }
+        Ok(Tensor::from_f32(&[new_tokens.len(), vocab], rows))
     }
 }
 

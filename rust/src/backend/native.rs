@@ -146,6 +146,16 @@ impl Backend for NativeBackend {
     ) -> Result<Vec<Tensor>> {
         super::decode::native_decode_step_batched(params, sessions, tokens)
     }
+
+    fn run_decode_step_multi(
+        &self,
+        _graph: &GraphSpec,
+        params: &ParamStore,
+        session: &mut super::DecodeSession,
+        new_tokens: &[i32],
+    ) -> Result<Tensor> {
+        super::decode::native_decode_step_multi(params, session, new_tokens)
+    }
 }
 
 /// Attention head count: the manifest's `config.heads` when recorded, else

@@ -1,0 +1,698 @@
+//! Speculative decoding: a rank-cut LED draft model proposes, the dense
+//! target verifies — factorization as a serving throughput lever.
+//!
+//! The paper's claim is that a factorized model is a *faithful cheap proxy*
+//! of its dense parent. Speculative decoding operationalizes that claim: a
+//! [`SpecSession`] pairs a draft [`DecodeSession`] (LED/CED rank-cut
+//! params, built with [`build_draft_params`]) with a target session (dense
+//! params). Each [`SpecSession::step`] drafts `k` tokens autoregressively
+//! on the cheap model, then verifies all of them in **one** stacked
+//! multi-row pass through the target ([`Backend::run_decode_step_multi`] —
+//! the same chunk machinery the batched/prefill paths use), accepts the
+//! longest valid prefix, and rolls both KV caches back past any rejected
+//! suffix ([`DecodeSession::truncate`]). The measured acceptance rate *is*
+//! the paper's accuracy-retention claim made operational: the closer the
+//! rank-cut model tracks the dense one, the more drafts survive and the
+//! closer the decode loop runs to `k + 1` tokens per target pass.
+//!
+//! Accept rules:
+//!
+//! * **Greedy** (`temperature <= 0`): draft token `d_i` is accepted iff it
+//!   equals the target's argmax at that position; the first mismatch is
+//!   replaced by the target's own argmax, and on full acceptance the extra
+//!   verify row yields a free "bonus" token. Because every emitted token is
+//!   by construction the target's argmax at its prefix — and the chunked
+//!   verify rows are value-identical to solo steps (see [`super::decode`])
+//!   — greedy speculative output is **token-for-token identical** to plain
+//!   greedy decoding of the target, at any `k`, with any draft. Pinned by
+//!   `tests/proptest_spec_decode.rs`.
+//! * **Sampled**: seeded rejection sampling (Leviathan-style). Draft token
+//!   `d_i ~ p_draft` is accepted with probability
+//!   `min(1, p_target(d_i) / p_draft(d_i))`; on rejection the replacement
+//!   is drawn from the residual `max(p_target - p_draft, 0)` renormalized,
+//!   which makes each emitted token exactly `p_target`-distributed. Both
+//!   distributions are the post-temperature/top-k distributions
+//!   [`sample_token`] draws from, and all randomness comes from the one
+//!   seeded [`SamplingCfg`] stream, so a fixed seed reproduces the stream.
+//!
+//! The coordinator schedules speculative sessions inside its continuous-
+//! batching sweep (`ServeConfig::spec`), the CLI exposes
+//! `generate --speculative`, and `eval::measure_spec_decode` /
+//! `benches/native_decode.rs` pin the tokens/sec + acceptance numbers.
+
+use anyhow::bail;
+
+use crate::factorize::{auto_fact, AutoFactConfig, Rank, Solver};
+use crate::runtime::GraphSpec;
+use crate::tensor::ParamStore;
+use crate::util::Pcg64;
+use crate::Result;
+
+use super::decode::{argmax, sample_token, DecodeSession, SamplingCfg};
+use super::Backend;
+
+/// Speculative-decoding policy knobs, carried by `ServeConfig` and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpecConfig {
+    /// Rank ratio of the LED draft built from the target checkpoint
+    /// (`0 < draft_ratio < 1`); lower is a cheaper but less faithful
+    /// drafter. Consumed by [`build_draft_params`] — the step engine itself
+    /// never reads it.
+    pub draft_ratio: f64,
+    /// Tokens drafted per speculative step (the verify pass scores `k + 1`
+    /// rows). Must be at least 1.
+    pub k: usize,
+    /// Adapt the per-step draft length to recent acceptance: grow by one
+    /// (up to `k`) after a fully-accepted step, shrink to the accepted
+    /// count (floor 1) otherwise. Deterministic, so it never perturbs the
+    /// greedy-equivalence contract.
+    pub adaptive_k: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { draft_ratio: 0.25, k: 4, adaptive_k: false }
+    }
+}
+
+impl SpecConfig {
+    /// Reject out-of-range knobs with a actionable message.
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            bail!("SpecConfig.k must be >= 1 (k is the per-step draft length)");
+        }
+        if !(self.draft_ratio > 0.0 && self.draft_ratio < 1.0) {
+            bail!(
+                "SpecConfig.draft_ratio must be in (0, 1), got {} (it is the LED rank ratio \
+                 of the draft model)",
+                self.draft_ratio
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build an LED draft checkpoint from a target checkpoint: clone + SVD
+/// factorization at `Rank::Ratio(draft_ratio)`.
+///
+/// SVD is the right solver here — the draft must *approximate* the target
+/// for drafts to be accepted (the paper's LED-on-trained-weights setting).
+/// Layers the Eq.-1 gate rejects (too small for the ratio to pay) stay
+/// dense; if nothing factorizes at all — e.g. the target is already
+/// rank-cut — the clone is returned unchanged and speculation degenerates
+/// gracefully to a draft that is the target itself (every draft accepted,
+/// no speedup, still correct).
+pub fn build_draft_params(params: &ParamStore, draft_ratio: f64) -> Result<ParamStore> {
+    if !(draft_ratio > 0.0 && draft_ratio < 1.0) {
+        bail!("draft_ratio must be in (0, 1), got {draft_ratio}");
+    }
+    let mut draft = params.clone();
+    auto_fact(
+        &mut draft,
+        &AutoFactConfig {
+            rank: Rank::Ratio(draft_ratio),
+            solver: Solver::Svd,
+            num_iter: 0,
+            submodules: None,
+        },
+    )?;
+    Ok(draft)
+}
+
+/// What one [`SpecSession::step`] emitted and spent.
+#[derive(Clone, Debug)]
+pub struct SpecStep {
+    /// Tokens emitted by this step, in stream order: the accepted draft
+    /// prefix followed by one target-sampled token (the correction at the
+    /// first mismatch, or the bonus row on full acceptance). Never empty.
+    pub tokens: Vec<i32>,
+    /// Draft tokens proposed this step (0 for a degenerate plain step at
+    /// the capacity/budget tail).
+    pub drafted: usize,
+    /// How many of those drafts the target accepted.
+    pub accepted: usize,
+    /// KV positions rolled back off the target cache (`drafted - accepted`).
+    pub rolled_back: usize,
+}
+
+/// One in-flight speculative generation: a draft session and a target
+/// session advancing in lockstep over the accepted token stream.
+///
+/// Invariant between steps: the target cache holds exactly the accepted
+/// prefix (prompt + every emitted token except the newest, which — like
+/// plain [`generate`](super::generate) — is sampled but not yet appended),
+/// and `draft_pending` holds whatever suffix of that stream the draft cache
+/// hasn't seen yet (normally just the newest token; also the final drafted
+/// token after a fully-accepted step, since the draft never feeds its own
+/// last proposal).
+#[derive(Debug)]
+pub struct SpecSession {
+    target: DecodeSession,
+    draft: DecodeSession,
+    sampling: SamplingCfg,
+    rng: Pcg64,
+    /// Newest emitted token — sampled, not yet appended to the target.
+    last: i32,
+    /// Emitted-stream suffix the draft cache hasn't ingested yet.
+    draft_pending: Vec<i32>,
+    /// Configured ceiling for the per-step draft length.
+    k_max: usize,
+    /// Current draft length (== `k_max` unless `adaptive_k` moved it).
+    k_cur: usize,
+    adaptive: bool,
+    drafted: u64,
+    accepted: u64,
+    rollbacks: u64,
+    corrections: u64,
+    steps: u64,
+}
+
+impl SpecSession {
+    /// Open a speculative session: prefill both models on `prompt` and
+    /// sample the first token from the **target's** prefill logits (exactly
+    /// what plain decoding does — the draft only ever proposes, never
+    /// emits). Returns the session plus that first emitted token.
+    ///
+    /// The prompt must be non-empty (degenerate requests are the driver's
+    /// job — see [`generate_speculative`]); draft and target must agree on
+    /// vocabulary width.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        backend: &dyn Backend,
+        target_graph: &GraphSpec,
+        target_params: &ParamStore,
+        draft_graph: &GraphSpec,
+        draft_params: &ParamStore,
+        prompt: &[i32],
+        sampling: SamplingCfg,
+        spec: &SpecConfig,
+    ) -> Result<(Self, i32)> {
+        spec.validate()?;
+        if prompt.is_empty() {
+            bail!("speculative decode needs a non-empty prompt");
+        }
+        let mut target = DecodeSession::new(target_graph, target_params)?;
+        let mut draft = DecodeSession::new(draft_graph, draft_params)?;
+        if draft.vocab() != target.vocab() {
+            bail!(
+                "draft vocab {} != target vocab {}: the draft must be a factorization of the \
+                 target family",
+                draft.vocab(),
+                target.vocab()
+            );
+        }
+        if prompt.len() > target.max_seq() || prompt.len() > draft.max_seq() {
+            bail!(
+                "prompt length {} exceeds positional capacity (target {}, draft {})",
+                prompt.len(),
+                target.max_seq(),
+                draft.max_seq()
+            );
+        }
+        let logits = backend.run_decode_step(target_graph, target_params, &mut target, prompt)?;
+        backend.run_decode_step(draft_graph, draft_params, &mut draft, prompt)?;
+        let mut rng = sampling.rng();
+        let first = sample_token(logits.as_f32()?, &sampling, &mut rng) as i32;
+        Ok((
+            SpecSession {
+                target,
+                draft,
+                sampling,
+                rng,
+                last: first,
+                draft_pending: vec![first],
+                k_max: spec.k,
+                k_cur: spec.k,
+                adaptive: spec.adaptive_k,
+                drafted: 0,
+                accepted: 0,
+                rollbacks: 0,
+                corrections: 1, // the prefill sample is a target-emitted token
+                steps: 0,
+            },
+            first,
+        ))
+    }
+
+    /// One draft → verify → accept/rollback round, emitting between 1 and
+    /// `k + 1` tokens (never more than `max_emit`, which callers set to
+    /// their remaining `max_new` budget).
+    ///
+    /// When capacity or budget leaves no room to draft (`k_eff == 0`), the
+    /// step degenerates to a plain single-token target step — same output
+    /// contract, zero drafts — so the driver never needs a special tail
+    /// path. Errors if the target context is already full.
+    pub fn step(
+        &mut self,
+        backend: &dyn Backend,
+        target_graph: &GraphSpec,
+        target_params: &ParamStore,
+        draft_graph: &GraphSpec,
+        draft_params: &ParamStore,
+        max_emit: usize,
+    ) -> Result<SpecStep> {
+        if max_emit == 0 {
+            bail!("speculate step needs max_emit >= 1");
+        }
+        let headroom = self.target.remaining();
+        if headroom == 0 {
+            bail!("speculate step: target positional capacity exhausted");
+        }
+        // The verify chunk appends 1 + k positions to the target; the draft
+        // appends its pending backlog plus k - 1 proposals. Bound k by the
+        // emit budget (a step emits at most k + 1 tokens), both capacities,
+        // and the (possibly adaptive) configured length.
+        let draft_room =
+            (self.draft.remaining() + 1).saturating_sub(self.draft_pending.len());
+        let k = self
+            .k_cur
+            .min(max_emit.saturating_sub(1))
+            .min(headroom - 1)
+            .min(draft_room);
+        self.steps += 1;
+        let greedy = self.sampling.temperature <= 0.0;
+
+        if k == 0 {
+            // Degenerate tail: one plain target step keeps the stream
+            // flowing when there is no room (or no budget) to speculate.
+            let logits =
+                backend.run_decode_step(target_graph, target_params, &mut self.target, &[self.last])?;
+            let t = sample_token(logits.as_f32()?, &self.sampling, &mut self.rng) as i32;
+            self.last = t;
+            self.draft_pending.push(t);
+            self.corrections += 1;
+            return Ok(SpecStep { tokens: vec![t], drafted: 0, accepted: 0, rolled_back: 0 });
+        }
+
+        // --- Draft phase: k autoregressive proposals on the cheap model.
+        // The first chunk flushes the pending backlog; each later chunk is
+        // the previous proposal. The final proposal is never fed — the
+        // verify outcome decides whether the draft ever sees it.
+        let mut drafts: Vec<i32> = Vec::with_capacity(k);
+        let mut draft_dists: Vec<Vec<f64>> = Vec::new();
+        let mut chunk = std::mem::take(&mut self.draft_pending);
+        for _ in 0..k {
+            let logits_t =
+                backend.run_decode_step(draft_graph, draft_params, &mut self.draft, &chunk)?;
+            let logits = logits_t.as_f32()?;
+            let proposal = if greedy {
+                argmax(logits)
+            } else {
+                let dist = sampling_dist(logits, &self.sampling);
+                let tok = self.rng.weighted(&dist);
+                draft_dists.push(dist);
+                tok
+            };
+            drafts.push(proposal as i32);
+            chunk.clear();
+            chunk.push(proposal as i32);
+        }
+
+        // --- Verify phase: one stacked (k + 1)-row pass through the
+        // target. Row i is the target's next-token distribution after
+        // [last, d_1, .., d_i] — row k is the bonus row.
+        let base = self.target.len();
+        let mut verify = Vec::with_capacity(k + 1);
+        verify.push(self.last);
+        verify.extend_from_slice(&drafts);
+        let rows_t =
+            backend.run_decode_step_multi(target_graph, target_params, &mut self.target, &verify)?;
+        let rows = rows_t.as_f32()?;
+        let vocab = self.target.vocab();
+
+        // --- Accept phase.
+        let mut a = 0usize; // accepted draft count
+        let next: i32;
+        if greedy {
+            while a < k && argmax(&rows[a * vocab..(a + 1) * vocab]) as i32 == drafts[a] {
+                a += 1;
+            }
+            // First mismatch row → the target's own argmax (the exact token
+            // plain greedy decode would emit here); row k → bonus token.
+            next = argmax(&rows[a * vocab..(a + 1) * vocab]) as i32;
+        } else {
+            let mut replacement = None;
+            while a < k {
+                let p_target = sampling_dist(&rows[a * vocab..(a + 1) * vocab], &self.sampling);
+                let d = drafts[a] as usize;
+                let (pt, pd) = (p_target[d], draft_dists[a][d]);
+                // Accept with prob min(1, pt/pd); u in [0,1) makes pd == pt
+                // always accept.
+                if pd > 0.0 && self.rng.next_f64() * pd < pt {
+                    a += 1;
+                    continue;
+                }
+                // Rejected: draw from the residual max(p_target - p_draft, 0),
+                // which keeps the emitted marginal exactly p_target.
+                let residual: Vec<f64> = p_target
+                    .iter()
+                    .zip(&draft_dists[a])
+                    .map(|(&t, &q)| (t - q).max(0.0))
+                    .collect();
+                let tok = if residual.iter().sum::<f64>() > 0.0 {
+                    self.rng.weighted(&residual)
+                } else {
+                    // Identical distributions (numerically): plain draw.
+                    self.rng.weighted(&p_target)
+                };
+                replacement = Some(tok as i32);
+                break;
+            }
+            next = match replacement {
+                Some(t) => t,
+                None => {
+                    let bonus = sampling_dist(&rows[k * vocab..(k + 1) * vocab], &self.sampling);
+                    self.rng.weighted(&bonus) as i32
+                }
+            };
+        }
+
+        // --- Rollback phase: erase the rejected suffix from both caches.
+        let accepted_len = base + 1 + a;
+        let rolled = self.target.len() - accepted_len; // == k - a
+        self.target.truncate(accepted_len);
+        self.draft.truncate(accepted_len);
+        debug_assert!(self.draft_pending.is_empty());
+        if self.draft.len() < accepted_len {
+            // Fully-accepted step: the draft never ingested its own final
+            // proposal, which is now part of the accepted stream.
+            debug_assert_eq!(self.draft.len() + 1, accepted_len);
+            self.draft_pending.push(drafts[k - 1]);
+        }
+        self.draft_pending.push(next);
+        self.last = next;
+
+        let mut tokens = drafts;
+        tokens.truncate(a);
+        tokens.push(next);
+        self.drafted += k as u64;
+        self.accepted += a as u64;
+        self.corrections += 1;
+        if rolled > 0 {
+            self.rollbacks += 1;
+        }
+        if self.adaptive {
+            self.k_cur = if a == k { (self.k_cur + 1).min(self.k_max) } else { a.max(1) };
+        }
+        Ok(SpecStep { tokens, drafted: k, accepted: a, rolled_back: rolled })
+    }
+
+    /// The target-model session (holds the accepted prefix).
+    pub fn target(&self) -> &DecodeSession {
+        &self.target
+    }
+
+    /// The draft-model session.
+    pub fn draft(&self) -> &DecodeSession {
+        &self.draft
+    }
+
+    /// Total draft tokens proposed so far.
+    pub fn drafted(&self) -> u64 {
+        self.drafted
+    }
+
+    /// Total draft tokens the target accepted.
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Steps that had to roll back at least one rejected draft.
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks
+    }
+
+    /// Target-sampled tokens emitted (prefill sample + one per step).
+    /// `accepted() + corrections()` always equals the emitted-token count.
+    pub fn corrections(&self) -> u64 {
+        self.corrections
+    }
+
+    /// Speculative steps taken (including degenerate plain-step tails).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Fraction of drafted tokens accepted; 0 before anything was drafted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// The categorical distribution [`sample_token`] draws from: temperature
+/// softmax over the `top_k` highest logits (full support when `top_k` is
+/// 0), as a dense probability vector over the whole vocabulary. Rejection
+/// sampling needs both models' distributions over the same support.
+fn sampling_dist(logits: &[f32], cfg: &SamplingCfg) -> Vec<f64> {
+    debug_assert!(cfg.temperature > 0.0, "greedy mode never builds a distribution");
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if cfg.top_k > 0 && cfg.top_k < logits.len() {
+        // Same deterministic support selection as sample_token.
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]).then(a.cmp(&b)));
+        idx.truncate(cfg.top_k);
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let mut dist = vec![0.0f64; logits.len()];
+    let mut total = 0.0;
+    for &i in &idx {
+        let w = f64::from((logits[i] - max) * inv_t).exp();
+        dist[i] = w;
+        total += w;
+    }
+    for v in &mut dist {
+        *v /= total;
+    }
+    dist
+}
+
+/// What one [`generate_speculative`] run produced: the plain
+/// [`GenerateOutcome`](super::GenerateOutcome) fields plus the speculation
+/// ledger.
+#[derive(Clone, Debug, Default)]
+pub struct SpecGenerateOutcome {
+    /// Generated token ids, in order (the prompt is not repeated). Under
+    /// greedy sampling this is identical to what plain
+    /// [`generate`](super::generate) on the target emits.
+    pub tokens: Vec<i32>,
+    /// Prompt length consumed by the prefills (both models see it).
+    pub prefill_tokens: usize,
+    /// Positions held in the target's KV cache at the end.
+    pub positions_used: usize,
+    /// Draft tokens proposed across all steps.
+    pub drafted: u64,
+    /// Draft tokens accepted by the verify passes.
+    pub accepted: u64,
+    /// Steps that rolled back at least one rejected draft.
+    pub rollbacks: u64,
+    /// Target-sampled tokens (prefill sample + one per step);
+    /// `accepted + corrections == tokens.len()`.
+    pub corrections: u64,
+    /// Speculative steps taken after the prefill.
+    pub steps: u64,
+}
+
+impl SpecGenerateOutcome {
+    /// Fraction of drafted tokens accepted; 0 when nothing was drafted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Speculative counterpart of [`generate`](super::generate): prefill both
+/// models, then draft/verify/rollback rounds until `max_new` tokens are out
+/// or the target's positional capacity is exhausted. `on_token(index,
+/// token)` fires per emitted token in stream order.
+///
+/// Emits exactly the token count plain `generate` would (the two stop rules
+/// coincide), and under greedy sampling exactly the same *tokens* — the
+/// draft model only ever changes how fast the stream is produced, never
+/// what it says. Degenerate requests (empty prompt / `max_new == 0`) yield
+/// a clean empty outcome, mirroring `generate`.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_speculative(
+    backend: &dyn Backend,
+    target_graph: &GraphSpec,
+    target_params: &ParamStore,
+    draft_graph: &GraphSpec,
+    draft_params: &ParamStore,
+    prompt: &[i32],
+    max_new: usize,
+    sampling: &SamplingCfg,
+    spec: &SpecConfig,
+    mut on_token: impl FnMut(usize, i32),
+) -> Result<SpecGenerateOutcome> {
+    if prompt.is_empty() || max_new == 0 {
+        return Ok(SpecGenerateOutcome::default());
+    }
+    let (mut session, first) = SpecSession::new(
+        backend,
+        target_graph,
+        target_params,
+        draft_graph,
+        draft_params,
+        prompt,
+        *sampling,
+        spec,
+    )?;
+    on_token(0, first);
+    let mut tokens = vec![first];
+    while tokens.len() < max_new && session.target().remaining() > 0 {
+        let step = session.step(
+            backend,
+            target_graph,
+            target_params,
+            draft_graph,
+            draft_params,
+            max_new - tokens.len(),
+        )?;
+        for &t in &step.tokens {
+            on_token(tokens.len(), t);
+            tokens.push(t);
+        }
+    }
+    Ok(SpecGenerateOutcome {
+        tokens,
+        prefill_tokens: prompt.len(),
+        positions_used: session.target().len(),
+        drafted: session.drafted(),
+        accepted: session.accepted(),
+        rollbacks: session.rollbacks(),
+        corrections: session.corrections(),
+        steps: session.steps(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+    use crate::backend::{generate, NativeBackend};
+
+    fn lm_cfg() -> TextModelCfg {
+        TextModelCfg { vocab: 48, seq: 12, d: 24, heads: 6, layers: 1, ff: 48, classes: 48 }
+    }
+
+    fn setup(seed: u64, ratio: f64) -> (ParamStore, ParamStore, GraphSpec) {
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, seed);
+        let draft = build_draft_params(&params, ratio).unwrap();
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        (params, draft, g)
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        assert!(SpecConfig::default().validate().is_ok());
+        assert!(SpecConfig { k: 0, ..Default::default() }.validate().is_err());
+        assert!(SpecConfig { draft_ratio: 0.0, ..Default::default() }.validate().is_err());
+        assert!(SpecConfig { draft_ratio: 1.0, ..Default::default() }.validate().is_err());
+        assert!(build_draft_params(&ParamStore::new(), 1.5).is_err());
+    }
+
+    #[test]
+    fn greedy_speculative_equals_plain_greedy_smoke() {
+        let be = NativeBackend::new();
+        let (params, draft, g) = setup(3, 0.5);
+        let sampling = SamplingCfg::greedy();
+        let spec = SpecConfig { k: 3, ..Default::default() };
+        let mut streamed = Vec::new();
+        let out = generate_speculative(
+            &be, &g, &params, &g, &draft, &[1, 2, 3], 8, &sampling, &spec, |i, t| {
+                streamed.push((i, t));
+            },
+        )
+        .unwrap();
+        let plain = generate(&be, &g, &params, &[1, 2, 3], 8, &sampling, |_, _| {}).unwrap();
+        assert_eq!(out.tokens, plain.tokens, "greedy spec must equal plain greedy");
+        assert_eq!(out.positions_used, plain.positions_used);
+        assert_eq!(out.accepted + out.corrections, out.tokens.len() as u64);
+        assert_eq!(
+            streamed,
+            out.tokens.iter().copied().enumerate().collect::<Vec<_>>(),
+            "streaming callback must see the stream in order"
+        );
+        assert!(out.drafted > 0);
+    }
+
+    #[test]
+    fn draft_equals_target_accepts_everything() {
+        let be = NativeBackend::new();
+        let cfg = lm_cfg();
+        let params = init_text_params(&cfg, 5);
+        let g = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+        // Draft == target: every greedy draft matches the verify argmax.
+        let out = generate_speculative(
+            &be,
+            &g,
+            &params,
+            &g,
+            &params,
+            &[4, 5],
+            6,
+            &SamplingCfg::greedy(),
+            &SpecConfig { k: 2, ..Default::default() },
+            |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(out.accepted, out.drafted, "self-drafting must accept every token");
+        assert_eq!(out.rollbacks, 0);
+        let plain = generate(&be, &g, &params, &[4, 5], 6, &SamplingCfg::greedy(), |_, _| {})
+            .unwrap();
+        assert_eq!(out.tokens, plain.tokens);
+    }
+
+    #[test]
+    fn degenerate_requests_yield_clean_empty_outcomes() {
+        let be = NativeBackend::new();
+        let (params, draft, g) = setup(7, 0.5);
+        let sampling = SamplingCfg::greedy();
+        let spec = SpecConfig::default();
+        let a = generate_speculative(&be, &g, &params, &g, &draft, &[], 4, &sampling, &spec, |_, _| {})
+            .unwrap();
+        let b = generate_speculative(&be, &g, &params, &g, &draft, &[1], 0, &sampling, &spec, |_, _| {})
+            .unwrap();
+        for out in [a, b] {
+            assert!(out.tokens.is_empty());
+            assert_eq!(out.positions_used, 0);
+            assert_eq!(out.drafted, 0);
+        }
+    }
+
+    #[test]
+    fn sampled_mode_is_seed_reproducible() {
+        let be = NativeBackend::new();
+        let (params, draft, g) = setup(11, 0.5);
+        let sampling = SamplingCfg { temperature: 0.9, top_k: 8, seed: 42 };
+        let spec = SpecConfig { k: 3, ..Default::default() };
+        let a = generate_speculative(&be, &g, &params, &g, &draft, &[2, 3], 7, &sampling, &spec, |_, _| {})
+            .unwrap();
+        let b = generate_speculative(&be, &g, &params, &g, &draft, &[2, 3], 7, &sampling, &spec, |_, _| {})
+            .unwrap();
+        assert_eq!(a.tokens, b.tokens, "fixed seed must reproduce the sampled stream");
+        assert_eq!(a.tokens.len(), 7);
+        assert_eq!(a.accepted + a.corrections, a.tokens.len() as u64);
+    }
+
+    #[test]
+    fn adaptive_k_stays_within_bounds_and_preserves_greedy_stream() {
+        let be = NativeBackend::new();
+        let (params, draft, g) = setup(13, 0.5);
+        let sampling = SamplingCfg::greedy();
+        let adaptive = SpecConfig { k: 4, adaptive_k: true, ..Default::default() };
+        let out = generate_speculative(
+            &be, &g, &params, &g, &draft, &[1, 2], 9, &sampling, &adaptive, |_, _| {},
+        )
+        .unwrap();
+        let plain = generate(&be, &g, &params, &[1, 2], 9, &sampling, |_, _| {}).unwrap();
+        assert_eq!(out.tokens, plain.tokens, "adaptive k must not change greedy output");
+    }
+}

@@ -44,6 +44,19 @@ pub struct Metrics {
     /// Generate requests shed by admission control before any decode work
     /// (terminal `Rejected` sent; disjoint from `errors`).
     pub shed_requests: AtomicU64,
+    /// Draft tokens proposed by speculative sessions' draft models.
+    pub drafted_tokens: AtomicU64,
+    /// Drafted tokens the target model accepted (and which were therefore
+    /// streamed). `accepted_tokens / drafted_tokens` is the acceptance rate.
+    pub accepted_tokens: AtomicU64,
+    /// Speculative steps that rolled back at least one rejected draft
+    /// (KV-cache truncation events).
+    pub spec_rollbacks: AtomicU64,
+    /// Target-sampled tokens streamed by speculative sessions: the prefill
+    /// sample plus one per step (the correction or bonus token). For a
+    /// purely speculative workload,
+    /// `generated_tokens == accepted_tokens + spec_corrections` exactly.
+    pub spec_corrections: AtomicU64,
     latency_buckets: [AtomicU64; BUCKETS_US.len() + 1],
     latency_sum_us: AtomicU64,
     per_variant: Mutex<HashMap<String, u64>>,
@@ -122,6 +135,34 @@ impl Metrics {
         self.shed_requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Tally one speculative step: `drafted` proposals, `accepted` of them
+    /// kept, plus one target-sampled token (correction/bonus), with
+    /// `rolled_back` marking whether the step truncated the KV caches.
+    pub fn record_spec_step(&self, drafted: usize, accepted: usize, rolled_back: bool) {
+        self.drafted_tokens.fetch_add(drafted as u64, Ordering::Relaxed);
+        self.accepted_tokens.fetch_add(accepted as u64, Ordering::Relaxed);
+        self.spec_corrections.fetch_add(1, Ordering::Relaxed);
+        if rolled_back {
+            self.spec_rollbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Tally a speculative session's prefill sample (a target-emitted token
+    /// outside any step).
+    pub fn record_spec_prefill_sample(&self) {
+        self.spec_corrections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fraction of drafted tokens accepted by the verify passes; 0.0 before
+    /// any speculation ran.
+    pub fn acceptance_rate(&self) -> f64 {
+        let drafted = self.drafted_tokens.load(Ordering::Relaxed);
+        if drafted == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens.load(Ordering::Relaxed) as f64 / drafted as f64
+    }
+
     /// Mean decode batch occupancy: sessions advanced per merged step
     /// (1.0 = the scheduler only ever had one live stream; higher means the
     /// stacked GEMMs actually carried concurrent streams).
@@ -189,7 +230,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} batches={} pad={} err={} shed={} sessions={} \
-             merged_steps={} occupancy={:.2} prefill_tok={} gen_tok={} p50={}us p95={}us \
+             merged_steps={} occupancy={:.2} prefill_tok={} gen_tok={} drafted_tok={} \
+             accepted_tok={} acc_rate={:.2} spec_rollbacks={} p50={}us p95={}us \
              mean={:.0}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -202,6 +244,10 @@ impl Metrics {
             self.decode_batch_occupancy(),
             self.prefill_tokens.load(Ordering::Relaxed),
             self.generated_tokens.load(Ordering::Relaxed),
+            self.drafted_tokens.load(Ordering::Relaxed),
+            self.accepted_tokens.load(Ordering::Relaxed),
+            self.acceptance_rate(),
+            self.spec_rollbacks.load(Ordering::Relaxed),
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
             self.mean_latency_us(),
@@ -257,6 +303,36 @@ mod tests {
         assert!((m.decode_batch_occupancy() - 2.0).abs() < 1e-12);
         let s = m.summary();
         assert!(s.contains("merged_steps=2") && s.contains("shed=1"), "{s}");
+    }
+
+    #[test]
+    fn spec_counters_reconcile() {
+        let m = Metrics::new();
+        assert_eq!(m.acceptance_rate(), 0.0, "no drafts yet");
+        // One session: prefill sample, then three steps — full accept (3/3),
+        // partial (1/3, rollback), degenerate plain tail (0 drafts).
+        m.record_spec_prefill_sample();
+        m.record_generated_tokens(1);
+        m.record_spec_step(3, 3, false);
+        m.record_generated_tokens(4);
+        m.record_spec_step(3, 1, true);
+        m.record_generated_tokens(2);
+        m.record_spec_step(0, 0, false);
+        m.record_generated_tokens(1);
+        assert_eq!(m.drafted_tokens.load(Ordering::Relaxed), 6);
+        assert_eq!(m.accepted_tokens.load(Ordering::Relaxed), 4);
+        assert_eq!(m.spec_rollbacks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.spec_corrections.load(Ordering::Relaxed), 4);
+        // The reconciliation invariant the serving integration test pins:
+        assert_eq!(
+            m.generated_tokens.load(Ordering::Relaxed),
+            m.accepted_tokens.load(Ordering::Relaxed)
+                + m.spec_corrections.load(Ordering::Relaxed)
+        );
+        assert!((m.acceptance_rate() - 4.0 / 6.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("drafted_tok=6") && s.contains("acc_rate=0.67"), "{s}");
+        assert!(s.contains("spec_rollbacks=1"), "{s}");
     }
 
     #[test]

@@ -16,11 +16,15 @@
 //!   continuous batching — every dispatcher sweep advances all live
 //!   sessions one token as a single stacked GEMM step per variant, with
 //!   admission control ([`server::ServeConfig::max_sessions`]) shedding
-//!   excess streams via a typed [`server::TokenEvent::Rejected`]. The
+//!   excess streams via a typed [`server::TokenEvent::Rejected`]. With
+//!   [`server::ServeConfig::spec`] set, speculative sessions (LED draft
+//!   proposes, target verifies — [`crate::backend::SpecSession`]) ride the
+//!   same sweep, emitting up to `k + 1` tokens per round. The
 //!   decode/classify interleave is configurable
 //!   ([`server::FairnessConfig`]); SERVING.md documents the full model.
 //! * [`metrics`] — counters (incl. per-token prefill/generated tallies,
-//!   merged-step/occupancy/shed gauges) + latency histogram.
+//!   merged-step/occupancy/shed gauges, the drafted/accepted speculation
+//!   ledger) + latency histogram.
 //!
 //! # Examples
 //!
@@ -53,6 +57,9 @@ pub mod server;
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use router::{RoutePolicy, Router, Tier};
+// Speculation policy is part of the serving config surface; re-export it so
+// `coordinator::{ServeConfig, SpecConfig}` imports stay one-stop.
+pub use crate::backend::SpecConfig;
 pub use server::{
     serve_classifier, serve_classifier_native, serve_classifier_with, ClassifyRequest,
     ClassifyResponse, FairnessConfig, GenerateRequest, GenerateResponse, Request, ServeConfig,

@@ -25,6 +25,16 @@
 //!   interleave is governed by [`FairnessConfig`]. See SERVING.md for the
 //!   full serving model.
 //!
+//! With [`ServeConfig::spec`] set, the server also accepts **speculative**
+//! generations ([`ServerHandle::generate_speculative`]): at startup it
+//! builds one LED draft checkpoint per variant
+//! ([`crate::backend::build_draft_params`]), and each speculative session
+//! ([`crate::backend::SpecSession`]) advances one draft→verify→rollback
+//! round per decode sweep — emitting up to `k + 1` tokens per sweep —
+//! alongside the plain stacked sessions. Spec rounds are excluded from the
+//! merged-step counters (they are not stacked steps) and feed the
+//! speculation ledger on [`Metrics`] instead.
+//!
 //! Execution goes through the [`Backend`] abstraction: the PJRT engine when
 //! AOT artifacts resolve, the pure-Rust [`NativeBackend`] otherwise — so the
 //! full serving path runs (and is tested, see
@@ -63,7 +73,8 @@ use super::batcher::{plan, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::router::{Router, Tier};
 use crate::backend::{
-    native, sample_token, Backend, DecodeSession, NativeBackend, PjrtBackend, SamplingCfg,
+    build_draft_params, native, sample_token, Backend, DecodeSession, NativeBackend, PjrtBackend,
+    SamplingCfg, SpecConfig, SpecSession,
 };
 use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
@@ -116,6 +127,10 @@ pub struct GenerateRequest {
     pub sampling: SamplingCfg,
     /// Requested quality tier (the router maps it to a variant).
     pub tier: Tier,
+    /// Serve this request speculatively (draft + verify) instead of one
+    /// token per sweep. Requires [`ServeConfig::spec`]; otherwise the
+    /// stream fails cleanly with [`TokenEvent::Failed`].
+    pub speculative: bool,
     /// When the client submitted the request (latency is measured from
     /// here, so queue wait is included).
     submitted: Instant,
@@ -257,6 +272,38 @@ impl ServerHandle {
         sampling: SamplingCfg,
         tier: Tier,
     ) -> Result<Receiver<TokenEvent>> {
+        self.submit_generate(prompt, max_new, sampling, tier, false)
+    }
+
+    /// Submit a **speculative** generation request; returns the token
+    /// stream immediately.
+    ///
+    /// Same contract as [`ServerHandle::generate`], but the session is
+    /// served by a [`SpecSession`]: the variant's LED draft model proposes
+    /// up to [`SpecConfig::k`] tokens per sweep and the target verifies
+    /// them in one stacked pass, so a stream can receive several `Token`
+    /// events per sweep. Under greedy sampling the token stream is
+    /// identical to the plain [`ServerHandle::generate`] stream. If the
+    /// server was built without [`ServeConfig::spec`], the stream fails
+    /// cleanly with a single [`TokenEvent::Failed`].
+    pub fn generate_speculative(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> Result<Receiver<TokenEvent>> {
+        self.submit_generate(prompt, max_new, sampling, tier, true)
+    }
+
+    fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+        speculative: bool,
+    ) -> Result<Receiver<TokenEvent>> {
         let (tx, rx) = sync_channel(max_new + 2);
         self.metrics.record_request();
         self.depth.fetch_add(1, Ordering::Relaxed);
@@ -266,6 +313,7 @@ impl ServerHandle {
                 max_new,
                 sampling,
                 tier,
+                speculative,
                 submitted: Instant::now(),
                 resp: tx,
             }))
@@ -282,18 +330,19 @@ impl ServerHandle {
         sampling: SamplingCfg,
         tier: Tier,
     ) -> Result<GenerateResponse> {
-        let rx = self.generate(prompt, max_new, sampling, tier)?;
-        loop {
-            match rx.recv() {
-                Ok(TokenEvent::Token { .. }) => continue,
-                Ok(TokenEvent::Done(resp)) => return Ok(resp),
-                Ok(TokenEvent::Failed(msg)) => return Err(anyhow!("generate rejected: {msg}")),
-                Ok(TokenEvent::Rejected(reason)) => {
-                    return Err(anyhow!("generate shed: {reason}"))
-                }
-                Err(_) => return Err(anyhow!("generate dropped (server shut down mid-stream)")),
-            }
-        }
+        drain_stream(self.generate(prompt, max_new, sampling, tier)?)
+    }
+
+    /// Blocking convenience over [`ServerHandle::generate_speculative`]:
+    /// drain the stream and return the terminal [`GenerateResponse`].
+    pub fn generate_speculative_collect(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> Result<GenerateResponse> {
+        drain_stream(self.generate_speculative(prompt, max_new, sampling, tier)?)
     }
 
     /// Requests submitted but not yet answered (the adaptive router's
@@ -303,17 +352,43 @@ impl ServerHandle {
     }
 }
 
+/// Drain one token stream to its terminal event, mapping failures/sheds to
+/// errors.
+fn drain_stream(rx: Receiver<TokenEvent>) -> Result<GenerateResponse> {
+    loop {
+        match rx.recv() {
+            Ok(TokenEvent::Token { .. }) => continue,
+            Ok(TokenEvent::Done(resp)) => return Ok(resp),
+            Ok(TokenEvent::Failed(msg)) => return Err(anyhow!("generate rejected: {msg}")),
+            Ok(TokenEvent::Rejected(reason)) => return Err(anyhow!("generate shed: {reason}")),
+            Err(_) => return Err(anyhow!("generate dropped (server shut down mid-stream)")),
+        }
+    }
+}
+
 struct Pending {
     tokens: Vec<i32>,
     arrived: Instant,
     resp: SyncSender<ServeResult>,
 }
 
-/// One in-flight generation owned by the dispatcher: the KV-cache session
+/// How one in-flight generation advances per decode sweep.
+enum DecodeEngine {
+    /// One KV-cached session, one token per sweep, stacked into the
+    /// variant's batched step with every other plain session.
+    Plain(DecodeSession),
+    /// Draft + target session pair; one speculative round (up to `k + 1`
+    /// tokens) per sweep. Sampling state lives inside the [`SpecSession`].
+    Spec(SpecSession),
+}
+
+/// One in-flight generation owned by the dispatcher: the decode engine
 /// plus everything needed to sample, stream and finish it.
 struct ActiveDecode {
     variant: String,
-    session: DecodeSession,
+    engine: DecodeEngine,
+    /// Sampling policy; for [`DecodeEngine::Spec`] the session carries its
+    /// own copy and `sampling`/`rng` here are unused.
     sampling: SamplingCfg,
     rng: Pcg64,
     max_new: usize,
@@ -324,6 +399,17 @@ struct ActiveDecode {
     /// Client submission time (latency includes queue wait).
     arrived: Instant,
     resp: SyncSender<TokenEvent>,
+}
+
+impl ActiveDecode {
+    /// Positional capacity left on the cache that gates this stream (the
+    /// target cache for speculative sessions).
+    fn remaining(&self) -> usize {
+        match &self.engine {
+            DecodeEngine::Plain(s) => s.remaining(),
+            DecodeEngine::Spec(s) => s.target().remaining(),
+        }
+    }
 }
 
 /// What a backend factory hands the dispatcher: the executor plus one fwd
@@ -430,6 +516,12 @@ pub struct ServeConfig {
     pub max_sessions: usize,
     /// Decode/classify interleave policy.
     pub fairness: FairnessConfig,
+    /// Speculative-decoding policy. `Some` makes the server build one LED
+    /// draft checkpoint per variant at startup and accept
+    /// [`ServerHandle::generate_speculative`] requests; `None` (the
+    /// default) rejects them per-request with a clean
+    /// [`TokenEvent::Failed`].
+    pub spec: Option<SpecConfig>,
 }
 
 impl Default for ServeConfig {
@@ -439,6 +531,7 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             max_sessions: 64,
             fairness: FairnessConfig::default(),
+            spec: None,
         }
     }
 }
@@ -464,6 +557,9 @@ impl ServeConfig {
         }
         if self.fairness.sweeps_per_iteration == 0 {
             anyhow::bail!("FairnessConfig.sweeps_per_iteration must be >= 1");
+        }
+        if let Some(spec) = &self.spec {
+            spec.validate()?;
         }
         Ok(())
     }
@@ -564,11 +660,32 @@ pub fn serve_classifier_with(
                     return;
                 }
             }
+            // Speculation enabled: factorize one LED draft per variant up
+            // front (drafts share the variant's graph — LED preserves every
+            // I/O shape). A failed factorization is a synchronous startup
+            // error, like a missing graph.
+            let mut drafts: HashMap<String, ParamStore> = HashMap::new();
+            if let Some(spec) = &cfg.spec {
+                for (name, store) in &variants {
+                    match build_draft_params(store, spec.draft_ratio) {
+                        Ok(d) => {
+                            drafts.insert(name.clone(), d);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(anyhow!(
+                                "building LED draft for variant {name:?}: {e:#}"
+                            )));
+                            return;
+                        }
+                    }
+                }
+            }
             let _ = ready_tx.send(Ok(()));
             dispatch_loop(
                 backend.as_ref(),
                 graphs,
                 variants,
+                drafts,
                 router,
                 cfg,
                 rx,
@@ -589,6 +706,7 @@ fn dispatch_loop(
     backend: &dyn Backend,
     graphs: HashMap<String, GraphSpec>,
     variants: HashMap<String, ParamStore>,
+    drafts: HashMap<String, ParamStore>,
     router: Router,
     cfg: ServeConfig,
     rx: Receiver<Request>,
@@ -640,14 +758,14 @@ fn dispatch_loop(
         match first {
             Ok(msg) => {
                 handle_request(
-                    msg, backend, &graphs, &variants, &router, &mut batchers, &mut active, &cfg,
-                    &metrics, &depth,
+                    msg, backend, &graphs, &variants, &drafts, &router, &mut batchers,
+                    &mut active, &cfg, &metrics, &depth,
                 );
                 for _ in 1..cfg.fairness.drain_per_sweep {
                     match rx.try_recv() {
                         Ok(msg) => handle_request(
-                            msg, backend, &graphs, &variants, &router, &mut batchers, &mut active,
-                            &cfg, &metrics, &depth,
+                            msg, backend, &graphs, &variants, &drafts, &router, &mut batchers,
+                            &mut active, &cfg, &metrics, &depth,
                         ),
                         Err(TryRecvError::Empty) => break,
                         Err(TryRecvError::Disconnected) => {
@@ -686,7 +804,7 @@ fn dispatch_loop(
             // Token streams may outlive the submitting handle — sweep every
             // in-flight generation to completion before exiting.
             while !active.is_empty() {
-                decode_sweep(backend, &graphs, &variants, &mut active, &metrics, &depth);
+                decode_sweep(backend, &graphs, &variants, &drafts, &mut active, &metrics, &depth);
             }
             break;
         }
@@ -699,7 +817,7 @@ fn dispatch_loop(
             if active.is_empty() {
                 break;
             }
-            decode_sweep(backend, &graphs, &variants, &mut active, &metrics, &depth);
+            decode_sweep(backend, &graphs, &variants, &drafts, &mut active, &metrics, &depth);
         }
     }
 }
@@ -740,6 +858,7 @@ fn handle_request(
     backend: &dyn Backend,
     graphs: &HashMap<String, GraphSpec>,
     variants: &HashMap<String, ParamStore>,
+    drafts: &HashMap<String, ParamStore>,
     router: &Router,
     batchers: &mut HashMap<String, (Batcher, Vec<Pending>)>,
     active: &mut Vec<ActiveDecode>,
@@ -788,7 +907,8 @@ fn handle_request(
                 }));
                 return;
             }
-            if let Some(state) = start_decode(backend, graphs, variants, router, req, metrics, depth)
+            if let Some(state) =
+                start_decode(backend, graphs, variants, drafts, router, req, cfg, metrics, depth)
             {
                 active.push(state);
             }
@@ -796,24 +916,30 @@ fn handle_request(
     }
 }
 
-/// One continuous-batching decode sweep: advance every active session one
-/// token, stacked into a single [`Backend::run_decode_step_batched`] call
-/// per variant (sessions only stack over a shared checkpoint). Finished
-/// sessions leave `active`; survivors are regrouped by variant, preserving
-/// arrival order within each variant.
+/// One continuous-batching decode sweep: advance every active plain session
+/// one token — stacked into a single [`Backend::run_decode_step_batched`]
+/// call per variant (sessions only stack over a shared checkpoint) — and
+/// every speculative session one draft→verify→rollback round (up to
+/// `k + 1` tokens). Finished sessions leave `active`; survivors are
+/// regrouped, preserving arrival order within each variant.
 fn decode_sweep(
     backend: &dyn Backend,
     graphs: &HashMap<String, GraphSpec>,
     variants: &HashMap<String, ParamStore>,
+    drafts: &HashMap<String, ParamStore>,
     active: &mut Vec<ActiveDecode>,
     metrics: &Metrics,
     depth: &AtomicUsize,
 ) {
     let mut groups: Vec<(String, Vec<ActiveDecode>)> = Vec::new();
+    let mut specs: Vec<ActiveDecode> = Vec::new();
     for state in active.drain(..) {
-        match groups.iter_mut().find(|(v, _)| *v == state.variant) {
-            Some((_, members)) => members.push(state),
-            None => groups.push((state.variant.clone(), vec![state])),
+        match state.engine {
+            DecodeEngine::Spec(_) => specs.push(state),
+            DecodeEngine::Plain(_) => match groups.iter_mut().find(|(v, _)| *v == state.variant) {
+                Some((_, members)) => members.push(state),
+                None => groups.push((state.variant.clone(), vec![state])),
+            },
         }
     }
     for (variant, mut group) in groups {
@@ -824,8 +950,13 @@ fn decode_sweep(
             .map(|s| *s.tokens.last().expect("active decode has at least one sampled token"))
             .collect();
         let step = {
-            let mut sessions: Vec<&mut DecodeSession> =
-                group.iter_mut().map(|s| &mut s.session).collect();
+            let mut sessions: Vec<&mut DecodeSession> = group
+                .iter_mut()
+                .map(|s| match &mut s.engine {
+                    DecodeEngine::Plain(sess) => sess,
+                    DecodeEngine::Spec(_) => unreachable!("spec sessions are swept separately"),
+                })
+                .collect();
             backend.run_decode_step_batched(graph, store, &mut sessions, &tokens)
         };
         match step {
@@ -848,6 +979,37 @@ fn decode_sweep(
             }
         }
     }
+    // Speculative sessions advance independently (their verify pass is
+    // already a stacked multi-row step on the target). A failed round
+    // fails only its own stream — speculation errors are per-session, not
+    // systemic. Spec rounds are deliberately absent from the merged-step
+    // counters: `record_decode_step` measures plain-sweep stacking.
+    for mut state in specs {
+        let graph = &graphs[&state.variant];
+        let store = &variants[&state.variant];
+        let draft_store = &drafts[&state.variant];
+        let max_emit = state.max_new - state.tokens.len();
+        let round = match &mut state.engine {
+            DecodeEngine::Spec(session) => {
+                session.step(backend, graph, store, graph, draft_store, max_emit)
+            }
+            DecodeEngine::Plain(_) => unreachable!("plain sessions are swept above"),
+        };
+        match round {
+            Ok(step) => {
+                metrics.record_spec_step(step.drafted, step.accepted, step.rolled_back > 0);
+                if !emit_spec_tokens(&mut state, &step.tokens, metrics, depth) {
+                    active.push(state);
+                }
+            }
+            Err(e) => decode_failed(
+                &state.resp,
+                format!("speculative step failed: {e:#}"),
+                metrics,
+                depth,
+            ),
+        }
+    }
 }
 
 /// Reject/fail one generation: error metrics, depth bookkeeping, terminal
@@ -865,13 +1027,16 @@ fn decode_failed(
 
 /// Route + validate + prefill one generation request. Returns the active
 /// session when it must keep running, `None` when it already finished
-/// (single-token generations) or failed.
+/// (single-token and degenerate generations) or failed.
+#[allow(clippy::too_many_arguments)]
 fn start_decode(
     backend: &dyn Backend,
     graphs: &HashMap<String, GraphSpec>,
     variants: &HashMap<String, ParamStore>,
+    drafts: &HashMap<String, ParamStore>,
     router: &Router,
     req: GenerateRequest,
+    cfg: &ServeConfig,
     metrics: &Metrics,
     depth: &AtomicUsize,
 ) -> Option<ActiveDecode> {
@@ -880,13 +1045,74 @@ fn start_decode(
         .to_string();
     let graph = &graphs[&variant];
     let store = &variants[&variant];
-    if req.max_new == 0 {
-        decode_failed(&req.resp, "max_new must be >= 1".to_string(), metrics, depth);
+    if req.max_new == 0 || req.prompt.is_empty() {
+        // Degenerate but well-formed — mirror `backend::generate`: an
+        // empty stream that finishes cleanly, not an error.
+        let latency = Instant::now().duration_since(req.submitted);
+        metrics.record_latency(latency);
+        metrics.record_decode_done(&variant);
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = req.resp.send(TokenEvent::Done(GenerateResponse {
+            tokens: Vec::new(),
+            variant,
+            prefill_tokens: 0,
+            latency,
+        }));
         return None;
     }
-    if req.prompt.is_empty() {
-        decode_failed(&req.resp, "prompt must be non-empty".to_string(), metrics, depth);
-        return None;
+    if req.speculative {
+        let Some(spec) = cfg.spec else {
+            decode_failed(
+                &req.resp,
+                "speculative decoding is not enabled on this server (set ServeConfig.spec)"
+                    .to_string(),
+                metrics,
+                depth,
+            );
+            return None;
+        };
+        let draft_store = &drafts[&variant];
+        // The draft shares the target's graph: LED factorization preserves
+        // every I/O shape, and decoding reads only the graph's config.
+        let (session, first) = match SpecSession::new(
+            backend,
+            graph,
+            store,
+            graph,
+            draft_store,
+            &req.prompt,
+            req.sampling,
+            &spec,
+        ) {
+            Ok(pair) => pair,
+            Err(e) => {
+                decode_failed(
+                    &req.resp,
+                    format!("speculative prefill failed: {e:#}"),
+                    metrics,
+                    depth,
+                );
+                return None;
+            }
+        };
+        metrics.record_prefill_tokens(req.prompt.len());
+        metrics.record_spec_prefill_sample();
+        let mut state = ActiveDecode {
+            variant,
+            engine: DecodeEngine::Spec(session),
+            sampling: req.sampling,
+            rng: req.sampling.rng(),
+            max_new: req.max_new,
+            tokens: Vec::with_capacity(req.max_new),
+            prefill_tokens: req.prompt.len(),
+            arrived: req.submitted,
+            resp: req.resp,
+        };
+        return if emit_spec_tokens(&mut state, &[first], metrics, depth) {
+            None
+        } else {
+            Some(state)
+        };
     }
     let mut session = match DecodeSession::new(graph, store) {
         Ok(s) => s,
@@ -911,7 +1137,7 @@ fn start_decode(
     let rng = req.sampling.rng();
     let mut state = ActiveDecode {
         variant,
-        session,
+        engine: DecodeEngine::Plain(session),
         sampling: req.sampling,
         rng,
         max_new: req.max_new,
@@ -927,8 +1153,9 @@ fn start_decode(
     }
 }
 
-/// Sample + stream one token from `logits`. Returns true when the session
-/// reached a terminal state (Done sent) — the caller then drops it.
+/// Sample + stream one token from `logits` (plain sessions only). Returns
+/// true when the session reached a terminal state (Done sent) — the caller
+/// then drops it.
 fn emit_token(
     state: &mut ActiveDecode,
     logits: &Tensor,
@@ -954,20 +1181,51 @@ fn emit_token(
     });
     state.tokens.push(tok);
     metrics.record_generated_tokens(1);
-    if state.tokens.len() >= state.max_new || state.session.remaining() == 0 {
-        let latency = Instant::now().duration_since(state.arrived);
-        metrics.record_latency(latency);
-        metrics.record_decode_done(&state.variant);
-        depth.fetch_sub(1, Ordering::Relaxed);
-        let _ = state.resp.send(TokenEvent::Done(GenerateResponse {
-            tokens: state.tokens.clone(),
-            variant: state.variant.clone(),
-            prefill_tokens: state.prefill_tokens,
-            latency,
-        }));
+    if state.tokens.len() >= state.max_new || state.remaining() == 0 {
+        finish_stream(state, metrics, depth);
         return true;
     }
     false
+}
+
+/// Stream every token one speculative round emitted (already sampled by
+/// the [`SpecSession`]). Returns true when the session reached a terminal
+/// state (Done sent) — the caller then drops it.
+fn emit_spec_tokens(
+    state: &mut ActiveDecode,
+    toks: &[i32],
+    metrics: &Metrics,
+    depth: &AtomicUsize,
+) -> bool {
+    for &tok in toks {
+        let _ = state.resp.send(TokenEvent::Token {
+            index: state.tokens.len(),
+            token: tok,
+        });
+        state.tokens.push(tok);
+    }
+    metrics.record_generated_tokens(toks.len());
+    debug_assert!(state.tokens.len() <= state.max_new, "spec round overshot max_new");
+    if state.tokens.len() >= state.max_new || state.remaining() == 0 {
+        finish_stream(state, metrics, depth);
+        return true;
+    }
+    false
+}
+
+/// Send the terminal [`TokenEvent::Done`] for a finished stream and settle
+/// its latency/depth bookkeeping.
+fn finish_stream(state: &mut ActiveDecode, metrics: &Metrics, depth: &AtomicUsize) {
+    let latency = Instant::now().duration_since(state.arrived);
+    metrics.record_latency(latency);
+    metrics.record_decode_done(&state.variant);
+    depth.fetch_sub(1, Ordering::Relaxed);
+    let _ = state.resp.send(TokenEvent::Done(GenerateResponse {
+        tokens: state.tokens.clone(),
+        variant: state.variant.clone(),
+        prefill_tokens: state.prefill_tokens,
+        latency,
+    }));
 }
 
 fn run_batch(

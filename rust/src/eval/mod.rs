@@ -5,7 +5,9 @@
 //! the PJRT engine (artifacts present) or the native CPU interpreter
 //! (hermetic checkouts) — `&Engine` call sites coerce unchanged.
 
-use crate::backend::{sample_token, Backend, DecodeSession, SamplingCfg};
+use crate::backend::{
+    generate, generate_speculative, sample_token, Backend, DecodeSession, SamplingCfg, SpecConfig,
+};
 use crate::data::lm::{compose_prompt, IclPrompt};
 use crate::data::{batch, vocab, Dataset, Split};
 use crate::runtime::GraphSpec;
@@ -368,6 +370,122 @@ pub fn measure_batched_decode(
         new_tokens,
         batched_tps: total / sw_batched.total_secs().max(1e-12),
         roundrobin_tps: total / sw_rr.total_secs().max(1e-12),
+    })
+}
+
+/// Throughput of speculative decoding (LED draft proposes, dense target
+/// verifies) against plain single-token decoding of the same target — the
+/// numbers that price factorization as a draft/verify serving lever: how
+/// much faster the stream runs, and what fraction of cheap drafts the
+/// target accepted (the paper's accuracy-retention claim, operationalized).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDecodeReport {
+    /// Tokens generated per iteration (same for both schedules).
+    pub new_tokens: usize,
+    /// Aggregate tokens/sec of the speculative draft+verify loop.
+    pub spec_tps: f64,
+    /// Aggregate tokens/sec of plain greedy decoding of the target.
+    pub plain_tps: f64,
+    /// Fraction of drafted tokens the target accepted, over all measured
+    /// iterations.
+    pub acceptance_rate: f64,
+    /// Total draft tokens proposed across measured iterations.
+    pub drafted: u64,
+    /// Total draft tokens accepted across measured iterations.
+    pub accepted: u64,
+}
+
+impl SpecDecodeReport {
+    /// Speculative throughput over plain throughput (> 1.0 when drafting
+    /// pays for itself).
+    pub fn speedup(&self) -> f64 {
+        self.spec_tps / self.plain_tps.max(1e-12)
+    }
+}
+
+/// Measure speculative-decode throughput: each iteration generates
+/// `new_tokens` greedily from `prompt` twice — once with plain
+/// [`generate`] on the target checkpoint, once with
+/// [`generate_speculative`] over the `draft` checkpoint (built by
+/// [`crate::backend::build_draft_params`]; it shares the target's graph) —
+/// timing each full loop. `warmup` whole iterations are discarded.
+///
+/// Greedy speculative decoding is token-for-token identical to plain
+/// greedy decoding by construction (see [`crate::backend::spec`]), and
+/// this harness re-checks that: it fails if the streams diverge, so a
+/// throughput number can never come from a decode that changed the output.
+///
+/// # Examples
+///
+/// ```
+/// use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+/// use greenformer::backend::{build_draft_params, NativeBackend, SpecConfig};
+/// use greenformer::eval::measure_spec_decode;
+///
+/// let cfg = TextModelCfg { vocab: 48, seq: 12, d: 24, heads: 6, layers: 1, ff: 32, classes: 48 };
+/// let params = init_text_params(&cfg, 7);
+/// let draft = build_draft_params(&params, 0.5).unwrap();
+/// let graph = synth_fwd_graph("lm", "dense", 1, &params).unwrap();
+/// let spec = SpecConfig { k: 2, ..Default::default() };
+/// let r = measure_spec_decode(
+///     &NativeBackend::new(), &graph, &params, &draft, &[1, 2, 3], 4, &spec, 0, 1,
+/// )
+/// .unwrap();
+/// assert_eq!(r.new_tokens, 4);
+/// assert!(r.spec_tps > 0.0 && r.plain_tps > 0.0);
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn measure_spec_decode(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    target: &ParamStore,
+    draft: &ParamStore,
+    prompt: &[i32],
+    new_tokens: usize,
+    spec: &SpecConfig,
+    warmup: usize,
+    iters: usize,
+) -> Result<SpecDecodeReport> {
+    if prompt.is_empty() || new_tokens == 0 || iters == 0 {
+        anyhow::bail!("measure_spec_decode needs a prompt, new_tokens >= 1 and iters >= 1");
+    }
+    spec.validate()?;
+    let greedy = SamplingCfg::greedy();
+    let mut sw_plain = Stopwatch::new();
+    let mut sw_spec = Stopwatch::new();
+    let mut drafted = 0u64;
+    let mut accepted = 0u64;
+    let mut emitted = 0usize;
+    for it in 0..warmup + iters {
+        let measured = it >= warmup;
+        let plain = if measured {
+            sw_plain.time(|| generate(backend, graph, target, prompt, new_tokens, &greedy, |_, _| {}))?
+        } else {
+            generate(backend, graph, target, prompt, new_tokens, &greedy, |_, _| {})?
+        };
+        let run_spec = || {
+            generate_speculative(
+                backend, graph, target, graph, draft, prompt, new_tokens, &greedy, spec, |_, _| {},
+            )
+        };
+        let spec_out = if measured { sw_spec.time(run_spec)? } else { run_spec()? };
+        anyhow::ensure!(
+            plain.tokens == spec_out.tokens,
+            "speculative greedy stream diverged from plain greedy stream"
+        );
+        if measured {
+            drafted += spec_out.drafted;
+            accepted += spec_out.accepted;
+            emitted += spec_out.tokens.len();
+        }
+    }
+    Ok(SpecDecodeReport {
+        new_tokens,
+        spec_tps: emitted as f64 / sw_spec.total_secs().max(1e-12),
+        plain_tps: emitted as f64 / sw_plain.total_secs().max(1e-12),
+        acceptance_rate: if drafted == 0 { 0.0 } else { accepted as f64 / drafted as f64 },
+        drafted,
+        accepted,
     })
 }
 

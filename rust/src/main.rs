@@ -9,7 +9,8 @@ use std::path::PathBuf;
 
 use greenformer::backend::native::{demo_variants, init_text_params, synth_fwd_graph, TextModelCfg};
 use greenformer::backend::{
-    generate as lm_generate, generate_batched as lm_generate_batched, NativeBackend, SamplingCfg,
+    build_draft_params, generate as lm_generate, generate_batched as lm_generate_batched,
+    generate_speculative as lm_generate_speculative, NativeBackend, SamplingCfg, SpecConfig,
 };
 use greenformer::config::ExperimentConfig;
 use greenformer::coordinator::{
@@ -47,10 +48,14 @@ COMMANDS:
   generate  [--max-new 32] [--temperature 0.0] [--top-k 0] [--seed 42]
             [--prompt "3,17,42" | --prompt-len 16] [--ratio 0.25]
             [--model-seed 42] [--stats] [--sessions 1]
+            [--speculative [--draft-ratio 0.25] [-k 4] [--adaptive-k]]
             KV-cached autoregressive decoding on a synthetic LM
             (artifact-free; random init, factorized when --ratio is given).
             --sessions N decodes N staggered prompts concurrently through
-            the continuous-batching stacked step (see SERVING.md)
+            the continuous-batching stacked step (see SERVING.md).
+            --speculative drafts -k tokens per round on an LED rank-cut
+            copy (SVD at --draft-ratio) and verifies them in one stacked
+            target pass; greedy output is identical to the plain stream
 
 Backends: pjrt executes the AOT artifacts; native is the pure-Rust CPU
 interpreter (no artifacts needed — it trains too, via the grad module, and
@@ -439,6 +444,15 @@ fn generate_cmd(args: &Args) -> Result<()> {
     );
     let be = NativeBackend::new();
     let sessions = args.parse_or("--sessions", 1usize).max(1);
+    if args.has("--speculative") {
+        if sessions > 1 {
+            anyhow::bail!(
+                "--speculative decodes one stream; drop --sessions (the serving layer runs \
+                 speculative sessions concurrently — see ServeConfig.spec in SERVING.md)"
+            );
+        }
+        return generate_speculative_cmd(args, &be, &graph, &params, &prompt, max_new, &sampling);
+    }
     if sessions > 1 {
         // Continuous-batching path: decode N streams concurrently, one
         // stacked GEMM step per token. Streams get distinct prompts (the
@@ -501,6 +515,80 @@ fn generate_cmd(args: &Args) -> Result<()> {
             lat.per_token_p50_s * 1e3,
             lat.per_token_p95_s * 1e3,
             lat.tokens_per_sec
+        );
+    }
+    Ok(())
+}
+
+/// `generate --speculative`: draft on an LED rank-cut copy of the model,
+/// verify each round in one stacked multi-row target pass, stream the
+/// accepted tokens. Greedy output is token-for-token identical to the
+/// plain `generate` stream — speculation changes speed, never content.
+fn generate_speculative_cmd(
+    args: &Args,
+    be: &NativeBackend,
+    graph: &greenformer::runtime::GraphSpec,
+    params: &ParamStore,
+    prompt: &[i32],
+    max_new: usize,
+    sampling: &SamplingCfg,
+) -> Result<()> {
+    let spec = SpecConfig {
+        draft_ratio: args.parse_or("--draft-ratio", 0.25f64),
+        k: args.parse_or("-k", args.parse_or("--spec-k", 4usize)),
+        adaptive_k: args.has("--adaptive-k"),
+    };
+    spec.validate()?;
+    let draft = build_draft_params(params, spec.draft_ratio)?;
+    println!(
+        "speculative: LED draft at ratio {} (SVD), k={}{}",
+        spec.draft_ratio,
+        spec.k,
+        if spec.adaptive_k { " (adaptive)" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    print!("generated:");
+    let out = lm_generate_speculative(
+        be, graph, params, graph, &draft, prompt, max_new, sampling, &spec, |_, t| {
+            print!(" {t}");
+            use std::io::Write as _;
+            let _ = std::io::stdout().flush();
+        },
+    )?;
+    println!();
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{} tokens in {:.3}s ({:.1} tok/s end to end): drafted {}, accepted {} \
+         (acceptance {:.2}), {} rollbacks over {} rounds",
+        out.tokens.len(),
+        secs,
+        out.tokens.len() as f64 / secs.max(1e-12),
+        out.drafted,
+        out.accepted,
+        out.acceptance_rate(),
+        out.rollbacks,
+        out.steps
+    );
+    if args.has("--stats") {
+        let seq = graph.config_usize("seq").unwrap_or(prompt.len() + max_new);
+        let room = seq.saturating_sub(prompt.len());
+        if room == 0 {
+            println!("(prompt fills the context; no throughput profile to measure)");
+            return Ok(());
+        }
+        let budget = room.min(max_new);
+        let r = greenformer::eval::measure_spec_decode(
+            be, graph, params, &draft, prompt, budget, &spec, 1, 3,
+        )?;
+        println!(
+            "spec profile: {:.1} tok/s speculative vs {:.1} tok/s plain ({:.2}x), \
+             acceptance {:.2} ({}/{} drafts)",
+            r.spec_tps,
+            r.plain_tps,
+            r.speedup(),
+            r.acceptance_rate,
+            r.accepted,
+            r.drafted
         );
     }
     Ok(())

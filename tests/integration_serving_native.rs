@@ -14,7 +14,7 @@ use greenformer::backend::native::{demo_variants, TextModelCfg};
 use greenformer::backend::SamplingCfg;
 use greenformer::coordinator::{
     serve_classifier, serve_classifier_native, BatcherConfig, RoutePolicy, Router, ServeConfig,
-    ShedReason, Tier, TokenEvent,
+    ShedReason, SpecConfig, Tier, TokenEvent,
 };
 use greenformer::data::text::PolarityTask;
 use greenformer::data::{Dataset, Split};
@@ -412,17 +412,197 @@ fn classify_and_generate_reject_mismatched_model_families_cleanly() {
     let ds = PolarityTask::new(SEQ, 5);
     let ok = text.classify(ds.example(Split::Eval, 0).tokens, Tier::Quality).unwrap();
     assert_eq!(ok.variant, "dense");
-    // Bad generate requests error rather than hang: empty prompt, zero
-    // budget, over-capacity prompt.
+    // Degenerate but well-formed requests (empty prompt, zero budget)
+    // finish cleanly with an empty stream — mirroring `backend::generate` —
+    // while genuinely bad requests still fail: over-capacity prompt,
+    // out-of-vocab token.
     let lm2 = lm_server();
-    assert!(lm2.generate_collect(vec![], 4, SamplingCfg::greedy(), Tier::Quality).is_err());
-    assert!(lm2.generate_collect(vec![1], 0, SamplingCfg::greedy(), Tier::Quality).is_err());
+    let empty = lm2.generate_collect(vec![], 4, SamplingCfg::greedy(), Tier::Quality).unwrap();
+    assert!(empty.tokens.is_empty() && empty.prefill_tokens == 0);
+    let zero = lm2.generate_collect(vec![1], 0, SamplingCfg::greedy(), Tier::Quality).unwrap();
+    assert!(zero.tokens.is_empty() && zero.prefill_tokens == 0);
+    assert_eq!(lm2.metrics.errors.load(Ordering::Relaxed), 0);
     assert!(lm2
         .generate_collect(vec![0; 17], 4, SamplingCfg::greedy(), Tier::Quality)
         .is_err());
     assert!(lm2
         .generate_collect(vec![64], 4, SamplingCfg::greedy(), Tier::Quality)
         .is_err(), "out-of-vocab prompt token must fail the prefill");
+}
+
+/// A spec-enabled LM server: the dispatcher SVD-factorizes an LED draft of
+/// every variant at startup and runs speculative sessions in the same
+/// continuous-batching sweep as plain ones.
+fn lm_spec_server() -> greenformer::coordinator::ServerHandle {
+    lm_server_with(ServeConfig {
+        spec: Some(SpecConfig {
+            draft_ratio: 0.5,
+            k: 3,
+            adaptive_k: false,
+        }),
+        ..ServeConfig::default()
+    })
+}
+
+#[test]
+fn speculative_serving_reconciles_metrics_and_matches_plain_greedy_streams() {
+    // Solo plain-greedy references per tier, computed on a separate plain
+    // server over the identical (seeded) variant stores. Greedy speculative
+    // streams through the server must equal these token-for-token.
+    let plain = lm_server();
+    let prompt = vec![1i32, 2, 3, 4];
+    let max_new = 8usize;
+    let expect_fast = plain
+        .generate_collect(prompt.clone(), max_new, SamplingCfg::greedy(), Tier::Fast)
+        .unwrap();
+    let expect_quality = plain
+        .generate_collect(prompt.clone(), max_new, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    drop(plain);
+
+    // Pure-spec workload: 6 concurrent speculative clients, no plain ones,
+    // so the speculation ledger must account for EVERY generated token.
+    let handle = lm_spec_server();
+    let n_clients = 6usize;
+    let mut joins = Vec::new();
+    for i in 0..n_clients {
+        let h = handle.clone();
+        let p = prompt.clone();
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+            let resp = h
+                .generate_speculative_collect(p, max_new, SamplingCfg::greedy(), tier)
+                .unwrap();
+            (i, resp)
+        }));
+    }
+    for j in joins {
+        let (i, resp) = j.join().unwrap();
+        let expect = if i % 2 == 0 { &expect_fast } else { &expect_quality };
+        assert_eq!(resp.variant, expect.variant, "client {i}");
+        assert_eq!(
+            resp.tokens, expect.tokens,
+            "client {i}: speculative greedy stream diverged from plain greedy"
+        );
+        assert_eq!(resp.tokens.len(), max_new);
+    }
+
+    // Exact reconciliation under concurrent load: every emitted token is an
+    // accepted draft or a target-sampled correction — no slack term.
+    let m = &handle.metrics;
+    let generated = m.generated_tokens.load(Ordering::Relaxed);
+    let drafted = m.drafted_tokens.load(Ordering::Relaxed);
+    let accepted = m.accepted_tokens.load(Ordering::Relaxed);
+    let corrections = m.spec_corrections.load(Ordering::Relaxed);
+    let rollbacks = m.spec_rollbacks.load(Ordering::Relaxed);
+    assert_eq!(generated, (n_clients * max_new) as u64);
+    assert_eq!(
+        generated,
+        accepted + corrections,
+        "speculation ledger must account for every generated token"
+    );
+    assert!(drafted > 0, "speculative sessions must actually draft");
+    assert!(accepted <= drafted);
+    let rate = m.acceptance_rate();
+    assert!(
+        rate > 0.0 && rate <= 1.0,
+        "acceptance rate out of (0, 1]: {rate} (SVD draft at ratio 0.5 must win sometimes)"
+    );
+    // A rollback is recorded per verify round that rejected >= 1 draft, so
+    // rollbacks can never exceed the total number of rejected drafts.
+    assert!(
+        rollbacks <= drafted - accepted,
+        "rollbacks ({rollbacks}) exceed rejected drafts ({})",
+        drafted - accepted
+    );
+    assert_eq!(m.requests.load(Ordering::Relaxed), n_clients as u64);
+    assert_eq!(m.responses.load(Ordering::Relaxed), n_clients as u64);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(m.prefill_tokens.load(Ordering::Relaxed), (n_clients * prompt.len()) as u64);
+    assert_eq!(handle.queue_depth(), 0);
+
+    // Degenerate speculative requests finish cleanly too (checked before
+    // the engine choice, mirroring the plain path).
+    let empty = handle
+        .generate_speculative_collect(vec![], max_new, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    assert!(empty.tokens.is_empty() && empty.prefill_tokens == 0);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn mixed_fleet_spec_and_plain_streams_share_sweeps_and_match_solo_references() {
+    // Solo references on a plain server (same seeded stores).
+    let plain = lm_server();
+    let prompt = vec![2i32, 3, 5];
+    let max_new = 6usize;
+    let expect_fast = plain
+        .generate_collect(prompt.clone(), max_new, SamplingCfg::greedy(), Tier::Fast)
+        .unwrap();
+    let expect_quality = plain
+        .generate_collect(prompt.clone(), max_new, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    drop(plain);
+
+    // Mixed fleet on one spec-enabled server: 3 speculative + 3 plain
+    // clients decoding concurrently, sharing the same dispatcher sweep.
+    // Every stream — whichever engine carried it — must equal its solo
+    // plain-greedy reference: batching and speculation change the schedule,
+    // never the tokens.
+    let handle = lm_spec_server();
+    let mut joins = Vec::new();
+    for i in 0..6usize {
+        let h = handle.clone();
+        let p = prompt.clone();
+        joins.push(std::thread::spawn(move || {
+            let tier = if i % 2 == 0 { Tier::Fast } else { Tier::Quality };
+            let resp = if i < 3 {
+                h.generate_speculative_collect(p, max_new, SamplingCfg::greedy(), tier)
+            } else {
+                h.generate_collect(p, max_new, SamplingCfg::greedy(), tier)
+            }
+            .unwrap();
+            (i, resp)
+        }));
+    }
+    for j in joins {
+        let (i, resp) = j.join().unwrap();
+        let expect = if i % 2 == 0 { &expect_fast } else { &expect_quality };
+        let engine = if i < 3 { "spec" } else { "plain" };
+        assert_eq!(
+            resp.tokens, expect.tokens,
+            "client {i} ({engine}): stream diverged from its solo reference"
+        );
+    }
+    let m = &handle.metrics;
+    assert_eq!(m.responses.load(Ordering::Relaxed), 6);
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+    // Only the 3 speculative sessions touched the speculation ledger.
+    assert!(m.drafted_tokens.load(Ordering::Relaxed) > 0);
+    assert!(
+        m.accepted_tokens.load(Ordering::Relaxed) + m.spec_corrections.load(Ordering::Relaxed)
+            <= m.generated_tokens.load(Ordering::Relaxed),
+        "plain streams generate tokens outside the speculation ledger"
+    );
+    assert_eq!(handle.queue_depth(), 0);
+}
+
+#[test]
+fn speculative_request_on_spec_disabled_server_fails_cleanly() {
+    // No `ServeConfig::spec`: a speculative request gets a per-request
+    // Failed event naming the missing config, and the server keeps serving
+    // plain generations afterwards.
+    let handle = lm_server();
+    let err = handle.generate_speculative_collect(vec![1, 2], 4, SamplingCfg::greedy(), Tier::Quality);
+    assert!(err.is_err(), "speculative decode must fail when spec is not configured");
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("not enabled"), "unexpected error: {msg}");
+
+    let resp = handle
+        .generate_collect(vec![1, 2], 4, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+    assert_eq!(handle.metrics.errors.load(Ordering::Relaxed), 1);
 }
 
 #[test]

@@ -43,6 +43,7 @@ fn main() {
             solver: Solver::Svd,
             num_iter: 20,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -38,6 +38,7 @@ fn main() {
                     solver,
                     num_iter: 20,
                     submodules: None,
+                    ..Default::default()
                 },
             )
             .unwrap()

@@ -1,0 +1,74 @@
+//! Artifact-free quantized-decode bench: the DESIGN.md §12 precision axis
+//! (f32 / int8 / binary) on the native KV-cached decode path.
+//!
+//! Runs the [`greenformer::experiments::quant_panel`] harness: one LED
+//! checkpoint (SVD at Ratio(0.5)), then per precision the greedy decode
+//! throughput, agreement of the greedy token streams with f32 over seeded
+//! prompts, quantized weight bytes, and the propagated worst-case
+//! |Δlogit| bound from the quantization report. Decode is memory-bound, so
+//! the bytes column is the mechanism behind the tok/s column.
+//!
+//! Prints the panel's aligned table plus a machine-readable
+//! `BENCH_QUANT {...}` JSON line for `python/tools/collect_bench.py`.
+//!
+//! Env: GREENFORMER_BENCH_QUANT=quick switches to the small CI preset
+//! (same preset as the library's panel smoke test).
+
+use greenformer::experiments::{quant_panel, QuantPanelCfg};
+use greenformer::factorize::WeightPrecision;
+
+fn main() {
+    let quick = std::env::var("GREENFORMER_BENCH_QUANT")
+        .map(|v| v == "quick")
+        .unwrap_or(false);
+    let cfg = if quick { QuantPanelCfg::quick() } else { QuantPanelCfg::default() };
+    println!(
+        "== native quantized decode (d={} ff={} layers={} vocab={}, ratio={}, {} mode) ==",
+        cfg.lm.d,
+        cfg.lm.ff,
+        cfg.lm.layers,
+        cfg.lm.vocab,
+        cfg.ratio,
+        if quick { "quick" } else { "full" }
+    );
+    let panel = quant_panel(&cfg).expect("quant_panel");
+    print!("{}", panel.render());
+
+    let row = |p: WeightPrecision| {
+        panel.points.iter().find(|pt| pt.precision == p).expect("panel row")
+    };
+    let (f, i8r, bin) = (
+        row(WeightPrecision::F32),
+        row(WeightPrecision::Int8),
+        row(WeightPrecision::Binary),
+    );
+    // Bounds render as JSON numbers (`1.2e-3`) or `null`, never NaN — the
+    // collector hard-fails on unparseable BENCH_ lines.
+    let bound_json =
+        |b: Option<f64>| b.map(|v| format!("{v:.6e}")).unwrap_or_else(|| "null".into());
+    println!(
+        "BENCH_QUANT {{\"prompts\":{},\"new_tokens\":{},\"quick\":{quick},\
+         \"f32_tps\":{:.2},\"int8_tps\":{:.2},\"binary_tps\":{:.2},\
+         \"int8_speedup\":{:.3},\"binary_speedup\":{:.3},\
+         \"int8_agreement\":{:.3},\"binary_agreement\":{:.3},\
+         \"f32_bytes\":{},\"int8_bytes\":{},\"binary_bytes\":{},\
+         \"int8_compression\":{:.4},\"binary_compression\":{:.4},\
+         \"int8_logit_bound\":{},\"binary_logit_bound\":{}}}",
+        panel.prompts,
+        panel.new_tokens,
+        f.tokens_per_sec,
+        i8r.tokens_per_sec,
+        bin.tokens_per_sec,
+        i8r.speedup,
+        bin.speedup,
+        i8r.agreement,
+        bin.agreement,
+        f.bytes,
+        i8r.bytes,
+        bin.bytes,
+        i8r.compression,
+        bin.compression,
+        bound_json(i8r.logit_bound),
+        bound_json(bin.logit_bound),
+    );
+}

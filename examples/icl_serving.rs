@@ -51,6 +51,7 @@ fn main() -> greenformer::Result<()> {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: None,
+            ..Default::default()
         },
     )?;
     println!(

@@ -47,6 +47,7 @@ fn main() -> greenformer::Result<()> {
                     solver,
                     num_iter: 50,
                     submodules: None,
+                    ..Default::default()
                 },
             )?;
             let variant = format!("led_r{:02}", (ratio * 100.0).round() as usize);

@@ -35,6 +35,7 @@ fn main() -> greenformer::Result<()> {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: None,
+            ..Default::default()
         },
     )?;
     print!("{report}");

@@ -1,0 +1,63 @@
+"""collect_bench marker parsing: malformed BENCH_* lines must fail loudly.
+
+The collector used to drop unparseable marker lines with a stderr note and
+report success — a bench could emit garbage forever and the trajectory
+files would quietly stop accumulating. ``parse_bench_lines`` now raises on
+any line that starts like a marker but does not carry a JSON object.
+Hermetic (no cargo, no jax): exercises the pure parsing layer only.
+"""
+
+import pytest
+
+from tools.collect_bench import MARKER_RE, parse_bench_lines
+
+
+def test_parses_markers_and_ignores_ordinary_output():
+    out = "\n".join(
+        [
+            "== native quantized decode ==",
+            "precision  tok/s",
+            'BENCH_QUANT {"f32_tps":100.5,"int8_agreement":1.0}',
+            "   BENCH_NATIVE_DECODE {\"dense_tps\":42} ",  # leading/trailing ws ok
+            "benchmark BENCH_LOOKALIKE in prose is not a marker line",
+        ]
+    )
+    got = parse_bench_lines(out)
+    assert got == [
+        ("BENCH_QUANT", {"f32_tps": 100.5, "int8_agreement": 1.0}),
+        ("BENCH_NATIVE_DECODE", {"dense_tps": 42}),
+    ]
+
+
+def test_empty_and_markerless_output_yield_nothing():
+    assert parse_bench_lines("") == []
+    assert parse_bench_lines("all quiet\nno markers here\n") == []
+
+
+@pytest.mark.parametrize(
+    "line",
+    [
+        "BENCH_QUANT",  # no payload at all
+        "BENCH_QUANT not-json",  # payload is not an object
+        'BENCH_QUANT {"truncated":1',  # unbalanced JSON
+        'BENCH_QUANT {"a":NaN}',  # NaN is not JSON
+        "BENCH_QUANT [1, 2]",  # array, not object
+    ],
+)
+def test_malformed_marker_lines_raise(line):
+    with pytest.raises(ValueError):
+        parse_bench_lines(f"ok line\n{line}\n")
+
+
+def test_valid_json_non_object_payload_raises():
+    # `{...}` regex gate passed but the payload parses to a non-dict: the
+    # regex requires braces, so craft an object-looking string via nesting.
+    with pytest.raises(ValueError):
+        parse_bench_lines('BENCH_QUANT {"a"} \n')
+
+
+def test_marker_regex_shape_unchanged():
+    # The Rust benches print `BENCH_<UPPER_SNAKE> {json}`; pin the contract.
+    m = MARKER_RE.match('BENCH_QUANT {"x":1}')
+    assert m and m.group(1) == "BENCH_QUANT" and m.group(2) == '{"x":1}'
+    assert MARKER_RE.match("bench_quant {}") is None

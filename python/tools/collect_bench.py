@@ -33,7 +33,7 @@ import re
 import subprocess
 import sys
 
-DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving"]
+DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving", "native_quant"]
 
 # Env knobs that keep the --quick run short enough for CI.
 QUICK_ENV = {
@@ -43,6 +43,7 @@ QUICK_ENV = {
     "GREENFORMER_BENCH_DECODE_SESSIONS": "4",
     "GREENFORMER_BENCH_SPEC_K": "3",
     "GREENFORMER_BENCH_TRAIN_STEPS": "8",
+    "GREENFORMER_BENCH_QUANT": "quick",
 }
 
 # Headline fields worth surfacing per marker (everything is persisted; these
@@ -58,9 +59,48 @@ HIGHLIGHTS = {
     "BENCH_NATIVE_SERVING": ["led_r25_speedup"],
     "BENCH_KERNELS": [],
     "BENCH_NATIVE_TRAIN": [],
+    "BENCH_QUANT": [
+        "int8_speedup",
+        "binary_speedup",
+        "int8_agreement",
+        "binary_agreement",
+        "int8_compression",
+    ],
 }
 
 MARKER_RE = re.compile(r"^(BENCH_[A-Z0-9_]+) (\{.*\})\s*$")
+
+
+def parse_bench_lines(stdout: str) -> list[tuple[str, dict]]:
+    """Extract every ``BENCH_<MARKER> {json}`` pair from bench output.
+
+    Any line that *starts* like a marker but fails to parse — truncated
+    JSON, a non-object payload, a missing payload — raises ``ValueError``
+    instead of being dropped: a malformed line means the bench's emitter
+    and this collector disagree, and silently losing the datapoint would
+    let the perf trajectory rot unnoticed.
+    """
+    found = []
+    for raw in stdout.splitlines():
+        line = raw.strip()
+        if not line.startswith("BENCH_"):
+            continue
+        m = MARKER_RE.match(line)
+        if not m:
+            raise ValueError(f"malformed bench marker line (no JSON object payload): {line!r}")
+        def _reject_constant(name: str):
+            # NaN/Infinity are json-module extensions, not JSON — a bench
+            # emitting them would break every strict consumer downstream.
+            raise ValueError(f"non-JSON constant {name!r}")
+
+        try:
+            data = json.loads(m.group(2), parse_constant=_reject_constant)
+        except (json.JSONDecodeError, ValueError) as e:
+            raise ValueError(f"bad JSON after {m.group(1)}: {e} in {line!r}") from e
+        if not isinstance(data, dict):
+            raise ValueError(f"{m.group(1)} payload must be a JSON object, got: {line!r}")
+        found.append((m.group(1), data))
+    return found
 
 
 def repo_root() -> str:
@@ -95,16 +135,10 @@ def run_bench(root: str, name: str, quick: bool) -> list[tuple[str, dict]]:
     if proc.returncode != 0:
         sys.stderr.write(proc.stderr)
         raise RuntimeError(f"bench {name} failed with rc={proc.returncode}")
-    found = []
-    for line in proc.stdout.splitlines():
-        m = MARKER_RE.match(line.strip())
-        if not m:
-            continue
-        try:
-            found.append((m.group(1), json.loads(m.group(2))))
-        except json.JSONDecodeError as e:
-            print(f"[collect_bench] bad JSON after {m.group(1)}: {e}", file=sys.stderr)
-    return found
+    try:
+        return parse_bench_lines(proc.stdout)
+    except ValueError as e:
+        raise RuntimeError(f"bench {name}: {e}") from e
 
 
 def persist(root: str, marker: str, bench: str, data: dict, rev: str) -> str:

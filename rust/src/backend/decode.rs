@@ -34,6 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail};
 
+use crate::factorize::{quantize_led_params, QuantStore, WeightPrecision};
 use crate::linalg::gemm::Activation;
 use crate::linalg::matrix::matmul_into;
 use crate::linalg::workspace::{with_thread_ws, Workspace};
@@ -43,7 +44,7 @@ use crate::util::Pcg64;
 use crate::Result;
 
 use super::native::{
-    apply_linear_named, heads_for, layernorm_named, num_blocks, softmax_rows, LinearNames,
+    apply_linear_quant, heads_for, layernorm_named, num_blocks, softmax_rows, LinearNames,
 };
 use super::Backend;
 
@@ -138,6 +139,13 @@ pub struct DecodeSession {
     /// and shared (`Arc`) so batched steps can borrow them independently of
     /// the sessions' mutable cache state.
     names: Arc<ModelNames>,
+    /// Weight precision the session's linears execute at (DESIGN.md §12).
+    precision: WeightPrecision,
+    /// Pre-packed quantized weights, built once at session creation and
+    /// shared (`Arc`) across clones — the per-token step never re-quantizes
+    /// a weight. `None` for [`WeightPrecision::F32`] (the bit-identical
+    /// fallthrough path).
+    quant: Option<Arc<QuantStore>>,
     /// Scratch arena for the step's activations; attention scratch is sized
     /// by `max_seq`, so every post-prefill step reuses identical buffers
     /// (cloning a session starts a fresh, unwarmed arena).
@@ -152,6 +160,48 @@ impl DecodeSession {
     /// graphs are refused: their pooled head has no per-position
     /// distribution to sample from.
     pub fn new(graph: &GraphSpec, params: &ParamStore) -> Result<Self> {
+        Self::new_with_precision(graph, params, WeightPrecision::F32)
+    }
+
+    /// [`DecodeSession::new`] with a weight-precision axis: for `Int8` /
+    /// `Binary` the checkpoint's 2-D linear weights are quantized once, up
+    /// front, into a session-held [`QuantStore`], and every per-token linear
+    /// runs through the quantized kernels. `F32` is bit-identical to
+    /// [`DecodeSession::new`].
+    pub fn new_with_precision(
+        graph: &GraphSpec,
+        params: &ParamStore,
+        precision: WeightPrecision,
+    ) -> Result<Self> {
+        let quant = if precision == WeightPrecision::F32 {
+            None
+        } else {
+            let (store, _report) = quantize_led_params(params, precision)?;
+            Some(Arc::new(store))
+        };
+        Self::build(graph, params, precision, quant)
+    }
+
+    /// Open a session over an already-built [`QuantStore`] (e.g. the one
+    /// [`quantize_led_params`] returned alongside the report the caller
+    /// printed), avoiding a second quantization pass. An empty `F32` store
+    /// selects the plain f32 path.
+    pub fn with_quant_store(
+        graph: &GraphSpec,
+        params: &ParamStore,
+        store: Arc<QuantStore>,
+    ) -> Result<Self> {
+        let precision = store.precision();
+        let quant = if precision == WeightPrecision::F32 { None } else { Some(store) };
+        Self::build(graph, params, precision, quant)
+    }
+
+    fn build(
+        graph: &GraphSpec,
+        params: &ParamStore,
+        precision: WeightPrecision,
+        quant: Option<Arc<QuantStore>>,
+    ) -> Result<Self> {
         if graph.kind != "fwd" {
             bail!("decode sessions need a fwd graph, got kind {:?}", graph.kind);
         }
@@ -195,8 +245,20 @@ impl DecodeSession {
                 blocks: (0..n_layers).map(BlockNames::new).collect(),
                 head: LinearNames::new("head"),
             }),
+            precision,
+            quant,
             ws: Workspace::new(),
         })
+    }
+
+    /// Weight precision this session's linears execute at.
+    pub fn precision(&self) -> WeightPrecision {
+        self.precision
+    }
+
+    /// Bytes held by the pre-packed quantized weights (0 for `F32`).
+    pub fn quant_bytes(&self) -> usize {
+        self.quant.as_ref().map_or(0, |q| q.bytes())
     }
 
     /// Positions decoded so far (prompt + generated, cached per layer).
@@ -355,7 +417,11 @@ fn decode_chunk(
         .ok_or_else(|| anyhow!("checkpoint missing pos/table"))?
         .as_f32()?;
     // Disjoint field borrows: the KV caches and the scratch arena live in
-    // different session fields, so the layer loop can hold both.
+    // different session fields, so the layer loop can hold both. The quant
+    // side-table rides behind an Arc clone (no allocation) so the loop's
+    // mutable borrows of the caches never conflict with it.
+    let quant_arc = session.quant.clone();
+    let quant = quant_arc.as_deref();
     let s = &mut *session;
     let ws = &mut s.ws;
     let mut x = ws.take_zeroed(n * d);
@@ -389,9 +455,12 @@ fn decode_chunk(
         // then score each chunk row against every cached position.
         xn.copy_from_slice(&x);
         layernorm_named(params, &names.ln1_g, &names.ln1_bias, d, &mut xn)?;
-        let (dq, q) = apply_linear_named(params, &names.q, n, d, &xn, Activation::None, ws)?;
-        let (dkk, knew) = apply_linear_named(params, &names.k, n, d, &xn, Activation::None, ws)?;
-        let (dv, vnew) = apply_linear_named(params, &names.v, n, d, &xn, Activation::None, ws)?;
+        let (dq, q) =
+            apply_linear_quant(params, quant, &names.q, n, d, &xn, Activation::None, ws)?;
+        let (dkk, knew) =
+            apply_linear_quant(params, quant, &names.k, n, d, &xn, Activation::None, ws)?;
+        let (dv, vnew) =
+            apply_linear_quant(params, quant, &names.v, n, d, &xn, Activation::None, ws)?;
         if dq != d || dkk != d || dv != d {
             bail!("{}: projection output dims {dq}/{dkk}/{dv} != d {d}", names.q.prefix);
         }
@@ -435,7 +504,8 @@ fn decode_chunk(
                 ctx[dst..dst + dk].copy_from_slice(&oh[si * dk..(si + 1) * dk]);
             }
         }
-        let (do_, attn) = apply_linear_named(params, &names.o, n, d, &ctx, Activation::None, ws)?;
+        let (do_, attn) =
+            apply_linear_quant(params, quant, &names.o, n, d, &ctx, Activation::None, ws)?;
         ws.give(q);
         if do_ != d {
             bail!("{}: o-projection output dim {do_} != d {d}", names.o.prefix);
@@ -449,8 +519,10 @@ fn decode_chunk(
         // GELU runs in fc1's GEMM epilogue.
         xn.copy_from_slice(&x);
         layernorm_named(params, &names.ln2_g, &names.ln2_bias, d, &mut xn)?;
-        let (ff, hmid) = apply_linear_named(params, &names.fc1, n, d, &xn, Activation::Gelu, ws)?;
-        let (d2, y) = apply_linear_named(params, &names.fc2, n, ff, &hmid, Activation::None, ws)?;
+        let (ff, hmid) =
+            apply_linear_quant(params, quant, &names.fc1, n, d, &xn, Activation::Gelu, ws)?;
+        let (d2, y) =
+            apply_linear_quant(params, quant, &names.fc2, n, ff, &hmid, Activation::None, ws)?;
         if d2 != d {
             bail!("{}: fc2 output dim {d2} != d {d}", names.fc2.prefix);
         }
@@ -470,7 +542,7 @@ fn decode_chunk(
     let rows = if all_rows { n } else { 1 };
     let head_in = if all_rows { &x[..] } else { &x[(n - 1) * d..n * d] };
     let (vocab, logits) =
-        apply_linear_named(params, &s.names.head, rows, d, head_in, Activation::None, ws)?;
+        apply_linear_quant(params, quant, &s.names.head, rows, d, head_in, Activation::None, ws)?;
     if vocab != s.vocab {
         bail!("head width {vocab} does not match the graph's logit width {}", s.vocab);
     }
@@ -540,6 +612,7 @@ pub(crate) fn native_decode_step_batched(
         .as_f32()?;
     // Validate everything before touching any cache: a rejected batch must
     // leave every session exactly as it was.
+    let precision = sessions[0].precision;
     for (i, (s, &t)) in sessions.iter().zip(tokens).enumerate() {
         if s.d != d || s.heads != heads || s.vocab != vocab || s.max_seq != max_seq
             || s.layers.len() != n_layers
@@ -548,6 +621,15 @@ pub(crate) fn native_decode_step_batched(
                 "session {i} is incompatible with session 0: \
                  d {}/{d}, heads {}/{heads}, vocab {}/{vocab}, seq {}/{max_seq}, layers {}/{n_layers}",
                 s.d, s.heads, s.vocab, s.max_seq, s.layers.len()
+            );
+        }
+        if s.precision != precision {
+            bail!(
+                "session {i} runs at precision {} but session 0 at {}: \
+                 a batched step stacks one GEMM per projection, so every \
+                 session must share one weight encoding",
+                s.precision,
+                precision
             );
         }
         if s.is_empty() {
@@ -561,6 +643,10 @@ pub(crate) fn native_decode_step_batched(
         }
     }
     let names = sessions[0].names.clone();
+    // All sessions share one checkpoint, so session 0's pre-packed store
+    // serves the whole stacked step.
+    let quant_arc = sessions[0].quant.clone();
+    let quant = quant_arc.as_deref();
     let dk = d / heads;
     let scale = 1.0 / (dk as f32).sqrt();
 
@@ -590,9 +676,12 @@ pub(crate) fn native_decode_step_batched(
             // per-session cache append + scoring (cache lengths differ).
             xn.copy_from_slice(&x);
             layernorm_named(params, &nb.ln1_g, &nb.ln1_bias, d, &mut xn)?;
-            let (dq, q) = apply_linear_named(params, &nb.q, m, d, &xn, Activation::None, ws)?;
-            let (dkk, knew) = apply_linear_named(params, &nb.k, m, d, &xn, Activation::None, ws)?;
-            let (dv, vnew) = apply_linear_named(params, &nb.v, m, d, &xn, Activation::None, ws)?;
+            let (dq, q) =
+                apply_linear_quant(params, quant, &nb.q, m, d, &xn, Activation::None, ws)?;
+            let (dkk, knew) =
+                apply_linear_quant(params, quant, &nb.k, m, d, &xn, Activation::None, ws)?;
+            let (dv, vnew) =
+                apply_linear_quant(params, quant, &nb.v, m, d, &xn, Activation::None, ws)?;
             if dq != d || dkk != d || dv != d {
                 bail!("{}: projection output dims {dq}/{dkk}/{dv} != d {d}", nb.q.prefix);
             }
@@ -628,7 +717,8 @@ pub(crate) fn native_decode_step_batched(
             ws.give(q);
             ws.give(knew);
             ws.give(vnew);
-            let (do_, attn) = apply_linear_named(params, &nb.o, m, d, &ctx, Activation::None, ws)?;
+            let (do_, attn) =
+                apply_linear_quant(params, quant, &nb.o, m, d, &ctx, Activation::None, ws)?;
             if do_ != d {
                 bail!("{}: o-projection output dim {do_} != d {d}", nb.o.prefix);
             }
@@ -640,8 +730,10 @@ pub(crate) fn native_decode_step_batched(
             // FFN sublayer, stacked: (m, d) → (m, ff) → (m, d).
             xn.copy_from_slice(&x);
             layernorm_named(params, &nb.ln2_g, &nb.ln2_bias, d, &mut xn)?;
-            let (ff, hmid) = apply_linear_named(params, &nb.fc1, m, d, &xn, Activation::Gelu, ws)?;
-            let (d2, y) = apply_linear_named(params, &nb.fc2, m, ff, &hmid, Activation::None, ws)?;
+            let (ff, hmid) =
+                apply_linear_quant(params, quant, &nb.fc1, m, d, &xn, Activation::Gelu, ws)?;
+            let (d2, y) =
+                apply_linear_quant(params, quant, &nb.fc2, m, ff, &hmid, Activation::None, ws)?;
             if d2 != d {
                 bail!("{}: fc2 output dim {d2} != d {d}", nb.fc2.prefix);
             }
@@ -658,7 +750,8 @@ pub(crate) fn native_decode_step_batched(
         // Final layernorm + LM head, stacked: every row is some session's
         // newest position, so all m rows get logits in one GEMM.
         layernorm_named(params, "ln_f/g", "ln_f/bias", d, &mut x)?;
-        let (hv, logits) = apply_linear_named(params, &names.head, m, d, &x, Activation::None, ws)?;
+        let (hv, logits) =
+            apply_linear_quant(params, quant, &names.head, m, d, &x, Activation::None, ws)?;
         if hv != vocab {
             bail!("head width {hv} does not match the graph's logit width {vocab}");
         }
@@ -775,13 +868,41 @@ pub fn generate(
     prompt: &[i32],
     max_new: usize,
     cfg: &SamplingCfg,
-    mut on_token: impl FnMut(usize, i32),
+    on_token: impl FnMut(usize, i32),
 ) -> Result<GenerateOutcome> {
     if prompt.is_empty() || max_new == 0 {
         return Ok(GenerateOutcome { tokens: Vec::new(), prefill_tokens: 0, positions_used: 0 });
     }
     let mut session = DecodeSession::new(graph, params)?;
-    let mut logits_t = backend.run_decode_step(graph, params, &mut session, prompt)?;
+    generate_with_session(backend, graph, params, &mut session, prompt, max_new, cfg, on_token)
+}
+
+/// [`generate`] over a caller-supplied session — the entry point for
+/// non-default sessions (e.g. [`DecodeSession::new_with_precision`] for
+/// int8 / binary serving) and for reusing one warmed session across
+/// generations (callers [`DecodeSession::reset`] between runs). The session
+/// must be empty; prefill happens here.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_with_session(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    session: &mut DecodeSession,
+    prompt: &[i32],
+    max_new: usize,
+    cfg: &SamplingCfg,
+    mut on_token: impl FnMut(usize, i32),
+) -> Result<GenerateOutcome> {
+    if prompt.is_empty() || max_new == 0 {
+        return Ok(GenerateOutcome { tokens: Vec::new(), prefill_tokens: 0, positions_used: 0 });
+    }
+    if !session.is_empty() {
+        bail!(
+            "generate_with_session needs an empty session, got {} cached positions",
+            session.len()
+        );
+    }
+    let mut logits_t = backend.run_decode_step(graph, params, session, prompt)?;
     let mut rng = cfg.rng();
     let mut tokens = Vec::with_capacity(max_new);
     loop {
@@ -791,7 +912,7 @@ pub fn generate(
         if tokens.len() >= max_new || session.remaining() == 0 {
             break;
         }
-        logits_t = backend.run_decode_step(graph, params, &mut session, &[tok])?;
+        logits_t = backend.run_decode_step(graph, params, session, &[tok])?;
     }
     Ok(GenerateOutcome {
         tokens,

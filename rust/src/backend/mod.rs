@@ -67,7 +67,8 @@ use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
 
 pub use decode::{
-    generate, generate_batched, sample_token, DecodeSession, GenerateOutcome, SamplingCfg,
+    generate, generate_batched, generate_with_session, sample_token, DecodeSession,
+    GenerateOutcome, SamplingCfg,
 };
 pub use native::NativeBackend;
 pub use spec::{

@@ -22,6 +22,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail};
 
+use crate::factorize::QuantStore;
 use crate::linalg::gemm::{matmul_bias_into, Activation};
 use crate::linalg::matrix::matmul_into;
 use crate::linalg::workspace::{with_thread_ws, Workspace};
@@ -42,6 +43,59 @@ impl NativeBackend {
     /// The interpreter (zero-sized; construction is free).
     pub fn new() -> Self {
         NativeBackend
+    }
+
+    /// [`Backend::run_fwd`] with a weight-precision axis: linear groups
+    /// present in `quant` execute through the int8 / binary kernels
+    /// (DESIGN.md §12), everything else falls through to the f32 tensors.
+    /// `quant: None` is bit-identical to [`Backend::run_fwd`].
+    pub fn run_fwd_quant(
+        &self,
+        graph: &GraphSpec,
+        params: &ParamStore,
+        quant: Option<&QuantStore>,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        if graph.kind != "fwd" {
+            bail!("native backend only executes fwd graphs, got {}", graph.kind);
+        }
+        if inputs.len() != 1 {
+            bail!("graph {} wants 1 input, got {}", graph.name, inputs.len());
+        }
+        let x = &inputs[0];
+        let spec = graph
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("graph {} has no input spec", graph.name))?;
+        if x.shape != spec.shape {
+            bail!(
+                "input shape {:?} does not match graph {} spec {:?}",
+                x.shape,
+                graph.name,
+                spec.shape
+            );
+        }
+        if x.ndim() == 4 {
+            return with_thread_ws(|ws| Ok(vec![image_fwd(params, quant, x, ws)?]));
+        }
+        if x.ndim() != 2 {
+            bail!("expected (batch, seq) tokens or (b, h, w, c) pixels, got {:?}", x.shape);
+        }
+        let (b, s) = (x.shape[0], x.shape[1]);
+        let tokens = x.as_i32()?;
+        let heads = heads_for(graph);
+        // LM graphs emit per-position logits (B, S, vocab); classifiers pool
+        // to (B, classes). Activation buffers come from the calling thread's
+        // workspace, so steady-state serving reuses them across requests.
+        let causal = graph.outputs.first().is_some_and(|o| o.shape.len() == 3);
+        let out = with_thread_ws(|ws| {
+            if causal {
+                lm_fwd(params, quant, tokens, b, s, heads, ws)
+            } else {
+                classifier_fwd(params, quant, tokens, b, s, heads, ws)
+            }
+        })?;
+        Ok(vec![out])
     }
 }
 
@@ -65,46 +119,7 @@ impl Backend for NativeBackend {
         params: &ParamStore,
         inputs: &[Tensor],
     ) -> Result<Vec<Tensor>> {
-        if graph.kind != "fwd" {
-            bail!("native backend only executes fwd graphs, got {}", graph.kind);
-        }
-        if inputs.len() != 1 {
-            bail!("graph {} wants 1 input, got {}", graph.name, inputs.len());
-        }
-        let x = &inputs[0];
-        let spec = graph
-            .inputs
-            .first()
-            .ok_or_else(|| anyhow!("graph {} has no input spec", graph.name))?;
-        if x.shape != spec.shape {
-            bail!(
-                "input shape {:?} does not match graph {} spec {:?}",
-                x.shape,
-                graph.name,
-                spec.shape
-            );
-        }
-        if x.ndim() == 4 {
-            return with_thread_ws(|ws| Ok(vec![image_fwd(params, x, ws)?]));
-        }
-        if x.ndim() != 2 {
-            bail!("expected (batch, seq) tokens or (b, h, w, c) pixels, got {:?}", x.shape);
-        }
-        let (b, s) = (x.shape[0], x.shape[1]);
-        let tokens = x.as_i32()?;
-        let heads = heads_for(graph);
-        // LM graphs emit per-position logits (B, S, vocab); classifiers pool
-        // to (B, classes). Activation buffers come from the calling thread's
-        // workspace, so steady-state serving reuses them across requests.
-        let causal = graph.outputs.first().is_some_and(|o| o.shape.len() == 3);
-        let out = with_thread_ws(|ws| {
-            if causal {
-                lm_fwd(params, tokens, b, s, heads, ws)
-            } else {
-                classifier_fwd(params, tokens, b, s, heads, ws)
-            }
-        })?;
-        Ok(vec![out])
+        self.run_fwd_quant(graph, params, None, inputs)
     }
 
     fn run_train_step(
@@ -520,6 +535,7 @@ pub fn demo_variants(
             solver: crate::factorize::Solver::Random,
             num_iter: 0,
             submodules: None,
+            ..Default::default()
         },
     )?;
     if report.n_factorized() == 0 {
@@ -626,6 +642,76 @@ pub(crate) fn apply_linear_named(
         bail!("no linear weights (w or a/b) under group {:?}", names.prefix);
     }
     Ok((n, y))
+}
+
+/// Precision-dispatching [`apply_linear_named`]: when `quant` carries an
+/// entry for this group's weight(s), the GEMM runs through the int8 /
+/// binary kernels (activations quantized per row into thread-local
+/// scratch); otherwise — `quant` is `None`, or the group was not quantized
+/// (4-D conv factors, mixed stores) — it falls through to the f32 path
+/// bit-for-bit. LED groups need *both* factors quantized to take the
+/// quantized route, so a CED conv whose 4-D `a` stayed f32 runs fully f32.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_linear_quant(
+    params: &ParamStore,
+    quant: Option<&QuantStore>,
+    names: &LinearNames,
+    rows: usize,
+    k: usize,
+    x: &[f32],
+    act: Activation,
+    ws: &mut Workspace,
+) -> Result<(usize, Vec<f32>)> {
+    let Some(store) = quant else {
+        return apply_linear_named(params, names, rows, k, x, act, ws);
+    };
+    debug_assert_eq!(x.len(), rows * k);
+    let bias = match params.get(&names.bias) {
+        Some(t) => Some(t.as_f32()?),
+        None => None,
+    };
+    if let Some(qw) = store.get(&names.w) {
+        if qw.k() != k {
+            bail!(
+                "{}: input dim {k} does not match quant weight {}x{}",
+                names.prefix,
+                qw.k(),
+                qw.n()
+            );
+        }
+        let n = qw.n();
+        if let Some(bd) = bias {
+            if bd.len() != n {
+                bail!("{}: bias len {} does not match output dim {n}", names.prefix, bd.len());
+            }
+        }
+        let mut y = ws.take_zeroed(rows * n);
+        qw.apply(rows, x, bias, act, &mut y);
+        return Ok((n, y));
+    }
+    if let (Some(qa), Some(qb)) = (store.get(&names.a), store.get(&names.b)) {
+        let (r, n) = (qa.n(), qb.n());
+        if qa.k() != k || qb.k() != r {
+            bail!(
+                "{}: quant LED factor shapes {}x{r} / {}x{n} do not chain from dim {k}",
+                names.prefix,
+                qa.k(),
+                qb.k()
+            );
+        }
+        if let Some(bd) = bias {
+            if bd.len() != n {
+                bail!("{}: bias len {} does not match output dim {n}", names.prefix, bd.len());
+            }
+        }
+        let mut h = ws.take_zeroed(rows * r);
+        qa.apply(rows, x, None, Activation::None, &mut h);
+        let mut y = ws.take_zeroed(rows * n);
+        qb.apply(rows, &h, bias, act, &mut y);
+        ws.give(h);
+        return Ok((n, y));
+    }
+    apply_linear_named(params, names, rows, k, x, act, ws)
 }
 
 /// `y(rows, n) = x(rows, k) @ W + bias`, dispatching dense `w` vs LED/CED
@@ -805,6 +891,7 @@ pub(crate) fn num_blocks(params: &ParamStore) -> Result<usize> {
 #[allow(clippy::too_many_arguments)]
 fn attention(
     params: &ParamStore,
+    quant: Option<&QuantStore>,
     prefix: &str,
     b: usize,
     s: usize,
@@ -819,8 +906,9 @@ fn attention(
     }
     let dk = d / heads;
     let rows = b * s;
-    let (dq, q) = apply_linear_named(
+    let (dq, q) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "q")),
         rows,
         d,
@@ -828,8 +916,9 @@ fn attention(
         Activation::None,
         ws,
     )?;
-    let (dkk, kk) = apply_linear_named(
+    let (dkk, kk) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "k")),
         rows,
         d,
@@ -837,8 +926,9 @@ fn attention(
         Activation::None,
         ws,
     )?;
-    let (dv, v) = apply_linear_named(
+    let (dv, v) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "v")),
         rows,
         d,
@@ -890,8 +980,9 @@ fn attention(
             }
         }
     }
-    let (do_, out) = apply_linear_named(
+    let (do_, out) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "o")),
         rows,
         d,
@@ -918,6 +1009,7 @@ fn attention(
 #[allow(clippy::too_many_arguments)]
 fn transformer_block(
     params: &ParamStore,
+    quant: Option<&QuantStore>,
     prefix: &str,
     b: usize,
     s: usize,
@@ -930,7 +1022,8 @@ fn transformer_block(
     let rows = b * s;
     let mut xn = ws.take_copied(x);
     layernorm(params, &pname(prefix, "ln1"), d, &mut xn)?;
-    let attn = attention(params, &pname(prefix, "attn"), b, s, d, heads, causal, &xn, ws)?;
+    let attn =
+        attention(params, quant, &pname(prefix, "attn"), b, s, d, heads, causal, &xn, ws)?;
     for (v, a) in x.iter_mut().zip(&attn) {
         *v += a;
     }
@@ -938,8 +1031,9 @@ fn transformer_block(
     xn.copy_from_slice(x);
     layernorm(params, &pname(prefix, "ln2"), d, &mut xn)?;
     // fc1's GELU runs in the GEMM epilogue — no second pass over (rows, ff).
-    let (ff, h) = apply_linear_named(
+    let (ff, h) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "fc1")),
         rows,
         d,
@@ -947,8 +1041,9 @@ fn transformer_block(
         Activation::Gelu,
         ws,
     )?;
-    let (d2, y) = apply_linear_named(
+    let (d2, y) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new(&pname(prefix, "fc2")),
         rows,
         ff,
@@ -970,8 +1065,10 @@ fn transformer_block(
 
 /// Shared trunk: embed, blocks, final layernorm. Returns (d, x(b·s, d))
 /// with `x` checked out of `ws`.
+#[allow(clippy::too_many_arguments)]
 fn trunk(
     params: &ParamStore,
+    quant: Option<&QuantStore>,
     tokens: &[i32],
     b: usize,
     s: usize,
@@ -981,7 +1078,18 @@ fn trunk(
 ) -> Result<(usize, Vec<f32>)> {
     let (d, mut x) = embed_ws(params, tokens, b, s, ws)?;
     for i in 0..num_blocks(params)? {
-        transformer_block(params, &format!("block{i}"), b, s, d, heads, causal, &mut x, ws)?;
+        transformer_block(
+            params,
+            quant,
+            &format!("block{i}"),
+            b,
+            s,
+            d,
+            heads,
+            causal,
+            &mut x,
+            ws,
+        )?;
     }
     layernorm(params, "ln_f", d, &mut x)?;
     Ok((d, x))
@@ -990,13 +1098,14 @@ fn trunk(
 /// Text classifier: mean-pool over tokens, then the head → (b, classes).
 fn classifier_fwd(
     params: &ParamStore,
+    quant: Option<&QuantStore>,
     tokens: &[i32],
     b: usize,
     s: usize,
     heads: usize,
     ws: &mut Workspace,
 ) -> Result<Tensor> {
-    let (d, x) = trunk(params, tokens, b, s, heads, false, ws)?;
+    let (d, x) = trunk(params, quant, tokens, b, s, heads, false, ws)?;
     let mut pooled = ws.take_zeroed(b * d);
     for bi in 0..b {
         let dst = &mut pooled[bi * d..(bi + 1) * d];
@@ -1011,8 +1120,16 @@ fn classifier_fwd(
             *v *= inv;
         }
     }
-    let (classes, logits) =
-        apply_linear_named(params, &LinearNames::new("head"), b, d, &pooled, Activation::None, ws)?;
+    let (classes, logits) = apply_linear_quant(
+        params,
+        quant,
+        &LinearNames::new("head"),
+        b,
+        d,
+        &pooled,
+        Activation::None,
+        ws,
+    )?;
     let out = Tensor::from_f32(&[b, classes], logits.clone());
     ws.give(logits);
     ws.give(pooled);
@@ -1023,15 +1140,17 @@ fn classifier_fwd(
 /// Causal LM: per-position next-token logits (b, s, vocab).
 fn lm_fwd(
     params: &ParamStore,
+    quant: Option<&QuantStore>,
     tokens: &[i32],
     b: usize,
     s: usize,
     heads: usize,
     ws: &mut Workspace,
 ) -> Result<Tensor> {
-    let (d, x) = trunk(params, tokens, b, s, heads, true, ws)?;
-    let (vocab, logits) = apply_linear_named(
+    let (d, x) = trunk(params, quant, tokens, b, s, heads, true, ws)?;
+    let (vocab, logits) = apply_linear_quant(
         params,
+        quant,
         &LinearNames::new("head"),
         b * s,
         d,
@@ -1154,7 +1273,12 @@ pub(crate) fn conv_kernel(params: &ParamStore, prefix: &str) -> Result<(usize, u
 /// fc2 (the `image` model of the zoo). CED conv layers execute as
 /// im2col · a2d · b2d — two GEMMs through the rank bottleneck; the ReLUs
 /// run in the conv/fc GEMM epilogues.
-fn image_fwd(params: &ParamStore, x: &Tensor, ws: &mut Workspace) -> Result<Tensor> {
+fn image_fwd(
+    params: &ParamStore,
+    quant: Option<&QuantStore>,
+    x: &Tensor,
+    ws: &mut Workspace,
+) -> Result<Tensor> {
     let (b, mut h, mut w, mut c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut cur = ws.take_copied(x.as_f32()?);
     for conv in ["conv1", "conv2"] {
@@ -1163,8 +1287,11 @@ fn image_fwd(params: &ParamStore, x: &Tensor, ws: &mut Workspace) -> Result<Tens
             bail!("{conv}: input channels {c} != weight cin {cin}");
         }
         let cols = im2col_ws(&cur, b, h, w, c, kh, kw, ws);
-        let (cout, y) = apply_linear_named(
+        // Conv weights are 4-D (never quantized); CED convs keep their 4-D
+        // `a`, so apply_linear_quant falls through to f32 here by design.
+        let (cout, y) = apply_linear_quant(
             params,
+            quant,
             &LinearNames::new(conv),
             b * h * w,
             kh * kw * c,
@@ -1183,10 +1310,26 @@ fn image_fwd(params: &ParamStore, x: &Tensor, ws: &mut Workspace) -> Result<Tens
     }
     // (b, h, w, c) row-major flattens directly to (b, h·w·c).
     let flat = h * w * c;
-    let (fc, f1) =
-        apply_linear_named(params, &LinearNames::new("fc1"), b, flat, &cur, Activation::Relu, ws)?;
-    let (classes, logits) =
-        apply_linear_named(params, &LinearNames::new("fc2"), b, fc, &f1, Activation::None, ws)?;
+    let (fc, f1) = apply_linear_quant(
+        params,
+        quant,
+        &LinearNames::new("fc1"),
+        b,
+        flat,
+        &cur,
+        Activation::Relu,
+        ws,
+    )?;
+    let (classes, logits) = apply_linear_quant(
+        params,
+        quant,
+        &LinearNames::new("fc2"),
+        b,
+        fc,
+        &f1,
+        Activation::None,
+        ws,
+    )?;
     let out = Tensor::from_f32(&[b, classes], logits.clone());
     ws.give(logits);
     ws.give(f1);
@@ -1293,6 +1436,7 @@ mod tests {
                 solver: Solver::Svd,
                 num_iter: 10,
                 submodules: None,
+                ..Default::default()
             },
         )
         .unwrap();
@@ -1535,6 +1679,7 @@ mod tests {
                 solver: Solver::Svd,
                 num_iter: 5,
                 submodules: None,
+                ..Default::default()
             },
         )
         .unwrap();

@@ -114,6 +114,7 @@ pub fn build_draft_params(params: &ParamStore, draft_ratio: f64) -> Result<Param
             solver: Solver::Svd,
             num_iter: 0,
             submodules: None,
+            ..Default::default()
         },
     )?;
     Ok(draft)

@@ -90,6 +90,8 @@ pub struct FactorizeConfig {
     pub num_iter: usize,
     /// Submodule filter (substring match), empty = all.
     pub submodules: Vec<String>,
+    /// Serving-time weight precision (`f32` / `int8` / `binary`).
+    pub precision: String,
 }
 
 impl Default for FactorizeConfig {
@@ -100,6 +102,7 @@ impl Default for FactorizeConfig {
             solver: "svd".into(),
             num_iter: 50,
             submodules: vec![],
+            precision: "f32".into(),
         }
     }
 }
@@ -122,6 +125,7 @@ impl FactorizeConfig {
             } else {
                 Some(self.submodules.clone())
             },
+            precision: self.precision.parse()?,
         })
     }
 
@@ -206,6 +210,7 @@ impl ExperimentConfig {
             cfg.factorize.rank = f.get("rank").and_then(|r| r.as_usize().ok());
             cfg.factorize.solver = f.str_or("solver", &cfg.factorize.solver);
             cfg.factorize.num_iter = f.usize_or("num_iter", cfg.factorize.num_iter);
+            cfg.factorize.precision = f.str_or("precision", &cfg.factorize.precision);
             if let Some(subs) = f.get("submodules") {
                 cfg.factorize.submodules = subs
                     .as_arr()?
@@ -278,6 +283,19 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.to_auto_fact().is_err());
+        let quant = FactorizeConfig {
+            precision: "int8".into(),
+            ..Default::default()
+        };
+        assert_eq!(
+            quant.to_auto_fact().unwrap().precision,
+            crate::factorize::WeightPrecision::Int8
+        );
+        let bad_prec = FactorizeConfig {
+            precision: "fp16".into(),
+            ..Default::default()
+        };
+        assert!(bad_prec.to_auto_fact().is_err());
     }
 
     #[test]

@@ -185,16 +185,54 @@ pub fn measure_decode_latency(
     warmup: usize,
     iters: usize,
 ) -> Result<DecodeLatency> {
+    measure_decode_latency_prec(
+        backend,
+        graph,
+        params,
+        crate::factorize::WeightPrecision::F32,
+        prompt,
+        new_tokens,
+        warmup,
+        iters,
+    )
+}
+
+/// [`measure_decode_latency`] with a weight-precision axis: sessions are
+/// opened at `precision`, so int8 / binary serving is timed over the same
+/// prompt/step schedule as f32. The one-off quantization pass runs once per
+/// measurement (not per iteration) — the pre-packed store is cloned into
+/// each fresh session behind an `Arc`.
+#[allow(clippy::too_many_arguments)]
+pub fn measure_decode_latency_prec(
+    backend: &dyn Backend,
+    graph: &GraphSpec,
+    params: &ParamStore,
+    precision: crate::factorize::WeightPrecision,
+    prompt: &[i32],
+    new_tokens: usize,
+    warmup: usize,
+    iters: usize,
+) -> Result<DecodeLatency> {
     if prompt.is_empty() || new_tokens == 0 || iters == 0 {
         anyhow::bail!("measure_decode_latency needs a prompt, new_tokens >= 1 and iters >= 1");
     }
+    // Quantize once, outside the timed region; each iteration's fresh
+    // session shares the packed store behind the Arc.
+    let quant = if precision == crate::factorize::WeightPrecision::F32 {
+        None
+    } else {
+        Some(std::sync::Arc::new(crate::factorize::quantize_led_params(params, precision)?.0))
+    };
     let greedy = SamplingCfg::greedy();
     let mut rng = greedy.rng();
     let mut sw_prefill = Stopwatch::new();
     let mut sw_step = Stopwatch::new();
     for it in 0..warmup + iters {
         let measured = it >= warmup;
-        let mut session = DecodeSession::new(graph, params)?;
+        let mut session = match &quant {
+            Some(store) => DecodeSession::with_quant_store(graph, params, store.clone())?,
+            None => DecodeSession::new(graph, params)?,
+        };
         let mut logits = if measured {
             sw_prefill.time(|| backend.run_decode_step(graph, params, &mut session, prompt))?
         } else {

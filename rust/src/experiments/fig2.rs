@@ -116,6 +116,7 @@ impl NativeFigCfg {
                 solver: self.solver,
                 num_iter: 50,
                 submodules: None,
+                ..Default::default()
             },
         )?;
         Ok(params)
@@ -407,6 +408,7 @@ pub fn post_training(env: &FigEnv, params: &ExpParams, solver: Solver) -> Result
                     solver,
                     num_iter: 50,
                     submodules: None,
+                    ..Default::default()
                 },
             )?;
             let fwd = env.fwd_graph(model, &variant, &fact)?;
@@ -506,6 +508,7 @@ pub fn icl(
                 solver: Solver::Svd,
                 num_iter: 50,
                 submodules: None,
+                ..Default::default()
             },
         )?;
         let fwd = env.fwd_graph("lm", &variant, &fact)?;

@@ -6,9 +6,11 @@
 //! full reproduction (env `GREENFORMER_STEPS` / `GREENFORMER_EVAL` override).
 
 pub mod fig2;
+pub mod quant;
 pub mod tables;
 
 pub use fig2::{by_design, icl, post_training, Fig2Point, Fig2Result, FigEnv, NativeFigCfg};
+pub use quant::{quant_panel, QuantPanel, QuantPanelCfg, QuantPoint};
 pub use tables::{cost_table, solver_table, CostRow, SolverRow};
 
 /// Scale parameters shared by the harnesses.

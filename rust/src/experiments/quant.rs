@@ -1,0 +1,274 @@
+//! Quantized-serving panel (DESIGN.md §12): accuracy-vs-speed across weight
+//! precisions, in the style of a Figure-2 panel.
+//!
+//! Rank truncation (the paper's axis) trades accuracy for FLOPs; weight
+//! quantization trades it for bytes — and the decode path is memory-bound,
+//! so the two multiply. This harness pins the combined picture on the
+//! native LM decode path: for each [`WeightPrecision`] it measures greedy
+//! decode throughput, agreement of the greedy token streams with the f32
+//! reference over seeded prompts, weight-storage compression, and (from the
+//! [`crate::factorize::QuantReport`]) the propagated worst-case logit-error
+//! bound.
+
+use crate::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+use crate::backend::{generate_with_session, DecodeSession, NativeBackend, SamplingCfg};
+use crate::eval::measure_decode_latency_prec;
+use crate::factorize::{
+    auto_fact, quantize_led_params, AutoFactConfig, Rank, Solver, WeightPrecision,
+};
+use crate::util::Pcg64;
+use crate::Result;
+
+/// RNG stream for the panel's prompt draws (shared with
+/// `tests/proptest_quant.rs` so the two exercise the same prompt family).
+const PROMPT_STREAM: u64 = 11;
+
+/// Scale knobs for [`quant_panel`].
+#[derive(Clone, Debug)]
+pub struct QuantPanelCfg {
+    /// LM dimensions (head width = vocab).
+    pub lm: TextModelCfg,
+    /// Rank ratio for the LED factorization pass (Eq. 1 gated).
+    pub ratio: f64,
+    /// Factorization solver.
+    pub solver: Solver,
+    /// Init / prompt seed.
+    pub seed: u64,
+    /// Seeded prompts per precision for the agreement measurement.
+    pub prompts: usize,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Greedy tokens generated per prompt (also the latency step count).
+    pub new_tokens: usize,
+    /// Discarded warmup iterations per latency measurement.
+    pub warmup: usize,
+    /// Timed iterations per latency measurement.
+    pub iters: usize,
+}
+
+impl Default for QuantPanelCfg {
+    fn default() -> Self {
+        Self {
+            lm: TextModelCfg {
+                vocab: 512,
+                seq: 96,
+                d: 96,
+                heads: 6,
+                layers: 2,
+                ff: 384,
+                classes: 512,
+            },
+            ratio: 0.5,
+            solver: Solver::Svd,
+            seed: 42,
+            prompts: 8,
+            prompt_len: 8,
+            new_tokens: 24,
+            warmup: 1,
+            iters: 8,
+        }
+    }
+}
+
+impl QuantPanelCfg {
+    /// Small preset for tests and the CI bench quick mode.
+    pub fn quick() -> Self {
+        Self {
+            lm: TextModelCfg {
+                vocab: 64,
+                seq: 24,
+                d: 48,
+                heads: 4,
+                layers: 1,
+                ff: 96,
+                classes: 64,
+            },
+            prompts: 4,
+            prompt_len: 4,
+            new_tokens: 8,
+            warmup: 1,
+            iters: 3,
+            ..Self::default()
+        }
+    }
+}
+
+/// One precision's measurements.
+#[derive(Clone, Debug)]
+pub struct QuantPoint {
+    /// Weight precision of this row.
+    pub precision: WeightPrecision,
+    /// Greedy decode throughput, tokens/sec.
+    pub tokens_per_sec: f64,
+    /// tokens_per_sec / the f32 row's tokens_per_sec.
+    pub speedup: f64,
+    /// Fraction of seeded prompts whose full greedy token stream equals the
+    /// f32 stream (1.0 for f32 by construction).
+    pub agreement: f64,
+    /// Bytes of the (quantized) linear weights.
+    pub bytes: usize,
+    /// bytes / f32 bytes of the same weights (1.0 for f32).
+    pub compression: f64,
+    /// Propagated worst-case |Δlogit| bound (None for f32).
+    pub logit_bound: Option<f64>,
+}
+
+/// The panel: one [`QuantPoint`] per precision over one factorized LM.
+#[derive(Clone, Debug)]
+pub struct QuantPanel {
+    /// f32 / int8 / binary rows, in that order.
+    pub points: Vec<QuantPoint>,
+    /// Prompts per agreement measurement.
+    pub prompts: usize,
+    /// Greedy tokens per prompt.
+    pub new_tokens: usize,
+}
+
+impl QuantPanel {
+    /// Render as the aligned text table the CLI and bench print.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "== Quantized decode (agreement over {} prompts x {} greedy tokens) ==\n",
+            self.prompts, self.new_tokens
+        );
+        s.push_str("precision  tok/s      speedup  agreement  bytes      compress  |dlogit| bound\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:<9} {:>9.1}  {:>6.2}x  {:>8.2}  {:>9}  {:>7.3}  {}\n",
+                p.precision.to_string(),
+                p.tokens_per_sec,
+                p.speedup,
+                p.agreement,
+                p.bytes,
+                p.compression,
+                p.logit_bound.map(|b| format!("{b:.3e}")).unwrap_or_else(|| "-".into()),
+            ));
+        }
+        s
+    }
+}
+
+/// Seeded prompt `i`: `prompt_len` tokens drawn from the panel's dedicated
+/// RNG stream, reproducible across precisions and runs.
+fn prompt_for(cfg: &QuantPanelCfg, i: usize) -> Vec<i32> {
+    let mut rng = Pcg64::new(cfg.seed ^ i as u64, PROMPT_STREAM);
+    (0..cfg.prompt_len).map(|_| rng.below(cfg.lm.vocab) as i32).collect()
+}
+
+/// Build the factorized LM once, then measure every precision against it.
+pub fn quant_panel(cfg: &QuantPanelCfg) -> Result<QuantPanel> {
+    let mut params = init_text_params(&cfg.lm, cfg.seed);
+    auto_fact(
+        &mut params,
+        &AutoFactConfig {
+            rank: Rank::Ratio(cfg.ratio),
+            solver: cfg.solver,
+            ..Default::default()
+        },
+    )?;
+    let mut graph = synth_fwd_graph("lm", "led", 1, &params)?;
+    // synth_fwd_graph pins the zoo-default head count; honor the cfg's.
+    graph.config.insert("heads".to_string(), cfg.lm.heads);
+    let backend = NativeBackend::new();
+    let greedy = SamplingCfg::greedy();
+
+    // f32 reference: token streams + throughput baseline.
+    let mut f32_streams = Vec::with_capacity(cfg.prompts);
+    for i in 0..cfg.prompts {
+        let mut session = DecodeSession::new(&graph, &params)?;
+        let out = generate_with_session(
+            &backend,
+            &graph,
+            &params,
+            &mut session,
+            &prompt_for(cfg, i),
+            cfg.new_tokens,
+            &greedy,
+            |_, _| {},
+        )?;
+        f32_streams.push(out.tokens);
+    }
+    let prompt0 = prompt_for(cfg, 0);
+    let mut points = Vec::new();
+    let mut f32_tps = 0.0;
+    let mut bytes_f32 = 0usize;
+    for precision in [WeightPrecision::F32, WeightPrecision::Int8, WeightPrecision::Binary] {
+        let lat = measure_decode_latency_prec(
+            &backend,
+            &graph,
+            &params,
+            precision,
+            &prompt0,
+            cfg.new_tokens,
+            cfg.warmup,
+            cfg.iters,
+        )?;
+        // Agreement vs the f32 greedy streams (exact stream match).
+        let agreement = if precision == WeightPrecision::F32 {
+            1.0
+        } else {
+            let mut matches = 0usize;
+            for (i, want) in f32_streams.iter().enumerate() {
+                let mut session = DecodeSession::new_with_precision(&graph, &params, precision)?;
+                let out = generate_with_session(
+                    &backend,
+                    &graph,
+                    &params,
+                    &mut session,
+                    &prompt_for(cfg, i),
+                    cfg.new_tokens,
+                    &greedy,
+                    |_, _| {},
+                )?;
+                if &out.tokens == want {
+                    matches += 1;
+                }
+            }
+            matches as f64 / cfg.prompts.max(1) as f64
+        };
+        // Int8's report also prices the f32 baseline bytes.
+        let report = quantize_led_params(
+            &params,
+            if precision == WeightPrecision::F32 { WeightPrecision::Int8 } else { precision },
+        )?
+        .1;
+        if precision == WeightPrecision::F32 {
+            f32_tps = lat.tokens_per_sec;
+            bytes_f32 = report.bytes_f32;
+        }
+        let bytes = if precision == WeightPrecision::F32 { bytes_f32 } else { report.bytes_quant };
+        points.push(QuantPoint {
+            precision,
+            tokens_per_sec: lat.tokens_per_sec,
+            speedup: lat.tokens_per_sec / f32_tps.max(1e-12),
+            agreement,
+            bytes,
+            compression: bytes as f64 / bytes_f32.max(1) as f64,
+            logit_bound: if precision == WeightPrecision::F32 { None } else { report.logit_bound },
+        });
+    }
+    Ok(QuantPanel { points, prompts: cfg.prompts, new_tokens: cfg.new_tokens })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_panel_has_three_rows_and_f32_baseline() {
+        let panel = quant_panel(&QuantPanelCfg::quick()).unwrap();
+        assert_eq!(panel.points.len(), 3);
+        let f32_row = &panel.points[0];
+        assert_eq!(f32_row.precision, WeightPrecision::F32);
+        assert_eq!(f32_row.agreement, 1.0);
+        assert!((f32_row.speedup - 1.0).abs() < 1e-9);
+        assert!((f32_row.compression - 1.0).abs() < 1e-9);
+        assert!(f32_row.logit_bound.is_none());
+        // int8 stores ~1/4 the bytes, binary fewer still.
+        assert!(panel.points[1].compression < 0.5);
+        assert!(panel.points[2].compression < panel.points[1].compression);
+        assert!(panel.points[1].logit_bound.unwrap().is_finite());
+        let text = panel.render();
+        assert!(text.contains("int8") && text.contains("binary"));
+    }
+}

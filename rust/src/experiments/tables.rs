@@ -183,6 +183,7 @@ pub fn compression_report(params: &ParamStore, ratio: f64, solver: Solver) -> Re
             solver,
             num_iter: 20,
             submodules: None,
+            ..Default::default()
         },
     )?;
     let layers = classify(&p);

@@ -16,7 +16,8 @@ use crate::model::{classify, LayerKind};
 use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
 
-use super::{Rank, Solver};
+use super::quantize::{quantize_led_params, QuantReport};
+use super::{Rank, Solver, WeightPrecision};
 
 /// The arguments of the paper's `greenformer.auto_fact(...)` call.
 #[derive(Clone, Debug)]
@@ -31,6 +32,11 @@ pub struct AutoFactConfig {
     /// substrings are factorized (`None` = all layers — the paper's
     /// `submodules=None` default).
     pub submodules: Option<Vec<String>>,
+    /// Serving-time weight precision. The checkpoint stays f32; a non-F32
+    /// value runs the post-SVD [`quantize_led_params`] pass and attaches
+    /// its report (the side-table itself is built by the interpreters /
+    /// decode sessions on demand).
+    pub precision: WeightPrecision,
 }
 
 impl Default for AutoFactConfig {
@@ -40,6 +46,7 @@ impl Default for AutoFactConfig {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: None,
+            precision: WeightPrecision::F32,
         }
     }
 }
@@ -84,6 +91,8 @@ pub struct FactReport {
     pub params_before: usize,
     /// Total parameter count after factorization.
     pub params_after: usize,
+    /// Post-SVD quantization summary when `cfg.precision != F32`.
+    pub quant: Option<QuantReport>,
 }
 
 impl FactReport {
@@ -128,6 +137,9 @@ impl fmt::Display for FactReport {
                 d => writeln!(f, "  {:<28} {:>5}x{:<5}    [{d:?}]", l.name, l.m, l.n)?,
             }
         }
+        if let Some(q) = &self.quant {
+            write!(f, "{q}")?;
+        }
         Ok(())
     }
 }
@@ -154,8 +166,7 @@ impl fmt::Display for FactReport {
 ///     &AutoFactConfig {
 ///         rank: Rank::Ratio(0.5),
 ///         solver: Solver::Random, // instant; use Svd post-training
-///         num_iter: 0,
-///         submodules: None,
+///         ..AutoFactConfig::default()
 ///     },
 /// )
 /// .unwrap();
@@ -274,6 +285,10 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
 
     params.sort_canonical();
     report.params_after = params.n_params();
+    if cfg.precision != WeightPrecision::F32 {
+        let (_store, quant) = quantize_led_params(params, cfg.precision)?;
+        report.quant = Some(quant);
+    }
     Ok(report)
 }
 

@@ -13,15 +13,22 @@
 //! * [`solver`] — Random / SVD / SNMF dispatch over [`crate::linalg`].
 //! * [`auto_fact`] — the module walk: classify layers, apply the filter,
 //!   gate by Eq. 1, replace Linear→LED and Conv→CED, and report.
+//! * [`quantize`] — post-SVD bit-width pass: re-encode LED factors (and
+//!   surviving dense linears) as int8 or bit-packed ±1 for the native
+//!   serving interpreters (DESIGN.md §12).
 //!
 //! [`ParamStore`]: crate::tensor::ParamStore
 
 pub mod auto_fact;
 pub mod energy;
+pub mod quantize;
 pub mod rank;
 pub mod solver;
 
 pub use auto_fact::{auto_fact, AutoFactConfig, FactReport, LayerDecision};
 pub use energy::{energy_rank, Spectrum};
+pub use quantize::{
+    quantize_led_params, QuantLayer, QuantReport, QuantStore, QuantTensor, WeightPrecision,
+};
 pub use rank::{r_max, rank_for, Rank, MIN_RANK, RANK_MULTIPLE};
 pub use solver::Solver;

@@ -1,0 +1,487 @@
+//! Post-SVD quantization of LED factors (and any remaining dense linears).
+//!
+//! Rank truncation compresses FLOPs; the decode path is memory-bound
+//! (DESIGN.md §10), so shrinking the *bytes per weight* multiplies with the
+//! rank cut — the argument of Binary Matrix Factorization
+//! (arxiv 2210.13468) and StrassenNets (arxiv 1712.03942). This module is
+//! the checkpoint-level pass: walk a [`ParamStore`], re-encode every 2-D
+//! linear weight (`*/w` dense, `*/a` + `*/b` LED factors) at the requested
+//! [`WeightPrecision`], and hand back a [`QuantStore`] side-table the
+//! native interpreters consult at apply time. The f32 checkpoint itself is
+//! untouched — quantization is a serving-time transform, and the training
+//! path stays in f32.
+//!
+//! The scheme and its exactness argument live in DESIGN.md §12; the
+//! bit-for-bit kernel contract is pinned by `tests/proptest_quant.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::bail;
+
+use crate::linalg::gemm::Activation;
+use crate::linalg::{BinaryMatrix, QuantizedMatrix};
+use crate::tensor::{Dtype, ParamStore};
+use crate::Result;
+
+/// Weight storage precision for the native fwd/decode interpreters.
+///
+/// `F32` is the identity (no side-table). `Int8` stores per-output-channel
+/// symmetric int8 with one f32 scale per channel. `Binary` keeps only the
+/// sign bit per entry (bit-packed, 64 per word) plus one mean-magnitude
+/// scale per channel — the BMF / XNOR-Net regime.
+///
+/// ```
+/// use greenformer::factorize::WeightPrecision;
+///
+/// let p: WeightPrecision = "int8".parse().unwrap();
+/// assert_eq!(p, WeightPrecision::Int8);
+/// assert_eq!(WeightPrecision::default(), WeightPrecision::F32);
+/// assert_eq!(format!("{}", WeightPrecision::Binary), "binary");
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WeightPrecision {
+    /// Full f32 weights (the default; bit-identical to the seed paths).
+    #[default]
+    F32,
+    /// Per-output-channel symmetric int8, i32 accumulation.
+    Int8,
+    /// ±1 sign bits + per-channel magnitude, XOR/popcount matvec.
+    Binary,
+}
+
+impl fmt::Display for WeightPrecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            WeightPrecision::F32 => "f32",
+            WeightPrecision::Int8 => "int8",
+            WeightPrecision::Binary => "binary",
+        })
+    }
+}
+
+impl FromStr for WeightPrecision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(WeightPrecision::F32),
+            "int8" => Ok(WeightPrecision::Int8),
+            "binary" => Ok(WeightPrecision::Binary),
+            _ => bail!("unknown precision {s:?} (expected f32|int8|binary)"),
+        }
+    }
+}
+
+/// One quantized weight: int8 per-channel or bit-packed ±1.
+#[derive(Clone, Debug)]
+pub enum QuantTensor {
+    /// Per-output-channel symmetric int8.
+    Int8(QuantizedMatrix),
+    /// Bit-packed ±1 signs + per-channel magnitude.
+    Binary(BinaryMatrix),
+}
+
+impl QuantTensor {
+    /// Input dimension of the underlying `k×n` weight.
+    pub fn k(&self) -> usize {
+        match self {
+            QuantTensor::Int8(m) => m.k(),
+            QuantTensor::Binary(m) => m.k(),
+        }
+    }
+
+    /// Output dimension.
+    pub fn n(&self) -> usize {
+        match self {
+            QuantTensor::Int8(m) => m.n(),
+            QuantTensor::Binary(m) => m.n(),
+        }
+    }
+
+    /// Storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantTensor::Int8(m) => m.bytes(),
+            QuantTensor::Binary(m) => m.bytes(),
+        }
+    }
+
+    /// `out(rows,n) = act(out + x @ Ŵ + bias)` through the quantized
+    /// kernel for this format (activations quantized/binarized per row
+    /// into thread-local scratch — zero steady-state allocation).
+    pub fn apply(
+        &self,
+        rows: usize,
+        x: &[f32],
+        bias: Option<&[f32]>,
+        act: Activation,
+        out: &mut [f32],
+    ) {
+        match self {
+            QuantTensor::Int8(m) => m.apply(rows, x, bias, act, out),
+            QuantTensor::Binary(m) => m.apply(rows, x, bias, act, out),
+        }
+    }
+}
+
+/// Side-table of quantized weights, keyed by the full parameter name
+/// (`block0/attn/q/a`, `head/w`, …). Built once by
+/// [`quantize_led_params`]; the interpreters fall through to the f32
+/// tensor for any name not present (embeddings, layernorms, convs).
+#[derive(Clone, Debug)]
+pub struct QuantStore {
+    precision: WeightPrecision,
+    tensors: BTreeMap<String, QuantTensor>,
+}
+
+impl QuantStore {
+    /// The precision every entry is stored at.
+    pub fn precision(&self) -> WeightPrecision {
+        self.precision
+    }
+
+    /// Quantized weight by full parameter name.
+    pub fn get(&self, name: &str) -> Option<&QuantTensor> {
+        self.tensors.get(name)
+    }
+
+    /// Number of quantized weights.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// True when nothing was quantized (the `F32` identity store).
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total quantized storage in bytes.
+    pub fn bytes(&self) -> usize {
+        self.tensors.values().map(QuantTensor::bytes).sum()
+    }
+}
+
+/// Per-weight record in a [`QuantReport`].
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    /// Full parameter name (`block0/fc1/a`, …).
+    pub name: String,
+    /// Weight rows (input dim).
+    pub k: usize,
+    /// Weight cols (output dim).
+    pub n: usize,
+    /// Largest per-channel scale.
+    pub scale_max: f32,
+    /// Worst-case per-entry weight error: `scale/2` for int8 (round to
+    /// nearest), `2·maxabs` for binary (sign + mean magnitude).
+    pub weight_err_bound: f32,
+}
+
+/// Summary returned by [`quantize_led_params`].
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    /// Storage precision of the pass.
+    pub precision: WeightPrecision,
+    /// One record per quantized weight, in name order.
+    pub layers: Vec<QuantLayer>,
+    /// f32 bytes of the weights that were quantized.
+    pub bytes_f32: usize,
+    /// Bytes of their quantized encodings.
+    pub bytes_quant: usize,
+    /// Worst-case |Δlogit| bound from first-order interval propagation
+    /// through the LM structure (None when the store is not LM-shaped or
+    /// precision is `F32`). A *loose engineering envelope* — it certifies
+    /// the e2e test's outer bound, it is not a tight theorem.
+    pub logit_bound: Option<f64>,
+}
+
+impl QuantReport {
+    /// Quantized/f32 byte ratio over the quantized weights (1.0 = no
+    /// compression; ~0.25 for int8, ~0.03 for binary).
+    pub fn compression(&self) -> f64 {
+        self.bytes_quant as f64 / self.bytes_f32.max(1) as f64
+    }
+}
+
+impl fmt::Display for QuantReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "quantize[{}]: {} weights, {} -> {} bytes ({:.1}%){}",
+            self.precision,
+            self.layers.len(),
+            self.bytes_f32,
+            self.bytes_quant,
+            100.0 * self.compression(),
+            self.logit_bound
+                .map(|b| format!(", |Δlogit| ≤ {b:.3e}"))
+                .unwrap_or_default()
+        )?;
+        for l in &self.layers {
+            writeln!(
+                f,
+                "  {:<28} {:>5}x{:<5} scale_max={:.3e} w_err<={:.3e}",
+                l.name, l.k, l.n, l.scale_max, l.weight_err_bound
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Quantize every 2-D linear weight in `params` — LED `*/a` / `*/b` factors
+/// and any dense `*/w` left by the Eq.-1 gate — at `precision`, leaving the
+/// f32 store untouched. Embeddings, layernorm gains/biases and 4-D conv
+/// factors stay f32 (they are not GEMM operands on the decode path).
+///
+/// Returns the [`QuantStore`] side-table plus a [`QuantReport`] with
+/// per-weight scales, worst-case per-entry error bounds, byte counts, and
+/// (for LM-shaped stores) a propagated worst-case logit error bound.
+/// `WeightPrecision::F32` yields an empty store (the identity).
+///
+/// ```
+/// use greenformer::factorize::{quantize_led_params, WeightPrecision};
+/// use greenformer::tensor::{ParamStore, Tensor};
+///
+/// let mut params = ParamStore::new();
+/// params.insert(
+///     "fc/a",
+///     Tensor::from_f32(&[4, 2], vec![0.5, -1.0, 0.25, 1.0, -0.75, 0.125, 1.0, -0.5]),
+/// );
+/// params.insert("fc/b", Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 0.5, 0.25, 1.5, -1.0]));
+///
+/// let (store, report) = quantize_led_params(&params, WeightPrecision::Int8).unwrap();
+/// assert_eq!(store.len(), 2);
+/// assert!(store.get("fc/a").is_some() && store.get("fc/b").is_some());
+/// // int8 per-entry error is at most half the largest channel scale
+/// for layer in &report.layers {
+///     assert_eq!(layer.weight_err_bound, layer.scale_max * 0.5);
+/// }
+/// assert!(report.compression() < 0.5);
+/// ```
+pub fn quantize_led_params(
+    params: &ParamStore,
+    precision: WeightPrecision,
+) -> Result<(QuantStore, QuantReport)> {
+    let mut tensors = BTreeMap::new();
+    let mut layers = Vec::new();
+    let mut bytes_f32 = 0usize;
+    let mut bytes_quant = 0usize;
+    if precision != WeightPrecision::F32 {
+        for (name, t) in params.iter() {
+            let quantizable = t.dtype() == Dtype::F32
+                && t.ndim() == 2
+                && (name.ends_with("/w") || name.ends_with("/a") || name.ends_with("/b"));
+            if !quantizable {
+                continue;
+            }
+            let (k, n, w) = t.as_matrix_2d()?;
+            let maxabs = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let (qt, scale_max, err_bound) = match precision {
+                WeightPrecision::Int8 => {
+                    let qm = QuantizedMatrix::from_f32(k, n, w);
+                    let smax = qm.scales().iter().fold(0.0f32, |m, &s| m.max(s));
+                    (QuantTensor::Int8(qm), smax, smax * 0.5)
+                }
+                WeightPrecision::Binary => {
+                    let bm = BinaryMatrix::from_f32(k, n, w);
+                    let smax = bm.scales().iter().fold(0.0f32, |m, &s| m.max(s));
+                    (QuantTensor::Binary(bm), smax, 2.0 * maxabs)
+                }
+                WeightPrecision::F32 => unreachable!(),
+            };
+            bytes_f32 += w.len() * 4;
+            bytes_quant += qt.bytes();
+            layers.push(QuantLayer {
+                name: name.to_string(),
+                k,
+                n,
+                scale_max,
+                weight_err_bound: err_bound,
+            });
+            tensors.insert(name.to_string(), qt);
+        }
+    }
+    let store = QuantStore { precision, tensors };
+    let logit_bound = if precision == WeightPrecision::F32 {
+        None
+    } else {
+        derive_logit_bound(params, precision)
+    };
+    let report = QuantReport {
+        precision,
+        layers,
+        bytes_f32,
+        bytes_quant,
+        logit_bound,
+    };
+    Ok((store, report))
+}
+
+/// Magnitude/error interval: `|exact| ≤ x`, `|quantized − exact| ≤ e`
+/// element-wise, both in f64.
+#[derive(Clone, Copy)]
+struct Iv {
+    x: f64,
+    e: f64,
+}
+
+fn maxabs_of(params: &ParamStore, name: &str) -> Option<f64> {
+    let t = params.get(name)?;
+    let v = t.as_f32().ok()?;
+    Some(v.iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64)
+}
+
+/// One quantized linear `k-dim → bias`: propagate the magnitude bound and
+/// add the three first-order error terms (carried input error × weight,
+/// input magnitude × weight-quant step, activation-quant step × weight).
+fn lin_step(iv: Iv, k: usize, wmax: f64, bias_max: f64, precision: WeightPrecision) -> Iv {
+    let (ax, aw) = match precision {
+        // Symmetric int8 round-to-nearest: step/2 = range/254.
+        WeightPrecision::Int8 => ((iv.x + iv.e) / 254.0, wmax / 254.0),
+        // Sign + mean magnitude: |v − α·sign v| ≤ |v| + α ≤ 2·range.
+        WeightPrecision::Binary => (2.0 * (iv.x + iv.e), 2.0 * wmax),
+        WeightPrecision::F32 => (0.0, 0.0),
+    };
+    let kf = k as f64;
+    Iv {
+        x: kf * iv.x * wmax + bias_max,
+        e: kf * (iv.e * wmax + (iv.x + iv.e) * aw + ax * (wmax + aw)),
+    }
+}
+
+/// A full linear group (`prefix/w` dense, or `prefix/a` + `prefix/b` LED),
+/// bias exact in f32.
+fn lin_group(params: &ParamStore, prefix: &str, iv: Iv, precision: WeightPrecision) -> Option<Iv> {
+    let bias_max = maxabs_of(params, &format!("{prefix}/bias")).unwrap_or(0.0);
+    if let Some(w) = params.get(&format!("{prefix}/w")) {
+        let (k, _, _) = w.as_matrix_2d().ok()?;
+        let wmax = maxabs_of(params, &format!("{prefix}/w"))?;
+        Some(lin_step(iv, k, wmax, bias_max, precision))
+    } else {
+        let a = params.get(&format!("{prefix}/a"))?;
+        let (k, _, _) = a.as_matrix_2d().ok()?;
+        let b = params.get(&format!("{prefix}/b"))?;
+        let (r, _, _) = b.as_matrix_2d().ok()?;
+        let amax = maxabs_of(params, &format!("{prefix}/a"))?;
+        let bmax = maxabs_of(params, &format!("{prefix}/b"))?;
+        let mid = lin_step(iv, k, amax, 0.0, precision);
+        Some(lin_step(mid, r, bmax, bias_max, precision))
+    }
+}
+
+/// LayerNorm envelope: outputs lie in `±(√d·max|g| + max|bias|)` whatever
+/// the input, so the carried error collapses to the output-range diameter.
+fn ln_step(params: &ParamStore, prefix: &str, d: usize, had_err: bool) -> Option<Iv> {
+    let gmax = maxabs_of(params, &format!("{prefix}/g"))?;
+    let bmax = maxabs_of(params, &format!("{prefix}/bias")).unwrap_or(0.0);
+    let sd = (d as f64).sqrt();
+    Some(Iv {
+        x: sd * gmax + bmax,
+        e: if had_err { 2.0 * sd * gmax } else { 0.0 },
+    })
+}
+
+/// Worst-case |Δlogit| for the text-LM structure under `precision`, by
+/// first-order interval propagation (f64): embeddings exact, each block's
+/// LayerNorm resets the branch range, attention treated as a convex
+/// mixture envelope, GELU as 1.2-Lipschitz, residual adds summing both
+/// magnitude and error. Deliberately loose — every inequality is an outer
+/// envelope — but finite and sound, which is what the e2e bound test pins.
+fn derive_logit_bound(params: &ParamStore, precision: WeightPrecision) -> Option<f64> {
+    let embed = params.get("embed/table")?;
+    let d = *embed.shape.last()?;
+    let x0 = maxabs_of(params, "embed/table")? + maxabs_of(params, "pos/table")?;
+    let mut res = Iv { x: x0, e: 0.0 };
+    let mut i = 0usize;
+    while params.get(&format!("block{i}/ln1/g")).is_some() {
+        let pre = format!("block{i}");
+        // Attention branch.
+        let xn = ln_step(params, &format!("{pre}/ln1"), d, res.e > 0.0)?;
+        // q/k only shape the softmax weights, which the mixture envelope
+        // below absorbs; only v's range reaches the output.
+        let v = lin_group(params, &format!("{pre}/attn/v"), xn, precision)?;
+        // Softmax mixture: |ctx| ≤ max|v| exactly; perturbed weights can at
+        // worst swap the mixture endpoints, so Δctx ≤ 2·(|v| + Δv).
+        let ctx = Iv {
+            x: v.x,
+            e: 2.0 * v.x + 3.0 * v.e,
+        };
+        let o = lin_group(params, &format!("{pre}/attn/o"), ctx, precision)?;
+        res = Iv {
+            x: res.x + o.x,
+            e: res.e + o.e,
+        };
+        // MLP branch.
+        let xn = ln_step(params, &format!("{pre}/ln2"), d, res.e > 0.0)?;
+        let h = lin_group(params, &format!("{pre}/fc1"), xn, precision)?;
+        // |gelu(x)| ≤ |x|; sup |gelu'| < 1.2 for the tanh approximation.
+        let h = Iv { x: h.x, e: 1.2 * h.e };
+        let f = lin_group(params, &format!("{pre}/fc2"), h, precision)?;
+        res = Iv {
+            x: res.x + f.x,
+            e: res.e + f.e,
+        };
+        i += 1;
+    }
+    if i == 0 {
+        return None;
+    }
+    let xn = ln_step(params, "ln_f", d, res.e > 0.0)?;
+    let logits = lin_group(params, "head", xn, precision)?;
+    Some(logits.e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn led_store() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("fc/a", Tensor::from_f32(&[3, 2], vec![0.5, -1.0, 0.25, 1.0, -0.75, 0.125]));
+        s.insert("fc/b", Tensor::from_f32(&[2, 2], vec![1.0, -2.0, 0.5, 0.25]));
+        s.insert("fc/bias", Tensor::from_f32(&[2], vec![0.0, 0.1]));
+        s.insert("emb/table", Tensor::from_f32(&[2, 3], vec![0.0; 6]));
+        s
+    }
+
+    #[test]
+    fn f32_is_identity() {
+        let (store, report) = quantize_led_params(&led_store(), WeightPrecision::F32).unwrap();
+        assert!(store.is_empty());
+        assert!(report.layers.is_empty());
+        assert_eq!(report.logit_bound, None);
+    }
+
+    #[test]
+    fn int8_quantizes_factors_not_tables() {
+        let (store, report) = quantize_led_params(&led_store(), WeightPrecision::Int8).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.get("fc/a").is_some());
+        assert!(store.get("fc/b").is_some());
+        assert!(store.get("emb/table").is_none());
+        assert!(store.get("fc/bias").is_none());
+        assert!(report.compression() < 0.5);
+        // Not LM-shaped: no propagated bound.
+        assert_eq!(report.logit_bound, None);
+    }
+
+    #[test]
+    fn binary_compresses_below_int8() {
+        let (s8, r8) = quantize_led_params(&led_store(), WeightPrecision::Int8).unwrap();
+        let (sb, rb) = quantize_led_params(&led_store(), WeightPrecision::Binary).unwrap();
+        assert_eq!(s8.len(), sb.len());
+        assert!(rb.bytes_quant < r8.bytes_quant);
+    }
+
+    #[test]
+    fn precision_roundtrips_through_strings() {
+        for p in [WeightPrecision::F32, WeightPrecision::Int8, WeightPrecision::Binary] {
+            let s = p.to_string();
+            assert_eq!(s.parse::<WeightPrecision>().unwrap(), p);
+        }
+        assert!("fp16".parse::<WeightPrecision>().is_err());
+    }
+}

@@ -13,7 +13,7 @@
 //! let report = auto_fact(
 //!     &mut params,
 //!     &AutoFactConfig { rank: greenformer::factorize::Rank::Ratio(0.25),
-//!                       solver: Solver::Svd, num_iter: 50, submodules: None },
+//!                       solver: Solver::Svd, ..AutoFactConfig::default() },
 //! ).unwrap();
 //! println!("{}", report);
 //! ```

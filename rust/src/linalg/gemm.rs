@@ -188,8 +188,9 @@ pub fn matmul_into_reference(m: usize, k: usize, n: usize, a: &[f32], b: &[f32],
 }
 
 /// Bias + activation over one finished output row (or row fragment, with
-/// `bias` pre-sliced to match).
-fn apply_epilogue(row: &mut [f32], bias: Option<&[f32]>, act: Activation) {
+/// `bias` pre-sliced to match). Shared with the quantized containers in
+/// [`super::quant`] so every path runs the identical epilogue sequence.
+pub(crate) fn apply_epilogue(row: &mut [f32], bias: Option<&[f32]>, act: Activation) {
     if let Some(bias) = bias {
         debug_assert_eq!(row.len(), bias.len());
         for (v, &bv) in row.iter_mut().zip(bias) {
@@ -424,6 +425,332 @@ fn microkernel(kcb: usize, apanel: &[f32], bpanel: &[f32], tile: &mut [f32; MR *
     }
 }
 
+// ---------------------------------------------------------------------------
+// Quantized int8 GEMM / GEMV (i8×i8 → i32 accumulate, f32 dequant epilogue)
+// ---------------------------------------------------------------------------
+
+/// Largest `k` the int8 kernels accept: `k · 127² < i32::MAX`, so the i32
+/// accumulator provably cannot overflow. Far above any model dimension here.
+pub const QGEMM_MAX_K: usize = 130_000;
+
+thread_local! {
+    /// Per-thread int8 packing scratch `(apack, bpack)` for the quantized
+    /// GEMM, mirroring [`PACK_BUFS`].
+    static QPACK_BUFS: RefCell<(Vec<i8>, Vec<i8>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    /// Per-thread i32 accumulator scratch for the quantized GEMV shards.
+    static QGEMV_ACC: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Quantized `out(m,n) = act(out + dequant(xq(m,k) @ wq(k,n)) + bias)`.
+///
+/// `xq` is the per-row symmetric int8 quantization of the activations with
+/// row scales `xscale` (length `m`); `wq` is the per-output-channel symmetric
+/// int8 weight with column scales `wscale` (length `n`). Each output element
+/// accumulates the full dot product in one i32 (exact — integer addition is
+/// associative, so unlike the f32 kernels no accumulation-order argument is
+/// needed) and is dequantized by a single f32 multiply:
+/// `out[i,j] += (acc as f32) * (xscale[i] * wscale[j])`, after which the
+/// fused bias/activation epilogue runs exactly as in [`matmul_bias_into`].
+///
+/// Every dispatch target — the scalar reference, the packed tiles, the
+/// column-split GEMV, serial or pooled — performs that identical per-element
+/// f32 sequence, so the result is **bit-identical** across all of them
+/// (pinned by `tests/proptest_quant.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_bias_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    xq: &[i8],
+    xscale: &[f32],
+    wq: &[i8],
+    wscale: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xq.len(), m * k, "qgemm: xq length");
+    debug_assert_eq!(xscale.len(), m, "qgemm: xscale length");
+    debug_assert_eq!(wq.len(), k * n, "qgemm: wq length");
+    debug_assert_eq!(wscale.len(), n, "qgemm: wscale length");
+    debug_assert_eq!(out.len(), m * n, "qgemm: out length");
+    debug_assert!(k <= QGEMM_MAX_K, "qgemm: k={k} risks i32 overflow");
+    if let Some(bias) = bias {
+        debug_assert_eq!(bias.len(), n, "qgemm: bias length");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // Nothing to accumulate; the epilogue still applies.
+        for row in out.chunks_exact_mut(n) {
+            apply_epilogue(row, bias, act);
+        }
+        return;
+    }
+    if m == 1 {
+        qgemv(k, n, xq, xscale[0], wq, wscale, bias, act, out);
+        return;
+    }
+    let macs = m * k * n;
+    if macs < PACKED_MIN_MACS {
+        qmatmul_into_reference(m, k, n, xq, xscale, wq, wscale, bias, act, out);
+        return;
+    }
+    let width = pool::parallelism();
+    if macs < GEMM_PARALLEL_MIN_MACS || width <= 1 {
+        qpacked_gemm_serial(m, k, n, xq, xscale, wq, wscale, bias, act, out);
+        return;
+    }
+    // Row shards across the pool, MR-aligned — same skeleton (and the same
+    // redundant-B-pack trade) as the f32 parallel path above.
+    let n_tasks = width.min(m.div_ceil(MR));
+    let rows_per = m.div_ceil(n_tasks).div_ceil(MR) * MR;
+    let n_tasks = m.div_ceil(rows_per);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool::run(n_tasks, &|t| {
+        let r0 = t * rows_per;
+        let r1 = (r0 + rows_per).min(m);
+        let x_sub = &xq[r0 * k..r1 * k];
+        let xs_sub = &xscale[r0..r1];
+        // SAFETY: tasks own disjoint row ranges [r0, r1) of `out`.
+        let o_sub = unsafe { std::slice::from_raw_parts_mut(optr.0.add(r0 * n), (r1 - r0) * n) };
+        qpacked_gemm_serial(r1 - r0, k, n, x_sub, xs_sub, wq, wscale, bias, act, o_sub);
+    });
+}
+
+/// The scalar reference quantized matmul — the oracle `qmatmul_bias_into`
+/// must match bit for bit. Plain i-j-k triple loop, one i32 accumulator per
+/// element, then the shared dequant + epilogue sequence.
+#[allow(clippy::too_many_arguments)]
+pub fn qmatmul_into_reference(
+    m: usize,
+    k: usize,
+    n: usize,
+    xq: &[i8],
+    xscale: &[f32],
+    wq: &[i8],
+    wscale: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xq.len(), m * k);
+    debug_assert_eq!(wq.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let xrow = &xq[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            for (p, &xv) in xrow.iter().enumerate() {
+                acc += xv as i32 * wq[p * n + j] as i32;
+            }
+            *o += acc as f32 * (xscale[i] * wscale[j]);
+        }
+        apply_epilogue(orow, bias, act);
+    }
+}
+
+/// Quantized GEMV over columns `[j0, j1)`: i32 accumulators in `acc`
+/// (resized, zeroed), k-outer so `wq`'s rows stream contiguously.
+fn qgemv_range(
+    k: usize,
+    n: usize,
+    j0: usize,
+    j1: usize,
+    xq: &[i8],
+    wq: &[i8],
+    acc: &mut Vec<i32>,
+) {
+    acc.clear();
+    acc.resize(j1 - j0, 0);
+    for (p, &xv) in xq.iter().enumerate() {
+        let xv = xv as i32;
+        let wrow = &wq[p * n + j0..p * n + j1];
+        for (a, &wv) in acc.iter_mut().zip(wrow) {
+            *a += xv * wv as i32;
+        }
+    }
+    debug_assert_eq!(k, xq.len());
+}
+
+/// Dequantize an accumulator range into `out` and run the fused epilogue.
+fn qstore_row(
+    acc: &[i32],
+    xscale: f32,
+    wscale: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    for ((o, &a), &ws) in out.iter_mut().zip(acc).zip(wscale) {
+        *o += a as f32 * (xscale * ws);
+    }
+    apply_epilogue(out, bias, act);
+}
+
+/// The m = 1 decode step: column-split like [`gemv`], with per-thread i32
+/// accumulator scratch so the steady-state decode loop allocates nothing.
+#[allow(clippy::too_many_arguments)]
+fn qgemv(
+    k: usize,
+    n: usize,
+    xq: &[i8],
+    xscale: f32,
+    wq: &[i8],
+    wscale: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    let macs = k * n;
+    let width = pool::parallelism();
+    if macs < GEMV_PARALLEL_MIN_MACS || width <= 1 || n < 2 * GEMV_MIN_COLS_PER_TASK {
+        QGEMV_ACC.with(|cell| {
+            let acc = &mut *cell.borrow_mut();
+            qgemv_range(k, n, 0, n, xq, wq, acc);
+            qstore_row(acc, xscale, wscale, bias, act, out);
+        });
+        return;
+    }
+    let n_tasks = width.min(n / GEMV_MIN_COLS_PER_TASK).max(1);
+    let cols_per = n.div_ceil(n_tasks);
+    let n_tasks = n.div_ceil(cols_per);
+    let optr = SendPtr(out.as_mut_ptr());
+    pool::run(n_tasks, &|t| {
+        let j0 = t * cols_per;
+        let j1 = (j0 + cols_per).min(n);
+        // SAFETY: tasks own disjoint column ranges [j0, j1) of `out`.
+        let o = unsafe { std::slice::from_raw_parts_mut(optr.0.add(j0), j1 - j0) };
+        QGEMV_ACC.with(|cell| {
+            let acc = &mut *cell.borrow_mut();
+            qgemv_range(k, n, j0, j1, xq, wq, acc);
+            qstore_row(acc, xscale, &wscale[j0..j1], bias.map(|bs| &bs[j0..j1]), act, o);
+        });
+    });
+}
+
+/// Serial packed int8 GEMM over the caller's row range. Same `jc`/`ic`
+/// blocking and micro-panel layout as [`packed_gemm_serial`], with one
+/// deliberate difference: **no `KC` split**. The microkernel accumulates the
+/// *entire* k extent into an i32 register tile — exact regardless of order —
+/// so each output element is produced by one tile pass and dequantized with
+/// a single f32 multiply at store time. (An int8 A panel at the dimensions
+/// this crate runs is ≤ a few KB, so the k-blocking that keeps f32 panels in
+/// cache buys nothing here.)
+#[allow(clippy::too_many_arguments)]
+fn qpacked_gemm_serial(
+    m: usize,
+    k: usize,
+    n: usize,
+    xq: &[i8],
+    xscale: &[f32],
+    wq: &[i8],
+    wscale: &[f32],
+    bias: Option<&[f32]>,
+    act: Activation,
+    out: &mut [f32],
+) {
+    QPACK_BUFS.with(|cell| {
+        let mut bufs = cell.borrow_mut();
+        let (apack, bpack) = &mut *bufs;
+        for jc in (0..n).step_by(NC) {
+            let ncb = NC.min(n - jc);
+            let n_jp = ncb.div_ceil(NR);
+            qpack_b(wq, n, k, jc, ncb, bpack);
+            for ic in (0..m).step_by(MC) {
+                let mcb = MC.min(m - ic);
+                let n_ip = mcb.div_ceil(MR);
+                qpack_a(xq, k, ic, mcb, apack);
+                for jp in 0..n_jp {
+                    let jr = jp * NR;
+                    let nr = NR.min(ncb - jr);
+                    let bpanel = &bpack[jp * k * NR..(jp + 1) * k * NR];
+                    for ip in 0..n_ip {
+                        let ir = ip * MR;
+                        let mr = MR.min(mcb - ir);
+                        let apanel = &apack[ip * k * MR..(ip + 1) * k * MR];
+                        let mut tile = [0i32; MR * NR];
+                        qmicrokernel(k, apanel, bpanel, &mut tile);
+                        for r in 0..mr {
+                            let row = ic + ir + r;
+                            let dst =
+                                &mut out[row * n + jc + jr..row * n + jc + jr + nr];
+                            let acc = &tile[r * NR..r * NR + nr];
+                            qstore_row(
+                                acc,
+                                xscale[row],
+                                &wscale[jc + jr..jc + jr + nr],
+                                bias.map(|bs| &bs[jc + jr..jc + jr + nr]),
+                                act,
+                                dst,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Pack `wq[0..k, jc..jc+ncb]` into `NR`-wide int8 column micro-panels
+/// (`panel[p*NR + c]`), zero-padding the final partial panel.
+fn qpack_b(wq: &[i8], n: usize, k: usize, jc: usize, ncb: usize, bpack: &mut Vec<i8>) {
+    let n_jp = ncb.div_ceil(NR);
+    bpack.clear();
+    bpack.resize(n_jp * k * NR, 0);
+    for p in 0..k {
+        let wrow = &wq[p * n + jc..p * n + jc + ncb];
+        for jp in 0..n_jp {
+            let jr = jp * NR;
+            let nr = NR.min(ncb - jr);
+            let dst = (jp * k + p) * NR;
+            bpack[dst..dst + nr].copy_from_slice(&wrow[jr..jr + nr]);
+        }
+    }
+}
+
+/// Pack `xq[ic..ic+mcb, 0..k]` into `MR`-tall k-major int8 row micro-panels
+/// (`panel[p*MR + r]`), zero-padding the final partial panel. Padded rows
+/// contribute zero products into lanes the store mask discards.
+fn qpack_a(xq: &[i8], k: usize, ic: usize, mcb: usize, apack: &mut Vec<i8>) {
+    let n_ip = mcb.div_ceil(MR);
+    apack.clear();
+    apack.resize(n_ip * k * MR, 0);
+    for ip in 0..n_ip {
+        let ir = ip * MR;
+        let mr = MR.min(mcb - ir);
+        for r in 0..mr {
+            let xrow = &xq[(ic + ir + r) * k..(ic + ir + r) * k + k];
+            let base = ip * k * MR + r;
+            for (p, &v) in xrow.iter().enumerate() {
+                apack[base + p * MR] = v;
+            }
+        }
+    }
+}
+
+/// The int8 register microkernel: `tile(MR,NR) += apanel ᵀ-major @ bpanel`
+/// with widening i8→i32 multiply-adds over the full k extent.
+#[inline(always)]
+fn qmicrokernel(k: usize, apanel: &[i8], bpanel: &[i8], tile: &mut [i32; MR * NR]) {
+    debug_assert!(apanel.len() >= k * MR);
+    debug_assert!(bpanel.len() >= k * NR);
+    for p in 0..k {
+        let av: &[i8; MR] = apanel[p * MR..p * MR + MR].try_into().unwrap();
+        let bv: &[i8; NR] = bpanel[p * NR..p * NR + NR].try_into().unwrap();
+        for (r, &ar) in av.iter().enumerate() {
+            let ar = ar as i32;
+            let trow = &mut tile[r * NR..r * NR + NR];
+            for (t, &bb) in trow.iter_mut().zip(bv) {
+                *t += ar * bb as i32;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,6 +797,49 @@ mod tests {
         let bias = [0.5f32, 0.5];
         matmul_bias_into(2, 0, 2, &[], &[], Some(&bias), Activation::Relu, &mut out);
         assert_eq!(out, vec![1.5, 0.0, 3.5, 0.0]);
+    }
+
+    fn randq(rng: &mut Pcg64, len: usize) -> Vec<i8> {
+        (0..len).map(|_| (rng.below(255) as i32 - 127) as i8).collect()
+    }
+
+    // Quant smoke only: the adversarial-shape matrix (m=1, k=0, remainders,
+    // pool-vs-serial, fused epilogues) lives in tests/proptest_quant.rs.
+    #[test]
+    fn qpacked_matches_reference_bitwise() {
+        let mut rng = Pcg64::seeded(21);
+        for (m, k, n) in [(2, 3, 5), (13, 29, 31), (33, 65, 33), (96, 130, 120)] {
+            let xq = randq(&mut rng, m * k);
+            let wq = randq(&mut rng, k * n);
+            let xs: Vec<f32> = (0..m).map(|_| rng.next_f32() * 0.01 + 1e-4).collect();
+            let ws: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.01 + 1e-4).collect();
+            let bias: Vec<f32> = randv(&mut rng, n);
+            let init = randv(&mut rng, m * n);
+            let mut got = init.clone();
+            let mut want = init.clone();
+            qmatmul_bias_into(m, k, n, &xq, &xs, &wq, &ws, Some(&bias), Activation::Gelu, &mut got);
+            qmatmul_into_reference(
+                m, k, n, &xq, &xs, &wq, &ws, Some(&bias), Activation::Gelu, &mut want,
+            );
+            assert_bits_eq(&got, &want);
+        }
+    }
+
+    #[test]
+    fn qgemv_matches_reference_bitwise() {
+        let mut rng = Pcg64::seeded(22);
+        // Serial (small n) and pooled (macs + cols over both thresholds).
+        for (k, n) in [(7, 5), (300, 2000)] {
+            let xq = randq(&mut rng, k);
+            let wq = randq(&mut rng, k * n);
+            let xs = [rng.next_f32() * 0.01 + 1e-4];
+            let ws: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.01 + 1e-4).collect();
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            qmatmul_bias_into(1, k, n, &xq, &xs, &wq, &ws, None, Activation::None, &mut got);
+            qmatmul_into_reference(1, k, n, &xq, &xs, &wq, &ws, None, Activation::None, &mut want);
+            assert_bits_eq(&got, &want);
+        }
     }
 
     #[test]

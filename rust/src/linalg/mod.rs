@@ -6,6 +6,8 @@
 //! * [`gemm`] — the kernel layer: packed, cache-tiled GEMM with an 8×8
 //!   register microkernel, column-split parallel GEMV for the batch-1
 //!   decode step, and fused bias/GELU/ReLU epilogues (DESIGN.md §11).
+//! * [`quant`] — int8 per-output-channel and bit-packed ±1 weight
+//!   containers over the quantized [`gemm`] kernels (DESIGN.md §12).
 //! * [`pool`] — lazily-initialized persistent worker pool the parallel
 //!   kernels dispatch on (replaces per-call thread spawn/join).
 //! * [`workspace`] — checkout/checkin scratch arena the interpreters
@@ -30,14 +32,19 @@ pub mod gemm;
 pub mod matrix;
 pub mod pool;
 pub mod qr;
+pub mod quant;
 pub mod rsvd;
 pub mod snmf;
 pub mod solve;
 pub mod svd;
 pub mod workspace;
 
-pub use gemm::{matmul_bias_into, matmul_into, matmul_into_reference, Activation};
+pub use gemm::{
+    matmul_bias_into, matmul_into, matmul_into_reference, qmatmul_bias_into,
+    qmatmul_into_reference, Activation,
+};
 pub use matrix::Matrix;
+pub use quant::{quantize_rows_into, BinaryMatrix, QuantizedMatrix};
 pub use qr::thin_qr;
 pub use workspace::Workspace;
 pub use rsvd::randomized_svd;

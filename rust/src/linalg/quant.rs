@@ -1,0 +1,370 @@
+//! Quantized weight containers over the [`super::gemm`] int8 kernels.
+//!
+//! Two storage formats for a `k×n` weight matrix (DESIGN.md §12):
+//!
+//! * [`QuantizedMatrix`] — per-output-channel symmetric int8: one f32 scale
+//!   per output column `j` (`scale_j = maxabs(col_j) / 127`), entries
+//!   `round(w / scale_j)` clamped to `[-127, 127]`. Applied through
+//!   [`super::gemm::qmatmul_bias_into`]: activations are quantized per row
+//!   on the fly (into thread-local scratch — zero steady-state allocation),
+//!   products accumulate in i32 exactly, and one f32 multiply dequantizes
+//!   each output element.
+//! * [`BinaryMatrix`] — ±1 factors à la XNOR-Net / BMF (arxiv 2210.13468):
+//!   sign bits packed 64-per-u64 column-major plus one f32 magnitude per
+//!   column (`mean |col|`). The matvec is pure XOR + popcount:
+//!   `dot = k − 2·popcount(xbits ⊕ wbits)`, scaled by the row and column
+//!   magnitudes. On genuinely ±1 inputs every scale is exactly 1.0 and the
+//!   integer dot is exact in f32, so the popcount path equals the f32
+//!   matvec **bit for bit** (pinned by `tests/proptest_quant.rs`).
+//!
+//! Both `apply` entry points keep the f32 kernels' `out +=` accumulate
+//! semantics and fused bias/activation epilogue.
+
+use std::cell::RefCell;
+
+use super::gemm::{self, Activation};
+
+thread_local! {
+    /// Per-thread activation-quantization scratch `(xq, xscale)`, reused
+    /// across calls so steady-state decode does zero heap allocation.
+    static QX_BUFS: RefCell<(Vec<i8>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+    /// Per-thread sign-bit scratch for binary activation rows.
+    static BIN_BUFS: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Symmetric int8 scale for a value range of `maxabs`: `maxabs / 127`, with
+/// an all-zero range mapping to 1.0 (any scale represents zeros exactly).
+#[inline]
+pub fn quant_scale(maxabs: f32) -> f32 {
+    let s = maxabs / 127.0;
+    if s == 0.0 {
+        1.0
+    } else {
+        s
+    }
+}
+
+#[inline]
+fn quantize_val(v: f32, scale: f32) -> i8 {
+    // f32::round = half away from zero; clamp guards inf/NaN-free inputs
+    // whose ratio still lands a hair outside ±127 (maxabs itself rounds to
+    // exactly ±127 since scale divides it back).
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize `rows × k` f32 activations per row (symmetric int8) into `xq` /
+/// `xscale`, reusing their capacity.
+pub fn quantize_rows_into(
+    rows: usize,
+    k: usize,
+    x: &[f32],
+    xq: &mut Vec<i8>,
+    xscale: &mut Vec<f32>,
+) {
+    debug_assert_eq!(x.len(), rows * k);
+    xq.clear();
+    xq.resize(rows * k, 0);
+    xscale.clear();
+    xscale.resize(rows, 0.0);
+    for i in 0..rows {
+        let xrow = &x[i * k..(i + 1) * k];
+        let maxabs = xrow.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = quant_scale(maxabs);
+        xscale[i] = s;
+        for (q, &v) in xq[i * k..(i + 1) * k].iter_mut().zip(xrow) {
+            *q = quantize_val(v, s);
+        }
+    }
+}
+
+/// A `k×n` weight matrix stored as per-output-channel symmetric int8.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    k: usize,
+    n: usize,
+    q: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a row-major `k×n` f32 matrix, one symmetric scale per
+    /// output column.
+    pub fn from_f32(k: usize, n: usize, w: &[f32]) -> Self {
+        assert_eq!(w.len(), k * n, "QuantizedMatrix: shape/data mismatch");
+        let mut scales = vec![0.0f32; n];
+        for j in 0..n {
+            let mut maxabs = 0.0f32;
+            for p in 0..k {
+                maxabs = maxabs.max(w[p * n + j].abs());
+            }
+            scales[j] = quant_scale(maxabs);
+        }
+        let mut q = vec![0i8; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                q[p * n + j] = quantize_val(w[p * n + j], scales[j]);
+            }
+        }
+        QuantizedMatrix { k, n, q, scales }
+    }
+
+    /// Input dimension (rows of the weight).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output dimension (columns / channels).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-output-channel scales (length `n`).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// The int8 entries, row-major `k×n`.
+    pub fn values(&self) -> &[i8] {
+        &self.q
+    }
+
+    /// Storage footprint in bytes (entries + scales).
+    pub fn bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * 4
+    }
+
+    /// Dequantized f32 copy (`q[p,j] * scale_j`) — for tests and error
+    /// reporting, not the hot path.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut w = vec![0.0f32; self.k * self.n];
+        for p in 0..self.k {
+            for j in 0..self.n {
+                w[p * self.n + j] = self.q[p * self.n + j] as f32 * self.scales[j];
+            }
+        }
+        w
+    }
+
+    /// `out(rows,n) = act(out + dequant(quant(x) @ self) + bias)`: quantize
+    /// the f32 activations per row into thread-local scratch, then run the
+    /// int8 kernel with fused dequant + epilogue.
+    pub fn apply(
+        &self,
+        rows: usize,
+        x: &[f32],
+        bias: Option<&[f32]>,
+        act: Activation,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), rows * self.k);
+        debug_assert_eq!(out.len(), rows * self.n);
+        QX_BUFS.with(|cell| {
+            let mut bufs = cell.borrow_mut();
+            let (xq, xscale) = &mut *bufs;
+            quantize_rows_into(rows, self.k, x, xq, xscale);
+            gemm::qmatmul_bias_into(
+                rows,
+                self.k,
+                self.n,
+                xq,
+                xscale,
+                &self.q,
+                &self.scales,
+                bias,
+                act,
+                out,
+            );
+        });
+    }
+}
+
+/// A `k×n` weight matrix reduced to ±1 sign bits plus one f32 magnitude per
+/// output column (`mean |col|`).
+///
+/// Bit `p` of column `j` is set iff `w[p,j] < 0`; zero (and positive)
+/// entries encode +1. Sign words are column-major so the matvec walks each
+/// column's `k/64` words contiguously.
+#[derive(Clone, Debug)]
+pub struct BinaryMatrix {
+    k: usize,
+    n: usize,
+    words_per_col: usize,
+    bits: Vec<u64>,
+    scales: Vec<f32>,
+}
+
+impl BinaryMatrix {
+    /// Binarize a row-major `k×n` f32 matrix.
+    pub fn from_f32(k: usize, n: usize, w: &[f32]) -> Self {
+        assert_eq!(w.len(), k * n, "BinaryMatrix: shape/data mismatch");
+        let words_per_col = k.div_ceil(64);
+        let mut bits = vec![0u64; n * words_per_col];
+        let mut scales = vec![0.0f32; n];
+        for j in 0..n {
+            let mut sumabs = 0.0f32;
+            let col = &mut bits[j * words_per_col..(j + 1) * words_per_col];
+            for p in 0..k {
+                let v = w[p * n + j];
+                sumabs += v.abs();
+                if v < 0.0 {
+                    col[p / 64] |= 1u64 << (p % 64);
+                }
+            }
+            scales[j] = if k == 0 { 1.0 } else { sumabs / k as f32 };
+        }
+        BinaryMatrix {
+            k,
+            n,
+            words_per_col,
+            bits,
+            scales,
+        }
+    }
+
+    /// Input dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-column magnitudes (length `n`).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// Storage footprint in bytes (sign words + scales).
+    pub fn bytes(&self) -> usize {
+        self.bits.len() * 8 + self.scales.len() * 4
+    }
+
+    /// `out(n) = act(out + xscale·(k − 2·popcount(xbits ⊕ colbits))·scale_j
+    /// + bias)` — the XOR/popcount matvec against one pre-binarized
+    /// activation row. Tail bits beyond `k` are zero in both operands, so
+    /// they never perturb the count.
+    pub fn matvec(
+        &self,
+        xbits: &[u64],
+        xscale: f32,
+        bias: Option<&[f32]>,
+        act: Activation,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xbits.len(), self.words_per_col);
+        debug_assert_eq!(out.len(), self.n);
+        for j in 0..self.n {
+            let col = &self.bits[j * self.words_per_col..(j + 1) * self.words_per_col];
+            let mut ham = 0u32;
+            for (&xw, &cw) in xbits.iter().zip(col) {
+                ham += (xw ^ cw).count_ones();
+            }
+            let dot = self.k as i32 - 2 * ham as i32;
+            out[j] += dot as f32 * (xscale * self.scales[j]);
+        }
+        gemm::apply_epilogue(out, bias, act);
+    }
+
+    /// `out(rows,n) = act(out + binarize(x) @ self + bias)`: binarize each
+    /// f32 activation row (magnitude `mean |row|`, sign bits) into
+    /// thread-local scratch and run the popcount matvec per row.
+    pub fn apply(
+        &self,
+        rows: usize,
+        x: &[f32],
+        bias: Option<&[f32]>,
+        act: Activation,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), rows * self.k);
+        debug_assert_eq!(out.len(), rows * self.n);
+        BIN_BUFS.with(|cell| {
+            let xbits = &mut *cell.borrow_mut();
+            for i in 0..rows {
+                let xrow = &x[i * self.k..(i + 1) * self.k];
+                let xscale = binarize_row_into(xrow, xbits);
+                self.matvec(
+                    xbits,
+                    xscale,
+                    bias,
+                    act,
+                    &mut out[i * self.n..(i + 1) * self.n],
+                );
+            }
+        });
+    }
+}
+
+/// Binarize one activation row: sign bits into `xbits` (bit set iff
+/// negative; reused capacity, tail zeroed) and the returned magnitude
+/// `mean |x|` (1.0 for an empty or all-zero row, matching
+/// [`quant_scale`]'s zero-range convention).
+pub fn binarize_row_into(x: &[f32], xbits: &mut Vec<u64>) -> f32 {
+    let k = x.len();
+    xbits.clear();
+    xbits.resize(k.div_ceil(64), 0);
+    let mut sumabs = 0.0f32;
+    for (p, &v) in x.iter().enumerate() {
+        sumabs += v.abs();
+        if v < 0.0 {
+            xbits[p / 64] |= 1u64 << (p % 64);
+        }
+    }
+    if k == 0 || sumabs == 0.0 {
+        1.0
+    } else {
+        sumabs / k as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul_bias_into;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_error_within_half_scale() {
+        let mut rng = Pcg64::seeded(31);
+        let (k, n) = (17, 9);
+        let mut w = vec![0.0f32; k * n];
+        rng.fill_normal(&mut w, 0.5);
+        let qm = QuantizedMatrix::from_f32(k, n, &w);
+        let deq = qm.dequantize();
+        for j in 0..n {
+            let half = qm.scales()[j] * 0.5 * (1.0 + 1e-5);
+            for p in 0..k {
+                let err = (w[p * n + j] - deq[p * n + j]).abs();
+                assert!(err <= half, "({p},{j}): err {err} > scale/2 {half}");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_matvec_exact_on_pm1() {
+        let mut rng = Pcg64::seeded(32);
+        let (k, n) = (130, 7); // crosses a u64 word boundary
+        let w: Vec<f32> =
+            (0..k * n).map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 }).collect();
+        let x: Vec<f32> = (0..k).map(|_| if rng.below(2) == 0 { 1.0 } else { -1.0 }).collect();
+        let bm = BinaryMatrix::from_f32(k, n, &w);
+        let mut got = vec![0.0f32; n];
+        bm.apply(1, &x, None, Activation::None, &mut got);
+        let mut want = vec![0.0f32; n];
+        matmul_bias_into(1, k, n, &x, &w, None, Activation::None, &mut want);
+        for (g, wv) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), wv.to_bits(), "{g} vs {wv}");
+        }
+    }
+
+    #[test]
+    fn zero_column_uses_unit_scale() {
+        let w = vec![0.0f32; 6];
+        let qm = QuantizedMatrix::from_f32(3, 2, &w);
+        assert_eq!(qm.scales(), &[1.0, 1.0]);
+        assert!(qm.dequantize().iter().all(|&v| v == 0.0));
+    }
+}

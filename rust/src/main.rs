@@ -10,7 +10,8 @@ use std::path::PathBuf;
 use greenformer::backend::native::{demo_variants, init_text_params, synth_fwd_graph, TextModelCfg};
 use greenformer::backend::{
     build_draft_params, generate as lm_generate, generate_batched as lm_generate_batched,
-    generate_speculative as lm_generate_speculative, NativeBackend, SamplingCfg, SpecConfig,
+    generate_speculative as lm_generate_speculative, generate_with_session, DecodeSession,
+    NativeBackend, SamplingCfg, SpecConfig,
 };
 use greenformer::config::ExperimentConfig;
 use greenformer::coordinator::{
@@ -20,7 +21,7 @@ use greenformer::data::image::{all_image_tasks, HW};
 use greenformer::data::text::all_text_tasks;
 use greenformer::data::Dataset;
 use greenformer::experiments::{self, ExpParams};
-use greenformer::factorize::{auto_fact, Solver};
+use greenformer::factorize::{auto_fact, quantize_led_params, Solver, WeightPrecision};
 use greenformer::runtime::Engine;
 use greenformer::tensor::ParamStore;
 use greenformer::train::{checkpoint, Trainer};
@@ -36,6 +37,8 @@ COMMANDS:
   factorize --input F --output F        auto_fact a GTZ checkpoint
             [--ratio 0.25] [--rank N] [--solver svd|snmf|random]
             [--num-iter 50] [--submodule S]...
+            [--precision f32|int8|binary] report the post-SVD quantization
+            pass (bytes + worst-case logit bound; checkpoint stays f32)
   train     [--model text] [--variant dense] [--task polarity]
             [--steps 300] [--out-dir runs]
   eval      --ckpt F [--model text] [--variant dense] [--task polarity]
@@ -44,15 +47,21 @@ COMMANDS:
   fig2      [--use-case by-design|post-training|icl] [--quick] [--steps N]
   report-cost                           cost-model table (E5)
   report-solvers                        solver comparison table (E6)
+  report-quant [--quick]                quantized-decode panel: tok/s,
+            greedy agreement vs f32, bytes and |dlogit| bound per precision
   serve-demo [--requests 200] [--train-steps 60] [--max-sessions 64]
   generate  [--max-new 32] [--temperature 0.0] [--top-k 0] [--seed 42]
             [--prompt "3,17,42" | --prompt-len 16] [--ratio 0.25]
             [--model-seed 42] [--stats] [--sessions 1]
+            [--precision f32|int8|binary]
             [--speculative [--draft-ratio 0.25] [-k 4] [--adaptive-k]]
             KV-cached autoregressive decoding on a synthetic LM
             (artifact-free; random init, factorized when --ratio is given).
             --sessions N decodes N staggered prompts concurrently through
             the continuous-batching stacked step (see SERVING.md).
+            --precision packs the LED/dense linears into int8 or binary
+            once per session and decodes through the quantized kernels
+            (DESIGN.md §12); --stats then profiles at that precision.
             --speculative drafts -k tokens per round on an LED rank-cut
             copy (SVD at --draft-ratio) and verifies them in one stacked
             target pass; greedy output is identical to the plain stream
@@ -200,6 +209,7 @@ fn main() -> Result<()> {
                 None => greenformer::factorize::Rank::Ratio(args.parse_or("--ratio", 0.25)),
             };
             let submodules = args.all("--submodule");
+            let precision: WeightPrecision = args.get_or("--precision", "f32").parse()?;
             let mut params = ParamStore::load_gtz(&input)?;
             let report = auto_fact(
                 &mut params,
@@ -208,6 +218,7 @@ fn main() -> Result<()> {
                     solver,
                     num_iter: args.parse_or("--num-iter", 50),
                     submodules: (!submodules.is_empty()).then_some(submodules),
+                    precision,
                 },
             )?;
             print!("{report}");
@@ -339,6 +350,14 @@ fn main() -> Result<()> {
             let rows = experiments::solver_table(&[0.10, 0.25, 0.50, 0.75], 50);
             print!("{}", experiments::tables::render_solver_table(&rows));
         }
+        "report-quant" => {
+            let cfg = if args.has("--quick") {
+                experiments::QuantPanelCfg::quick()
+            } else {
+                experiments::QuantPanelCfg::default()
+            };
+            print!("{}", experiments::quant_panel(&cfg)?.render());
+        }
         "serve-demo" => {
             serve_demo(
                 &args,
@@ -404,6 +423,7 @@ fn generate_cmd(args: &Args) -> Result<()> {
         top_k: args.parse_or("--top-k", 0usize),
         seed: args.parse_or("--seed", 42u64),
     };
+    let precision: WeightPrecision = args.get_or("--precision", "f32").parse()?;
     let cfg = TextModelCfg::lm_default();
     let mut params = init_text_params(&cfg, args.parse_or("--model-seed", 42u64));
     let mut variant = "dense".to_string();
@@ -416,12 +436,23 @@ fn generate_cmd(args: &Args) -> Result<()> {
                 solver: Solver::Random,
                 num_iter: 0,
                 submodules: None,
+                // The session packs its own quant store below; keep the
+                // factorization pass itself precision-free.
+                precision: WeightPrecision::F32,
             },
         )?;
         variant = format!("led_r{}", (ratio * 100.0).round() as usize);
         println!("factorized {} layers at ratio {ratio} (Random solver)", report.n_factorized());
     }
     let graph = synth_fwd_graph("lm", &variant, 1, &params)?;
+    // Pack the quantized side-table once; sessions share it behind the Arc.
+    let quant_store = if precision == WeightPrecision::F32 {
+        None
+    } else {
+        let (store, qreport) = quantize_led_params(&params, precision)?;
+        print!("{qreport}");
+        Some(std::sync::Arc::new(store))
+    };
     let prompt: Vec<i32> = match args.get("--prompt") {
         Some(s) => s
             .split(',')
@@ -451,7 +482,19 @@ fn generate_cmd(args: &Args) -> Result<()> {
                  speculative sessions concurrently — see ServeConfig.spec in SERVING.md)"
             );
         }
+        if precision != WeightPrecision::F32 {
+            anyhow::bail!(
+                "--speculative runs f32 only: draft/target agreement is calibrated against \
+                 f32 logits; drop --precision"
+            );
+        }
         return generate_speculative_cmd(args, &be, &graph, &params, &prompt, max_new, &sampling);
+    }
+    if sessions > 1 && precision != WeightPrecision::F32 {
+        anyhow::bail!(
+            "--sessions with --precision is not wired through generate_batched yet; \
+             decode one quantized stream at a time"
+        );
     }
     if sessions > 1 {
         // Continuous-batching path: decode N streams concurrently, one
@@ -483,19 +526,29 @@ fn generate_cmd(args: &Args) -> Result<()> {
     }
     let t0 = std::time::Instant::now();
     print!("generated:");
-    let out = lm_generate(&be, &graph, &params, &prompt, max_new, &sampling, |_, t| {
+    let stream = |_: usize, t: i32| {
         print!(" {t}");
         use std::io::Write as _;
         let _ = std::io::stdout().flush();
-    })?;
+    };
+    let out = match &quant_store {
+        Some(store) => {
+            let mut session = DecodeSession::with_quant_store(&graph, &params, store.clone())?;
+            generate_with_session(
+                &be, &graph, &params, &mut session, &prompt, max_new, &sampling, stream,
+            )?
+        }
+        None => lm_generate(&be, &graph, &params, &prompt, max_new, &sampling, stream)?,
+    };
     println!();
     let secs = t0.elapsed().as_secs_f64();
     println!(
-        "{} tokens in {:.3}s ({:.1} tok/s end to end, {} positions cached)",
+        "{} tokens in {:.3}s ({:.1} tok/s end to end, {} positions cached, {} weights)",
         out.tokens.len(),
         secs,
         out.tokens.len() as f64 / secs.max(1e-12),
-        out.positions_used
+        out.positions_used,
+        precision
     );
     if args.has("--stats") {
         let room = cfg.seq.saturating_sub(prompt.len());
@@ -504,12 +557,12 @@ fn generate_cmd(args: &Args) -> Result<()> {
             return Ok(());
         }
         let budget = room.min(max_new);
-        let lat = greenformer::eval::measure_decode_latency(
-            &be, &graph, &params, &prompt, budget, 1, 3,
+        let lat = greenformer::eval::measure_decode_latency_prec(
+            &be, &graph, &params, precision, &prompt, budget, 1, 3,
         )?;
         println!(
-            "decode profile: prefill {:.2} ms ({} tok), per-token p50 {:.3} ms p95 {:.3} ms, \
-             {:.1} tok/s steady-state",
+            "decode profile ({precision}): prefill {:.2} ms ({} tok), per-token p50 {:.3} ms \
+             p95 {:.3} ms, {:.1} tok/s steady-state",
             lat.prefill_s * 1e3,
             lat.prefill_tokens,
             lat.per_token_p50_s * 1e3,

@@ -70,6 +70,7 @@ fn auto_fact_smoke_shrinks_params_with_bounded_error() {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -145,6 +146,7 @@ fn auto_fact_smoke_respects_submodule_filter() {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: Some(vec!["fc1".to_string()]),
+            ..Default::default()
         },
     )
     .unwrap();

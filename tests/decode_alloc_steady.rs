@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
 use greenformer::backend::{Backend, DecodeSession, NativeBackend};
+use greenformer::factorize::WeightPrecision;
 
 struct CountingAlloc;
 
@@ -93,4 +94,38 @@ fn steady_state_decode_steps_do_not_allocate_in_the_interpreter() {
     // The returned (vocab,) Tensor is the only per-token allocation the
     // interpreter performs; a few allocs cover its data + shape vectors.
     assert!(first <= 4, "steady-state decode step made {first} allocations");
+
+    // Same contract at int8 (DESIGN.md §12): the session pre-packs the
+    // quantized weights once at construction, activation quantization runs
+    // in thread-local scratch sized during warmup, and the steady-state
+    // step touches the allocator only for the logits tensor.
+    let mut session =
+        DecodeSession::new_with_precision(&graph, &params, WeightPrecision::Int8).unwrap();
+    assert_eq!(session.precision(), WeightPrecision::Int8);
+    assert!(session.quant_bytes() > 0, "int8 session must hold a packed store");
+
+    be.run_decode_step(&graph, &params, &mut session, &[1, 2, 3, 4]).unwrap();
+    for t in 0..2 {
+        be.run_decode_step(&graph, &params, &mut session, &[t]).unwrap();
+    }
+    session.reset_scratch_stats();
+    let mut per_step = Vec::new();
+    for t in 0..8 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let logits = be.run_decode_step(&graph, &params, &mut session, &[10 + t]).unwrap();
+        let after = ALLOCS.load(Ordering::Relaxed);
+        per_step.push(after - before);
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(
+        session.scratch_alloc_misses(),
+        0,
+        "int8 workspace had to allocate in steady state"
+    );
+    let first = per_step[0];
+    assert!(
+        per_step.iter().all(|&c| c == first),
+        "int8 per-step allocation counts drifted: {per_step:?}"
+    );
+    assert!(first <= 4, "steady-state int8 decode step made {first} allocations");
 }

@@ -141,6 +141,7 @@ fn rust_factorized_checkpoint_loads_into_led_graph() {
             solver: Solver::Svd,
             num_iter: 30,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -187,6 +188,7 @@ fn snmf_factorized_checkpoint_also_runs() {
             solver: Solver::Snmf,
             num_iter: 15,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -70,6 +70,7 @@ fn by_design_led_model_learns_polarity() {
             solver: Solver::Svd,
             num_iter: 10,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();

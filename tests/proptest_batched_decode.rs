@@ -59,6 +59,7 @@ fn factorize(params: &mut ParamStore, seed: u64) {
             solver: Solver::Random,
             num_iter: 0,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();

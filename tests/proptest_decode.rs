@@ -61,6 +61,7 @@ fn kv_cached_decode_matches_full_recompute_dense_and_led() {
                     solver: Solver::Random,
                     num_iter: 0,
                     submodules: None,
+                    ..Default::default()
                 },
             )
             .unwrap();

@@ -1,0 +1,306 @@
+//! Quantization-correctness property layer (DESIGN.md §12).
+//!
+//! Four pins, from kernel to end-to-end:
+//!
+//! (a) The dispatching int8 GEMM (`qmatmul_bias_into`) is **bit-identical**
+//!     to the scalar reference over adversarial shapes — m=1 (decode GEMV),
+//!     k=0 (epilogue-only), non-divisible tile remainders, and shapes large
+//!     enough to take the packed-serial and pooled paths. i8×i8→i32
+//!     accumulation is exact and order-free, and every path performs the
+//!     identical single f32 dequant per element, so equality is exact, not
+//!     approximate.
+//! (b) Per-output-channel quantize→dequantize error is ≤ scale/2 per
+//!     element, and the per-channel scale is exactly `maxabs/127` on
+//!     single-channel inputs.
+//! (c) The binary ±1 popcount matvec equals the f32 matvec **exactly** on
+//!     ±1 matrices (`k − 2·popcount` arithmetic is integer-exact in f32).
+//! (d) End to end: int8 LED decode logits stay within the
+//!     `quantize_led_params` report's propagated worst-case bound, and the
+//!     greedy token streams match f32 on ≥ 18 of 20 seeded configs
+//!     (constants calibrated offline; divergent seeds are printed).
+//!
+//! In-tree generator (`util::Pcg64`), same methodology note as
+//! proptest_coordinator.rs.
+
+use std::sync::Arc;
+
+use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{
+    generate_with_session, Backend, DecodeSession, NativeBackend, SamplingCfg,
+};
+use greenformer::factorize::{
+    auto_fact, quantize_led_params, AutoFactConfig, Rank, Solver, WeightPrecision,
+};
+use greenformer::linalg::quant::{binarize_row_into, quant_scale};
+use greenformer::linalg::{
+    qmatmul_bias_into, qmatmul_into_reference, quantize_rows_into, Activation, BinaryMatrix,
+    QuantizedMatrix,
+};
+use greenformer::util::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+// ---------------------------------------------------------------------------
+// (a) dispatching int8 GEMM ≡ scalar reference, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_gemm_bitwise_equals_reference_on_adversarial_shapes() {
+    let mut rng = Pcg64::seeded(41);
+    // Forced corners: the m=1 GEMV path, k=0 epilogue-only, every-axis tile
+    // remainders (MR=NR=8), the packed-serial threshold (≥ 2^15 MACs) and
+    // the pooled threshold (≥ 2^19 MACs, pool-vs-serial agreement).
+    let mut shapes = vec![
+        (1, 7, 9),
+        (1, 64, 256),
+        (1, 0, 5),
+        (3, 0, 4),
+        (2, 5, 1),
+        (8, 8, 8),
+        (9, 13, 17),
+        (33, 40, 31),
+        (96, 80, 96),
+    ];
+    for _ in 0..12 {
+        shapes.push((1 + rng.below(24), rng.below(48), 1 + rng.below(40)));
+    }
+    for (case, &(m, k, n)) in shapes.iter().enumerate() {
+        let w = rand_vec(&mut rng, k * n, 2.0);
+        let x = rand_vec(&mut rng, m * k, 3.0);
+        let qw = QuantizedMatrix::from_f32(k, n, &w);
+        let mut xq = Vec::new();
+        let mut xscale = Vec::new();
+        quantize_rows_into(m, k, &x, &mut xq, &mut xscale);
+        let bias = rand_vec(&mut rng, n, 0.5);
+        for act in [Activation::None, Activation::Gelu, Activation::Relu] {
+            for b in [None, Some(bias.as_slice())] {
+                // Both sides accumulate (`+=`) into the same nonzero
+                // baseline so the pre-existing-output path is pinned too.
+                let base = rand_vec(&mut rng, m * n, 0.25);
+                let mut got = base.clone();
+                let mut want = base;
+                qmatmul_bias_into(
+                    m,
+                    k,
+                    n,
+                    &xq,
+                    &xscale,
+                    qw.values(),
+                    qw.scales(),
+                    b,
+                    act,
+                    &mut got,
+                );
+                qmatmul_into_reference(
+                    m,
+                    k,
+                    n,
+                    &xq,
+                    &xscale,
+                    qw.values(),
+                    qw.scales(),
+                    b,
+                    act,
+                    &mut want,
+                );
+                for (i, (g, e)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        e.to_bits(),
+                        "case {case} ({m}x{k}x{n}, {act:?}, bias={}) diverged at {i}: \
+                         {g} vs {e}",
+                        b.is_some()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) round-trip error ≤ scale/2; single-channel scales exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn int8_roundtrip_within_half_scale_and_single_channel_scale_exact() {
+    let mut rng = Pcg64::seeded(42);
+    for _ in 0..25 {
+        let k = 1 + rng.below(40);
+        let n = 1 + rng.below(40);
+        let w = rand_vec(&mut rng, k * n, 4.0);
+        let qw = QuantizedMatrix::from_f32(k, n, &w);
+        let deq = qw.dequantize();
+        for j in 0..n {
+            let s = qw.scales()[j];
+            for p in 0..k {
+                let err = (w[p * n + j] - deq[p * n + j]).abs();
+                assert!(
+                    err <= s * 0.5 + 1e-7,
+                    "({k}x{n}) col {j}: |{}-{}|={err} > scale/2={}",
+                    w[p * n + j],
+                    deq[p * n + j],
+                    s * 0.5
+                );
+            }
+        }
+    }
+    // Single-channel input: the per-channel scale is exactly maxabs/127
+    // (same f32 division quant_scale performs, no reordering slack).
+    let col = vec![0.5f32, -3.25, 1.75, 0.125];
+    let qw = QuantizedMatrix::from_f32(4, 1, &col);
+    assert_eq!(qw.scales().len(), 1);
+    assert_eq!(qw.scales()[0].to_bits(), quant_scale(3.25).to_bits());
+    assert_eq!(qw.scales()[0].to_bits(), (3.25f32 / 127.0).to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// (c) binary popcount matvec ≡ f32 matvec on ±1 matrices, exactly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn binary_popcount_matvec_exact_on_pm1_matrices() {
+    let mut rng = Pcg64::seeded(43);
+    for case in 0..25 {
+        let k = 1 + rng.below(150); // crosses the 64-bit word boundary
+        let n = 1 + rng.below(20);
+        let rows = 1 + rng.below(3);
+        let sign = |rng: &mut Pcg64| if rng.below(2) == 0 { 1.0f32 } else { -1.0 };
+        let w: Vec<f32> = (0..k * n).map(|_| sign(&mut rng)).collect();
+        let x: Vec<f32> = (0..rows * k).map(|_| sign(&mut rng)).collect();
+        let bias = rand_vec(&mut rng, n, 0.5);
+        let bm = BinaryMatrix::from_f32(k, n, &w);
+        // ±1 columns: sumabs/k scale is exactly 1, so dequant is exact.
+        assert!(bm.scales().iter().all(|&s| s == 1.0), "case {case}: scales");
+        for b in [None, Some(bias.as_slice())] {
+            let mut got = vec![0.0f32; rows * n];
+            bm.apply(rows, &x, b, Activation::Relu, &mut got);
+            for i in 0..rows {
+                for j in 0..n {
+                    // ±1 dot products are small integers — exact in f32 —
+                    // and both sides then run the identical relu/bias math.
+                    let dot: i32 = (0..k)
+                        .map(|p| (x[i * k + p] * w[p * n + j]) as i32)
+                        .sum();
+                    let mut want = dot as f32 + b.map_or(0.0, |bb| bb[j]);
+                    want = want.max(0.0);
+                    assert_eq!(
+                        got[i * n + j].to_bits(),
+                        want.to_bits(),
+                        "case {case} ({rows}x{k}x{n}) at ({i},{j}): {} vs {want}",
+                        got[i * n + j]
+                    );
+                }
+            }
+        }
+    }
+    // Zero / empty rows binarize with the unit-scale convention.
+    let mut bits = Vec::new();
+    assert_eq!(binarize_row_into(&[0.0, 0.0, 0.0], &mut bits), 1.0);
+    assert_eq!(binarize_row_into(&[], &mut bits), 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// (d) end-to-end: int8 LED decode vs f32 — logit bound + greedy agreement
+// ---------------------------------------------------------------------------
+
+/// Constants calibrated offline with a bit-exact model of this pipeline:
+/// 20 seeded configs at these dims agree on 19/20 greedy streams (seed 17
+/// diverges on a ~1e-2 logit margin). The assertion allows one more flip
+/// (≥ 18) for cross-platform libm (tanh in GELU) variation.
+const E2E_CFG: TextModelCfg = TextModelCfg {
+    vocab: 12,
+    seq: 12,
+    d: 48,
+    heads: 4,
+    layers: 1,
+    ff: 96,
+    classes: 12,
+};
+const E2E_SEEDS: u64 = 20;
+const E2E_PROMPT_LEN: usize = 4;
+const E2E_NEW_TOKENS: usize = 3;
+const E2E_MIN_MATCHES: usize = 18;
+
+#[test]
+fn int8_led_decode_stays_within_logit_bound_and_greedy_agreement_floor() {
+    let backend = NativeBackend::new();
+    let greedy = SamplingCfg::greedy();
+    let mut matches = 0usize;
+    let mut divergences = Vec::new();
+    for seed in 0..E2E_SEEDS {
+        let mut params = init_text_params(&E2E_CFG, seed);
+        auto_fact(
+            &mut params,
+            &AutoFactConfig {
+                rank: Rank::Ratio(0.5),
+                solver: Solver::Random,
+                num_iter: 0,
+                submodules: None,
+                precision: WeightPrecision::F32,
+            },
+        )
+        .unwrap();
+        let mut graph = synth_fwd_graph("lm", "led_r50", 1, &params).unwrap();
+        // The calibrated constants use 4 heads; synth pins the lm default.
+        graph.config.insert("heads".to_string(), E2E_CFG.heads);
+        let mut prng = Pcg64::new(seed, 11);
+        let prompt: Vec<i32> =
+            (0..E2E_PROMPT_LEN).map(|_| prng.below(E2E_CFG.vocab) as i32).collect();
+
+        let (store, report) = quantize_led_params(&params, WeightPrecision::Int8).unwrap();
+        let bound = report
+            .logit_bound
+            .expect("LM-shaped checkpoint must yield a propagated logit bound");
+        assert!(bound.is_finite() && bound > 0.0, "seed {seed}: bound {bound}");
+        let store = Arc::new(store);
+
+        // Prefill logits: |int8 − f32| must stay within the derived bound
+        // at every vocab position (the bound is a loose outer envelope —
+        // this pins soundness, not tightness).
+        let mut s_f32 = DecodeSession::new(&graph, &params).unwrap();
+        let mut s_i8 = DecodeSession::with_quant_store(&graph, &params, store.clone()).unwrap();
+        let l_f32 = backend.run_decode_step(&graph, &params, &mut s_f32, &prompt).unwrap();
+        let l_i8 = backend.run_decode_step(&graph, &params, &mut s_i8, &prompt).unwrap();
+        let max_diff = l_f32
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(l_i8.as_f32().unwrap())
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_diff <= bound,
+            "seed {seed}: max |Δlogit| {max_diff:.6} exceeds derived bound {bound:.6}"
+        );
+
+        // Greedy streams from fresh sessions.
+        let mut s_f32 = DecodeSession::new(&graph, &params).unwrap();
+        let out_f32 = generate_with_session(
+            &backend, &graph, &params, &mut s_f32, &prompt, E2E_NEW_TOKENS, &greedy, |_, _| {},
+        )
+        .unwrap();
+        let mut s_i8 = DecodeSession::with_quant_store(&graph, &params, store).unwrap();
+        assert_eq!(s_i8.precision(), WeightPrecision::Int8);
+        let out_i8 = generate_with_session(
+            &backend, &graph, &params, &mut s_i8, &prompt, E2E_NEW_TOKENS, &greedy, |_, _| {},
+        )
+        .unwrap();
+        if out_f32.tokens == out_i8.tokens {
+            matches += 1;
+        } else {
+            divergences.push((seed, out_f32.tokens.clone(), out_i8.tokens.clone()));
+        }
+    }
+    for (seed, f, q) in &divergences {
+        println!("greedy divergence at seed {seed}: f32={f:?} int8={q:?}");
+    }
+    println!("greedy agreement: {matches}/{E2E_SEEDS} seeded configs");
+    assert!(
+        matches >= E2E_MIN_MATCHES,
+        "only {matches}/{E2E_SEEDS} greedy streams matched (floor {E2E_MIN_MATCHES}); \
+         divergent seeds: {:?}",
+        divergences.iter().map(|(s, _, _)| *s).collect::<Vec<_>>()
+    );
+}

@@ -67,6 +67,7 @@ fn random_solver_draft(params: &ParamStore, seed: u64) -> ParamStore {
             solver: Solver::Random,
             num_iter: 0,
             submodules: None,
+            ..Default::default()
         },
     )
     .unwrap();

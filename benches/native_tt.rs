@@ -1,0 +1,67 @@
+//! Artifact-free TT-decode bench: the DESIGN.md §13 solver-family axis
+//! (dense / LED / TT) on the native KV-cached decode path.
+//!
+//! Runs the [`greenformer::experiments::tt_panel`] harness: one LM whose
+//! linear weights are Kronecker-structured (exactly TT-rank-1 at two
+//! modes, full-rank to the flat SVD — the regime where the TT family wins
+//! and LED's Eq.-1 gate cannot), factorized once with the LED solver and
+//! once with the TT solver, then per variant the greedy decode throughput,
+//! agreement of the greedy token streams with dense over seeded prompts,
+//! and serialized weight bytes.
+//!
+//! Prints the panel's aligned table plus a machine-readable
+//! `BENCH_TT {...}` JSON line for `python/tools/collect_bench.py`.
+//!
+//! Env: GREENFORMER_BENCH_TT=quick switches to the small CI preset
+//! (same preset as the library's panel smoke test).
+
+use greenformer::experiments::{tt_panel, TtPanelCfg};
+
+fn main() {
+    let quick = std::env::var("GREENFORMER_BENCH_TT")
+        .map(|v| v == "quick")
+        .unwrap_or(false);
+    let cfg = if quick { TtPanelCfg::quick() } else { TtPanelCfg::default() };
+    println!(
+        "== native TT decode (d={} ff={} layers={} vocab={}, energy={}, {} mode) ==",
+        cfg.lm.d,
+        cfg.lm.ff,
+        cfg.lm.layers,
+        cfg.lm.vocab,
+        cfg.energy,
+        if quick { "quick" } else { "full" }
+    );
+    let panel = tt_panel(&cfg).expect("tt_panel");
+    print!("{}", panel.render());
+
+    let row = |v: &str| {
+        panel
+            .points
+            .iter()
+            .find(|pt| pt.variant.starts_with(v))
+            .expect("panel row")
+    };
+    let (dense, led, tt) = (row("dense"), row("led"), row("tt"));
+    println!(
+        "BENCH_TT {{\"prompts\":{},\"new_tokens\":{},\"quick\":{quick},\
+         \"dense_tps\":{:.2},\"led_tps\":{:.2},\"tt_tps\":{:.2},\
+         \"led_speedup\":{:.3},\"tt_speedup\":{:.3},\
+         \"led_agreement\":{:.3},\"tt_agreement\":{:.3},\
+         \"dense_bytes\":{},\"led_bytes\":{},\"tt_bytes\":{},\
+         \"led_compression\":{:.4},\"tt_compression\":{:.4}}}",
+        panel.prompts,
+        panel.new_tokens,
+        dense.tokens_per_sec,
+        led.tokens_per_sec,
+        tt.tokens_per_sec,
+        led.speedup,
+        tt.speedup,
+        led.agreement,
+        tt.agreement,
+        dense.bytes,
+        led.bytes,
+        tt.bytes,
+        led.compression,
+        tt.compression,
+    );
+}

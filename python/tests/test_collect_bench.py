@@ -9,7 +9,7 @@ Hermetic (no cargo, no jax): exercises the pure parsing layer only.
 
 import pytest
 
-from tools.collect_bench import MARKER_RE, parse_bench_lines
+from tools.collect_bench import DEFAULT_BENCHES, HIGHLIGHTS, QUICK_ENV, MARKER_RE, parse_bench_lines
 
 
 def test_parses_markers_and_ignores_ordinary_output():
@@ -54,6 +54,16 @@ def test_valid_json_non_object_payload_raises():
     # regex requires braces, so craft an object-looking string via nesting.
     with pytest.raises(ValueError):
         parse_bench_lines('BENCH_QUANT {"a"} \n')
+
+
+def test_tt_bench_wired_into_default_set():
+    # The TT panel bench rides the same collector: default set, quick env
+    # knob, and highlight fields all present.
+    assert "native_tt" in DEFAULT_BENCHES
+    assert QUICK_ENV.get("GREENFORMER_BENCH_TT") == "quick"
+    assert "tt_compression" in HIGHLIGHTS["BENCH_TT"]
+    got = parse_bench_lines('BENCH_TT {"tt_compression":0.05,"tt_agreement":1.0}\n')
+    assert got == [("BENCH_TT", {"tt_compression": 0.05, "tt_agreement": 1.0})]
 
 
 def test_marker_regex_shape_unchanged():

@@ -33,7 +33,7 @@ import re
 import subprocess
 import sys
 
-DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving", "native_quant"]
+DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving", "native_quant", "native_tt"]
 
 # Env knobs that keep the --quick run short enough for CI.
 QUICK_ENV = {
@@ -44,6 +44,7 @@ QUICK_ENV = {
     "GREENFORMER_BENCH_SPEC_K": "3",
     "GREENFORMER_BENCH_TRAIN_STEPS": "8",
     "GREENFORMER_BENCH_QUANT": "quick",
+    "GREENFORMER_BENCH_TT": "quick",
 }
 
 # Headline fields worth surfacing per marker (everything is persisted; these
@@ -65,6 +66,12 @@ HIGHLIGHTS = {
         "int8_agreement",
         "binary_agreement",
         "int8_compression",
+    ],
+    "BENCH_TT": [
+        "tt_speedup",
+        "tt_agreement",
+        "tt_compression",
+        "led_compression",
     ],
 }
 

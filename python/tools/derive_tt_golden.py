@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Derive the pinned TT-SVD constants for tests/golden_data.rs.
+
+Independent numpy reimplementation of the TT-SVD sweep in
+``rust/src/factorize/tt.rs`` (grouped-pair permutation, per-unfolding
+energy-budgeted truncation, diag(s)@Vt carry), over the same seed-0 weight
+the Rust test regenerates from its own PCG64. The pinned quantities are all
+gauge-invariant — internal TT ranks, relative reconstruction error, and
+row-0 probes of the reconstructed weight — so a LAPACK-vs-Jacobi SVD
+difference cannot shift them beyond float noise as long as the truncation
+gaps are healthy (this script asserts they are before printing anything).
+
+The weight is a 4-term Kronecker sum with geometrically decaying scales
+(0.5**l), so the single two-mode unfolding has singular-value gaps of ~2x
+at every candidate rank: the τ = 0.95 budget lands on rank 3 with wide
+margins, and the truncated subspace is well-conditioned — exactly what a
+cross-implementation pin needs.
+
+Usage:
+    python3 python/tools/derive_tt_golden.py
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+F = np.float32
+MASK128 = (1 << 128) - 1
+MULT = 0x2360ED051FC65DA44385DF649FCCF645
+
+M = N = 64
+MODES = 2
+ENERGY = 0.95
+TERMS = 4
+
+
+# ---------------------------------------------------------------------------
+# PCG64 (XSL-RR 128/64) — mirror of rust/src/util/rng.rs
+# ---------------------------------------------------------------------------
+
+class Pcg64:
+    def __init__(self, seed: int, stream: int):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK128
+        self.next_u64()
+        self.state = (self.state + (seed & 0xFFFFFFFFFFFFFFFF)) & MASK128
+        self.next_u64()
+
+    @classmethod
+    def seeded(cls, seed: int) -> "Pcg64":
+        return cls(seed, 0)
+
+    def next_u64(self) -> int:
+        self.state = (self.state * MULT + self.inc) & MASK128
+        rot = self.state >> 122
+        xsl = ((self.state >> 64) ^ self.state) & 0xFFFFFFFFFFFFFFFF
+        return ((xsl >> rot) | (xsl << (64 - rot) if rot else 0)) & 0xFFFFFFFFFFFFFFFF
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self) -> float:
+        while True:
+            u1 = self.next_f64()
+            if u1 > 1e-12:
+                u2 = self.next_f64()
+                return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def fill_normal(self, n: int, sigma: float) -> np.ndarray:
+        s = F(sigma)
+        return np.array([F(self.normal()) * s for _ in range(n)], dtype=F)
+
+
+# ---------------------------------------------------------------------------
+# Mirrors of rust/src/factorize/tt.rs
+# ---------------------------------------------------------------------------
+
+def mode_dims(dim: int, modes: int) -> list[int]:
+    dims, rem = [], dim
+    for slots in range(modes, 1, -1):
+        target = rem ** (1.0 / slots)
+        best, best_gap = 1, float("inf")
+        for d in range(1, rem + 1):
+            if rem % d == 0 and abs(d - target) < best_gap:
+                best, best_gap = d, abs(d - target)
+        dims.append(best)
+        rem //= best
+    dims.append(rem)
+    return dims
+
+
+def permute_w_to_t(w: np.ndarray, m_dims: list[int], n_dims: list[int]) -> np.ndarray:
+    d = len(m_dims)
+    # (i_1..i_d, j_1..j_d) -> interleaved (i_1, j_1, .., i_d, j_d).
+    t = w.reshape(m_dims + n_dims)
+    perm = [axis for k in range(d) for axis in (k, d + k)]
+    return np.ascontiguousarray(t.transpose(perm))
+
+
+def permute_t_to_w(t: np.ndarray, m_dims: list[int], n_dims: list[int]) -> np.ndarray:
+    d = len(m_dims)
+    inter = t.reshape([dim for k in range(d) for dim in (m_dims[k], n_dims[k])])
+    perm = [2 * k for k in range(d)] + [2 * k + 1 for k in range(d)]
+    m = int(np.prod(m_dims))
+    return np.ascontiguousarray(inter.transpose(perm)).reshape(m, int(np.prod(n_dims)))
+
+
+def rank_for_energy(energies: np.ndarray, tau: float) -> int:
+    total = float(energies.sum())
+    target = tau * total
+    acc = 0.0
+    for i, e in enumerate(energies):
+        acc += float(e)
+        if acc >= target - 1e-12:
+            return i + 1
+    return len(energies)
+
+
+def tt_svd(w: np.ndarray, modes: int, energy: float):
+    m_dims, n_dims = mode_dims(w.shape[0], modes), mode_dims(w.shape[1], modes)
+    g = [m_dims[k] * n_dims[k] for k in range(modes)]
+    total_energy = float((w.astype(np.float64) ** 2).sum())
+    budget = (1.0 - energy) * total_energy / (modes - 1)
+
+    c = permute_w_to_t(w, m_dims, n_dims).reshape(-1)
+    r_prev, cores, margins = 1, [], []
+    for k in range(modes - 1):
+        rows = r_prev * g[k]
+        mat = c.reshape(rows, -1)
+        u, s, vt = np.linalg.svd(mat.astype(np.float64), full_matrices=False)
+        energies = s * s
+        total = float(energies.sum())
+        tau_step = max((total - budget) / total, 0.0) if total > 0 else 0.0
+        r = max(rank_for_energy(energies, tau_step), 1)
+        r = min(r, len(s))
+        # Robustness of the pin: the cumulative-energy crossing and the
+        # spectral gap at the cut must both be wide, or a Jacobi-vs-LAPACK
+        # difference could flip the selected rank between implementations.
+        cum = np.cumsum(energies) / total
+        lo = cum[r - 2] if r >= 2 else 0.0
+        margins.append((tau_step - lo, cum[r - 1] - tau_step, s[r - 1] / s[r] if r < len(s) else np.inf))
+        core = u[:, :r].astype(F)
+        cores.append(core.reshape(r_prev, m_dims[k], n_dims[k], r))
+        c = (np.diag(s[:r]) @ vt[:r]).astype(F).reshape(-1)
+        r_prev = r
+    cores.append(c.reshape(r_prev, m_dims[-1], n_dims[-1], 1))
+    return m_dims, n_dims, cores, margins
+
+
+def tt_reconstruct(cores, m_dims, n_dims) -> np.ndarray:
+    acc = np.array([[1.0]], dtype=np.float64)
+    p = 1
+    for c in cores:
+        r_in, m, n, r_out = c.shape
+        acc = (acc.reshape(p, r_in) @ c.astype(np.float64).reshape(r_in, -1)).reshape(
+            p * m * n, r_out
+        )
+        p *= m * n
+    t = acc.reshape([m_dims[k] * n_dims[k] for k in range(len(m_dims))])
+    return permute_t_to_w(t.astype(F), m_dims, n_dims)
+
+
+def main() -> None:
+    rng = Pcg64.seeded(0)
+    w = np.zeros((M, N), dtype=F)
+    for l in range(TERMS):
+        a = rng.fill_normal(64, 1.0).reshape(8, 8)
+        b = rng.fill_normal(64, 1.0).reshape(8, 8)
+        w += F(0.5**l) * np.kron(a, b)
+
+    m_dims, n_dims, cores, margins = tt_svd(w, MODES, ENERGY)
+    ranks = [c.shape[3] for c in cores[:-1]]
+    for lo, hi, gap in margins:
+        assert lo > 1e-3 and hi > 1e-3, f"fragile energy crossing: {margins}"
+        assert gap > 1.2, f"fragile spectral gap at the cut: {margins}"
+
+    rec = tt_reconstruct(cores, m_dims, n_dims)
+    err = float(np.linalg.norm((w - rec).astype(np.float64)) / np.linalg.norm(w.astype(np.float64)))
+    bound = math.sqrt(1.0 - ENERGY)
+    assert err <= bound + 1e-6, f"recon err {err} above sqrt(1-tau) {bound}"
+
+    probes = [float(rec[0, c]) for c in range(0, 64, 8)]
+    n_params = sum(c.size for c in cores)
+
+    print(f"// seed-0 {M}x{N} Kronecker-sum weight, modes={MODES}, energy={ENERGY}")
+    print(f"// margins (lo, hi, gap) per unfolding: {margins}")
+    print(f"const TT_GOLDEN_RANKS: &[usize] = &{ranks};")
+    print(f"const TT_GOLDEN_N_PARAMS: usize = {n_params};")
+    print(f"const TT_GOLDEN_RECON_ERR: f64 = {err:.6};")
+    print("#[rustfmt::skip]")
+    row = ", ".join(f"{p:.6}" for p in probes)
+    print(f"const TT_GOLDEN_ROW0_PROBES: [f32; 8] = [{row}];")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,12 +18,16 @@
 //! `acc + ±0.0` leaves every accumulator's value unchanged, and no
 //! downstream op distinguishes `-0.0` from `+0.0` (DESIGN.md §10–§11). The
 //! KV-cache ≡ full-recompute equivalence is pinned for dense and LED models
-//! by `tests/proptest_decode.rs`.
+//! by `tests/proptest_decode.rs` and for TT models by `tests/proptest_tt.rs`.
 //!
-//! Because LED factors keep each layer's I/O signature, one decode path
-//! serves any mixture of dense and factorized layers — the per-token GEMMs
-//! shrink with the rank, which is exactly where Greenformer's speedup shows
-//! up on the decode hot path (`benches/native_decode.rs` pins the number).
+//! Because LED factors and TT core chains keep each layer's I/O signature,
+//! one decode path serves any mixture of dense and factorized layers — the
+//! per-token GEMMs shrink with the rank, which is exactly where
+//! Greenformer's speedup shows up on the decode hot path
+//! (`benches/native_decode.rs` pins the number; `benches/native_tt.rs` the
+//! TT variant). TT dispatch rides the same pre-resolved `LinearNames`, so
+//! steady-state decode stays allocation-free for TT sessions too
+//! (`tests/decode_alloc_steady.rs`).
 //!
 //! Sampling ([`SamplingCfg`] / [`sample_token`]) is driven by the seeded
 //! [`Pcg64`] stream, so a fixed seed reproduces the same token stream
@@ -515,7 +519,7 @@ fn decode_chunk(
         }
         ws.give(attn);
 
-        // FFN sublayer (dense or LED — the linear dispatches on keys); the
+        // FFN sublayer (dense, LED, or TT — the linear dispatches on keys); the
         // GELU runs in fc1's GEMM epilogue.
         xn.copy_from_slice(&x);
         layernorm_named(params, &names.ln2_g, &names.ln2_bias, d, &mut xn)?;

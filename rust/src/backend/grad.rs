@@ -26,6 +26,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail};
 
+use crate::factorize::tt::{tt_core_grads, tt_materialize, TtCoreView, TT_MAX_MODES};
 use crate::linalg::matrix::matmul_into;
 use crate::linalg::workspace::{with_thread_ws, Workspace};
 use crate::runtime::GraphSpec;
@@ -155,8 +156,10 @@ fn add_into(dst: &mut [f32], src: &[f32]) {
 /// Backward through [`apply_linear`]: accumulates the weight/bias gradients
 /// under `prefix` into `grads` and returns `dx(rows, k)`. `x` is the layer's
 /// forward input, `dy(rows, n)` the gradient at its output. Dispatches dense
-/// `w` vs LED/CED `a·b` exactly like the forward (4-D conv factors operate
-/// on their collapsed 2-D views, so the same code covers CED).
+/// `w` vs LED/CED `a·b` vs TT `tt0..ttK` exactly like the forward (4-D conv
+/// factors operate on their collapsed 2-D views, so the same code covers
+/// CED; TT cores get per-core gradients via
+/// [`crate::factorize::tt::tt_core_grads`]).
 pub fn linear_bwd(
     params: &ParamStore,
     prefix: &str,
@@ -235,8 +238,42 @@ fn linear_bwd_ws(
         ws.give(at);
         ws.give(dh);
         ws.give(h);
+    } else if params.get(&pname(prefix, "tt0")).is_some() {
+        // TT core chain: gather the views, materialize W once, push the
+        // dense weight gradient through the per-core environment GEMMs.
+        let mut views = [TtCoreView::empty(); TT_MAX_MODES];
+        let mut nc = 0;
+        while nc < TT_MAX_MODES {
+            let Some(t) = params.get(&pname(prefix, &format!("tt{nc}"))) else {
+                break;
+            };
+            views[nc] = TtCoreView::of_tensor(t)?;
+            nc += 1;
+        }
+        let views = &views[..nc];
+        let (wm, wn, wd) =
+            tt_materialize(views).map_err(|e| anyhow!("{prefix}: {e}"))?;
+        if wm != k {
+            bail!("{prefix}: input dim {k} does not match TT chain {wm}x{wn}");
+        }
+        n = wn;
+        if dy.len() != rows * n {
+            bail!("{prefix}: dy len {} != rows {rows} x n {n}", dy.len());
+        }
+        // dW(k, n) = x^T(k, rows) @ dy(rows, n), then split per core.
+        let xt = transpose_ws(rows, k, x, ws);
+        let dw = mm_ws(k, rows, n, &xt, dy, ws);
+        ws.give(xt);
+        for (idx, gk) in tt_core_grads(views, &dw)?.into_iter().enumerate() {
+            grads.acc(pname(prefix, &format!("tt{idx}")), gk);
+        }
+        ws.give(dw);
+        // dx(rows, k) = dy(rows, n) @ W^T(n, k)
+        let wt = transpose_ws(k, n, &wd, ws);
+        dx = mm(rows, n, k, dy, &wt);
+        ws.give(wt);
     } else {
-        bail!("no linear weights (w or a/b) under group {prefix:?}");
+        bail!("no linear weights (w, a/b, or tt0..) under group {prefix:?}");
     }
     if let Some(bias) = params.get(&pname(prefix, "bias")) {
         if bias.as_f32()?.len() != n {

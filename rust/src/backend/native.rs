@@ -22,8 +22,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail};
 
+use crate::factorize::tt::{tt_apply_ws, TtCoreView, TT_MAX_MODES};
 use crate::factorize::QuantStore;
-use crate::linalg::gemm::{matmul_bias_into, Activation};
+use crate::linalg::gemm::{apply_epilogue, matmul_bias_into, Activation};
 use crate::linalg::matrix::matmul_into;
 use crate::linalg::workspace::{with_thread_ws, Workspace};
 use crate::model::classify;
@@ -557,8 +558,9 @@ pub(crate) fn pname(prefix: &str, leaf: &str) -> String {
 }
 
 /// Pre-resolved parameter names of one linear/conv group (`w`, `a`, `b`,
-/// `bias` leaves). Hot paths build these once (per request, or per decode
-/// *session*) so the per-op interpreter loop does zero string formatting.
+/// `tt0..ttK`, `bias` leaves). Hot paths build these once (per request, or
+/// per decode *session*) so the per-op interpreter loop does zero string
+/// formatting.
 #[derive(Clone, Debug)]
 pub(crate) struct LinearNames {
     /// The group prefix, kept for error messages.
@@ -566,6 +568,7 @@ pub(crate) struct LinearNames {
     w: String,
     a: String,
     b: String,
+    tt: Vec<String>,
     bias: String,
 }
 
@@ -577,18 +580,21 @@ impl LinearNames {
             w: pname(prefix, "w"),
             a: pname(prefix, "a"),
             b: pname(prefix, "b"),
+            tt: (0..TT_MAX_MODES).map(|k| pname(prefix, &format!("tt{k}"))).collect(),
             bias: pname(prefix, "bias"),
         }
     }
 }
 
 /// Workspace-backed fused linear: `y(rows, n) = act(x(rows, k) @ W + bias)`,
-/// dispatching dense `w` vs LED/CED `a·b` on the keys present (the layers.py
-/// contract). The bias add and activation run inside the GEMM epilogue
-/// (bit-identical to the unfused sequence), factorized layers run as two
-/// GEMMs through the rank bottleneck, and `y` (plus the LED intermediate)
-/// comes from `ws` — callers `give` it back when done, making steady-state
-/// interpretation allocation-free. Returns `(n, y)`.
+/// dispatching dense `w` vs LED/CED `a·b` vs TT `tt0..ttK` cores on the keys
+/// present (the layers.py contract). The bias add and activation run inside
+/// the GEMM epilogue (bit-identical to the unfused sequence), factorized
+/// layers run as two GEMMs through the rank bottleneck, TT layers contract
+/// the core chain left-to-right ([`tt_apply_ws`]) and then apply the same
+/// per-row epilogue, and `y` (plus intermediates) comes from `ws` — callers
+/// `give` it back when done, making steady-state interpretation
+/// allocation-free. Returns `(n, y)`.
 pub(crate) fn apply_linear_named(
     params: &ParamStore,
     names: &LinearNames,
@@ -638,8 +644,30 @@ pub(crate) fn apply_linear_named(
         y = ws.take_zeroed(rows * n);
         matmul_bias_into(rows, r, n, &h, bd, bias, act, &mut y);
         ws.give(h);
+    } else if params.get(&names.tt[0]).is_some() {
+        // TT core chain: gather `tt0..ttK` views on the stack, contract,
+        // then run the shared epilogue (bit-identical to the fused path).
+        let mut views = [TtCoreView::empty(); TT_MAX_MODES];
+        let mut nc = 0;
+        while nc < TT_MAX_MODES {
+            let Some(t) = params.get(&names.tt[nc]) else {
+                break;
+            };
+            views[nc] = TtCoreView::of_tensor(t)?;
+            nc += 1;
+        }
+        let (tn, ty) = tt_apply_ws(rows, k, x, &views[..nc], ws)
+            .map_err(|e| anyhow!("{}: {e}", names.prefix))?;
+        n = tn;
+        check_bias(n)?;
+        y = ty;
+        if bias.is_some() || !matches!(act, Activation::None) {
+            for row in y.chunks_exact_mut(n) {
+                apply_epilogue(row, bias, act);
+            }
+        }
     } else {
-        bail!("no linear weights (w or a/b) under group {:?}", names.prefix);
+        bail!("no linear weights (w, a/b, or tt0..) under group {:?}", names.prefix);
     }
     Ok((n, y))
 }
@@ -651,6 +679,7 @@ pub(crate) fn apply_linear_named(
 /// (4-D conv factors, mixed stores) — it falls through to the f32 path
 /// bit-for-bit. LED groups need *both* factors quantized to take the
 /// quantized route, so a CED conv whose 4-D `a` stayed f32 runs fully f32.
+/// TT core groups are never quantized and always take the f32 fallthrough.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn apply_linear_quant(
     params: &ParamStore,
@@ -715,9 +744,10 @@ pub(crate) fn apply_linear_quant(
 }
 
 /// `y(rows, n) = x(rows, k) @ W + bias`, dispatching dense `w` vs LED/CED
-/// `a·b` on the keys present (the layers.py contract). Factorized layers run
-/// as two GEMMs through the rank bottleneck — the low-rank product is never
-/// materialized. Returns `(n, y)`.
+/// `a·b` vs TT `tt0..ttK` cores on the keys present (the layers.py
+/// contract). Factorized layers never materialize the full product: LED
+/// runs two GEMMs through the rank bottleneck, TT contracts the core chain.
+/// Returns `(n, y)`.
 ///
 /// Convenience wrapper over [`apply_linear_named`] with a throwaway
 /// workspace; the interpreters call the workspace-backed form directly.

@@ -84,7 +84,7 @@ pub struct FactorizeConfig {
     pub ratio: Option<f64>,
     /// Fixed integer rank.
     pub rank: Option<usize>,
-    /// Solver name (`random` / `svd` / `snmf`).
+    /// Solver name (`random` / `svd` / `snmf` / `tt` / `auto`).
     pub solver: String,
     /// SNMF iteration budget.
     pub num_iter: usize,
@@ -125,6 +125,7 @@ impl FactorizeConfig {
             } else {
                 Some(self.submodules.clone())
             },
+            tt: Default::default(),
             precision: self.precision.parse()?,
         })
     }

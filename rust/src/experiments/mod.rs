@@ -8,10 +8,12 @@
 pub mod fig2;
 pub mod quant;
 pub mod tables;
+pub mod tt;
 
 pub use fig2::{by_design, icl, post_training, Fig2Point, Fig2Result, FigEnv, NativeFigCfg};
 pub use quant::{quant_panel, QuantPanel, QuantPanelCfg, QuantPoint};
 pub use tables::{cost_table, solver_table, CostRow, SolverRow};
+pub use tt::{kron_structured_lm, tt_panel, TtPanel, TtPanelCfg, TtPoint};
 
 /// Scale parameters shared by the harnesses.
 #[derive(Clone, Debug)]

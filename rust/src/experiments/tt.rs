@@ -1,0 +1,317 @@
+//! TT-factorization panel (DESIGN.md §13): dense vs LED vs TT serving on a
+//! Kronecker-structured LM, in the style of a Figure-2 panel.
+//!
+//! Rank truncation compresses layers whose *flat* spectrum is concentrated;
+//! the TT family compresses layers whose weight is (near-)separable across
+//! factorized mode dims — kron(A, B) is exactly TT-rank-1 while its flat
+//! spectrum is full-rank, so LED's Eq.-1 gate can never win on it. This
+//! harness builds an LM whose linear weights carry that structure, runs
+//! `auto_fact` with the LED and TT solvers against the same checkpoint, and
+//! measures greedy decode throughput, agreement with the dense token
+//! streams, and serialized weight bytes per variant
+//! (`benches/native_tt.rs` prints the `BENCH_TT` line from it).
+
+use crate::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
+use crate::backend::{generate_with_session, DecodeSession, NativeBackend, SamplingCfg};
+use crate::eval::measure_decode_latency;
+use crate::factorize::tt::mode_dims;
+use crate::factorize::{auto_fact, AutoFactConfig, Rank, Solver, TtConfig};
+use crate::linalg::Matrix;
+use crate::model::classify;
+use crate::tensor::ParamStore;
+use crate::util::Pcg64;
+use crate::Result;
+
+/// RNG stream for the panel's prompt draws.
+const PROMPT_STREAM: u64 = 13;
+
+/// RNG stream for the Kronecker weight factors.
+const KRON_STREAM: u64 = 14;
+
+/// The panel factors every linear over two modes — matching the two-factor
+/// Kronecker structure the builder plants.
+const PANEL_MODES: usize = 2;
+
+/// Scale knobs for [`tt_panel`].
+#[derive(Clone, Debug)]
+pub struct TtPanelCfg {
+    /// LM dimensions (head width = vocab). Pick dims with balanced
+    /// two-mode factorizations (powers of two work best).
+    pub lm: TextModelCfg,
+    /// Retained energy τ for the TT sweep (and the chooser's LED budget).
+    pub energy: f64,
+    /// Rank ratio for the LED comparison row.
+    pub led_ratio: f64,
+    /// Init / prompt seed.
+    pub seed: u64,
+    /// Seeded prompts per variant for the agreement measurement.
+    pub prompts: usize,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Greedy tokens generated per prompt (also the latency step count).
+    pub new_tokens: usize,
+    /// Discarded warmup iterations per latency measurement.
+    pub warmup: usize,
+    /// Timed iterations per latency measurement.
+    pub iters: usize,
+}
+
+impl Default for TtPanelCfg {
+    fn default() -> Self {
+        Self {
+            lm: TextModelCfg {
+                vocab: 512,
+                seq: 96,
+                d: 128,
+                heads: 8,
+                layers: 2,
+                ff: 512,
+                classes: 512,
+            },
+            energy: 0.99,
+            led_ratio: 0.5,
+            seed: 42,
+            prompts: 8,
+            prompt_len: 8,
+            new_tokens: 24,
+            warmup: 1,
+            iters: 8,
+        }
+    }
+}
+
+impl TtPanelCfg {
+    /// Small preset for tests and the CI bench quick mode.
+    pub fn quick() -> Self {
+        Self {
+            lm: TextModelCfg {
+                vocab: 64,
+                seq: 24,
+                d: 32,
+                heads: 4,
+                layers: 1,
+                ff: 64,
+                classes: 64,
+            },
+            prompts: 4,
+            prompt_len: 4,
+            new_tokens: 8,
+            warmup: 1,
+            iters: 3,
+            ..Self::default()
+        }
+    }
+}
+
+/// One variant's measurements.
+#[derive(Clone, Debug)]
+pub struct TtPoint {
+    /// Row label: `dense`, `led_rNN`, or `tt`.
+    pub variant: String,
+    /// Greedy decode throughput, tokens/sec.
+    pub tokens_per_sec: f64,
+    /// tokens_per_sec / the dense row's tokens_per_sec.
+    pub speedup: f64,
+    /// Fraction of seeded prompts whose full greedy token stream equals the
+    /// dense stream (1.0 for dense by construction).
+    pub agreement: f64,
+    /// Serialized checkpoint bytes (f32).
+    pub bytes: usize,
+    /// bytes / dense bytes (1.0 for dense).
+    pub compression: f64,
+}
+
+/// The panel: one [`TtPoint`] per variant over one structured LM.
+#[derive(Clone, Debug)]
+pub struct TtPanel {
+    /// dense / led / tt rows, in that order.
+    pub points: Vec<TtPoint>,
+    /// Prompts per agreement measurement.
+    pub prompts: usize,
+    /// Greedy tokens per prompt.
+    pub new_tokens: usize,
+}
+
+impl TtPanel {
+    /// Render as the aligned text table the CLI and bench print.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "== TT decode (agreement over {} prompts x {} greedy tokens) ==\n",
+            self.prompts, self.new_tokens
+        );
+        s.push_str("variant    tok/s      speedup  agreement  bytes      compress\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:<9} {:>9.1}  {:>6.2}x  {:>8.2}  {:>9}  {:>7.3}\n",
+                p.variant, p.tokens_per_sec, p.speedup, p.agreement, p.bytes, p.compression,
+            ));
+        }
+        s
+    }
+}
+
+/// `kron(A, B)` sized so the two-mode TT of the `(m, n)` weight is exactly
+/// rank-1: A is `(m1, n1)`, B `(m2, n2)` over [`mode_dims`]`(·, 2)`, and
+/// `W[i1·m2+i2, j1·n2+j2] = A[i1,j1]·B[i2,j2]`. Per-factor σ is the fourth
+/// root of the glorot variance so the product matches a dense init's scale.
+fn kron_weight(m: usize, n: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let (md, nd) = (mode_dims(m, PANEL_MODES), mode_dims(n, PANEL_MODES));
+    let (m1, m2, n1, n2) = (md[0], md[1], nd[0], nd[1]);
+    let sigma = (2.0 / (m + n) as f64).sqrt().sqrt() as f32;
+    let a = Matrix::randn(m1, n1, sigma, rng);
+    let b = Matrix::randn(m2, n2, sigma, rng);
+    let mut w = vec![0.0f32; m * n];
+    for i1 in 0..m1 {
+        for i2 in 0..m2 {
+            for j1 in 0..n1 {
+                for j2 in 0..n2 {
+                    w[(i1 * m2 + i2) * n + (j1 * n2 + j2)] =
+                        a.data[i1 * n1 + j1] * b.data[i2 * n2 + j2];
+                }
+            }
+        }
+    }
+    w
+}
+
+/// Init an LM and overwrite every linear weight with a Kronecker-structured
+/// matrix — the separable regime where TT wins and LED cannot.
+pub fn kron_structured_lm(cfg: &TextModelCfg, seed: u64) -> Result<ParamStore> {
+    let mut params = init_text_params(cfg, seed);
+    let mut rng = Pcg64::new(seed, KRON_STREAM);
+    let linears: Vec<String> = classify(&params)
+        .into_iter()
+        .filter(|l| matches!(l.kind, crate::model::LayerKind::Linear))
+        .map(|l| l.name)
+        .collect();
+    for name in linears {
+        let wname = if name.is_empty() { "w".to_string() } else { format!("{name}/w") };
+        let t = params
+            .get_mut(&wname)
+            .ok_or_else(|| anyhow::anyhow!("classified linear lost its weight {wname:?}"))?;
+        let (m, n) = (t.shape[0], t.shape[1]);
+        t.as_f32_mut()?.copy_from_slice(&kron_weight(m, n, &mut rng));
+    }
+    Ok(params)
+}
+
+/// Seeded prompt `i`, reproducible across variants and runs.
+fn prompt_for(cfg: &TtPanelCfg, i: usize) -> Vec<i32> {
+    let mut rng = Pcg64::new(cfg.seed ^ i as u64, PROMPT_STREAM);
+    (0..cfg.prompt_len).map(|_| rng.below(cfg.lm.vocab) as i32).collect()
+}
+
+/// Build the structured LM once, factorize it with the LED and TT solvers,
+/// and measure all three variants.
+pub fn tt_panel(cfg: &TtPanelCfg) -> Result<TtPanel> {
+    let dense = kron_structured_lm(&cfg.lm, cfg.seed)?;
+
+    let mut led = dense.clone();
+    auto_fact(
+        &mut led,
+        &AutoFactConfig {
+            rank: Rank::Ratio(cfg.led_ratio),
+            solver: Solver::Svd,
+            ..Default::default()
+        },
+    )?;
+    let mut tt = dense.clone();
+    auto_fact(
+        &mut tt,
+        &AutoFactConfig {
+            solver: Solver::Tt,
+            tt: TtConfig {
+                modes: PANEL_MODES,
+                energy: cfg.energy,
+                max_rank: None,
+            },
+            ..Default::default()
+        },
+    )?;
+
+    let led_variant = format!("led_r{:02}", (cfg.led_ratio * 100.0).round() as usize);
+    let variants: [(&str, &ParamStore); 3] =
+        [("dense", &dense), (led_variant.as_str(), &led), ("tt", &tt)];
+
+    let backend = NativeBackend;
+    let greedy = SamplingCfg::greedy();
+    let prompt0 = prompt_for(cfg, 0);
+    let mut dense_streams: Vec<Vec<i32>> = Vec::new();
+    let mut dense_tps = 0.0;
+    let mut dense_bytes = 0usize;
+    let mut points = Vec::new();
+    for (variant, params) in variants {
+        let mut graph = synth_fwd_graph("lm", variant, 1, params)?;
+        // synth_fwd_graph pins the zoo-default head count; honor the cfg's.
+        graph.config.insert("heads".to_string(), cfg.lm.heads);
+        let lat = measure_decode_latency(
+            &backend,
+            &graph,
+            params,
+            &prompt0,
+            cfg.new_tokens,
+            cfg.warmup,
+            cfg.iters,
+        )?;
+        let mut matches = 0usize;
+        for i in 0..cfg.prompts {
+            let mut session = DecodeSession::new(&graph, params)?;
+            let out = generate_with_session(
+                &backend,
+                &graph,
+                params,
+                &mut session,
+                &prompt_for(cfg, i),
+                cfg.new_tokens,
+                &greedy,
+                |_, _| {},
+            )?;
+            if variant == "dense" {
+                dense_streams.push(out.tokens);
+                matches += 1;
+            } else if dense_streams.get(i).is_some_and(|want| want == &out.tokens) {
+                matches += 1;
+            }
+        }
+        let bytes = params.iter().map(|(_, t)| t.raw_bytes().len()).sum::<usize>();
+        if variant == "dense" {
+            dense_tps = lat.tokens_per_sec;
+            dense_bytes = bytes;
+        }
+        points.push(TtPoint {
+            variant: variant.to_string(),
+            tokens_per_sec: lat.tokens_per_sec,
+            speedup: lat.tokens_per_sec / dense_tps.max(1e-12),
+            agreement: matches as f64 / cfg.prompts.max(1) as f64,
+            bytes,
+            compression: bytes as f64 / dense_bytes.max(1) as f64,
+        });
+    }
+    Ok(TtPanel { points, prompts: cfg.prompts, new_tokens: cfg.new_tokens })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_panel_tt_beats_led_on_bytes() {
+        let panel = tt_panel(&TtPanelCfg::quick()).unwrap();
+        assert_eq!(panel.points.len(), 3);
+        let dense = &panel.points[0];
+        assert_eq!(dense.variant, "dense");
+        assert_eq!(dense.agreement, 1.0);
+        assert!((dense.speedup - 1.0).abs() < 1e-9);
+        assert!((dense.compression - 1.0).abs() < 1e-9);
+        let (led, tt) = (&panel.points[1], &panel.points[2]);
+        assert_eq!(tt.variant, "tt");
+        // The separable regime: TT compresses below both dense and LED.
+        assert!(led.compression < 1.0, "led={}", led.compression);
+        assert!(tt.compression < led.compression, "tt={} led={}", tt.compression, led.compression);
+        // Exactly-rank-1 structure at τ=0.99 reconstructs ~losslessly, so
+        // the TT streams should track dense closely.
+        assert!(tt.agreement >= 0.5, "tt agreement {}", tt.agreement);
+        let text = panel.render();
+        assert!(text.contains("tt") && text.contains("dense"), "{text}");
+    }
+}

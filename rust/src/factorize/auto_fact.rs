@@ -16,8 +16,10 @@ use crate::model::{classify, LayerKind};
 use crate::tensor::{ParamStore, Tensor};
 use crate::Result;
 
+use super::energy::energy_rank;
 use super::quantize::{quantize_led_params, QuantReport};
-use super::{Rank, Solver, WeightPrecision};
+use super::tt::tt_svd;
+use super::{Rank, Solver, TtConfig, WeightPrecision};
 
 /// The arguments of the paper's `greenformer.auto_fact(...)` call.
 #[derive(Clone, Debug)]
@@ -32,6 +34,11 @@ pub struct AutoFactConfig {
     /// substrings are factorized (`None` = all layers — the paper's
     /// `submodules=None` default).
     pub submodules: Option<Vec<String>>,
+    /// TT sweep settings for `solver = tt|auto`: mode count, retained
+    /// energy τ, per-core rank cap. The same τ drives the `auto` chooser's
+    /// LED candidate (via [`energy_rank`]) so the families compete at an
+    /// equal approximation budget.
+    pub tt: TtConfig,
     /// Serving-time weight precision. The checkpoint stays f32; a non-F32
     /// value runs the post-SVD [`quantize_led_params`] pass and attaches
     /// its report (the side-table itself is built by the interpreters /
@@ -46,6 +53,7 @@ impl Default for AutoFactConfig {
             solver: Solver::Svd,
             num_iter: 50,
             submodules: None,
+            tt: TtConfig::default(),
             precision: WeightPrecision::F32,
         }
     }
@@ -56,6 +64,11 @@ impl Default for AutoFactConfig {
 pub enum Decision {
     /// Replaced with rank-r factors.
     Factorized { rank: usize },
+    /// Replaced with a TT core chain (internal ranks `r_1..r_{d-1}`).
+    FactorizedTt {
+        /// The chain's internal TT ranks.
+        ranks: Vec<usize>,
+    },
     /// Eq.-1 gate rejected (no theoretical cost reduction).
     GateRejected,
     /// Name didn't match the submodule filter.
@@ -91,6 +104,12 @@ pub struct FactReport {
     pub params_before: usize,
     /// Total parameter count after factorization.
     pub params_after: usize,
+    /// True serialized checkpoint bytes before factorization. The `auto`
+    /// chooser minimizes bytes, not element counts — on mixed-dtype stores
+    /// the two disagree, so both gates and reports use bytes.
+    pub bytes_before: usize,
+    /// True serialized checkpoint bytes after factorization.
+    pub bytes_after: usize,
     /// Post-SVD quantization summary when `cfg.precision != F32`.
     pub quant: Option<QuantReport>,
 }
@@ -100,7 +119,12 @@ impl FactReport {
     pub fn n_factorized(&self) -> usize {
         self.layers
             .iter()
-            .filter(|l| matches!(l.decision, Decision::Factorized { .. }))
+            .filter(|l| {
+                matches!(
+                    l.decision,
+                    Decision::Factorized { .. } | Decision::FactorizedTt { .. }
+                )
+            })
             .count()
     }
 
@@ -114,12 +138,14 @@ impl fmt::Display for FactReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "auto_fact: {}/{} layers factorized, params {} -> {} ({:.1}%)",
+            "auto_fact: {}/{} layers factorized, params {} -> {} ({:.1}%), bytes {} -> {}",
             self.n_factorized(),
             self.layers.len(),
             self.params_before,
             self.params_after,
-            100.0 * self.compression()
+            100.0 * self.compression(),
+            self.bytes_before,
+            self.bytes_after
         )?;
         for l in &self.layers {
             match &l.decision {
@@ -130,6 +156,16 @@ impl fmt::Display for FactReport {
                     l.m,
                     l.n,
                     rank,
+                    l.recon_error
+                        .map(|e| format!("  err={e:.4}"))
+                        .unwrap_or_default()
+                )?,
+                Decision::FactorizedTt { ranks } => writeln!(
+                    f,
+                    "  {:<28} {:>5}x{:<5} -> tt r={ranks:?}{}",
+                    l.name,
+                    l.m,
+                    l.n,
                     l.recon_error
                         .map(|e| format!("  err={e:.4}"))
                         .unwrap_or_default()
@@ -173,9 +209,16 @@ impl fmt::Display for FactReport {
 /// assert!(report.n_factorized() > 0);
 /// assert!(params.n_params() < before);
 /// ```
+/// True serialized size of every tensor in the store (dtype-aware) — the
+/// quantity the `auto` chooser minimizes and [`FactReport`] records.
+fn store_bytes(params: &ParamStore) -> usize {
+    params.iter().map(|(_, t)| t.raw_bytes().len()).sum()
+}
+
 pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactReport> {
     let mut report = FactReport {
         params_before: params.n_params(),
+        bytes_before: store_bytes(params),
         ..Default::default()
     };
 
@@ -211,17 +254,6 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
         // (m, n) is the paper's rearranged 2-D view: linear (in, out),
         // conv (kh·kw·cin, cout).
         let (m, n) = (layer.in_dim, layer.out_dim);
-        let Some(r) = cfg.rank.resolve(m, n) else {
-            report.layers.push(LayerDecision {
-                name: layer.name,
-                kind: layer.kind,
-                m,
-                n,
-                decision: Decision::GateRejected,
-                recon_error: None,
-            });
-            continue;
-        };
 
         let wname = if layer.name.is_empty() {
             "w".to_string()
@@ -235,6 +267,80 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
         let (rows, cols, data) = w.as_matrix_2d()?;
         debug_assert_eq!((rows, cols), (m, n));
         let wm = Matrix::from_vec(rows, cols, data.to_vec());
+        let prefix = if layer.name.is_empty() {
+            String::new()
+        } else {
+            format!("{}/", layer.name)
+        };
+
+        // Resolve the rank policy. The TT family (tt|auto) is energy-driven
+        // — LED candidates come from [`energy_rank`] at the shared τ, not
+        // from `cfg.rank` — so both families compete at equal budget.
+        let tt_family = matches!(cfg.solver, Solver::Tt | Solver::Auto);
+        let led_rank = if tt_family {
+            energy_rank(&wm, cfg.tt.energy)
+        } else {
+            cfg.rank.resolve(m, n)
+        };
+
+        if tt_family && layer.kind == LayerKind::Linear {
+            // Family chooser on true serialized bytes (f32): dense 4·m·n vs
+            // LED 4·r·(m+n) vs the TT chain's 4·Σ r_{k-1}·m_k·n_k·r_k —
+            // element counts and bytes agree here, but the report carries
+            // bytes so mixed-precision stores stay honest.
+            let f32b = std::mem::size_of::<f32>();
+            let dense_bytes = m * n * f32b;
+            let tt = tt_svd(&wm, &cfg.tt)?;
+            let led_bytes = match cfg.solver {
+                // Plain `tt` never falls back to LED — only dense survives.
+                Solver::Auto => led_rank.map(|r| r * (m + n) * f32b),
+                _ => None,
+            };
+            let beats_led = match led_bytes {
+                Some(lb) => tt.bytes() < lb,
+                None => true,
+            };
+            if tt.bytes() < dense_bytes && beats_led {
+                let rec = tt.reconstruct();
+                let recon = wm.sub(&rec).fro_norm() / wm.fro_norm().max(1e-30);
+                let ranks = tt.ranks();
+                params.remove(&wname);
+                tt.insert_into(params, &prefix);
+                report.layers.push(LayerDecision {
+                    name: layer.name,
+                    kind: layer.kind,
+                    m,
+                    n,
+                    decision: Decision::FactorizedTt { ranks },
+                    recon_error: Some(recon),
+                });
+                continue;
+            }
+            if cfg.solver == Solver::Tt || led_rank.is_none() {
+                report.layers.push(LayerDecision {
+                    name: layer.name,
+                    kind: layer.kind,
+                    m,
+                    n,
+                    decision: Decision::GateRejected,
+                    recon_error: None,
+                });
+                continue;
+            }
+            // `auto` falls through: LED at the energy rank wins on bytes.
+        }
+
+        let Some(r) = led_rank else {
+            report.layers.push(LayerDecision {
+                name: layer.name,
+                kind: layer.kind,
+                m,
+                n,
+                decision: Decision::GateRejected,
+                recon_error: None,
+            });
+            continue;
+        };
 
         // Deterministic per-layer seed so repeated runs agree.
         let seed = layer
@@ -250,11 +356,6 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
 
         // Shape the factors for the layer kind and swap them in.
         params.remove(&wname);
-        let prefix = if layer.name.is_empty() {
-            String::new()
-        } else {
-            format!("{}/", layer.name)
-        };
         match layer.kind {
             LayerKind::Linear => {
                 params.insert(format!("{prefix}a"), Tensor::from_f32(&[m, r], a.data));
@@ -285,6 +386,7 @@ pub fn auto_fact(params: &mut ParamStore, cfg: &AutoFactConfig) -> Result<FactRe
 
     params.sort_canonical();
     report.params_after = params.n_params();
+    report.bytes_after = store_bytes(params);
     if cfg.precision != WeightPrecision::F32 {
         let (_store, quant) = quantize_led_params(params, cfg.precision)?;
         report.quant = Some(quant);
@@ -423,6 +525,124 @@ mod tests {
         let report = auto_fact(&mut s, &AutoFactConfig::default()).unwrap();
         assert_eq!(report.n_factorized(), 0);
         assert_eq!(s.names(), &names_before[..]);
+    }
+
+    /// kron(A, B) with A, B 8×8: exactly TT-rank-1 at modes=2, while the
+    /// flat 64×64 spectrum is full-rank (LED can never pass the Eq.-1
+    /// gate) — the canonical shape where TT wins and LED cannot.
+    fn kron_store() -> ParamStore {
+        let mut rng = Pcg64::seeded(74);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let b = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut w = vec![0.0f32; 64 * 64];
+        for i1 in 0..8 {
+            for j1 in 0..8 {
+                for i2 in 0..8 {
+                    for j2 in 0..8 {
+                        w[(i1 * 8 + i2) * 64 + (j1 * 8 + j2)] =
+                            a.data[i1 * 8 + j1] * b.data[i2 * 8 + j2];
+                    }
+                }
+            }
+        }
+        let mut s = ParamStore::new();
+        s.insert("fc/w", Tensor::from_f32(&[64, 64], w));
+        s.insert("fc/bias", Tensor::zeros(&[64], Dtype::F32));
+        s
+    }
+
+    fn tt2_cfg(solver: Solver) -> AutoFactConfig {
+        AutoFactConfig {
+            solver,
+            tt: crate::factorize::TtConfig {
+                modes: 2,
+                energy: 0.99,
+                max_rank: None,
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn auto_picks_tt_on_kron_layer_where_led_cannot_win() {
+        let mut s = kron_store();
+        let report = auto_fact(&mut s, &tt2_cfg(Solver::Auto)).unwrap();
+        let l = &report.layers[0];
+        assert_eq!(l.decision, Decision::FactorizedTt { ranks: vec![1] });
+        assert!(l.recon_error.unwrap() < 1e-4, "err={:?}", l.recon_error);
+        assert!(s.get("fc/w").is_none());
+        assert_eq!(s.get("fc/tt0").unwrap().shape, vec![1, 8, 8, 1]);
+        assert_eq!(s.get("fc/tt1").unwrap().shape, vec![1, 8, 8, 1]);
+        // Byte accounting is over true serialized sizes, and TT shrinks it.
+        assert_eq!(report.bytes_after, store_bytes(&s));
+        assert!(report.bytes_after < report.bytes_before);
+        assert_eq!(report.n_factorized(), 1);
+    }
+
+    #[test]
+    fn auto_falls_back_to_led_when_cheaper() {
+        // Exactly rank-4 unstructured weight: LED keeps τ=0.9999 energy at
+        // MIN_RANK bytes, while the permuted TT unfoldings are high-rank.
+        let mut rng = Pcg64::seeded(75);
+        let u = Matrix::randn(64, 4, 1.0, &mut rng);
+        let v = Matrix::randn(4, 64, 1.0, &mut rng);
+        let mut s = ParamStore::new();
+        s.insert("fc/w", Tensor::from_f32(&[64, 64], u.matmul(&v).data));
+        let mut cfg = tt2_cfg(Solver::Auto);
+        cfg.tt.energy = 0.9999;
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        assert_eq!(report.layers[0].decision, Decision::Factorized { rank: 8 });
+        assert_eq!(s.get("fc/a").unwrap().shape, vec![64, 8]);
+    }
+
+    #[test]
+    fn tt_solver_gate_rejects_unstructured_noise() {
+        // Full-rank 16×16 noise at modes=2 needs 512 TT elements vs 256
+        // dense — the byte gate must keep the layer dense (and plain `tt`
+        // never falls back to LED).
+        let mut rng = Pcg64::seeded(76);
+        let mut s = ParamStore::new();
+        let mut w = vec![0.0f32; 16 * 16];
+        rng.fill_normal(&mut w, 1.0);
+        s.insert("fc/w", Tensor::from_f32(&[16, 16], w));
+        let mut cfg = tt2_cfg(Solver::Tt);
+        cfg.tt.energy = 1.0;
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        assert_eq!(report.layers[0].decision, Decision::GateRejected);
+        assert!(s.get("fc/w").is_some());
+        assert_eq!(report.bytes_after, report.bytes_before);
+    }
+
+    #[test]
+    fn tt_solver_replaces_structured_linear_with_cores() {
+        let mut s = kron_store();
+        let report = auto_fact(&mut s, &tt2_cfg(Solver::Tt)).unwrap();
+        assert_eq!(
+            report.layers[0].decision,
+            Decision::FactorizedTt { ranks: vec![1] }
+        );
+        assert!(s.get("fc/tt0").is_some() && s.get("fc/tt1").is_some());
+        let text = report.to_string();
+        assert!(text.contains("tt r=[1]"), "{text}");
+    }
+
+    #[test]
+    fn auto_on_conv_takes_energy_gated_ced_path() {
+        // Low-rank conv weight: energy rank 4 -> MIN_RANK 8 < r_max(144,32),
+        // so `auto` lands on the same CED shapes as the SVD solver.
+        let mut rng = Pcg64::seeded(77);
+        let u = Matrix::randn(144, 4, 1.0, &mut rng);
+        let v = Matrix::randn(4, 32, 1.0, &mut rng);
+        let mut s = ParamStore::new();
+        s.insert("conv/w", Tensor::from_f32(&[3, 3, 16, 32], u.matmul(&v).data));
+        let cfg = AutoFactConfig {
+            solver: Solver::Auto,
+            ..Default::default()
+        };
+        let report = auto_fact(&mut s, &cfg).unwrap();
+        assert_eq!(report.layers[0].decision, Decision::Factorized { rank: 8 });
+        assert_eq!(s.get("conv/a").unwrap().shape, vec![3, 3, 16, 8]);
+        assert_eq!(s.get("conv/b").unwrap().shape, vec![1, 1, 8, 32]);
     }
 
     #[test]

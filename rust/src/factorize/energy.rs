@@ -25,8 +25,14 @@ pub struct Spectrum {
 impl Spectrum {
     /// Compute the spectrum of `w` via the one-sided Jacobi SVD.
     pub fn of(w: &Matrix) -> Self {
-        let svd = jacobi_svd(w);
-        let energies: Vec<f64> = svd.s.iter().map(|&s| (s as f64) * (s as f64)).collect();
+        Self::from_singular_values(&jacobi_svd(w).s)
+    }
+
+    /// Build a spectrum from already-computed singular values (descending).
+    /// The TT-SVD sweep reuses this to truncate each unfolding with the
+    /// same selector as the LED energy policy.
+    pub fn from_singular_values(s: &[f32]) -> Self {
+        let energies: Vec<f64> = s.iter().map(|&s| (s as f64) * (s as f64)).collect();
         let total = energies.iter().sum();
         Spectrum { energies, total }
     }

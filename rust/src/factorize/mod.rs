@@ -10,9 +10,15 @@
 //!   `python/compile/rank.py`.
 //! * [`energy`] — extension (paper future work): per-layer spectral-energy
 //!   rank selection and effective-rank diagnostics.
-//! * [`solver`] — Random / SVD / SNMF dispatch over [`crate::linalg`].
+//! * [`solver`] — Random / SVD / SNMF / TT / auto dispatch over
+//!   [`crate::linalg`].
+//! * [`tt`] — tensor-train (TT-matrix) factorization: the TT-SVD sweep,
+//!   typed core groups, and the interpreter's core-chain contraction
+//!   (DESIGN.md §13).
 //! * [`auto_fact`] — the module walk: classify layers, apply the filter,
-//!   gate by Eq. 1, replace Linear→LED and Conv→CED, and report.
+//!   gate by Eq. 1, replace Linear→LED/TT and Conv→CED, and report; with
+//!   `solver = auto`, pick the family minimizing serialized bytes per
+//!   layer within the energy budget.
 //! * [`quantize`] — post-SVD bit-width pass: re-encode LED factors (and
 //!   surviving dense linears) as int8 or bit-packed ±1 for the native
 //!   serving interpreters (DESIGN.md §12).
@@ -24,6 +30,7 @@ pub mod energy;
 pub mod quantize;
 pub mod rank;
 pub mod solver;
+pub mod tt;
 
 pub use auto_fact::{auto_fact, AutoFactConfig, FactReport, LayerDecision};
 pub use energy::{energy_rank, Spectrum};
@@ -32,3 +39,4 @@ pub use quantize::{
 };
 pub use rank::{r_max, rank_for, Rank, MIN_RANK, RANK_MULTIPLE};
 pub use solver::Solver;
+pub use tt::{tt_svd, TtConfig, TtCore, TtCoreView, TtParams, TT_MAX_MODES};

@@ -6,7 +6,8 @@ use std::str::FromStr;
 use crate::linalg::{snmf_factorize, svd_factorize, Matrix};
 use crate::util::Pcg64;
 
-/// Greenformer's three factorization solvers (paper §Design).
+/// Greenformer's factorization solvers (paper §Design), plus the TT family
+/// and the per-layer byte-minimizing chooser (`auto`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Solver {
     /// Fresh random factors — factorization-by-design only ("not suitable
@@ -17,14 +18,24 @@ pub enum Solver {
     Svd,
     /// Semi-NMF: B ≥ 0, A unconstrained.
     Snmf,
+    /// Tensor-train (TT-matrix) sweep — `auto_fact` replaces each linear
+    /// with `tt0..ttK` cores via [`crate::factorize::tt::tt_svd`]; convs
+    /// fall back to the energy-gated SVD/CED path.
+    Tt,
+    /// Per-layer chooser: dense vs LED (energy rank) vs TT, whichever
+    /// serializes to the fewest bytes within the energy budget.
+    Auto,
 }
 
 impl Solver {
     /// Factorize `w` (m×n) into (A: m×r, B: r×n).
-    /// `num_iter` only affects SNMF; `seed` only Random/SNMF.
+    /// `num_iter` only affects SNMF; `seed` only Random/SNMF. The Tt/Auto
+    /// families are driven by `auto_fact` directly (cores, not factor
+    /// pairs); as a two-factor fallback they behave like [`Solver::Svd`]
+    /// (used for conv layers, which have no TT path).
     pub fn factorize(self, w: &Matrix, r: usize, num_iter: usize, seed: u64) -> (Matrix, Matrix) {
         match self {
-            Solver::Svd => svd_factorize(w, r),
+            Solver::Svd | Solver::Tt | Solver::Auto => svd_factorize(w, r),
             Solver::Snmf => snmf_factorize(w, r, num_iter, seed),
             Solver::Random => random_factorize(w.rows, w.cols, r, seed),
         }
@@ -42,6 +53,8 @@ impl fmt::Display for Solver {
             Solver::Random => "random",
             Solver::Svd => "svd",
             Solver::Snmf => "snmf",
+            Solver::Tt => "tt",
+            Solver::Auto => "auto",
         };
         f.write_str(s)
     }
@@ -55,7 +68,9 @@ impl FromStr for Solver {
             "random" => Ok(Solver::Random),
             "svd" => Ok(Solver::Svd),
             "snmf" => Ok(Solver::Snmf),
-            other => Err(format!("unknown solver {other:?} (random|svd|snmf)")),
+            "tt" => Ok(Solver::Tt),
+            "auto" => Ok(Solver::Auto),
+            other => Err(format!("unknown solver {other:?} (random|svd|snmf|tt|auto)")),
         }
     }
 }
@@ -78,7 +93,7 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in [Solver::Random, Solver::Svd, Solver::Snmf] {
+        for s in [Solver::Random, Solver::Svd, Solver::Snmf, Solver::Tt, Solver::Auto] {
             assert_eq!(s.to_string().parse::<Solver>().unwrap(), s);
         }
         assert!("qr".parse::<Solver>().is_err());

@@ -1,0 +1,677 @@
+//! Tensor-train (TT-matrix / MPO) factorization — the third solver family.
+//!
+//! LED/CED cut one global rank through a layer; the TT-matrix format
+//! (Oseledets 2011; Novikov et al., *Tensorizing Neural Networks*, arXiv
+//! 1509.06569) instead reshapes a `(m, n)` weight into a `d`-way tensor
+//! over factorized mode dims `m = m_1⋯m_d`, `n = n_1⋯n_d` and writes
+//!
+//! ```text
+//! W[(i_1..i_d), (j_1..j_d)] = G_1[i_1,j_1] · G_2[i_2,j_2] ⋯ G_d[i_d,j_d]
+//! ```
+//!
+//! where core `G_k` is a `(r_{k-1}, m_k, n_k, r_k)` tensor and the products
+//! contract over the internal TT ranks (`r_0 = r_d = 1`). Structured
+//! weights (Kronecker-like mixing, separable patterns) admit tiny TT ranks
+//! even when their flat singular spectrum blocks an LED cut, which is
+//! exactly the per-layer frontier the `auto` chooser in
+//! [`super::auto_fact`] navigates.
+//!
+//! Everything here is deterministic: the sweep is plain [`jacobi_svd`] per
+//! unfolding, and the forward contraction routes every product through
+//! [`matmul_into`], whose fixed k-order accumulation makes TT layers
+//! reproduce bit-for-bit across thread counts like the dense/LED paths
+//! (DESIGN.md §13).
+
+use anyhow::bail;
+
+use crate::linalg::matrix::matmul_into;
+use crate::linalg::workspace::Workspace;
+use crate::linalg::{jacobi_svd, Matrix};
+use crate::tensor::{ParamStore, Tensor};
+use crate::Result;
+
+use super::energy::Spectrum;
+
+/// Hard cap on TT cores per layer: hot paths pre-resolve the `tt0..ttK`
+/// parameter names and stack-allocate core views at this bound, keeping the
+/// decode loop free of per-step allocation.
+pub const TT_MAX_MODES: usize = 6;
+
+/// Configuration of the TT-SVD sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct TtConfig {
+    /// Number of tensor modes `d` (cores). 2–[`TT_MAX_MODES`].
+    pub modes: usize,
+    /// Total retained spectral energy τ ∈ (0, 1]: the sweep budgets the
+    /// discarded energy so that ‖W − TT‖²_F ≤ (1 − τ)·‖W‖²_F (the TT-SVD
+    /// bound: per-unfolding truncation errors add in squared Frobenius
+    /// norm). τ = 1.0 keeps every rank — an exact round-trip.
+    pub energy: f64,
+    /// Optional hard cap on every internal rank r_k.
+    pub max_rank: Option<usize>,
+}
+
+impl Default for TtConfig {
+    fn default() -> Self {
+        Self { modes: 3, energy: 0.9, max_rank: None }
+    }
+}
+
+/// One TT core `G_k`, row-major `(r_in, m, n, r_out)`.
+#[derive(Clone, Debug)]
+pub struct TtCore {
+    /// Incoming TT rank r_{k-1} (1 for the first core).
+    pub r_in: usize,
+    /// This mode's share of the input (row) dimension.
+    pub m: usize,
+    /// This mode's share of the output (column) dimension.
+    pub n: usize,
+    /// Outgoing TT rank r_k (1 for the last core).
+    pub r_out: usize,
+    /// The elements, row-major over `(r_in, m, n, r_out)`.
+    pub data: Vec<f32>,
+}
+
+impl TtCore {
+    /// Element count of this core.
+    pub fn n_params(&self) -> usize {
+        self.r_in * self.m * self.n * self.r_out
+    }
+
+    /// Borrow as a [`TtCoreView`].
+    pub fn view(&self) -> TtCoreView<'_> {
+        TtCoreView {
+            r_in: self.r_in,
+            m: self.m,
+            n: self.n,
+            r_out: self.r_out,
+            data: &self.data,
+        }
+    }
+}
+
+/// Borrowed core used by the interpreter hot paths (built on the stack from
+/// [`ParamStore`] tensors — no allocation).
+#[derive(Clone, Copy, Debug)]
+pub struct TtCoreView<'a> {
+    /// Incoming TT rank r_{k-1}.
+    pub r_in: usize,
+    /// Mode input dim.
+    pub m: usize,
+    /// Mode output dim.
+    pub n: usize,
+    /// Outgoing TT rank r_k.
+    pub r_out: usize,
+    /// Elements, row-major `(r_in, m, n, r_out)`.
+    pub data: &'a [f32],
+}
+
+impl TtCoreView<'static> {
+    /// Placeholder view for stack arrays (coerces to any lifetime).
+    pub fn empty() -> Self {
+        TtCoreView { r_in: 0, m: 0, n: 0, r_out: 0, data: &[] }
+    }
+}
+
+impl<'a> TtCoreView<'a> {
+    /// View a `(r_in, m, n, r_out)` checkpoint tensor as a TT core.
+    pub fn of_tensor(t: &'a Tensor) -> Result<Self> {
+        if t.ndim() != 4 {
+            bail!("TT core must be 4-D (r_in, m, n, r_out), got shape {:?}", t.shape);
+        }
+        Ok(TtCoreView {
+            r_in: t.shape[0],
+            m: t.shape[1],
+            n: t.shape[2],
+            r_out: t.shape[3],
+            data: t.as_f32()?,
+        })
+    }
+}
+
+/// A full TT factorization of one `(m, n)` weight.
+#[derive(Clone, Debug)]
+pub struct TtParams {
+    /// Input mode dims, `∏ m_k` = rows of W.
+    pub m_dims: Vec<usize>,
+    /// Output mode dims, `∏ n_k` = cols of W.
+    pub n_dims: Vec<usize>,
+    /// The cores, first to last.
+    pub cores: Vec<TtCore>,
+}
+
+impl TtParams {
+    /// Rows of the represented weight (`∏ m_k`).
+    pub fn in_dim(&self) -> usize {
+        self.m_dims.iter().product()
+    }
+
+    /// Cols of the represented weight (`∏ n_k`).
+    pub fn out_dim(&self) -> usize {
+        self.n_dims.iter().product()
+    }
+
+    /// The internal TT ranks `r_1..r_{d-1}` (boundary ranks are always 1).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.cores[..self.cores.len().saturating_sub(1)]
+            .iter()
+            .map(|c| c.r_out)
+            .collect()
+    }
+
+    /// Largest internal rank (1 for a single-core TT).
+    pub fn max_rank(&self) -> usize {
+        self.ranks().into_iter().max().unwrap_or(1)
+    }
+
+    /// Total stored elements across all cores.
+    pub fn n_params(&self) -> usize {
+        self.cores.iter().map(TtCore::n_params).sum()
+    }
+
+    /// Serialized size in bytes (f32 cores) — what the `auto` chooser
+    /// compares against dense / LED byte counts.
+    pub fn bytes(&self) -> usize {
+        self.n_params() * std::mem::size_of::<f32>()
+    }
+
+    /// Materialize the represented `(m, n)` weight.
+    pub fn reconstruct(&self) -> Matrix {
+        let views: Vec<TtCoreView<'_>> = self.cores.iter().map(TtCore::view).collect();
+        let (m, n, data) = tt_materialize(&views).expect("self-consistent cores");
+        Matrix::from_vec(m, n, data)
+    }
+
+    /// `y(rows, n) = x(rows, m) @ W` without materializing W.
+    pub fn apply(&self, rows: usize, x: &[f32]) -> Result<Vec<f32>> {
+        let views: Vec<TtCoreView<'_>> = self.cores.iter().map(TtCore::view).collect();
+        let mut ws = Workspace::new();
+        let (_, y) = tt_apply_ws(rows, self.in_dim(), x, &views, &mut ws)?;
+        Ok(y)
+    }
+
+    /// Insert the cores into `params` as `{prefix}tt0..tt{d-1}` (the
+    /// interpreter's dispatch keys; `prefix` includes any trailing `/`).
+    pub fn insert_into(self, params: &mut ParamStore, prefix: &str) {
+        for (k, core) in self.cores.into_iter().enumerate() {
+            let shape = [core.r_in, core.m, core.n, core.r_out];
+            params.insert(format!("{prefix}tt{k}"), Tensor::from_f32(&shape, core.data));
+        }
+    }
+}
+
+/// Factor `dim` into `modes` near-balanced integer factors (descending
+/// greedy: each slot takes the divisor of the remainder closest to the
+/// geometric target). Primes degrade gracefully to `1 × … × dim`.
+pub fn mode_dims(dim: usize, modes: usize) -> Vec<usize> {
+    assert!(dim >= 1 && modes >= 1, "mode_dims({dim}, {modes})");
+    let mut dims = Vec::with_capacity(modes);
+    let mut rem = dim;
+    for slots in (2..=modes).rev() {
+        let target = (rem as f64).powf(1.0 / slots as f64);
+        let mut best = 1usize;
+        let mut best_gap = f64::INFINITY;
+        for d in 1..=rem {
+            if rem % d == 0 {
+                let gap = (d as f64 - target).abs();
+                if gap < best_gap {
+                    best = d;
+                    best_gap = gap;
+                }
+            }
+        }
+        dims.push(best);
+        rem /= best;
+    }
+    dims.push(rem);
+    dims
+}
+
+/// Row-major big-endian digit decomposition of `flat` over `dims`.
+#[inline]
+fn digits(mut flat: usize, dims: &[usize], out: &mut [usize]) {
+    for k in (0..dims.len()).rev() {
+        out[k] = flat % dims[k];
+        flat /= dims[k];
+    }
+}
+
+/// Permute the flat `(m, n)` weight into the grouped-pair TT tensor layout:
+/// a `d`-way tensor with mode dims `g_k = m_k·n_k`, pair index
+/// `g_k = i_k·n_k + j_k`, all indices row-major big-endian.
+pub fn permute_w_to_t(w: &[f32], m_dims: &[usize], n_dims: &[usize]) -> Vec<f32> {
+    let d = m_dims.len();
+    debug_assert_eq!(d, n_dims.len());
+    let n: usize = n_dims.iter().product();
+    let g: Vec<usize> = (0..d).map(|k| m_dims[k] * n_dims[k]).collect();
+    let total: usize = g.iter().product();
+    debug_assert_eq!(w.len(), total);
+    let mut t = vec![0.0f32; total];
+    let mut gs = vec![0usize; d];
+    for (tflat, slot) in t.iter_mut().enumerate() {
+        digits(tflat, &g, &mut gs);
+        let mut i = 0usize;
+        let mut j = 0usize;
+        for k in 0..d {
+            i = i * m_dims[k] + gs[k] / n_dims[k];
+            j = j * n_dims[k] + gs[k] % n_dims[k];
+        }
+        *slot = w[i * n + j];
+    }
+    t
+}
+
+/// Inverse of [`permute_w_to_t`]: grouped tensor back to the flat weight.
+pub fn permute_t_to_w(t: &[f32], m_dims: &[usize], n_dims: &[usize]) -> Vec<f32> {
+    let d = m_dims.len();
+    debug_assert_eq!(d, n_dims.len());
+    let n: usize = n_dims.iter().product();
+    let g: Vec<usize> = (0..d).map(|k| m_dims[k] * n_dims[k]).collect();
+    let total: usize = g.iter().product();
+    debug_assert_eq!(t.len(), total);
+    let mut w = vec![0.0f32; total];
+    let mut gs = vec![0usize; d];
+    for (tflat, &v) in t.iter().enumerate() {
+        digits(tflat, &g, &mut gs);
+        let mut i = 0usize;
+        let mut j = 0usize;
+        for k in 0..d {
+            i = i * m_dims[k] + gs[k] / n_dims[k];
+            j = j * n_dims[k] + gs[k] % n_dims[k];
+        }
+        w[i * n + j] = v;
+    }
+    w
+}
+
+/// TT-SVD sweep (Oseledets) over the grouped-pair tensor of `w`.
+///
+/// Each of the `d − 1` sequential unfoldings is truncated by the existing
+/// spectral-energy selector ([`Spectrum::rank_for_energy`]): the total
+/// discard budget `(1 − τ)·‖W‖²_F` is split evenly across unfoldings, so
+/// the summed per-step truncation errors keep
+/// `‖W − TT‖²_F ≤ (1 − τ)·‖W‖²_F`.
+///
+/// # Examples
+///
+/// A Kronecker-structured weight is exactly TT-rank-1 at `modes = 2`, even
+/// though its flat spectrum is full-rank (where an LED cut cannot win):
+///
+/// ```
+/// use greenformer::factorize::tt::{tt_svd, TtConfig};
+/// use greenformer::linalg::Matrix;
+/// use greenformer::util::Pcg64;
+///
+/// let mut rng = Pcg64::seeded(7);
+/// let (a, b) = (Matrix::randn(8, 8, 1.0, &mut rng), Matrix::randn(8, 8, 1.0, &mut rng));
+/// let mut w = Matrix::zeros(64, 64);
+/// for i in 0..64 {
+///     for j in 0..64 {
+///         *w.at_mut(i, j) = a.at(i / 8, j / 8) * b.at(i % 8, j % 8);
+///     }
+/// }
+/// let tt = tt_svd(&w, &TtConfig { modes: 2, energy: 0.999, max_rank: None }).unwrap();
+/// assert_eq!(tt.ranks(), vec![1]); // 128 stored params vs 4096 dense
+/// let err = w.sub(&tt.reconstruct()).fro_norm() / w.fro_norm();
+/// assert!(err < 1e-3, "err={err}");
+/// ```
+pub fn tt_svd(w: &Matrix, cfg: &TtConfig) -> Result<TtParams> {
+    if cfg.modes < 2 || cfg.modes > TT_MAX_MODES {
+        bail!("TT modes must be in 2..={TT_MAX_MODES}, got {}", cfg.modes);
+    }
+    if !(0.0..=1.0).contains(&cfg.energy) || cfg.energy <= 0.0 {
+        bail!("TT energy must be in (0, 1], got {}", cfg.energy);
+    }
+    let d = cfg.modes;
+    let m_dims = mode_dims(w.rows, d);
+    let n_dims = mode_dims(w.cols, d);
+    let g: Vec<usize> = (0..d).map(|k| m_dims[k] * n_dims[k]).collect();
+    let total_energy: f64 = w.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    // Evenly split discard budget; the per-step truncations are on
+    // mutually orthogonal complements, so the squared errors add.
+    let budget = (1.0 - cfg.energy) * total_energy / (d - 1) as f64;
+
+    let mut c = permute_w_to_t(&w.data, &m_dims, &n_dims);
+    let mut r_prev = 1usize;
+    let mut cores = Vec::with_capacity(d);
+    for k in 0..d - 1 {
+        let rows = r_prev * g[k];
+        let cols = c.len() / rows;
+        let svd = jacobi_svd(&Matrix::from_vec(rows, cols, c));
+        let spec = Spectrum::from_singular_values(&svd.s);
+        let tau_step = if spec.total > 0.0 {
+            ((spec.total - budget) / spec.total).max(0.0)
+        } else {
+            0.0
+        };
+        let mut r = spec.rank_for_energy(tau_step).max(1);
+        if let Some(cap) = cfg.max_rank {
+            r = r.min(cap.max(1));
+        }
+        r = r.min(svd.s.len());
+        // Core k = leading left singular vectors, (r_prev, m_k, n_k, r).
+        let mut core = vec![0.0f32; rows * r];
+        for (dst, src) in core.chunks_exact_mut(r).zip(svd.u.data.chunks_exact(svd.u.cols)) {
+            dst.copy_from_slice(&src[..r]);
+        }
+        cores.push(TtCore {
+            r_in: r_prev,
+            m: m_dims[k],
+            n: n_dims[k],
+            r_out: r,
+            data: core,
+        });
+        // Carry C = diag(s_r) · Vt_r into the next unfolding.
+        let mut next = vec![0.0f32; r * cols];
+        for ((dst, src), &s) in next
+            .chunks_exact_mut(cols)
+            .zip(svd.vt.data.chunks_exact(cols))
+            .zip(&svd.s[..r])
+        {
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = s * v;
+            }
+        }
+        c = next;
+        r_prev = r;
+    }
+    cores.push(TtCore {
+        r_in: r_prev,
+        m: m_dims[d - 1],
+        n: n_dims[d - 1],
+        r_out: 1,
+        data: c,
+    });
+    Ok(TtParams { m_dims, n_dims, cores })
+}
+
+/// Validate that `cores` chain (`r_out == next r_in`, boundary ranks 1)
+/// and map input dim `k`. Returns `(d, out_dim)`.
+fn validate_chain(cores: &[TtCoreView<'_>], k: usize) -> Result<(usize, usize)> {
+    let d = cores.len();
+    if d == 0 || d > TT_MAX_MODES {
+        bail!("TT group must have 1..={TT_MAX_MODES} cores, got {d}");
+    }
+    if cores[0].r_in != 1 || cores[d - 1].r_out != 1 {
+        bail!("TT boundary ranks must be 1, got r_0={} r_d={}", cores[0].r_in, cores[d - 1].r_out);
+    }
+    let mut in_dim = 1usize;
+    let mut out_dim = 1usize;
+    for (idx, c) in cores.iter().enumerate() {
+        if c.data.len() != c.r_in * c.m * c.n * c.r_out {
+            bail!("TT core {idx}: data len {} != shape product", c.data.len());
+        }
+        if idx > 0 && cores[idx - 1].r_out != c.r_in {
+            let prev = cores[idx - 1].r_out;
+            bail!("TT cores {}/{idx} do not chain: r_out {prev} != r_in {}", idx - 1, c.r_in);
+        }
+        in_dim *= c.m;
+        out_dim *= c.n;
+    }
+    if in_dim != k {
+        bail!("TT input dim {in_dim} does not match activation dim {k}");
+    }
+    Ok((d, out_dim))
+}
+
+/// Workspace-backed TT-matvec: `y(rows, N) = x(rows, M) @ W` contracting
+/// the cores left-to-right without ever materializing W. Returns `(N, y)`
+/// with `y` drawn from `ws` (callers `give` it back).
+///
+/// Per core the running state `(P, r_{k-1}·m_k, S)` is transposed per-`P`
+/// slab, multiplied by the core's natural `(r_{k-1}·m_k, n_k·r_k)` matrix
+/// through one [`matmul_into`] call, and transposed back — so each output
+/// element keeps the kernel's fixed ascending-k accumulation order and,
+/// like the dense path, each activation row's outputs are independent of
+/// how many other rows share the batch (the decode ≡ full-prefix and
+/// batched ≡ solo contracts, DESIGN.md §10/§13). Steady-state buffer sizes
+/// depend only on `rows` and the core shapes, so decode sessions reuse the
+/// same workspace blocks step after step: zero allocations.
+pub fn tt_apply_ws(
+    rows: usize,
+    k: usize,
+    x: &[f32],
+    cores: &[TtCoreView<'_>],
+    ws: &mut Workspace,
+) -> Result<(usize, Vec<f32>)> {
+    debug_assert_eq!(x.len(), rows * k);
+    let (d, out_dim) = validate_chain(cores, k)?;
+    // Suffix products of the input mode dims: s[k] = ∏_{l>k} m_l.
+    let mut m_suffix = [1usize; TT_MAX_MODES + 1];
+    for idx in (0..d).rev() {
+        m_suffix[idx] = m_suffix[idx + 1] * cores[idx].m;
+    }
+    let mut cur = ws.take_copied(x);
+    let mut p = rows;
+    for (idx, c) in cores.iter().enumerate() {
+        let s = m_suffix[idx + 1];
+        let ri = c.r_in * c.m;
+        let nr = c.n * c.r_out;
+        // (P, RI, S) -> (P, S, RI): per-P slab transpose.
+        let mut t1 = ws.take_zeroed(p * s * ri);
+        for pi in 0..p {
+            let src = &cur[pi * ri * s..(pi + 1) * ri * s];
+            let dst = &mut t1[pi * s * ri..(pi + 1) * s * ri];
+            for a in 0..ri {
+                for b in 0..s {
+                    dst[b * ri + a] = src[a * s + b];
+                }
+            }
+        }
+        ws.give(cur);
+        // One GEMM against the core's natural row-major matrix.
+        let mut prod = ws.take_zeroed(p * s * nr);
+        matmul_into(p * s, ri, nr, &t1, c.data, &mut prod);
+        ws.give(t1);
+        // (P, S, NR) -> (P, NR, S); the flat result reinterprets as
+        // (P·n_k, r_k·m_{k+1}, S/m_{k+1}) for the next core.
+        let mut t2 = ws.take_zeroed(p * nr * s);
+        for pi in 0..p {
+            let src = &prod[pi * s * nr..(pi + 1) * s * nr];
+            let dst = &mut t2[pi * nr * s..(pi + 1) * nr * s];
+            for a in 0..s {
+                for b in 0..nr {
+                    dst[b * s + a] = src[a * nr + b];
+                }
+            }
+        }
+        ws.give(prod);
+        cur = t2;
+        p *= c.n;
+    }
+    debug_assert_eq!(cur.len(), rows * out_dim);
+    Ok((out_dim, cur))
+}
+
+/// Materialize the `(m, n)` weight a TT core chain represents. Returns
+/// `(m, n, w)` row-major. Used by the backward pass and reports; the
+/// forward/decode paths never call this.
+pub fn tt_materialize(cores: &[TtCoreView<'_>]) -> Result<(usize, usize, Vec<f32>)> {
+    let in_dim: usize = cores.iter().map(|c| c.m).product();
+    let (_, out_dim) = validate_chain(cores, in_dim)?;
+    // Left-to-right: acc (P, r_{k-1}) @ core (r_{k-1}, g_k·r_k) -> (P·g_k, r_k).
+    let mut acc = vec![1.0f32];
+    let mut pdim = 1usize;
+    for c in cores {
+        let gk = c.m * c.n;
+        let mut next = vec![0.0f32; pdim * gk * c.r_out];
+        matmul_into(pdim, c.r_in, gk * c.r_out, &acc, c.data, &mut next);
+        acc = next;
+        pdim *= gk;
+    }
+    let m_dims: Vec<usize> = cores.iter().map(|c| c.m).collect();
+    let n_dims: Vec<usize> = cores.iter().map(|c| c.n).collect();
+    let w = permute_t_to_w(&acc, &m_dims, &n_dims);
+    Ok((in_dim, out_dim, w))
+}
+
+/// Per-core gradients `∂L/∂G_k` given the dense weight gradient
+/// `dw (m, n)` of the materialized layer (`dw = xᵀ·dy` upstream).
+///
+/// Splitting the TT contraction at core `k` as
+/// `T[p, g, q] = Σ_{α,β} A_k[p,α] · G_k[α,g,β] · B_k[β,q]` (left/right
+/// environments accumulated by one GEMM per core each), the gradient is
+/// two GEMMs: `dG_k = A_kᵀ · dT_k · B_kᵀ`, returned in each core's natural
+/// row-major `(r_in, m, n, r_out)` layout, ready for `Grads::acc`.
+pub fn tt_core_grads(cores: &[TtCoreView<'_>], dw: &[f32]) -> Result<Vec<Vec<f32>>> {
+    let in_dim: usize = cores.iter().map(|c| c.m).product();
+    let (d, out_dim) = validate_chain(cores, in_dim)?;
+    debug_assert_eq!(dw.len(), in_dim * out_dim);
+    let m_dims: Vec<usize> = cores.iter().map(|c| c.m).collect();
+    let n_dims: Vec<usize> = cores.iter().map(|c| c.n).collect();
+    let g: Vec<usize> = (0..d).map(|k| m_dims[k] * n_dims[k]).collect();
+    let dt = permute_w_to_t(dw, &m_dims, &n_dims);
+
+    // Left environments A_k (P_k, r_{k-1}), P_k = ∏_{l<k} g_l.
+    let mut a_env: Vec<Vec<f32>> = vec![vec![1.0f32]];
+    let mut pk = 1usize;
+    for k in 0..d - 1 {
+        let c = &cores[k];
+        let mut next = vec![0.0f32; pk * g[k] * c.r_out];
+        matmul_into(pk, c.r_in, g[k] * c.r_out, &a_env[k], c.data, &mut next);
+        a_env.push(next);
+        pk *= g[k];
+    }
+    // Right environments B_k (r_k, Q_k), Q_k = ∏_{l>k} g_l.
+    let mut b_env: Vec<Vec<f32>> = vec![Vec::new(); d];
+    b_env[d - 1] = vec![1.0f32];
+    let mut q = 1usize;
+    for k in (0..d - 1).rev() {
+        let c = &cores[k + 1];
+        // (r_in·g_{k+1}, r_out) @ (r_out, Q_{k+1}) -> (r_in, g_{k+1}·Q_{k+1}).
+        let mut b = vec![0.0f32; c.r_in * g[k + 1] * q];
+        matmul_into(c.r_in * g[k + 1], c.r_out, q, c.data, &b_env[k + 1], &mut b);
+        b_env[k] = b;
+        q *= g[k + 1];
+    }
+
+    let mut grads = Vec::with_capacity(d);
+    let mut p_prod = 1usize;
+    let mut q_prod: usize = g.iter().product::<usize>();
+    for k in 0..d {
+        let c = &cores[k];
+        q_prod /= g[k];
+        let (pk, qk) = (p_prod, q_prod);
+        // M1 (r_in, g_k·Q_k) = A_kᵀ (r_in, P_k) @ dT (P_k, g_k·Q_k).
+        let mut at = vec![0.0f32; pk * c.r_in];
+        for i in 0..pk {
+            for j in 0..c.r_in {
+                at[j * pk + i] = a_env[k][i * c.r_in + j];
+            }
+        }
+        let mut m1 = vec![0.0f32; c.r_in * g[k] * qk];
+        matmul_into(c.r_in, pk, g[k] * qk, &at, &dt, &mut m1);
+        // dG_k (r_in·g_k, r_out) = M1 (r_in·g_k, Q_k) @ B_kᵀ (Q_k, r_out).
+        let mut bt = vec![0.0f32; qk * c.r_out];
+        for i in 0..c.r_out {
+            for j in 0..qk {
+                bt[j * c.r_out + i] = b_env[k][i * qk + j];
+            }
+        }
+        let mut dg = vec![0.0f32; c.r_in * g[k] * c.r_out];
+        matmul_into(c.r_in * g[k], qk, c.r_out, &m1, &bt, &mut dg);
+        grads.push(dg);
+        p_prod *= g[k];
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randn(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seeded(seed);
+        Matrix::randn(rows, cols, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn mode_dims_balanced_and_exact() {
+        assert_eq!(mode_dims(64, 3), vec![4, 4, 4]);
+        assert_eq!(mode_dims(512, 3), vec![8, 8, 8]);
+        assert_eq!(mode_dims(768, 3), vec![8, 8, 12]);
+        assert_eq!(mode_dims(7, 3), vec![1, 1, 7]); // prime: degrade to 1s
+        assert_eq!(mode_dims(13, 2), vec![1, 13]);
+        for (dim, modes) in [(128, 3), (192, 4), (30, 2), (97, 3)] {
+            assert_eq!(mode_dims(dim, modes).iter().product::<usize>(), dim);
+            assert_eq!(mode_dims(dim, modes).len(), modes);
+        }
+    }
+
+    #[test]
+    fn permutation_round_trips() {
+        let w = randn(12, 18, 1);
+        let (md, nd) = (mode_dims(12, 3), mode_dims(18, 3));
+        let t = permute_w_to_t(&w.data, &md, &nd);
+        assert_eq!(permute_t_to_w(&t, &md, &nd), w.data);
+    }
+
+    #[test]
+    fn full_energy_round_trips_exactly() {
+        for (m, n, modes, seed) in [(12, 18, 3, 2), (7, 13, 2, 3), (16, 16, 4, 4)] {
+            let w = randn(m, n, seed);
+            let cfg = TtConfig { modes, energy: 1.0, max_rank: None };
+            let tt = tt_svd(&w, &cfg).unwrap();
+            let err = w.sub(&tt.reconstruct()).fro_norm() / w.fro_norm();
+            assert!(err < 1e-4, "({m},{n},{modes}): err={err}");
+        }
+    }
+
+    #[test]
+    fn energy_budget_bounds_reconstruction_error() {
+        // Decaying spectrum, like trained weights.
+        let w = crate::experiments::tables::trained_like_matrix(48, 40, 1.0, 9);
+        for tau in [0.8, 0.9, 0.99] {
+            let tt = tt_svd(&w, &TtConfig { modes: 3, energy: tau, max_rank: None }).unwrap();
+            let err = w.sub(&tt.reconstruct()).fro_norm();
+            let rel2 = err * err / (w.fro_norm() * w.fro_norm());
+            assert!(rel2 <= (1.0 - tau) + 1e-5, "tau={tau}: rel2={rel2}");
+        }
+    }
+
+    #[test]
+    fn apply_matches_materialized_matvec() {
+        let w = randn(24, 30, 5);
+        let tt = tt_svd(&w, &TtConfig { modes: 3, energy: 0.95, max_rank: None }).unwrap();
+        let wr = tt.reconstruct();
+        let x = randn(4, 24, 6);
+        let y = tt.apply(4, &x.data).unwrap();
+        let want = x.matmul(&wr);
+        for (a, b) in y.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn max_rank_cap_respected() {
+        let w = randn(32, 32, 7);
+        let tt = tt_svd(&w, &TtConfig { modes: 3, energy: 1.0, max_rank: Some(3) }).unwrap();
+        assert!(tt.max_rank() <= 3, "ranks={:?}", tt.ranks());
+    }
+
+    #[test]
+    fn store_round_trip_and_views() {
+        let w = randn(12, 12, 8);
+        let tt = tt_svd(&w, &TtConfig { modes: 2, energy: 1.0, max_rank: None }).unwrap();
+        let want = tt.reconstruct();
+        let mut store = ParamStore::new();
+        tt.insert_into(&mut store, "fc/");
+        let t0 = store.get("fc/tt0").unwrap();
+        let t1 = store.get("fc/tt1").unwrap();
+        let views = [TtCoreView::of_tensor(t0).unwrap(), TtCoreView::of_tensor(t1).unwrap()];
+        let (m, n, data) = tt_materialize(&views).unwrap();
+        assert_eq!((m, n), (12, 12));
+        assert_eq!(data, want.data);
+    }
+
+    #[test]
+    fn bad_chains_rejected() {
+        let c0 = TtCore { r_in: 1, m: 2, n: 2, r_out: 3, data: vec![0.0; 12] };
+        let c1 = TtCore { r_in: 2, m: 2, n: 2, r_out: 1, data: vec![0.0; 8] };
+        let views = [c0.view(), c1.view()];
+        assert!(tt_materialize(&views).is_err());
+        let mut ws = Workspace::new();
+        assert!(tt_apply_ws(1, 4, &[0.0; 4], &views, &mut ws).is_err());
+    }
+}

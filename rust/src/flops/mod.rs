@@ -39,6 +39,16 @@ pub fn layer_flops(layer: &LayerInfo, tokens: usize) -> u64 {
             layer.out_dim,
             layer.rank.unwrap_or(0),
         ),
+        LayerKind::TtLinear => {
+            // Exact contraction cost of the core chain when the classifier
+            // recovered it; dense fallback otherwise (never cheaper).
+            2 * tokens as u64
+                * layer
+                    .tt
+                    .as_ref()
+                    .map(crate::model::TtInfo::macs_per_token)
+                    .unwrap_or(layer.in_dim as u64 * layer.out_dim as u64)
+        }
         LayerKind::LayerNorm => 8 * tokens as u64 * layer.in_dim as u64,
         LayerKind::Embedding => 0, // gather, no MACs
         LayerKind::Other => 0,
@@ -82,6 +92,7 @@ mod tests {
             out_dim: n,
             kernel: None,
             rank: None,
+            tt: None,
         }
     }
 
@@ -93,6 +104,7 @@ mod tests {
             out_dim: n,
             kernel: None,
             rank: Some(r),
+            tt: None,
         }
     }
 
@@ -113,6 +125,23 @@ mod tests {
         // 128x128 at r=32: dense 2·128·128, led 2·32·256 => 16384/8192 = 2x
         assert!((led_speedup(128, 128, 32) - 2.0).abs() < 1e-12);
         assert!((led_speedup(768, 3072, 192) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tt_flops_exact_and_fallback() {
+        let tt = crate::model::TtInfo {
+            m_dims: vec![4, 6],
+            n_dims: vec![6, 6],
+            ranks: vec![1, 3, 1],
+        };
+        let macs = tt.macs_per_token();
+        let mut layer = linear("tt", 24, 36);
+        layer.kind = LayerKind::TtLinear;
+        layer.tt = Some(tt);
+        assert_eq!(layer_flops(&layer, 7), 2 * 7 * macs);
+        // Without the recovered chain the model falls back to dense cost.
+        layer.tt = None;
+        assert_eq!(layer_flops(&layer, 7), dense_linear_flops(7, 24, 36));
     }
 
     #[test]

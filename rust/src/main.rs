@@ -35,7 +35,11 @@ USAGE: greenformer [--artifacts DIR] [--backend auto|native|pjrt] <command> [opt
 COMMANDS:
   info                                  show the artifact manifest summary
   factorize --input F --output F        auto_fact a GTZ checkpoint
-            [--ratio 0.25] [--rank N] [--solver svd|snmf|random]
+            [--ratio 0.25] [--rank N] [--solver svd|snmf|random|tt|auto]
+            [--tt-modes 3] [--tt-energy 0.9] [--tt-max-rank N]
+            (tt replaces linears with TT core chains when the cores beat
+            dense on bytes; auto picks dense|LED|TT per layer by bytes at
+            the shared --tt-energy budget)
             [--num-iter 50] [--submodule S]...
             [--precision f32|int8|binary] report the post-SVD quantization
             pass (bytes + worst-case logit bound; checkpoint stays f32)
@@ -210,6 +214,14 @@ fn main() -> Result<()> {
             };
             let submodules = args.all("--submodule");
             let precision: WeightPrecision = args.get_or("--precision", "f32").parse()?;
+            let tt = greenformer::factorize::TtConfig {
+                modes: args.parse_or("--tt-modes", 3usize),
+                energy: args.parse_or("--tt-energy", 0.9f64),
+                max_rank: match args.get("--tt-max-rank") {
+                    Some(r) => Some(r.parse()?),
+                    None => None,
+                },
+            };
             let mut params = ParamStore::load_gtz(&input)?;
             let report = auto_fact(
                 &mut params,
@@ -218,6 +230,7 @@ fn main() -> Result<()> {
                     solver,
                     num_iter: args.parse_or("--num-iter", 50),
                     submodules: (!submodules.is_empty()).then_some(submodules),
+                    tt,
                     precision,
                 },
             )?;
@@ -436,6 +449,7 @@ fn generate_cmd(args: &Args) -> Result<()> {
                 solver: Solver::Random,
                 num_iter: 0,
                 submodules: None,
+                tt: greenformer::factorize::TtConfig::default(),
                 // The session packs its own quant store below; keep the
                 // factorization pass itself precision-free.
                 precision: WeightPrecision::F32,

@@ -10,6 +10,7 @@
 //! | `w` (2-D) [+ `bias`] | [`LayerKind::Linear`]    |
 //! | `w` (4-D) [+ `bias`] | [`LayerKind::Conv2d`]    |
 //! | `a` + `b` [+ `bias`] | LED / CED (factorized)   |
+//! | `tt0`.. [+ `bias`]   | [`LayerKind::TtLinear`]  |
 //! | `table`              | [`LayerKind::Embedding`] |
 //! | `g` + `bias`         | [`LayerKind::LayerNorm`] |
 //!
@@ -29,6 +30,8 @@ pub enum LayerKind {
     LedLinear,
     /// Already-factorized conv (CED).
     CedConv2d,
+    /// Tensor-train-factorized linear (`tt0..ttK` cores, DESIGN.md §13).
+    TtLinear,
     /// Lookup table (`embed/table`, `pos/table`).
     Embedding,
     /// LayerNorm gain + bias.
@@ -51,8 +54,47 @@ pub struct LayerInfo {
     pub out_dim: usize,
     /// Conv spatial kernel (kh, kw) when applicable.
     pub kernel: Option<(usize, usize)>,
-    /// Factor rank for LED/CED layers.
+    /// Factor rank for LED/CED layers (max internal rank for TT).
     pub rank: Option<usize>,
+    /// TT mode/rank structure when `kind == TtLinear`.
+    pub tt: Option<TtInfo>,
+}
+
+/// Mode dims and rank chain of a TT-factorized linear — enough to count
+/// its parameters and cost its contraction without re-reading the store.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TtInfo {
+    /// Input mode dims (`∏` = in_dim).
+    pub m_dims: Vec<usize>,
+    /// Output mode dims (`∏` = out_dim).
+    pub n_dims: Vec<usize>,
+    /// Full rank chain `r_0..r_d` (boundaries are 1).
+    pub ranks: Vec<usize>,
+}
+
+impl TtInfo {
+    /// Total stored core elements: Σ_k r_{k-1}·m_k·n_k·r_k.
+    pub fn n_params(&self) -> usize {
+        (0..self.m_dims.len())
+            .map(|k| self.ranks[k] * self.m_dims[k] * self.n_dims[k] * self.ranks[k + 1])
+            .sum()
+    }
+
+    /// Exact MACs of the interpreter's per-token TT contraction: at step k
+    /// the GEMM is (P·S, r_{k-1}·m_k, n_k·r_k) with P = ∏_{l<k} n_l and
+    /// S = ∏_{l>k} m_l.
+    pub fn macs_per_token(&self) -> u64 {
+        let d = self.m_dims.len();
+        let mut total = 0u64;
+        for k in 0..d {
+            let p: u64 = self.n_dims[..k].iter().map(|&v| v as u64).product();
+            let s: u64 = self.m_dims[k + 1..].iter().map(|&v| v as u64).product();
+            let ri = (self.ranks[k] * self.m_dims[k]) as u64;
+            let nr = (self.n_dims[k] * self.ranks[k + 1]) as u64;
+            total += p * s * ri * nr;
+        }
+        total
+    }
 }
 
 impl LayerInfo {
@@ -63,6 +105,11 @@ impl LayerInfo {
                 let r = self.rank.unwrap_or(0);
                 r * (self.in_dim + self.out_dim)
             }
+            LayerKind::TtLinear => self
+                .tt
+                .as_ref()
+                .map(TtInfo::n_params)
+                .unwrap_or(self.in_dim * self.out_dim),
             _ => self.in_dim * self.out_dim,
         }
     }
@@ -101,6 +148,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
                 out_dim: w.shape[1],
                 kernel: None,
                 rank: None,
+                tt: None,
             };
         }
         if w.ndim() == 4 {
@@ -111,6 +159,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
                 out_dim: w.shape[3],
                 kernel: Some((w.shape[0], w.shape[1])),
                 rank: None,
+                tt: None,
             };
         }
     }
@@ -123,6 +172,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
                 out_dim: b.shape[1],
                 kernel: None,
                 rank: Some(a.shape[1]),
+                tt: None,
             };
         }
         if a.ndim() == 4 && b.ndim() == 4 {
@@ -133,8 +183,35 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
                 out_dim: b.shape[3],
                 kernel: Some((a.shape[0], a.shape[1])),
                 rank: Some(a.shape[3]),
+                tt: None,
             };
         }
+    }
+    // TT group: `tt0..ttK` 4-D cores in chain order.
+    let mut tt_cores: Vec<&crate::tensor::Tensor> = Vec::new();
+    loop {
+        let leaf = format!("tt{}", tt_cores.len());
+        match members.iter().find(|(l, _)| *l == leaf) {
+            Some((_, t)) if t.ndim() == 4 => tt_cores.push(t),
+            _ => break,
+        }
+    }
+    if !tt_cores.is_empty() {
+        let m_dims: Vec<usize> = tt_cores.iter().map(|t| t.shape[1]).collect();
+        let n_dims: Vec<usize> = tt_cores.iter().map(|t| t.shape[2]).collect();
+        let mut ranks = vec![tt_cores[0].shape[0]];
+        ranks.extend(tt_cores.iter().map(|t| t.shape[3]));
+        let info = TtInfo { m_dims, n_dims, ranks };
+        let max_rank = info.ranks.iter().copied().max().unwrap_or(1);
+        return LayerInfo {
+            name,
+            kind: LayerKind::TtLinear,
+            in_dim: info.m_dims.iter().product(),
+            out_dim: info.n_dims.iter().product(),
+            kernel: None,
+            rank: Some(max_rank),
+            tt: Some(info),
+        };
     }
     if let Some(t) = table {
         return LayerInfo {
@@ -144,6 +221,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
             out_dim: t.shape.get(1).copied().unwrap_or(0),
             kernel: None,
             rank: None,
+            tt: None,
         };
     }
     if g.is_some() {
@@ -154,6 +232,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
             out_dim: g.unwrap().len(),
             kernel: None,
             rank: None,
+            tt: None,
         };
     }
     LayerInfo {
@@ -163,6 +242,7 @@ fn classify_group(name: String, members: &[(&str, &crate::tensor::Tensor)]) -> L
         out_dim: 0,
         kernel: None,
         rank: None,
+        tt: None,
     }
 }
 
@@ -186,6 +266,10 @@ mod tests {
         s.insert("embed/table", Tensor::zeros(&[512, 64], Dtype::F32));
         s.insert("ln/g", Tensor::zeros(&[64], Dtype::F32));
         s.insert("ln/bias", Tensor::zeros(&[64], Dtype::F32));
+        // TT linear: 24 = 4·6 in, 36 = 6·6 out, internal rank 3.
+        s.insert("ttfc/bias", Tensor::zeros(&[36], Dtype::F32));
+        s.insert("ttfc/tt0", Tensor::zeros(&[1, 4, 6, 3], Dtype::F32));
+        s.insert("ttfc/tt1", Tensor::zeros(&[3, 6, 6, 1], Dtype::F32));
         s
     }
 
@@ -203,6 +287,13 @@ mod tests {
         assert_eq!(by_name["conv2"].rank, Some(4));
         assert_eq!(by_name["embed"].kind, LayerKind::Embedding);
         assert_eq!(by_name["ln"].kind, LayerKind::LayerNorm);
+        let tt = &by_name["ttfc"];
+        assert_eq!(tt.kind, LayerKind::TtLinear);
+        assert_eq!((tt.in_dim, tt.out_dim), (24, 36));
+        assert_eq!(tt.rank, Some(3));
+        let info = tt.tt.as_ref().unwrap();
+        assert_eq!(info.ranks, vec![1, 3, 1]);
+        assert_eq!(info.m_dims, vec![4, 6]);
     }
 
     #[test]
@@ -213,6 +304,11 @@ mod tests {
         assert_eq!(by_name["block0/attn/q"].weight_params(), 64 * 64);
         assert_eq!(by_name["block0/fc1"].weight_params(), 16 * (64 + 128));
         assert_eq!(by_name["conv2"].weight_params(), 4 * (72 + 16));
+        // TT: exact core elements (1·4·6·3 + 3·6·6·1), not r·(in + out).
+        assert_eq!(by_name["ttfc"].weight_params(), 72 + 108);
+        let info = by_name["ttfc"].tt.as_ref().unwrap();
+        // Step 0: (P·S = 6, 1·4, 6·3) = 432 MACs; step 1: (P·S = 6, 3·6, 6·1) = 648.
+        assert_eq!(info.macs_per_token(), 432 + 648);
     }
 
     #[test]

@@ -21,7 +21,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use greenformer::backend::native::{init_text_params, synth_fwd_graph, TextModelCfg};
 use greenformer::backend::{Backend, DecodeSession, NativeBackend};
-use greenformer::factorize::WeightPrecision;
+use greenformer::experiments::kron_structured_lm;
+use greenformer::factorize::{auto_fact, AutoFactConfig, Solver, TtConfig, WeightPrecision};
 
 struct CountingAlloc;
 
@@ -128,4 +129,50 @@ fn steady_state_decode_steps_do_not_allocate_in_the_interpreter() {
         "int8 per-step allocation counts drifted: {per_step:?}"
     );
     assert!(first <= 4, "steady-state int8 decode step made {first} allocations");
+
+    // Same contract for a TT-factorized model: the core-chain contraction
+    // in `tt_apply_ws` draws every slab-transpose/GEMM buffer from the
+    // session workspace, so once warmup has sized the arena the step is
+    // allocation-free. Kronecker-structured weights make every linear layer
+    // TT-rank-1, so the `tt` solver actually replaces them (unstructured
+    // weights would be gate-rejected: full-rank TT holds more floats than
+    // dense).
+    let mut params = kron_structured_lm(&cfg, 11).unwrap();
+    let report = auto_fact(
+        &mut params,
+        &AutoFactConfig {
+            solver: Solver::Tt,
+            tt: TtConfig { modes: 2, energy: 0.99, max_rank: None },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.n_factorized() > 0, "no layer took the TT path");
+    let graph = synth_fwd_graph("lm", "tt", 1, &params).unwrap();
+    let mut session = DecodeSession::new(&graph, &params).unwrap();
+
+    be.run_decode_step(&graph, &params, &mut session, &[1, 2, 3, 4]).unwrap();
+    for t in 0..2 {
+        be.run_decode_step(&graph, &params, &mut session, &[t]).unwrap();
+    }
+    session.reset_scratch_stats();
+    let mut per_step = Vec::new();
+    for t in 0..8 {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        let logits = be.run_decode_step(&graph, &params, &mut session, &[10 + t]).unwrap();
+        let after = ALLOCS.load(Ordering::Relaxed);
+        per_step.push(after - before);
+        assert!(logits.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    }
+    assert_eq!(
+        session.scratch_alloc_misses(),
+        0,
+        "TT workspace had to allocate in steady state"
+    );
+    let first = per_step[0];
+    assert!(
+        per_step.iter().all(|&c| c == first),
+        "TT per-step allocation counts drifted: {per_step:?}"
+    );
+    assert!(first <= 4, "steady-state TT decode step made {first} allocations");
 }

@@ -1,0 +1,339 @@
+//! Randomized property tests for the tensor-train solver family (in-tree
+//! generator over `Pcg64` — proptest is unavailable offline; the
+//! methodology is the same: many random cases per invariant, failing seed
+//! printed on panic). Runs hermetically: no artifacts, no PJRT.
+//!
+//! Invariants:
+//! * `tt_svd` at `energy = 1.0` is an exact round-trip over adversarial
+//!   shapes — prime dims (cores degrade to `1 × … × dim`), unbalanced
+//!   splits, 2 and 3 modes — and at `energy = τ < 1` the relative error
+//!   respects the per-sweep budget bound `err ≤ sqrt(1 − τ)`;
+//! * an exact Kronecker product factorizes at internal TT rank 1;
+//! * the TT-matvec core-chain contraction behind the public
+//!   [`apply_linear`] entry point (including the bias epilogue) matches a
+//!   matvec against the materialized weight to 1e-5;
+//! * [`linear_bwd`] TT core gradients match central finite differences of
+//!   a scalar loss on every core;
+//! * KV-cached incremental decode over a TT-factorized LM is equivalent to
+//!   full-prefix `run_fwd` at every position (row-count independence of
+//!   the contraction);
+//! * the `auto` chooser picks TT over LED on a Kronecker-structured layer
+//!   where LED cannot win on serialized bytes at the same energy budget.
+
+use greenformer::backend::grad::{linear_bwd, Grads};
+use greenformer::backend::native::{apply_linear, synth_fwd_graph, TextModelCfg};
+use greenformer::backend::{Backend, DecodeSession, NativeBackend};
+use greenformer::experiments::kron_structured_lm;
+use greenformer::factorize::auto_fact::Decision;
+use greenformer::factorize::{auto_fact, AutoFactConfig, Solver, TtConfig};
+use greenformer::linalg::Matrix;
+use greenformer::tensor::{ParamStore, Tensor};
+use greenformer::util::Pcg64;
+
+const TOL: f32 = 1e-5;
+
+/// `kron(a, b)` laid out so `mode_dims(m, 2)` / `mode_dims(n, 2)` recover
+/// exactly the `(a, b)` block structure (square-ish factors: the greedy
+/// splitter picks the divisor closest to sqrt).
+fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = (a.rows * b.rows, a.cols * b.cols);
+    let mut w = Matrix::zeros(m, n);
+    for i1 in 0..a.rows {
+        for i2 in 0..b.rows {
+            for j1 in 0..a.cols {
+                for j2 in 0..b.cols {
+                    *w.at_mut(i1 * b.rows + i2, j1 * b.cols + j2) = a.at(i1, j1) * b.at(i2, j2);
+                }
+            }
+        }
+    }
+    w
+}
+
+#[test]
+fn tt_reconstruct_exact_at_full_energy_adversarial_shapes() {
+    // (m, n, modes): primes degrade to 1 x .. x dim cores, composites split.
+    let shapes = [(13, 7, 2), (7, 13, 3), (12, 18, 2), (64, 27, 3), (30, 30, 3), (5, 5, 2)];
+    for (case, &(m, n, modes)) in shapes.iter().enumerate() {
+        let mut rng = Pcg64::new(case as u64, 310);
+        let w = Matrix::randn(m, n, 1.0, &mut rng);
+        let cfg = TtConfig { modes, energy: 1.0, max_rank: None };
+        let tt = tt_svd_ok(&w, &cfg, case);
+        assert_eq!(tt.ranks().len(), modes - 1, "case {case}: one internal rank per bond");
+        let err = rel_err(&w, &tt.reconstruct());
+        assert!(err < 1e-4, "case {case} ({m}x{n} modes {modes}): round-trip err {err}");
+    }
+}
+
+#[test]
+fn tt_truncation_error_respects_energy_budget_and_rank_cap() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::new(seed, 311);
+        let (m, n) = (8 + 4 * rng.below(5), 8 + 4 * rng.below(5));
+        let w = Matrix::randn(m, n, 1.0, &mut rng);
+        let tau = 0.9;
+        let cfg = TtConfig { modes: 2, energy: tau, max_rank: None };
+        let tt = tt_svd_ok(&w, &cfg, seed as usize);
+        let err = rel_err(&w, &tt.reconstruct());
+        let bound = (1.0 - tau).sqrt();
+        assert!(err <= bound + 1e-2, "seed {seed}: err {err} above sqrt(1-tau) {bound}");
+
+        let capped = tt_svd_ok(&w, &TtConfig { modes: 2, energy: 1.0, max_rank: Some(2) }, 0);
+        assert!(capped.ranks().iter().all(|&r| r <= 2), "seed {seed}: {:?}", capped.ranks());
+    }
+}
+
+#[test]
+fn kron_products_factorize_at_tt_rank_one() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(seed, 312);
+        let a = Matrix::randn(6, 5, 1.0, &mut rng);
+        let b = Matrix::randn(6, 5, 1.0, &mut rng);
+        let w = kron(&a, &b); // 36x25: mode_dims -> [6,6] x [5,5]
+        let cfg = TtConfig { modes: 2, energy: 0.5, max_rank: None };
+        let tt = tt_svd_ok(&w, &cfg, seed as usize);
+        assert_eq!(tt.ranks(), vec![1], "seed {seed}: kron must be TT-rank-1");
+        let err = rel_err(&w, &tt.reconstruct());
+        assert!(err < 1e-4, "seed {seed}: rank-1 chain must be exact, err {err}");
+    }
+}
+
+#[test]
+fn tt_matvec_via_apply_linear_matches_materialized() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(seed, 313);
+        let k = 6 + rng.below(27);
+        let n = 6 + rng.below(27);
+        let sigma = 1.0 / (k as f32).sqrt();
+        let w = Matrix::randn(k, n, sigma, &mut rng);
+        let modes = if seed % 2 == 0 { 2 } else { 3 };
+        let tt = tt_svd_ok(&w, &TtConfig { modes, energy: 1.0, max_rank: None }, seed as usize);
+        let rec = tt.reconstruct();
+
+        let mut params = ParamStore::new();
+        tt.insert_into(&mut params, "fc/");
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+        params.insert("fc/bias", Tensor::from_f32(&[n], bias.clone()));
+
+        let rows = 1 + rng.below(5);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+        let (got_n, y) = apply_linear(&params, "fc", rows, k, &x).unwrap();
+        assert_eq!(got_n, n, "seed {seed}");
+        for r in 0..rows {
+            for j in 0..n {
+                let want = bias[j] + (0..k).map(|i| x[r * k + i] * rec.at(i, j)).sum::<f32>();
+                let got = y[r * n + j];
+                assert!(
+                    (got - want).abs() <= TOL * want.abs().max(1.0),
+                    "seed {seed} row {r} col {j}: tt {got} vs materialized {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tt_core_gradients_match_finite_differences() {
+    for seed in 0..4u64 {
+        let mut rng = Pcg64::new(seed, 314);
+        let (rows, k, n) = (3, 12, 10);
+        let w = Matrix::randn(k, n, 1.0 / (k as f32).sqrt(), &mut rng);
+        let tt = tt_svd_ok(&w, &TtConfig { modes: 2, energy: 1.0, max_rank: None }, 0);
+        let mut params = ParamStore::new();
+        tt.insert_into(&mut params, "fc/");
+
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+        // Loss L = sum(c .* y) is linear in y, so dy = c exactly; y is
+        // multilinear in the cores, so L is exactly linear in any single
+        // perturbed entry — the central difference has no curvature term
+        // and a generous step just dilutes f32 rounding noise.
+        let c: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32()).collect();
+        let loss = |params: &ParamStore| -> f64 {
+            let (_, y) = apply_linear(params, "fc", rows, k, &x).unwrap();
+            y.iter().zip(&c).map(|(&yi, &ci)| yi as f64 * ci as f64).sum()
+        };
+
+        let mut grads = Grads::default();
+        let dx = linear_bwd(&params, "fc", rows, k, &x, &c, &mut grads).unwrap();
+        assert_eq!(dx.len(), rows * k, "seed {seed}");
+
+        for core in 0..2 {
+            let name = format!("fc/tt{core}");
+            let g = grads.get(&name).unwrap_or_else(|| panic!("seed {seed}: no grad for {name}"));
+            let len = params.get(&name).unwrap().len();
+            assert_eq!(g.len(), len, "seed {seed}: grad size for {name}");
+            let mut probes = vec![argmax_abs(g)];
+            probes.push(rng.below(len));
+            probes.dedup();
+            for &idx in &probes {
+                let fd = central_diff(&mut params, &name, idx, 1e-2, &loss);
+                let a = g[idx];
+                assert!(
+                    (fd - a).abs() <= 1e-2 * a.abs().max(fd.abs()) + 1e-3,
+                    "seed {seed} {name}[{idx}]: analytic {a} vs fd {fd}"
+                );
+            }
+        }
+        // dx check: same linear loss, perturbing x directly.
+        let probe = argmax_abs(&dx);
+        let mut xp = x.clone();
+        let h = 1e-2f32;
+        xp[probe] = x[probe] + h;
+        let lp = loss_with_x(&params, rows, k, &xp, &c);
+        xp[probe] = x[probe] - h;
+        let lm = loss_with_x(&params, rows, k, &xp, &c);
+        let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+        let a = dx[probe];
+        assert!(
+            (fd - a).abs() <= 1e-2 * a.abs().max(fd.abs()) + 1e-3,
+            "seed {seed} dx[{probe}]: analytic {a} vs fd {fd}"
+        );
+    }
+}
+
+#[test]
+fn kv_cached_tt_decode_matches_full_recompute() {
+    for seed in 0..4u64 {
+        let mut rng = Pcg64::new(seed, 315);
+        let vocab = 40 + rng.below(17);
+        let cfg = TextModelCfg {
+            vocab,
+            seq: 8 + rng.below(5),
+            d: 36,
+            heads: 4,
+            layers: 1 + rng.below(2),
+            ff: 36,
+            classes: vocab, // head width = vocab: causal LM
+        };
+        let mut params = kron_structured_lm(&cfg, seed ^ 0xA7).unwrap();
+        let report = auto_fact(
+            &mut params,
+            &AutoFactConfig {
+                solver: Solver::Tt,
+                tt: TtConfig { modes: 2, energy: 0.99, max_rank: None },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let n_tt = report
+            .layers
+            .iter()
+            .filter(|l| matches!(l.decision, Decision::FactorizedTt { .. }))
+            .count();
+        assert!(n_tt > 0, "seed {seed}: no layer took the TT path");
+
+        let mut g = synth_fwd_graph("lm", "tt", 1, &params).unwrap();
+        g.config.insert("heads".to_string(), cfg.heads);
+        let be = NativeBackend::new();
+        let (s, vocab) = (cfg.seq, cfg.vocab);
+        let toks: Vec<i32> = (0..s).map(|_| rng.below(vocab) as i32).collect();
+
+        let full = be
+            .run_fwd(&g, &params, &[Tensor::from_i32(&[1, s], toks.clone())])
+            .unwrap();
+        let full = full[0].as_f32().unwrap();
+
+        let mut session = DecodeSession::new(&g, &params).unwrap();
+        let p = 1 + rng.below(s - 1);
+        let mut logits = be.run_decode_step(&g, &params, &mut session, &toks[..p]).unwrap();
+        let mut pos = p - 1;
+        loop {
+            let got = logits.as_f32().unwrap();
+            let want = &full[pos * vocab..(pos + 1) * vocab];
+            for (j, (a, b)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (a - b).abs() <= TOL,
+                    "seed {seed} pos {pos} logit {j}: decode {a} vs full {b}"
+                );
+            }
+            if pos + 1 == s {
+                break;
+            }
+            logits = be
+                .run_decode_step(&g, &params, &mut session, &toks[pos + 1..pos + 2])
+                .unwrap();
+            pos += 1;
+        }
+        assert_eq!(session.len(), s, "seed {seed}");
+    }
+}
+
+#[test]
+fn auto_chooser_beats_led_bytes_on_kron_layer() {
+    let mut rng = Pcg64::new(9, 316);
+    let a = Matrix::randn(8, 8, 1.0, &mut rng);
+    let b = Matrix::randn(8, 8, 1.0, &mut rng);
+    let w = kron(&a, &b); // 64x64, TT-rank-1 at modes=2; flat LED spectrum
+    let mut params = ParamStore::new();
+    params.insert("fc/w", Tensor::from_f32(&[64, 64], w.data.clone()));
+    params.insert("fc/bias", Tensor::from_f32(&[64], vec![0.0; 64]));
+
+    let report = auto_fact(
+        &mut params,
+        &AutoFactConfig {
+            solver: Solver::Auto,
+            tt: TtConfig { modes: 2, energy: 0.99, max_rank: None },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let fc = report.layers.iter().find(|l| l.name == "fc").expect("fc decision");
+    assert!(
+        matches!(fc.decision, Decision::FactorizedTt { .. }),
+        "auto must pick TT on a Kronecker layer, got {:?}",
+        fc.decision
+    );
+    assert!(
+        report.bytes_after < report.bytes_before,
+        "bytes {} -> {}",
+        report.bytes_before,
+        report.bytes_after
+    );
+    // 2 rank-1 cores of 64 f32 each + bias, vs the 64x64 dense layer.
+    assert!(params.get("fc/tt0").is_some() && params.get("fc/w").is_none());
+}
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn tt_svd_ok(w: &Matrix, cfg: &TtConfig, case: usize) -> greenformer::factorize::TtParams {
+    greenformer::factorize::tt_svd(w, cfg)
+        .unwrap_or_else(|e| panic!("case {case}: tt_svd failed: {e}"))
+}
+
+fn rel_err(w: &Matrix, rec: &Matrix) -> f64 {
+    w.sub(rec).fro_norm() / w.fro_norm().max(1e-30)
+}
+
+fn argmax_abs(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in v.iter().enumerate() {
+        if x.abs() > v[best].abs() {
+            best = i;
+        }
+    }
+    best
+}
+
+fn loss_with_x(params: &ParamStore, rows: usize, k: usize, x: &[f32], c: &[f32]) -> f64 {
+    let (_, y) = apply_linear(params, "fc", rows, k, x).unwrap();
+    y.iter().zip(c).map(|(&yi, &ci)| yi as f64 * ci as f64).sum()
+}
+
+/// Central finite difference of `loss` w.r.t. `params[name][idx]`.
+fn central_diff(
+    params: &mut ParamStore,
+    name: &str,
+    idx: usize,
+    h: f32,
+    loss: &dyn Fn(&ParamStore) -> f64,
+) -> f32 {
+    let orig = params.get(name).unwrap().as_f32().unwrap()[idx];
+    params.get_mut(name).unwrap().as_f32_mut().unwrap()[idx] = orig + h;
+    let lp = loss(params);
+    params.get_mut(name).unwrap().as_f32_mut().unwrap()[idx] = orig - h;
+    let lm = loss(params);
+    params.get_mut(name).unwrap().as_f32_mut().unwrap()[idx] = orig;
+    ((lp - lm) / (2.0 * h as f64)) as f32
+}

@@ -1,0 +1,101 @@
+//! End-to-end HTTP serving bench: classify throughput through the real
+//! socket (connect + HTTP parse + registry resolve + dispatch per request,
+//! `Connection: close` semantics) for the dense and LED checkpoints of one
+//! registered model — what an external client actually pays, as opposed to
+//! `native_serving`'s in-process handle numbers.
+//!
+//! Runs hermetically on a loopback ephemeral port and prints a
+//! machine-readable `BENCH_HTTP {...}` JSON line.
+//!
+//! Env: GREENFORMER_BENCH_HTTP_REQUESTS (default 128) scales the run.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use greenformer::backend::native::{demo_variants, TextModelCfg};
+use greenformer::coordinator::{BatcherConfig, RoutePolicy, ServeConfig};
+use greenformer::eval::measure_http_serving;
+use greenformer::registry::ModelRegistry;
+use greenformer::serve_http::{HttpConfig, HttpServer};
+
+const CLIENTS: usize = 8;
+const MAX_BATCH: usize = 8;
+
+fn main() {
+    let requests: usize = std::env::var("GREENFORMER_BENCH_HTTP_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+
+    let cfg = TextModelCfg::default();
+    let (dense, led25) = demo_variants(&cfg, 42, 0.25).expect("variants");
+    let mut variants = HashMap::new();
+    variants.insert("dense".to_string(), dense);
+    variants.insert("led_r25".to_string(), led25);
+
+    let serve_cfg = ServeConfig::with_batcher(
+        BatcherConfig { max_batch: MAX_BATCH, max_wait: Duration::from_millis(2) },
+        4096,
+    );
+    let registry = Arc::new(ModelRegistry::with_serve_config(serve_cfg));
+    // Quality/balanced stay on dense; the fast tier rides the LED factors.
+    let route = RoutePolicy::Tiered {
+        quality: "dense".to_string(),
+        balanced: "dense".to_string(),
+        fast: "led_r25".to_string(),
+    };
+    registry
+        .install_local("bench", "text", "v1", "dense", variants, Some(route))
+        .expect("install bench model");
+
+    let server =
+        HttpServer::bind("127.0.0.1:0", registry, HttpConfig::default()).expect("bind http");
+    let addr = server.local_addr();
+
+    let tokens: Vec<i32> = (0..cfg.seq as i32).map(|i| i % cfg.vocab as i32).collect();
+    let body_for = |tier: &str| format!("{{\"tokens\":{tokens:?},\"tier\":\"{tier}\"}}");
+
+    println!(
+        "== http serving: dense vs LED over loopback (clients={CLIENTS}, batch={MAX_BATCH}, \
+         requests={requests}, d={} ff={} seq={}) ==",
+        cfg.d, cfg.ff, cfg.seq
+    );
+    println!("{:<10} {:>10} {:>10} {:>10} {:>6}", "tier", "req/s", "p50(us)", "p95(us)", "ok");
+
+    // Warm the dispatcher + thread pool outside the measured runs.
+    measure_http_serving(addr, &body_for("quality"), MAX_BATCH, CLIENTS).expect("warmup");
+
+    let dense_stats = measure_http_serving(addr, &body_for("quality"), requests, CLIENTS)
+        .expect("dense run");
+    println!(
+        "{:<10} {:>10.1} {:>10} {:>10} {:>6}",
+        "quality", dense_stats.rps, dense_stats.p50_us, dense_stats.p95_us, dense_stats.ok
+    );
+    let led_stats =
+        measure_http_serving(addr, &body_for("fast"), requests, CLIENTS).expect("led run");
+    println!(
+        "{:<10} {:>10.1} {:>10} {:>10} {:>6}",
+        "fast", led_stats.rps, led_stats.p50_us, led_stats.p95_us, led_stats.ok
+    );
+
+    assert_eq!(dense_stats.ok, requests, "dense run had non-2xx replies");
+    assert_eq!(led_stats.ok, requests, "led run had non-2xx replies");
+
+    println!("speedup vs dense: led_r25 {:.2}x", led_stats.rps / dense_stats.rps);
+    println!(
+        "BENCH_HTTP {{\"requests\":{requests},\"clients\":{CLIENTS},\
+         \"dense_rps\":{:.2},\"led_r25_rps\":{:.2},\
+         \"dense_p50_us\":{},\"dense_p95_us\":{},\"led_r25_p50_us\":{},\"led_r25_p95_us\":{},\
+         \"led_r25_speedup\":{:.3}}}",
+        dense_stats.rps,
+        led_stats.rps,
+        dense_stats.p50_us,
+        dense_stats.p95_us,
+        led_stats.p50_us,
+        led_stats.p95_us,
+        led_stats.rps / dense_stats.rps
+    );
+
+    server.shutdown().expect("clean shutdown");
+}

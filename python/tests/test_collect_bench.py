@@ -66,6 +66,16 @@ def test_tt_bench_wired_into_default_set():
     assert got == [("BENCH_TT", {"tt_compression": 0.05, "tt_agreement": 1.0})]
 
 
+def test_http_bench_wired_into_default_set():
+    # The HTTP front-end bench rides the same collector: default set, quick
+    # env knob, and highlight fields all present.
+    assert "http_serving" in DEFAULT_BENCHES
+    assert QUICK_ENV.get("GREENFORMER_BENCH_HTTP_REQUESTS") == "48"
+    assert "led_r25_speedup" in HIGHLIGHTS["BENCH_HTTP"]
+    got = parse_bench_lines('BENCH_HTTP {"dense_rps":120.0,"led_r25_speedup":1.4}\n')
+    assert got == [("BENCH_HTTP", {"dense_rps": 120.0, "led_r25_speedup": 1.4})]
+
+
 def test_marker_regex_shape_unchanged():
     # The Rust benches print `BENCH_<UPPER_SNAKE> {json}`; pin the contract.
     m = MARKER_RE.match('BENCH_QUANT {"x":1}')

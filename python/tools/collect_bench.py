@@ -33,7 +33,14 @@ import re
 import subprocess
 import sys
 
-DEFAULT_BENCHES = ["kernel_speedup", "native_decode", "native_serving", "native_quant", "native_tt"]
+DEFAULT_BENCHES = [
+    "kernel_speedup",
+    "native_decode",
+    "native_serving",
+    "native_quant",
+    "native_tt",
+    "http_serving",
+]
 
 # Env knobs that keep the --quick run short enough for CI.
 QUICK_ENV = {
@@ -45,6 +52,7 @@ QUICK_ENV = {
     "GREENFORMER_BENCH_TRAIN_STEPS": "8",
     "GREENFORMER_BENCH_QUANT": "quick",
     "GREENFORMER_BENCH_TT": "quick",
+    "GREENFORMER_BENCH_HTTP_REQUESTS": "48",
 }
 
 # Headline fields worth surfacing per marker (everything is persisted; these
@@ -58,6 +66,7 @@ HIGHLIGHTS = {
         "acceptance_rate",
     ],
     "BENCH_NATIVE_SERVING": ["led_r25_speedup"],
+    "BENCH_HTTP": ["dense_rps", "led_r25_speedup"],
     "BENCH_KERNELS": [],
     "BENCH_NATIVE_TRAIN": [],
     "BENCH_QUANT": [

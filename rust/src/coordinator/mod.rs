@@ -61,7 +61,7 @@ pub use router::{RoutePolicy, Router, Tier};
 // `coordinator::{ServeConfig, SpecConfig}` imports stay one-stop.
 pub use crate::backend::SpecConfig;
 pub use server::{
-    serve_classifier, serve_classifier_native, serve_classifier_with, ClassifyRequest,
-    ClassifyResponse, FairnessConfig, GenerateRequest, GenerateResponse, Request, ServeConfig,
-    ServeResult, ServerHandle, ShedReason, TokenEvent,
+    drain_stream_or_shed, serve_classifier, serve_classifier_native, serve_classifier_with,
+    ClassifyRequest, ClassifyResponse, FairnessConfig, GenerateRequest, GenerateResponse, Request,
+    ServeConfig, ServeError, ServeResult, ServerHandle, ShedReason, TokenEvent,
 };

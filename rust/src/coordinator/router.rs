@@ -19,6 +19,33 @@ pub enum Tier {
     Fast,
 }
 
+impl std::str::FromStr for Tier {
+    type Err = String;
+
+    /// Parse the wire form used by the HTTP API and CLI flags:
+    /// `"quality" | "balanced" | "fast"` (exact, lowercase — the serving
+    /// surface is fail-closed, so near-misses are errors, not guesses).
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "quality" => Ok(Tier::Quality),
+            "balanced" => Ok(Tier::Balanced),
+            "fast" => Ok(Tier::Fast),
+            other => Err(format!("unknown tier {other:?} (expected quality|balanced|fast)")),
+        }
+    }
+}
+
+impl Tier {
+    /// The wire form accepted by [`Tier::from_str`] and emitted by the API.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Tier::Quality => "quality",
+            Tier::Balanced => "balanced",
+            Tier::Fast => "fast",
+        }
+    }
+}
+
 /// How the router maps (tier, queue depth) onto a variant.
 #[derive(Clone, Debug)]
 pub enum RoutePolicy {
@@ -171,5 +198,14 @@ mod tests {
     #[test]
     fn unknown_variant_rejected_at_build() {
         assert!(Router::new(RoutePolicy::Static("led_r99".into()), avail()).is_err());
+    }
+
+    #[test]
+    fn tier_wire_form_roundtrips_and_fails_closed() {
+        for tier in [Tier::Quality, Tier::Balanced, Tier::Fast] {
+            assert_eq!(tier.as_str().parse::<Tier>().unwrap(), tier);
+        }
+        assert!("Fast".parse::<Tier>().is_err(), "case-sensitive by design");
+        assert!("turbo".parse::<Tier>().is_err());
     }
 }

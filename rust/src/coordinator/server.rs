@@ -78,7 +78,7 @@ use crate::backend::{
 };
 use crate::runtime::{Engine, GraphSpec};
 use crate::tensor::{ParamStore, Tensor};
-use crate::util::Pcg64;
+use crate::util::{BackoffCfg, Pcg64};
 use crate::Result;
 
 /// Per-request outcome sent back over the classify response channel: the
@@ -172,6 +172,26 @@ pub enum ShedReason {
         /// The configured admission ceiling.
         max: usize,
     },
+    /// The bounded submit queue was full at enqueue time — a client-side
+    /// fail-fast from the `_or_shed` submit paths; the dispatcher never saw
+    /// the request.
+    QueueFull {
+        /// The configured queue bound ([`ServeConfig::queue_capacity`]).
+        capacity: usize,
+    },
+}
+
+impl ShedReason {
+    /// Suggested minimum client backoff before retrying — the `Retry-After`
+    /// hint the HTTP front end serializes. A full submit queue clears in
+    /// roughly one batch flush; a saturated decode scheduler holds sessions
+    /// for whole generations and takes longer to drain.
+    pub fn retry_after(&self) -> Duration {
+        match self {
+            ShedReason::SessionsFull { .. } => Duration::from_millis(50),
+            ShedReason::QueueFull { .. } => Duration::from_millis(10),
+        }
+    }
 }
 
 impl std::fmt::Display for ShedReason {
@@ -180,9 +200,66 @@ impl std::fmt::Display for ShedReason {
             ShedReason::SessionsFull { active, max } => {
                 write!(f, "decode scheduler at capacity ({active}/{max} sessions)")
             }
+            ShedReason::QueueFull { capacity } => {
+                write!(f, "submit queue at capacity ({capacity} requests)")
+            }
         }
     }
 }
+
+/// Typed outcome of the `_or_shed` client paths ([`ServerHandle::classify_or_shed`],
+/// [`ServerHandle::generate_or_shed`], [`drain_stream_or_shed`]), so callers
+/// can branch mechanically: retry `Overloaded` (it carries the hint), report
+/// `Failed`, give up on `Shutdown`.
+///
+/// Implements `std::error::Error` — the vendored `anyhow` has no downcast,
+/// so retry-able overloads must stay a real type end to end; `?` still
+/// converts into the crate-wide error via the blanket `From`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed the request. Retryable: wait at least
+    /// `retry_after`, then resubmit (see [`crate::util::try_with_backoff`]).
+    Overloaded {
+        /// Why the request was shed.
+        reason: ShedReason,
+        /// Suggested minimum delay before retrying.
+        retry_after: Duration,
+    },
+    /// The request was rejected as malformed or died mid-flight; not
+    /// retryable.
+    Failed(String),
+    /// The dispatcher is gone; not retryable.
+    Shutdown,
+}
+
+impl ServeError {
+    /// `Some(hint)` when the error is retryable — exactly the shape
+    /// [`crate::util::try_with_backoff`] consumes as its retry predicate.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            ServeError::Overloaded { retry_after, .. } => Some(*retry_after),
+            ServeError::Failed(_) | ServeError::Shutdown => None,
+        }
+    }
+
+    fn overloaded(reason: ShedReason) -> Self {
+        ServeError::Overloaded { retry_after: reason.retry_after(), reason }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { reason, retry_after } => {
+                write!(f, "server overloaded: {reason} (retry after {}ms)", retry_after.as_millis())
+            }
+            ServeError::Failed(msg) => write!(f, "request failed: {msg}"),
+            ServeError::Shutdown => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Terminal summary of one generation.
 #[derive(Clone, Debug)]
@@ -208,6 +285,8 @@ pub struct ServerHandle {
     /// latency histogram).
     pub metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
+    /// Configured queue bound, echoed into [`ShedReason::QueueFull`].
+    queue_capacity: usize,
 }
 
 impl ServerHandle {
@@ -349,6 +428,142 @@ impl ServerHandle {
     /// input). In-flight generations count until their terminal event.
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Typed, fail-fast classify: like [`ServerHandle::classify`], but a
+    /// full submit queue returns [`ServeError::Overloaded`] immediately
+    /// (with its retry hint) instead of blocking, and rejections keep their
+    /// typed shape. Queue-full sheds happen client-side — they are *not*
+    /// recorded in [`Metrics`] (the dispatcher never saw the request); the
+    /// HTTP front end tallies them in its own counters.
+    pub fn classify_or_shed(
+        &self,
+        tokens: Vec<i32>,
+        tier: Tier,
+    ) -> std::result::Result<ClassifyResponse, ServeError> {
+        let (tx, rx) = sync_channel(1);
+        let req = ClassifyRequest { tokens, tier, resp: tx };
+        match self.tx.try_send(Request::Classify(req)) {
+            Ok(()) => {
+                self.metrics.record_request();
+                self.depth.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(_)) => {
+                return Err(ServeError::overloaded(ShedReason::QueueFull {
+                    capacity: self.queue_capacity,
+                }))
+            }
+            Err(TrySendError::Disconnected(_)) => return Err(ServeError::Shutdown),
+        }
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(ServeError::Failed(msg)),
+            Err(_) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Typed, fail-fast generate submit: like [`ServerHandle::generate`],
+    /// but a full submit queue returns [`ServeError::Overloaded`]
+    /// immediately instead of blocking. The returned stream can still end
+    /// in [`TokenEvent::Rejected`] (the dispatcher's own admission
+    /// control); [`drain_stream_or_shed`] maps that back to the same typed
+    /// error.
+    pub fn generate_or_shed(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> std::result::Result<Receiver<TokenEvent>, ServeError> {
+        let (tx, rx) = sync_channel(max_new + 2);
+        let req = GenerateRequest {
+            prompt,
+            max_new,
+            sampling,
+            tier,
+            speculative: false,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        match self.tx.try_send(Request::Generate(req)) {
+            Ok(()) => {
+                self.metrics.record_request();
+                self.depth.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => Err(ServeError::overloaded(ShedReason::QueueFull {
+                capacity: self.queue_capacity,
+            })),
+            Err(TrySendError::Disconnected(_)) => Err(ServeError::Shutdown),
+        }
+    }
+
+    /// Typed blocking convenience over [`ServerHandle::generate_or_shed`]:
+    /// drain the stream to its terminal event.
+    pub fn generate_collect_or_shed(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+    ) -> std::result::Result<GenerateResponse, ServeError> {
+        drain_stream_or_shed(self.generate_or_shed(prompt, max_new, sampling, tier)?)
+    }
+
+    /// [`ServerHandle::classify_or_shed`] under bounded exponential backoff:
+    /// `Overloaded` errors retry per `cfg` (honoring each shed's
+    /// `retry_after` hint, sleeping for real); `Failed`/`Shutdown` return
+    /// immediately. See [`crate::util::try_with_backoff`] for the schedule.
+    pub fn classify_with_backoff(
+        &self,
+        tokens: &[i32],
+        tier: Tier,
+        cfg: &BackoffCfg,
+    ) -> std::result::Result<ClassifyResponse, ServeError> {
+        crate::util::try_with_backoff(
+            cfg,
+            |_| self.classify_or_shed(tokens.to_vec(), tier),
+            ServeError::retry_after,
+            std::thread::sleep,
+        )
+    }
+
+    /// [`ServerHandle::generate_collect_or_shed`] under bounded exponential
+    /// backoff, mirroring [`ServerHandle::classify_with_backoff`]: sheds
+    /// (queue-full *and* the dispatcher's session-ceiling rejections) retry
+    /// per `cfg`; failures return immediately.
+    pub fn generate_collect_with_backoff(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        sampling: SamplingCfg,
+        tier: Tier,
+        cfg: &BackoffCfg,
+    ) -> std::result::Result<GenerateResponse, ServeError> {
+        crate::util::try_with_backoff(
+            cfg,
+            |_| self.generate_collect_or_shed(prompt.to_vec(), max_new, sampling, tier),
+            ServeError::retry_after,
+            std::thread::sleep,
+        )
+    }
+}
+
+/// Drain one token stream to its terminal event with a **typed** error:
+/// [`TokenEvent::Rejected`] becomes [`ServeError::Overloaded`] (retryable,
+/// hint attached), [`TokenEvent::Failed`] becomes [`ServeError::Failed`],
+/// and a dropped channel becomes [`ServeError::Shutdown`].
+pub fn drain_stream_or_shed(
+    rx: Receiver<TokenEvent>,
+) -> std::result::Result<GenerateResponse, ServeError> {
+    loop {
+        match rx.recv() {
+            Ok(TokenEvent::Token { .. }) => continue,
+            Ok(TokenEvent::Done(resp)) => return Ok(resp),
+            Ok(TokenEvent::Failed(msg)) => return Err(ServeError::Failed(msg)),
+            Ok(TokenEvent::Rejected(reason)) => return Err(ServeError::overloaded(reason)),
+            Err(_) => return Err(ServeError::Shutdown),
+        }
     }
 }
 
@@ -637,7 +852,8 @@ pub fn serve_classifier_with(
     cfg.validate()?;
     let metrics = Arc::new(Metrics::new());
     let depth = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+    let queue_capacity = cfg.queue_capacity;
+    let (tx, rx) = sync_channel::<Request>(queue_capacity);
     // Rendezvous for startup success/failure.
     let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
 
@@ -698,7 +914,7 @@ pub fn serve_classifier_with(
     ready_rx
         .recv()
         .map_err(|_| anyhow!("dispatcher died during startup"))??;
-    Ok(ServerHandle { tx, metrics, depth })
+    Ok(ServerHandle { tx, metrics, depth, queue_capacity })
 }
 
 #[allow(clippy::too_many_arguments)]

@@ -547,6 +547,87 @@ pub fn measure_latency(
     Ok(sw.median_secs())
 }
 
+/// Throughput/latency of the HTTP front end as measured through a real
+/// socket (the `BENCH_HTTP` numbers).
+#[derive(Clone, Debug)]
+pub struct HttpServingThroughput {
+    /// Requests that completed with a 2xx.
+    pub ok: usize,
+    /// Requests that came back non-2xx (sheds count here).
+    pub rejected: usize,
+    /// End-to-end requests per second over the whole run.
+    pub rps: f64,
+    /// Median per-request wall time, microseconds.
+    pub p50_us: u64,
+    /// 95th-percentile per-request wall time, microseconds.
+    pub p95_us: u64,
+}
+
+/// Drive `requests` classify POSTs at `/v1/classify` through `clients`
+/// concurrent connections against a live [`crate::serve_http::HttpServer`],
+/// measuring through the real socket (connect + parse + serve + close per
+/// request, `Connection: close` semantics — exactly what an external
+/// client pays).
+pub fn measure_http_serving(
+    addr: std::net::SocketAddr,
+    body: &str,
+    requests: usize,
+    clients: usize,
+) -> Result<HttpServingThroughput> {
+    use crate::serve_http::client;
+    use std::time::{Duration, Instant};
+
+    let clients = clients.max(1);
+    let started = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let n = requests / clients + usize::from(c < requests % clients);
+        let body = body.to_string();
+        joins.push(std::thread::spawn(move || -> Result<(usize, usize, Vec<u64>)> {
+            let mut ok = 0;
+            let mut rejected = 0;
+            let mut lat = Vec::with_capacity(n);
+            for _ in 0..n {
+                let t0 = Instant::now();
+                let reply =
+                    client::request(addr, "/v1/classify", Some(&body), Duration::from_secs(10))?;
+                lat.push(t0.elapsed().as_micros() as u64);
+                if reply.status == 200 {
+                    ok += 1;
+                } else {
+                    rejected += 1;
+                }
+            }
+            Ok((ok, rejected, lat))
+        }));
+    }
+    let mut ok = 0;
+    let mut rejected = 0;
+    let mut lat = Vec::with_capacity(requests);
+    for j in joins {
+        let (o, r, l) = j.join().expect("http client thread")?;
+        ok += o;
+        rejected += r;
+        lat.extend(l);
+    }
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    lat.sort_unstable();
+    let pct = |p: f64| -> u64 {
+        if lat.is_empty() {
+            return 0;
+        }
+        let idx = ((lat.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        lat[idx.min(lat.len() - 1)]
+    };
+    Ok(HttpServingThroughput {
+        ok,
+        rejected,
+        rps: (ok + rejected) as f64 / elapsed,
+        p50_us: pct(50.0),
+        p95_us: pct(95.0),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

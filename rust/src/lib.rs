@@ -39,6 +39,11 @@
 //! * [`train`] — training driver over the fused `train_step` artifacts.
 //! * [`coordinator`] — serving: dynamic batcher, variant router, streaming
 //!   KV-cached generation, in-context learning prompt composer, metrics.
+//! * [`registry`] — fail-closed model registry: versioned manifests,
+//!   sha256-verified checkpoints, atomic epoch-pinned hot-swap.
+//! * [`serve_http`] — hardened hand-rolled HTTP/1.1 front end over the
+//!   registry: schema-validated JSON endpoints, chunked token streaming,
+//!   deadlines/limits/shed mapping, plus its own hermetic test client.
 //! * [`data`] — synthetic task suite (3 text + 2 image + LM corpus) and the
 //!   tokenizer; see DESIGN.md §3 for the substitution rationale.
 //! * [`flops`] — analytical cost model: params/FLOPs/VMEM/MXU estimates,
@@ -61,7 +66,9 @@ pub mod factorize;
 pub mod flops;
 pub mod linalg;
 pub mod model;
+pub mod registry;
 pub mod runtime;
+pub mod serve_http;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -22,7 +22,9 @@ use greenformer::data::text::all_text_tasks;
 use greenformer::data::Dataset;
 use greenformer::experiments::{self, ExpParams};
 use greenformer::factorize::{auto_fact, quantize_led_params, Solver, WeightPrecision};
+use greenformer::registry::ModelRegistry;
 use greenformer::runtime::Engine;
+use greenformer::serve_http::{HttpConfig, HttpServer};
 use greenformer::tensor::ParamStore;
 use greenformer::train::{checkpoint, Trainer};
 use greenformer::Result;
@@ -54,6 +56,15 @@ COMMANDS:
   report-quant [--quick]                quantized-decode panel: tok/s,
             greedy agreement vs f32, bytes and |dlogit| bound per precision
   serve-demo [--requests 200] [--train-steps 60] [--max-sessions 64]
+  serve-http [--addr 127.0.0.1:8790] [--registry manifest.json]
+            [--max-connections 64] [--max-sessions 64]
+            hardened HTTP front end over the fail-closed model registry
+            (SERVING.md): GET /v1/healthz /v1/models /v1/metrics, POST
+            /v1/classify, POST /v1/generate (chunked ndjson token stream).
+            Without --registry, installs a demo registry (text-demo +
+            lm-demo) so the server is exercisable artifact-free.
+  registry-hash --file F                print a file's sha256 hex (for
+            authoring registry-manifest checkpoint pins)
   generate  [--max-new 32] [--temperature 0.0] [--top-k 0] [--seed 42]
             [--prompt "3,17,42" | --prompt-len 16] [--ratio 0.25]
             [--model-seed 42] [--stats] [--sessions 1]
@@ -378,6 +389,13 @@ fn main() -> Result<()> {
                 args.parse_or("--train-steps", 60usize),
             )?;
         }
+        "serve-http" => serve_http_cmd(&args)?,
+        "registry-hash" => {
+            let file = PathBuf::from(args.required("--file")?);
+            let bytes = std::fs::read(&file)
+                .map_err(|e| anyhow::anyhow!("reading {}: {e}", file.display()))?;
+            println!("{}", greenformer::util::sha256_hex(&bytes));
+        }
         "generate" => generate_cmd(&args)?,
         "help" | "--help" | "-h" => println!("{USAGE}"),
         other => {
@@ -417,6 +435,75 @@ fn run_config(eng: &Engine, cfg: &ExperimentConfig) -> Result<()> {
         ev.sec_per_batch * 1e3
     );
     Ok(())
+}
+
+/// `serve-http`: stand up the hardened HTTP front end over a model
+/// registry — either loaded fail-closed from a `--registry` manifest
+/// (checkpoint hashes verified), or an artifact-free demo registry with a
+/// classifier (`text-demo`) and a generator (`lm-demo`). Blocks until
+/// killed.
+fn serve_http_cmd(args: &Args) -> Result<()> {
+    let addr = args.get_or("--addr", "127.0.0.1:8790");
+    let serve_cfg = ServeConfig {
+        max_sessions: args.parse_or("--max-sessions", ServeConfig::default().max_sessions),
+        ..ServeConfig::default()
+    };
+    let registry = std::sync::Arc::new(ModelRegistry::with_serve_config(serve_cfg));
+
+    if let Some(path) = args.get("--registry") {
+        let report = registry.load_and_apply(std::path::Path::new(&path))?;
+        for name in &report.installed {
+            println!("installed {name}");
+        }
+        for (name, err) in &report.rejected {
+            eprintln!("REJECTED {name}: {err}");
+        }
+        if registry.is_empty() {
+            anyhow::bail!("no model installed from {path}");
+        }
+    } else {
+        let cfg =
+            TextModelCfg { vocab: 512, seq: 64, d: 64, heads: 4, layers: 2, ff: 128, classes: 4 };
+        let (dense, led) = demo_variants(&cfg, 42, 0.25)?;
+        let mut variants = HashMap::new();
+        variants.insert("dense".to_string(), dense);
+        variants.insert("led_r25".to_string(), led);
+        registry.install_local(
+            "text-demo",
+            "text",
+            "demo",
+            "dense",
+            variants,
+            Some(RoutePolicy::Tiered {
+                quality: "dense".into(),
+                balanced: "dense".into(),
+                fast: "led_r25".into(),
+            }),
+        )?;
+        let lm_cfg =
+            TextModelCfg { vocab: 256, seq: 96, d: 64, heads: 4, layers: 2, ff: 128, classes: 4 };
+        let mut lm_variants = HashMap::new();
+        lm_variants.insert("dense".to_string(), init_text_params(&lm_cfg, 7));
+        registry.install_local("lm-demo", "lm", "demo", "dense", lm_variants, None)?;
+        println!("demo registry: text-demo (classify) + lm-demo (generate)");
+    }
+
+    let http_cfg = HttpConfig {
+        max_connections: args.parse_or("--max-connections", HttpConfig::default().max_connections),
+        ..HttpConfig::default()
+    };
+    let server = HttpServer::bind(&addr, registry.clone(), http_cfg)?;
+    println!("listening on http://{}", server.local_addr());
+    println!("endpoints: GET /v1/healthz /v1/models /v1/metrics | POST /v1/classify /v1/generate");
+    for m in registry.models() {
+        println!(
+            "  model {} family={} version={} epoch={} seq={} variants={:?}",
+            m.name, m.family, m.version, m.epoch, m.seq, m.variants
+        );
+    }
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// `generate`: KV-cached autoregressive decoding on a synthetic LM —

@@ -1,0 +1,425 @@
+//! Registry manifest v1 — the typed, fail-closed deployment contract.
+//!
+//! A registry manifest names the models a serving process may load: for
+//! each model, a family, a version tag, one or more named checkpoints
+//! (each pinned to the sha256 of its GTZ file), the default checkpoint,
+//! and an optional tier→checkpoint route. Parsing follows the
+//! `manifest_v1` template: strict schema validation (unknown fields are
+//! errors), then invariant validation (id syntax, uniqueness, reference
+//! integrity, hash format) — a manifest either parses into a fully-checked
+//! [`RegistryManifest`] or yields a typed [`RegistryError`], never a
+//! half-trusted value. The write side ([`RegistryManifest::compose`]) is
+//! the same contract in reverse, so composed manifests always re-parse.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Kind, ObjBuilder, Schema, Value};
+
+use super::RegistryError;
+
+/// The manifest format this build understands.
+pub const REGISTRY_FORMAT: usize = 1;
+
+/// One named checkpoint: a GTZ file pinned to its content hash.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckpointEntry {
+    /// Checkpoint (= serving variant) name, e.g. `dense`, `led_r25`.
+    pub name: String,
+    /// GTZ file path, relative to the manifest's directory.
+    pub file: String,
+    /// Full sha256 of the file's bytes, 64 lowercase hex chars.
+    pub sha256: String,
+}
+
+/// Optional tier→checkpoint routing for one model (absent = everything on
+/// the default checkpoint).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteSpec {
+    /// Checkpoint serving [`crate::coordinator::Tier::Quality`].
+    pub quality: String,
+    /// Checkpoint serving [`crate::coordinator::Tier::Balanced`].
+    pub balanced: String,
+    /// Checkpoint serving [`crate::coordinator::Tier::Fast`].
+    pub fast: String,
+}
+
+/// One model entry: family, version, checkpoints, routing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelManifest {
+    /// Registry-unique model name (id syntax: `[a-z0-9._-]`, ≤ 64 chars).
+    pub name: String,
+    /// Model family: `"text"` (classifier) or `"lm"` (generator).
+    pub family: String,
+    /// Opaque version tag; a hot-swap installs a new version over an old
+    /// one.
+    pub version: String,
+    /// Name of the checkpoint that serves when no route/tier applies.
+    pub default: String,
+    /// The named, hash-pinned checkpoints (serving variants).
+    pub checkpoints: Vec<CheckpointEntry>,
+    /// Optional tier routing over the checkpoints.
+    pub route: Option<RouteSpec>,
+}
+
+/// A parsed, invariant-checked registry manifest plus the directory its
+/// checkpoint paths resolve against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegistryManifest {
+    /// The validated model entries, in manifest order.
+    pub models: Vec<ModelManifest>,
+    /// Directory checkpoint `file` fields resolve against (the manifest
+    /// file's parent for [`RegistryManifest::load`]).
+    pub dir: PathBuf,
+}
+
+fn schema() -> Schema {
+    let ckpt = Schema::new("checkpoint")
+        .required("name", Kind::Str)
+        .required("file", Kind::Str)
+        .required("sha256", Kind::Str);
+    let route = Schema::new("route")
+        .required("quality", Kind::Str)
+        .required("balanced", Kind::Str)
+        .required("fast", Kind::Str);
+    let model = Schema::new("model")
+        .required("name", Kind::Str)
+        .required("family", Kind::Str)
+        .required("version", Kind::Str)
+        .required("default", Kind::Str)
+        .required("checkpoints", Kind::Arr(Box::new(Kind::Obj(Box::new(ckpt)))))
+        .optional("route", Kind::Obj(Box::new(route)));
+    Schema::new("manifest")
+        .required("format", Kind::UInt)
+        .required("models", Kind::Arr(Box::new(Kind::Obj(Box::new(model)))))
+}
+
+/// Id syntax shared by model and checkpoint names: 1–64 chars of
+/// `[a-z0-9._-]`, starting alphanumeric.
+fn valid_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.chars().next().is_some_and(|c| c.is_ascii_lowercase() || c.is_ascii_digit())
+        && s.chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '.' | '_' | '-'))
+}
+
+fn is_sha256_hex(s: &str) -> bool {
+    s.len() == 64 && s.chars().all(|c| c.is_ascii_hexdigit())
+}
+
+fn field_str(v: &Value, key: &str) -> String {
+    v.get(key).and_then(|x| x.as_str().ok()).unwrap_or_default().to_string()
+}
+
+impl RegistryManifest {
+    /// Parse and fully validate manifest bytes. `dir` is the directory
+    /// checkpoint paths resolve against. Fail-closed: schema violations
+    /// (including unknown fields), a wrong `format`, bad ids, duplicate
+    /// names, dangling references and malformed hashes are all typed
+    /// errors.
+    pub fn parse_bytes(
+        bytes: &[u8],
+        dir: impl Into<PathBuf>,
+    ) -> std::result::Result<Self, RegistryError> {
+        let v = Value::parse_bytes(bytes)
+            .map_err(|e| RegistryError::Parse { detail: format!("{e:#}") })?;
+        schema()
+            .validate(&v)
+            .map_err(|e| RegistryError::Parse { detail: e.to_string() })?;
+        let format = v.usize_or("format", 0);
+        if format != REGISTRY_FORMAT {
+            return Err(RegistryError::Invariant {
+                model: None,
+                detail: format!("unsupported manifest format {format} (expected {REGISTRY_FORMAT})"),
+            });
+        }
+        let mut models = Vec::new();
+        for mv in v.get("models").and_then(|m| m.as_arr().ok()).unwrap_or_default() {
+            let mut checkpoints = Vec::new();
+            for cv in mv.get("checkpoints").and_then(|c| c.as_arr().ok()).unwrap_or_default() {
+                checkpoints.push(CheckpointEntry {
+                    name: field_str(cv, "name"),
+                    file: field_str(cv, "file"),
+                    // Hashes compare case-insensitively; normalize here so
+                    // verification is a plain string equality.
+                    sha256: field_str(cv, "sha256").to_ascii_lowercase(),
+                });
+            }
+            let route = mv.get("route").map(|rv| RouteSpec {
+                quality: field_str(rv, "quality"),
+                balanced: field_str(rv, "balanced"),
+                fast: field_str(rv, "fast"),
+            });
+            models.push(ModelManifest {
+                name: field_str(mv, "name"),
+                family: field_str(mv, "family"),
+                version: field_str(mv, "version"),
+                default: field_str(mv, "default"),
+                checkpoints,
+                route,
+            });
+        }
+        let manifest = RegistryManifest { models, dir: dir.into() };
+        manifest.validate_invariants()?;
+        Ok(manifest)
+    }
+
+    /// Read + parse + validate a manifest file; checkpoint paths resolve
+    /// against the file's parent directory.
+    pub fn load(path: &Path) -> std::result::Result<Self, RegistryError> {
+        let bytes = std::fs::read(path).map_err(|e| RegistryError::Io {
+            path: path.display().to_string(),
+            detail: e.to_string(),
+        })?;
+        let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(|| PathBuf::from("."));
+        Self::parse_bytes(&bytes, dir)
+    }
+
+    fn validate_invariants(&self) -> std::result::Result<(), RegistryError> {
+        let fail = |model: &str, detail: String| {
+            Err(RegistryError::Invariant { model: Some(model.to_string()), detail })
+        };
+        let mut seen_models = std::collections::BTreeSet::new();
+        for m in &self.models {
+            if !valid_id(&m.name) {
+                return fail(&m.name, format!("invalid model name {:?}", m.name));
+            }
+            if !seen_models.insert(m.name.clone()) {
+                return fail(&m.name, format!("duplicate model name {:?}", m.name));
+            }
+            if m.family != "text" && m.family != "lm" {
+                return fail(
+                    &m.name,
+                    format!("family {:?} is not servable (expected \"text\" or \"lm\")", m.family),
+                );
+            }
+            if m.version.is_empty() || m.version.len() > 64 {
+                return fail(&m.name, format!("invalid version {:?}", m.version));
+            }
+            if m.checkpoints.is_empty() {
+                return fail(&m.name, "no checkpoints".to_string());
+            }
+            let mut seen_ckpts = std::collections::BTreeSet::new();
+            for c in &m.checkpoints {
+                if !valid_id(&c.name) {
+                    return fail(&m.name, format!("invalid checkpoint name {:?}", c.name));
+                }
+                if !seen_ckpts.insert(c.name.clone()) {
+                    return fail(&m.name, format!("duplicate checkpoint name {:?}", c.name));
+                }
+                // Paths must stay inside the manifest directory: relative,
+                // no parent traversal.
+                let p = Path::new(&c.file);
+                if c.file.is_empty()
+                    || p.is_absolute()
+                    || p.components().any(|x| x == std::path::Component::ParentDir)
+                {
+                    return fail(
+                        &m.name,
+                        format!("checkpoint {:?}: file {:?} must be a relative path without '..'",
+                                c.name, c.file),
+                    );
+                }
+                if !is_sha256_hex(&c.sha256) {
+                    return fail(
+                        &m.name,
+                        format!("checkpoint {:?}: sha256 must be 64 hex chars, got {:?}",
+                                c.name, c.sha256),
+                    );
+                }
+            }
+            if !seen_ckpts.contains(&m.default) {
+                return fail(
+                    &m.name,
+                    format!("default checkpoint {:?} is not among the checkpoints", m.default),
+                );
+            }
+            if let Some(r) = &m.route {
+                for (tier, name) in
+                    [("quality", &r.quality), ("balanced", &r.balanced), ("fast", &r.fast)]
+                {
+                    if !seen_ckpts.contains(name) {
+                        return fail(
+                            &m.name,
+                            format!("route.{tier} names unknown checkpoint {name:?}"),
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Compose the manifest back into its canonical JSON [`Value`] (the
+    /// write half of the contract; always re-parses under
+    /// [`RegistryManifest::parse_bytes`]).
+    pub fn compose(&self) -> Value {
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let ckpts = m
+                    .checkpoints
+                    .iter()
+                    .map(|c| {
+                        ObjBuilder::new()
+                            .str("name", &c.name)
+                            .str("file", &c.file)
+                            .str("sha256", &c.sha256)
+                            .build()
+                    })
+                    .collect();
+                let mut b = ObjBuilder::new()
+                    .str("name", &m.name)
+                    .str("family", &m.family)
+                    .str("version", &m.version)
+                    .str("default", &m.default)
+                    .arr("checkpoints", ckpts);
+                if let Some(r) = &m.route {
+                    b = b.set(
+                        "route",
+                        ObjBuilder::new()
+                            .str("quality", &r.quality)
+                            .str("balanced", &r.balanced)
+                            .str("fast", &r.fast)
+                            .build(),
+                    );
+                }
+                b.build()
+            })
+            .collect();
+        ObjBuilder::new().uint("format", REGISTRY_FORMAT as u64).arr("models", models).build()
+    }
+
+    /// Compose to compact JSON text.
+    pub fn render(&self) -> String {
+        self.compose().render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sha(fill: char) -> String {
+        std::iter::repeat(fill).take(64).collect()
+    }
+
+    fn minimal(route: bool) -> RegistryManifest {
+        RegistryManifest {
+            models: vec![ModelManifest {
+                name: "lm-demo".into(),
+                family: "lm".into(),
+                version: "2026-08-08.1".into(),
+                default: "dense".into(),
+                checkpoints: vec![
+                    CheckpointEntry {
+                        name: "dense".into(),
+                        file: "lm_dense.gtz".into(),
+                        sha256: sha('a'),
+                    },
+                    CheckpointEntry {
+                        name: "led_r25".into(),
+                        file: "lm_led25.gtz".into(),
+                        sha256: sha('b'),
+                    },
+                ],
+                route: route.then(|| RouteSpec {
+                    quality: "dense".into(),
+                    balanced: "dense".into(),
+                    fast: "led_r25".into(),
+                }),
+            }],
+            dir: PathBuf::from("."),
+        }
+    }
+
+    #[test]
+    fn compose_parse_roundtrip() {
+        for route in [false, true] {
+            let m = minimal(route);
+            let text = m.render();
+            let back = RegistryManifest::parse_bytes(text.as_bytes(), ".").unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn unknown_fields_fail_closed() {
+        let mut v = minimal(false).compose();
+        if let Value::Obj(m) = &mut v {
+            m.insert("extra".into(), Value::Null);
+        }
+        let e = RegistryManifest::parse_bytes(v.render().as_bytes(), ".").unwrap_err();
+        assert!(matches!(e, RegistryError::Parse { .. }), "{e}");
+        assert!(e.to_string().contains("manifest.extra"), "{e}");
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let text = minimal(false).render().replace("\"format\":1", "\"format\":2");
+        let e = RegistryManifest::parse_bytes(text.as_bytes(), ".").unwrap_err();
+        assert!(matches!(e, RegistryError::Invariant { .. }), "{e}");
+    }
+
+    #[test]
+    fn invariant_violations_are_typed() {
+        // Bad model id.
+        let mut m = minimal(false);
+        m.models[0].name = "Bad Name!".into();
+        assert!(RegistryManifest::parse_bytes(m.render().as_bytes(), ".").is_err());
+
+        // Unsupported family.
+        let mut m = minimal(false);
+        m.models[0].family = "image".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("not servable"), "{e}");
+
+        // Duplicate checkpoint names.
+        let mut m = minimal(false);
+        m.models[0].checkpoints[1].name = "dense".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("duplicate checkpoint"), "{e}");
+
+        // Dangling default.
+        let mut m = minimal(false);
+        m.models[0].default = "missing".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("default checkpoint"), "{e}");
+
+        // Route referencing an unknown checkpoint.
+        let mut m = minimal(true);
+        m.models[0].route.as_mut().unwrap().fast = "nope".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("route.fast"), "{e}");
+
+        // Malformed sha256.
+        let mut m = minimal(false);
+        m.models[0].checkpoints[0].sha256 = "abc123".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("64 hex"), "{e}");
+
+        // Path traversal.
+        let mut m = minimal(false);
+        m.models[0].checkpoints[0].file = "../outside.gtz".into();
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("relative path"), "{e}");
+    }
+
+    #[test]
+    fn uppercase_hashes_normalize() {
+        let mut m = minimal(false);
+        m.models[0].checkpoints[0].sha256 = sha('A');
+        let back = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap();
+        assert_eq!(back.models[0].checkpoints[0].sha256, sha('a'));
+    }
+
+    #[test]
+    fn duplicate_model_names_rejected() {
+        let mut m = minimal(false);
+        let dup = m.models[0].clone();
+        m.models.push(dup);
+        let e = RegistryManifest::parse_bytes(m.render().as_bytes(), ".").unwrap_err();
+        assert!(e.to_string().contains("duplicate model"), "{e}");
+    }
+}

@@ -1,0 +1,555 @@
+//! Fail-closed model registry: versioned manifests, hash-verified
+//! checkpoints, atomic hot-swap.
+//!
+//! The registry is the trust boundary between deployment artifacts on disk
+//! and the serving fleet. Its contract:
+//!
+//! * **Fail-closed loads.** A model enters the registry only after every
+//!   gate passes: manifest schema + invariant validation
+//!   ([`RegistryManifest`]), per-checkpoint sha256 verification against the
+//!   manifest pin, GTZ parse, graph synthesis of the default checkpoint,
+//!   and dispatcher startup (which itself builds every variant). A corrupt,
+//!   truncated, or hash-mismatched entry rejects *that model* with a typed
+//!   [`RegistryError`] — other models in the same manifest still install,
+//!   and a previously serving version of the rejected model keeps serving.
+//! * **Atomic hot-swap.** Each installed model is an epoch-stamped
+//!   [`Arc<ServingModel>`] in a [`std::sync::RwLock`]'d map. Applying a new
+//!   manifest swaps the `Arc` under a short write lock: requests that
+//!   already resolved the old `Arc` (in-flight classify batches, streaming
+//!   decode sessions) finish on the old version's dispatcher — its
+//!   [`ServerHandle`] stays alive until the last clone drops, and the
+//!   dispatcher drains live sessions before exiting — while every new
+//!   resolve sees the new version. No request ever observes a half-swapped
+//!   model.
+//! * **Accounting.** [`RegistryMetrics`] counts installs, swaps, rejected
+//!   manifests/models, and per-model request tallies, feeding the HTTP
+//!   `/v1/metrics` surface.
+
+pub mod manifest;
+
+pub use manifest::{
+    CheckpointEntry, ModelManifest, RegistryManifest, RouteSpec, REGISTRY_FORMAT,
+};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::backend::native;
+use crate::coordinator::{
+    serve_classifier_native, RoutePolicy, Router, ServeConfig, ServerHandle,
+};
+use crate::tensor::{gtz, ParamStore};
+use crate::util::sha256_hex;
+
+/// Typed, fail-closed registry error. Every rejection path names what was
+/// rejected and why; nothing panics and nothing half-installs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// Reading the manifest or a checkpoint file failed.
+    Io {
+        /// Path that failed to read.
+        path: String,
+        /// OS error detail.
+        detail: String,
+    },
+    /// The manifest bytes are not a valid v1 document (bad JSON or a
+    /// schema violation such as an unknown field).
+    Parse {
+        /// What the parser/validator rejected.
+        detail: String,
+    },
+    /// A structural invariant failed: bad id, duplicate name, dangling
+    /// reference, unsupported format or family.
+    Invariant {
+        /// Offending model, when the invariant is model-scoped.
+        model: Option<String>,
+        /// What was violated.
+        detail: String,
+    },
+    /// A checkpoint's bytes do not hash to the manifest's sha256 pin.
+    HashMismatch {
+        /// Model being installed.
+        model: String,
+        /// Checkpoint whose file failed verification.
+        checkpoint: String,
+        /// The file that was read.
+        file: String,
+        /// Hash the manifest pinned.
+        expected: String,
+        /// Hash the bytes actually produced.
+        actual: String,
+    },
+    /// A checkpoint verified but was rejected downstream (corrupt GTZ
+    /// payload, graph synthesis failure on its parameters).
+    Checkpoint {
+        /// Model being installed.
+        model: String,
+        /// What was rejected.
+        detail: String,
+    },
+    /// Standing up the model's dispatcher failed.
+    Serve {
+        /// Model being installed.
+        model: String,
+        /// Dispatcher startup error.
+        detail: String,
+    },
+    /// Lookup of a model that is not registered.
+    UnknownModel {
+        /// The requested name.
+        model: String,
+    },
+    /// A lookup without an explicit model name when the registry does not
+    /// hold exactly one model.
+    NoDefaultModel {
+        /// How many models are registered.
+        registered: usize,
+    },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Io { path, detail } => write!(f, "io error on {path:?}: {detail}"),
+            RegistryError::Parse { detail } => write!(f, "manifest parse error: {detail}"),
+            RegistryError::Invariant { model: Some(m), detail } => {
+                write!(f, "manifest invariant violated for model {m:?}: {detail}")
+            }
+            RegistryError::Invariant { model: None, detail } => {
+                write!(f, "manifest invariant violated: {detail}")
+            }
+            RegistryError::HashMismatch { model, checkpoint, file, expected, actual } => write!(
+                f,
+                "hash mismatch for model {model:?} checkpoint {checkpoint:?} ({file}): \
+                 manifest pins {expected}, file hashes to {actual}"
+            ),
+            RegistryError::Checkpoint { model, detail } => {
+                write!(f, "checkpoint rejected for model {model:?}: {detail}")
+            }
+            RegistryError::Serve { model, detail } => {
+                write!(f, "failed to serve model {model:?}: {detail}")
+            }
+            RegistryError::UnknownModel { model } => write!(f, "unknown model {model:?}"),
+            RegistryError::NoDefaultModel { registered } => write!(
+                f,
+                "no model specified and registry holds {registered} models (expected exactly 1)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Registry-level counters, surfaced through `/v1/metrics`.
+#[derive(Debug, Default)]
+pub struct RegistryMetrics {
+    /// Successful installs (first installs + hot-swaps).
+    pub installs: AtomicU64,
+    /// Installs that replaced an already-serving model (subset of
+    /// `installs`).
+    pub swaps: AtomicU64,
+    /// Whole manifests rejected before any model was considered.
+    pub rejected_manifests: AtomicU64,
+    /// Individual model entries rejected fail-closed.
+    pub rejected_models: AtomicU64,
+    requests: Mutex<BTreeMap<String, u64>>,
+}
+
+impl RegistryMetrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tally one routed request against `model`.
+    pub fn record_request(&self, model: &str) {
+        let mut m = self.requests.lock().expect("registry metrics lock");
+        *m.entry(model.to_string()).or_insert(0) += 1;
+    }
+
+    /// Snapshot of per-model request tallies.
+    pub fn request_counts(&self) -> BTreeMap<String, u64> {
+        self.requests.lock().expect("registry metrics lock").clone()
+    }
+}
+
+/// One installed, serving model version: immutable metadata plus the live
+/// [`ServerHandle`]. Hot-swap replaces the whole `Arc`; holders of an old
+/// `Arc` keep a fully functional old-version server until they drop it.
+pub struct ServingModel {
+    /// Registry name.
+    pub name: String,
+    /// `"text"` or `"lm"`.
+    pub family: String,
+    /// Manifest version tag.
+    pub version: String,
+    /// Monotone install epoch (registry-wide; a swap gets a higher epoch
+    /// than what it replaced).
+    pub epoch: u64,
+    /// Default checkpoint/variant name.
+    pub default: String,
+    /// Sorted serving variant names.
+    pub variants: Vec<String>,
+    /// Model input window (tokens per classify request / max prompt).
+    pub seq: usize,
+    /// Vocabulary size, when the family has one in its graph config.
+    pub vocab: Option<usize>,
+    handle: Mutex<ServerHandle>,
+}
+
+impl ServingModel {
+    /// Clone the live handle for this version. Clones share the version's
+    /// dispatcher; the dispatcher shuts down (draining in-flight sessions)
+    /// only after every clone and the registry slot are gone.
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.lock().expect("serving model lock").clone()
+    }
+}
+
+impl std::fmt::Debug for ServingModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServingModel")
+            .field("name", &self.name)
+            .field("family", &self.family)
+            .field("version", &self.version)
+            .field("epoch", &self.epoch)
+            .field("default", &self.default)
+            .field("variants", &self.variants)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Outcome of applying a manifest: what installed, what was rejected (and
+/// why). Rejections are per-model; they never poison sibling entries or
+/// already-serving versions.
+#[derive(Debug, Default)]
+pub struct ApplyReport {
+    /// Models installed or hot-swapped, in manifest order.
+    pub installed: Vec<String>,
+    /// Models rejected fail-closed, with the typed reason.
+    pub rejected: Vec<(String, RegistryError)>,
+}
+
+/// The registry: named slots of epoch-pinned [`Arc<ServingModel>`]s.
+pub struct ModelRegistry {
+    slots: RwLock<BTreeMap<String, Arc<ServingModel>>>,
+    epoch: AtomicU64,
+    serve_cfg: ServeConfig,
+    /// Install/swap/rejection counters and per-model request tallies.
+    pub metrics: Arc<RegistryMetrics>,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    /// Empty registry; installed models serve under
+    /// [`ServeConfig::default`].
+    pub fn new() -> Self {
+        Self::with_serve_config(ServeConfig::default())
+    }
+
+    /// Empty registry with an explicit serving configuration applied to
+    /// every install.
+    pub fn with_serve_config(serve_cfg: ServeConfig) -> Self {
+        ModelRegistry {
+            slots: RwLock::new(BTreeMap::new()),
+            epoch: AtomicU64::new(0),
+            serve_cfg,
+            metrics: Arc::new(RegistryMetrics::new()),
+        }
+    }
+
+    /// Resolve a model by name. The returned `Arc` pins that version: it
+    /// keeps serving even if a hot-swap replaces the slot.
+    pub fn get(&self, name: &str) -> Option<Arc<ServingModel>> {
+        self.slots.read().expect("registry lock").get(name).cloned()
+    }
+
+    /// The sole model, when exactly one is registered.
+    pub fn single(&self) -> Option<Arc<ServingModel>> {
+        let slots = self.slots.read().expect("registry lock");
+        if slots.len() == 1 {
+            slots.values().next().cloned()
+        } else {
+            None
+        }
+    }
+
+    /// Resolve an optional wire-form model name: `Some` must match a
+    /// registered model, `None` is allowed only when exactly one model is
+    /// registered.
+    pub fn resolve(
+        &self,
+        name: Option<&str>,
+    ) -> std::result::Result<Arc<ServingModel>, RegistryError> {
+        match name {
+            Some(n) => {
+                self.get(n).ok_or_else(|| RegistryError::UnknownModel { model: n.to_string() })
+            }
+            None => self
+                .single()
+                .ok_or_else(|| RegistryError::NoDefaultModel { registered: self.len() }),
+        }
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.slots.read().expect("registry lock").keys().cloned().collect()
+    }
+
+    /// Snapshot of all registered models, sorted by name.
+    pub fn models(&self) -> Vec<Arc<ServingModel>> {
+        self.slots.read().expect("registry lock").values().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.slots.read().expect("registry lock").len()
+    }
+
+    /// Whether the registry is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Apply a validated manifest: verify + install every model entry,
+    /// fail-closed per model. Never returns an error itself — per-model
+    /// outcomes are in the report.
+    pub fn apply_manifest(&self, manifest: &RegistryManifest) -> ApplyReport {
+        let mut report = ApplyReport::default();
+        for m in &manifest.models {
+            match self.install_from_manifest(manifest, m) {
+                Ok(_) => report.installed.push(m.name.clone()),
+                Err(e) => {
+                    self.metrics.rejected_models.fetch_add(1, Ordering::Relaxed);
+                    report.rejected.push((m.name.clone(), e));
+                }
+            }
+        }
+        report
+    }
+
+    /// Load a manifest file and apply it. A manifest that fails to parse
+    /// or validate rejects as a whole (counted in
+    /// [`RegistryMetrics::rejected_manifests`]) and changes nothing.
+    pub fn load_and_apply(&self, path: &Path) -> std::result::Result<ApplyReport, RegistryError> {
+        let manifest = RegistryManifest::load(path).map_err(|e| {
+            self.metrics.rejected_manifests.fetch_add(1, Ordering::Relaxed);
+            e
+        })?;
+        Ok(self.apply_manifest(&manifest))
+    }
+
+    /// Install a model from in-memory parameter stores (tests, benches,
+    /// the demo server) through the same gates as a manifest install —
+    /// minus file reads and hash checks, which have no file to act on.
+    pub fn install_local(
+        &self,
+        name: &str,
+        family: &str,
+        version: &str,
+        default: &str,
+        variants: HashMap<String, ParamStore>,
+        route: Option<RoutePolicy>,
+    ) -> std::result::Result<Arc<ServingModel>, RegistryError> {
+        self.install_entry(name, family, version, default, variants, route)
+    }
+
+    fn install_from_manifest(
+        &self,
+        manifest: &RegistryManifest,
+        m: &ModelManifest,
+    ) -> std::result::Result<Arc<ServingModel>, RegistryError> {
+        let mut stores = HashMap::new();
+        for ckpt in &m.checkpoints {
+            let path = manifest.dir.join(&ckpt.file);
+            let bytes = std::fs::read(&path).map_err(|e| RegistryError::Io {
+                path: path.display().to_string(),
+                detail: e.to_string(),
+            })?;
+            // Verify bytes against the manifest pin BEFORE parsing: a
+            // tampered or truncated file is rejected without ever reaching
+            // the GTZ decoder.
+            let actual = sha256_hex(&bytes);
+            if actual != ckpt.sha256 {
+                return Err(RegistryError::HashMismatch {
+                    model: m.name.clone(),
+                    checkpoint: ckpt.name.clone(),
+                    file: ckpt.file.clone(),
+                    expected: ckpt.sha256.clone(),
+                    actual,
+                });
+            }
+            let store = gtz::parse(&bytes).map_err(|e| RegistryError::Checkpoint {
+                model: m.name.clone(),
+                detail: format!("checkpoint {:?} ({}): {e:#}", ckpt.name, ckpt.file),
+            })?;
+            stores.insert(ckpt.name.clone(), store);
+        }
+        let route = m.route.as_ref().map(|r| RoutePolicy::Tiered {
+            quality: r.quality.clone(),
+            balanced: r.balanced.clone(),
+            fast: r.fast.clone(),
+        });
+        self.install_entry(&m.name, &m.family, &m.version, &m.default, stores, route)
+    }
+
+    /// The shared install gate: validate family/default/route, probe the
+    /// default checkpoint's graph for metadata, stand up the dispatcher
+    /// (which builds every variant's graph, fail-closed), then swap the
+    /// slot atomically.
+    fn install_entry(
+        &self,
+        name: &str,
+        family: &str,
+        version: &str,
+        default: &str,
+        stores: HashMap<String, ParamStore>,
+        route: Option<RoutePolicy>,
+    ) -> std::result::Result<Arc<ServingModel>, RegistryError> {
+        let invariant = |detail: String| RegistryError::Invariant {
+            model: Some(name.to_string()),
+            detail,
+        };
+        if family != "text" && family != "lm" {
+            return Err(invariant(format!(
+                "family {family:?} is not servable (expected \"text\" or \"lm\")"
+            )));
+        }
+        if stores.is_empty() {
+            return Err(invariant("no checkpoints".to_string()));
+        }
+        let default_store = stores.get(default).ok_or_else(|| {
+            invariant(format!("default checkpoint {default:?} is not among the checkpoints"))
+        })?;
+        // Metadata probe doubles as the first per-parameter gate: a store
+        // whose shapes don't assemble into the family's graph is rejected
+        // here, before any serving state exists.
+        let probe = native::synth_fwd_graph(family, default, 1, default_store).map_err(|e| {
+            RegistryError::Checkpoint {
+                model: name.to_string(),
+                detail: format!("default checkpoint {default:?} rejected: {e:#}"),
+            }
+        })?;
+        let seq = probe.inputs.first().and_then(|i| i.shape.get(1)).copied().unwrap_or(0);
+        let vocab = probe.config.get("vocab").copied();
+        let mut variant_names: Vec<String> = stores.keys().cloned().collect();
+        variant_names.sort();
+        let policy = route.unwrap_or_else(|| RoutePolicy::Static(default.to_string()));
+        let router = Router::new(policy, variant_names.clone())
+            .map_err(|e| invariant(format!("route: {e:#}")))?;
+        let handle = serve_classifier_native(family, stores, router, self.serve_cfg.clone())
+            .map_err(|e| RegistryError::Serve {
+                model: name.to_string(),
+                detail: format!("{e:#}"),
+            })?;
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        let model = Arc::new(ServingModel {
+            name: name.to_string(),
+            family: family.to_string(),
+            version: version.to_string(),
+            epoch,
+            default: default.to_string(),
+            variants: variant_names,
+            seq,
+            vocab,
+            handle: Mutex::new(handle),
+        });
+        // The swap itself: a plain BTreeMap insert under the write lock.
+        // The displaced Arc (if any) lives on in whoever resolved it; its
+        // dispatcher drains and exits when the last clone drops.
+        let prev =
+            self.slots.write().expect("registry lock").insert(name.to_string(), model.clone());
+        self.metrics.installs.fetch_add(1, Ordering::Relaxed);
+        if prev.is_some() {
+            self.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{init_text_params, TextModelCfg};
+
+    fn tiny_cfg() -> TextModelCfg {
+        TextModelCfg { vocab: 64, seq: 8, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 }
+    }
+
+    fn tiny_store() -> ParamStore {
+        init_text_params(&tiny_cfg(), 7)
+    }
+
+    #[test]
+    fn install_local_serves_and_reports_metadata() {
+        let reg = ModelRegistry::new();
+        let mut variants = HashMap::new();
+        variants.insert("dense".to_string(), tiny_store());
+        let model =
+            reg.install_local("text-demo", "text", "v1", "dense", variants, None).unwrap();
+        assert_eq!(model.seq, 8);
+        assert_eq!(model.epoch, 1);
+        assert_eq!(model.variants, vec!["dense".to_string()]);
+        let resp = model.handle().classify(vec![1; 8], crate::coordinator::Tier::Quality).unwrap();
+        assert!(resp.label < 3);
+        assert_eq!(reg.metrics.installs.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.metrics.swaps.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn hot_swap_bumps_epoch_and_pins_old_version() {
+        let reg = ModelRegistry::new();
+        let mut v1 = HashMap::new();
+        v1.insert("dense".to_string(), tiny_store());
+        let old = reg.install_local("m", "text", "v1", "dense", v1, None).unwrap();
+
+        let mut v2 = HashMap::new();
+        v2.insert("dense".to_string(), init_text_params(&tiny_cfg(), 8));
+        let new = reg.install_local("m", "text", "v2", "dense", v2, None).unwrap();
+
+        assert!(new.epoch > old.epoch);
+        assert_eq!(reg.get("m").unwrap().version, "v2");
+        assert_eq!(reg.metrics.swaps.load(Ordering::Relaxed), 1);
+        // The pinned old Arc still serves its own dispatcher.
+        let resp = old.handle().classify(vec![1; 8], crate::coordinator::Tier::Quality).unwrap();
+        assert!(resp.label < 3);
+    }
+
+    #[test]
+    fn bad_family_and_bad_default_fail_closed() {
+        let reg = ModelRegistry::new();
+        let mut variants = HashMap::new();
+        variants.insert("dense".to_string(), tiny_store());
+        let e = reg
+            .install_local("m", "image", "v1", "dense", variants.clone(), None)
+            .unwrap_err();
+        assert!(matches!(e, RegistryError::Invariant { .. }), "{e}");
+        let e = reg.install_local("m", "text", "v1", "missing", variants, None).unwrap_err();
+        assert!(e.to_string().contains("default checkpoint"), "{e}");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn resolve_handles_default_and_unknown() {
+        let reg = ModelRegistry::new();
+        assert!(matches!(
+            reg.resolve(None).unwrap_err(),
+            RegistryError::NoDefaultModel { registered: 0 }
+        ));
+        let mut variants = HashMap::new();
+        variants.insert("dense".to_string(), tiny_store());
+        reg.install_local("only", "text", "v1", "dense", variants, None).unwrap();
+        assert_eq!(reg.resolve(None).unwrap().name, "only");
+        assert!(matches!(
+            reg.resolve(Some("nope")).unwrap_err(),
+            RegistryError::UnknownModel { .. }
+        ));
+    }
+}

@@ -62,6 +62,9 @@ impl Engine {
         // shouldn't serialize behind one compilation.
         let spec = self.manifest.graph(graph)?;
         let path = self.manifest.graph_path(spec);
+        // Fail-closed: never hand a tampered/truncated artifact to the
+        // compiler (the manifest pins each HLO file's sha256_16).
+        self.manifest.verify_graph_file(spec)?;
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);

@@ -96,6 +96,30 @@ impl GraphSpec {
             .ok_or_else(|| anyhow!("graph {} config missing key {key:?}", self.name))
     }
 
+    /// Fail-closed integrity check of HLO bytes against the manifest's
+    /// `sha256_16` pin (first 16 hex chars of the file's sha256, written by
+    /// the AOT exporter). An empty pin means the graph was synthesized
+    /// in-process — there is no file to verify, so it passes. A non-empty
+    /// pin that does not match is an error: the runtime must not compile a
+    /// tampered or truncated artifact.
+    pub fn verify_hlo_bytes(&self, bytes: &[u8]) -> Result<()> {
+        if self.sha256_16.is_empty() {
+            return Ok(());
+        }
+        let full = crate::util::sha256_hex(bytes);
+        let actual = &full[..16];
+        if !self.sha256_16.eq_ignore_ascii_case(actual) {
+            bail!(
+                "HLO integrity check failed for graph {} ({}): manifest pins sha256_16 {}, \
+                 file hashes to {actual}",
+                self.name,
+                self.file,
+                self.sha256_16
+            );
+        }
+        Ok(())
+    }
+
     fn from_json(v: &Json) -> Result<Self> {
         let specs = |key: &str| -> Result<Vec<TensorSpec>> {
             v.req(key)?
@@ -262,6 +286,16 @@ impl Manifest {
     pub fn graph_path(&self, g: &GraphSpec) -> PathBuf {
         self.dir.join(&g.file)
     }
+
+    /// Read a graph's HLO file and verify it against the manifest pin
+    /// ([`GraphSpec::verify_hlo_bytes`]); returns the verified bytes.
+    pub fn verify_graph_file(&self, g: &GraphSpec) -> Result<Vec<u8>> {
+        let path = self.graph_path(g);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading HLO text {path:?}"))?;
+        g.verify_hlo_bytes(&bytes)?;
+        Ok(bytes)
+    }
 }
 
 #[cfg(test)]
@@ -339,6 +373,23 @@ mod tests {
     #[test]
     fn rejects_unknown_format() {
         assert!(Manifest::parse(r#"{"format": 9, "graphs": []}"#).is_err());
+    }
+
+    #[test]
+    fn hlo_integrity_pin_fails_closed() {
+        let mut g = toy_manifest().graph("m_dense_fwd_b1").unwrap().clone();
+        // No pin (synthesized graph): anything passes.
+        assert!(g.verify_hlo_bytes(b"whatever").is_ok());
+
+        let body = b"HloModule m_dense_fwd_b1";
+        g.sha256_16 = crate::util::sha256_hex(body)[..16].to_string();
+        assert!(g.verify_hlo_bytes(body).is_ok());
+        // Uppercase pins compare case-insensitively.
+        g.sha256_16 = g.sha256_16.to_ascii_uppercase();
+        assert!(g.verify_hlo_bytes(body).is_ok());
+
+        let err = g.verify_hlo_bytes(b"HloModule tampered").unwrap_err();
+        assert!(format!("{err:#}").contains("integrity check failed"));
     }
 
     #[test]

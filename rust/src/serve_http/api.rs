@@ -1,0 +1,341 @@
+//! Endpoint handlers: schema-validated JSON in, structured JSON (or a
+//! chunked token stream) out, every outcome mapped onto a specific status
+//! code.
+//!
+//! The status mapping is deliberate and documented (SERVING.md):
+//!
+//! * validation failures the client caused → **400** (with the validator's
+//!   path-bearing message);
+//! * unknown model → **404**;
+//! * admission-control sheds ([`ServeError::Overloaded`], including the
+//!   dispatcher's [`crate::coordinator::ShedReason::SessionsFull`]) →
+//!   **429** + `Retry-After`;
+//! * dispatcher-side failures after the HTTP layer's own screening →
+//!   **500** (the layer already rejected every client-attributable cause);
+//! * dispatcher shut down → **503** + `Retry-After`.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::backend::SamplingCfg;
+use crate::coordinator::{ServeError, Tier, TokenEvent};
+use crate::registry::{RegistryError, ServingModel};
+use crate::util::json::{Kind, ObjBuilder, Schema, Value};
+
+use super::conn::{ConnCtx, HttpRequest, Reply};
+
+/// What a routed handler produced: a complete response, or an admitted
+/// generation to stream (the first event is pre-read — it decided the 200).
+pub(crate) enum Outcome {
+    Json(Reply),
+    Stream {
+        first: TokenEvent,
+        rx: Receiver<TokenEvent>,
+        model: String,
+        version: String,
+        epoch: u64,
+    },
+}
+
+/// Dispatch a fully-read request. Method/path existence were already
+/// enforced by the connection layer.
+pub(crate) fn route(req: &HttpRequest, ctx: &ConnCtx) -> Outcome {
+    match req.path.as_str() {
+        "/v1/healthz" => Outcome::Json(healthz(ctx)),
+        "/v1/models" => Outcome::Json(models(ctx)),
+        "/v1/metrics" => Outcome::Json(metrics(ctx)),
+        "/v1/classify" => Outcome::Json(classify(&req.body, ctx)),
+        "/v1/generate" => generate(&req.body, ctx),
+        other => Outcome::Json(Reply::error(404, "not_found", &format!("no route for {other:?}"))),
+    }
+}
+
+fn healthz(ctx: &ConnCtx) -> Reply {
+    Reply::ok(
+        ObjBuilder::new()
+            .str("status", "ok")
+            .uint("models", ctx.registry.len() as u64)
+            .build(),
+    )
+}
+
+fn model_summary(m: &ServingModel, requests: u64) -> Value {
+    let mut b = ObjBuilder::new()
+        .str("name", &m.name)
+        .str("family", &m.family)
+        .str("version", &m.version)
+        .uint("epoch", m.epoch)
+        .str("default", &m.default)
+        .arr("variants", m.variants.iter().map(|v| Value::Str(v.clone())).collect())
+        .uint("seq", m.seq as u64)
+        .uint("requests", requests);
+    if let Some(vocab) = m.vocab {
+        b = b.uint("vocab", vocab as u64);
+    }
+    b.build()
+}
+
+fn models(ctx: &ConnCtx) -> Reply {
+    use std::sync::atomic::Ordering::Relaxed;
+    let counts = ctx.registry.metrics.request_counts();
+    let models = ctx
+        .registry
+        .models()
+        .iter()
+        .map(|m| model_summary(m, counts.get(&m.name).copied().unwrap_or(0)))
+        .collect();
+    Reply::ok(
+        ObjBuilder::new()
+            .arr("models", models)
+            .uint("installs", ctx.registry.metrics.installs.load(Relaxed))
+            .uint("swaps", ctx.registry.metrics.swaps.load(Relaxed))
+            .uint("rejected_manifests", ctx.registry.metrics.rejected_manifests.load(Relaxed))
+            .uint("rejected_models", ctx.registry.metrics.rejected_models.load(Relaxed))
+            .build(),
+    )
+}
+
+fn metrics(ctx: &ConnCtx) -> Reply {
+    use std::sync::atomic::Ordering::Relaxed;
+    let reg = &ctx.registry.metrics;
+    let registry = ObjBuilder::new()
+        .uint("installs", reg.installs.load(Relaxed))
+        .uint("swaps", reg.swaps.load(Relaxed))
+        .uint("rejected_manifests", reg.rejected_manifests.load(Relaxed))
+        .uint("rejected_models", reg.rejected_models.load(Relaxed))
+        .build();
+    let http = ctx.metrics.compose();
+    let counts = ctx.registry.metrics.request_counts();
+    let models = ctx
+        .registry
+        .models()
+        .iter()
+        .map(|m| {
+            let s = m.handle();
+            let mm = &s.metrics;
+            ObjBuilder::new()
+                .str("name", &m.name)
+                .uint("epoch", m.epoch)
+                .uint("http_requests", counts.get(&m.name).copied().unwrap_or(0))
+                .uint("requests", mm.requests.load(Relaxed))
+                .uint("responses", mm.responses.load(Relaxed))
+                .uint("errors", mm.errors.load(Relaxed))
+                .uint("shed_requests", mm.shed_requests.load(Relaxed))
+                .uint("decode_sessions", mm.decode_sessions.load(Relaxed))
+                .uint("generated_tokens", mm.generated_tokens.load(Relaxed))
+                .uint("p50_us", mm.latency_percentile_us(50.0))
+                .uint("p95_us", mm.latency_percentile_us(95.0))
+                .build()
+        })
+        .collect();
+    Reply::ok(
+        ObjBuilder::new()
+            .set("registry", registry)
+            .set("http", http)
+            .arr("models", models)
+            .build(),
+    )
+}
+
+fn classify_schema() -> Schema {
+    Schema::new("body")
+        .optional("model", Kind::Str)
+        .required("tokens", Kind::Arr(Box::new(Kind::UInt)))
+        .optional("tier", Kind::Str)
+}
+
+fn generate_schema() -> Schema {
+    Schema::new("body")
+        .optional("model", Kind::Str)
+        .required("prompt", Kind::Arr(Box::new(Kind::UInt)))
+        .optional("max_new", Kind::UInt)
+        .optional("temperature", Kind::Num)
+        .optional("top_k", Kind::UInt)
+        .optional("seed", Kind::UInt)
+        .optional("tier", Kind::Str)
+}
+
+/// Parse + schema-validate a POST body; any failure is a structured 400.
+fn parse_body(body: &[u8], schema: &Schema) -> Result<Value, Reply> {
+    let v = Value::parse_bytes(body)
+        .map_err(|e| Reply::error(400, "bad_request", &format!("{e:#}")))?;
+    schema
+        .validate(&v)
+        .map_err(|e| Reply::error(400, "invalid_request", &e.to_string()))?;
+    Ok(v)
+}
+
+/// Extract a schema-validated UInt array as token ids, bounding each value
+/// to `i32` (the wire type of the model vocabulary).
+fn token_field(v: &Value, key: &str) -> Result<Vec<i32>, Reply> {
+    let arr = v.get(key).and_then(|a| a.as_arr().ok()).unwrap_or_default();
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let n = item.as_f64().unwrap_or(-1.0);
+        if !(0.0..=i32::MAX as f64).contains(&n) {
+            let msg = format!("body.{key}[{i}]: token id out of range (0..={})", i32::MAX);
+            return Err(Reply::error(400, "invalid_request", &msg));
+        }
+        out.push(n as i32);
+    }
+    Ok(out)
+}
+
+fn tier_field(v: &Value) -> Result<Tier, Reply> {
+    match v.get("tier") {
+        None => Ok(Tier::Quality),
+        Some(t) => {
+            let text = t.as_str().unwrap_or_default();
+            text.parse::<Tier>()
+                .map_err(|e| Reply::error(400, "invalid_request", &format!("body.tier: {e}")))
+        }
+    }
+}
+
+/// Resolve `body.model` against the registry, enforcing the family the
+/// endpoint requires.
+fn resolve_model(
+    v: &Value,
+    ctx: &ConnCtx,
+    family: &str,
+    endpoint: &str,
+) -> Result<std::sync::Arc<ServingModel>, Reply> {
+    let name = v.get("model").and_then(|m| m.as_str().ok());
+    let model = ctx.registry.resolve(name).map_err(|e| registry_reply(&e))?;
+    if model.family != family {
+        let msg = format!(
+            "model {:?} has family {:?}; {endpoint} requires family {family:?}",
+            model.name, model.family
+        );
+        return Err(Reply::error(400, "invalid_request", &msg));
+    }
+    Ok(model)
+}
+
+fn registry_reply(e: &RegistryError) -> Reply {
+    match e {
+        RegistryError::UnknownModel { .. } => Reply::error(404, "not_found", &e.to_string()),
+        RegistryError::NoDefaultModel { .. } => Reply::error(400, "invalid_request", &e.to_string()),
+        _ => Reply::error(500, "internal", &e.to_string()),
+    }
+}
+
+fn serve_reply(e: &ServeError) -> Reply {
+    match e {
+        ServeError::Overloaded { reason, retry_after } => {
+            Reply::overloaded(429, "overloaded", &reason.to_string(), *retry_after)
+        }
+        // The HTTP layer already screened client-attributable causes
+        // (shape, family, bounds), so a dispatcher-side failure is ours.
+        ServeError::Failed(msg) => Reply::error(500, "internal", msg),
+        ServeError::Shutdown => {
+            Reply::overloaded(503, "unavailable", "server shutting down", Duration::from_secs(1))
+        }
+    }
+}
+
+fn classify(body: &[u8], ctx: &ConnCtx) -> Reply {
+    let v = match parse_body(body, &classify_schema()) {
+        Ok(v) => v,
+        Err(r) => return r,
+    };
+    let model = match resolve_model(&v, ctx, "text", "/v1/classify") {
+        Ok(m) => m,
+        Err(r) => return r,
+    };
+    let tokens = match token_field(&v, "tokens") {
+        Ok(t) => t,
+        Err(r) => return r,
+    };
+    if tokens.len() != model.seq {
+        let msg = format!(
+            "body.tokens: expected exactly {} token ids (model window), got {}",
+            model.seq,
+            tokens.len()
+        );
+        return Reply::error(400, "invalid_request", &msg);
+    }
+    let tier = match tier_field(&v) {
+        Ok(t) => t,
+        Err(r) => return r,
+    };
+    ctx.registry.metrics.record_request(&model.name);
+    match model.handle().classify_or_shed(tokens, tier) {
+        Ok(resp) => Reply::ok(
+            ObjBuilder::new()
+                .str("model", &model.name)
+                .str("version", &model.version)
+                .uint("epoch", model.epoch)
+                .str("variant", &resp.variant)
+                .uint("label", resp.label as u64)
+                .arr_f32("logits", &resp.logits)
+                .uint("latency_us", resp.latency.as_micros() as u64)
+                .build(),
+        ),
+        Err(e) => serve_reply(&e),
+    }
+}
+
+fn generate(body: &[u8], ctx: &ConnCtx) -> Outcome {
+    let v = match parse_body(body, &generate_schema()) {
+        Ok(v) => v,
+        Err(r) => return Outcome::Json(r),
+    };
+    let model = match resolve_model(&v, ctx, "lm", "/v1/generate") {
+        Ok(m) => m,
+        Err(r) => return Outcome::Json(r),
+    };
+    let prompt = match token_field(&v, "prompt") {
+        Ok(p) => p,
+        Err(r) => return Outcome::Json(r),
+    };
+    if prompt.is_empty() || prompt.len() > model.seq {
+        let msg = format!(
+            "body.prompt: expected 1..={} token ids (model window), got {}",
+            model.seq,
+            prompt.len()
+        );
+        return Outcome::Json(Reply::error(400, "invalid_request", &msg));
+    }
+    let max_new = v.usize_or("max_new", 16);
+    if max_new == 0 || max_new > ctx.cfg.max_generate_tokens {
+        let msg = format!(
+            "body.max_new: expected 1..={}, got {max_new}",
+            ctx.cfg.max_generate_tokens
+        );
+        return Outcome::Json(Reply::error(400, "invalid_request", &msg));
+    }
+    let tier = match tier_field(&v) {
+        Ok(t) => t,
+        Err(r) => return Outcome::Json(r),
+    };
+    let sampling = SamplingCfg {
+        temperature: v.f64_opt("temperature").unwrap_or(0.0) as f32,
+        top_k: v.usize_or("top_k", 0),
+        seed: v.get("seed").and_then(|s| s.as_f64().ok()).unwrap_or(0.0) as u64,
+    };
+    ctx.registry.metrics.record_request(&model.name);
+    let rx = match model.handle().generate_or_shed(prompt, max_new, sampling, tier) {
+        Ok(rx) => rx,
+        Err(e) => return Outcome::Json(serve_reply(&e)),
+    };
+    // Peek the first event before committing to a status line: a shed or an
+    // immediate failure must answer 429/500, not a 200 that then errors.
+    match rx.recv() {
+        Err(_) => Outcome::Json(serve_reply(&ServeError::Shutdown)),
+        Ok(TokenEvent::Rejected(reason)) => Outcome::Json(Reply::overloaded(
+            429,
+            "overloaded",
+            &reason.to_string(),
+            reason.retry_after(),
+        )),
+        Ok(TokenEvent::Failed(msg)) => Outcome::Json(Reply::error(500, "internal", &msg)),
+        Ok(first) => Outcome::Stream {
+            first,
+            rx,
+            model: model.name.clone(),
+            version: model.version.clone(),
+            epoch: model.epoch,
+        },
+    }
+}

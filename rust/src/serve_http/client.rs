@@ -1,0 +1,197 @@
+//! Minimal blocking HTTP/1.1 client for the front end's own tests,
+//! benches, and the CI boot check — speaks exactly the dialect the server
+//! emits (`Connection: close`, full bodies or chunked ndjson), nothing
+//! more.
+//!
+//! [`request_raw`] additionally lets the fault-injection suite send
+//! arbitrary (malformed, truncated) bytes and observe the server's exact
+//! reply.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// A fully-read response: status, lowercased headers, de-chunked body.
+#[derive(Clone, Debug)]
+pub struct HttpReply {
+    /// Numeric status code from the status line.
+    pub status: u16,
+    /// Headers, names lowercased.
+    pub headers: BTreeMap<String, String>,
+    /// Body bytes (already de-chunked when the response was chunked).
+    pub body: Vec<u8>,
+}
+
+impl HttpReply {
+    /// Body as UTF-8 (lossy — diagnostics only).
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).to_string()
+    }
+
+    /// Parse the body as a single JSON document.
+    pub fn json(&self) -> Result<Value> {
+        Value::parse_bytes(&self.body)
+    }
+
+    /// Parse the body as ndjson (one JSON document per non-empty line) —
+    /// the `/v1/generate` stream format.
+    pub fn ndjson(&self) -> Result<Vec<Value>> {
+        let text = std::str::from_utf8(&self.body).context("ndjson body is not UTF-8")?;
+        text.lines().filter(|l| !l.trim().is_empty()).map(Value::parse).collect()
+    }
+}
+
+/// Issue one request and read the response to EOF. `body = Some(json)`
+/// sends a POST with `Content-Length`; `None` sends a GET.
+pub fn request(
+    addr: SocketAddr,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<HttpReply> {
+    let method = if body.is_some() { "POST" } else { "GET" };
+    let payload = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    let raw = send(addr, head.as_bytes(), payload.as_bytes(), timeout, false)?;
+    parse_response(&raw)
+}
+
+/// Write arbitrary raw bytes, half-close the write side, and read whatever
+/// the server answers until it closes. The fault-injection entry point:
+/// the bytes need not be valid HTTP, and a deliberately short body (with a
+/// larger declared `Content-Length`) exercises the truncation path.
+pub fn request_raw(addr: SocketAddr, raw: &[u8], timeout: Duration) -> Result<Vec<u8>> {
+    send(addr, raw, &[], timeout, true)
+}
+
+fn send(
+    addr: SocketAddr,
+    head: &[u8],
+    body: &[u8],
+    timeout: Duration,
+    half_close: bool,
+) -> Result<Vec<u8>> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).context("setting read timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("setting write timeout")?;
+    stream.write_all(head).context("writing request head")?;
+    if !body.is_empty() {
+        stream.write_all(body).context("writing request body")?;
+    }
+    if half_close {
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+    }
+    let mut out = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                bail!("timed out reading response from {addr}")
+            }
+            Err(e) => return Err(anyhow!("reading response from {addr}: {e}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a complete HTTP/1.1 response (status line, headers, body),
+/// de-chunking when `Transfer-Encoding: chunked`.
+pub fn parse_response(raw: &[u8]) -> Result<HttpReply> {
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| anyhow!("response has no head/body separator"))?;
+    let head = std::str::from_utf8(&raw[..head_end]).context("response head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.splitn(3, ' ');
+    let proto = parts.next().unwrap_or("");
+    if !proto.starts_with("HTTP/1.") {
+        bail!("unexpected status line {status_line:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .unwrap_or("")
+        .parse()
+        .with_context(|| format!("unparseable status in {status_line:?}"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    let mut body = raw[head_end + 4..].to_vec();
+    if headers.get("transfer-encoding").map(String::as_str) == Some("chunked") {
+        body = dechunk(&body)?;
+    }
+    Ok(HttpReply { status, headers, body })
+}
+
+/// Decode a chunked body: `hexlen\r\n payload \r\n ... 0\r\n\r\n`.
+fn dechunk(mut raw: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let line_end = raw
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or_else(|| anyhow!("chunked body missing a size line"))?;
+        let size_text =
+            std::str::from_utf8(&raw[..line_end]).context("chunk size is not UTF-8")?;
+        let size = usize::from_str_radix(size_text.trim(), 16)
+            .with_context(|| format!("invalid chunk size {size_text:?}"))?;
+        raw = &raw[line_end + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if raw.len() < size + 2 {
+            bail!("truncated chunk (declared {size} bytes, {} available)", raw.len());
+        }
+        out.extend_from_slice(&raw[..size]);
+        raw = &raw[size + 2..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_response() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\n{}";
+        let r = parse_response(raw).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.headers.get("content-type").map(String::as_str), Some("application/json"));
+        assert_eq!(r.body, b"{}");
+        assert!(r.json().is_ok());
+    }
+
+    #[test]
+    fn dechunks_streamed_body() {
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nab\ncd\r\n3\r\nef\n\r\n0\r\n\r\n";
+        let r = parse_response(raw).unwrap();
+        assert_eq!(r.body, b"ab\ncdef\n");
+    }
+
+    #[test]
+    fn malformed_responses_fail_closed() {
+        assert!(parse_response(b"garbage").is_err());
+        assert!(parse_response(b"HTTP/1.1 abc OK\r\n\r\n").is_err());
+        let truncated = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nff\r\nshort";
+        assert!(parse_response(truncated).is_err());
+    }
+}

@@ -1,0 +1,477 @@
+//! Per-connection mechanics: deadline-bounded head/body reads, strict
+//! HTTP/1.1 parsing, full + chunked response writers.
+//!
+//! Everything here is fail-closed and panic-free: every malformed input,
+//! limit breach, timeout and socket error maps to a specific close path
+//! (structured error response, eviction, or silent close), and every
+//! terminal status is recorded in [`HttpMetrics`] exactly once.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::registry::ModelRegistry;
+use crate::util::json::{ObjBuilder, Value};
+
+use super::api::{self, Outcome};
+use super::{HttpConfig, HttpMetrics};
+
+/// Shared per-connection context (one registry + config + counters for the
+/// whole server).
+pub(crate) struct ConnCtx {
+    pub registry: Arc<ModelRegistry>,
+    pub cfg: HttpConfig,
+    pub metrics: Arc<HttpMetrics>,
+}
+
+/// A fully-read request, reduced to what the routed handlers consume: the
+/// path (method and headers were already enforced here) + raw body bytes.
+pub(crate) struct HttpRequest {
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// A complete (non-streamed) response.
+pub(crate) struct Reply {
+    pub status: u16,
+    pub body: Value,
+    /// Serialized as a `Retry-After` header (whole seconds, rounded up,
+    /// minimum 1) and echoed as `retry_after_ms` in the error body.
+    pub retry_after: Option<Duration>,
+}
+
+impl Reply {
+    pub fn ok(body: Value) -> Self {
+        Reply { status: 200, body, retry_after: None }
+    }
+
+    pub fn error(status: u16, code: &str, message: &str) -> Self {
+        Reply { status, body: error_body(status, code, message, None), retry_after: None }
+    }
+
+    pub fn overloaded(status: u16, code: &str, message: &str, retry_after: Duration) -> Self {
+        Reply {
+            status,
+            body: error_body(status, code, message, Some(retry_after)),
+            retry_after: Some(retry_after),
+        }
+    }
+}
+
+/// The canonical structured error body:
+/// `{"error":{"status":N,"code":"...","message":"..."}}`.
+pub(crate) fn error_body(
+    status: u16,
+    code: &str,
+    message: &str,
+    retry_after: Option<Duration>,
+) -> Value {
+    let mut e = ObjBuilder::new()
+        .uint("status", status as u64)
+        .str("code", code)
+        .str("message", message);
+    if let Some(d) = retry_after {
+        e = e.uint("retry_after_ms", d.as_millis() as u64);
+    }
+    ObjBuilder::new().set("error", e.build()).build()
+}
+
+pub(crate) fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Why a read loop gave up before producing a request.
+enum ReadErr {
+    /// Deadline exceeded — the slow-loris/eviction path (408).
+    Evicted,
+    /// Head grew past [`HttpConfig::max_header_bytes`] (431).
+    TooLarge,
+    /// Peer closed mid-message (400).
+    Truncated,
+    /// Peer closed before sending anything — not an error, just close.
+    SilentClose,
+    /// Socket error — nothing to say to the peer, just close.
+    Io,
+}
+
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Read until the blank line ending the head, under
+/// [`HttpConfig::header_deadline`]. Returns the buffer and the offset just
+/// past `\r\n\r\n` (bytes beyond it are the start of the body).
+fn read_head(stream: &mut TcpStream, cfg: &HttpConfig) -> Result<(Vec<u8>, usize), ReadErr> {
+    let deadline = Instant::now() + cfg.header_deadline;
+    let mut buf = Vec::new();
+    loop {
+        if let Some(end) = head_end(&buf) {
+            return Ok((buf, end));
+        }
+        if buf.len() > cfg.max_header_bytes {
+            return Err(ReadErr::TooLarge);
+        }
+        read_some(stream, &mut buf, deadline, buf.is_empty())?;
+    }
+}
+
+/// Read the remaining `want` body bytes under
+/// [`HttpConfig::body_deadline`].
+fn read_body(
+    stream: &mut TcpStream,
+    mut body: Vec<u8>,
+    want: usize,
+    cfg: &HttpConfig,
+) -> Result<Vec<u8>, ReadErr> {
+    let deadline = Instant::now() + cfg.body_deadline;
+    while body.len() < want {
+        read_some(stream, &mut body, deadline, false)?;
+    }
+    body.truncate(want);
+    Ok(body)
+}
+
+/// One bounded read: enforce the deadline, tolerate timeout wakeups, map
+/// EOF to `Truncated` (or `SilentClose` when nothing was ever received).
+fn read_some(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    deadline: Instant,
+    nothing_yet: bool,
+) -> Result<(), ReadErr> {
+    let now = Instant::now();
+    if now >= deadline {
+        return Err(ReadErr::Evicted);
+    }
+    let wait = (deadline - now).min(Duration::from_millis(100));
+    stream.set_read_timeout(Some(wait)).map_err(|_| ReadErr::Io)?;
+    let mut chunk = [0u8; 2048];
+    match stream.read(&mut chunk) {
+        Ok(0) => Err(if nothing_yet { ReadErr::SilentClose } else { ReadErr::Truncated }),
+        Ok(n) => {
+            buf.extend_from_slice(&chunk[..n]);
+            Ok(())
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            Ok(())
+        }
+        Err(_) => Err(ReadErr::Io),
+    }
+}
+
+/// Parse the head: a strict request line (`METHOD SP PATH SP HTTP/1.x`)
+/// plus `name: value` header lines, names lowercased.
+fn parse_head(
+    head: &[u8],
+) -> Result<(String, String, BTreeMap<String, String>), String> {
+    let text = std::str::from_utf8(head).map_err(|_| "head is not valid UTF-8".to_string())?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let parts: Vec<&str> = request_line.split(' ').collect();
+    if parts.len() != 3 || parts[0].is_empty() || parts[1].is_empty() {
+        return Err(format!("malformed request line {request_line:?}"));
+    }
+    if !parts[2].starts_with("HTTP/1.") {
+        return Err(format!("unsupported protocol {:?}", parts[2]));
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(format!("malformed header line {line:?}"));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    Ok((parts[0].to_string(), parts[1].to_string(), headers))
+}
+
+/// Serve one connection start to finish. Exactly one of: a full response, a
+/// chunked stream, an eviction, or a silent close.
+pub(crate) fn handle_connection(mut stream: TcpStream, ctx: &ConnCtx) {
+    let _ = stream.set_nodelay(true);
+
+    let (buf, body_start) = match read_head(&mut stream, &ctx.cfg) {
+        Ok(ok) => ok,
+        Err(ReadErr::Evicted) => return evict(&mut stream, ctx, "request head timed out"),
+        Err(ReadErr::TooLarge) => {
+            return reply_and_close(
+                &mut stream,
+                ctx,
+                Reply::error(431, "header_too_large", "request head exceeds the configured limit"),
+            )
+        }
+        Err(ReadErr::Truncated) => {
+            return reply_and_close(
+                &mut stream,
+                ctx,
+                Reply::error(400, "bad_request", "connection closed mid-head"),
+            )
+        }
+        Err(ReadErr::SilentClose) | Err(ReadErr::Io) => return,
+    };
+
+    let (method, path, headers) = match parse_head(&buf[..body_start]) {
+        Ok(h) => h,
+        Err(msg) => {
+            return reply_and_close(&mut stream, ctx, Reply::error(400, "bad_request", &msg))
+        }
+    };
+
+    // Route existence first (404), then method (405).
+    let known_get = matches!(path.as_str(), "/v1/healthz" | "/v1/models" | "/v1/metrics");
+    let known_post = matches!(path.as_str(), "/v1/classify" | "/v1/generate");
+    if !known_get && !known_post {
+        return reply_and_close(
+            &mut stream,
+            ctx,
+            Reply::error(404, "not_found", &format!("no route for {path:?}")),
+        );
+    }
+    let expected = if known_get { "GET" } else { "POST" };
+    if method != expected {
+        return reply_and_close(
+            &mut stream,
+            ctx,
+            Reply::error(405, "method_not_allowed", &format!("{path} requires {expected}")),
+        );
+    }
+
+    let mut body = Vec::new();
+    if known_post {
+        if headers.contains_key("transfer-encoding") {
+            return reply_and_close(
+                &mut stream,
+                ctx,
+                Reply::error(501, "not_implemented", "chunked request bodies are not supported"),
+            );
+        }
+        let Some(len_text) = headers.get("content-length") else {
+            return reply_and_close(
+                &mut stream,
+                ctx,
+                Reply::error(411, "length_required", "POST requires Content-Length"),
+            );
+        };
+        let Ok(len) = len_text.parse::<usize>() else {
+            return reply_and_close(
+                &mut stream,
+                ctx,
+                Reply::error(400, "bad_request", &format!("invalid Content-Length {len_text:?}")),
+            );
+        };
+        if len > ctx.cfg.max_body_bytes {
+            let msg =
+                format!("body of {len} bytes exceeds the {} byte limit", ctx.cfg.max_body_bytes);
+            return reply_and_close(&mut stream, ctx, Reply::error(413, "payload_too_large", &msg));
+        }
+        body = match read_body(&mut stream, buf[body_start..].to_vec(), len, &ctx.cfg) {
+            Ok(b) => b,
+            Err(ReadErr::Evicted) => return evict(&mut stream, ctx, "request body timed out"),
+            Err(ReadErr::Truncated) => {
+                return reply_and_close(
+                    &mut stream,
+                    ctx,
+                    Reply::error(400, "bad_request", "connection closed mid-body"),
+                )
+            }
+            Err(_) => return,
+        };
+    }
+
+    let req = HttpRequest { path, body };
+    match api::route(&req, ctx) {
+        Outcome::Json(reply) => reply_and_close(&mut stream, ctx, reply),
+        Outcome::Stream { first, rx, model, version, epoch } => {
+            stream_generate(&mut stream, ctx, first, rx, &model, &version, epoch)
+        }
+    }
+}
+
+/// Deadline eviction: best-effort 408, count it, close.
+fn evict(stream: &mut TcpStream, ctx: &ConnCtx, msg: &str) {
+    ctx.metrics.evictions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    reply_and_close(stream, ctx, Reply::error(408, "timeout", msg));
+}
+
+/// Serialize + send a full response; every failure mode is a counted close.
+fn reply_and_close(stream: &mut TcpStream, ctx: &ConnCtx, reply: Reply) {
+    ctx.metrics.record_status(reply.status);
+    let body = reply.body.render();
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+        reply.status,
+        reason(reply.status),
+        body.len()
+    );
+    if let Some(d) = reply.retry_after {
+        head.push_str(&format!("Retry-After: {}\r\n", retry_after_secs(d)));
+    }
+    head.push_str("\r\n");
+    if stream.write_all(head.as_bytes()).is_err() || stream.write_all(body.as_bytes()).is_err() {
+        ctx.metrics.disconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    let _ = stream.flush();
+}
+
+/// `Retry-After` is whole seconds: round up, minimum 1.
+pub(crate) fn retry_after_secs(d: Duration) -> u64 {
+    d.as_secs() + u64::from(d.subsec_nanos() > 0).max(u64::from(d.as_secs() == 0))
+}
+
+/// Stream a generation as chunked ndjson. The first event was already
+/// peeked (it decided the 200); the rest drain from `rx`. A write failure
+/// means the client went away mid-stream: count the disconnect and drop the
+/// receiver — the dispatcher finishes the session into the buffered channel
+/// and reconciles its own metrics, so nothing leaks.
+fn stream_generate(
+    stream: &mut TcpStream,
+    ctx: &ConnCtx,
+    first: crate::coordinator::TokenEvent,
+    rx: std::sync::mpsc::Receiver<crate::coordinator::TokenEvent>,
+    model: &str,
+    version: &str,
+    epoch: u64,
+) {
+    use crate::coordinator::TokenEvent;
+
+    ctx.metrics.record_status(200);
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let head = "HTTP/1.1 200 OK\r\nConnection: close\r\nContent-Type: application/x-ndjson\r\n\
+                Transfer-Encoding: chunked\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        ctx.metrics.disconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        return;
+    }
+
+    let mut event = Some(first);
+    loop {
+        let ev = match event.take() {
+            Some(ev) => ev,
+            None => match rx.recv() {
+                Ok(ev) => ev,
+                // Dispatcher gone mid-stream: close out the chunk stream
+                // with a terminal error event.
+                Err(_) => TokenEvent::Failed("server shut down mid-stream".to_string()),
+            },
+        };
+        let (line, done) = match &ev {
+            TokenEvent::Token { index, token } => (
+                ObjBuilder::new()
+                    .str("event", "token")
+                    .uint("index", *index as u64)
+                    .num("token", f64::from(*token))
+                    .render(),
+                false,
+            ),
+            TokenEvent::Done(resp) => (
+                ObjBuilder::new()
+                    .str("event", "done")
+                    .arr_i32("tokens", &resp.tokens)
+                    .str("variant", &resp.variant)
+                    .str("model", model)
+                    .str("version", version)
+                    .uint("epoch", epoch)
+                    .uint("prefill_tokens", resp.prefill_tokens as u64)
+                    .uint("latency_us", resp.latency.as_micros() as u64)
+                    .render(),
+                true,
+            ),
+            TokenEvent::Failed(msg) => (
+                ObjBuilder::new().str("event", "error").str("message", msg).render(),
+                true,
+            ),
+            // Rejections only ever arrive as the first event, which the
+            // handler already mapped to a 429 — but stay total.
+            TokenEvent::Rejected(reason) => (
+                ObjBuilder::new()
+                    .str("event", "error")
+                    .str("message", &format!("rejected: {reason}"))
+                    .render(),
+                true,
+            ),
+        };
+        if write_chunk(stream, line.as_bytes()).is_err() {
+            ctx.metrics.disconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return;
+        }
+        if done {
+            break;
+        }
+    }
+    if stream.write_all(b"0\r\n\r\n").is_err() {
+        ctx.metrics.disconnects.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    let _ = stream.flush();
+}
+
+/// One chunk: hex length, CRLF, payload + trailing newline, CRLF.
+fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    // Each event is its own chunk and its own line (ndjson).
+    write!(stream, "{:x}\r\n", data.len() + 1)?;
+    stream.write_all(data)?;
+    stream.write_all(b"\n\r\n")?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_end_finds_blank_line() {
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(18));
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+
+    #[test]
+    fn parse_head_is_strict() {
+        let (m, p, h) =
+            parse_head(b"POST /v1/classify HTTP/1.1\r\nContent-Length: 2\r\nHost: x\r\n\r\n")
+                .unwrap();
+        assert_eq!((m.as_str(), p.as_str()), ("POST", "/v1/classify"));
+        assert_eq!(h.get("content-length").map(String::as_str), Some("2"));
+
+        assert!(parse_head(b"GARBAGE\r\n\r\n").is_err());
+        assert!(parse_head(b"GET /path\r\n\r\n").is_err(), "two-part request line");
+        assert!(parse_head(b"GET /path SPDY/3\r\n\r\n").is_err(), "non-HTTP protocol");
+        assert!(parse_head(b"GET / HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn retry_after_rounds_up_with_floor_of_one() {
+        assert_eq!(retry_after_secs(Duration::from_millis(10)), 1);
+        assert_eq!(retry_after_secs(Duration::from_secs(2)), 2);
+        assert_eq!(retry_after_secs(Duration::from_millis(2500)), 3);
+    }
+
+    #[test]
+    fn error_body_is_structured() {
+        let v = error_body(429, "overloaded", "busy", Some(Duration::from_millis(50)));
+        let e = v.get("error").unwrap();
+        assert_eq!(e.usize_or("status", 0), 429);
+        assert_eq!(e.str_or("code", ""), "overloaded");
+        assert_eq!(e.usize_or("retry_after_ms", 0), 50);
+    }
+}

@@ -1,0 +1,292 @@
+//! Hardened HTTP/1.1 serving front end over the model [`crate::registry`].
+//!
+//! Hand-rolled on [`std::net::TcpListener`] — hermetic, thread-per-
+//! connection, no async runtime, no external dependencies. The surface:
+//!
+//! | Endpoint        | Method | Semantics                                   |
+//! |-----------------|--------|---------------------------------------------|
+//! | `/v1/healthz`   | GET    | liveness + registered model count            |
+//! | `/v1/models`    | GET    | registry listing (versions, epochs, tallies) |
+//! | `/v1/metrics`   | GET    | registry + per-model + HTTP counters         |
+//! | `/v1/classify`  | POST   | schema-validated classify → JSON             |
+//! | `/v1/generate`  | POST   | schema-validated generate → chunked ndjson   |
+//!
+//! Robustness posture (exercised end-to-end by
+//! `tests/fault_injection_http.rs`):
+//!
+//! * **Deadlines everywhere.** Head and body reads run under absolute
+//!   deadlines ([`HttpConfig::header_deadline`] / [`HttpConfig::body_deadline`]);
+//!   a slow-loris peer is evicted with a 408 and counted in
+//!   [`HttpMetrics::evictions`]. Writes carry [`HttpConfig::write_timeout`].
+//! * **Bounded everything.** Head bytes, body bytes, concurrent
+//!   connections and `max_new` are all capped; breaches answer 431 / 413 /
+//!   503 / 400 — never unbounded buffering.
+//! * **Strict inputs.** Bodies are parsed by the fail-closed
+//!   [`crate::util::json`] codec and validated against per-endpoint
+//!   [`crate::util::json::Schema`]s: unknown fields, missing fields, and
+//!   type mismatches are structured 400s with JSON-path messages. No
+//!   handler panics on any input.
+//! * **Typed overload.** Admission-control sheds surface as 429 (or 503 on
+//!   shutdown) with `Retry-After` derived from the dispatcher's own
+//!   [`crate::coordinator::ShedReason::retry_after`] hint.
+//! * **Graceful shutdown.** [`HttpServer::shutdown`] stops accepting, then
+//!   waits for in-flight connections — including streaming generations —
+//!   to drain.
+
+mod api;
+pub mod client;
+mod conn;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::registry::ModelRegistry;
+use crate::util::json::{ObjBuilder, Value};
+
+/// Hardening knobs for the HTTP front end. The defaults are production-
+/// shaped; the fault-injection suite shrinks them to make limits cheap to
+/// hit.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Hard cap on request-head bytes (431 beyond it).
+    pub max_header_bytes: usize,
+    /// Hard cap on declared body bytes (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Absolute deadline for receiving the full request head; exceeding it
+    /// evicts the connection (slow-loris defense).
+    pub header_deadline: Duration,
+    /// Absolute deadline for receiving the full body after the head.
+    pub body_deadline: Duration,
+    /// Per-write socket timeout; a stalled reader is a disconnect, not a
+    /// wedged worker.
+    pub write_timeout: Duration,
+    /// Concurrent-connection ceiling; excess accepts answer 503.
+    pub max_connections: usize,
+    /// Upper bound a single `/v1/generate` may request via `max_new`.
+    pub max_generate_tokens: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            header_deadline: Duration::from_secs(2),
+            body_deadline: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            max_connections: 64,
+            max_generate_tokens: 512,
+        }
+    }
+}
+
+/// Front-end counters. `requests == ok + client_errors + server_errors +
+/// shed` holds exactly (the fault-injection suite asserts it);
+/// `evictions` and `disconnects` are orthogonal tallies of *why* some of
+/// those requests ended early.
+#[derive(Debug, Default)]
+pub struct HttpMetrics {
+    /// Connections accepted off the listener.
+    pub conns_accepted: AtomicU64,
+    /// Connections refused at the [`HttpConfig::max_connections`] ceiling.
+    pub conns_rejected: AtomicU64,
+    /// Responses written, by status class below.
+    pub requests: AtomicU64,
+    /// 2xx responses.
+    pub ok: AtomicU64,
+    /// 4xx responses other than 429.
+    pub client_errors: AtomicU64,
+    /// 5xx responses.
+    pub server_errors: AtomicU64,
+    /// 429 responses (admission-control sheds).
+    pub shed: AtomicU64,
+    /// Connections evicted for blowing a read deadline (the 408 path).
+    pub evictions: AtomicU64,
+    /// Write failures — the client vanished mid-response/mid-stream.
+    pub disconnects: AtomicU64,
+}
+
+impl HttpMetrics {
+    /// Fresh zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one terminal response status.
+    pub fn record_status(&self, status: u16) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let class = match status {
+            429 => &self.shed,
+            200..=299 => &self.ok,
+            400..=499 => &self.client_errors,
+            _ => &self.server_errors,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Compose the counters as a JSON object (the `/v1/metrics` `http`
+    /// section).
+    pub fn compose(&self) -> Value {
+        ObjBuilder::new()
+            .uint("conns_accepted", self.conns_accepted.load(Ordering::Relaxed))
+            .uint("conns_rejected", self.conns_rejected.load(Ordering::Relaxed))
+            .uint("requests", self.requests.load(Ordering::Relaxed))
+            .uint("ok", self.ok.load(Ordering::Relaxed))
+            .uint("client_errors", self.client_errors.load(Ordering::Relaxed))
+            .uint("server_errors", self.server_errors.load(Ordering::Relaxed))
+            .uint("shed", self.shed.load(Ordering::Relaxed))
+            .uint("evictions", self.evictions.load(Ordering::Relaxed))
+            .uint("disconnects", self.disconnects.load(Ordering::Relaxed))
+            .build()
+    }
+}
+
+/// Decrement-on-drop guard for the live-connection gauge, so the count
+/// stays exact even if a handler unwinds.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running HTTP front end: accept loop + per-connection worker threads
+/// over a shared [`ModelRegistry`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+    /// Front-end counters (shared with every worker).
+    pub metrics: Arc<HttpMetrics>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting.
+    pub fn bind(addr: &str, registry: Arc<ModelRegistry>, cfg: HttpConfig) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding http server on {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let active = Arc::new(AtomicUsize::new(0));
+        let metrics = Arc::new(HttpMetrics::new());
+
+        let stop_bg = stop.clone();
+        let active_bg = active.clone();
+        let metrics_bg = metrics.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("gf-http-accept".into())
+            .spawn(move || {
+                accept_loop(listener, registry, cfg, stop_bg, active_bg, metrics_bg);
+            })
+            .context("spawning http accept thread")?;
+
+        Ok(HttpServer { addr: local, stop, accept_thread: Some(accept_thread), active, metrics })
+    }
+
+    /// The bound socket address (real port even when bound with `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live worker connections right now.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, then wait (bounded) for every
+    /// in-flight connection — including streaming generations — to drain.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            h.join().map_err(|_| anyhow!("http accept thread panicked"))?;
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.active.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= deadline {
+                return Err(anyhow!(
+                    "http shutdown timed out with {} connections still active",
+                    self.active.load(Ordering::SeqCst)
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // Un-shutdown drops still stop the accept loop; workers run their
+        // connections to completion on their own threads.
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<ModelRegistry>,
+    cfg: HttpConfig,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    metrics: Arc<HttpMetrics>,
+) {
+    let ctx = Arc::new(conn::ConnCtx { registry, cfg, metrics });
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                ctx.metrics.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                // Admission at the connection level: beyond the ceiling we
+                // answer 503 inline (cheap, bounded) instead of queueing.
+                if active.load(Ordering::SeqCst) >= ctx.cfg.max_connections {
+                    ctx.metrics.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    reject_connection(stream, &ctx);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
+                let guard = ActiveGuard(active.clone());
+                let ctx = ctx.clone();
+                // On spawn failure the un-run closure (and the guard with
+                // it) is dropped, restoring the gauge; nothing else to do.
+                let _ = std::thread::Builder::new().name("gf-http-conn".into()).spawn(move || {
+                    let _guard = guard;
+                    conn::handle_connection(stream, &ctx);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Inline 503 for connections beyond the ceiling.
+fn reject_connection(mut stream: TcpStream, ctx: &Arc<conn::ConnCtx>) {
+    ctx.metrics.record_status(503);
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let retry = Some(Duration::from_secs(1));
+    let body = conn::error_body(503, "unavailable", "connection limit reached", retry).render();
+    let head = format!(
+        "HTTP/1.1 503 {}\r\nConnection: close\r\nContent-Type: application/json\r\n\
+         Retry-After: 1\r\nContent-Length: {}\r\n\r\n",
+        conn::reason(503),
+        body.len()
+    );
+    use std::io::Write;
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}

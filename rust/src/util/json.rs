@@ -1,11 +1,26 @@
 //! Minimal JSON parser/serializer (RFC 8259 subset sufficient for the
-//! artifact manifest and experiment configs).
+//! artifact manifest, experiment configs, and the HTTP serving surface).
 //!
 //! The build environment is offline with no serde in the crate cache, so the
 //! manifest contract with `python/compile/aot.py` is implemented directly:
 //! a recursive-descent parser into a [`Value`] tree plus typed accessors.
 //! Unsupported: \u escapes beyond BMP surrogate pairs are passed through
 //! losslessly; numbers parse as f64 (integers up to 2^53, plenty for shapes).
+//!
+//! The parse is **fail-closed** — this codec sits on the trust boundary of
+//! the HTTP front end and the model registry, so anything ambiguous is an
+//! error rather than a guess: trailing bytes after the top-level value,
+//! duplicate object keys, and non-finite numbers (`1e999`) are all
+//! rejected.
+//!
+//! On top of the tree sit two composable halves (the read/write split):
+//!
+//! * [`Schema`] — a declarative validator for request/manifest objects.
+//!   Unknown fields, missing required fields, and type mismatches produce a
+//!   typed, path-bearing [`ValidationError`] (`body.tokens[3]: expected
+//!   non-negative integer`) that maps directly onto a structured 400.
+//! * [`ObjBuilder`] — a fluent object composer for building response and
+//!   manifest JSON without hand-assembling `BTreeMap`s.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -43,6 +58,13 @@ impl Value {
             bail!("trailing characters at byte {}", p.pos);
         }
         Ok(v)
+    }
+
+    /// Parse a complete JSON document from raw bytes (e.g. an HTTP body),
+    /// rejecting invalid UTF-8 up front.
+    pub fn parse_bytes(bytes: &[u8]) -> Result<Value> {
+        let text = std::str::from_utf8(bytes).map_err(|e| anyhow!("body is not UTF-8: {e}"))?;
+        Value::parse(text)
     }
 
     // -- typed accessors ----------------------------------------------------
@@ -262,6 +284,12 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             let v = self.value()?;
+            if m.contains_key(&key) {
+                // Fail-closed: RFC 8259 leaves duplicate-key semantics to the
+                // implementation, and "last one wins" silently drops data —
+                // unacceptable on the request/manifest trust boundary.
+                bail!("duplicate object key {key:?} at byte {}", self.pos);
+            }
             m.insert(key, v);
             self.skip_ws();
             match self.peek()? {
@@ -380,9 +408,271 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Value::Num(text.parse::<f64>().map_err(|e| {
-            anyhow!("bad number {text:?} at byte {start}: {e}")
-        })?))
+        let n = text
+            .parse::<f64>()
+            .map_err(|e| anyhow!("bad number {text:?} at byte {start}: {e}"))?;
+        // `"1e999".parse::<f64>()` happily returns infinity; JSON has no
+        // non-finite numbers, so overflowing literals are a parse error.
+        if !n.is_finite() {
+            bail!("non-finite number {text:?} at byte {start}");
+        }
+        Ok(Value::Num(n))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Declarative validation (the read half of the composer/validator split).
+// ---------------------------------------------------------------------------
+
+/// A typed, path-bearing validation failure: which field broke
+/// (`body.checkpoints[1].sha256`) and how. Implements `std::error::Error`,
+/// so `?` converts it into the crate error type while callers that need the
+/// structure (the HTTP 400 path) can keep the typed form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ValidationError {
+    /// Dotted/indexed path from the schema root to the offending value.
+    pub path: String,
+    /// What was wrong at `path`.
+    pub message: String,
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.path, self.message)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Expected shape of one schema field.
+#[derive(Clone, Debug)]
+pub enum Kind {
+    /// A JSON string.
+    Str,
+    /// Any finite JSON number.
+    Num,
+    /// A non-negative integer (no fraction, ≤ 2^53).
+    UInt,
+    /// `true` / `false`.
+    Bool,
+    /// An array whose elements all match the inner kind.
+    Arr(Box<Kind>),
+    /// A nested object validated by its own schema.
+    Obj(Box<Schema>),
+    /// Any value (presence/absence is still checked).
+    Any,
+}
+
+impl Kind {
+    fn describe(&self) -> &'static str {
+        match self {
+            Kind::Str => "string",
+            Kind::Num => "number",
+            Kind::UInt => "non-negative integer",
+            Kind::Bool => "bool",
+            Kind::Arr(_) => "array",
+            Kind::Obj(_) => "object",
+            Kind::Any => "value",
+        }
+    }
+}
+
+/// A declarative object schema: required/optional fields, each with a
+/// [`Kind`]. Validation is fail-closed — fields not named by the schema are
+/// errors, not silently ignored (a typo'd knob must not be a no-op).
+///
+/// Schemas compose: [`Kind::Obj`] nests one schema inside another and
+/// [`Kind::Arr`] lifts any kind over arrays, so one `validate` call checks
+/// an entire manifest tree and reports the exact failing path.
+#[derive(Clone, Debug)]
+pub struct Schema {
+    name: String,
+    fields: Vec<(String, Kind, bool)>,
+}
+
+impl Schema {
+    /// New empty schema; `name` roots the error paths (e.g. `"body"`).
+    pub fn new(name: &str) -> Self {
+        Schema { name: name.to_string(), fields: Vec::new() }
+    }
+
+    /// Add a field that must be present.
+    pub fn required(mut self, key: &str, kind: Kind) -> Self {
+        self.fields.push((key.to_string(), kind, true));
+        self
+    }
+
+    /// Add a field that may be absent (but must match `kind` when present).
+    pub fn optional(mut self, key: &str, kind: Kind) -> Self {
+        self.fields.push((key.to_string(), kind, false));
+        self
+    }
+
+    /// Validate `v` against this schema. `Ok(())` means every required
+    /// field is present, every present field matches its kind, and no
+    /// unknown fields exist.
+    pub fn validate(&self, v: &Value) -> std::result::Result<(), ValidationError> {
+        self.validate_at(v, &self.name)
+    }
+
+    fn validate_at(&self, v: &Value, path: &str) -> std::result::Result<(), ValidationError> {
+        let obj = match v {
+            Value::Obj(m) => m,
+            other => {
+                return Err(ValidationError {
+                    path: path.to_string(),
+                    message: format!("expected object, got {}", kind_name(other)),
+                })
+            }
+        };
+        for key in obj.keys() {
+            if !self.fields.iter().any(|(k, _, _)| k == key) {
+                return Err(ValidationError {
+                    path: format!("{path}.{key}"),
+                    message: "unknown field".to_string(),
+                });
+            }
+        }
+        for (key, kind, required) in &self.fields {
+            match obj.get(key) {
+                Some(val) => check_kind(val, kind, &format!("{path}.{key}"))?,
+                None if *required => {
+                    return Err(ValidationError {
+                        path: format!("{path}.{key}"),
+                        message: "missing required field".to_string(),
+                    })
+                }
+                None => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn kind_name(v: &Value) -> &'static str {
+    match v {
+        Value::Null => "null",
+        Value::Bool(_) => "bool",
+        Value::Num(_) => "number",
+        Value::Str(_) => "string",
+        Value::Arr(_) => "array",
+        Value::Obj(_) => "object",
+    }
+}
+
+fn check_kind(v: &Value, kind: &Kind, path: &str) -> std::result::Result<(), ValidationError> {
+    let fail = |msg: String| {
+        Err(ValidationError { path: path.to_string(), message: msg })
+    };
+    match kind {
+        Kind::Any => Ok(()),
+        Kind::Str => match v {
+            Value::Str(_) => Ok(()),
+            other => fail(format!("expected string, got {}", kind_name(other))),
+        },
+        Kind::Bool => match v {
+            Value::Bool(_) => Ok(()),
+            other => fail(format!("expected bool, got {}", kind_name(other))),
+        },
+        Kind::Num => match v {
+            Value::Num(_) => Ok(()),
+            other => fail(format!("expected number, got {}", kind_name(other))),
+        },
+        Kind::UInt => match v {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 9.0e15 => Ok(()),
+            Value::Num(n) => fail(format!("expected non-negative integer, got {n}")),
+            other => fail(format!(
+                "expected {}, got {}",
+                kind.describe(),
+                kind_name(other)
+            )),
+        },
+        Kind::Arr(inner) => match v {
+            Value::Arr(items) => {
+                for (i, item) in items.iter().enumerate() {
+                    check_kind(item, inner, &format!("{path}[{i}]"))?;
+                }
+                Ok(())
+            }
+            other => fail(format!("expected array, got {}", kind_name(other))),
+        },
+        Kind::Obj(schema) => schema.validate_at(v, path),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fluent composition (the write half).
+// ---------------------------------------------------------------------------
+
+/// Fluent JSON object composer — the write-side counterpart of [`Schema`].
+/// Builds a [`Value::Obj`] without hand-assembling maps; used by the HTTP
+/// response paths and the registry manifest writer.
+#[derive(Clone, Debug, Default)]
+pub struct ObjBuilder {
+    m: BTreeMap<String, Value>,
+}
+
+impl ObjBuilder {
+    /// Empty object.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set `key` to an arbitrary value (later sets of the same key win).
+    pub fn set(mut self, key: &str, v: Value) -> Self {
+        self.m.insert(key.to_string(), v);
+        self
+    }
+
+    /// Set a string field.
+    pub fn str(self, key: &str, s: &str) -> Self {
+        self.set(key, Value::Str(s.to_string()))
+    }
+
+    /// Set a numeric field.
+    pub fn num(self, key: &str, n: f64) -> Self {
+        self.set(key, Value::Num(n))
+    }
+
+    /// Set a non-negative integer field.
+    pub fn uint(self, key: &str, n: u64) -> Self {
+        self.set(key, Value::Num(n as f64))
+    }
+
+    /// Set a boolean field.
+    pub fn boolean(self, key: &str, b: bool) -> Self {
+        self.set(key, Value::Bool(b))
+    }
+
+    /// Set an array field from already-built values.
+    pub fn arr(self, key: &str, items: Vec<Value>) -> Self {
+        self.set(key, Value::Arr(items))
+    }
+
+    /// Set an array field from token ids.
+    pub fn arr_i32(self, key: &str, xs: &[i32]) -> Self {
+        self.set(
+            key,
+            Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect()),
+        )
+    }
+
+    /// Set an array field from f32 values (logits).
+    pub fn arr_f32(self, key: &str, xs: &[f32]) -> Self {
+        self.set(
+            key,
+            Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect()),
+        )
+    }
+
+    /// Finish building, yielding the composed [`Value`].
+    pub fn build(self) -> Value {
+        Value::Obj(self.m)
+    }
+
+    /// Finish and serialize to compact JSON text.
+    pub fn render(self) -> String {
+        self.build().render()
     }
 }
 
@@ -450,5 +740,129 @@ mod tests {
         assert_eq!(a[1].as_f64().unwrap(), 1000.0);
         assert!((a[2].as_f64().unwrap() + 0.025).abs() < 1e-12);
         assert!(a[0].as_usize().is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_bytes_after_top_level_value() {
+        for bad in ["{} x", "1 2", "[1]{}", "null,", "true false"] {
+            let e = Value::parse(bad).unwrap_err();
+            assert!(format!("{e:#}").contains("trailing"), "{bad:?}: {e:#}");
+        }
+        // Pure trailing whitespace stays fine.
+        assert!(Value::parse("{\"a\": 1}  \n").is_ok());
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        let e = Value::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate object key \"a\""), "{e:#}");
+        // Nested duplicates are caught too; same key in *different* objects
+        // is of course fine.
+        assert!(Value::parse(r#"{"o": {"k": 1, "k": 2}}"#).is_err());
+        assert!(Value::parse(r#"[{"k": 1}, {"k": 2}]"#).is_ok());
+    }
+
+    #[test]
+    fn rejects_non_finite_numbers() {
+        for bad in ["1e999", "-1e999", "[1, 2e9999]"] {
+            assert!(Value::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn parse_bytes_rejects_invalid_utf8() {
+        assert!(Value::parse_bytes(b"{\"a\": 1}").is_ok());
+        assert!(Value::parse_bytes(&[0x7b, 0xff, 0xfe, 0x7d]).is_err());
+    }
+
+    #[test]
+    fn schema_accepts_valid_objects() {
+        let schema = Schema::new("body")
+            .required("tokens", Kind::Arr(Box::new(Kind::UInt)))
+            .optional("model", Kind::Str)
+            .optional("tier", Kind::Str);
+        let v = Value::parse(r#"{"tokens": [1, 2, 3], "tier": "fast"}"#).unwrap();
+        schema.validate(&v).unwrap();
+    }
+
+    #[test]
+    fn schema_rejects_unknown_fields_with_path() {
+        let schema = Schema::new("body").required("tokens", Kind::Arr(Box::new(Kind::UInt)));
+        let v = Value::parse(r#"{"tokens": [1], "bogus": 1}"#).unwrap();
+        let e = schema.validate(&v).unwrap_err();
+        assert_eq!(e.path, "body.bogus");
+        assert_eq!(e.message, "unknown field");
+    }
+
+    #[test]
+    fn schema_rejects_missing_and_mistyped_fields() {
+        let schema = Schema::new("body")
+            .required("tokens", Kind::Arr(Box::new(Kind::UInt)))
+            .optional("temperature", Kind::Num);
+        let e = schema.validate(&Value::parse("{}").unwrap()).unwrap_err();
+        assert_eq!(e.path, "body.tokens");
+        assert!(e.message.contains("missing"));
+
+        let v = Value::parse(r#"{"tokens": [1, -2]}"#).unwrap();
+        let e = schema.validate(&v).unwrap_err();
+        assert_eq!(e.path, "body.tokens[1]");
+        assert!(e.message.contains("non-negative integer"), "{e}");
+
+        let v = Value::parse(r#"{"tokens": [], "temperature": "hot"}"#).unwrap();
+        let e = schema.validate(&v).unwrap_err();
+        assert_eq!(e.path, "body.temperature");
+        assert!(e.message.contains("expected number"), "{e}");
+
+        let e = schema.validate(&Value::parse("[1]").unwrap()).unwrap_err();
+        assert_eq!(e.path, "body");
+        assert!(e.message.contains("expected object"), "{e}");
+    }
+
+    #[test]
+    fn schema_nesting_reports_deep_paths() {
+        let ckpt = Schema::new("checkpoint")
+            .required("name", Kind::Str)
+            .required("sha256", Kind::Str);
+        let schema = Schema::new("manifest")
+            .required("format", Kind::UInt)
+            .required("checkpoints", Kind::Arr(Box::new(Kind::Obj(Box::new(ckpt)))));
+        let ok = Value::parse(
+            r#"{"format": 1, "checkpoints": [{"name": "dense", "sha256": "ab"}]}"#,
+        )
+        .unwrap();
+        schema.validate(&ok).unwrap();
+
+        let bad = Value::parse(
+            r#"{"format": 1, "checkpoints": [{"name": "dense", "sha256": 7}]}"#,
+        )
+        .unwrap();
+        let e = schema.validate(&bad).unwrap_err();
+        assert_eq!(e.path, "manifest.checkpoints[0].sha256");
+    }
+
+    #[test]
+    fn obj_builder_composes_and_roundtrips() {
+        let v = ObjBuilder::new()
+            .str("variant", "dense")
+            .uint("label", 3)
+            .boolean("ok", true)
+            .arr_i32("tokens", &[1, 2, 3])
+            .arr_f32("logits", &[0.5, -1.25])
+            .build();
+        let text = v.render();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back.req("variant").unwrap().as_str().unwrap(), "dense");
+        assert_eq!(back.req("label").unwrap().as_usize().unwrap(), 3);
+        assert!(back.req("ok").unwrap().as_bool().unwrap());
+        assert_eq!(back.req("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(back.req("logits").unwrap().as_arr().unwrap()[1].as_f64().unwrap(), -1.25);
+        // The composer's output always passes a matching schema.
+        let schema = Schema::new("resp")
+            .required("variant", Kind::Str)
+            .required("label", Kind::UInt)
+            .required("ok", Kind::Bool)
+            .required("tokens", Kind::Arr(Box::new(Kind::UInt)))
+            .required("logits", Kind::Arr(Box::new(Kind::Num)));
+        schema.validate(&back).unwrap();
     }
 }

@@ -1,12 +1,17 @@
 //! Small shared utilities: deterministic RNG, timing helpers, and the
-//! offline replacements for unavailable crates (JSON codec, bench harness).
+//! offline replacements for unavailable crates (JSON codec with schema
+//! validation, SHA-256, retry/backoff, bench harness).
 
 pub mod bench;
 pub mod json;
+pub mod retry;
 pub mod rng;
+pub mod sha256;
 pub mod timer;
 
 pub use bench::Bench;
 pub use json::Value as Json;
+pub use retry::{try_with_backoff, BackoffCfg};
 pub use rng::Pcg64;
+pub use sha256::sha256_hex;
 pub use timer::Stopwatch;

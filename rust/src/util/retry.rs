@@ -1,0 +1,189 @@
+//! Bounded, deterministic exponential backoff for overload-shed requests.
+//!
+//! The serving front end sheds load with typed `Overloaded` errors carrying
+//! a retry hint; this module is the client-side half: a small retry driver
+//! that callers use instead of hand-rolling loops. Determinism matters — the
+//! delay schedule is a pure function of [`BackoffCfg`] and the attempt
+//! index (no jitter source baked in), and the sleep is injected, so tests
+//! drive it with a fake clock and assert the exact schedule.
+
+use std::time::Duration;
+
+/// Retry policy: how many attempts, and the delay curve between them.
+///
+/// The delay before retry `i` (0-based) is `base * multiplier^i`, capped at
+/// `max_delay`; a per-error server hint (e.g. `Retry-After`) can only
+/// lengthen a delay, never shorten it below the curve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BackoffCfg {
+    /// Total attempts including the first (must be ≥ 1; 1 = no retries).
+    pub attempts: usize,
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Per-retry delay multiplier.
+    pub multiplier: u32,
+    /// Upper bound on any single delay.
+    pub max_delay: Duration,
+}
+
+impl Default for BackoffCfg {
+    fn default() -> Self {
+        BackoffCfg {
+            attempts: 4,
+            base: Duration::from_millis(25),
+            multiplier: 2,
+            max_delay: Duration::from_millis(400),
+        }
+    }
+}
+
+impl BackoffCfg {
+    /// The deterministic delay before retry `attempt` (0-based):
+    /// `min(base * multiplier^attempt, max_delay)`.
+    pub fn delay(&self, attempt: usize) -> Duration {
+        let mut d = self.base;
+        for _ in 0..attempt {
+            d = d.saturating_mul(self.multiplier);
+            if d >= self.max_delay {
+                return self.max_delay;
+            }
+        }
+        d.min(self.max_delay)
+    }
+}
+
+/// Run `op` until it succeeds, retries are exhausted, or an error is not
+/// retryable.
+///
+/// * `op(attempt)` — the fallible operation; `attempt` is 0-based.
+/// * `retry_after(&err)` — `Some(hint)` marks the error retryable (the hint
+///   may be zero); `None` aborts immediately with that error. The effective
+///   delay is `max(cfg.delay(attempt), hint)` — a server's explicit
+///   `Retry-After` can stretch the curve but never undercut it.
+/// * `sleep(d)` — injected so tests substitute a recording fake for
+///   `std::thread::sleep`.
+///
+/// Returns the first success, or the last error once `cfg.attempts` runs
+/// out.
+pub fn try_with_backoff<T, E>(
+    cfg: &BackoffCfg,
+    mut op: impl FnMut(usize) -> std::result::Result<T, E>,
+    mut retry_after: impl FnMut(&E) -> Option<Duration>,
+    mut sleep: impl FnMut(Duration),
+) -> std::result::Result<T, E> {
+    let attempts = cfg.attempts.max(1);
+    let mut attempt = 0;
+    loop {
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt + 1 >= attempts {
+                    return Err(e);
+                }
+                match retry_after(&e) {
+                    Some(hint) => sleep(cfg.delay(attempt).max(hint)),
+                    None => return Err(e),
+                }
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn delay_curve_is_capped_geometric() {
+        let cfg = BackoffCfg::default();
+        assert_eq!(cfg.delay(0), ms(25));
+        assert_eq!(cfg.delay(1), ms(50));
+        assert_eq!(cfg.delay(2), ms(100));
+        assert_eq!(cfg.delay(3), ms(200));
+        assert_eq!(cfg.delay(4), ms(400));
+        assert_eq!(cfg.delay(50), ms(400), "cap holds without overflow");
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures_with_exact_schedule() {
+        let cfg = BackoffCfg::default();
+        let slept = RefCell::new(Vec::new());
+        let out = try_with_backoff(
+            &cfg,
+            |attempt| if attempt < 2 { Err("busy") } else { Ok(attempt) },
+            |_| Some(Duration::ZERO),
+            |d| slept.borrow_mut().push(d),
+        );
+        assert_eq!(out.unwrap(), 2);
+        assert_eq!(*slept.borrow(), vec![ms(25), ms(50)]);
+    }
+
+    #[test]
+    fn exhausts_attempts_and_returns_last_error() {
+        let cfg = BackoffCfg { attempts: 3, ..BackoffCfg::default() };
+        let slept = RefCell::new(Vec::new());
+        let calls = RefCell::new(0usize);
+        let out: Result<(), &str> = try_with_backoff(
+            &cfg,
+            |_| {
+                *calls.borrow_mut() += 1;
+                Err("still busy")
+            },
+            |_| Some(Duration::ZERO),
+            |d| slept.borrow_mut().push(d),
+        );
+        assert_eq!(out.unwrap_err(), "still busy");
+        assert_eq!(*calls.borrow(), 3, "attempts bounds the op calls");
+        assert_eq!(*slept.borrow(), vec![ms(25), ms(50)]);
+    }
+
+    #[test]
+    fn non_retryable_error_aborts_without_sleeping() {
+        let cfg = BackoffCfg::default();
+        let slept = RefCell::new(Vec::new());
+        let out: Result<(), &str> = try_with_backoff(
+            &cfg,
+            |_| Err("malformed"),
+            |_| None,
+            |d| slept.borrow_mut().push(d),
+        );
+        assert_eq!(out.unwrap_err(), "malformed");
+        assert!(slept.borrow().is_empty());
+    }
+
+    #[test]
+    fn server_hint_stretches_but_never_undercuts_the_curve() {
+        let cfg = BackoffCfg::default();
+        let slept = RefCell::new(Vec::new());
+        let out: Result<(), &str> = try_with_backoff(
+            &cfg,
+            |_| Err("busy"),
+            |_| Some(ms(80)),
+            |d| slept.borrow_mut().push(d),
+        );
+        assert!(out.is_err());
+        // attempt 0: max(25, 80) = 80; attempt 1: max(50, 80) = 80;
+        // attempt 2: max(100, 80) = 100.
+        assert_eq!(*slept.borrow(), vec![ms(80), ms(80), ms(100)]);
+    }
+
+    #[test]
+    fn single_attempt_never_sleeps() {
+        let cfg = BackoffCfg { attempts: 1, ..BackoffCfg::default() };
+        let slept = RefCell::new(Vec::new());
+        let out: Result<(), &str> = try_with_backoff(
+            &cfg,
+            |_| Err("busy"),
+            |_| Some(Duration::ZERO),
+            |d| slept.borrow_mut().push(d),
+        );
+        assert!(out.is_err());
+        assert!(slept.borrow().is_empty());
+    }
+}

@@ -1,0 +1,254 @@
+//! Fault injection against the HTTP front end: malformed request lines,
+//! truncated bodies, oversized heads, slow-loris peers, mid-stream
+//! disconnects and connection-ceiling pressure. The contract under test is
+//! uniform — no panics, no leaked workers or sessions, a structured status
+//! for every byte stream the server answers, and exact metrics
+//! reconciliation afterwards.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use greenformer::backend::native::{init_text_params, TextModelCfg};
+use greenformer::registry::ModelRegistry;
+use greenformer::serve_http::{client, HttpConfig, HttpServer};
+use greenformer::tensor::ParamStore;
+
+const CLF_SEQ: usize = 8;
+const GEN_SEQ: usize = 16;
+const T: Duration = Duration::from_secs(10);
+
+fn one_variant(cfg: &TextModelCfg, seed: u64) -> HashMap<String, ParamStore> {
+    let mut m = HashMap::new();
+    m.insert("dense".to_string(), init_text_params(cfg, seed));
+    m
+}
+
+fn registry() -> Arc<ModelRegistry> {
+    let clf_cfg =
+        TextModelCfg { vocab: 64, seq: CLF_SEQ, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 };
+    let gen_cfg =
+        TextModelCfg { vocab: 64, seq: GEN_SEQ, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 };
+    let reg = Arc::new(ModelRegistry::new());
+    reg.install_local("clf", "text", "v1", "dense", one_variant(&clf_cfg, 7), None).unwrap();
+    reg.install_local("gen", "lm", "v1", "dense", one_variant(&gen_cfg, 9), None).unwrap();
+    reg
+}
+
+/// Tight limits so every bound is cheap to hit from a test.
+fn small_cfg() -> HttpConfig {
+    HttpConfig {
+        max_header_bytes: 256,
+        max_body_bytes: 512,
+        header_deadline: Duration::from_millis(400),
+        body_deadline: Duration::from_millis(400),
+        write_timeout: Duration::from_secs(2),
+        max_connections: 32,
+        max_generate_tokens: 16,
+    }
+}
+
+/// The front-end counters must reconcile exactly: every answered request
+/// landed in exactly one status class.
+fn assert_reconciled(server: &HttpServer) {
+    let m = &server.metrics;
+    let total = m.requests.load(Ordering::Relaxed);
+    let accounted = m.ok.load(Ordering::Relaxed)
+        + m.client_errors.load(Ordering::Relaxed)
+        + m.server_errors.load(Ordering::Relaxed)
+        + m.shed.load(Ordering::Relaxed);
+    assert_eq!(total, accounted, "status classes must partition requests");
+}
+
+/// Wait (bounded) until no worker connections remain.
+fn wait_drained(server: &HttpServer) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.active_connections() > 0 {
+        assert!(Instant::now() < deadline, "worker connections leaked");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn malformed_and_oversized_inputs_yield_structured_statuses() {
+    let server = HttpServer::bind("127.0.0.1:0", registry(), small_cfg()).unwrap();
+    let addr = server.local_addr();
+
+    let big_header = format!(
+        "GET /v1/healthz HTTP/1.1\r\nx-pad: {}\r\n\r\n",
+        "a".repeat(300)
+    );
+    let cases: Vec<(Vec<u8>, u16, &str)> = vec![
+        (b"GARBAGE\r\n\r\n".to_vec(), 400, "unparseable request line"),
+        (b"GET /v1/healthz\r\n\r\n".to_vec(), 400, "two-part request line"),
+        (b"GET /v1/healthz HTTP/2.0\r\n\r\n".to_vec(), 400, "unsupported protocol"),
+        (b"DELETE /v1/classify HTTP/1.1\r\n\r\n".to_vec(), 405, "wrong method on known route"),
+        (b"GET /v1/nope HTTP/1.1\r\n\r\n".to_vec(), 404, "unknown route"),
+        (b"POST /v1/classify HTTP/1.1\r\n\r\n".to_vec(), 411, "POST without content-length"),
+        (
+            b"POST /v1/classify HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(),
+            501,
+            "chunked request body",
+        ),
+        (
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 600\r\n\r\n".to_vec(),
+            413,
+            "declared body beyond the cap",
+        ),
+        (
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(),
+            400,
+            "non-numeric content-length",
+        ),
+        (big_header.into_bytes(), 431, "oversized request head"),
+        (
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 50\r\n\r\n{".to_vec(),
+            400,
+            "body truncated by peer close",
+        ),
+    ];
+
+    for (raw, want, what) in cases {
+        let bytes = client::request_raw(addr, &raw, T).unwrap();
+        let reply = client::parse_response(&bytes)
+            .unwrap_or_else(|e| panic!("{what}: unparseable reply: {e}"));
+        assert_eq!(reply.status, want, "{what}: {}", reply.body_text());
+        // Every rejection carries the structured error envelope.
+        let err = reply.json().unwrap_or_else(|e| panic!("{what}: non-JSON body: {e}"));
+        assert_eq!(err.get("error").unwrap().usize_or("status", 0), want as usize, "{what}");
+    }
+
+    // The server is still healthy after all of that.
+    let r = client::request(addr, "/v1/healthz", None, T).unwrap();
+    assert_eq!(r.status, 200);
+
+    wait_drained(&server);
+    assert_reconciled(&server);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn slow_loris_peer_is_evicted_with_408() {
+    let server = HttpServer::bind("127.0.0.1:0", registry(), small_cfg()).unwrap();
+    let addr = server.local_addr();
+
+    // Dribble a partial head and then stall, keeping the socket open. The
+    // server must evict us at `header_deadline` rather than hold a worker.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"GET /v1/healthz HT").unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap();
+    let reply = client::parse_response(&raw).unwrap();
+    assert_eq!(reply.status, 408, "{}", reply.body_text());
+    assert!(server.metrics.evictions.load(Ordering::Relaxed) >= 1);
+
+    // A silent peer (connect, write nothing, vanish) must not produce a
+    // response or leak a worker either.
+    drop(TcpStream::connect(addr).unwrap());
+
+    let r = client::request(addr, "/v1/healthz", None, T).unwrap();
+    assert_eq!(r.status, 200);
+    wait_drained(&server);
+    assert_reconciled(&server);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn mid_stream_disconnect_during_generate_reconciles() {
+    let reg = registry();
+    let server = HttpServer::bind("127.0.0.1:0", reg.clone(), small_cfg()).unwrap();
+    let addr = server.local_addr();
+    let handle = reg.get("gen").unwrap().handle();
+
+    // Start a streaming generation, read a few bytes of the response, then
+    // vanish. The dispatcher must run the session to completion on its
+    // buffered channel; nothing may panic, wedge, or leak.
+    let body = r#"{"model":"gen","prompt":[1,2,3],"max_new":12}"#;
+    let raw = format!(
+        "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut first = [0u8; 16];
+    let n = s.read(&mut first).unwrap();
+    assert!(n > 0, "stream head never arrived");
+    drop(s);
+
+    // The abandoned session must drain: every submitted request answered,
+    // queue depth back to zero, no dispatcher errors.
+    let m = handle.metrics.clone();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let requests = m.requests.load(Ordering::Relaxed);
+        let responses = m.responses.load(Ordering::Relaxed);
+        if requests == responses && handle.queue_depth() == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "abandoned session never drained: {requests} submitted, {responses} answered"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+
+    // The same model still serves complete streams afterwards.
+    let r = client::request(addr, "/v1/generate", Some(body), T).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    let events = r.ndjson().unwrap();
+    assert_eq!(events.last().unwrap().str_or("event", ""), "done");
+
+    wait_drained(&server);
+    assert_reconciled(&server);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn connection_ceiling_rejects_inline_then_recovers() {
+    let mut cfg = small_cfg();
+    cfg.max_connections = 2;
+    // Generous read deadline so the idle sockets below keep their workers
+    // occupied for the whole test.
+    cfg.header_deadline = Duration::from_secs(3);
+    let server = HttpServer::bind("127.0.0.1:0", registry(), cfg).unwrap();
+    let addr = server.local_addr();
+
+    // Occupy every worker slot with idle connections.
+    let hold_a = TcpStream::connect(addr).unwrap();
+    let hold_b = TcpStream::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while server.active_connections() < 2 {
+        assert!(Instant::now() < deadline, "idle connections never occupied workers");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // The next arrival is answered 503 inline — bounded work, typed shed.
+    let r = client::request(addr, "/v1/healthz", None, T).unwrap();
+    assert_eq!(r.status, 503, "{}", r.body_text());
+    assert_eq!(r.headers.get("retry-after").map(String::as_str), Some("1"));
+    assert!(server.metrics.conns_rejected.load(Ordering::Relaxed) >= 1);
+
+    // Release the slots; the server must recover without intervention.
+    drop(hold_a);
+    drop(hold_b);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let r = client::request(addr, "/v1/healthz", None, T).unwrap();
+        if r.status == 200 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "server never recovered after ceiling release");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    wait_drained(&server);
+    assert_reconciled(&server);
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,236 @@
+//! End-to-end boot test of the HTTP front end over the model registry —
+//! the suite CI drives against a real socket on a random port: classify,
+//! streamed generate, structured rejections, clean shutdown.
+//!
+//! Hermetic by construction: models are installed in-memory
+//! (`install_local`), no artifacts, no network beyond loopback.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use greenformer::backend::native::{init_text_params, TextModelCfg};
+use greenformer::backend::SamplingCfg;
+use greenformer::coordinator::Tier;
+use greenformer::registry::ModelRegistry;
+use greenformer::serve_http::{client, HttpConfig, HttpServer};
+use greenformer::tensor::ParamStore;
+
+const SEQ: usize = 8;
+
+fn tiny_cfg() -> TextModelCfg {
+    TextModelCfg { vocab: 64, seq: SEQ, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 }
+}
+
+fn store(seed: u64) -> ParamStore {
+    init_text_params(&tiny_cfg(), seed)
+}
+
+fn one_variant(seed: u64) -> HashMap<String, ParamStore> {
+    let mut m = HashMap::new();
+    m.insert("dense".to_string(), store(seed));
+    m
+}
+
+/// A registry with one classifier (`clf`) and one generator (`gen`) plus a
+/// server bound to an ephemeral loopback port.
+fn boot() -> (Arc<ModelRegistry>, HttpServer) {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.install_local("clf", "text", "v1", "dense", one_variant(7), None).unwrap();
+    registry.install_local("gen", "lm", "v1", "dense", one_variant(9), None).unwrap();
+    let server =
+        HttpServer::bind("127.0.0.1:0", registry.clone(), HttpConfig::default()).unwrap();
+    (registry, server)
+}
+
+const T: Duration = Duration::from_secs(10);
+
+#[test]
+fn full_surface_boot_classify_generate_shutdown() {
+    let (registry, server) = boot();
+    let addr = server.local_addr();
+
+    // -- healthz ------------------------------------------------------------
+    let r = client::request(addr, "/v1/healthz", None, T).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    let v = r.json().unwrap();
+    assert_eq!(v.str_or("status", ""), "ok");
+    assert_eq!(v.usize_or("models", 0), 2);
+
+    // -- models listing -----------------------------------------------------
+    let r = client::request(addr, "/v1/models", None, T).unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json().unwrap();
+    let models = v.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 2);
+    let names: Vec<String> = models.iter().map(|m| m.str_or("name", "")).collect();
+    assert_eq!(names, vec!["clf".to_string(), "gen".to_string()]);
+    assert_eq!(models[0].usize_or("seq", 0), SEQ);
+
+    // -- classify -----------------------------------------------------------
+    let tokens: Vec<i32> = (0..SEQ as i32).collect();
+    let body = format!(
+        "{{\"model\":\"clf\",\"tokens\":{:?},\"tier\":\"quality\"}}",
+        tokens
+    );
+    let r = client::request(addr, "/v1/classify", Some(&body), T).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    let v = r.json().unwrap();
+    assert_eq!(v.str_or("model", ""), "clf");
+    assert_eq!(v.str_or("variant", ""), "dense");
+    let http_label = v.usize_or("label", usize::MAX);
+    assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 3);
+
+    // The HTTP answer must agree with an in-process call on the same model.
+    let direct = registry
+        .get("clf")
+        .unwrap()
+        .handle()
+        .classify(tokens.clone(), Tier::Quality)
+        .unwrap();
+    assert_eq!(http_label, direct.label);
+
+    // -- generate (chunked ndjson stream) ------------------------------------
+    let body = r#"{"model":"gen","prompt":[1,2,3],"max_new":4}"#;
+    let r = client::request(addr, "/v1/generate", Some(body), T).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(
+        r.headers.get("transfer-encoding").map(String::as_str),
+        Some("chunked"),
+        "generate must stream"
+    );
+    let events = r.ndjson().unwrap();
+    assert!(events.len() >= 2, "expected token events + done, got {events:?}");
+    let done = events.last().unwrap();
+    assert_eq!(done.str_or("event", ""), "done");
+    assert_eq!(done.str_or("model", ""), "gen");
+    let streamed: Vec<i64> = done
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i64)
+        .collect();
+    assert_eq!(streamed.len(), 4);
+    // Every token event must agree with the final summary, in order.
+    let per_event: Vec<i64> = events[..events.len() - 1]
+        .iter()
+        .map(|e| {
+            assert_eq!(e.str_or("event", ""), "token");
+            e.get("token").unwrap().as_f64().unwrap() as i64
+        })
+        .collect();
+    assert_eq!(per_event, streamed);
+
+    // Greedy decoding through HTTP must be bit-identical to an in-process
+    // generate on the same model.
+    let direct = registry
+        .get("gen")
+        .unwrap()
+        .handle()
+        .generate_collect(vec![1, 2, 3], 4, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap();
+    let direct_tokens: Vec<i64> = direct.tokens.iter().map(|&t| t as i64).collect();
+    assert_eq!(streamed, direct_tokens);
+
+    // -- structured rejections ----------------------------------------------
+    // Not JSON at all.
+    let r = client::request(addr, "/v1/classify", Some("not json"), T).unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(r.json().unwrap().get("error").unwrap().str_or("code", ""), "bad_request");
+
+    // Unknown field → schema rejection with a JSON path.
+    let r = client::request(addr, "/v1/classify", Some(r#"{"tokens":[1],"bogus":1}"#), T).unwrap();
+    assert_eq!(r.status, 400);
+    let err = r.json().unwrap();
+    let e = err.get("error").unwrap();
+    assert_eq!(e.str_or("code", ""), "invalid_request");
+    assert!(e.str_or("message", "").contains("body.bogus"), "{}", r.body_text());
+
+    // Wrong token count (schema passes, model window check rejects).
+    let r = client::request(
+        addr,
+        "/v1/classify",
+        Some(r#"{"model":"clf","tokens":[1,2,3]}"#),
+        T,
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body_text().contains("model window"), "{}", r.body_text());
+
+    // Unknown model → 404.
+    let r = client::request(
+        addr,
+        "/v1/classify",
+        Some(&format!("{{\"model\":\"nope\",\"tokens\":{tokens:?}}}")),
+        T,
+    )
+    .unwrap();
+    assert_eq!(r.status, 404);
+
+    // Family mismatch: classify on the LM → 400.
+    let r = client::request(
+        addr,
+        "/v1/classify",
+        Some(&format!("{{\"model\":\"gen\",\"tokens\":{tokens:?}}}")),
+        T,
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    assert!(r.body_text().contains("family"), "{}", r.body_text());
+
+    // Ambiguous default: two models registered, none named.
+    let r = client::request(
+        addr,
+        "/v1/classify",
+        Some(&format!("{{\"tokens\":{tokens:?}}}")),
+        T,
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+
+    // Method / path errors.
+    let raw = client::request_raw(
+        addr,
+        b"DELETE /v1/classify HTTP/1.1\r\nContent-Length: 0\r\n\r\n",
+        T,
+    )
+    .unwrap();
+    assert_eq!(client::parse_response(&raw).unwrap().status, 405);
+    let r = client::request(addr, "/v1/nope", None, T).unwrap();
+    assert_eq!(r.status, 404);
+
+    // -- metrics + clean shutdown -------------------------------------------
+    let r = client::request(addr, "/v1/metrics", None, T).unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json().unwrap();
+    let http = v.get("http").unwrap();
+    let total = http.usize_or("requests", 0);
+    let accounted = http.usize_or("ok", 0)
+        + http.usize_or("client_errors", 0)
+        + http.usize_or("server_errors", 0)
+        + http.usize_or("shed", 0);
+    assert_eq!(total, accounted, "status classes must reconcile: {}", r.body_text());
+    assert!(v.get("models").unwrap().as_arr().unwrap().len() == 2);
+
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn single_model_registry_needs_no_model_field() {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.install_local("only", "text", "v1", "dense", one_variant(3), None).unwrap();
+    let server = HttpServer::bind("127.0.0.1:0", registry, HttpConfig::default()).unwrap();
+    let tokens: Vec<i32> = (0..SEQ as i32).collect();
+    let r = client::request(
+        server.local_addr(),
+        "/v1/classify",
+        Some(&format!("{{\"tokens\":{tokens:?}}}")),
+        T,
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_text());
+    assert_eq!(r.json().unwrap().str_or("model", ""), "only");
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,207 @@
+//! Registry hot-swap under load, and the fail-closed install gates.
+//!
+//! The contract: applying a new manifest version swaps the serving slot
+//! atomically — sessions that pinned the old `Arc` finish **bit-identical**
+//! on the old parameters — while any verification failure (tampered bytes,
+//! corrupt payload, missing file) rejects that model without disturbing
+//! the version already serving.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+use greenformer::backend::native::{init_text_params, TextModelCfg};
+use greenformer::backend::SamplingCfg;
+use greenformer::coordinator::Tier;
+use greenformer::registry::{
+    CheckpointEntry, ModelManifest, ModelRegistry, RegistryError, RegistryManifest,
+};
+use greenformer::tensor::gtz;
+use greenformer::util::sha256_hex;
+
+const SEQ: usize = 16;
+const PROMPTS: [&[i32]; 4] = [&[1, 2, 3], &[4, 5], &[6], &[7, 8, 9]];
+const MAX_NEW: usize = 6;
+
+fn cfg() -> TextModelCfg {
+    TextModelCfg { vocab: 64, seq: SEQ, d: 32, heads: 4, layers: 1, ff: 64, classes: 3 }
+}
+
+/// Fresh scratch directory for one test's checkpoint + manifest files.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gf_hot_swap_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a GTZ checkpoint for `seed` and return `(file_name, sha256)`.
+fn write_ckpt(dir: &PathBuf, file: &str, seed: u64) -> (String, String) {
+    let store = init_text_params(&cfg(), seed);
+    let path = dir.join(file);
+    gtz::write(&path, &store).unwrap();
+    let sha = sha256_hex(&std::fs::read(&path).unwrap());
+    (file.to_string(), sha)
+}
+
+/// One-model lm manifest over a single `dense` checkpoint.
+fn lm_manifest(dir: &PathBuf, version: &str, file: String, sha256: String) -> RegistryManifest {
+    RegistryManifest {
+        models: vec![ModelManifest {
+            name: "m".to_string(),
+            family: "lm".to_string(),
+            version: version.to_string(),
+            default: "dense".to_string(),
+            checkpoints: vec![CheckpointEntry { name: "dense".to_string(), file, sha256 }],
+            route: None,
+        }],
+        dir: dir.clone(),
+    }
+}
+
+fn write_manifest(dir: &PathBuf, name: &str, m: &RegistryManifest) -> PathBuf {
+    let path = dir.join(name);
+    std::fs::write(&path, m.render()).unwrap();
+    path
+}
+
+fn greedy_tokens(handle: &greenformer::coordinator::ServerHandle, prompt: &[i32]) -> Vec<i32> {
+    handle
+        .generate_collect(prompt.to_vec(), MAX_NEW, SamplingCfg::greedy(), Tier::Quality)
+        .unwrap()
+        .tokens
+}
+
+#[test]
+fn hot_swap_under_load_pins_old_version_bit_identical() {
+    let dir = scratch("swap");
+    let (f1, sha1) = write_ckpt(&dir, "m_v1.gtz", 11);
+    let (f2, sha2) = write_ckpt(&dir, "m_v2.gtz", 22);
+    let v1_path = write_manifest(&dir, "registry_v1.json", &lm_manifest(&dir, "v1", f1, sha1));
+    let v2_path = write_manifest(&dir, "registry_v2.json", &lm_manifest(&dir, "v2", f2, sha2));
+
+    // Reference: the v1 tokens for each prompt, from an unswapped registry.
+    let reference_reg = ModelRegistry::new();
+    assert!(reference_reg.load_and_apply(&v1_path).unwrap().rejected.is_empty());
+    let ref_handle = reference_reg.get("m").unwrap().handle();
+    let reference: Vec<Vec<i32>> = PROMPTS.iter().map(|p| greedy_tokens(&ref_handle, p)).collect();
+
+    // Live registry: install v1, pin it, then swap to v2 while concurrent
+    // sessions run on the pinned version.
+    let reg = Arc::new(ModelRegistry::new());
+    let report = reg.load_and_apply(&v1_path).unwrap();
+    assert_eq!(report.installed, vec!["m".to_string()]);
+    let pinned = reg.get("m").unwrap();
+    assert_eq!((pinned.version.as_str(), pinned.epoch), ("v1", 1));
+
+    let barrier = Arc::new(Barrier::new(PROMPTS.len() + 1));
+    let workers: Vec<_> = PROMPTS
+        .iter()
+        .map(|prompt| {
+            let handle = pinned.handle();
+            let barrier = barrier.clone();
+            let prompt = prompt.to_vec();
+            std::thread::spawn(move || {
+                barrier.wait();
+                greedy_tokens(&handle, &prompt)
+            })
+        })
+        .collect();
+    barrier.wait();
+    // Swap races the in-flight generations (the install itself takes long
+    // enough to overlap: it re-reads, verifies, and builds the graphs).
+    let report = reg.load_and_apply(&v2_path).unwrap();
+    assert_eq!(report.installed, vec!["m".to_string()]);
+    let got: Vec<Vec<i32>> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    // Sessions that started on v1 finished on v1's parameters, exactly.
+    assert_eq!(got, reference);
+
+    // The slot now serves v2 at a higher epoch...
+    let current = reg.get("m").unwrap();
+    assert_eq!((current.version.as_str(), current.epoch), ("v2", 2));
+    let v2_tokens = greedy_tokens(&current.handle(), PROMPTS[0]);
+    assert_eq!(v2_tokens.len(), MAX_NEW);
+
+    // ...while the pinned v1 Arc keeps serving the old parameters,
+    // still bit-identical to the reference.
+    assert_eq!(greedy_tokens(&pinned.handle(), PROMPTS[0]), reference[0]);
+
+    assert_eq!(reg.metrics.installs.load(Ordering::Relaxed), 2);
+    assert_eq!(reg.metrics.swaps.load(Ordering::Relaxed), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn verification_failures_reject_without_disturbing_serving_version() {
+    let dir = scratch("tamper");
+    let (f1, sha1) = write_ckpt(&dir, "m_v1.gtz", 11);
+    let v1_path = write_manifest(&dir, "registry_v1.json", &lm_manifest(&dir, "v1", f1, sha1));
+
+    let reg = ModelRegistry::new();
+    assert!(reg.load_and_apply(&v1_path).unwrap().rejected.is_empty());
+    let before = greedy_tokens(&reg.get("m").unwrap().handle(), PROMPTS[0]);
+
+    // (1) Tampered bytes: flip one byte of the v2 file after pinning its
+    // hash. The registry must reject on the hash, not on the decoder.
+    let (f2, sha2) = write_ckpt(&dir, "m_v2.gtz", 22);
+    let mut bytes = std::fs::read(dir.join(&f2)).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(dir.join(&f2), &bytes).unwrap();
+    let report = reg.apply_manifest(&lm_manifest(&dir, "v2", f2.clone(), sha2.clone()));
+    assert!(report.installed.is_empty());
+    match &report.rejected[..] {
+        [(name, RegistryError::HashMismatch { expected, actual, .. })] => {
+            assert_eq!(name, "m");
+            assert_eq!(expected, &sha2);
+            assert_ne!(actual, &sha2);
+        }
+        other => panic!("expected HashMismatch, got {other:?}"),
+    }
+
+    // (2) Garbage payload with a *correct* hash: passes verification,
+    // rejected by the GTZ decoder — typed as Checkpoint, not a panic.
+    let garbage = b"definitely not a gtz checkpoint".to_vec();
+    std::fs::write(dir.join("garbage.gtz"), &garbage).unwrap();
+    let m = lm_manifest(&dir, "v3", "garbage.gtz".to_string(), sha256_hex(&garbage));
+    let report = reg.apply_manifest(&m);
+    assert!(matches!(report.rejected[..], [(_, RegistryError::Checkpoint { .. })]));
+
+    // (3) Missing file: typed Io rejection.
+    let m = lm_manifest(&dir, "v4", "missing.gtz".to_string(), sha2);
+    let report = reg.apply_manifest(&m);
+    assert!(matches!(report.rejected[..], [(_, RegistryError::Io { .. })]));
+
+    // Through all three rejections, v1 never stopped serving — same
+    // version, same epoch, same tokens.
+    let current = reg.get("m").unwrap();
+    assert_eq!((current.version.as_str(), current.epoch), ("v1", 1));
+    assert_eq!(greedy_tokens(&current.handle(), PROMPTS[0]), before);
+    assert_eq!(reg.metrics.rejected_models.load(Ordering::Relaxed), 3);
+    assert_eq!(reg.metrics.installs.load(Ordering::Relaxed), 1);
+    assert_eq!(reg.metrics.swaps.load(Ordering::Relaxed), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unparseable_manifest_rejects_as_a_whole() {
+    let dir = scratch("parse");
+    let (f1, sha1) = write_ckpt(&dir, "m_v1.gtz", 11);
+    let v1_path = write_manifest(&dir, "registry_v1.json", &lm_manifest(&dir, "v1", f1, sha1));
+
+    let reg = ModelRegistry::new();
+    assert!(reg.load_and_apply(&v1_path).unwrap().rejected.is_empty());
+
+    // An unknown top-level field is a schema violation: the whole manifest
+    // rejects and nothing changes.
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, r#"{"format": 1, "models": [], "extra": true}"#).unwrap();
+    match reg.load_and_apply(&bad) {
+        Err(RegistryError::Parse { detail }) => assert!(detail.contains("extra"), "{detail}"),
+        other => panic!("expected Parse rejection, got {other:?}"),
+    }
+    assert_eq!(reg.metrics.rejected_manifests.load(Ordering::Relaxed), 1);
+    assert_eq!(reg.get("m").unwrap().version, "v1");
+    let _ = std::fs::remove_dir_all(&dir);
+}
